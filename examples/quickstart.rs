@@ -1,0 +1,101 @@
+//! Quickstart: the data model and data-exchange API in five minutes.
+//!
+//! Walks the paper's own worked example (Figures 2–3, appendices
+//! A.1–A.3): build the recommendation-system GraphTensor from pieces,
+//! inspect its tensors, batch + merge two copies, pad to static shapes,
+//! and run the broadcast/pool "user spending" computation.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tfgnn::graph::pad::{pad, PadSpec};
+use tfgnn::graph::{batch::merge, Feature};
+use tfgnn::ops::{
+    broadcast_context_to_nodes, broadcast_node_to_edges, pool_edges_to_node,
+    pool_nodes_to_context, Reduce, Tag,
+};
+use tfgnn::schema::{parse::to_text, recsys_example_schema};
+use tfgnn::synth::recsys::recsys_example_graph;
+
+fn main() -> tfgnn::Result<()> {
+    // ---- 1. Schema (Figure 2a) -------------------------------------------
+    let schema = recsys_example_schema();
+    println!("=== GraphSchema (Fig. 2a) ===\n{}", to_text(&schema));
+
+    // ---- 2. GraphTensor from pieces (A.2.2 / Fig. 3) ----------------------
+    let graph = recsys_example_graph();
+    graph.check_compatible_with_schema(&schema)?;
+    println!("\n=== GraphTensor (Fig. 2b) ===");
+    println!(
+        "items: {} nodes, users: {} nodes, purchased: {} edges, is-friend: {} edges",
+        graph.num_nodes("items")?,
+        graph.num_nodes("users")?,
+        graph.num_edges("purchased")?,
+        graph.num_edges("is-friend")?
+    );
+    let users = graph.node_set("users")?;
+    println!("users.age        = {:?}", users.feature("age")?.as_i64()?.1);
+    let adj = &graph.edge_set("purchased")?.adjacency;
+    println!("purchased.source = {:?}", adj.source);
+    println!("purchased.target = {:?}", adj.target);
+    // A.1: edge 4 links "flight" to "Yumiko".
+    let cat = graph.node_set("items")?.feature("category")?.as_str()?;
+    let name = users.feature("name")?.as_str()?;
+    println!(
+        "edge 4 links {:?} -> {:?}",
+        cat[adj.source[4] as usize], name[adj.target[4] as usize]
+    );
+
+    // ---- 3. Broadcast / pool (A.3): total user spending --------------------
+    println!("\n=== API level 2: user spending (A.3) ===");
+    let price = graph.node_set("items")?.feature("price")?.clone();
+    let latest: Vec<f32> = (0..6).map(|i| price.ragged_row_f32(i).unwrap()[0]).collect();
+    println!("latest_price per item = {latest:?}");
+    let latest = Feature::f32_vec(latest);
+    let purchase_prices = broadcast_node_to_edges(&graph, "purchased", Tag::Source, &latest)?;
+    let spending =
+        pool_edges_to_node(&graph, "purchased", Tag::Target, Reduce::Sum, &purchase_prices)?;
+    println!("total_user_spending   = {:?}", spending.as_f32()?.1);
+    let max_spend = pool_nodes_to_context(&graph, "users", Reduce::Max, &spending)?;
+    let max_bcast = broadcast_context_to_nodes(&graph, "users", &max_spend)?;
+    let frac: Vec<f32> = spending
+        .as_f32()?
+        .1
+        .iter()
+        .zip(max_bcast.as_f32()?.1)
+        .map(|(s, m)| s / m)
+        .collect();
+    println!("fraction of max       = {frac:?}");
+
+    // ---- 4. Batch + merge (§3.2) -------------------------------------------
+    println!("\n=== batching: merge 2 graphs into components ===");
+    let merged = merge(&[graph.clone(), graph.clone()])?;
+    println!(
+        "merged: {} components, items {} users {} purchased {}",
+        merged.num_components,
+        merged.num_nodes("items")?,
+        merged.num_nodes("users")?,
+        merged.num_edges("purchased")?
+    );
+    let madj = &merged.edge_set("purchased")?.adjacency;
+    println!("second copy's first edge: {} -> {} (indices shifted)", madj.source[7], madj.target[7]);
+
+    // ---- 5. Fixed-size padding (§3.2, TPU/AOT path) ------------------------
+    println!("\n=== padding to static shapes ===");
+    let spec = PadSpec {
+        node_caps: [("items".to_string(), 16), ("users".to_string(), 12)].into(),
+        edge_caps: [("purchased".to_string(), 20), ("is-friend".to_string(), 8)].into(),
+        component_cap: 4,
+    };
+    let padded = pad(&merged, &spec)?;
+    println!(
+        "padded: items {} users {} purchased {} ({} real components + 1 padding)",
+        padded.graph.num_nodes("items")?,
+        padded.graph.num_nodes("users")?,
+        padded.graph.num_edges("purchased")?,
+        padded.num_real_components
+    );
+    let mask = &padded.node_mask["users"];
+    println!("users mask = {mask:?}");
+    println!("\nquickstart OK");
+    Ok(())
+}

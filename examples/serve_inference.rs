@@ -1,0 +1,83 @@
+//! Online inference with dynamic batching (paper §6.3).
+//!
+//! Loads the AOT `forward` program behind the request router, fires
+//! concurrent client threads at it, and reports latency percentiles and
+//! throughput per batching configuration — the serving half of the
+//! system, with the in-memory sampler generating each request's
+//! GraphTensor exactly as §6.3 describes.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_inference`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tfgnn::runner::MagEnv;
+use tfgnn::runtime::batch::RootTask;
+use tfgnn::runtime::Runtime;
+use tfgnn::serve::{serve, ServeConfig};
+use tfgnn::synth::mag::Split;
+use tfgnn::train::{Hyperparams, Trainer};
+use tfgnn::util::stats::Summary;
+
+fn main() -> tfgnn::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let env = MagEnv::from_artifacts(dir)?;
+    let entry = env.manifest.model("mpnn")?.clone();
+
+    // Params: freshly initialized (a real deployment would load a
+    // checkpoint; `tfgnn train --ckpt` + `--ckpt` here does that).
+    let hp = Hyperparams::from_manifest(&env.manifest)?;
+    let trainer = Trainer::new(Runtime::cpu()?, dir, &entry, RootTask::default(), hp)?;
+    let params = trainer.params_to_host()?;
+    drop(trainer);
+
+    let seeds = env.dataset.papers_in_split(Split::Test);
+    for (max_batch, max_wait_ms) in [(1usize, 0u64), (4, 2), (8, 5)] {
+        let handle = serve(
+            dir,
+            &entry,
+            params.clone(),
+            Arc::clone(&env.sampler),
+            env.pad.clone(),
+            RootTask::default(),
+            ServeConfig { max_batch, max_wait: Duration::from_millis(max_wait_ms) },
+        )?;
+        // Closed-loop clients: 4 threads × 16 requests each.
+        let t0 = std::time::Instant::now();
+        let mut latencies = Vec::new();
+        std::thread::scope(|scope| {
+            let mut joins = Vec::new();
+            for c in 0..4usize {
+                let handle = &handle;
+                let seeds = &seeds;
+                joins.push(scope.spawn(move || {
+                    let mut lat = Vec::new();
+                    for i in 0..16usize {
+                        let seed = seeds[(c * 37 + i * 13) % seeds.len()];
+                        let resp = handle.predict(seed).expect("prediction");
+                        lat.push(resp.latency.as_secs_f64());
+                    }
+                    lat
+                }));
+            }
+            for j in joins {
+                latencies.extend(j.join().unwrap());
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let s = Summary::of(&latencies);
+        let batches = handle.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+        let reqs = handle.stats.requests.load(std::sync::atomic::Ordering::Relaxed);
+        println!(
+            "max_batch={max_batch:<2} wait={max_wait_ms}ms | {reqs} reqs in {wall:.2}s \
+             ({:.1} req/s) | latency p50 {:.1}ms p95 {:.1}ms | avg batch {:.2}",
+            reqs as f64 / wall,
+            s.p50 * 1e3,
+            s.p95 * 1e3,
+            reqs as f64 / batches as f64
+        );
+        handle.shutdown();
+    }
+    println!("serve_inference OK");
+    Ok(())
+}

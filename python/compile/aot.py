@@ -1,0 +1,239 @@
+"""AOT lowering: JAX programs → HLO text + manifest (build-time only).
+
+For every (config, arch) pair this emits four programs:
+
+* ``init``       — () → params               (seeded inside)
+* ``train_step`` — (params, m, v, step, batch) → (params', m', v', step',
+                   loss, correct, weight)
+* ``eval_step``  — (params, batch) → (loss, correct, weight)
+* ``forward``    — (params, batch) → logits   (serving)
+
+Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+64-bit instruction ids that the image's xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+``artifacts/manifest.json`` records, per program, the ordered input and
+output tensors (name, shape, dtype) so the Rust runtime marshals
+literals without hard-coded signatures. Param slots are named
+``param.<name>`` / ``adam_m.<name>`` / ``adam_v.<name>``; batch slots
+follow ``ModelSpec.batch_spec()`` (``feat.*``, ``ids.*``, ``edge.*``,
+``root.*``).
+
+Usage:  python -m compile.aot --config ../configs/mag_small.json \
+            --archs mpnn,mha --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def kept_inputs(lowered, inputs):
+    """Filter the manifest input list down to the arguments jax kept.
+
+    jit lowering prunes arguments that are dead in the optimized jaxpr
+    (e.g. the last GraphUpdate's author-side weights in eval/forward:
+    author states never reach the readout). The manifest must describe
+    the *compiled* signature, so unused slots are dropped here.
+    """
+    kept = lowered._lowering.compile_args.get("kept_var_idx")
+    if kept is None:
+        return inputs
+    return [t for i, t in enumerate(inputs) if i in kept]
+
+
+def tensor_entry(name, aval):
+    dtype = {"float32": "f32", "int32": "i32", "int64": "i64"}[str(aval.dtype)]
+    return {"name": name, "shape": list(aval.shape), "dtype": dtype}
+
+
+def lower_programs(spec: M.ModelSpec, arch: str):
+    """Lower all four programs; returns {prog: (hlo_text, inputs, outputs)}."""
+    seed = spec.train["init_seed"]
+    params0 = M.init_params(spec, seed)
+    names = list(params0.keys())
+    batch_struct = spec.batch_struct()
+    batch_names = list(batch_struct.keys())
+    n = len(names)
+
+    def pack_batch(flat):
+        return dict(zip(batch_names, flat))
+
+    # ---- init ----
+    def init_fn():
+        p = M.init_params(spec, seed)
+        return tuple(p.values())
+
+    init_lowered = jax.jit(init_fn).lower()
+    init_inputs = []
+    init_outputs = [tensor_entry(f"param.{k}", v) for k, v in params0.items()]
+
+    # ---- train_step ----
+    def train_fn(*args):
+        params = dict(zip(names, args[:n]))
+        m_state = dict(zip(names, args[n : 2 * n]))
+        v_state = dict(zip(names, args[2 * n : 3 * n]))
+        step = args[3 * n]
+        hp = {
+            "learning_rate": args[3 * n + 1],
+            "dropout": args[3 * n + 2],
+            "weight_decay": args[3 * n + 3],
+        }
+        batch = pack_batch(args[3 * n + 4 :])
+        new_p, new_m, new_v, new_step, loss, correct, weight = M.train_step(
+            spec, params, m_state, v_state, step, hp, batch
+        )
+        return (
+            tuple(new_p[k] for k in names)
+            + tuple(new_m[k] for k in names)
+            + tuple(new_v[k] for k in names)
+            + (new_step, loss, correct, weight)
+        )
+
+    param_structs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params0.values()]
+    step_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    hp_struct = jax.ShapeDtypeStruct((), jnp.float32)
+    train_args = (
+        param_structs * 3 + [step_struct] + [hp_struct] * 3 + list(batch_struct.values())
+    )
+    train_lowered = jax.jit(train_fn).lower(*train_args)
+    train_inputs = (
+        [tensor_entry(f"param.{k}", v) for k, v in params0.items()]
+        + [tensor_entry(f"adam_m.{k}", v) for k, v in params0.items()]
+        + [tensor_entry(f"adam_v.{k}", v) for k, v in params0.items()]
+        + [{"name": "step", "shape": [], "dtype": "i32"}]
+        + [
+            {"name": "hp.learning_rate", "shape": [], "dtype": "f32"},
+            {"name": "hp.dropout", "shape": [], "dtype": "f32"},
+            {"name": "hp.weight_decay", "shape": [], "dtype": "f32"},
+        ]
+        + [tensor_entry(k, v) for k, v in batch_struct.items()]
+    )
+    train_outputs = (
+        [tensor_entry(f"param.{k}", v) for k, v in params0.items()]
+        + [tensor_entry(f"adam_m.{k}", v) for k, v in params0.items()]
+        + [tensor_entry(f"adam_v.{k}", v) for k, v in params0.items()]
+        + [
+            {"name": "step", "shape": [], "dtype": "i32"},
+            {"name": "loss", "shape": [], "dtype": "f32"},
+            {"name": "correct", "shape": [], "dtype": "f32"},
+            {"name": "weight", "shape": [], "dtype": "f32"},
+        ]
+    )
+
+    # ---- eval_step ----
+    def eval_fn(*args):
+        params = dict(zip(names, args[:n]))
+        batch = pack_batch(args[n:])
+        return M.eval_step(spec, params, batch)
+
+    eval_args = param_structs + list(batch_struct.values())
+    eval_lowered = jax.jit(eval_fn).lower(*eval_args)
+    eval_inputs = [tensor_entry(f"param.{k}", v) for k, v in params0.items()] + [
+        tensor_entry(k, v) for k, v in batch_struct.items()
+    ]
+    eval_outputs = [
+        {"name": "loss", "shape": [], "dtype": "f32"},
+        {"name": "correct", "shape": [], "dtype": "f32"},
+        {"name": "weight", "shape": [], "dtype": "f32"},
+    ]
+
+    # ---- forward ----
+    def forward_fn(*args):
+        params = dict(zip(names, args[:n]))
+        batch = pack_batch(args[n:])
+        return (M.forward(spec, params, batch, train=False),)
+
+    forward_lowered = jax.jit(forward_fn).lower(*eval_args)
+    forward_outputs = [
+        {
+            "name": "logits",
+            "shape": [spec.num_roots, spec.num_classes],
+            "dtype": "f32",
+        }
+    ]
+
+    return {
+        "init": (to_hlo_text(init_lowered), init_inputs, init_outputs),
+        "train_step": (
+            to_hlo_text(train_lowered),
+            kept_inputs(train_lowered, train_inputs),
+            train_outputs,
+        ),
+        "eval_step": (
+            to_hlo_text(eval_lowered),
+            kept_inputs(eval_lowered, eval_inputs),
+            eval_outputs,
+        ),
+        "forward": (
+            to_hlo_text(forward_lowered),
+            kept_inputs(forward_lowered, eval_inputs),
+            forward_outputs,
+        ),
+    }, M.count_params(params0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=str(M.repo_root() / "configs/mag_small.json"))
+    ap.add_argument("--archs", default="mpnn,mha")
+    ap.add_argument("--out", default=str(M.repo_root() / "artifacts"))
+    args = ap.parse_args()
+
+    cfg = M.load_config(args.config)
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    cfg_name = cfg.get("name", Path(args.config).stem)
+
+    manifest = {
+        "config": cfg,
+        "config_path": str(Path(args.config).resolve()),
+        "models": {},
+    }
+    for arch in args.archs.split(","):
+        arch = arch.strip()
+        spec = M.ModelSpec(cfg, arch=arch)
+        programs, n_params = lower_programs(spec, arch)
+        entry = {
+            "arch": arch,
+            "hidden_dim": spec.model["hidden_dim"],
+            "message_dim": spec.model["message_dim"],
+            "num_layers": spec.model["num_layers"],
+            "param_count": n_params,
+            "programs": {},
+        }
+        for prog, (text, inputs, outputs) in programs.items():
+            fname = f"{cfg_name}_{arch}_{prog}.hlo.txt"
+            (out_dir / fname).write_text(text)
+            entry["programs"][prog] = {
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                "inputs": inputs,
+                "outputs": outputs,
+            }
+            print(f"wrote {fname}: {len(text)} chars, {len(inputs)} inputs")
+        manifest["models"][arch] = entry
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2, sort_keys=True))
+    print(f"wrote manifest.json ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Layer-1 Pallas kernels: the message-passing hot spot.
+
+Three kernels, all `interpret=True` (the CPU PJRT plugin cannot run
+Mosaic custom-calls; see /opt/xla-example/README.md):
+
+* [`fused_message`] — the FLOP hot spot of MPNN-style convs (Eq. 3):
+  ``relu(concat(sender, receiver) @ W + b)`` tiled over edge blocks.
+  Both matmul operands are shaped for the MXU systolic array: the edge
+  block is the M dimension (128-aligned), the feature dims K/N are the
+  model dims (128/256). VMEM per block (see DESIGN.md §Perf):
+  ``block_e*(2*Din) + 2*Din*Dout + block_e*Dout`` floats — ≈0.5 MiB at
+  block_e=128, Din=Dout=256, comfortably inside a TensorCore's ~16 MiB.
+
+* [`onehot_segment_sum`] — the TPU-idiomatic scatter: instead of CUDA
+  atomics (what a GPU framework would use), each edge block contributes
+  ``one_hot(seg_block).T @ data_block`` to the output, a dense MXU
+  matmul. The grid iterates edge blocks sequentially and accumulates
+  into the full output ref — the standard Pallas accumulation pattern.
+
+* [`segment_softmax`] — attention normalization over incoming edges
+  (GATv2 / MultiHeadAttention convs): runs the stable two-pass
+  max/sum-shift entirely in VMEM for one edge block *after* per-segment
+  max/sum have been reduced via the one-hot matmul trick.
+
+The L2 model calls `fused_message` on the production path; the segment
+ops default to `jax.ops.segment_sum` (an XLA scatter — faster under the
+CPU interpreter) and can be flipped to the Pallas variants with
+`use_pallas_segment` in the model config. Numerics of both paths are
+asserted equal in pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Edge-block tile. 128 matches both the MXU systolic dimension and the
+# f32 VPU lane tiling (8, 128).
+BLOCK_E = 128
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------------------
+# fused_message
+# ---------------------------------------------------------------------------
+
+
+def _fused_message_kernel(sender_ref, receiver_ref, w_ref, b_ref, out_ref):
+    s = sender_ref[...]
+    r = receiver_ref[...]
+    x = jnp.concatenate([s, r], axis=-1)
+    y = x @ w_ref[...] + b_ref[...][None, :]
+    out_ref[...] = jnp.maximum(y, 0.0)
+
+
+def _fused_message_impl(sender, receiver, w, b, block_e=BLOCK_E):
+    e, din = sender.shape
+    dout = w.shape[1]
+    assert w.shape[0] == 2 * din, (w.shape, din)
+    if e <= block_e or e % block_e != 0:
+        # Unaligned edge caps run as one block (PadSpecs should prefer
+        # 128-multiples; see DESIGN.md §Perf).
+        grid = (1,)
+        block_e = e
+    else:
+        grid = (e // block_e,)
+    return pl.pallas_call(
+        _fused_message_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, din), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, din), lambda i: (i, 0)),
+            pl.BlockSpec((2 * din, dout), lambda i: (0, 0)),
+            pl.BlockSpec((dout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_e, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, dout), sender.dtype),
+        interpret=True,
+    )(sender, receiver, w, b)
+
+
+@jax.custom_vjp
+def fused_message(sender, receiver, w, b):
+    """relu(concat([sender, receiver], -1) @ w + b), tiled over edges.
+
+    sender/receiver: [E, Din]; w: [2*Din, Dout]; b: [Dout] -> [E, Dout].
+    E must be a multiple of BLOCK_E if E > BLOCK_E (the AOT pad specs
+    guarantee MXU-aligned edge caps); small E runs as a single block.
+
+    Differentiable: the forward pass is the Pallas kernel; the backward
+    pass is the analytic VJP of relu∘affine (dense matmuls that XLA
+    fuses on its own — the fwd kernel's relu mask is reused as the
+    residual, so no recomputation of the affine part).
+    """
+    return _fused_message_impl(sender, receiver, w, b)
+
+
+def _fused_message_fwd(sender, receiver, w, b):
+    out = _fused_message_impl(sender, receiver, w, b)
+    return out, (sender, receiver, w, out)
+
+
+def _fused_message_bwd(res, g):
+    sender, receiver, w, out = res
+    din = sender.shape[1]
+    gm = jnp.where(out > 0, g, 0.0)  # relu mask
+    x = jnp.concatenate([sender, receiver], axis=-1)
+    gw = x.T @ gm
+    gb = jnp.sum(gm, axis=0)
+    gx = gm @ w.T
+    return gx[:, :din], gx[:, din:], gw, gb
+
+
+fused_message.defvjp(_fused_message_fwd, _fused_message_bwd)
+
+
+# ---------------------------------------------------------------------------
+# onehot_segment_sum
+# ---------------------------------------------------------------------------
+
+
+def _onehot_segment_sum_kernel(data_ref, seg_ref, out_ref, *, num_segments):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    data = data_ref[...]
+    seg = seg_ref[...]
+    onehot = (seg[:, None] == jnp.arange(num_segments)[None, :]).astype(data.dtype)
+    out_ref[...] += onehot.T @ data
+
+
+def onehot_segment_sum(data, segment_ids, num_segments, *, block_e=BLOCK_E):
+    """Segment sum via per-block one-hot matmuls (MXU scatter).
+
+    data: [E, D]; segment_ids: int32 [E] -> [num_segments, D].
+    """
+    e, d = data.shape
+    if e <= block_e or e % block_e != 0:
+        grid = (1,)
+        block_e = e
+    else:
+        grid = (e // block_e,)
+    kernel = functools.partial(_onehot_segment_sum_kernel, num_segments=num_segments)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+        ],
+        # Every grid step maps to the whole output -> sequential
+        # accumulation across edge blocks.
+        out_specs=pl.BlockSpec((num_segments, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), data.dtype),
+        interpret=True,
+    )(data, segment_ids.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# segment_softmax
+# ---------------------------------------------------------------------------
+
+
+def _segment_softmax_kernel(logits_ref, seg_ref, maxs_ref, sums_ref, out_ref):
+    logits = logits_ref[...]
+    seg = seg_ref[...]
+    shifted = jnp.exp(logits - maxs_ref[...][seg])
+    out_ref[...] = shifted / jnp.maximum(sums_ref[...][seg], 1e-38)
+
+
+def segment_softmax(logits, segment_ids, num_segments, *, block_e=BLOCK_E):
+    """Stable softmax of [E] logits within segments.
+
+    Two reduction passes run as jnp one-hot matmuls (MXU-friendly); the
+    normalization pass is the Pallas kernel, tiled over edge blocks with
+    the per-segment max/sum tables resident in VMEM.
+    """
+    e = logits.shape[0]
+    seg = segment_ids.astype(jnp.int32)
+    onehot = (seg[:, None] == jnp.arange(num_segments)[None, :]).astype(logits.dtype)
+    # Per-segment max (empty segments -> 0, same as ref/rust).
+    neg = jnp.finfo(logits.dtype).min
+    maxs = jnp.max(jnp.where(onehot > 0, logits[:, None], neg), axis=0)
+    maxs = jnp.where(jnp.isfinite(maxs), maxs, 0.0)
+    exp = jnp.exp(logits - maxs[seg])
+    sums = onehot.T @ exp
+
+    if e <= block_e or e % block_e != 0:
+        grid = (1,)
+        block_e = e
+    else:
+        grid = (e // block_e,)
+    return pl.pallas_call(
+        _segment_softmax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((num_segments,), lambda i: (0,)),
+            pl.BlockSpec((num_segments,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_e,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((e,), logits.dtype),
+        interpret=True,
+    )(logits, seg, maxs, sums)

@@ -1,0 +1,418 @@
+"""Layer-2: the heterogeneous GNN models in JAX (paper §4.2–4.3, §8.3).
+
+Everything here follows the paper's GraphUpdate decomposition (Eq. 1–3):
+per edge set a **Conv** computes and pools messages to receiver nodes;
+per node set a **NextState** combines the old state with the pooled
+messages. The receiver is the SOURCE endpoint, matching §8.3's sampled
+subgraphs where edges point outward from the root ("NOTE: The receiver
+is the source node from which the edge was sampled").
+
+Model zoo (§4.3):
+* ``mpnn``  — VanillaMPNN: relu(W [h_send ‖ h_recv]) messages, sum-pool
+  (Figure 7/8); messages run through the **Pallas fused kernel**.
+* ``sage``  — GraphSAGE: mean-pool of W·h_send.
+* ``gcn``   — degree-normalized sum (Eq. 4 generalized per edge set).
+* ``gatv2`` — GATv2 attention (Eq. A.4): per-head additive attention
+  with segment softmax over each receiver's incoming edges.
+* ``mha``   — Transformer-style dot-product multi-head attention; with
+  larger dims this is the HGT-like high-capacity baseline of Table 1.
+
+Hidden states: ``paper`` is encoded from its 128-d ``feat``; ``author``
+starts at zero (computed from its neighborhood); ``institution`` and
+``field_of_study`` are **embedding-table lookups keyed by original node
+id** (§8.1: "train embedding tables for their representations over
+time"), carried into the batch as the ``ids.<set>`` arrays.
+
+Static shapes come from the PadSpec in ``configs/*.json``; padding
+components are isolated by construction (no cross-component edges), so
+correctness needs only the per-root mask in the loss.
+
+Params are an ordered dict name→array; the same ordering (sorted names)
+defines the AOT calling convention recorded in the manifest.
+"""
+
+import json
+from collections import OrderedDict
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import edge_conv, ref
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+def load_config(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+class ModelSpec:
+    """Resolved model + batch layout for one (config, arch) pair."""
+
+    def __init__(self, cfg, arch=None):
+        self.cfg = cfg
+        self.schema = cfg["schema"]
+        self.pad = cfg["pad"]
+        m = dict(cfg["model"])
+        if arch is not None:
+            m["arch"] = arch
+        # High-capacity baseline: the Table-1 comparison point gets
+        # wider dims, like HGT's 26.8M vs MPNN's 5.89M.
+        if m["arch"] == "mha" and arch is not None:
+            m.setdefault("hidden_dim_override", 256)
+            m["hidden_dim"] = m.get("hidden_dim_override", 256)
+            m["message_dim"] = m["hidden_dim"]
+        self.model = m
+        self.train = cfg["train"]
+        self.batch_size = cfg["batch_size"]
+        self.num_roots = self.pad["component_cap"] - 1
+        self.num_classes = cfg["train"]["num_classes"]
+
+    # ---- batch layout -----------------------------------------------------
+
+    def batch_spec(self):
+        """Ordered (name, shape, dtype) for the batch arguments."""
+        out = []
+        for set_name, ns in sorted(self.schema["node_sets"].items()):
+            cap = self.pad["node_caps"][set_name]
+            for feat_name, dim in sorted(ns.get("features", {}).items()):
+                out.append((f"feat.{set_name}.{feat_name}", (cap, dim), "f32"))
+            if ns.get("id_embedding", False):
+                out.append((f"ids.{set_name}", (cap,), "i32"))
+        for es_name in sorted(self.schema["edge_sets"].keys()):
+            cap = self.pad["edge_caps"][es_name]
+            out.append((f"edge.{es_name}.src", (cap,), "i32"))
+            out.append((f"edge.{es_name}.tgt", (cap,), "i32"))
+        out.append(("root.idx", (self.num_roots,), "i32"))
+        out.append(("root.labels", (self.num_roots,), "i32"))
+        out.append(("root.mask", (self.num_roots,), "f32"))
+        return out
+
+    def batch_struct(self):
+        """ShapeDtypeStructs keyed by name."""
+        dt = {"f32": jnp.float32, "i32": jnp.int32}
+        return OrderedDict(
+            (name, jax.ShapeDtypeStruct(shape, dt[dtype]))
+            for name, shape, dtype in self.batch_spec()
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def init_params(spec: ModelSpec, seed: int):
+    """Ordered name→array parameter dict."""
+    m = spec.model
+    arch = m["arch"]
+    d = m["hidden_dim"]
+    dm = m["message_dim"]
+    heads = m.get("num_heads", 4)
+    key = jax.random.PRNGKey(seed)
+    params = OrderedDict()
+
+    def take():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    # Input encoders / embeddings.
+    for set_name, ns in sorted(spec.schema["node_sets"].items()):
+        feats = ns.get("features", {})
+        for feat_name, dim in sorted(feats.items()):
+            params[f"enc.{set_name}.{feat_name}.w"] = _glorot(take(), (dim, d))
+            params[f"enc.{set_name}.{feat_name}.b"] = jnp.zeros((d,), jnp.float32)
+        if ns.get("id_embedding", False):
+            card = ns["cardinality"]
+            params[f"emb.{set_name}"] = 0.05 * jax.random.normal(
+                take(), (card, d), dtype=jnp.float32
+            )
+
+    # Per layer, per receiving node set, per edge set: conv weights.
+    for layer in range(m["num_layers"]):
+        for node_set, edge_list in sorted(m["updates"].items()):
+            pooled_dim = 0
+            for es in sorted(edge_list):
+                p = f"l{layer}.{node_set}.{es}"
+                if arch == "mpnn":
+                    params[f"{p}.msg.w"] = _glorot(take(), (2 * d, dm))
+                    params[f"{p}.msg.b"] = jnp.zeros((dm,), jnp.float32)
+                    pooled_dim += dm
+                elif arch in ("sage", "gcn"):
+                    params[f"{p}.msg.w"] = _glorot(take(), (d, dm))
+                    pooled_dim += dm
+                elif arch == "gatv2":
+                    dh = dm // heads
+                    params[f"{p}.query.w"] = _glorot(take(), (d, heads * dh))
+                    params[f"{p}.value.w"] = _glorot(take(), (d, heads * dh))
+                    params[f"{p}.attn"] = _glorot(take(), (heads, dh))
+                    pooled_dim += heads * dh
+                elif arch == "mha":
+                    dh = dm // heads
+                    params[f"{p}.q.w"] = _glorot(take(), (d, heads * dh))
+                    params[f"{p}.k.w"] = _glorot(take(), (d, heads * dh))
+                    params[f"{p}.v.w"] = _glorot(take(), (d, heads * dh))
+                    params[f"{p}.o.w"] = _glorot(take(), (heads * dh, dm))
+                    pooled_dim += dm
+                else:
+                    raise ValueError(f"unknown arch {arch!r}")
+            # NextState: concat(prev, pooled...) -> hidden.
+            params[f"l{layer}.{node_set}.next.w"] = _glorot(take(), (d + pooled_dim, d))
+            params[f"l{layer}.{node_set}.next.b"] = jnp.zeros((d,), jnp.float32)
+            if m.get("use_layer_norm", False):
+                params[f"l{layer}.{node_set}.ln.scale"] = jnp.ones((d,), jnp.float32)
+                params[f"l{layer}.{node_set}.ln.bias"] = jnp.zeros((d,), jnp.float32)
+
+    # Readout head.
+    params["head.w"] = _glorot(take(), (d, spec.num_classes))
+    params["head.b"] = jnp.zeros((spec.num_classes,), jnp.float32)
+    return params
+
+
+def count_params(params):
+    return sum(int(p.size) for p in params.values())
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _segment_reduce(msgs, seg, n, how, use_pallas):
+    if how == "sum":
+        if use_pallas:
+            return edge_conv.onehot_segment_sum(msgs, seg, n)
+        return ref.segment_sum_ref(msgs, seg, n)
+    if how == "mean":
+        return ref.segment_mean_ref(msgs, seg, n)
+    if how == "max":
+        return ref.segment_max_ref(msgs, seg, n)
+    raise ValueError(f"unknown reduce {how!r}")
+
+
+def _conv(spec, params, prefix, arch, h_send, h_recv, src, tgt, n_recv, train_flags):
+    """One Conv: messages on an edge set pooled to SOURCE nodes."""
+    m = spec.model
+    heads = m.get("num_heads", 4)
+    reduce_type = m.get("reduce_type", "sum")
+    use_pallas_seg = m.get("use_pallas_segment", False)
+    sender = h_send[tgt]  # states at the far endpoint
+    receiver = h_recv[src]
+    if arch == "mpnn":
+        if m.get("use_pallas_messages", True):
+            msgs = edge_conv.fused_message(
+                sender, receiver, params[f"{prefix}.msg.w"], params[f"{prefix}.msg.b"]
+            )
+        else:
+            msgs = ref.fused_message_ref(
+                sender, receiver, params[f"{prefix}.msg.w"], params[f"{prefix}.msg.b"]
+            )
+        return _segment_reduce(msgs, src, n_recv, reduce_type, use_pallas_seg)
+    if arch == "sage":
+        msgs = sender @ params[f"{prefix}.msg.w"]
+        return _segment_reduce(msgs, src, n_recv, "mean", False)
+    if arch == "gcn":
+        # 1/sqrt(d_u d_v) normalization, Eq. (4) per edge set.
+        ones = jnp.ones((src.shape[0], 1), jnp.float32)
+        deg_recv = ref.segment_sum_ref(ones, src, n_recv)[:, 0] + 1.0
+        deg_send = ref.segment_sum_ref(ones, tgt, h_send.shape[0])[:, 0] + 1.0
+        norm = 1.0 / jnp.sqrt(deg_recv[src] * deg_send[tgt])
+        msgs = (sender @ params[f"{prefix}.msg.w"]) * norm[:, None]
+        return _segment_reduce(msgs, src, n_recv, "sum", use_pallas_seg)
+    if arch == "gatv2":
+        dh = m["message_dim"] // heads
+        q = (receiver @ params[f"{prefix}.query.w"]).reshape(-1, heads, dh)
+        v = (sender @ params[f"{prefix}.value.w"]).reshape(-1, heads, dh)
+        feat = jax.nn.leaky_relu(q + v, negative_slope=0.2)
+        logits = jnp.einsum("ehd,hd->eh", feat, params[f"{prefix}.attn"])
+        alpha = ref.segment_softmax_ref(logits, src, n_recv)
+        msgs = (v * alpha[..., None]).reshape(-1, heads * dh)
+        return _segment_reduce(msgs, src, n_recv, "sum", use_pallas_seg)
+    if arch == "mha":
+        dh = m["message_dim"] // heads
+        q = (receiver @ params[f"{prefix}.q.w"]).reshape(-1, heads, dh)
+        k = (sender @ params[f"{prefix}.k.w"]).reshape(-1, heads, dh)
+        v = (sender @ params[f"{prefix}.v.w"]).reshape(-1, heads, dh)
+        logits = jnp.einsum("ehd,ehd->eh", q, k) / jnp.sqrt(float(dh))
+        alpha = ref.segment_softmax_ref(logits, src, n_recv)
+        msgs = (v * alpha[..., None]).reshape(-1, heads * dh)
+        pooled = _segment_reduce(msgs, src, n_recv, "sum", use_pallas_seg)
+        return pooled @ params[f"{prefix}.o.w"]
+    raise ValueError(f"unknown arch {arch!r}")
+
+
+def forward(spec: ModelSpec, params, batch, *, train: bool, dropout_key=None, dropout_rate=None):
+    """Run the GNN; returns logits `[num_roots, num_classes]`.
+
+    `dropout_rate` may be a traced scalar (the `hp.dropout` runtime
+    input) — the A.6.3 sweep varies it without re-lowering.
+    """
+    m = spec.model
+    arch = m["arch"]
+    d = m["hidden_dim"]
+    schema = spec.schema
+
+    # Initial hidden states (MapFeatures).
+    h = {}
+    for set_name, ns in sorted(schema["node_sets"].items()):
+        cap = spec.pad["node_caps"][set_name]
+        feats = ns.get("features", {})
+        if feats:
+            state = jnp.zeros((cap, d), jnp.float32)
+            for feat_name in sorted(feats):
+                x = batch[f"feat.{set_name}.{feat_name}"]
+                state = state + x @ params[f"enc.{set_name}.{feat_name}.w"]
+            first = sorted(feats)[0]
+            state = jax.nn.relu(state + params[f"enc.{set_name}.{first}.b"])
+            h[set_name] = state
+        elif ns.get("id_embedding", False):
+            ids = batch[f"ids.{set_name}"]
+            h[set_name] = params[f"emb.{set_name}"][ids]
+        else:
+            h[set_name] = jnp.zeros((cap, d), jnp.float32)
+
+    if dropout_rate is None:
+        dropout_rate = m.get("dropout", 0.0)
+    use_dropout = train and dropout_key is not None
+
+    # GraphUpdate rounds.
+    for layer in range(m["num_layers"]):
+        new_h = dict(h)
+        for node_set, edge_list in sorted(m["updates"].items()):
+            n_recv = spec.pad["node_caps"][node_set]
+            pooled = []
+            for es in sorted(edge_list):
+                src = batch[f"edge.{es}.src"]
+                tgt = batch[f"edge.{es}.tgt"]
+                # receiver = SOURCE endpoint; sender = TARGET node set.
+                send_set = schema["edge_sets"][es][1]
+                pooled.append(
+                    _conv(
+                        spec,
+                        params,
+                        f"l{layer}.{node_set}.{es}",
+                        arch,
+                        h[send_set],
+                        h[node_set],
+                        src,
+                        tgt,
+                        n_recv,
+                        train,
+                    )
+                )
+            x = jnp.concatenate([h[node_set]] + pooled, axis=-1)
+            x = jax.nn.relu(
+                x @ params[f"l{layer}.{node_set}.next.w"]
+                + params[f"l{layer}.{node_set}.next.b"]
+            )
+            if m.get("use_layer_norm", False):
+                x = _layer_norm(
+                    x,
+                    params[f"l{layer}.{node_set}.ln.scale"],
+                    params[f"l{layer}.{node_set}.ln.bias"],
+                )
+            if use_dropout:
+                dropout_key, sub = jax.random.split(dropout_key)
+                u = jax.random.uniform(sub, x.shape)
+                keep = u >= dropout_rate
+                x = jnp.where(keep, x / jnp.maximum(1.0 - dropout_rate, 1e-3), 0.0)
+            new_h[node_set] = x
+        h = new_h
+
+    # Root readout (RootNodeMulticlassClassification).
+    roots = h["paper"][batch["root.idx"]]
+    return roots @ params["head.w"] + params["head.b"]
+
+
+def loss_and_metrics(spec, params, batch, *, train, dropout_key=None, dropout_rate=None):
+    """Masked softmax cross-entropy over root nodes + accuracy counts."""
+    logits = forward(
+        spec, params, batch, train=train, dropout_key=dropout_key, dropout_rate=dropout_rate
+    )
+    labels = batch["root.labels"]
+    mask = batch["root.mask"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    weight = jnp.sum(mask)
+    loss = jnp.sum(nll * mask) / jnp.maximum(weight, 1.0)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == labels).astype(jnp.float32) * mask)
+    return loss, correct, weight
+
+
+# ---------------------------------------------------------------------------
+# Train step (Adam)
+# ---------------------------------------------------------------------------
+
+
+def train_step(spec: ModelSpec, params, m_state, v_state, step, hp, batch):
+    """One fwd+bwd+Adam update. All-array signature for AOT.
+
+    `hp` = {"learning_rate", "dropout", "weight_decay"} — runtime
+    scalars so the sweep harness (A.6.3) varies them per trial without
+    re-lowering.
+    """
+    t = spec.train
+    lr = hp["learning_rate"]
+    b1, b2, eps = t["adam_beta1"], t["adam_beta2"], t["adam_eps"]
+    wd = hp["weight_decay"]
+    dropout_key = jax.random.fold_in(jax.random.PRNGKey(t["init_seed"]), step)
+
+    def loss_fn(p):
+        loss, correct, weight = loss_and_metrics(
+            spec, p, batch, train=True, dropout_key=dropout_key, dropout_rate=hp["dropout"]
+        )
+        return loss, (correct, weight)
+
+    (loss, (correct, weight)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    new_step = step + 1
+    tt = new_step.astype(jnp.float32)
+    new_params = OrderedDict()
+    new_m = OrderedDict()
+    new_v = OrderedDict()
+    for name in params:
+        g = grads[name]
+        if name.endswith(".w"):
+            g = g + wd * params[name]
+        mn = b1 * m_state[name] + (1.0 - b1) * g
+        vn = b2 * v_state[name] + (1.0 - b2) * g * g
+        mhat = mn / (1.0 - b1**tt)
+        vhat = vn / (1.0 - b2**tt)
+        new_params[name] = params[name] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[name] = mn
+        new_v[name] = vn
+    return new_params, new_m, new_v, new_step, loss, correct, weight
+
+
+def eval_step(spec: ModelSpec, params, batch):
+    return loss_and_metrics(spec, params, batch, train=False)
+
+
+# ---------------------------------------------------------------------------
+# Helpers for the AOT wrapper
+# ---------------------------------------------------------------------------
+
+
+def param_names(spec: ModelSpec, seed=0):
+    return list(init_params(spec, seed).keys())
+
+
+def repo_root():
+    return Path(__file__).resolve().parents[2]

@@ -1,0 +1,111 @@
+"""AOT emission checks: manifest ↔ programs ↔ model consistency."""
+
+import json
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile import aot, model as M  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROOT = Path(__file__).resolve().parents[2]
+ARTIFACTS = ROOT / "artifacts"
+
+
+def small_spec():
+    cfg = M.load_config(ROOT / "configs/mag_small.json")
+    cfg["pad"] = {
+        "node_caps": {"paper": 16, "author": 8, "institution": 8, "field_of_study": 8},
+        "edge_caps": {
+            "cites": 8,
+            "writes": 8,
+            "written": 8,
+            "affiliated_with": 8,
+            "has_topic": 8,
+        },
+        "component_cap": 3,
+    }
+    cfg["schema"]["node_sets"]["paper"]["features"]["feat"] = 8
+    cfg["model"]["hidden_dim"] = 8
+    cfg["model"]["message_dim"] = 8
+    cfg["model"]["num_layers"] = 1
+    return M.ModelSpec(cfg, arch="mpnn")
+
+
+def test_lower_programs_emits_all_four():
+    spec = small_spec()
+    programs, n_params = aot.lower_programs(spec, "mpnn")
+    assert set(programs) == {"init", "train_step", "eval_step", "forward"}
+    assert n_params > 0
+    for name, (text, inputs, outputs) in programs.items():
+        assert "ENTRY" in text, name
+        assert outputs, name
+    # train_step inputs = 3 × params + step + 3 hp + batch, minus any
+    # dead arguments jax pruned (the manifest records the *compiled*
+    # signature; see aot.kept_inputs).
+    n_batch = len(spec.batch_spec())
+    text, inputs, outputs = programs["train_step"]
+    n_leaves = len(M.init_params(spec, 0))
+    full = 3 * n_leaves + 1 + 3 + n_batch
+    assert len(inputs) <= full
+    assert len(inputs) >= n_leaves + n_batch, "params+batch mostly kept"
+    names = [i["name"] for i in inputs]
+    assert "step" in names and "hp.learning_rate" in names
+    assert len(outputs) == 3 * n_leaves + 1 + 3
+    # init has no inputs and one output per param leaf.
+    _, init_in, init_out = programs["init"]
+    assert init_in == []
+    assert len(init_out) == n_leaves
+
+
+def test_manifest_on_disk_consistent():
+    manifest_path = ARTIFACTS / "manifest.json"
+    if not manifest_path.exists():
+        pytest.skip("run `make artifacts` first")
+    manifest = json.loads(manifest_path.read_text())
+    assert "mpnn" in manifest["models"]
+    for arch, entry in manifest["models"].items():
+        for prog, p in entry["programs"].items():
+            f = ARTIFACTS / p["file"]
+            assert f.exists(), f
+            text = f.read_text()
+            assert "ENTRY" in text
+            # Input names unique and ordered param->adam->step->batch.
+            names = [i["name"] for i in p["inputs"]]
+            assert len(names) == len(set(names)), f"dup inputs in {prog}"
+            if prog == "train_step":
+                kinds = [n.split(".")[0] for n in names]
+                first_batch = next(
+                    i for i, k in enumerate(kinds) if k in ("feat", "ids", "edge", "root")
+                )
+                assert "step" in names
+                assert all(
+                    k in ("param", "adam_m", "adam_v", "step", "hp")
+                    for k in kinds[:first_batch]
+                )
+
+    # Table-1 premise recorded in the manifest: mha ≫ mpnn params.
+    if "mha" in manifest["models"]:
+        assert (
+            manifest["models"]["mha"]["param_count"]
+            > 2 * manifest["models"]["mpnn"]["param_count"]
+        )
+
+
+def test_batch_layout_matches_rust_convention():
+    # The Rust runtime derives literals from these exact names.
+    spec = small_spec()
+    names = [n for n, _, _ in spec.batch_spec()]
+    assert names[-3:] == ["root.idx", "root.labels", "root.mask"]
+    for es in spec.schema["edge_sets"]:
+        assert f"edge.{es}.src" in names
+        assert f"edge.{es}.tgt" in names
+    assert "feat.paper.feat" in names
+    assert "ids.institution" in names
+    assert "ids.field_of_study" in names
+    assert "ids.paper" not in names

@@ -1,0 +1,196 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes-in-range data and segment patterns;
+`assert_allclose` against `ref.py`. This is the core L1 signal the
+DESIGN.md test strategy calls for.
+"""
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.kernels import edge_conv, ref  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(key, shape, minval=lo, maxval=hi, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused_message
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    e=st.sampled_from([1, 3, 64, 128, 256, 384]),
+    din=st.sampled_from([4, 16, 128]),
+    dout=st.sampled_from([8, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_message_matches_ref(e, din, dout, seed):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    sender = rand(k[0], (e, din))
+    receiver = rand(k[1], (e, din))
+    w = rand(k[2], (2 * din, dout), -0.5, 0.5)
+    b = rand(k[3], (dout,), -0.5, 0.5)
+    got = edge_conv.fused_message(sender, receiver, w, b)
+    want = ref.fused_message_ref(sender, receiver, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_message_rejects_unaligned():
+    k = jax.random.PRNGKey(0)
+    sender = rand(k, (130, 8))
+    try:
+        edge_conv.fused_message(sender, sender, rand(k, (16, 8)), rand(k, (8,)))
+        assert False, "should reject E=130 (not block-aligned, > block)"
+    except AssertionError as e:
+        assert "aligned" in str(e) or "should reject" not in str(e)
+
+
+def test_fused_message_zero_weights_give_bias_relu():
+    e, din, dout = 128, 4, 4
+    sender = jnp.ones((e, din))
+    receiver = jnp.ones((e, din))
+    w = jnp.zeros((2 * din, dout))
+    b = jnp.array([-1.0, 0.0, 0.5, 2.0])
+    out = edge_conv.fused_message(sender, receiver, w, b)
+    np.testing.assert_allclose(out, jnp.tile(jnp.array([0.0, 0.0, 0.5, 2.0]), (e, 1)))
+
+
+# ---------------------------------------------------------------------------
+# onehot_segment_sum
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    e=st.sampled_from([1, 5, 128, 256]),
+    d=st.sampled_from([1, 8, 64]),
+    n=st.sampled_from([1, 4, 50]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_onehot_segment_sum_matches_ref(e, d, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    data = rand(k1, (e, d))
+    seg = jax.random.randint(k2, (e,), 0, n)
+    got = edge_conv.onehot_segment_sum(data, seg, n)
+    want = ref.segment_sum_ref(data, seg, n)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # And the oracle's two formulations agree with each other.
+    np.testing.assert_allclose(
+        ref.onehot_segment_sum_ref(data, seg, n), want, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_onehot_segment_sum_empty_segments_zero():
+    data = jnp.ones((128, 3))
+    seg = jnp.zeros((128,), jnp.int32)  # everything in segment 0
+    out = edge_conv.onehot_segment_sum(data, seg, 4)
+    np.testing.assert_allclose(out[0], jnp.full((3,), 128.0))
+    np.testing.assert_allclose(out[1:], jnp.zeros((3, 3)))
+
+
+def test_onehot_segment_sum_multiblock_accumulates():
+    # 3 blocks of 128; all rows into segment 1.
+    data = jnp.ones((384, 2))
+    seg = jnp.ones((384,), jnp.int32)
+    out = edge_conv.onehot_segment_sum(data, seg, 2)
+    np.testing.assert_allclose(out[1], jnp.full((2,), 384.0))
+    np.testing.assert_allclose(out[0], jnp.zeros((2,)))
+
+
+# ---------------------------------------------------------------------------
+# segment_softmax
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    e=st.sampled_from([1, 7, 128, 256]),
+    n=st.sampled_from([1, 3, 40]),
+    scale=st.sampled_from([1.0, 100.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_segment_softmax_matches_ref(e, n, scale, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    logits = rand(k1, (e,), -scale, scale)
+    seg = jax.random.randint(k2, (e,), 0, n)
+    got = edge_conv.segment_softmax(logits, seg, n)
+    want = ref.segment_softmax_ref(logits, seg, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_segment_softmax_sums_to_one():
+    k = jax.random.PRNGKey(3)
+    logits = rand(k, (256,), -5, 5)
+    seg = jax.random.randint(jax.random.PRNGKey(4), (256,), 0, 10)
+    w = edge_conv.segment_softmax(logits, seg, 10)
+    sums = ref.segment_sum_ref(w[:, None], seg, 10)[:, 0]
+    counts = ref.segment_sum_ref(jnp.ones((256, 1)), seg, 10)[:, 0]
+    np.testing.assert_allclose(sums[counts > 0], 1.0, rtol=1e-5)
+
+
+def test_segment_softmax_stability_large_logits():
+    logits = jnp.array([1000.0, 1001.0] + [0.0] * 126)
+    seg = jnp.array([0, 0] + [1] * 126, jnp.int32)
+    w = edge_conv.segment_softmax(logits, seg, 2)
+    assert np.isfinite(np.asarray(w)).all()
+    np.testing.assert_allclose(w[0] + w[1], 1.0, rtol=1e-5)
+    assert w[1] > w[0]
+
+
+# ---------------------------------------------------------------------------
+# kernels inside jit / grad (they must lower into the AOT graph)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_message_jits_and_differentiates():
+    e, din, dout = 128, 8, 4
+    k = jax.random.split(jax.random.PRNGKey(1), 4)
+    sender = rand(k[0], (e, din))
+    receiver = rand(k[1], (e, din))
+    w = rand(k[2], (2 * din, dout))
+    b = rand(k[3], (dout,))
+
+    def loss(w, b):
+        return jnp.sum(edge_conv.fused_message(sender, receiver, w, b) ** 2)
+
+    def loss_ref(w, b):
+        return jnp.sum(ref.fused_message_ref(sender, receiver, w, b) ** 2)
+
+    gw, gb = jax.jit(jax.grad(loss, argnums=(0, 1)))(w, b)
+    gw_ref, gb_ref = jax.grad(loss_ref, argnums=(0, 1))(w, b)
+    np.testing.assert_allclose(gw, gw_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gb, gb_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_kernels_lower_to_hlo_text():
+    # The AOT path: kernels must survive lowering to HLO text.
+    from jax._src.lib import xla_client as xc
+
+    def fn(s, r, w, b):
+        return (edge_conv.fused_message(s, r, w, b),)
+
+    spec = [
+        jax.ShapeDtypeStruct((128, 8), jnp.float32),
+        jax.ShapeDtypeStruct((128, 8), jnp.float32),
+        jax.ShapeDtypeStruct((16, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4,), jnp.float32),
+    ]
+    lowered = jax.jit(fn).lower(*spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text()
+    assert "ENTRY" in text and len(text) > 100

@@ -1,0 +1,245 @@
+"""L2 correctness: model shapes, gradients, learning, arch zoo."""
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile import model as M  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG_PATH = Path(__file__).resolve().parents[2] / "configs/mag_small.json"
+
+
+def tiny_cfg():
+    """Shrunk config so tests run fast."""
+    cfg = M.load_config(CFG_PATH)
+    cfg["pad"] = {
+        "node_caps": {"paper": 24, "author": 16, "institution": 8, "field_of_study": 8},
+        "edge_caps": {
+            "cites": 16,
+            "writes": 16,
+            "written": 16,
+            "affiliated_with": 8,
+            "has_topic": 16,
+        },
+        "component_cap": 3,
+    }
+    cfg["batch_size"] = 2
+    cfg["schema"]["node_sets"]["paper"]["features"]["feat"] = 12
+    cfg["model"]["hidden_dim"] = 16
+    cfg["model"]["message_dim"] = 16
+    cfg["model"]["num_layers"] = 2
+    cfg["model"]["num_heads"] = 2
+    cfg["train"]["num_classes"] = 4
+    cfg["schema"]["node_sets"]["institution"]["cardinality"] = 10
+    cfg["schema"]["node_sets"]["field_of_study"]["cardinality"] = 10
+    return cfg
+
+
+def random_batch(spec, key, n_classes=4):
+    """A structurally valid padded batch: 2 real components + padding.
+
+    Component layout per node set: [comp0 | comp1 | padding]; edges stay
+    inside their component, mirroring the Rust pad() output.
+    """
+    batch = {}
+    rngs = jax.random.split(key, 64)
+    ri = iter(range(64))
+
+    def nk():
+        return rngs[next(ri)]
+
+    caps_n = spec.pad["node_caps"]
+    # Nodes per component (2 real + 1 pad): fixed simple split.
+    comp_nodes = {}
+    for set_name, cap in caps_n.items():
+        per = cap // 3
+        comp_nodes[set_name] = [(0, per), (per, 2 * per), (2 * per, cap)]
+
+    for name, struct in spec.batch_struct().items():
+        if name.startswith("feat."):
+            batch[name] = jax.random.normal(nk(), struct.shape, jnp.float32)
+        elif name.startswith("ids."):
+            set_name = name.split(".")[1]
+            card = spec.schema["node_sets"][set_name]["cardinality"]
+            batch[name] = jax.random.randint(nk(), struct.shape, 0, card, jnp.int32)
+        elif name.startswith("edge."):
+            es = name.split(".")[1]
+            endpoint = name.split(".")[2]
+            src_set, tgt_set = spec.schema["edge_sets"][es]
+            set_name = src_set if endpoint == "src" else tgt_set
+            cap_e = struct.shape[0]
+            per_comp = cap_e // 3
+            vals = []
+            for c in range(3):
+                lo, hi = comp_nodes[set_name][c]
+                n = per_comp if c < 2 else cap_e - 2 * per_comp
+                vals.append(jax.random.randint(nk(), (n,), lo, hi, jnp.int32))
+            batch[name] = jnp.concatenate(vals)
+        elif name == "root.idx":
+            batch[name] = jnp.array(
+                [comp_nodes["paper"][0][0], comp_nodes["paper"][1][0]], jnp.int32
+            )
+        elif name == "root.labels":
+            batch[name] = jax.random.randint(nk(), struct.shape, 0, n_classes, jnp.int32)
+        elif name == "root.mask":
+            batch[name] = jnp.ones(struct.shape, jnp.float32)
+    return batch
+
+
+ARCHS = ["mpnn", "sage", "gcn", "gatv2", "mha"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes(arch):
+    spec = M.ModelSpec(tiny_cfg(), arch=arch)
+    params = M.init_params(spec, 0)
+    batch = random_batch(spec, jax.random.PRNGKey(1))
+    logits = M.forward(spec, params, batch, train=False)
+    assert logits.shape == (spec.num_roots, spec.num_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_gradients_flow_everywhere(arch):
+    spec = M.ModelSpec(tiny_cfg(), arch=arch)
+    params = M.init_params(spec, 0)
+    batch = random_batch(spec, jax.random.PRNGKey(2))
+
+    def loss_fn(p):
+        loss, _, _ = M.loss_and_metrics(spec, p, batch, train=False)
+        return loss
+
+    grads = jax.grad(loss_fn)(params)
+    dead = [
+        k
+        for k, g in grads.items()
+        if not np.isfinite(np.asarray(g)).all()
+    ]
+    assert not dead, f"non-finite grads: {dead}"
+    # Head and at least the last layer must receive signal.
+    assert np.abs(np.asarray(grads["head.w"])).max() > 0
+    some_layer = [k for k in grads if k.startswith("l1.")]
+    assert any(np.abs(np.asarray(grads[k])).max() > 0 for k in some_layer)
+
+
+def test_mask_zeroes_padding_roots():
+    spec = M.ModelSpec(tiny_cfg(), arch="mpnn")
+    params = M.init_params(spec, 0)
+    batch = random_batch(spec, jax.random.PRNGKey(3))
+    l_full, c_full, w_full = M.loss_and_metrics(spec, params, batch, train=False)
+    # Mask out root 1: loss must now equal the root-0-only loss.
+    batch2 = dict(batch)
+    batch2["root.mask"] = jnp.array([1.0, 0.0])
+    l_masked, c_masked, w_masked = M.loss_and_metrics(spec, params, batch2, train=False)
+    assert w_full == 2.0 and w_masked == 1.0
+    assert c_masked <= c_full
+    assert np.isfinite(l_masked)
+
+
+def test_padding_nodes_do_not_affect_real_roots():
+    # Perturb features of the padding component only: logits at real
+    # roots must not change (component isolation, §3.2).
+    spec = M.ModelSpec(tiny_cfg(), arch="mpnn")
+    params = M.init_params(spec, 0)
+    batch = random_batch(spec, jax.random.PRNGKey(4))
+    logits1 = M.forward(spec, params, batch, train=False)
+    batch2 = dict(batch)
+    feat = np.asarray(batch["feat.paper.feat"]).copy()
+    cap = spec.pad["node_caps"]["paper"]
+    feat[2 * (cap // 3):] += 100.0  # padding component rows
+    batch2["feat.paper.feat"] = jnp.asarray(feat)
+    logits2 = M.forward(spec, params, batch2, train=False)
+    np.testing.assert_allclose(logits1, logits2, rtol=1e-5, atol=1e-5)
+
+
+def test_train_step_reduces_loss_overfit():
+    # A few Adam steps on one batch must reduce loss (sanity that the
+    # whole fwd+bwd+opt pipeline learns).
+    spec = M.ModelSpec(tiny_cfg(), arch="mpnn")
+    params = M.init_params(spec, 0)
+    m_state = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v_state = {k: jnp.zeros_like(v) for k, v in params.items()}
+    step = jnp.asarray(0, jnp.int32)
+    batch = random_batch(spec, jax.random.PRNGKey(5))
+
+    hp = {"learning_rate": 1e-3, "dropout": 0.0, "weight_decay": 0.0}
+    step_fn = jax.jit(lambda p, m, v, s: M.train_step(spec, p, m, v, s, hp, batch))
+    losses = []
+    for _ in range(30):
+        params, m_state, v_state, step, loss, correct, weight = step_fn(
+            params, m_state, v_state, step
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, f"no learning: {losses[0]:.3f} -> {losses[-1]:.3f}"
+    assert int(step) == 30
+
+
+def test_param_counts_ordered_and_stable():
+    spec = M.ModelSpec(tiny_cfg(), arch="mpnn")
+    p1 = M.init_params(spec, 0)
+    p2 = M.init_params(spec, 0)
+    assert list(p1.keys()) == list(p2.keys())
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+    p3 = M.init_params(spec, 1)
+    assert any(
+        not np.array_equal(np.asarray(p1[k]), np.asarray(p3[k])) for k in p1
+    ), "different seed, different params"
+
+
+def test_mha_is_higher_capacity_than_mpnn():
+    # Table 1's premise: the attention baseline has several times the
+    # parameters of the tuned MPNN.
+    cfg = M.load_config(CFG_PATH)
+    mpnn = M.ModelSpec(cfg, arch="mpnn")
+    mha = M.ModelSpec(cfg, arch="mha")
+    n_mpnn = M.count_params(M.init_params(mpnn, 0))
+    n_mha = M.count_params(M.init_params(mha, 0))
+    assert n_mha > 2 * n_mpnn, f"mha {n_mha} vs mpnn {n_mpnn}"
+
+
+def test_pallas_and_ref_message_paths_agree():
+    cfg = tiny_cfg()
+    cfg["model"]["use_pallas_messages"] = True
+    spec_pallas = M.ModelSpec(cfg, arch="mpnn")
+    cfg2 = tiny_cfg()
+    cfg2["model"]["use_pallas_messages"] = False
+    spec_ref = M.ModelSpec(cfg2, arch="mpnn")
+    params = M.init_params(spec_pallas, 0)
+    batch = random_batch(spec_pallas, jax.random.PRNGKey(6))
+    out_pallas = M.forward(spec_pallas, params, batch, train=False)
+    out_ref = M.forward(spec_ref, params, batch, train=False)
+    np.testing.assert_allclose(out_pallas, out_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_segment_path_agrees():
+    cfg = tiny_cfg()
+    cfg["model"]["use_pallas_segment"] = True
+    spec_a = M.ModelSpec(cfg, arch="mpnn")
+    cfg2 = tiny_cfg()
+    cfg2["model"]["use_pallas_segment"] = False
+    spec_b = M.ModelSpec(cfg2, arch="mpnn")
+    params = M.init_params(spec_a, 0)
+    batch = random_batch(spec_a, jax.random.PRNGKey(7))
+    np.testing.assert_allclose(
+        M.forward(spec_a, params, batch, train=False),
+        M.forward(spec_b, params, batch, train=False),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_batch_spec_matches_struct():
+    spec = M.ModelSpec(tiny_cfg(), arch="mpnn")
+    names = [n for n, _, _ in spec.batch_spec()]
+    assert names == list(spec.batch_struct().keys())
+    assert "root.idx" in names and "edge.cites.src" in names
+    assert names.index("edge.cites.src") < names.index("edge.cites.tgt")

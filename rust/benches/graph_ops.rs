@@ -1,0 +1,89 @@
+//! Micro-bench: API level 2 data-exchange ops (experiment µ in
+//! DESIGN.md) — broadcast/pool/softmax cost vs edge count and feature
+//! width, plus merge/pad pipeline-stage costs.
+//!
+//! Run: `cargo bench --bench graph_ops`
+
+use tfgnn::graph::batch::merge;
+use tfgnn::graph::pad::{pad, PadSpec};
+use tfgnn::graph::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};
+use tfgnn::ops::{broadcast_node_to_edges, pool_edges_to_node, segment_softmax, Reduce, Tag};
+use tfgnn::util::rng::Rng;
+use tfgnn::util::stats::{print_row, Bench};
+
+fn bipartite(n_nodes: usize, n_edges: usize, dim: usize, rng: &mut Rng) -> GraphTensor {
+    let a = NodeSet::new(vec![n_nodes]).with_feature(
+        "h",
+        Feature::f32_mat(dim, (0..n_nodes * dim).map(|_| rng.f32()).collect()),
+    );
+    let b = NodeSet::new(vec![n_nodes]).with_feature(
+        "h",
+        Feature::f32_mat(dim, (0..n_nodes * dim).map(|_| rng.f32()).collect()),
+    );
+    let e = EdgeSet::new(
+        vec![n_edges],
+        Adjacency {
+            source_set: "a".into(),
+            target_set: "b".into(),
+            source: (0..n_edges).map(|_| rng.uniform(n_nodes) as u32).collect(),
+            target: (0..n_edges).map(|_| rng.uniform(n_nodes) as u32).collect(),
+        },
+    );
+    GraphTensor::from_pieces(
+        Context::default(),
+        [("a".to_string(), a), ("b".to_string(), b)].into(),
+        [("e".to_string(), e)].into(),
+    )
+    .unwrap()
+}
+
+fn main() {
+    let bench = Bench::new(3, 15);
+    let mut rng = Rng::new(42);
+
+    println!("# broadcast / pool / softmax over one edge set");
+    for &(n_nodes, n_edges, dim) in
+        &[(1_000, 10_000, 32), (10_000, 100_000, 32), (10_000, 100_000, 128)]
+    {
+        let g = bipartite(n_nodes, n_edges, dim, &mut rng);
+        let h = g.node_set("a").unwrap().feature("h").unwrap().clone();
+        let label = format!("n={n_nodes} e={n_edges} d={dim}");
+
+        let s = bench.throughput(n_edges, || {
+            let _ = broadcast_node_to_edges(&g, "e", Tag::Source, &h).unwrap();
+        });
+        print_row("broadcast_node_to_edges", &label, &s, "items/s");
+
+        let on_edges = broadcast_node_to_edges(&g, "e", Tag::Source, &h).unwrap();
+        for reduce in [Reduce::Sum, Reduce::Mean, Reduce::Max] {
+            let s = bench.throughput(n_edges, || {
+                let _ = pool_edges_to_node(&g, "e", Tag::Target, reduce, &on_edges).unwrap();
+            });
+            print_row(&format!("pool_edges_to_node/{}", reduce.name()), &label, &s, "items/s");
+        }
+
+        let logits = Feature::f32_vec((0..n_edges).map(|_| rng.range_f32(-4.0, 4.0)).collect());
+        let s = bench.throughput(n_edges, || {
+            let _ = segment_softmax(&g, "e", Tag::Target, &logits).unwrap();
+        });
+        print_row("segment_softmax", &label, &s, "items/s");
+    }
+
+    println!("\n# batching stages: merge + pad (pipeline hot path)");
+    for &batch_size in &[8usize, 32] {
+        let graphs: Vec<GraphTensor> =
+            (0..batch_size).map(|_| bipartite(200, 1_000, 64, &mut rng)).collect();
+        let label = format!("batch={batch_size} n=200 e=1000 d=64");
+        let s = bench.throughput(batch_size, || {
+            let _ = merge(&graphs).unwrap();
+        });
+        print_row("merge", &label, &s, "items/s");
+
+        let merged = merge(&graphs).unwrap();
+        let spec = PadSpec::fit(&graphs.iter().collect::<Vec<_>>(), batch_size, 1.3);
+        let s = bench.throughput(batch_size, || {
+            let _ = pad(&merged, &spec).unwrap();
+        });
+        print_row("pad", &label, &s, "items/s");
+    }
+}

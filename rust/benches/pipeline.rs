@@ -1,0 +1,118 @@
+//! Bench: the Fig. 4 training input pipeline (experiment F4 in
+//! DESIGN.md) — per-stage throughput (sample, merge, pad) and the
+//! end-to-end producer with/without the parallel prep pool and
+//! backpressure, plus pipeline-vs-executor overlap if artifacts exist.
+//!
+//! Run: `make artifacts && cargo bench --bench pipeline`
+
+use std::sync::Arc;
+
+use tfgnn::graph::batch::merge;
+use tfgnn::graph::pad::fit_or_skip;
+use tfgnn::pipeline::{epoch_stream, DatasetProvider, PipelineConfig, SamplingProvider};
+use tfgnn::runner::MagEnv;
+use tfgnn::runtime::batch::RootTask;
+use tfgnn::runtime::Runtime;
+use tfgnn::synth::mag::Split;
+use tfgnn::train::{Hyperparams, Trainer};
+use tfgnn::util::stats::{print_row, Bench};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("pipeline bench needs `make artifacts`");
+        return;
+    }
+    let env = MagEnv::from_artifacts(dir).unwrap();
+    let seeds = env.dataset.papers_in_split(Split::Train);
+    let bench = Bench::new(1, 5);
+
+    // ---- stage costs --------------------------------------------------------
+    println!("# per-stage costs (batch = {})", env.batch_size);
+    let chunk: Vec<u32> = seeds[..env.batch_size].to_vec();
+    let s = bench.throughput(env.batch_size, || {
+        for &seed in &chunk {
+            let _ = env.sampler.sample(seed).unwrap();
+        }
+    });
+    print_row("stage/sample", "per graph", &s, "items/s");
+
+    let graphs: Vec<_> = chunk.iter().map(|&s| env.sampler.sample(s).unwrap()).collect();
+    let s = bench.run(|| {
+        let _ = merge(&graphs).unwrap();
+    });
+    print_row("stage/merge", "per batch", &s, "s");
+    let merged = merge(&graphs).unwrap();
+    let s = bench.run(|| {
+        let _ = fit_or_skip(&merged, &env.pad).unwrap();
+    });
+    print_row("stage/pad", "per batch", &s, "s");
+
+    // ---- end-to-end producer -------------------------------------------------
+    println!("\n# pipeline producer throughput (graphs/s), one epoch over {} seeds", seeds.len());
+    for prep_threads in [0usize, 2, 4] {
+        let provider = Arc::new(SamplingProvider {
+            sampler: Arc::clone(&env.sampler),
+            seeds: seeds.clone(),
+            shuffle_seed: 7,
+        });
+        let mut cfg = PipelineConfig::new(env.batch_size, env.pad.clone());
+        cfg.shuffle_buffer = 64;
+        cfg.prep_threads = prep_threads;
+        let n = seeds.len();
+        let s = bench.throughput(n, move || {
+            let stream = epoch_stream(
+                Arc::clone(&provider) as Arc<dyn DatasetProvider>,
+                cfg.clone(),
+                0,
+            )
+            .unwrap();
+            let mut count = 0usize;
+            for p in stream.iter() {
+                count += p.num_real_components;
+            }
+            assert!(count > 0);
+        });
+        print_row("pipeline/producer", &format!("prep_threads={prep_threads}"), &s, "items/s");
+    }
+
+    // ---- pipeline + executor overlap -----------------------------------------
+    println!("\n# train-step consumption vs pipeline production (Fig. 4 balance)");
+    let entry = env.manifest.model("mpnn").unwrap().clone();
+    let hp = Hyperparams::from_manifest(&env.manifest).unwrap();
+    let mut trainer =
+        Trainer::new(Runtime::cpu().unwrap(), dir, &entry, RootTask::default(), hp).unwrap();
+    // Pure executor rate on one cached batch.
+    let graphs: Vec<_> =
+        seeds[..env.batch_size].iter().map(|&s| env.sampler.sample(s).unwrap()).collect();
+    let padded = fit_or_skip(&merge(&graphs).unwrap(), &env.pad).unwrap();
+    let s = bench.run(|| {
+        let _ = trainer.train_batch(&padded).unwrap();
+    });
+    print_row("executor/train_step", "cached batch", &s, "s");
+    let step_time = s.mean;
+
+    // End-to-end: pipeline feeding the trainer.
+    let provider = Arc::new(SamplingProvider {
+        sampler: Arc::clone(&env.sampler),
+        seeds: seeds[..48 * env.batch_size.min(seeds.len() / env.batch_size)].to_vec(),
+        shuffle_seed: 7,
+    });
+    let mut cfg = PipelineConfig::new(env.batch_size, env.pad.clone());
+    cfg.prep_threads = 2;
+    let t0 = std::time::Instant::now();
+    let stream = epoch_stream(provider, cfg, 0).unwrap();
+    let mut steps = 0usize;
+    for p in stream.iter() {
+        trainer.train_batch(&p).unwrap();
+        steps += 1;
+    }
+    let e2e = t0.elapsed().as_secs_f64() / steps as f64;
+    println!(
+        "BENCH pipeline/e2e overlap: {:.2} ms/step end-to-end vs {:.2} ms/step pure executor \
+         (overhead {:.1}%)",
+        e2e * 1e3,
+        step_time * 1e3,
+        (e2e / step_time - 1.0) * 100.0
+    );
+}

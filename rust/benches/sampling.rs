@@ -1,0 +1,80 @@
+//! Bench: Algorithm 1 distributed sampling (experiment A1 in
+//! DESIGN.md) — subgraph throughput vs worker count, the cost of
+//! resilience (failure injection + retries), and in-memory vs
+//! distributed executor comparison.
+//!
+//! Run: `cargo bench --bench sampling`
+
+use std::sync::Arc;
+
+use tfgnn::coordinator::{run_sampling, CoordinatorConfig};
+use tfgnn::sampler::inmem::InMemorySampler;
+use tfgnn::sampler::spec::mag_sampling_spec_scaled;
+use tfgnn::store::sharded::ShardedStore;
+use tfgnn::synth::mag::{generate, MagConfig};
+use tfgnn::util::stats::{print_row, Bench};
+
+fn main() {
+    // A denser graph than the training config so sampling has real work.
+    let cfg = MagConfig {
+        num_papers: 20_000,
+        num_authors: 30_000,
+        num_institutions: 500,
+        num_fields: 200,
+        ..MagConfig::default()
+    };
+    let ds = generate(&cfg);
+    let store = Arc::new(ds.store);
+    let spec = mag_sampling_spec_scaled(&store.schema, 0.25).unwrap();
+    let seeds: Vec<u32> = (0..2_000).collect();
+    let bench = Bench::new(1, 5);
+
+    println!("# in-memory sampler (§6.1.2), single thread");
+    let sampler = InMemorySampler::new(Arc::clone(&store), spec.clone(), 42).unwrap();
+    let s = bench.throughput(seeds.len(), || {
+        for &seed in &seeds {
+            let _ = sampler.sample(seed).unwrap();
+        }
+    });
+    print_row("sample/inmem", "2000 seeds", &s, "items/s");
+
+    println!("\n# Algorithm 1 over the sharded store: scaling with workers");
+    for workers in [1usize, 2, 4, 8] {
+        let sharded = Arc::new(ShardedStore::new(Arc::clone(&store), 16));
+        let coord = CoordinatorConfig { num_workers: workers, batch_size: 64, ..Default::default() };
+        let spec2 = spec.clone();
+        let seeds2 = seeds.clone();
+        let s = bench.throughput(seeds.len(), move || {
+            let (_graphs, _report) =
+                run_sampling(Arc::clone(&sharded), &spec2, 42, &seeds2, &coord).unwrap();
+        });
+        print_row("sample/distributed", &format!("workers={workers}"), &s, "items/s");
+    }
+
+    println!("\n# the price of resilience: transient failures + worker crashes");
+    for (fail, crash) in [(0.0, 0.0), (0.05, 0.0), (0.05, 0.05), (0.20, 0.10)] {
+        let sharded = Arc::new(
+            ShardedStore::new(Arc::clone(&store), 16).with_failures(fail, 99),
+        );
+        let coord = CoordinatorConfig {
+            num_workers: 4,
+            batch_size: 64,
+            worker_crash_rate: crash,
+            crash_seed: 5,
+            max_item_attempts: 100,
+            ..Default::default()
+        };
+        let spec2 = spec.clone();
+        let seeds2 = seeds.clone();
+        let s = bench.throughput(seeds.len(), move || {
+            let (_g, _r) =
+                run_sampling(Arc::clone(&sharded), &spec2, 42, &seeds2, &coord).unwrap();
+        });
+        print_row(
+            "sample/resilience",
+            &format!("rpc_fail={fail} crash={crash}"),
+            &s,
+            "items/s",
+        );
+    }
+}

@@ -1,0 +1,410 @@
+//! Batching and merging (paper §3.2).
+//!
+//! TF-GNN batches input graphs and then *merges* the batch into a single
+//! scalar GraphTensor: per node/edge set, features are concatenated
+//! across the batch and edge indices are shifted so each input graph
+//! becomes one **component** of the result, with a flat index space
+//! `0..n_total` per set. Context features become per-component rows.
+//!
+//! [`merge`] implements that; [`split`] is the inverse (used for
+//! readout, debugging and the merge↔split property tests).
+
+use std::collections::BTreeMap;
+
+use super::tensor::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};
+use crate::{Error, Result};
+
+/// Merge a batch of GraphTensors into one scalar GraphTensor whose
+/// components are the inputs, in order.
+///
+/// All inputs must have the same node/edge-set names, feature names,
+/// dtypes and feature shapes (as they do when parsed from one schema).
+pub fn merge(batch: &[GraphTensor]) -> Result<GraphTensor> {
+    if batch.is_empty() {
+        return Err(Error::Graph("merge of empty batch".into()));
+    }
+    let total_components: usize = batch.iter().map(|g| g.num_components).sum();
+
+    // Node sets.
+    let mut node_sets: BTreeMap<String, NodeSet> = BTreeMap::new();
+    for name in batch[0].node_sets.keys() {
+        let mut sizes = Vec::with_capacity(total_components);
+        let mut features: BTreeMap<String, Vec<&Feature>> = BTreeMap::new();
+        for g in batch {
+            let ns = g.node_set(name)?;
+            sizes.extend_from_slice(&ns.sizes);
+            for (fname, f) in &ns.features {
+                features.entry(fname.clone()).or_default().push(f);
+            }
+        }
+        let mut merged = NodeSet::new(sizes);
+        for (fname, parts) in features {
+            if parts.len() != batch.len() {
+                return Err(Error::Graph(format!(
+                    "node feature {name}/{fname} missing from some batch elements"
+                )));
+            }
+            merged.features.insert(fname.clone(), concat_features(&parts, &fname)?);
+        }
+        node_sets.insert(name.clone(), merged);
+    }
+
+    // Edge sets: concatenate and shift indices by per-graph node offsets.
+    let mut edge_sets: BTreeMap<String, EdgeSet> = BTreeMap::new();
+    for name in batch[0].edge_sets.keys() {
+        let first = batch[0].edge_set(name)?;
+        let (src_set, tgt_set) =
+            (first.adjacency.source_set.clone(), first.adjacency.target_set.clone());
+        let mut sizes = Vec::with_capacity(total_components);
+        let mut source = Vec::new();
+        let mut target = Vec::new();
+        let mut features: BTreeMap<String, Vec<&Feature>> = BTreeMap::new();
+        let mut src_off = 0u32;
+        let mut tgt_off = 0u32;
+        for g in batch {
+            let es = g.edge_set(name)?;
+            if es.adjacency.source_set != src_set || es.adjacency.target_set != tgt_set {
+                return Err(Error::Graph(format!(
+                    "edge set {name:?} endpoint mismatch across batch"
+                )));
+            }
+            sizes.extend_from_slice(&es.sizes);
+            source.extend(es.adjacency.source.iter().map(|&i| i + src_off));
+            target.extend(es.adjacency.target.iter().map(|&i| i + tgt_off));
+            for (fname, f) in &es.features {
+                features.entry(fname.clone()).or_default().push(f);
+            }
+            src_off += g.num_nodes(&src_set)? as u32;
+            tgt_off += g.num_nodes(&tgt_set)? as u32;
+        }
+        let mut merged = EdgeSet::new(
+            sizes,
+            Adjacency { source_set: src_set, target_set: tgt_set, source, target },
+        );
+        for (fname, parts) in features {
+            if parts.len() != batch.len() {
+                return Err(Error::Graph(format!(
+                    "edge feature {name}/{fname} missing from some batch elements"
+                )));
+            }
+            merged.features.insert(fname.clone(), concat_features(&parts, &fname)?);
+        }
+        edge_sets.insert(name.clone(), merged);
+    }
+
+    // Context: concatenate per-component rows.
+    let mut context = Context::default();
+    for fname in batch[0].context.features.keys() {
+        let parts: Vec<&Feature> = batch
+            .iter()
+            .map(|g| g.context.feature(fname))
+            .collect::<Result<Vec<_>>>()?;
+        context.features.insert(fname.clone(), concat_features(&parts, fname)?);
+    }
+
+    let merged = GraphTensor { context, node_sets, edge_sets, num_components: total_components };
+    merged.validate()?;
+    Ok(merged)
+}
+
+/// Split a merged GraphTensor back into its components (inverse of
+/// [`merge`] for single-component inputs).
+pub fn split(graph: &GraphTensor) -> Result<Vec<GraphTensor>> {
+    let mut out = Vec::with_capacity(graph.num_components);
+    for c in 0..graph.num_components {
+        let mut node_sets = BTreeMap::new();
+        let mut node_offsets: BTreeMap<String, usize> = BTreeMap::new();
+        for (name, ns) in &graph.node_sets {
+            let before: usize = ns.sizes[..c].iter().sum();
+            let n = ns.sizes[c];
+            node_offsets.insert(name.clone(), before);
+            let mut piece = NodeSet::new(vec![n]);
+            for (fname, f) in &ns.features {
+                piece.features.insert(fname.clone(), slice_feature(f, before, n));
+            }
+            node_sets.insert(name.clone(), piece);
+        }
+        let mut edge_sets = BTreeMap::new();
+        for (name, es) in &graph.edge_sets {
+            let before: usize = es.sizes[..c].iter().sum();
+            let n = es.sizes[c];
+            let src_off = node_offsets[&es.adjacency.source_set] as u32;
+            let tgt_off = node_offsets[&es.adjacency.target_set] as u32;
+            let mut piece = EdgeSet::new(
+                vec![n],
+                Adjacency {
+                    source_set: es.adjacency.source_set.clone(),
+                    target_set: es.adjacency.target_set.clone(),
+                    source: es.adjacency.source[before..before + n]
+                        .iter()
+                        .map(|&i| i - src_off)
+                        .collect(),
+                    target: es.adjacency.target[before..before + n]
+                        .iter()
+                        .map(|&i| i - tgt_off)
+                        .collect(),
+                },
+            );
+            for (fname, f) in &es.features {
+                piece.features.insert(fname.clone(), slice_feature(f, before, n));
+            }
+            edge_sets.insert(name.clone(), piece);
+        }
+        let mut context = Context::default();
+        for (fname, f) in &graph.context.features {
+            context.features.insert(fname.clone(), slice_feature(f, c, 1));
+        }
+        let g = GraphTensor { context, node_sets, edge_sets, num_components: 1 };
+        g.validate()?;
+        out.push(g);
+    }
+    Ok(out)
+}
+
+/// Concatenate features along the item dimension.
+fn concat_features(parts: &[&Feature], name: &str) -> Result<Feature> {
+    let first = parts[0];
+    match first {
+        Feature::F32 { dims, .. } => {
+            let mut data = Vec::new();
+            for p in parts {
+                let (d, v) = p.as_f32()?;
+                if d != dims.as_slice() {
+                    return Err(Error::Feature(format!("feature {name:?}: dim mismatch in batch")));
+                }
+                data.extend_from_slice(v);
+            }
+            Ok(Feature::F32 { dims: dims.clone(), data })
+        }
+        Feature::I64 { dims, .. } => {
+            let mut data = Vec::new();
+            for p in parts {
+                let (d, v) = p.as_i64()?;
+                if d != dims.as_slice() {
+                    return Err(Error::Feature(format!("feature {name:?}: dim mismatch in batch")));
+                }
+                data.extend_from_slice(v);
+            }
+            Ok(Feature::I64 { dims: dims.clone(), data })
+        }
+        Feature::Str { .. } => {
+            let mut data = Vec::new();
+            for p in parts {
+                data.extend_from_slice(p.as_str()?);
+            }
+            Ok(Feature::Str { data })
+        }
+        Feature::RaggedF32 { .. } => {
+            let mut row_splits = vec![0usize];
+            let mut data = Vec::new();
+            for p in parts {
+                match p {
+                    Feature::RaggedF32 { row_splits: rs, data: d } => {
+                        let base = data.len();
+                        data.extend_from_slice(d);
+                        row_splits.extend(rs[1..].iter().map(|&s| s + base));
+                    }
+                    _ => {
+                        return Err(Error::Feature(format!(
+                            "feature {name:?}: mixed ragged/dense in batch"
+                        )))
+                    }
+                }
+            }
+            Ok(Feature::RaggedF32 { row_splits, data })
+        }
+        Feature::RaggedI64 { .. } => {
+            let mut row_splits = vec![0usize];
+            let mut data = Vec::new();
+            for p in parts {
+                match p {
+                    Feature::RaggedI64 { row_splits: rs, data: d } => {
+                        let base = data.len();
+                        data.extend_from_slice(d);
+                        row_splits.extend(rs[1..].iter().map(|&s| s + base));
+                    }
+                    _ => {
+                        return Err(Error::Feature(format!(
+                            "feature {name:?}: mixed ragged/dense in batch"
+                        )))
+                    }
+                }
+            }
+            Ok(Feature::RaggedI64 { row_splits, data })
+        }
+    }
+}
+
+/// Slice `n` items starting at `at` out of a feature.
+fn slice_feature(f: &Feature, at: usize, n: usize) -> Feature {
+    match f {
+        Feature::F32 { dims, data } => {
+            let per: usize = dims.iter().product::<usize>().max(1);
+            Feature::F32 { dims: dims.clone(), data: data[at * per..(at + n) * per].to_vec() }
+        }
+        Feature::I64 { dims, data } => {
+            let per: usize = dims.iter().product::<usize>().max(1);
+            Feature::I64 { dims: dims.clone(), data: data[at * per..(at + n) * per].to_vec() }
+        }
+        Feature::Str { data } => Feature::Str { data: data[at..at + n].to_vec() },
+        Feature::RaggedF32 { row_splits, data } => {
+            let lo = row_splits[at];
+            let hi = row_splits[at + n];
+            Feature::RaggedF32 {
+                row_splits: row_splits[at..=at + n].iter().map(|&s| s - lo).collect(),
+                data: data[lo..hi].to_vec(),
+            }
+        }
+        Feature::RaggedI64 { row_splits, data } => {
+            let lo = row_splits[at];
+            let hi = row_splits[at + n];
+            Feature::RaggedI64 {
+                row_splits: row_splits[at..=at + n].iter().map(|&s| s - lo).collect(),
+                data: data[lo..hi].to_vec(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::recsys::recsys_example_graph;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn merge_two_recsys_graphs() {
+        let g = recsys_example_graph();
+        let merged = merge(&[g.clone(), g.clone()]).unwrap();
+        assert_eq!(merged.num_components, 2);
+        assert_eq!(merged.num_nodes("items").unwrap(), 12);
+        assert_eq!(merged.num_nodes("users").unwrap(), 8);
+        assert_eq!(merged.num_edges("purchased").unwrap(), 14);
+        // Second copy's edges shifted by the first copy's node counts.
+        let es = merged.edge_set("purchased").unwrap();
+        assert_eq!(es.adjacency.source[7], 0 + 6);
+        assert_eq!(es.adjacency.target[7], 1 + 4);
+        // Context rows stacked: one row per component.
+        let scores = merged.context.feature("scores").unwrap();
+        let (dims, data) = scores.as_f32().unwrap();
+        assert_eq!(dims, &[4]);
+        assert_eq!(data.len(), 8);
+    }
+
+    #[test]
+    fn merge_then_split_roundtrips() {
+        let g = recsys_example_graph();
+        let merged = merge(&[g.clone(), g.clone(), g.clone()]).unwrap();
+        let parts = split(&merged).unwrap();
+        assert_eq!(parts.len(), 3);
+        for p in parts {
+            assert_eq!(p, g);
+        }
+    }
+
+    #[test]
+    fn merge_single_is_identity_modulo_components() {
+        let g = recsys_example_graph();
+        let merged = merge(&[g.clone()]).unwrap();
+        assert_eq!(merged, g);
+    }
+
+    #[test]
+    fn merge_empty_fails() {
+        assert!(merge(&[]).is_err());
+    }
+
+    /// Random heterogeneous graph for property tests.
+    pub fn random_graph(rng: &mut Rng) -> GraphTensor {
+        let dim = 1 + rng.uniform(4);
+        random_graph_with_dim(rng, dim)
+    }
+
+    /// Random graph with a fixed feature dim (so batches merge).
+    pub fn random_graph_with_dim(rng: &mut Rng, dim: usize) -> GraphTensor {
+        let n_a = 1 + rng.uniform(6);
+        let n_b = 1 + rng.uniform(5);
+        let e_ab = rng.uniform(8);
+        let a = NodeSet::new(vec![n_a]).with_feature(
+            "h",
+            Feature::f32_mat(dim, (0..n_a * dim).map(|_| rng.f32()).collect()),
+        );
+        let b = NodeSet::new(vec![n_b]).with_feature(
+            "h",
+            Feature::f32_mat(dim, (0..n_b * dim).map(|_| rng.f32()).collect()),
+        );
+        let e = EdgeSet::new(
+            vec![e_ab],
+            Adjacency {
+                source_set: "a".into(),
+                target_set: "b".into(),
+                source: (0..e_ab).map(|_| rng.uniform(n_a) as u32).collect(),
+                target: (0..e_ab).map(|_| rng.uniform(n_b) as u32).collect(),
+            },
+        )
+        .with_feature("w", Feature::f32_vec((0..e_ab).map(|_| rng.f32()).collect()));
+        let ctx = Context::default().with_feature("label", Feature::i64_vec(vec![rng.uniform(10) as i64]));
+        GraphTensor::from_pieces(
+            ctx,
+            [("a".to_string(), a), ("b".to_string(), b)].into(),
+            [("e".to_string(), e)].into(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn prop_merge_split_identity() {
+        check("merge∘split = id", 50, |rng| {
+            let k = 1 + rng.uniform(5);
+            let dim = 1 + rng.uniform(4);
+            let batch: Vec<GraphTensor> =
+                (0..k).map(|_| random_graph_with_dim(rng, dim)).collect();
+            let merged = merge(&batch).unwrap();
+            merged.validate().unwrap();
+            let parts = split(&merged).unwrap();
+            assert_eq!(parts, batch);
+        });
+    }
+
+    #[test]
+    fn prop_merge_counts_additive() {
+        check("merge adds node/edge counts", 50, |rng| {
+            let k = 1 + rng.uniform(4);
+            let dim = 1 + rng.uniform(4);
+            let batch: Vec<GraphTensor> =
+                (0..k).map(|_| random_graph_with_dim(rng, dim)).collect();
+            let merged = merge(&batch).unwrap();
+            let want_a: usize = batch.iter().map(|g| g.num_nodes("a").unwrap()).sum();
+            let want_e: usize = batch.iter().map(|g| g.num_edges("e").unwrap()).sum();
+            assert_eq!(merged.num_nodes("a").unwrap(), want_a);
+            assert_eq!(merged.num_edges("e").unwrap(), want_e);
+            assert_eq!(merged.num_components, k);
+        });
+    }
+
+    #[test]
+    fn prop_merge_associative_via_flatten() {
+        check("merge(merge(x,y),z) == merge(x,y,z)", 30, |rng| {
+            let dim = 1 + rng.uniform(4);
+            let x = random_graph_with_dim(rng, dim);
+            let y = random_graph_with_dim(rng, dim);
+            let z = random_graph_with_dim(rng, dim);
+            let left = merge(&[merge(&[x.clone(), y.clone()]).unwrap(), z.clone()]).unwrap();
+            let flat = merge(&[x, y, z]).unwrap();
+            assert_eq!(left, flat);
+        });
+    }
+
+    #[test]
+    fn ragged_features_merge() {
+        let g = recsys_example_graph();
+        let merged = merge(&[g.clone(), g]).unwrap();
+        let price = merged.node_set("items").unwrap().feature("price").unwrap();
+        assert_eq!(price.len(), 12);
+        assert_eq!(price.ragged_row_f32(6).unwrap(), &[22.34, 23.42, 12.99]);
+    }
+}
+
+#[cfg(test)]
+pub use tests::{random_graph, random_graph_with_dim};

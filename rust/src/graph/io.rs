@@ -1,0 +1,550 @@
+//! On-disk GraphTensor records (the `tf.train.Example` + TFRecord
+//! substitute — see DESIGN.md §Substitutions).
+//!
+//! Layout, little-endian throughout:
+//!
+//! ```text
+//! shard file  := magic "GTS1" | record*
+//! record      := u64 payload_len | u32 checksum(payload) | payload
+//! payload     := GraphTensor encoding (see encode_graph)
+//! ```
+//!
+//! The checksum is a FNV-1a/64 folded to 32 bits — enough to catch
+//! truncation and corruption, like TFRecord's masked CRC. Shards are
+//! named `prefix-00007-of-00032.gts`; [`ShardSet`] enumerates and reads
+//! them, which is what the paper's "GraphTensors randomly grouped into
+//! file shards" (§6.1.1) feeds into training.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use super::tensor::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"GTS1";
+
+// ---------------------------------------------------------------------------
+// Byte-level encoding helpers
+// ---------------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::with_capacity(4096) }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn usize_vec(&mut self, v: &[usize]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u64(x as u64);
+        }
+    }
+
+    fn u32_vec(&mut self, v: &[u32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn f32_vec(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn i64_vec(&mut self, v: &[i64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, i: 0 }
+    }
+
+    fn err(&self, what: &str) -> Error {
+        Error::Codec(format!("record decode error at byte {}: {}", self.i, what))
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.buf.len() {
+            return Err(self.err("truncated"));
+        }
+        let s = &self.buf[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        // Sanity: a single vector longer than the remaining buffer bytes
+        // is corrupt; avoids huge allocations on bad data.
+        if n > (self.buf.len() - self.i) as u64 * 8 + 64 {
+            return Err(self.err("implausible length"));
+        }
+        Ok(n as usize)
+    }
+
+    fn usize_vec(&mut self) -> Result<Vec<usize>> {
+        let n = self.len()?;
+        (0..n).map(|_| self.u64().map(|v| v as usize)).collect()
+    }
+
+    fn u32_vec(&mut self) -> Result<Vec<u32>> {
+        let n = self.len()?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.len()?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn i64_vec(&mut self) -> Result<Vec<i64>> {
+        let n = self.len()?;
+        let bytes = self.take(n * 8)?;
+        Ok(bytes.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.len()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| self.err("invalid UTF-8"))
+    }
+}
+
+fn checksum(payload: &[u8]) -> u32 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in payload {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h ^ (h >> 32)) as u32
+}
+
+// ---------------------------------------------------------------------------
+// Feature / GraphTensor encoding
+// ---------------------------------------------------------------------------
+
+fn encode_feature(e: &mut Enc, f: &Feature) {
+    match f {
+        Feature::F32 { dims, data } => {
+            e.u8(0);
+            e.usize_vec(dims);
+            e.f32_vec(data);
+        }
+        Feature::I64 { dims, data } => {
+            e.u8(1);
+            e.usize_vec(dims);
+            e.i64_vec(data);
+        }
+        Feature::Str { data } => {
+            e.u8(2);
+            e.u64(data.len() as u64);
+            for s in data {
+                e.str(s);
+            }
+        }
+        Feature::RaggedF32 { row_splits, data } => {
+            e.u8(3);
+            e.usize_vec(row_splits);
+            e.f32_vec(data);
+        }
+        Feature::RaggedI64 { row_splits, data } => {
+            e.u8(4);
+            e.usize_vec(row_splits);
+            e.i64_vec(data);
+        }
+    }
+}
+
+fn decode_feature(d: &mut Dec) -> Result<Feature> {
+    match d.u8()? {
+        0 => Ok(Feature::F32 { dims: d.usize_vec()?, data: d.f32_vec()? }),
+        1 => Ok(Feature::I64 { dims: d.usize_vec()?, data: d.i64_vec()? }),
+        2 => {
+            let n = d.len()?;
+            let data = (0..n).map(|_| d.str()).collect::<Result<Vec<_>>>()?;
+            Ok(Feature::Str { data })
+        }
+        3 => Ok(Feature::RaggedF32 { row_splits: d.usize_vec()?, data: d.f32_vec()? }),
+        4 => Ok(Feature::RaggedI64 { row_splits: d.usize_vec()?, data: d.i64_vec()? }),
+        t => Err(d.err(&format!("unknown feature tag {t}"))),
+    }
+}
+
+fn encode_features(e: &mut Enc, feats: &BTreeMap<String, Feature>) {
+    e.u64(feats.len() as u64);
+    for (name, f) in feats {
+        e.str(name);
+        encode_feature(e, f);
+    }
+}
+
+fn decode_features(d: &mut Dec) -> Result<BTreeMap<String, Feature>> {
+    let n = d.len()?;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name = d.str()?;
+        out.insert(name, decode_feature(d)?);
+    }
+    Ok(out)
+}
+
+/// Encode a GraphTensor to bytes.
+pub fn encode_graph(g: &GraphTensor) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(g.num_components as u64);
+    encode_features(&mut e, &g.context.features);
+    e.u64(g.node_sets.len() as u64);
+    for (name, ns) in &g.node_sets {
+        e.str(name);
+        e.usize_vec(&ns.sizes);
+        encode_features(&mut e, &ns.features);
+    }
+    e.u64(g.edge_sets.len() as u64);
+    for (name, es) in &g.edge_sets {
+        e.str(name);
+        e.usize_vec(&es.sizes);
+        e.str(&es.adjacency.source_set);
+        e.str(&es.adjacency.target_set);
+        e.u32_vec(&es.adjacency.source);
+        e.u32_vec(&es.adjacency.target);
+        encode_features(&mut e, &es.features);
+    }
+    e.buf
+}
+
+/// Decode a GraphTensor from bytes (validates structure).
+pub fn decode_graph(bytes: &[u8]) -> Result<GraphTensor> {
+    let mut d = Dec::new(bytes);
+    let num_components = d.u64()? as usize;
+    let context = Context { features: decode_features(&mut d)? };
+    let n_ns = d.len()?;
+    let mut node_sets = BTreeMap::new();
+    for _ in 0..n_ns {
+        let name = d.str()?;
+        let sizes = d.usize_vec()?;
+        let features = decode_features(&mut d)?;
+        node_sets.insert(name, NodeSet { sizes, features });
+    }
+    let n_es = d.len()?;
+    let mut edge_sets = BTreeMap::new();
+    for _ in 0..n_es {
+        let name = d.str()?;
+        let sizes = d.usize_vec()?;
+        let source_set = d.str()?;
+        let target_set = d.str()?;
+        let source = d.u32_vec()?;
+        let target = d.u32_vec()?;
+        let features = decode_features(&mut d)?;
+        edge_sets.insert(
+            name,
+            EdgeSet { sizes, adjacency: Adjacency { source_set, target_set, source, target }, features },
+        );
+    }
+    if d.i != bytes.len() {
+        return Err(d.err("trailing bytes"));
+    }
+    let g = GraphTensor { context, node_sets, edge_sets, num_components };
+    g.validate()?;
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------------
+// Shard files
+// ---------------------------------------------------------------------------
+
+/// Streaming writer for one shard file.
+pub struct ShardWriter {
+    w: BufWriter<std::fs::File>,
+    pub records: usize,
+}
+
+impl ShardWriter {
+    pub fn create(path: &Path) -> Result<ShardWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        Ok(ShardWriter { w, records: 0 })
+    }
+
+    pub fn write(&mut self, g: &GraphTensor) -> Result<()> {
+        let payload = encode_graph(g);
+        self.w.write_all(&(payload.len() as u64).to_le_bytes())?;
+        self.w.write_all(&checksum(&payload).to_le_bytes())?;
+        self.w.write_all(&payload)?;
+        self.records += 1;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<usize> {
+        self.w.flush()?;
+        Ok(self.records)
+    }
+}
+
+/// Streaming reader for one shard file.
+pub struct ShardReader {
+    r: BufReader<std::fs::File>,
+    path: PathBuf,
+}
+
+impl ShardReader {
+    pub fn open(path: &Path) -> Result<ShardReader> {
+        let mut r = BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Codec(format!("{}: bad magic", path.display())));
+        }
+        Ok(ShardReader { r, path: path.to_path_buf() })
+    }
+
+    /// Read the next record; `Ok(None)` at clean EOF.
+    pub fn next(&mut self) -> Result<Option<GraphTensor>> {
+        let mut len_bytes = [0u8; 8];
+        match self.r.read_exact(&mut len_bytes) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+            Err(e) => return Err(e.into()),
+        }
+        let len = u64::from_le_bytes(len_bytes) as usize;
+        let mut crc_bytes = [0u8; 4];
+        self.r.read_exact(&mut crc_bytes)?;
+        let want_crc = u32::from_le_bytes(crc_bytes);
+        let mut payload = vec![0u8; len];
+        self.r.read_exact(&mut payload)?;
+        if checksum(&payload) != want_crc {
+            return Err(Error::Codec(format!("{}: checksum mismatch", self.path.display())));
+        }
+        Ok(Some(decode_graph(&payload)?))
+    }
+}
+
+impl Iterator for ShardReader {
+    type Item = Result<GraphTensor>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        ShardReader::next(self).transpose()
+    }
+}
+
+/// A set of shard files `prefix-XXXXX-of-NNNNN.gts`.
+#[derive(Debug, Clone)]
+pub struct ShardSet {
+    pub paths: Vec<PathBuf>,
+}
+
+impl ShardSet {
+    /// Shard path for index `i` of `n`.
+    pub fn shard_path(dir: &Path, prefix: &str, i: usize, n: usize) -> PathBuf {
+        dir.join(format!("{prefix}-{i:05}-of-{n:05}.gts"))
+    }
+
+    /// Enumerate existing shards matching a prefix in a directory.
+    pub fn discover(dir: &Path, prefix: &str) -> Result<ShardSet> {
+        let mut paths = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let p = entry?.path();
+            let name = p.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if name.starts_with(&format!("{prefix}-")) && name.ends_with(".gts") {
+                paths.push(p);
+            }
+        }
+        paths.sort();
+        if paths.is_empty() {
+            return Err(Error::Pipeline(format!(
+                "no shards with prefix {prefix:?} under {}",
+                dir.display()
+            )));
+        }
+        Ok(ShardSet { paths })
+    }
+
+    /// Write `graphs`, distributing round-robin over `n` shards.
+    pub fn write_all(
+        dir: &Path,
+        prefix: &str,
+        n: usize,
+        graphs: impl Iterator<Item = GraphTensor>,
+    ) -> Result<ShardSet> {
+        assert!(n > 0);
+        let mut writers = (0..n)
+            .map(|i| ShardWriter::create(&Self::shard_path(dir, prefix, i, n)))
+            .collect::<Result<Vec<_>>>()?;
+        for (k, g) in graphs.enumerate() {
+            writers[k % n].write(&g)?;
+        }
+        let mut paths = Vec::new();
+        for (i, w) in writers.into_iter().enumerate() {
+            w.finish()?;
+            paths.push(Self::shard_path(dir, prefix, i, n));
+        }
+        Ok(ShardSet { paths })
+    }
+
+    /// Total record count (reads every shard).
+    pub fn count(&self) -> Result<usize> {
+        let mut total = 0;
+        for p in &self.paths {
+            let mut r = ShardReader::open(p)?;
+            while r.next()?.is_some() {
+                total += 1;
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::batch::random_graph;
+    use crate::synth::recsys::recsys_example_graph;
+    use crate::util::proptest::check;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tfgnn-io-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn encode_decode_recsys() {
+        let g = recsys_example_graph();
+        let bytes = encode_graph(&g);
+        let g2 = decode_graph(&bytes).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        check("encode∘decode = id", 60, |rng| {
+            let g = random_graph(rng);
+            let g2 = decode_graph(&encode_graph(&g)).unwrap();
+            assert_eq!(g, g2);
+        });
+    }
+
+    #[test]
+    fn shard_write_read_roundtrip() {
+        let dir = tmpdir("rw");
+        let g = recsys_example_graph();
+        let path = dir.join("x.gts");
+        let mut w = ShardWriter::create(&path).unwrap();
+        for _ in 0..5 {
+            w.write(&g).unwrap();
+        }
+        assert_eq!(w.finish().unwrap(), 5);
+        let r = ShardReader::open(&path).unwrap();
+        let all: Vec<_> = r.map(|g| g.unwrap()).collect();
+        assert_eq!(all.len(), 5);
+        assert_eq!(all[3], g);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = tmpdir("corrupt");
+        let path = dir.join("x.gts");
+        let mut w = ShardWriter::create(&path).unwrap();
+        w.write(&recsys_example_graph()).unwrap();
+        w.finish().unwrap();
+        // Flip a byte in the payload area.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        assert!(r.next().is_err(), "checksum must catch corruption");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let dir = tmpdir("trunc");
+        let path = dir.join("x.gts");
+        let mut w = ShardWriter::create(&path).unwrap();
+        w.write(&recsys_example_graph()).unwrap();
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        assert!(r.next().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = tmpdir("magic");
+        let path = dir.join("x.gts");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(ShardReader::open(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shardset_roundrobin_and_discover() {
+        let dir = tmpdir("set");
+        let g = recsys_example_graph();
+        let graphs = (0..10).map(|_| g.clone());
+        let set = ShardSet::write_all(&dir, "train", 3, graphs).unwrap();
+        assert_eq!(set.paths.len(), 3);
+        assert_eq!(set.count().unwrap(), 10);
+        let found = ShardSet::discover(&dir, "train").unwrap();
+        assert_eq!(found.paths, set.paths);
+        assert!(ShardSet::discover(&dir, "missing").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_shard_reads_cleanly() {
+        let dir = tmpdir("empty");
+        let path = dir.join("x.gts");
+        let w = ShardWriter::create(&path).unwrap();
+        w.finish().unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        assert!(r.next().unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,23 @@
+//! `GraphTensor` — the heterogeneous graph container (paper §3.2).
+//!
+//! A [`GraphTensor`] holds, per node set and edge set, a dictionary of
+//! features plus (for edge sets) the source/target index tensors, and a
+//! per-component size vector. A freshly parsed input graph has one
+//! *component*; [`batch::merge`] concatenates a batch of graphs into a
+//! single scalar GraphTensor whose components are the original inputs,
+//! with edge indices shifted into the flat index space — exactly the
+//! `merge_batch_to_components` semantics of TF-GNN.
+//!
+//! [`pad`] implements the fixed-size padding TF-GNN uses for TPUs
+//! (§3.2, §8.4): every batch is padded to a static [`pad::PadSpec`] so a
+//! single AOT-compiled HLO program can consume every batch.
+//!
+//! [`io`] provides the on-disk record format standing in for
+//! `tf.train.Example` + TFRecord shards.
+
+pub mod batch;
+pub mod io;
+pub mod pad;
+mod tensor;
+
+pub use tensor::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};

@@ -1,0 +1,346 @@
+//! Fixed-size padding (paper §3.2, §8.4).
+//!
+//! TPUs — and our AOT-compiled HLO programs — need static shapes. TF-GNN
+//! achieves this by "adding a suitably sized padding graph to each batch
+//! of input graphs and assigning it weight 0 for training the GNN".
+//! [`pad`] appends exactly one padding component that brings every
+//! node/edge set up to its [`PadSpec`] cap; padding edges connect
+//! padding nodes only, so the component invariant (no edges across
+//! components) is preserved and segment ops stay correct. Per-item
+//! validity masks are returned alongside the graph and flow into the
+//! AOT train step, which multiplies the loss and metrics by them.
+//!
+//! [`fit_or_skip`] mirrors the Runner's `FitOrSkipPadding` (A.5): a
+//! batch that exceeds the caps is skipped (with a counter) instead of
+//! aborting training.
+
+use std::collections::BTreeMap;
+
+use super::tensor::{Feature, GraphTensor};
+use crate::{Error, Result};
+
+/// Static size caps for every node and edge set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PadSpec {
+    /// Cap on total nodes per node set (including padding).
+    pub node_caps: BTreeMap<String, usize>,
+    /// Cap on total edges per edge set (including padding).
+    pub edge_caps: BTreeMap<String, usize>,
+    /// Cap on total components (including the one padding component).
+    pub component_cap: usize,
+}
+
+impl PadSpec {
+    /// A spec that fits `batch_size` graphs like `sample`, with `slack`
+    /// multiplicative headroom (≥ 1.0). Useful for deriving caps from a
+    /// dataset prefix, as the Runner's size estimator does.
+    pub fn fit(sample: &[&GraphTensor], batch_size: usize, slack: f64) -> PadSpec {
+        let mut node_caps = BTreeMap::new();
+        let mut edge_caps = BTreeMap::new();
+        for g in sample {
+            for (name, ns) in &g.node_sets {
+                let e = node_caps.entry(name.clone()).or_insert(0usize);
+                *e = (*e).max(ns.total());
+            }
+            for (name, es) in &g.edge_sets {
+                let e = edge_caps.entry(name.clone()).or_insert(0usize);
+                *e = (*e).max(es.total());
+            }
+        }
+        // Scale per-graph maxima to a batch cap, +1 node of headroom for
+        // the padding component's sink nodes.
+        for v in node_caps.values_mut() {
+            *v = (*v as f64 * batch_size as f64 * slack).ceil() as usize + 1;
+        }
+        for v in edge_caps.values_mut() {
+            *v = (*v as f64 * batch_size as f64 * slack).ceil() as usize;
+        }
+        PadSpec { node_caps, edge_caps, component_cap: batch_size + 1 }
+    }
+
+    pub fn node_cap(&self, set: &str) -> Result<usize> {
+        self.node_caps
+            .get(set)
+            .copied()
+            .ok_or_else(|| Error::Graph(format!("PadSpec missing node cap for {set:?}")))
+    }
+
+    pub fn edge_cap(&self, set: &str) -> Result<usize> {
+        self.edge_caps
+            .get(set)
+            .copied()
+            .ok_or_else(|| Error::Graph(format!("PadSpec missing edge cap for {set:?}")))
+    }
+}
+
+/// A padded batch: the static-shape graph plus validity masks.
+#[derive(Debug, Clone)]
+pub struct Padded {
+    pub graph: GraphTensor,
+    /// 1.0 for real items, 0.0 for padding, per node set (len = cap).
+    pub node_mask: BTreeMap<String, Vec<f32>>,
+    /// Same for edges.
+    pub edge_mask: BTreeMap<String, Vec<f32>>,
+    /// Components that carry real data (the last one is padding).
+    pub num_real_components: usize,
+}
+
+/// Does `graph` fit under `spec` with room for the padding component?
+pub fn fits(graph: &GraphTensor, spec: &PadSpec) -> bool {
+    if graph.num_components + 1 > spec.component_cap {
+        return false;
+    }
+    for (name, ns) in &graph.node_sets {
+        match spec.node_caps.get(name) {
+            // Strict: padding needs ≥1 node in every set so padding
+            // edges have an endpoint.
+            Some(&cap) if ns.total() < cap => {}
+            _ => return false,
+        }
+    }
+    for (name, es) in &graph.edge_sets {
+        match spec.edge_caps.get(name) {
+            Some(&cap) if es.total() <= cap => {}
+            _ => return false,
+        }
+    }
+    true
+}
+
+/// Pad `graph` (typically a merged batch) to the exact sizes of `spec`.
+pub fn pad(graph: &GraphTensor, spec: &PadSpec) -> Result<Padded> {
+    if !fits(graph, spec) {
+        return Err(Error::Graph(format!(
+            "graph does not fit PadSpec (components {} + 1 > {}, or a set exceeds its cap)",
+            graph.num_components, spec.component_cap
+        )));
+    }
+    let mut g = graph.clone();
+    let mut node_mask = BTreeMap::new();
+    let mut edge_mask = BTreeMap::new();
+
+    // One padding component on every piece.
+    g.num_components += 1;
+
+    // Node sets: append cap - total zero-feature nodes.
+    let mut pad_node_start: BTreeMap<String, u32> = BTreeMap::new();
+    for (name, ns) in g.node_sets.iter_mut() {
+        let total = ns.total();
+        let cap = spec.node_cap(name)?;
+        let extra = cap - total;
+        pad_node_start.insert(name.clone(), total as u32);
+        ns.sizes.push(extra);
+        for (fname, f) in ns.features.iter_mut() {
+            pad_feature(f, extra).map_err(|e| {
+                Error::Graph(format!("padding node feature {name}/{fname}: {e}"))
+            })?;
+        }
+        let mut mask = vec![1.0f32; total];
+        mask.resize(cap, 0.0);
+        node_mask.insert(name.clone(), mask);
+    }
+
+    // Edge sets: append cap - total edges between padding nodes.
+    for (name, es) in g.edge_sets.iter_mut() {
+        let total = es.total();
+        let cap = spec.edge_cap(name)?;
+        let extra = cap - total;
+        es.sizes.push(extra);
+        let src_sink = pad_node_start[&es.adjacency.source_set];
+        let tgt_sink = pad_node_start[&es.adjacency.target_set];
+        es.adjacency.source.extend(std::iter::repeat(src_sink).take(extra));
+        es.adjacency.target.extend(std::iter::repeat(tgt_sink).take(extra));
+        for (fname, f) in es.features.iter_mut() {
+            pad_feature(f, extra).map_err(|e| {
+                Error::Graph(format!("padding edge feature {name}/{fname}: {e}"))
+            })?;
+        }
+        let mut mask = vec![1.0f32; total];
+        mask.resize(cap, 0.0);
+        edge_mask.insert(name.clone(), mask);
+    }
+
+    // Context features get one zero row for the padding component.
+    for f in g.context.features.values_mut() {
+        pad_feature(f, 1)?;
+    }
+
+    g.validate()?;
+    Ok(Padded { graph: g, node_mask, edge_mask, num_real_components: graph.num_components })
+}
+
+/// `FitOrSkipPadding`: pad, or return `None` when the batch exceeds the
+/// caps. Callers count skips (a training-quality metric in the Runner).
+pub fn fit_or_skip(graph: &GraphTensor, spec: &PadSpec) -> Option<Padded> {
+    if fits(graph, spec) {
+        Some(pad(graph, spec).expect("fits() implies pad() succeeds"))
+    } else {
+        None
+    }
+}
+
+/// Remove padding given the original component count — used in tests to
+/// verify padding is lossless, and by readout paths that want real rows.
+pub fn unpad(padded: &Padded) -> Result<GraphTensor> {
+    let comps = super::batch::split(&padded.graph)?;
+    let real = &comps[..padded.num_real_components];
+    super::batch::merge(real)
+}
+
+fn pad_feature(f: &mut Feature, extra: usize) -> Result<()> {
+    match f {
+        Feature::F32 { dims, data } => {
+            let per: usize = dims.iter().product::<usize>().max(1);
+            data.extend(std::iter::repeat(0.0).take(extra * per));
+        }
+        Feature::I64 { dims, data } => {
+            let per: usize = dims.iter().product::<usize>().max(1);
+            data.extend(std::iter::repeat(0).take(extra * per));
+        }
+        Feature::Str { data } => {
+            data.extend(std::iter::repeat(String::new()).take(extra));
+        }
+        Feature::RaggedF32 { row_splits, .. } => {
+            let last = *row_splits.last().unwrap();
+            row_splits.extend(std::iter::repeat(last).take(extra));
+        }
+        Feature::RaggedI64 { row_splits, .. } => {
+            let last = *row_splits.last().unwrap();
+            row_splits.extend(std::iter::repeat(last).take(extra));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::batch::{merge, random_graph, random_graph_with_dim};
+    use crate::synth::recsys::recsys_example_graph;
+    use crate::util::proptest::check;
+
+    fn recsys_spec() -> PadSpec {
+        PadSpec {
+            node_caps: [("items".to_string(), 10), ("users".to_string(), 8)].into(),
+            edge_caps: [("purchased".to_string(), 12), ("is-friend".to_string(), 6)].into(),
+            component_cap: 3,
+        }
+    }
+
+    #[test]
+    fn pad_reaches_exact_caps() {
+        let g = recsys_example_graph();
+        let p = pad(&g, &recsys_spec()).unwrap();
+        assert_eq!(p.graph.num_nodes("items").unwrap(), 10);
+        assert_eq!(p.graph.num_nodes("users").unwrap(), 8);
+        assert_eq!(p.graph.num_edges("purchased").unwrap(), 12);
+        assert_eq!(p.graph.num_edges("is-friend").unwrap(), 6);
+        assert_eq!(p.graph.num_components, 2);
+        assert_eq!(p.num_real_components, 1);
+    }
+
+    #[test]
+    fn masks_mark_real_items() {
+        let g = recsys_example_graph();
+        let p = pad(&g, &recsys_spec()).unwrap();
+        let m = &p.node_mask["items"];
+        assert_eq!(m.len(), 10);
+        assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 6);
+        assert!(m[..6].iter().all(|&x| x == 1.0));
+        assert!(m[6..].iter().all(|&x| x == 0.0));
+        let em = &p.edge_mask["purchased"];
+        assert_eq!(em.iter().sum::<f32>(), 7.0);
+    }
+
+    #[test]
+    fn padding_edges_stay_in_padding_component() {
+        let g = recsys_example_graph();
+        let p = pad(&g, &recsys_spec()).unwrap();
+        // validate() enforces the component invariant; also check sink.
+        p.graph.validate().unwrap();
+        let es = p.graph.edge_set("purchased").unwrap();
+        for e in 7..12 {
+            assert_eq!(es.adjacency.source[e], 6, "padding edge source is first padding item");
+            assert_eq!(es.adjacency.target[e], 4, "padding edge target is first padding user");
+        }
+    }
+
+    #[test]
+    fn unpad_is_lossless() {
+        let g = recsys_example_graph();
+        let p = pad(&g, &recsys_spec()).unwrap();
+        let back = unpad(&p).unwrap();
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn oversized_graph_skipped() {
+        let g = recsys_example_graph();
+        let tight = PadSpec {
+            node_caps: [("items".to_string(), 6), ("users".to_string(), 8)].into(),
+            edge_caps: [("purchased".to_string(), 12), ("is-friend".to_string(), 6)].into(),
+            component_cap: 3,
+        };
+        // items cap == total: no room for the padding sink node -> skip.
+        assert!(fit_or_skip(&g, &tight).is_none());
+        assert!(pad(&g, &tight).is_err());
+    }
+
+    #[test]
+    fn missing_cap_fails() {
+        let g = recsys_example_graph();
+        let mut spec = recsys_spec();
+        spec.node_caps.remove("users");
+        assert!(!fits(&g, &spec));
+    }
+
+    #[test]
+    fn context_padded_per_component() {
+        let g = recsys_example_graph();
+        let p = pad(&g, &recsys_spec()).unwrap();
+        let scores = p.graph.context.feature("scores").unwrap();
+        let (_, data) = scores.as_f32().unwrap();
+        assert_eq!(data.len(), 8); // 2 components × 4
+        assert!(data[4..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn prop_pad_unpad_roundtrip() {
+        check("unpad(pad(g)) == g", 40, |rng| {
+            let k = 1 + rng.uniform(3);
+            let dim = 1 + rng.uniform(4);
+            let batch: Vec<_> = (0..k).map(|_| random_graph_with_dim(rng, dim)).collect();
+            let g = merge(&batch).unwrap();
+            let spec = PadSpec::fit(&batch.iter().collect::<Vec<_>>(), k, 1.5);
+            let p = pad(&g, &spec).unwrap();
+            assert_eq!(unpad(&p).unwrap(), g);
+        });
+    }
+
+    #[test]
+    fn prop_fit_spec_always_fits() {
+        check("PadSpec::fit admits its own sample", 40, |rng| {
+            let k = 1 + rng.uniform(4);
+            let dim = 1 + rng.uniform(4);
+            let batch: Vec<_> = (0..k).map(|_| random_graph_with_dim(rng, dim)).collect();
+            let spec = PadSpec::fit(&batch.iter().collect::<Vec<_>>(), k, 1.0);
+            let g = merge(&batch).unwrap();
+            assert!(fits(&g, &spec), "sample-derived spec must admit the sample batch");
+        });
+    }
+
+    #[test]
+    fn prop_mask_sums_equal_real_counts() {
+        check("mask sums = real item counts", 40, |rng| {
+            let g = random_graph(rng);
+            let spec = PadSpec::fit(&[&g], 2, 1.25);
+            let p = pad(&g, &spec).unwrap();
+            for (name, mask) in &p.node_mask {
+                assert_eq!(mask.iter().sum::<f32>() as usize, g.num_nodes(name).unwrap());
+            }
+            for (name, mask) in &p.edge_mask {
+                assert_eq!(mask.iter().sum::<f32>() as usize, g.num_edges(name).unwrap());
+            }
+        });
+    }
+}

@@ -1,0 +1,658 @@
+//! Core GraphTensor containers and structural validation.
+
+use std::collections::BTreeMap;
+
+use crate::schema::{DType, FeatureSpec, GraphSchema};
+use crate::{Error, Result};
+
+/// A feature tensor over the items of one node/edge set (or over the
+/// components of the graph, for context features).
+///
+/// Dense variants store row-major data of shape `[n, dims…]`; ragged
+/// variants store a flat value buffer plus `row_splits` (length `n+1`),
+/// mirroring `tf.RaggedTensor`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Feature {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I64 { dims: Vec<usize>, data: Vec<i64> },
+    Str { data: Vec<String> },
+    RaggedF32 { row_splits: Vec<usize>, data: Vec<f32> },
+    RaggedI64 { row_splits: Vec<usize>, data: Vec<i64> },
+}
+
+impl Feature {
+    /// Number of items (leading dimension `n`).
+    pub fn len(&self) -> usize {
+        match self {
+            Feature::F32 { dims, data } => div_len(data.len(), dims),
+            Feature::I64 { dims, data } => div_len(data.len(), dims),
+            Feature::Str { data } => data.len(),
+            Feature::RaggedF32 { row_splits, .. } | Feature::RaggedI64 { row_splits, .. } => {
+                row_splits.len().saturating_sub(1)
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Feature::F32 { .. } | Feature::RaggedF32 { .. } => DType::F32,
+            Feature::I64 { .. } | Feature::RaggedI64 { .. } => DType::I64,
+            Feature::Str { .. } => DType::Str,
+        }
+    }
+
+    pub fn is_ragged(&self) -> bool {
+        matches!(self, Feature::RaggedF32 { .. } | Feature::RaggedI64 { .. })
+    }
+
+    /// Dense f32 accessors (most ops work on these).
+    pub fn as_f32(&self) -> Result<(&[usize], &[f32])> {
+        match self {
+            Feature::F32 { dims, data } => Ok((dims, data)),
+            other => Err(Error::Feature(format!(
+                "expected dense f32 feature, got {:?}",
+                other.dtype()
+            ))),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<(&[usize], &[i64])> {
+        match self {
+            Feature::I64 { dims, data } => Ok((dims, data)),
+            other => Err(Error::Feature(format!(
+                "expected dense i64 feature, got {:?}",
+                other.dtype()
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&[String]> {
+        match self {
+            Feature::Str { data } => Ok(data),
+            other => {
+                Err(Error::Feature(format!("expected string feature, got {:?}", other.dtype())))
+            }
+        }
+    }
+
+    /// Row `i` of a ragged f32 feature.
+    pub fn ragged_row_f32(&self, i: usize) -> Result<&[f32]> {
+        match self {
+            Feature::RaggedF32 { row_splits, data } => {
+                Ok(&data[row_splits[i]..row_splits[i + 1]])
+            }
+            other => {
+                Err(Error::Feature(format!("expected ragged f32, got {:?}", other.dtype())))
+            }
+        }
+    }
+
+    /// Scalar-f32 vector helper.
+    pub fn f32_vec(data: Vec<f32>) -> Feature {
+        Feature::F32 { dims: vec![], data }
+    }
+
+    /// Dense f32 matrix `[n, d]` helper.
+    pub fn f32_mat(d: usize, data: Vec<f32>) -> Feature {
+        Feature::F32 { dims: vec![d], data }
+    }
+
+    pub fn i64_vec(data: Vec<i64>) -> Feature {
+        Feature::I64 { dims: vec![], data }
+    }
+
+    pub fn str_vec(data: Vec<&str>) -> Feature {
+        Feature::Str { data: data.into_iter().map(|s| s.to_string()).collect() }
+    }
+
+    /// Build a rank-1 ragged f32 feature from rows.
+    pub fn ragged_f32(rows: Vec<Vec<f32>>) -> Feature {
+        let mut row_splits = Vec::with_capacity(rows.len() + 1);
+        let mut data = Vec::new();
+        row_splits.push(0);
+        for row in rows {
+            data.extend_from_slice(&row);
+            row_splits.push(data.len());
+        }
+        Feature::RaggedF32 { row_splits, data }
+    }
+
+    /// Structural validation: item count matches `n`, dense buffer size
+    /// divides evenly, ragged splits are monotone and cover the buffer.
+    pub fn validate(&self, n: usize, name: &str) -> Result<()> {
+        match self {
+            Feature::F32 { dims, data } => validate_dense(data.len(), dims, n, name),
+            Feature::I64 { dims, data } => validate_dense(data.len(), dims, n, name),
+            Feature::Str { data } => {
+                if data.len() != n {
+                    return Err(Error::Feature(format!(
+                        "feature {name:?}: {} strings for {n} items",
+                        data.len()
+                    )));
+                }
+                Ok(())
+            }
+            Feature::RaggedF32 { row_splits, data } => {
+                validate_ragged(row_splits, data.len(), n, name)
+            }
+            Feature::RaggedI64 { row_splits, data } => {
+                validate_ragged(row_splits, data.len(), n, name)
+            }
+        }
+    }
+
+    /// Does this feature value conform to a schema feature spec?
+    pub fn matches_spec(&self, spec: &FeatureSpec) -> bool {
+        if self.dtype() != spec.dtype {
+            return false;
+        }
+        match self {
+            Feature::F32 { dims, .. } | Feature::I64 { dims, .. } => {
+                !spec.is_ragged()
+                    && dims.len() == spec.shape.len()
+                    && dims.iter().zip(&spec.shape).all(|(d, s)| Some(*d) == *s)
+            }
+            Feature::Str { .. } => spec.shape.is_empty(),
+            Feature::RaggedF32 { .. } | Feature::RaggedI64 { .. } => {
+                spec.shape.len() == 1 && spec.shape[0].is_none()
+            }
+        }
+    }
+}
+
+fn div_len(total: usize, dims: &[usize]) -> usize {
+    let per = dims.iter().product::<usize>().max(1);
+    total / per
+}
+
+fn validate_dense(total: usize, dims: &[usize], n: usize, name: &str) -> Result<()> {
+    let per = dims.iter().product::<usize>();
+    if dims.iter().any(|&d| d == 0) {
+        if n != 0 && total != 0 {
+            return Err(Error::Feature(format!("feature {name:?}: zero dim with data")));
+        }
+        return Ok(());
+    }
+    if total != per * n {
+        return Err(Error::Feature(format!(
+            "feature {name:?}: buffer len {total} != {n} items × {per} elems"
+        )));
+    }
+    Ok(())
+}
+
+fn validate_ragged(row_splits: &[usize], total: usize, n: usize, name: &str) -> Result<()> {
+    if row_splits.len() != n + 1 {
+        return Err(Error::Feature(format!(
+            "feature {name:?}: {} row_splits for {n} items",
+            row_splits.len()
+        )));
+    }
+    if row_splits.first() != Some(&0) || row_splits.last() != Some(&total) {
+        return Err(Error::Feature(format!("feature {name:?}: row_splits must span [0, {total}]")));
+    }
+    if row_splits.windows(2).any(|w| w[0] > w[1]) {
+        return Err(Error::Feature(format!("feature {name:?}: row_splits not monotone")));
+    }
+    Ok(())
+}
+
+/// Edge endpoints: parallel index arrays into the named node sets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Adjacency {
+    pub source_set: String,
+    pub target_set: String,
+    pub source: Vec<u32>,
+    pub target: Vec<u32>,
+}
+
+impl Adjacency {
+    pub fn len(&self) -> usize {
+        self.source.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.source.is_empty()
+    }
+}
+
+/// A node set instance: per-component sizes plus features.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct NodeSet {
+    /// Number of nodes contributed by each graph component; the total
+    /// node count is `sizes.iter().sum()`.
+    pub sizes: Vec<usize>,
+    pub features: BTreeMap<String, Feature>,
+}
+
+impl NodeSet {
+    pub fn new(sizes: Vec<usize>) -> NodeSet {
+        NodeSet { sizes, features: BTreeMap::new() }
+    }
+
+    pub fn total(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    pub fn with_feature(mut self, name: &str, f: Feature) -> NodeSet {
+        self.features.insert(name.to_string(), f);
+        self
+    }
+
+    pub fn feature(&self, name: &str) -> Result<&Feature> {
+        self.features
+            .get(name)
+            .ok_or_else(|| Error::Feature(format!("node feature {name:?} not found")))
+    }
+}
+
+/// An edge set instance: per-component sizes, adjacency, features.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeSet {
+    pub sizes: Vec<usize>,
+    pub adjacency: Adjacency,
+    pub features: BTreeMap<String, Feature>,
+}
+
+impl EdgeSet {
+    pub fn new(sizes: Vec<usize>, adjacency: Adjacency) -> EdgeSet {
+        EdgeSet { sizes, adjacency, features: BTreeMap::new() }
+    }
+
+    pub fn total(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    pub fn with_feature(mut self, name: &str, f: Feature) -> EdgeSet {
+        self.features.insert(name.to_string(), f);
+        self
+    }
+
+    pub fn feature(&self, name: &str) -> Result<&Feature> {
+        self.features
+            .get(name)
+            .ok_or_else(|| Error::Feature(format!("edge feature {name:?} not found")))
+    }
+}
+
+/// Graph-level (per-component) features.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Context {
+    pub features: BTreeMap<String, Feature>,
+}
+
+impl Context {
+    pub fn with_feature(mut self, name: &str, f: Feature) -> Context {
+        self.features.insert(name.to_string(), f);
+        self
+    }
+
+    pub fn feature(&self, name: &str) -> Result<&Feature> {
+        self.features
+            .get(name)
+            .ok_or_else(|| Error::Feature(format!("context feature {name:?} not found")))
+    }
+}
+
+/// A scalar GraphTensor with `num_components()` merged input graphs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GraphTensor {
+    pub context: Context,
+    pub node_sets: BTreeMap<String, NodeSet>,
+    pub edge_sets: BTreeMap<String, EdgeSet>,
+    /// Number of graph components (1 for a freshly parsed input).
+    pub num_components: usize,
+}
+
+impl GraphTensor {
+    /// A single-component graph from pieces (the `from_pieces` of A.2.2).
+    pub fn from_pieces(
+        context: Context,
+        node_sets: BTreeMap<String, NodeSet>,
+        edge_sets: BTreeMap<String, EdgeSet>,
+    ) -> Result<GraphTensor> {
+        let num_components = node_sets
+            .values()
+            .map(|ns| ns.sizes.len())
+            .chain(edge_sets.values().map(|es| es.sizes.len()))
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let gt = GraphTensor { context, node_sets, edge_sets, num_components };
+        gt.validate()?;
+        Ok(gt)
+    }
+
+    pub fn node_set(&self, name: &str) -> Result<&NodeSet> {
+        self.node_sets
+            .get(name)
+            .ok_or_else(|| Error::Graph(format!("unknown node set {name:?}")))
+    }
+
+    pub fn edge_set(&self, name: &str) -> Result<&EdgeSet> {
+        self.edge_sets
+            .get(name)
+            .ok_or_else(|| Error::Graph(format!("unknown edge set {name:?}")))
+    }
+
+    /// Total nodes across components in a set.
+    pub fn num_nodes(&self, set: &str) -> Result<usize> {
+        Ok(self.node_set(set)?.total())
+    }
+
+    pub fn num_edges(&self, set: &str) -> Result<usize> {
+        Ok(self.edge_set(set)?.total())
+    }
+
+    /// Structural invariants:
+    /// * every piece has `num_components` sizes,
+    /// * feature item counts match set totals,
+    /// * adjacency indices are in range and stay within their component,
+    /// * context features have `num_components` items.
+    pub fn validate(&self) -> Result<()> {
+        for (name, ns) in &self.node_sets {
+            if ns.sizes.len() != self.num_components {
+                return Err(Error::Graph(format!(
+                    "node set {name:?} has {} component sizes, graph has {}",
+                    ns.sizes.len(),
+                    self.num_components
+                )));
+            }
+            for (fname, f) in &ns.features {
+                f.validate(ns.total(), &format!("{name}/{fname}"))?;
+            }
+        }
+        for (name, es) in &self.edge_sets {
+            if es.sizes.len() != self.num_components {
+                return Err(Error::Graph(format!(
+                    "edge set {name:?} has {} component sizes, graph has {}",
+                    es.sizes.len(),
+                    self.num_components
+                )));
+            }
+            if es.adjacency.source.len() != es.total() || es.adjacency.target.len() != es.total()
+            {
+                return Err(Error::Graph(format!(
+                    "edge set {name:?}: adjacency lengths {}/{} != size {}",
+                    es.adjacency.source.len(),
+                    es.adjacency.target.len(),
+                    es.total()
+                )));
+            }
+            for (fname, f) in &es.features {
+                f.validate(es.total(), &format!("{name}/{fname}"))?;
+            }
+            let src_set = self.node_set(&es.adjacency.source_set).map_err(|_| {
+                Error::Graph(format!(
+                    "edge set {name:?} references unknown source node set {:?}",
+                    es.adjacency.source_set
+                ))
+            })?;
+            let tgt_set = self.node_set(&es.adjacency.target_set).map_err(|_| {
+                Error::Graph(format!(
+                    "edge set {name:?} references unknown target node set {:?}",
+                    es.adjacency.target_set
+                ))
+            })?;
+            // Component-respecting index check: edges of component c may
+            // only reference nodes of component c (§3.2: "standard GNN
+            // operations respect the boundaries between merged graphs
+            // because there are no edges connecting them").
+            check_indices_in_components(name, "source", &es.sizes, &es.adjacency.source, src_set)?;
+            check_indices_in_components(name, "target", &es.sizes, &es.adjacency.target, tgt_set)?;
+        }
+        for (fname, f) in &self.context.features {
+            f.validate(self.num_components, &format!("context/{fname}"))?;
+        }
+        Ok(())
+    }
+
+    /// Validate against a schema: all declared pieces exist with
+    /// conforming feature dtypes/shapes (extra features are allowed,
+    /// mirroring TF-GNN's feature-engineering flow).
+    pub fn check_compatible_with_schema(&self, schema: &GraphSchema) -> Result<()> {
+        for (name, spec) in &schema.node_sets {
+            let ns = self.node_set(name)?;
+            for (fname, fspec) in &spec.features {
+                let f = ns.feature(fname)?;
+                if !f.matches_spec(fspec) {
+                    return Err(Error::Feature(format!(
+                        "node feature {name}/{fname} does not match schema spec"
+                    )));
+                }
+            }
+        }
+        for (name, spec) in &schema.edge_sets {
+            let es = self.edge_set(name)?;
+            if es.adjacency.source_set != spec.source || es.adjacency.target_set != spec.target {
+                return Err(Error::Schema(format!(
+                    "edge set {name:?} endpoints ({} -> {}) differ from schema ({} -> {})",
+                    es.adjacency.source_set, es.adjacency.target_set, spec.source, spec.target
+                )));
+            }
+            for (fname, fspec) in &spec.features {
+                let f = es.feature(fname)?;
+                if !f.matches_spec(fspec) {
+                    return Err(Error::Feature(format!(
+                        "edge feature {name}/{fname} does not match schema spec"
+                    )));
+                }
+            }
+        }
+        for (fname, fspec) in &schema.context {
+            let f = self.context.feature(fname)?;
+            if !f.matches_spec(fspec) {
+                return Err(Error::Feature(format!(
+                    "context feature {fname} does not match schema spec"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Replace (some) features of a node set, returning a new graph —
+    /// TF-GNN's `replace_features` (§3.2, A.3).
+    pub fn replace_node_features(
+        &self,
+        set: &str,
+        features: BTreeMap<String, Feature>,
+    ) -> Result<GraphTensor> {
+        let mut g = self.clone();
+        let ns = g
+            .node_sets
+            .get_mut(set)
+            .ok_or_else(|| Error::Graph(format!("unknown node set {set:?}")))?;
+        ns.features = features;
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Approximate in-memory footprint in bytes (used by pipeline
+    /// backpressure accounting and bench reports).
+    pub fn approx_bytes(&self) -> usize {
+        let feat_bytes = |f: &Feature| -> usize {
+            match f {
+                Feature::F32 { data, .. } => data.len() * 4,
+                Feature::I64 { data, .. } => data.len() * 8,
+                Feature::Str { data } => data.iter().map(|s| s.len() + 24).sum(),
+                Feature::RaggedF32 { row_splits, data } => data.len() * 4 + row_splits.len() * 8,
+                Feature::RaggedI64 { row_splits, data } => (data.len() + row_splits.len()) * 8,
+            }
+        };
+        let mut total = 0;
+        for ns in self.node_sets.values() {
+            total += ns.sizes.len() * 8;
+            total += ns.features.values().map(feat_bytes).sum::<usize>();
+        }
+        for es in self.edge_sets.values() {
+            total += es.sizes.len() * 8 + es.adjacency.len() * 8;
+            total += es.features.values().map(feat_bytes).sum::<usize>();
+        }
+        total += self.context.features.values().map(feat_bytes).sum::<usize>();
+        total
+    }
+}
+
+fn check_indices_in_components(
+    edge_set: &str,
+    role: &str,
+    edge_sizes: &[usize],
+    indices: &[u32],
+    node_set: &NodeSet,
+) -> Result<()> {
+    let mut edge_off = 0usize;
+    let mut node_off = 0usize;
+    for (c, (&esize, &nsize)) in edge_sizes.iter().zip(&node_set.sizes).enumerate() {
+        for &idx in &indices[edge_off..edge_off + esize] {
+            let idx = idx as usize;
+            if idx < node_off || idx >= node_off + nsize {
+                return Err(Error::Graph(format!(
+                    "edge set {edge_set:?} {role} index {idx} escapes component {c} \
+                     (node range {node_off}..{})",
+                    node_off + nsize
+                )));
+            }
+        }
+        edge_off += esize;
+        node_off += nsize;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::recsys_example_schema;
+
+    use crate::synth::recsys::recsys_example_graph;
+
+    #[test]
+    fn recsys_graph_validates_and_matches_schema() {
+        let g = recsys_example_graph();
+        assert_eq!(g.num_components, 1);
+        assert_eq!(g.num_nodes("items").unwrap(), 6);
+        assert_eq!(g.num_nodes("users").unwrap(), 4);
+        assert_eq!(g.num_edges("purchased").unwrap(), 7);
+        g.check_compatible_with_schema(&recsys_example_schema()).unwrap();
+    }
+
+    #[test]
+    fn a1_worked_example_indices() {
+        // "the fifth values of purchased/#source and #target are [4, 2]
+        //  which link together 'flight' and 'Yumiko'" (A.1).
+        let g = recsys_example_graph();
+        let es = g.edge_set("purchased").unwrap();
+        assert_eq!(es.adjacency.source[4], 4);
+        assert_eq!(es.adjacency.target[4], 2);
+        let items = g.node_set("items").unwrap();
+        assert_eq!(items.feature("category").unwrap().as_str().unwrap()[4], "flight");
+        let users = g.node_set("users").unwrap();
+        assert_eq!(users.feature("name").unwrap().as_str().unwrap()[2], "Yumiko");
+    }
+
+    #[test]
+    fn ragged_feature_rows() {
+        let g = recsys_example_graph();
+        let price = g.node_set("items").unwrap().feature("price").unwrap();
+        assert_eq!(price.len(), 6);
+        assert_eq!(price.ragged_row_f32(0).unwrap(), &[22.34, 23.42, 12.99]);
+        assert_eq!(price.ragged_row_f32(2).unwrap(), &[89.99]);
+        assert_eq!(price.ragged_row_f32(5).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn out_of_range_edge_index_rejected() {
+        let mut g = recsys_example_graph();
+        g.edge_sets.get_mut("purchased").unwrap().adjacency.target[0] = 99;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn cross_component_edge_rejected() {
+        // Two components: nodes [2, 2]; an edge in component 0 pointing
+        // at a node of component 1 must be rejected.
+        let ns = NodeSet::new(vec![2, 2]);
+        let es = EdgeSet::new(
+            vec![1, 0],
+            Adjacency {
+                source_set: "n".into(),
+                target_set: "n".into(),
+                source: vec![0],
+                target: vec![2], // component 1's first node
+            },
+        );
+        let g = GraphTensor {
+            context: Context::default(),
+            node_sets: [("n".to_string(), ns)].into(),
+            edge_sets: [("e".to_string(), es)].into(),
+            num_components: 2,
+        };
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("escapes component"), "{err}");
+    }
+
+    #[test]
+    fn feature_length_mismatch_rejected() {
+        let ns = NodeSet::new(vec![3]).with_feature("x", Feature::f32_vec(vec![1.0, 2.0]));
+        let g = GraphTensor {
+            context: Context::default(),
+            node_sets: [("n".to_string(), ns)].into(),
+            edge_sets: BTreeMap::new(),
+            num_components: 1,
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn ragged_validation() {
+        // Bad row_splits: not starting at 0.
+        let f = Feature::RaggedF32 { row_splits: vec![1, 2], data: vec![1.0, 2.0] };
+        assert!(f.validate(1, "x").is_err());
+        // Not covering the buffer.
+        let f = Feature::RaggedF32 { row_splits: vec![0, 1], data: vec![1.0, 2.0] };
+        assert!(f.validate(1, "x").is_err());
+        // Non-monotone.
+        let f = Feature::RaggedF32 { row_splits: vec![0, 2, 1], data: vec![1.0, 2.0] };
+        assert!(f.validate(2, "x").is_err());
+        // Good.
+        let f = Feature::ragged_f32(vec![vec![1.0], vec![], vec![2.0, 3.0]]);
+        f.validate(3, "x").unwrap();
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn replace_features_keeps_validation() {
+        let g = recsys_example_graph();
+        // A.3: materialize "latest_price" = first price entry per item.
+        let price = g.node_set("items").unwrap().feature("price").unwrap().clone();
+        let latest: Vec<f32> = (0..6).map(|i| price.ragged_row_f32(i).unwrap()[0]).collect();
+        let mut feats = g.node_set("items").unwrap().features.clone();
+        feats.insert("latest_price".into(), Feature::f32_vec(latest));
+        let g2 = g.replace_node_features("items", feats).unwrap();
+        let lp = g2.node_set("items").unwrap().feature("latest_price").unwrap();
+        let (_, vals) = lp.as_f32().unwrap();
+        assert_eq!(vals[0], 22.34);
+        assert_eq!(vals[4], 350.00);
+    }
+
+    #[test]
+    fn matches_spec_checks() {
+        use crate::schema::FeatureSpec;
+        assert!(Feature::f32_mat(4, vec![0.0; 8]).matches_spec(&FeatureSpec::f32(&[4])));
+        assert!(!Feature::f32_mat(4, vec![0.0; 8]).matches_spec(&FeatureSpec::f32(&[5])));
+        assert!(!Feature::f32_mat(4, vec![0.0; 8]).matches_spec(&FeatureSpec::i64(&[4])));
+        assert!(Feature::ragged_f32(vec![vec![1.0]]).matches_spec(&FeatureSpec::ragged_f32()));
+        assert!(!Feature::ragged_f32(vec![vec![1.0]]).matches_spec(&FeatureSpec::f32(&[1])));
+        assert!(Feature::str_vec(vec!["a"]).matches_spec(&FeatureSpec::string()));
+    }
+
+    #[test]
+    fn approx_bytes_positive() {
+        let g = recsys_example_graph();
+        assert!(g.approx_bytes() > 100);
+    }
+}

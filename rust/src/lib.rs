@@ -1,0 +1,78 @@
+//! # tfgnn-rs — TF-GNN reproduced as a Rust + JAX + Pallas pipeline
+//!
+//! Reproduction of *"TF-GNN: Graph Neural Networks in TensorFlow"*
+//! (Ferludin et al., 2022) as a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the heterogeneous graph data model
+//!   ([`schema`], [`graph`]), data-exchange ops ([`ops`]), the sharded
+//!   graph store ([`store`]), rooted-subgraph sampling ([`sampler`],
+//!   [`coordinator`]), the streaming input pipeline ([`pipeline`]), the
+//!   AOT runtime ([`runtime`]), training ([`train`]), orchestration
+//!   ([`runner`]) and inference serving ([`serve`]).
+//! * **Layer 2** — the heterogeneous GNN models (MPNN, GCN, R-GCN,
+//!   GraphSAGE, GATv2, MultiHeadAttention, HGT baseline) written in JAX
+//!   under `python/compile/`, lowered once to HLO text.
+//! * **Layer 1** — Pallas kernels for the message-passing hot spot
+//!   (`python/compile/kernels/`), verified against a pure-jnp oracle.
+//!
+//! Python never runs on the training or serving path: `make artifacts`
+//! lowers the numeric programs once, and the Rust binary is
+//! self-contained afterwards.
+//!
+//! See `DESIGN.md` for the paper → module inventory and the experiment
+//! index, and `EXPERIMENTS.md` for reproduced results.
+
+pub mod coordinator;
+pub mod graph;
+pub mod ops;
+pub mod pipeline;
+pub mod runner;
+pub mod runtime;
+pub mod sampler;
+pub mod schema;
+pub mod serve;
+pub mod store;
+pub mod synth;
+pub mod train;
+pub mod util;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Schema validation or lookup failure.
+    #[error("schema error: {0}")]
+    Schema(String),
+    /// GraphTensor structural invariant violated.
+    #[error("graph error: {0}")]
+    Graph(String),
+    /// Feature missing / wrong dtype / wrong shape.
+    #[error("feature error: {0}")]
+    Feature(String),
+    /// Sampling plan or execution failure.
+    #[error("sampler error: {0}")]
+    Sampler(String),
+    /// Input pipeline failure.
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+    /// AOT artifact / PJRT runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// (De)serialization failure.
+    #[error("codec error: {0}")]
+    Codec(String),
+    /// I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    /// XLA/PJRT failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result type.
+pub type Result<T> = std::result::Result<T, Error>;

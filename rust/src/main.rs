@@ -1,0 +1,281 @@
+//! `tfgnn` — the command-line launcher.
+//!
+//! ```text
+//! tfgnn info                          # inspect artifacts + manifest
+//! tfgnn generate --out DIR            # synth-MAG -> stats + schema file
+//! tfgnn sample   --out DIR [--workers N] [--shards K] [--crash-rate P]
+//! tfgnn train    [--arch mpnn] [--epochs N] [--ckpt PATH]
+//! tfgnn eval     --ckpt PATH [--arch mpnn]
+//! tfgnn sweep    [--arch mpnn] [--epochs N] [--top K]
+//! tfgnn serve-bench [--requests N] [--max-batch B]
+//! ```
+//!
+//! All subcommands read `artifacts/manifest.json` (written by
+//! `make artifacts`), so the Rust binary is self-contained after the
+//! one-time AOT build.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tfgnn::runner::sweep::{format_top, sweep, SweepConfig};
+use tfgnn::runner::{run, MagEnv, RunConfig};
+use tfgnn::runtime::batch::RootTask;
+use tfgnn::runtime::manifest::Manifest;
+use tfgnn::runtime::Runtime;
+use tfgnn::train::Hyperparams;
+use tfgnn::util::cli::Args;
+use tfgnn::util::stats::Summary;
+use tfgnn::Result;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts").unwrap_or("artifacts"))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("info") => info(args),
+        Some("generate") => generate(args),
+        Some("sample") => sample(args),
+        Some("train") => train(args),
+        Some("eval") => eval(args),
+        Some("sweep") => run_sweep(args),
+        Some("serve-bench") => serve_bench(args),
+        _ => {
+            eprintln!(
+                "usage: tfgnn <info|generate|sample|train|eval|sweep|serve-bench> [--help]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let m = Manifest::load(&artifacts_dir(args))?;
+    println!("artifacts: {}", artifacts_dir(args).display());
+    let pad = m.pad_spec()?;
+    println!("batch_size {} | component cap {}", m.batch_size()?, pad.component_cap);
+    println!("node caps: {:?}", pad.node_caps);
+    println!("edge caps: {:?}", pad.edge_caps);
+    for (arch, entry) in &m.models {
+        println!(
+            "model {arch}: hidden {} message {} layers {} params {}",
+            entry.hidden_dim, entry.message_dim, entry.num_layers, entry.param_count
+        );
+        for (prog, p) in &entry.programs {
+            println!("  {prog:<12} {} ({} in, {} out)", p.file, p.inputs.len(), p.outputs.len());
+        }
+    }
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let m = Manifest::load(&artifacts_dir(args))?;
+    let cfg = m.mag_config()?;
+    let ds = tfgnn::synth::mag::generate(&cfg);
+    println!("synth-MAG (seed {}):", cfg.seed);
+    for (name, col) in &ds.store.nodes {
+        println!("  node set {name:<16} {:>8} nodes", col.count);
+    }
+    for (name, col) in &ds.store.edges {
+        println!("  edge set {name:<16} {:>8} edges", col.num_edges());
+    }
+    for split in [
+        tfgnn::synth::mag::Split::Train,
+        tfgnn::synth::mag::Split::Validation,
+        tfgnn::synth::mag::Split::Test,
+    ] {
+        println!("  split {split:?}: {} papers", ds.papers_in_split(split).len());
+    }
+    if let Some(out) = args.get("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        let schema_path = dir.join("schema.json");
+        tfgnn::schema::parse::write_schema(&ds.store.schema, &schema_path)?;
+        println!("schema written to {}", schema_path.display());
+    }
+    Ok(())
+}
+
+fn sample(args: &Args) -> Result<()> {
+    let env = MagEnv::from_artifacts(&artifacts_dir(args))?;
+    let out = PathBuf::from(args.get("out").unwrap_or("data/shards"));
+    let workers: usize = args.get_or("workers", 4)?;
+    let shards: usize = args.get_or("shards", 8)?;
+    let crash_rate: f64 = args.get_or("crash-rate", 0.0)?;
+    let store_shards: usize = args.get_or("store-shards", 16)?;
+    let seeds = env.dataset.papers_in_split(tfgnn::synth::mag::Split::Train);
+    let sharded = Arc::new(tfgnn::store::sharded::ShardedStore::new(
+        Arc::clone(&env.store),
+        store_shards,
+    ));
+    let spec = env.sampler.spec().clone();
+    let cfg = tfgnn::coordinator::CoordinatorConfig {
+        num_workers: workers,
+        worker_crash_rate: crash_rate,
+        crash_seed: 7,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let (set, report) = tfgnn::coordinator::run_sampling_to_shards(
+        sharded,
+        &spec,
+        env.manifest.plan_seed()?,
+        &seeds,
+        &cfg,
+        &out,
+        "train",
+        shards,
+    )?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "sampled {} subgraphs in {:.2}s ({:.0}/s) with {} workers",
+        report.stats.subgraphs,
+        secs,
+        report.stats.subgraphs as f64 / secs,
+        workers
+    );
+    println!(
+        "  adjacency RPCs {} (retried {}), worker crashes {} (requeued {})",
+        report.stats.adjacency_rpcs,
+        report.stats.retried_rpcs,
+        report.worker_crashes,
+        report.requeues
+    );
+    println!("  {} shards under {}", set.paths.len(), out.display());
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::new(artifacts_dir(args), args.get("arch").unwrap_or("mpnn"));
+    cfg.epochs = args.get_or("epochs", 3)?;
+    cfg.max_steps_per_epoch = match args.get("max-steps") {
+        Some(_) => Some(args.get_or("max-steps", 0usize)?),
+        None => None,
+    };
+    cfg.max_eval_batches = match args.get("max-eval-batches") {
+        Some(_) => Some(args.get_or("max-eval-batches", 0usize)?),
+        None => None,
+    };
+    cfg.prep_threads = args.get_or("prep-threads", 2)?;
+    cfg.verbose = true;
+    if let Some(p) = args.get("ckpt") {
+        cfg.checkpoint = Some(PathBuf::from(p));
+    }
+    if args.get("lr").is_some() || args.get("dropout").is_some() || args.get("wd").is_some() {
+        let m = Manifest::load(&cfg.artifacts_dir)?;
+        let mut hp = Hyperparams::from_manifest(&m)?;
+        hp.learning_rate = args.get_or("lr", hp.learning_rate)?;
+        hp.dropout = args.get_or("dropout", hp.dropout)?;
+        hp.weight_decay = args.get_or("wd", hp.weight_decay)?;
+        cfg.hp = Some(hp);
+    }
+    let report = run(&cfg)?;
+    println!(
+        "done: best val acc {:.4}, test {}, {:.1} steps/s",
+        report.best_val_acc, report.test, report.train_steps_per_sec
+    );
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let env = MagEnv::from_artifacts(&dir)?;
+    let arch = args.get("arch").unwrap_or("mpnn");
+    let entry = env.manifest.model(arch)?.clone();
+    let ckpt = PathBuf::from(args.req("ckpt")?);
+    let params = tfgnn::train::checkpoint::load(&ckpt)?;
+    let rt = Runtime::cpu()?;
+    let hp = Hyperparams::from_manifest(&env.manifest)?;
+    let mut trainer = tfgnn::train::Trainer::new(rt, &dir, &entry, RootTask::default(), hp)?;
+    trainer.params_from_host(&params)?;
+    for (name, split) in [
+        ("validation", tfgnn::synth::mag::Split::Validation),
+        ("test", tfgnn::synth::mag::Split::Test),
+    ] {
+        let seeds = env.dataset.papers_in_split(split);
+        let mut metrics = tfgnn::train::metrics::EpochMetrics::default();
+        for padded in env.eval_batches(&seeds, None) {
+            if let Some(p) = padded? {
+                metrics.add(trainer.eval_batch(&p)?);
+            }
+        }
+        println!("{name}: {metrics}");
+    }
+    Ok(())
+}
+
+fn run_sweep(args: &Args) -> Result<()> {
+    let mut base = RunConfig::new(artifacts_dir(args), args.get("arch").unwrap_or("mpnn"));
+    base.epochs = args.get_or("epochs", 2)?;
+    base.max_steps_per_epoch = Some(args.get_or("max-steps", 40)?);
+    base.max_eval_batches = Some(args.get_or("max-eval-batches", 10)?);
+    base.verbose = args.flag("verbose");
+    let cfg = SweepConfig::default_grid(base);
+    println!("sweep: {} trials", cfg.num_trials());
+    let trials = sweep(&cfg)?;
+    let top: usize = args.get_or("top", 3)?;
+    println!("{}", format_top(&trials, top));
+    Ok(())
+}
+
+fn serve_bench(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let env = MagEnv::from_artifacts(&dir)?;
+    let arch = args.get("arch").unwrap_or("mpnn");
+    let entry = env.manifest.model(arch)?.clone();
+    // Fresh params (or checkpoint if provided).
+    let params = match args.get("ckpt") {
+        Some(p) => tfgnn::train::checkpoint::load(&PathBuf::from(p))?,
+        None => {
+            let hp = Hyperparams::from_manifest(&env.manifest)?;
+            let trainer =
+                tfgnn::train::Trainer::new(Runtime::cpu()?, &dir, &entry, RootTask::default(), hp)?;
+            trainer.params_to_host()?
+        }
+    };
+    let max_batch: usize = args.get_or("max-batch", env.batch_size)?;
+    let n_requests: usize = args.get_or("requests", 64)?;
+    let handle = tfgnn::serve::serve(
+        &dir,
+        &entry,
+        params,
+        Arc::clone(&env.sampler),
+        env.pad.clone(),
+        RootTask::default(),
+        tfgnn::serve::ServeConfig {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(args.get_or("max-wait-ms", 5u64)?),
+        },
+    )?;
+    let seeds = env.dataset.papers_in_split(tfgnn::synth::mag::Split::Test);
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> =
+        (0..n_requests).map(|i| handle.submit(seeds[i % seeds.len()])).collect();
+    let mut latencies = Vec::new();
+    for rx in pending {
+        let resp = rx.recv().map_err(|_| tfgnn::Error::Runtime("server died".into()))??;
+        latencies.push(resp.latency.as_secs_f64());
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let s = Summary::of(&latencies);
+    println!(
+        "served {n_requests} requests in {total:.2}s ({:.1} req/s), latency p50 {:.1}ms p95 {:.1}ms",
+        n_requests as f64 / total,
+        s.p50 * 1e3,
+        s.p95 * 1e3
+    );
+    handle.shutdown();
+    Ok(())
+}

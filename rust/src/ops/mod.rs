@@ -1,0 +1,443 @@
+//! Data-exchange operations (paper §4.1, API Level 2).
+//!
+//! *Broadcasting* carries a value from a node set onto each incident
+//! edge of an edge set; *pooling* aggregates per-edge values onto the
+//! nodes at a chosen endpoint (sum / mean / max / min). The same pair of
+//! operations connects the graph *context* with the nodes or edges of
+//! each component. Unlike adjacency-matrix multiplication, these
+//! primitives leave a natural place for per-edge computation — attention
+//! logits, edge features, edge hidden states (§4.1).
+//!
+//! These Rust implementations serve three roles:
+//! 1. feature engineering in the input pipeline (A.3's user-spending
+//!    example runs on them),
+//! 2. the **oracle** for integration tests against the AOT-compiled
+//!    L2/L1 programs (both sides must agree bit-for-bit on sums),
+//! 3. the reference semantics for the Pallas kernels' segment ops.
+//!
+//! Values are dense-f32 [`Feature`]s; ops accept either a stored feature
+//! (by name) or an unstored value tensor, mirroring
+//! `feature_name=` / `feature_value=` in the TF-GNN API.
+
+pub mod model_ref;
+mod segment;
+
+pub use segment::{
+    segment_max, segment_mean, segment_min, segment_softmax_values, segment_sum,
+};
+
+use crate::graph::{Feature, GraphTensor};
+use crate::{Error, Result};
+
+/// Edge endpoint selector (tfgnn.SOURCE / tfgnn.TARGET).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tag {
+    Source,
+    Target,
+}
+
+/// Pooling reduction type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reduce {
+    Sum,
+    Mean,
+    Max,
+    Min,
+}
+
+impl Reduce {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Reduce::Sum => "sum",
+            Reduce::Mean => "mean",
+            Reduce::Max => "max",
+            Reduce::Min => "min",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Reduce> {
+        match s {
+            "sum" => Ok(Reduce::Sum),
+            "mean" => Ok(Reduce::Mean),
+            "max" => Ok(Reduce::Max),
+            "min" => Ok(Reduce::Min),
+            other => Err(Error::Graph(format!("unknown reduce type {other:?}"))),
+        }
+    }
+}
+
+fn dense_f32<'a>(value: &'a Feature, what: &str) -> Result<(&'a [usize], &'a [f32])> {
+    value
+        .as_f32()
+        .map_err(|_| Error::Feature(format!("{what}: ops require dense f32 values")))
+}
+
+fn elems_per_item(dims: &[usize]) -> usize {
+    dims.iter().product::<usize>().max(1)
+}
+
+/// `tfgnn.broadcast_node_to_edges`: for each edge, the value at its
+/// `tag` endpoint node.
+pub fn broadcast_node_to_edges(
+    g: &GraphTensor,
+    edge_set: &str,
+    tag: Tag,
+    value: &Feature,
+) -> Result<Feature> {
+    let es = g.edge_set(edge_set)?;
+    let indices = match tag {
+        Tag::Source => &es.adjacency.source,
+        Tag::Target => &es.adjacency.target,
+    };
+    let node_set = match tag {
+        Tag::Source => &es.adjacency.source_set,
+        Tag::Target => &es.adjacency.target_set,
+    };
+    let n_nodes = g.num_nodes(node_set)?;
+    let (dims, data) = dense_f32(value, "broadcast_node_to_edges")?;
+    if value.len() != n_nodes {
+        return Err(Error::Feature(format!(
+            "broadcast_node_to_edges: value has {} items, node set {node_set:?} has {n_nodes}",
+            value.len()
+        )));
+    }
+    let d = elems_per_item(dims);
+    let mut out = Vec::with_capacity(indices.len() * d);
+    for &i in indices {
+        let i = i as usize;
+        out.extend_from_slice(&data[i * d..(i + 1) * d]);
+    }
+    Ok(Feature::F32 { dims: dims.to_vec(), data: out })
+}
+
+/// Convenience overload taking a stored node feature by name.
+pub fn broadcast_node_feature(
+    g: &GraphTensor,
+    edge_set: &str,
+    tag: Tag,
+    feature_name: &str,
+) -> Result<Feature> {
+    let es = g.edge_set(edge_set)?;
+    let node_set = match tag {
+        Tag::Source => es.adjacency.source_set.clone(),
+        Tag::Target => es.adjacency.target_set.clone(),
+    };
+    let f = g.node_set(&node_set)?.feature(feature_name)?.clone();
+    broadcast_node_to_edges(g, edge_set, tag, &f)
+}
+
+/// `tfgnn.pool_edges_to_node`: aggregate per-edge values at the `tag`
+/// endpoint. Empty segments (nodes with no incident edges) yield 0.
+pub fn pool_edges_to_node(
+    g: &GraphTensor,
+    edge_set: &str,
+    tag: Tag,
+    reduce: Reduce,
+    value: &Feature,
+) -> Result<Feature> {
+    let es = g.edge_set(edge_set)?;
+    let indices = match tag {
+        Tag::Source => &es.adjacency.source,
+        Tag::Target => &es.adjacency.target,
+    };
+    let node_set = match tag {
+        Tag::Source => &es.adjacency.source_set,
+        Tag::Target => &es.adjacency.target_set,
+    };
+    let n_nodes = g.num_nodes(node_set)?;
+    let (dims, data) = dense_f32(value, "pool_edges_to_node")?;
+    if value.len() != es.total() {
+        return Err(Error::Feature(format!(
+            "pool_edges_to_node: value has {} items, edge set {edge_set:?} has {}",
+            value.len(),
+            es.total()
+        )));
+    }
+    let d = elems_per_item(dims);
+    let out = match reduce {
+        Reduce::Sum => segment_sum(data, indices, n_nodes, d),
+        Reduce::Mean => segment_mean(data, indices, n_nodes, d),
+        Reduce::Max => segment_max(data, indices, n_nodes, d),
+        Reduce::Min => segment_min(data, indices, n_nodes, d),
+    };
+    Ok(Feature::F32 { dims: dims.to_vec(), data: out })
+}
+
+/// Per-node component id for a node set (derived from sizes).
+pub fn node_component_ids(g: &GraphTensor, node_set: &str) -> Result<Vec<u32>> {
+    let ns = g.node_set(node_set)?;
+    let mut out = Vec::with_capacity(ns.total());
+    for (c, &n) in ns.sizes.iter().enumerate() {
+        out.extend(std::iter::repeat(c as u32).take(n));
+    }
+    Ok(out)
+}
+
+/// Per-edge component id for an edge set.
+pub fn edge_component_ids(g: &GraphTensor, edge_set: &str) -> Result<Vec<u32>> {
+    let es = g.edge_set(edge_set)?;
+    let mut out = Vec::with_capacity(es.total());
+    for (c, &n) in es.sizes.iter().enumerate() {
+        out.extend(std::iter::repeat(c as u32).take(n));
+    }
+    Ok(out)
+}
+
+/// `tfgnn.pool_nodes_to_context`: aggregate node values per component.
+pub fn pool_nodes_to_context(
+    g: &GraphTensor,
+    node_set: &str,
+    reduce: Reduce,
+    value: &Feature,
+) -> Result<Feature> {
+    let (dims, data) = dense_f32(value, "pool_nodes_to_context")?;
+    if value.len() != g.num_nodes(node_set)? {
+        return Err(Error::Feature("pool_nodes_to_context: item count mismatch".into()));
+    }
+    let ids = node_component_ids(g, node_set)?;
+    let d = elems_per_item(dims);
+    let out = match reduce {
+        Reduce::Sum => segment_sum(data, &ids, g.num_components, d),
+        Reduce::Mean => segment_mean(data, &ids, g.num_components, d),
+        Reduce::Max => segment_max(data, &ids, g.num_components, d),
+        Reduce::Min => segment_min(data, &ids, g.num_components, d),
+    };
+    Ok(Feature::F32 { dims: dims.to_vec(), data: out })
+}
+
+/// `tfgnn.broadcast_context_to_nodes`: each node receives its
+/// component's context value.
+pub fn broadcast_context_to_nodes(
+    g: &GraphTensor,
+    node_set: &str,
+    value: &Feature,
+) -> Result<Feature> {
+    let (dims, data) = dense_f32(value, "broadcast_context_to_nodes")?;
+    if value.len() != g.num_components {
+        return Err(Error::Feature(format!(
+            "broadcast_context_to_nodes: value has {} rows, graph has {} components",
+            value.len(),
+            g.num_components
+        )));
+    }
+    let ids = node_component_ids(g, node_set)?;
+    let d = elems_per_item(dims);
+    let mut out = Vec::with_capacity(ids.len() * d);
+    for &c in &ids {
+        let c = c as usize;
+        out.extend_from_slice(&data[c * d..(c + 1) * d]);
+    }
+    Ok(Feature::F32 { dims: dims.to_vec(), data: out })
+}
+
+/// `tfgnn.pool_edges_to_context`.
+pub fn pool_edges_to_context(
+    g: &GraphTensor,
+    edge_set: &str,
+    reduce: Reduce,
+    value: &Feature,
+) -> Result<Feature> {
+    let (dims, data) = dense_f32(value, "pool_edges_to_context")?;
+    if value.len() != g.num_edges(edge_set)? {
+        return Err(Error::Feature("pool_edges_to_context: item count mismatch".into()));
+    }
+    let ids = edge_component_ids(g, edge_set)?;
+    let d = elems_per_item(dims);
+    let out = match reduce {
+        Reduce::Sum => segment_sum(data, &ids, g.num_components, d),
+        Reduce::Mean => segment_mean(data, &ids, g.num_components, d),
+        Reduce::Max => segment_max(data, &ids, g.num_components, d),
+        Reduce::Min => segment_min(data, &ids, g.num_components, d),
+    };
+    Ok(Feature::F32 { dims: dims.to_vec(), data: out })
+}
+
+/// `tfgnn.broadcast_context_to_edges`.
+pub fn broadcast_context_to_edges(
+    g: &GraphTensor,
+    edge_set: &str,
+    value: &Feature,
+) -> Result<Feature> {
+    let (dims, data) = dense_f32(value, "broadcast_context_to_edges")?;
+    if value.len() != g.num_components {
+        return Err(Error::Feature("broadcast_context_to_edges: component mismatch".into()));
+    }
+    let ids = edge_component_ids(g, edge_set)?;
+    let d = elems_per_item(dims);
+    let mut out = Vec::with_capacity(ids.len() * d);
+    for &c in &ids {
+        let c = c as usize;
+        out.extend_from_slice(&data[c * d..(c + 1) * d]);
+    }
+    Ok(Feature::F32 { dims: dims.to_vec(), data: out })
+}
+
+/// `tfgnn.softmax` over edges grouped by their `tag` endpoint — the
+/// attention-weights primitive (§4.3, A.4).
+pub fn segment_softmax(
+    g: &GraphTensor,
+    edge_set: &str,
+    tag: Tag,
+    logits: &Feature,
+) -> Result<Feature> {
+    let es = g.edge_set(edge_set)?;
+    let indices = match tag {
+        Tag::Source => &es.adjacency.source,
+        Tag::Target => &es.adjacency.target,
+    };
+    let node_set = match tag {
+        Tag::Source => &es.adjacency.source_set,
+        Tag::Target => &es.adjacency.target_set,
+    };
+    let n_nodes = g.num_nodes(node_set)?;
+    let (dims, data) = dense_f32(logits, "segment_softmax")?;
+    if logits.len() != es.total() {
+        return Err(Error::Feature("segment_softmax: logits count mismatch".into()));
+    }
+    let d = elems_per_item(dims);
+    Ok(Feature::F32 {
+        dims: dims.to_vec(),
+        data: segment_softmax_values(data, indices, n_nodes, d),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::recsys::recsys_example_graph;
+
+    /// The appendix A.3 worked example: total user spending via
+    /// broadcast + sum-pool, then fraction of max via context ops.
+    #[test]
+    fn a3_user_spending() {
+        let g = recsys_example_graph();
+        // latest_price = price[:, :1] per item.
+        let price = g.node_set("items").unwrap().feature("price").unwrap().clone();
+        let latest: Vec<f32> = (0..6).map(|i| price.ragged_row_f32(i).unwrap()[0]).collect();
+        let latest = Feature::f32_vec(latest);
+        // purchase price per edge = broadcast from item (SOURCE).
+        let purchase = broadcast_node_to_edges(&g, "purchased", Tag::Source, &latest).unwrap();
+        let (_, pp) = purchase.as_f32().unwrap();
+        assert_eq!(pp.len(), 7);
+        assert_eq!(pp[4], 350.0); // the flight edge
+        // total user spending = sum-pool to users (TARGET).
+        let spending =
+            pool_edges_to_node(&g, "purchased", Tag::Target, Reduce::Sum, &purchase).unwrap();
+        let (_, sp) = spending.as_f32().unwrap();
+        // users: Shawn(0): shoes 89.99 + book 24.99 + groceries 45.13
+        //        Jeorg(1): food 22.34 + ticket 27.99
+        //        Yumiko(2): flight 350.0, Sophie(3): groceries 45.13
+        assert!((sp[0] - (89.99 + 24.99 + 45.13)).abs() < 1e-4, "{}", sp[0]);
+        assert!((sp[1] - (22.34 + 27.99)).abs() < 1e-4);
+        assert!((sp[2] - 350.0).abs() < 1e-4);
+        assert!((sp[3] - 45.13).abs() < 1e-4);
+        // max over users, broadcast back, fraction.
+        let maxv = pool_nodes_to_context(&g, "users", Reduce::Max, &spending).unwrap();
+        let (_, mv) = maxv.as_f32().unwrap();
+        assert!((mv[0] - 350.0).abs() < 1e-4);
+        let back = broadcast_context_to_nodes(&g, "users", &maxv).unwrap();
+        let (_, bk) = back.as_f32().unwrap();
+        assert_eq!(bk.len(), 4);
+        assert!(bk.iter().all(|&x| (x - 350.0).abs() < 1e-4));
+    }
+
+    #[test]
+    fn mean_max_min_pooling() {
+        let g = recsys_example_graph();
+        let ones = Feature::f32_vec(vec![1.0; 7]);
+        let mean = pool_edges_to_node(&g, "purchased", Tag::Target, Reduce::Mean, &ones).unwrap();
+        let (_, m) = mean.as_f32().unwrap();
+        assert_eq!(m, &[1.0, 1.0, 1.0, 1.0]);
+        let vals = Feature::f32_vec(vec![3.0, 1.0, 5.0, 2.0, 7.0, 4.0, 6.0]);
+        let mx = pool_edges_to_node(&g, "purchased", Tag::Target, Reduce::Max, &vals).unwrap();
+        let (_, mx) = mx.as_f32().unwrap();
+        // user0 receives edges 2,3,6 -> max(5,2,6)=6 ; user1 edges 0,1 -> 3
+        assert_eq!(mx, &[6.0, 3.0, 7.0, 4.0]);
+        let mn = pool_edges_to_node(&g, "purchased", Tag::Target, Reduce::Min, &vals).unwrap();
+        let (_, mn) = mn.as_f32().unwrap();
+        assert_eq!(mn, &[2.0, 1.0, 7.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_segments_are_zero() {
+        let g = recsys_example_graph();
+        // "items" as SOURCE of purchased: item 4 appears once, all items
+        // appear; instead pool over is-friend TARGET: only user 0
+        // receives, users 1-3 get zeros.
+        let vals = Feature::f32_vec(vec![1.0, 2.0, 3.0]);
+        let pooled =
+            pool_edges_to_node(&g, "is-friend", Tag::Target, Reduce::Sum, &vals).unwrap();
+        let (_, p) = pooled.as_f32().unwrap();
+        assert_eq!(p, &[6.0, 0.0, 0.0, 0.0]);
+        let pooled_max =
+            pool_edges_to_node(&g, "is-friend", Tag::Target, Reduce::Max, &vals).unwrap();
+        let (_, p) = pooled_max.as_f32().unwrap();
+        assert_eq!(p, &[3.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn vector_valued_broadcast_pool() {
+        let g = recsys_example_graph();
+        // 2-d vectors on users, broadcast to is-friend source then pool back.
+        let v = Feature::f32_mat(2, (0..8).map(|x| x as f32).collect());
+        let on_edges = broadcast_node_to_edges(&g, "is-friend", Tag::Source, &v).unwrap();
+        let (dims, d) = on_edges.as_f32().unwrap();
+        assert_eq!(dims, &[2]);
+        // edges sources = [1,2,3] -> rows [2,3],[4,5],[6,7]
+        assert_eq!(d, &[2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let back = pool_edges_to_node(&g, "is-friend", Tag::Target, Reduce::Sum, &on_edges).unwrap();
+        let (_, b) = back.as_f32().unwrap();
+        assert_eq!(&b[0..2], &[12.0, 15.0]); // sum of the three rows at user 0
+        assert!(b[2..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn softmax_normalizes_per_receiver() {
+        let g = recsys_example_graph();
+        let logits = Feature::f32_vec(vec![0.0, 0.0, 1.0, 2.0, 0.5, 0.5, 3.0]);
+        let w = segment_softmax(&g, "purchased", Tag::Target, &logits).unwrap();
+        let (_, w) = w.as_f32().unwrap();
+        // Receivers: user1 gets edges {0,1}, user0 gets {2,3,6}, user2 {4}, user3 {5}.
+        assert!((w[0] - 0.5).abs() < 1e-6);
+        assert!((w[1] - 0.5).abs() < 1e-6);
+        let u0: f32 = w[2] + w[3] + w[6];
+        assert!((u0 - 1.0).abs() < 1e-6);
+        assert!(w[6] > w[3] && w[3] > w[2], "monotone in logits");
+        assert!((w[4] - 1.0).abs() < 1e-6);
+        assert!((w[5] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let g = recsys_example_graph();
+        let wrong = Feature::f32_vec(vec![1.0; 5]);
+        assert!(broadcast_node_to_edges(&g, "purchased", Tag::Source, &wrong).is_err());
+        assert!(pool_edges_to_node(&g, "purchased", Tag::Target, Reduce::Sum, &wrong).is_err());
+        assert!(broadcast_context_to_nodes(&g, "users", &wrong).is_err());
+        let int_feature = Feature::i64_vec(vec![1, 2, 3, 4, 5, 6]);
+        assert!(broadcast_node_to_edges(&g, "purchased", Tag::Source, &int_feature).is_err());
+    }
+
+    #[test]
+    fn component_ids() {
+        let g = recsys_example_graph();
+        let merged = crate::graph::batch::merge(&[g.clone(), g]).unwrap();
+        let ids = node_component_ids(&merged, "users").unwrap();
+        assert_eq!(ids, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        let eids = edge_component_ids(&merged, "is-friend").unwrap();
+        assert_eq!(eids, vec![0, 0, 0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn context_ops_multi_component() {
+        let g = recsys_example_graph();
+        let merged = crate::graph::batch::merge(&[g.clone(), g]).unwrap();
+        let vals = Feature::f32_vec((0..8).map(|x| x as f32).collect());
+        let pooled = pool_nodes_to_context(&merged, "users", Reduce::Sum, &vals).unwrap();
+        let (_, p) = pooled.as_f32().unwrap();
+        assert_eq!(p, &[0.0 + 1.0 + 2.0 + 3.0, 4.0 + 5.0 + 6.0 + 7.0]);
+        let bc = broadcast_context_to_edges(&merged, "is-friend", &pooled).unwrap();
+        let (_, b) = bc.as_f32().unwrap();
+        assert_eq!(b, &[6.0, 6.0, 6.0, 22.0, 22.0, 22.0]);
+    }
+}

@@ -1,0 +1,333 @@
+//! Pure-Rust reference forward pass for the `mpnn` architecture.
+//!
+//! This mirrors `python/compile/model.py::forward` (arch `mpnn`,
+//! deterministic mode) operation-for-operation on the CPU, consuming
+//! the same padded batch and the same checkpoint parameters. The
+//! integration test `aot_forward_matches_rust_reference` asserts the
+//! AOT logits and these logits agree to float tolerance — the strongest
+//! cross-language correctness check in the repo: it validates the whole
+//! chain (Pallas kernel → jax model → HLO text → PJRT execution →
+//! literal marshalling) against an independent implementation.
+
+use std::collections::BTreeMap;
+
+use crate::graph::pad::Padded;
+use crate::runtime::batch::{root_indices, RootTask};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::HostTensor;
+use crate::{Error, Result};
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// self @ w (w: [self.cols, n])
+    pub fn matmul(&self, w: &Mat) -> Mat {
+        assert_eq!(self.cols, w.rows);
+        let mut out = Mat::zeros(self.rows, w.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let wrow = &w.data[k * w.cols..(k + 1) * w.cols];
+                let orow = &mut out.data[i * w.cols..(i + 1) * w.cols];
+                for (o, &b) in orow.iter_mut().zip(wrow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add_bias(&mut self, b: &[f32]) {
+        assert_eq!(self.cols, b.len());
+        for r in 0..self.rows {
+            for (v, &bb) in self.data[r * self.cols..(r + 1) * self.cols].iter_mut().zip(b) {
+                *v += bb;
+            }
+        }
+    }
+
+    pub fn relu(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Per-row layer norm with scale/bias (eps 1e-5, matching L2).
+    pub fn layer_norm(&mut self, scale: &[f32], bias: &[f32]) {
+        for r in 0..self.rows {
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            let mu = row.iter().sum::<f32>() / row.len() as f32;
+            let var = row.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / row.len() as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for (i, v) in row.iter_mut().enumerate() {
+                *v = (*v - mu) * inv * scale[i] + bias[i];
+            }
+        }
+    }
+
+    /// Concatenate columns of several matrices (same row count).
+    pub fn concat_cols(parts: &[&Mat]) -> Mat {
+        let rows = parts[0].rows;
+        let cols: usize = parts.iter().map(|p| p.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            let mut at = 0;
+            for p in parts {
+                out.data[r * cols + at..r * cols + at + p.cols].copy_from_slice(p.row(r));
+                at += p.cols;
+            }
+        }
+        out
+    }
+
+    /// Gather rows by index.
+    pub fn gather(&self, idx: &[i32]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.data[r * self.cols..(r + 1) * self.cols].copy_from_slice(self.row(i as usize));
+        }
+        out
+    }
+
+    /// Scatter-add rows into `n` segments.
+    pub fn segment_sum(&self, seg: &[i32], n: usize) -> Mat {
+        let mut out = Mat::zeros(n, self.cols);
+        for (r, &s) in seg.iter().enumerate() {
+            let dst = &mut out.data[s as usize * self.cols..(s as usize + 1) * self.cols];
+            for (o, &v) in dst.iter_mut().zip(self.row(r)) {
+                *o += v;
+            }
+        }
+        out
+    }
+}
+
+/// Named parameter lookup over a checkpoint/params list.
+pub struct ParamMap<'a>(BTreeMap<&'a str, &'a HostTensor>);
+
+impl<'a> ParamMap<'a> {
+    pub fn new(params: &'a [(String, HostTensor)]) -> ParamMap<'a> {
+        ParamMap(params.iter().map(|(n, t)| (n.trim_start_matches("param."), t)).collect())
+    }
+
+    fn mat(&self, name: &str) -> Result<Mat> {
+        let t = self
+            .0
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("reference model: missing param {name:?}")))?;
+        let (shape, data) = match t {
+            HostTensor::F32(s, d) => (s, d),
+            _ => return Err(Error::Runtime(format!("param {name:?} not f32"))),
+        };
+        match shape.len() {
+            2 => Ok(Mat { rows: shape[0], cols: shape[1], data: data.clone() }),
+            1 => Ok(Mat { rows: 1, cols: shape[0], data: data.clone() }),
+            _ => Err(Error::Runtime(format!("param {name:?} has rank {}", shape.len()))),
+        }
+    }
+
+    fn vec(&self, name: &str) -> Result<Vec<f32>> {
+        Ok(self.mat(name)?.data)
+    }
+}
+
+/// Model dims read from the manifest config.
+struct RefConfig {
+    hidden: usize,
+    layers: usize,
+    updates: BTreeMap<String, Vec<String>>,
+    edge_endpoints: BTreeMap<String, (String, String)>,
+    node_order: Vec<String>,
+    id_embedding: BTreeMap<String, bool>,
+    features: BTreeMap<String, Vec<String>>,
+    num_classes: usize,
+}
+
+fn ref_config(manifest: &Manifest) -> Result<RefConfig> {
+    let cfg = &manifest.config;
+    let model = cfg.get("model")?;
+    let mut updates = BTreeMap::new();
+    for (k, v) in model.get("updates")?.as_obj()? {
+        updates.insert(
+            k.clone(),
+            v.as_arr()?.iter().map(|s| Ok(s.as_str()?.to_string())).collect::<Result<Vec<_>>>()?,
+        );
+    }
+    let schema = cfg.get("schema")?;
+    let mut edge_endpoints = BTreeMap::new();
+    for (k, v) in schema.get("edge_sets")?.as_obj()? {
+        let arr = v.as_arr()?;
+        edge_endpoints.insert(
+            k.clone(),
+            (arr[0].as_str()?.to_string(), arr[1].as_str()?.to_string()),
+        );
+    }
+    let mut node_order = Vec::new();
+    let mut id_embedding = BTreeMap::new();
+    let mut features = BTreeMap::new();
+    for (k, v) in schema.get("node_sets")?.as_obj()? {
+        node_order.push(k.clone());
+        id_embedding.insert(
+            k.clone(),
+            v.opt("id_embedding").map(|b| b.as_bool().unwrap_or(false)).unwrap_or(false),
+        );
+        let mut fs = Vec::new();
+        if let Some(f) = v.opt("features") {
+            for name in f.as_obj()?.keys() {
+                fs.push(name.clone());
+            }
+        }
+        features.insert(k.clone(), fs);
+    }
+    Ok(RefConfig {
+        hidden: manifest.model("mpnn")?.hidden_dim,
+        layers: manifest.model("mpnn")?.num_layers,
+        updates,
+        edge_endpoints,
+        node_order,
+        id_embedding,
+        features,
+        num_classes: cfg.get("train")?.get("num_classes")?.as_usize()?,
+    })
+}
+
+/// Compute logits `[num_roots, num_classes]` exactly like the AOT
+/// `forward` program (arch mpnn, eval mode).
+pub fn mpnn_forward_reference(
+    manifest: &Manifest,
+    params: &[(String, HostTensor)],
+    padded: &Padded,
+    task: &RootTask,
+) -> Result<Mat> {
+    let rc = ref_config(manifest)?;
+    let p = ParamMap::new(params);
+    let g = &padded.graph;
+
+    // Initial states (MapFeatures).
+    let mut h: BTreeMap<String, Mat> = BTreeMap::new();
+    for set in &rc.node_order {
+        let n = g.num_nodes(set)?;
+        let feats = &rc.features[set];
+        if !feats.is_empty() {
+            let mut state = Mat::zeros(n, rc.hidden);
+            for fname in feats {
+                let (dims, data) = g.node_set(set)?.feature(fname)?.as_f32()?;
+                let x = Mat { rows: n, cols: dims[0], data: data.to_vec() };
+                let xw = x.matmul(&p.mat(&format!("enc.{set}.{fname}.w"))?);
+                for (o, v) in state.data.iter_mut().zip(&xw.data) {
+                    *o += v;
+                }
+            }
+            let first = &feats[0];
+            state.add_bias(&p.vec(&format!("enc.{set}.{first}.b"))?);
+            state.relu();
+            h.insert(set.clone(), state);
+        } else if rc.id_embedding[set] {
+            let (_, ids) = g.node_set(set)?.feature("#id")?.as_i64()?;
+            let table = p.mat(&format!("emb.{set}"))?;
+            let idx: Vec<i32> = ids.iter().map(|&i| i as i32).collect();
+            h.insert(set.clone(), table.gather(&idx));
+        } else {
+            h.insert(set.clone(), Mat::zeros(n, rc.hidden));
+        }
+    }
+
+    // GraphUpdate rounds (receiver = SOURCE; messages relu(W[s||r]+b)).
+    for layer in 0..rc.layers {
+        let mut new_h = h.clone();
+        for (node_set, edge_list) in &rc.updates {
+            let n_recv = g.num_nodes(node_set)?;
+            let mut pooled = Vec::new();
+            let mut edge_names: Vec<&String> = edge_list.iter().collect();
+            edge_names.sort();
+            for es in edge_names {
+                let adj = &g.edge_set(es)?.adjacency;
+                let src: Vec<i32> = adj.source.iter().map(|&x| x as i32).collect();
+                let tgt: Vec<i32> = adj.target.iter().map(|&x| x as i32).collect();
+                let send_set = &rc.edge_endpoints[es].1;
+                let sender = h[send_set].gather(&tgt);
+                let receiver = h[node_set].gather(&src);
+                let x = Mat::concat_cols(&[&sender, &receiver]);
+                let mut msg = x.matmul(&p.mat(&format!("l{layer}.{node_set}.{es}.msg.w"))?);
+                msg.add_bias(&p.vec(&format!("l{layer}.{node_set}.{es}.msg.b"))?);
+                msg.relu();
+                pooled.push(msg.segment_sum(&src, n_recv));
+            }
+            let mut parts: Vec<&Mat> = vec![&h[node_set]];
+            parts.extend(pooled.iter());
+            let x = Mat::concat_cols(&parts);
+            let mut next = x.matmul(&p.mat(&format!("l{layer}.{node_set}.next.w"))?);
+            next.add_bias(&p.vec(&format!("l{layer}.{node_set}.next.b"))?);
+            next.relu();
+            // layer norm (the mag config enables it)
+            if params.iter().any(|(n, _)| n == &format!("param.l{layer}.{node_set}.ln.scale")) {
+                next.layer_norm(
+                    &p.vec(&format!("l{layer}.{node_set}.ln.scale"))?,
+                    &p.vec(&format!("l{layer}.{node_set}.ln.bias"))?,
+                );
+            }
+            new_h.insert(node_set.clone(), next);
+        }
+        h = new_h;
+    }
+
+    // Root readout.
+    let num_roots = manifest.pad_spec()?.component_cap - 1;
+    let roots = root_indices(padded, &task.root_set, num_roots)?;
+    let root_states = h[&task.root_set].gather(&roots);
+    let mut logits = root_states.matmul(&p.mat("head.w")?);
+    logits.add_bias(&p.vec("head.b")?);
+    debug_assert_eq!(logits.cols, rc.num_classes);
+    Ok(logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_ops() {
+        let a = Mat { rows: 2, cols: 3, data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
+        let w = Mat { rows: 3, cols: 2, data: vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0] };
+        let c = a.matmul(&w);
+        assert_eq!(c.data, vec![4.0, 5.0, 10.0, 11.0]);
+        let g = a.gather(&[1, 0, 1]);
+        assert_eq!(g.rows, 3);
+        assert_eq!(g.row(0), &[4.0, 5.0, 6.0]);
+        let s = a.segment_sum(&[0, 0], 2);
+        assert_eq!(s.row(0), &[5.0, 7.0, 9.0]);
+        assert_eq!(s.row(1), &[0.0, 0.0, 0.0]);
+        let cc = Mat::concat_cols(&[&a, &a]);
+        assert_eq!(cc.cols, 6);
+        assert_eq!(cc.row(1), &[4.0, 5.0, 6.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut m = Mat { rows: 1, cols: 4, data: vec![1.0, 2.0, 3.0, 4.0] };
+        m.layer_norm(&[1.0; 4], &[0.0; 4]);
+        let mu: f32 = m.data.iter().sum::<f32>() / 4.0;
+        assert!(mu.abs() < 1e-6);
+        let var: f32 = m.data.iter().map(|x| x * x).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,253 @@
+//! Segment reductions over flat `[n, d]` buffers.
+//!
+//! These are the scalar reference semantics for both the Rust ops layer
+//! and the Pallas kernels (whose pytest oracle `ref.py` mirrors them).
+//! `segments` maps each of the `n` items to a segment id `< num_segments`;
+//! `d` is the per-item element count.
+
+/// Sum per segment; empty segments yield 0.
+pub fn segment_sum(data: &[f32], segments: &[u32], num_segments: usize, d: usize) -> Vec<f32> {
+    debug_assert_eq!(data.len(), segments.len() * d);
+    let mut out = vec![0.0f32; num_segments * d];
+    for (i, &s) in segments.iter().enumerate() {
+        let s = s as usize;
+        let src = &data[i * d..(i + 1) * d];
+        let dst = &mut out[s * d..(s + 1) * d];
+        for (o, v) in dst.iter_mut().zip(src) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Mean per segment; empty segments yield 0.
+pub fn segment_mean(data: &[f32], segments: &[u32], num_segments: usize, d: usize) -> Vec<f32> {
+    let mut out = segment_sum(data, segments, num_segments, d);
+    let mut counts = vec![0u32; num_segments];
+    for &s in segments {
+        counts[s as usize] += 1;
+    }
+    for (s, &c) in counts.iter().enumerate() {
+        if c > 0 {
+            let inv = 1.0 / c as f32;
+            for v in &mut out[s * d..(s + 1) * d] {
+                *v *= inv;
+            }
+        }
+    }
+    out
+}
+
+/// Max per segment; empty segments yield 0 (TF-GNN's default output for
+/// missing inputs in `pool` with max is the dtype min; we clamp empties
+/// to 0 so padded graphs stay finite — documented deviation, asserted in
+/// tests on both sides of the AOT boundary).
+pub fn segment_max(data: &[f32], segments: &[u32], num_segments: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![f32::NEG_INFINITY; num_segments * d];
+    for (i, &s) in segments.iter().enumerate() {
+        let s = s as usize;
+        let src = &data[i * d..(i + 1) * d];
+        let dst = &mut out[s * d..(s + 1) * d];
+        for (o, v) in dst.iter_mut().zip(src) {
+            if *v > *o {
+                *o = *v;
+            }
+        }
+    }
+    for v in &mut out {
+        if !v.is_finite() {
+            *v = 0.0;
+        }
+    }
+    out
+}
+
+/// Min per segment; empty segments yield 0.
+pub fn segment_min(data: &[f32], segments: &[u32], num_segments: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![f32::INFINITY; num_segments * d];
+    for (i, &s) in segments.iter().enumerate() {
+        let s = s as usize;
+        let src = &data[i * d..(i + 1) * d];
+        let dst = &mut out[s * d..(s + 1) * d];
+        for (o, v) in dst.iter_mut().zip(src) {
+            if *v < *o {
+                *o = *v;
+            }
+        }
+    }
+    for v in &mut out {
+        if !v.is_finite() {
+            *v = 0.0;
+        }
+    }
+    out
+}
+
+/// Numerically stable softmax within each segment (per element column):
+/// subtracts the per-segment max before exponentiation.
+pub fn segment_softmax_values(
+    logits: &[f32],
+    segments: &[u32],
+    num_segments: usize,
+    d: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(logits.len(), segments.len() * d);
+    // Per-segment max (for stability).
+    let mut maxs = vec![f32::NEG_INFINITY; num_segments * d];
+    for (i, &s) in segments.iter().enumerate() {
+        let s = s as usize;
+        for k in 0..d {
+            let v = logits[i * d + k];
+            if v > maxs[s * d + k] {
+                maxs[s * d + k] = v;
+            }
+        }
+    }
+    // exp(x - max), accumulate sums.
+    let mut out = vec![0.0f32; logits.len()];
+    let mut sums = vec![0.0f32; num_segments * d];
+    for (i, &s) in segments.iter().enumerate() {
+        let s = s as usize;
+        for k in 0..d {
+            let e = (logits[i * d + k] - maxs[s * d + k]).exp();
+            out[i * d + k] = e;
+            sums[s * d + k] += e;
+        }
+    }
+    for (i, &s) in segments.iter().enumerate() {
+        let s = s as usize;
+        for k in 0..d {
+            out[i * d + k] /= sums[s * d + k];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn sum_basic() {
+        let data = [1.0, 2.0, 3.0, 4.0];
+        let seg = [0, 1, 0, 2];
+        assert_eq!(segment_sum(&data, &seg, 3, 1), vec![4.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn sum_vector_valued() {
+        let data = [1.0, 10.0, 2.0, 20.0, 3.0, 30.0];
+        let seg = [1, 1, 0];
+        assert_eq!(segment_sum(&data, &seg, 2, 2), vec![3.0, 30.0, 3.0, 30.0]);
+    }
+
+    #[test]
+    fn mean_ignores_empty() {
+        let data = [2.0, 4.0];
+        let seg = [0, 0];
+        assert_eq!(segment_mean(&data, &seg, 2, 1), vec![3.0, 0.0]);
+    }
+
+    #[test]
+    fn max_min_with_negatives() {
+        let data = [-5.0, -1.0, -3.0];
+        let seg = [0, 0, 1];
+        assert_eq!(segment_max(&data, &seg, 3, 1), vec![-1.0, -3.0, 0.0]);
+        assert_eq!(segment_min(&data, &seg, 3, 1), vec![-5.0, -3.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_stable_with_large_logits() {
+        let data = [1000.0, 1001.0];
+        let seg = [0, 0];
+        let w = segment_softmax_values(&data, &seg, 1, 1);
+        assert!(w.iter().all(|x| x.is_finite()));
+        assert!((w[0] + w[1] - 1.0).abs() < 1e-6);
+        assert!(w[1] > w[0]);
+    }
+
+    #[test]
+    fn prop_sum_equals_scalar_loop() {
+        check("segment_sum matches naive", 60, |rng| {
+            let n = rng.uniform(50);
+            let k = 1 + rng.uniform(8);
+            let d = 1 + rng.uniform(3);
+            let data: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+            let seg: Vec<u32> = (0..n).map(|_| rng.uniform(k) as u32).collect();
+            let fast = segment_sum(&data, &seg, k, d);
+            let mut naive = vec![0.0f32; k * d];
+            for i in 0..n {
+                for j in 0..d {
+                    naive[seg[i] as usize * d + j] += data[i * d + j];
+                }
+            }
+            for (a, b) in fast.iter().zip(&naive) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_mean_times_count_is_sum() {
+        check("mean × count = sum", 40, |rng| {
+            let n = 1 + rng.uniform(40);
+            let k = 1 + rng.uniform(6);
+            let data: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let seg: Vec<u32> = (0..n).map(|_| rng.uniform(k) as u32).collect();
+            let mut counts = vec![0u32; k];
+            for &s in &seg {
+                counts[s as usize] += 1;
+            }
+            let sum = segment_sum(&data, &seg, k, 1);
+            let mean = segment_mean(&data, &seg, k, 1);
+            for s in 0..k {
+                assert!((mean[s] * counts[s] as f32 - sum[s]).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_softmax_rows_sum_to_one() {
+        check("softmax sums to 1 per non-empty segment", 40, |rng| {
+            let n = 1 + rng.uniform(40);
+            let k = 1 + rng.uniform(6);
+            let data: Vec<f32> = (0..n).map(|_| rng.range_f32(-5.0, 5.0)).collect();
+            let seg: Vec<u32> = (0..n).map(|_| rng.uniform(k) as u32).collect();
+            let w = segment_softmax_values(&data, &seg, k, 1);
+            let sums = segment_sum(&w, &seg, k, 1);
+            let mut counts = vec![0u32; k];
+            for &s in &seg {
+                counts[s as usize] += 1;
+            }
+            for s in 0..k {
+                if counts[s] > 0 {
+                    assert!((sums[s] - 1.0).abs() < 1e-5, "segment {s}: {}", sums[s]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_max_ge_mean_ge_min() {
+        check("max ≥ mean ≥ min per segment", 40, |rng| {
+            let n = 1 + rng.uniform(40);
+            let k = 1 + rng.uniform(6);
+            let data: Vec<f32> = (0..n).map(|_| rng.range_f32(-3.0, 3.0)).collect();
+            let seg: Vec<u32> = (0..n).map(|_| rng.uniform(k) as u32).collect();
+            let mx = segment_max(&data, &seg, k, 1);
+            let mn = segment_min(&data, &seg, k, 1);
+            let me = segment_mean(&data, &seg, k, 1);
+            let mut counts = vec![0u32; k];
+            for &s in &seg {
+                counts[s as usize] += 1;
+            }
+            for s in 0..k {
+                if counts[s] > 0 {
+                    assert!(mx[s] >= me[s] - 1e-5);
+                    assert!(me[s] >= mn[s] - 1e-5);
+                }
+            }
+        });
+    }
+}

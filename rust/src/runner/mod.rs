@@ -1,0 +1,273 @@
+//! The Orchestrator (API Level 4, paper §5 / §8.4 / A.5–A.6.4).
+//!
+//! [`run`] is the analog of `runner.run(...)`: it wires a dataset
+//! provider (sampling synth-MAG on demand or reading shards), the
+//! padding/batching pipeline, the task
+//! (`RootNodeMulticlassClassification` on papers), the AOT trainer, and
+//! per-epoch validation into one call, returning the run history.
+//! [`sweep`] is the Vizier-study analog (A.6.3): a deterministic search
+//! over the runtime hyper-parameter space reporting the top trials by
+//! validation accuracy.
+
+pub mod sweep;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::graph::pad::{fit_or_skip, PadSpec};
+use crate::pipeline::{epoch_stream, DatasetProvider, PipelineConfig, SamplingProvider};
+use crate::runtime::batch::RootTask;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::Runtime;
+use crate::sampler::inmem::InMemorySampler;
+use crate::sampler::spec::mag_sampling_spec_sized;
+use crate::store::GraphStore;
+use crate::synth::mag::{generate, MagDataset, Split};
+use crate::train::metrics::EpochMetrics;
+use crate::train::{Hyperparams, Trainer};
+use crate::{Error, Result};
+
+/// Orchestrator configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts_dir: PathBuf,
+    pub arch: String,
+    pub epochs: usize,
+    /// Cap train steps per epoch (None = full epoch).
+    pub max_steps_per_epoch: Option<usize>,
+    /// Cap eval batches (None = full split).
+    pub max_eval_batches: Option<usize>,
+    /// Hyper-parameter override (None = manifest defaults).
+    pub hp: Option<Hyperparams>,
+    /// Pipeline shuffle seed.
+    pub shuffle_seed: u64,
+    /// Threads for the merge+pad prep stage.
+    pub prep_threads: usize,
+    /// Where to write the final checkpoint (None = skip).
+    pub checkpoint: Option<PathBuf>,
+    /// Print per-epoch progress lines.
+    pub verbose: bool,
+}
+
+impl RunConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>, arch: &str) -> RunConfig {
+        RunConfig {
+            artifacts_dir: artifacts_dir.into(),
+            arch: arch.to_string(),
+            epochs: 3,
+            max_steps_per_epoch: None,
+            max_eval_batches: None,
+            hp: None,
+            shuffle_seed: 0x7f4a,
+            prep_threads: 0,
+            checkpoint: None,
+            verbose: false,
+        }
+    }
+}
+
+/// One epoch's results.
+#[derive(Debug, Clone)]
+pub struct EpochReport {
+    pub epoch: usize,
+    pub train: EpochMetrics,
+    pub val: EpochMetrics,
+    pub skipped_batches: u64,
+    pub wall_secs: f64,
+}
+
+/// Full run results.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub arch: String,
+    pub param_count: usize,
+    pub epochs: Vec<EpochReport>,
+    pub best_val_acc: f64,
+    pub test: EpochMetrics,
+    pub train_steps_per_sec: f64,
+}
+
+/// Shared assembly of dataset + sampler + pad spec from the manifest.
+pub struct MagEnv {
+    pub manifest: Manifest,
+    pub dataset: MagDataset,
+    pub store: Arc<GraphStore>,
+    pub sampler: Arc<InMemorySampler>,
+    pub pad: PadSpec,
+    pub batch_size: usize,
+}
+
+impl MagEnv {
+    pub fn from_artifacts(dir: &std::path::Path) -> Result<MagEnv> {
+        let manifest = Manifest::load(dir)?;
+        let mag_cfg = manifest.mag_config()?;
+        let dataset = generate(&mag_cfg);
+        let store = Arc::new(dataset.store.clone());
+        let spec = mag_sampling_spec_sized(&store.schema, &manifest.sampling_sizes()?)?;
+        let sampler =
+            Arc::new(InMemorySampler::new(store.clone(), spec, manifest.plan_seed()?)?);
+        let pad = manifest.pad_spec()?;
+        let batch_size = manifest.batch_size()?;
+        Ok(MagEnv { manifest, dataset, store, sampler, pad, batch_size })
+    }
+
+    /// Batch up a seed list for evaluation (merge + fit-or-skip).
+    pub fn eval_batches(
+        &self,
+        seeds: &[u32],
+        limit: Option<usize>,
+    ) -> impl Iterator<Item = Result<Option<crate::graph::pad::Padded>>> + '_ {
+        let batch = self.batch_size;
+        let n = limit.map(|l| l * batch).unwrap_or(usize::MAX);
+        let seeds: Vec<u32> = seeds.iter().copied().take(n).collect();
+        let pad = self.pad.clone();
+        let sampler = Arc::clone(&self.sampler);
+        seeds
+            .chunks(batch)
+            .map(|c| c.to_vec())
+            .collect::<Vec<_>>()
+            .into_iter()
+            .filter(move |c| c.len() == batch)
+            .map(move |chunk| {
+                let graphs = chunk
+                    .iter()
+                    .map(|&s| sampler.sample(s))
+                    .collect::<Result<Vec<_>>>()?;
+                let merged = crate::graph::batch::merge(&graphs)?;
+                Ok(fit_or_skip(&merged, &pad))
+            })
+    }
+}
+
+/// Train + validate + test — the `runner.run(...)` entry point.
+pub fn run(cfg: &RunConfig) -> Result<RunReport> {
+    let env = MagEnv::from_artifacts(&cfg.artifacts_dir)?;
+    let entry = env.manifest.model(&cfg.arch)?.clone();
+    let hp = match cfg.hp {
+        Some(hp) => hp,
+        None => Hyperparams::from_manifest(&env.manifest)?,
+    };
+    let rt = Runtime::cpu()?;
+    let mut trainer =
+        Trainer::new(rt, &cfg.artifacts_dir, &entry, RootTask::default(), hp)?;
+    run_in_env(cfg, &env, &mut trainer)
+}
+
+/// [`run`] against a pre-built environment and trainer — lets the sweep
+/// reuse one compiled trainer across trials (`Trainer::reset` between).
+pub fn run_in_env(cfg: &RunConfig, env: &MagEnv, trainer: &mut Trainer) -> Result<RunReport> {
+    let entry = env.manifest.model(&cfg.arch)?.clone();
+    if let Some(hp) = cfg.hp {
+        trainer.hp = hp;
+    }
+
+    let train_seeds = env.dataset.papers_in_split(Split::Train);
+    let val_seeds = env.dataset.papers_in_split(Split::Validation);
+    let test_seeds = env.dataset.papers_in_split(Split::Test);
+    if cfg.verbose {
+        println!(
+            "runner: arch={} params={} train/val/test = {}/{}/{} papers",
+            cfg.arch,
+            entry.param_count,
+            train_seeds.len(),
+            val_seeds.len(),
+            test_seeds.len()
+        );
+    }
+
+    let provider = Arc::new(SamplingProvider {
+        sampler: Arc::clone(&env.sampler),
+        seeds: train_seeds,
+        shuffle_seed: cfg.shuffle_seed,
+    });
+    let mut pipe_cfg = PipelineConfig::new(env.batch_size, env.pad.clone());
+    pipe_cfg.shuffle_buffer = 4 * env.batch_size;
+    pipe_cfg.shuffle_seed = cfg.shuffle_seed;
+    pipe_cfg.prep_threads = cfg.prep_threads;
+
+    let mut epochs = Vec::new();
+    let mut best_val_acc = 0.0f64;
+    let mut total_steps = 0u64;
+    let mut total_step_secs = 0.0f64;
+    for epoch in 0..cfg.epochs {
+        let t0 = Instant::now();
+        let stream = epoch_stream(
+            Arc::clone(&provider) as Arc<dyn DatasetProvider>,
+            pipe_cfg.clone(),
+            epoch as u64,
+        )?;
+        let mut train_metrics = EpochMetrics::default();
+        for padded in stream.iter() {
+            let ts = Instant::now();
+            let m = trainer.train_batch(&padded)?;
+            total_step_secs += ts.elapsed().as_secs_f64();
+            total_steps += 1;
+            train_metrics.add(m);
+            if let Some(max) = cfg.max_steps_per_epoch {
+                if train_metrics.steps >= max {
+                    break;
+                }
+            }
+        }
+        let skipped =
+            stream.stats.batches_skipped.load(std::sync::atomic::Ordering::Relaxed);
+        drop(stream);
+
+        let mut val_metrics = EpochMetrics::default();
+        for padded in env.eval_batches(&val_seeds, cfg.max_eval_batches) {
+            if let Some(p) = padded? {
+                val_metrics.add(trainer.eval_batch(&p)?);
+            }
+        }
+        best_val_acc = best_val_acc.max(val_metrics.accuracy());
+        let report = EpochReport {
+            epoch,
+            train: train_metrics,
+            val: val_metrics,
+            skipped_batches: skipped,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        };
+        if cfg.verbose {
+            println!(
+                "epoch {:>2}: train {} | val {} | skipped {} | {:.1}s",
+                epoch, report.train, report.val, skipped, report.wall_secs
+            );
+        }
+        epochs.push(report);
+    }
+
+    let mut test = EpochMetrics::default();
+    for padded in env.eval_batches(&test_seeds, cfg.max_eval_batches) {
+        if let Some(p) = padded? {
+            test.add(trainer.eval_batch(&p)?);
+        }
+    }
+    if cfg.verbose {
+        println!("test: {test}");
+    }
+
+    if let Some(path) = &cfg.checkpoint {
+        let params = trainer.params_to_host()?;
+        crate::train::checkpoint::save(path, &params)?;
+        if cfg.verbose {
+            println!("checkpoint written to {}", path.display());
+        }
+    }
+
+    if epochs.is_empty() {
+        return Err(Error::Pipeline("0 epochs requested".into()));
+    }
+    Ok(RunReport {
+        arch: cfg.arch.clone(),
+        param_count: entry.param_count,
+        epochs,
+        best_val_acc,
+        test,
+        train_steps_per_sec: if total_step_secs > 0.0 {
+            total_steps as f64 / total_step_secs
+        } else {
+            0.0
+        },
+    })
+}

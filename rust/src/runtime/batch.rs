@@ -1,0 +1,252 @@
+//! Marshal a padded GraphTensor batch into AOT argument slots.
+//!
+//! The manifest names batch inputs `feat.<set>.<name>`, `ids.<set>`,
+//! `edge.<set>.src|tgt`, `root.idx`, `root.labels`, `root.mask`; this
+//! module fills each slot from a [`Padded`] batch:
+//!
+//! * features come straight from the padded node sets (f32, flattened);
+//! * `ids.*` is the `#id` feature cast to i32 (embedding-table keys);
+//! * edge slots are the adjacency index arrays (i32);
+//! * the root of component `c` is node 0 of the root node set in that
+//!   component (the sampler's "seed first" convention), so `root.idx[c]`
+//!   is the prefix sum of the root set's component sizes; labels are
+//!   read off the root set's label feature at those indices; the mask
+//!   is 1 for real components.
+
+use crate::graph::pad::Padded;
+use crate::runtime::manifest::TensorSpec;
+use crate::runtime::HostTensor;
+use crate::{Error, Result};
+
+/// Task binding: which node set carries the roots and labels.
+#[derive(Debug, Clone)]
+pub struct RootTask {
+    pub root_set: String,
+    pub label_feature: String,
+}
+
+impl Default for RootTask {
+    fn default() -> RootTask {
+        RootTask { root_set: "paper".into(), label_feature: "labels".into() }
+    }
+}
+
+/// Root indices (flat, per non-padding-capable component slot).
+pub fn root_indices(padded: &Padded, root_set: &str, num_roots: usize) -> Result<Vec<i32>> {
+    let ns = padded.graph.node_set(root_set)?;
+    let mut prefix = Vec::with_capacity(ns.sizes.len());
+    let mut acc = 0usize;
+    for &s in &ns.sizes {
+        prefix.push(acc);
+        acc += s;
+    }
+    // Real components point at their root; padding slots point at the
+    // padding component's first node (masked out in the loss).
+    let pad_start = prefix.last().copied().unwrap_or(0);
+    let mut out = Vec::with_capacity(num_roots);
+    for c in 0..num_roots {
+        if c < padded.num_real_components {
+            out.push(prefix[c] as i32);
+        } else {
+            out.push(pad_start as i32);
+        }
+    }
+    Ok(out)
+}
+
+/// Build the tensor for one named batch slot.
+pub fn build_slot(padded: &Padded, task: &RootTask, spec: &TensorSpec) -> Result<HostTensor> {
+    let name = spec.name.as_str();
+    let g = &padded.graph;
+    let parts: Vec<&str> = name.split('.').collect();
+    let tensor = match parts.as_slice() {
+        ["feat", set, feat] => {
+            let f = g.node_set(set)?.feature(feat)?;
+            let (_, data) = f.as_f32()?;
+            HostTensor::F32(spec.shape.clone(), data.to_vec())
+        }
+        ["ids", set] => {
+            let f = g.node_set(set)?.feature("#id")?;
+            let (_, data) = f.as_i64()?;
+            HostTensor::I32(spec.shape.clone(), data.iter().map(|&x| x as i32).collect())
+        }
+        ["edge", set, "src"] => {
+            let es = g.edge_set(set)?;
+            HostTensor::I32(
+                spec.shape.clone(),
+                es.adjacency.source.iter().map(|&x| x as i32).collect(),
+            )
+        }
+        ["edge", set, "tgt"] => {
+            let es = g.edge_set(set)?;
+            HostTensor::I32(
+                spec.shape.clone(),
+                es.adjacency.target.iter().map(|&x| x as i32).collect(),
+            )
+        }
+        ["root", "idx"] => {
+            let num_roots = spec.shape[0];
+            HostTensor::I32(spec.shape.clone(), root_indices(padded, &task.root_set, num_roots)?)
+        }
+        ["root", "labels"] => {
+            let num_roots = spec.shape[0];
+            let idx = root_indices(padded, &task.root_set, num_roots)?;
+            let f = g.node_set(&task.root_set)?.feature(&task.label_feature)?;
+            let (_, labels) = f.as_i64()?;
+            HostTensor::I32(
+                spec.shape.clone(),
+                idx.iter().map(|&i| labels[i as usize] as i32).collect(),
+            )
+        }
+        ["root", "mask"] => {
+            let num_roots = spec.shape[0];
+            let mut mask = vec![0.0f32; num_roots];
+            for m in mask.iter_mut().take(padded.num_real_components.min(num_roots)) {
+                *m = 1.0;
+            }
+            HostTensor::F32(spec.shape.clone(), mask)
+        }
+        _ => return Err(Error::Runtime(format!("unknown batch slot {name:?}"))),
+    };
+    if tensor.len() != spec.elems() {
+        return Err(Error::Runtime(format!(
+            "slot {name:?}: built {} elems, manifest wants {:?} = {}",
+            tensor.len(),
+            spec.shape,
+            spec.elems()
+        )));
+    }
+    Ok(tensor)
+}
+
+/// Build every batch slot of a program's input list (slots whose names
+/// are batch-like; param/adam/step slots are skipped).
+pub fn build_batch(
+    padded: &Padded,
+    task: &RootTask,
+    inputs: &[TensorSpec],
+) -> Result<Vec<(usize, HostTensor)>> {
+    let mut out = Vec::new();
+    for (i, spec) in inputs.iter().enumerate() {
+        if is_batch_slot(&spec.name) {
+            out.push((i, build_slot(padded, task, spec)?));
+        }
+    }
+    Ok(out)
+}
+
+/// Is this input slot part of the per-step batch (vs params/opt state)?
+pub fn is_batch_slot(name: &str) -> bool {
+    name.starts_with("feat.")
+        || name.starts_with("ids.")
+        || name.starts_with("edge.")
+        || name.starts_with("root.")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::pad::{pad, PadSpec};
+    use crate::sampler::inmem::InMemorySampler;
+    use crate::sampler::spec::mag_sampling_spec_scaled;
+    use crate::synth::mag::{generate, MagConfig};
+    use std::sync::Arc;
+
+    fn make_padded() -> Padded {
+        let ds = generate(&MagConfig::tiny());
+        let store = Arc::new(ds.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+        let sampler = InMemorySampler::new(store, spec, 3).unwrap();
+        let graphs: Vec<_> = (0..4).map(|s| sampler.sample(s).unwrap()).collect();
+        let merged = crate::graph::batch::merge(&graphs).unwrap();
+        let padspec = PadSpec::fit(&graphs.iter().collect::<Vec<_>>(), 4, 2.0);
+        pad(&merged, &padspec).unwrap()
+    }
+
+    fn spec(name: &str, shape: Vec<usize>, dtype: &str) -> TensorSpec {
+        TensorSpec { name: name.into(), shape, dtype: dtype.into() }
+    }
+
+    #[test]
+    fn root_indices_are_component_starts() {
+        let p = make_padded();
+        let idx = root_indices(&p, "paper", 5).unwrap();
+        assert_eq!(idx[0], 0);
+        let sizes = &p.graph.node_set("paper").unwrap().sizes;
+        assert_eq!(idx[1], sizes[0] as i32);
+        assert_eq!(idx[2], (sizes[0] + sizes[1]) as i32);
+        // Padding slot points at the padding component start.
+        let pad_start: usize = sizes[..4].iter().sum();
+        assert_eq!(idx[4], pad_start as i32);
+    }
+
+    #[test]
+    fn root_labels_match_seed_labels() {
+        let ds = generate(&MagConfig::tiny());
+        let p = make_padded();
+        let labels_spec = spec("root.labels", vec![5], "i32");
+        let t = build_slot(&p, &RootTask::default(), &labels_spec).unwrap();
+        let HostTensor::I32(_, labels) = t else { panic!() };
+        // Roots are seeds 0..4 in order (no shuffling in make_padded).
+        let (_, seed_ids) = p.graph.context.feature("seed").unwrap().as_i64().unwrap();
+        for c in 0..4 {
+            assert_eq!(labels[c] as i64, ds.labels[seed_ids[c] as usize], "component {c}");
+        }
+    }
+
+    #[test]
+    fn mask_marks_real_components() {
+        let p = make_padded();
+        let t = build_slot(&p, &RootTask::default(), &spec("root.mask", vec![6], "f32")).unwrap();
+        let HostTensor::F32(_, mask) = t else { panic!() };
+        assert_eq!(mask, vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn edge_and_feat_slots() {
+        let p = make_padded();
+        let n_cites = p.graph.num_edges("cites").unwrap();
+        let t = build_slot(
+            &p,
+            &RootTask::default(),
+            &spec("edge.cites.src", vec![n_cites], "i32"),
+        )
+        .unwrap();
+        assert_eq!(t.len(), n_cites);
+        let n_paper = p.graph.num_nodes("paper").unwrap();
+        let t = build_slot(
+            &p,
+            &RootTask::default(),
+            &spec("feat.paper.feat", vec![n_paper, 16], "f32"),
+        )
+        .unwrap();
+        assert_eq!(t.len(), n_paper * 16);
+        let t = build_slot(
+            &p,
+            &RootTask::default(),
+            &spec("ids.institution", vec![p.graph.num_nodes("institution").unwrap()], "i32"),
+        )
+        .unwrap();
+        assert_eq!(t.dtype_name(), "i32");
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let p = make_padded();
+        let bad = spec("edge.cites.src", vec![99999], "i32");
+        assert!(build_slot(&p, &RootTask::default(), &bad).is_err());
+        let unknown = spec("bogus.slot", vec![1], "f32");
+        assert!(build_slot(&p, &RootTask::default(), &unknown).is_err());
+    }
+
+    #[test]
+    fn batch_slot_classification() {
+        assert!(is_batch_slot("feat.paper.feat"));
+        assert!(is_batch_slot("root.mask"));
+        assert!(is_batch_slot("edge.cites.src"));
+        assert!(is_batch_slot("ids.institution"));
+        assert!(!is_batch_slot("param.head.w"));
+        assert!(!is_batch_slot("adam_m.head.w"));
+        assert!(!is_batch_slot("step"));
+    }
+}

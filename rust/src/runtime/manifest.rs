@@ -1,0 +1,289 @@
+//! `artifacts/manifest.json` — the AOT calling convention.
+//!
+//! Written by `python/compile/aot.py`; consumed here so the Rust side
+//! never hard-codes a program signature. See DESIGN.md §AOT interface.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// One tensor slot (input or output) of a program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32" | "i64"
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One lowered program (init / train_step / eval_step / forward).
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ProgramSpec {
+    /// Input slots whose name starts with `prefix`, with their indices.
+    pub fn inputs_with_prefix(&self, prefix: &str) -> Vec<(usize, &TensorSpec)> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.name.starts_with(prefix))
+            .collect()
+    }
+}
+
+/// One model architecture's programs.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub arch: String,
+    pub hidden_dim: usize,
+    pub message_dim: usize,
+    pub num_layers: usize,
+    pub param_count: usize,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+impl ModelEntry {
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("model has no program {name:?}")))
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: Json,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "{}: {e} — run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let mut models = BTreeMap::new();
+        for (arch, entry) in v.get("models")?.as_obj()? {
+            let mut programs = BTreeMap::new();
+            for (pname, p) in entry.get("programs")?.as_obj()? {
+                let inputs = p
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = p
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                programs.insert(
+                    pname.clone(),
+                    ProgramSpec {
+                        file: p.get("file")?.as_str()?.to_string(),
+                        sha256: p
+                            .opt("sha256")
+                            .and_then(|s| s.as_str().ok())
+                            .unwrap_or("")
+                            .to_string(),
+                        inputs,
+                        outputs,
+                    },
+                );
+            }
+            models.insert(
+                arch.clone(),
+                ModelEntry {
+                    arch: entry.get("arch")?.as_str()?.to_string(),
+                    hidden_dim: entry.get("hidden_dim")?.as_usize()?,
+                    message_dim: entry.get("message_dim")?.as_usize()?,
+                    num_layers: entry.get("num_layers")?.as_usize()?,
+                    param_count: entry.get("param_count")?.as_usize()?,
+                    programs,
+                },
+            );
+        }
+        Ok(Manifest { config: v.get("config")?.clone(), models })
+    }
+
+    pub fn model(&self, arch: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(arch)
+            .ok_or_else(|| Error::Runtime(format!("manifest has no model {arch:?}")))
+    }
+
+    /// Paths in `config.pad` as a [`crate::graph::pad::PadSpec`].
+    pub fn pad_spec(&self) -> Result<crate::graph::pad::PadSpec> {
+        let pad = self.config.get("pad")?;
+        let mut node_caps = std::collections::BTreeMap::new();
+        for (k, v) in pad.get("node_caps")?.as_obj()? {
+            node_caps.insert(k.clone(), v.as_usize()?);
+        }
+        let mut edge_caps = std::collections::BTreeMap::new();
+        for (k, v) in pad.get("edge_caps")?.as_obj()? {
+            edge_caps.insert(k.clone(), v.as_usize()?);
+        }
+        Ok(crate::graph::pad::PadSpec {
+            node_caps,
+            edge_caps,
+            component_cap: pad.get("component_cap")?.as_usize()?,
+        })
+    }
+
+    /// The dataset config as a [`crate::synth::mag::MagConfig`].
+    pub fn mag_config(&self) -> Result<crate::synth::mag::MagConfig> {
+        let d = self.config.get("dataset")?;
+        Ok(crate::synth::mag::MagConfig {
+            num_papers: d.get("num_papers")?.as_usize()?,
+            num_authors: d.get("num_authors")?.as_usize()?,
+            num_institutions: d.get("num_institutions")?.as_usize()?,
+            num_fields: d.get("num_fields")?.as_usize()?,
+            num_classes: d.get("num_classes")?.as_usize()?,
+            num_communities: d.get("num_communities")?.as_usize()?,
+            feature_dim: d.get("feature_dim")?.as_usize()?,
+            mean_citations: d.get("mean_citations")?.as_f64()?,
+            mean_authors_per_paper: d.get("mean_authors_per_paper")?.as_f64()?,
+            mean_topics: d.get("mean_topics")?.as_f64()?,
+            community_coherence: d.get("community_coherence")?.as_f64()?,
+            label_coherence: d.get("label_coherence")?.as_f64()?,
+            feature_noise: d.get("feature_noise")?.as_f64()? as f32,
+            year_min: d.get("year_min")?.as_i64()?,
+            year_max: d.get("year_max")?.as_i64()?,
+            seed: d.get("seed")?.as_i64()? as u64,
+        })
+    }
+
+    /// Per-edge-set sampling sizes from `config.sampling.sizes`.
+    pub fn sampling_sizes(&self) -> Result<std::collections::BTreeMap<String, usize>> {
+        let s = self.config.get("sampling")?.get("sizes")?;
+        let mut out = std::collections::BTreeMap::new();
+        for (k, v) in s.as_obj()? {
+            out.insert(k.clone(), v.as_usize()?);
+        }
+        Ok(out)
+    }
+
+    pub fn batch_size(&self) -> Result<usize> {
+        self.config.get("batch_size")?.as_usize()
+    }
+
+    pub fn plan_seed(&self) -> Result<u64> {
+        Ok(self.config.get("sampling")?.get("plan_seed")?.as_i64()? as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {
+        "batch_size": 2,
+        "pad": {"node_caps": {"a": 4}, "edge_caps": {"e": 8}, "component_cap": 3},
+        "sampling": {"plan_seed": 42, "sizes": {"e": 4}}
+      },
+      "models": {
+        "mpnn": {
+          "arch": "mpnn", "hidden_dim": 8, "message_dim": 8, "num_layers": 1,
+          "param_count": 123,
+          "programs": {
+            "init": {"file": "x_init.hlo.txt", "inputs": [],
+                     "outputs": [{"name": "param.w", "shape": [2, 2], "dtype": "f32"}]},
+            "train_step": {"file": "x_train.hlo.txt",
+              "inputs": [{"name": "param.w", "shape": [2, 2], "dtype": "f32"},
+                         {"name": "step", "shape": [], "dtype": "i32"},
+                         {"name": "edge.e.src", "shape": [8], "dtype": "i32"}],
+              "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let model = m.model("mpnn").unwrap();
+        assert_eq!(model.param_count, 123);
+        let ts = model.program("train_step").unwrap();
+        assert_eq!(ts.inputs.len(), 3);
+        assert_eq!(ts.inputs[2].name, "edge.e.src");
+        assert_eq!(ts.inputs[2].shape, vec![8]);
+        assert_eq!(ts.outputs[0].dtype, "f32");
+        assert!(model.program("missing").is_err());
+        assert!(m.model("hgt").is_err());
+    }
+
+    #[test]
+    fn pad_spec_extraction() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let pad = m.pad_spec().unwrap();
+        assert_eq!(pad.node_caps["a"], 4);
+        assert_eq!(pad.edge_caps["e"], 8);
+        assert_eq!(pad.component_cap, 3);
+        assert_eq!(m.batch_size().unwrap(), 2);
+        assert_eq!(m.plan_seed().unwrap(), 42);
+        assert_eq!(m.sampling_sizes().unwrap()["e"], 4);
+    }
+
+    #[test]
+    fn prefix_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let ts = m.model("mpnn").unwrap().program("train_step").unwrap();
+        let params = ts.inputs_with_prefix("param.");
+        assert_eq!(params.len(), 1);
+        assert_eq!(params[0].0, 0);
+        assert_eq!(ts.inputs_with_prefix("edge.").len(), 1);
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // `make artifacts` not run yet
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let mpnn = m.model("mpnn").unwrap();
+        for prog in ["init", "train_step", "eval_step", "forward"] {
+            let p = mpnn.program(prog).unwrap();
+            assert!(dir.join(&p.file).exists(), "{}", p.file);
+        }
+        // Table 1 premise: mha bigger than mpnn.
+        let mha = m.model("mha").unwrap();
+        assert!(mha.param_count > 2 * mpnn.param_count);
+    }
+}

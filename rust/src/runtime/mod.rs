@@ -1,0 +1,265 @@
+//! AOT runtime: load `artifacts/*.hlo.txt` on the PJRT CPU client and
+//! execute them from the training/serving hot path.
+//!
+//! Python never runs here: [`manifest::Manifest`] (written once by
+//! `python/compile/aot.py`) tells us each program's file and its ordered
+//! input/output tensors; [`Program`] compiles the HLO text and executes
+//! it; [`batch`] marshals a padded GraphTensor batch into the `feat.*` /
+//! `ids.*` / `edge.*` / `root.*` argument slots.
+//!
+//! State handling: PJRT (via the `xla` crate, 0.1.6) returns program
+//! results as ONE tuple buffer, and exposes no buffer-level untuple, so
+//! model/optimizer state crosses each step as [`xla::Literal`]s:
+//! execute → fetch tuple → `decompose_tuple` → feed the pieces back in.
+//! On the CPU client this is a host-side memcpy per step (measured in
+//! EXPERIMENTS.md §Perf); the batch tensors are built fresh per step
+//! anyway.
+
+pub mod batch;
+pub mod manifest;
+
+use std::path::Path;
+
+use manifest::{ProgramSpec, TensorSpec};
+
+use crate::{Error, Result};
+
+/// Host-side tensor matching one manifest slot.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+    I64(Vec<usize>, Vec<i64>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(s, _) | HostTensor::I32(s, _) | HostTensor::I64(s, _) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(_, d) => d.len(),
+            HostTensor::I32(_, d) => d.len(),
+            HostTensor::I64(_, d) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            HostTensor::F32(..) => "f32",
+            HostTensor::I32(..) => "i32",
+            HostTensor::I64(..) => "i64",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(_, d) => Ok(d),
+            other => Err(Error::Runtime(format!("expected f32, got {}", other.dtype_name()))),
+        }
+    }
+
+    /// Check against a manifest slot.
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype_name() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+}
+
+/// The PJRT client (one per process).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Load + compile one program from an artifacts directory.
+    pub fn load_program(&self, dir: &Path, spec: &ProgramSpec) -> Result<Program> {
+        let path = dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| Error::Runtime(format!("{}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Program { exe, client: self.client.clone(), spec: spec.clone() })
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            HostTensor::F32(shape, data) => {
+                self.client.buffer_from_host_buffer::<f32>(data, shape, None)?
+            }
+            HostTensor::I32(shape, data) => {
+                self.client.buffer_from_host_buffer::<i32>(data, shape, None)?
+            }
+            HostTensor::I64(shape, data) => {
+                self.client.buffer_from_host_buffer::<i64>(data, shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+
+    /// Download a device buffer to the host.
+    pub fn download(&self, buf: &xla::PjRtBuffer) -> Result<HostTensor> {
+        let lit = buf.to_literal_sync()?;
+        literal_to_host(&lit)
+    }
+}
+
+pub fn literal_to_host(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostTensor::F32(dims, lit.to_vec::<f32>()?)),
+        xla::ElementType::S32 => Ok(HostTensor::I32(dims, lit.to_vec::<i32>()?)),
+        xla::ElementType::S64 => Ok(HostTensor::I64(dims, lit.to_vec::<i64>()?)),
+        other => Err(Error::Runtime(format!("unsupported literal type {other:?}"))),
+    }
+}
+
+/// One compiled AOT program.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    pub spec: ProgramSpec,
+}
+
+impl Program {
+    /// Execute with literal arguments; returns output literals in
+    /// manifest order (the lowered programs return one tuple, which is
+    /// decomposed here).
+    ///
+    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
+    /// (literal args): the crate's C shim `release()`s the input
+    /// buffers it creates per call and never frees them — ~state-size
+    /// leaked per step, which OOMed long training runs (§Perf). We
+    /// upload to caller-owned `PjRtBuffer`s (freed on drop) and call
+    /// `execute_b` instead.
+    pub fn execute_literals(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: {} args for {} input slots",
+                self.spec.file,
+                args.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|lit| self.client.buffer_from_host_literal(None, lit).map_err(Into::into))
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let mut out = self.exe.execute_b(&refs)?;
+        let buffers = out
+            .pop()
+            .ok_or_else(|| Error::Runtime("no execution outputs".into()))?;
+        self.untuple(buffers)
+    }
+
+    fn untuple(&self, buffers: Vec<xla::PjRtBuffer>) -> Result<Vec<xla::Literal>> {
+        if buffers.len() == 1 {
+            let mut lit = buffers[0].to_literal_sync()?;
+            let parts = if self.spec.outputs.len() == 1 {
+                // Still a 1-tuple (lowered with return_tuple=True).
+                lit.decompose_tuple().unwrap_or_else(|_| vec![lit])
+            } else {
+                lit.decompose_tuple()?
+            };
+            if parts.len() != self.spec.outputs.len() {
+                return Err(Error::Runtime(format!(
+                    "{}: {} outputs for {} output slots",
+                    self.spec.file,
+                    parts.len(),
+                    self.spec.outputs.len()
+                )));
+            }
+            return Ok(parts);
+        }
+        if buffers.len() != self.spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: {} outputs for {} output slots",
+                self.spec.file,
+                buffers.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        buffers.iter().map(|b| b.to_literal_sync().map_err(Into::into)).collect()
+    }
+
+    /// Execute with host tensors; validates against the manifest and
+    /// returns host tensors. Convenience for init/eval/tests.
+    pub fn execute_host(&self, _rt: &Runtime, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        for (i, (a, spec)) in args.iter().zip(&self.spec.inputs).enumerate() {
+            if !a.matches(spec) {
+                return Err(Error::Runtime(format!(
+                    "{}: arg {i} ({}) has dtype/shape {}{:?}, manifest wants {}{:?}",
+                    self.spec.file,
+                    spec.name,
+                    a.dtype_name(),
+                    a.shape(),
+                    spec.dtype,
+                    spec.shape
+                )));
+            }
+        }
+        let lits: Vec<xla::Literal> =
+            args.iter().map(host_to_literal).collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let outs = self.execute_literals(&refs)?;
+        outs.iter().map(literal_to_host).collect()
+    }
+
+    /// Index of a named input slot.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.spec
+            .inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| Error::Runtime(format!("{}: no input slot {name:?}", self.spec.file)))
+    }
+
+    /// Index of a named output slot.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.spec
+            .outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| Error::Runtime(format!("{}: no output slot {name:?}", self.spec.file)))
+    }
+}
+
+/// Convert a host tensor to an XLA literal.
+pub fn host_to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        HostTensor::F32(_, data) => xla::Literal::vec1(data).reshape(&dims)?,
+        HostTensor::I32(_, data) => xla::Literal::vec1(data).reshape(&dims)?,
+        HostTensor::I64(_, data) => xla::Literal::vec1(data).reshape(&dims)?,
+    };
+    Ok(lit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_spec_matching() {
+        let t = HostTensor::F32(vec![2, 3], vec![0.0; 6]);
+        let spec = TensorSpec { name: "x".into(), shape: vec![2, 3], dtype: "f32".into() };
+        assert!(t.matches(&spec));
+        let spec_i = TensorSpec { name: "x".into(), shape: vec![2, 3], dtype: "i32".into() };
+        assert!(!t.matches(&spec_i));
+        let spec_s = TensorSpec { name: "x".into(), shape: vec![6], dtype: "f32".into() };
+        assert!(!t.matches(&spec_s));
+    }
+}

@@ -1,0 +1,229 @@
+//! Distributed sampling — **Algorithm 1** (paper §6.1.1).
+//!
+//! ```text
+//! frontier_0 = Sample(S_0, E_p0)
+//! for i in 1..=p.steps: frontier_i = Sample(frontier, E_pi)
+//! edge_groups = frontier.GroupBy(sample_id)
+//! edge_groups = DeduplicateNodes(edge_groups)
+//! edges_with_features = lookup_features(edge_groups)
+//! G = create_graph_tensors(edges_with_features)
+//! ```
+//!
+//! [`sample_batch`] runs the plan **stage-wise over all seeds at once**
+//! against the sharded store: each sampling op joins the current
+//! frontier (a set of `(sample_id, node)` pairs) with one edge set, via
+//! per-shard adjacency RPCs. Transient shard failures (injected by
+//! [`crate::store::sharded::ShardedStore::with_failures`]) are retried
+//! with bounded attempts — the resilience property §7 contrasts with
+//! Graph-Learn. After expansion, edges are grouped by sample id, nodes
+//! deduplicated, features joined, and GraphTensors assembled — shared
+//! tail code with the in-memory sampler, which the equivalence tests
+//! exploit.
+
+use std::collections::BTreeMap;
+
+use super::inmem::{edge_rng, select_neighbors};
+use super::spec::SamplingSpec;
+use super::{assemble_subgraph, validate_spec, EdgeAcc};
+use crate::graph::GraphTensor;
+use crate::store::sharded::ShardedStore;
+use crate::{Error, Result};
+
+/// Retry policy for shard RPCs.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    pub max_attempts: usize,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 8 }
+    }
+}
+
+impl RetryPolicy {
+    /// Run `f`, retrying transient failures up to the limit.
+    pub fn run<T, F: FnMut() -> Result<T>>(&self, mut f: F) -> Result<T> {
+        let mut last = None;
+        for _ in 0..self.max_attempts.max(1) {
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(Error::Sampler(format!(
+            "RPC failed after {} attempts: {}",
+            self.max_attempts,
+            last.unwrap()
+        )))
+    }
+}
+
+/// Counters reported by a batch execution (per Fig. 4 pipeline stage).
+#[derive(Debug, Default, Clone)]
+pub struct SampleStats {
+    pub seeds: usize,
+    pub frontier_entries: usize,
+    pub adjacency_rpcs: usize,
+    pub retried_rpcs: usize,
+    pub subgraphs: usize,
+}
+
+/// Execute the plan for a batch of seeds over the sharded store.
+///
+/// Stage-wise (all samples advance together, as the distributed join
+/// does), deterministic per `plan_seed` regardless of scheduling.
+pub fn sample_batch(
+    store: &ShardedStore,
+    spec: &SamplingSpec,
+    plan_seed: u64,
+    seeds: &[u32],
+    retry: &RetryPolicy,
+) -> Result<(Vec<GraphTensor>, SampleStats)> {
+    let schema = &store.store().schema;
+    validate_spec(schema, spec)?;
+    let mut stats = SampleStats { seeds: seeds.len(), ..Default::default() };
+
+    // produced[op_name][sample_idx] = nodes, first-seen order.
+    let mut produced: BTreeMap<&str, Vec<Vec<u32>>> = BTreeMap::new();
+    produced.insert(spec.seed_op.as_str(), seeds.iter().map(|&s| vec![s]).collect());
+    // Per-sample edge accumulators.
+    let mut edges: Vec<EdgeAcc> = seeds.iter().map(|_| EdgeAcc::new()).collect();
+
+    for (op_idx, op) in spec.ops.iter().enumerate() {
+        // Build the frontier for this op: per sample, the deduped union
+        // of input-op outputs (first-occurrence order → deterministic).
+        let mut frontier: Vec<Vec<u32>> = vec![Vec::new(); seeds.len()];
+        for (k, f) in frontier.iter_mut().enumerate() {
+            let mut seen = std::collections::HashSet::new();
+            for input in &op.input_ops {
+                if let Some(per_sample) = produced.get(input.as_str()) {
+                    for &n in &per_sample[k] {
+                        if seen.insert(n) {
+                            f.push(n);
+                        }
+                    }
+                }
+            }
+            stats.frontier_entries += f.len();
+        }
+
+        // Distributed Sample(): join frontier with the edge set.
+        let mut out: Vec<Vec<u32>> = vec![Vec::new(); seeds.len()];
+        for (k, nodes) in frontier.iter().enumerate() {
+            let mut out_seen = std::collections::HashSet::new();
+            let acc = edges[k].entry(op.edge_set.clone()).or_default();
+            for &node in nodes {
+                stats.adjacency_rpcs += 1;
+                let mut attempts = 0usize;
+                let nbrs = retry.run(|| {
+                    attempts += 1;
+                    store.neighbors(&op.edge_set, node).map(|n| n.to_vec())
+                })?;
+                stats.retried_rpcs += attempts - 1;
+                let mut rng = edge_rng(plan_seed, seeds[k], op_idx, node);
+                for t in select_neighbors(&nbrs, op.sample_size, op.strategy, &mut rng) {
+                    acc.push((node, t));
+                    if out_seen.insert(t) {
+                        out[k].push(t);
+                    }
+                }
+            }
+        }
+        produced.insert(op.op_name.as_str(), out);
+    }
+
+    // GroupBy(sample_id) is implicit in the per-sample accumulators;
+    // dedup + feature join + tensor creation per sample.
+    let mut graphs = Vec::with_capacity(seeds.len());
+    for (k, &seed) in seeds.iter().enumerate() {
+        let g = assemble_subgraph(schema, &spec.seed_node_set, seed, &edges[k], |set, ids| {
+            retry.run(|| store.lookup_features(set, ids))
+        })?;
+        graphs.push(g);
+    }
+    stats.subgraphs = graphs.len();
+    Ok((graphs, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::inmem::InMemorySampler;
+    use crate::sampler::spec::mag_sampling_spec_scaled;
+    use crate::store::GraphStore;
+    use crate::synth::mag::{generate, MagConfig};
+    use std::sync::Arc;
+
+    fn setup() -> (Arc<GraphStore>, SamplingSpec) {
+        let ds = generate(&MagConfig::tiny());
+        let spec = mag_sampling_spec_scaled(&ds.store.schema, 0.25).unwrap();
+        (Arc::new(ds.store), spec)
+    }
+
+    #[test]
+    fn equivalent_to_inmem_sampler() {
+        // The cross-implementation invariant: Algorithm 1 over shards ==
+        // single-threaded in-memory execution, bit for bit.
+        let (store, spec) = setup();
+        let inmem = InMemorySampler::new(store.clone(), spec.clone(), 42).unwrap();
+        let sharded = ShardedStore::new(store.clone(), 4);
+        let seeds: Vec<u32> = (0..30).collect();
+        let (dist, stats) =
+            sample_batch(&sharded, &spec, 42, &seeds, &RetryPolicy::default()).unwrap();
+        assert_eq!(dist.len(), 30);
+        assert_eq!(stats.subgraphs, 30);
+        for (k, &s) in seeds.iter().enumerate() {
+            assert_eq!(dist[k], inmem.sample(s).unwrap(), "seed {s}");
+        }
+    }
+
+    #[test]
+    fn resilient_to_transient_failures() {
+        let (store, spec) = setup();
+        let reliable = ShardedStore::new(store.clone(), 4);
+        let flaky = ShardedStore::new(store.clone(), 4).with_failures(0.3, 999);
+        let seeds: Vec<u32> = (0..20).collect();
+        let (want, _) =
+            sample_batch(&reliable, &spec, 7, &seeds, &RetryPolicy::default()).unwrap();
+        let (got, stats) = sample_batch(&flaky, &spec, 7, &seeds, &RetryPolicy { max_attempts: 64 })
+            .unwrap();
+        assert_eq!(got, want, "results identical despite 30% transient failures");
+        assert!(stats.retried_rpcs > 0, "failures actually happened and were retried");
+    }
+
+    #[test]
+    fn fails_cleanly_when_retries_exhausted() {
+        let (store, spec) = setup();
+        // 100% failure: every request fails, retries can't save it.
+        let dead = ShardedStore::new(store, 2).with_failures(1.0, 5);
+        let err = sample_batch(&dead, &spec, 7, &[0, 1], &RetryPolicy { max_attempts: 3 });
+        assert!(err.is_err());
+        let msg = err.err().unwrap().to_string();
+        assert!(msg.contains("after 3 attempts"), "{msg}");
+    }
+
+    #[test]
+    fn stats_counted() {
+        let (store, spec) = setup();
+        let sharded = ShardedStore::new(store, 4);
+        let seeds: Vec<u32> = (0..10).collect();
+        let (_, stats) = sample_batch(&sharded, &spec, 1, &seeds, &RetryPolicy::default()).unwrap();
+        assert_eq!(stats.seeds, 10);
+        assert!(stats.adjacency_rpcs >= 10, "at least one expansion per seed");
+        assert!(stats.frontier_entries >= stats.seeds);
+        let (adj, feat, _) = sharded.total_requests();
+        assert_eq!(adj as usize, stats.adjacency_rpcs);
+        assert!(feat > 0);
+    }
+
+    #[test]
+    fn empty_seed_batch() {
+        let (store, spec) = setup();
+        let sharded = ShardedStore::new(store, 2);
+        let (graphs, stats) =
+            sample_batch(&sharded, &spec, 1, &[], &RetryPolicy::default()).unwrap();
+        assert!(graphs.is_empty());
+        assert_eq!(stats.subgraphs, 0);
+    }
+}

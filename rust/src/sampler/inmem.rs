@@ -1,0 +1,273 @@
+//! In-memory sampling (paper §6.1.2).
+//!
+//! For datasets that fit on one machine, the sampler executes the plan
+//! directly over the [`GraphStore`] CSR, generating rooted GraphTensors
+//! on the fly (they are "typically not persisted" — the pipeline
+//! consumes them on demand).
+//!
+//! **Scheduling-independent determinism**: neighbor selection for
+//! (seed, op, node) draws from an RNG derived as
+//! `mix(plan_seed, seed, op_index, node)`, so the in-memory sampler,
+//! the distributed sampler and any worker interleaving all produce
+//! bit-identical subgraphs for the same plan seed — asserted by the
+//! cross-implementation equivalence tests in `distributed.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::spec::{SamplingSpec, Strategy};
+use super::{assemble_subgraph, validate_spec, EdgeAcc};
+use crate::graph::GraphTensor;
+use crate::store::GraphStore;
+use crate::util::rng::{mix64, Rng};
+use crate::Result;
+
+/// Derive the per-(seed, op, node) sampling RNG. Shared with the
+/// distributed executor.
+pub fn edge_rng(plan_seed: u64, seed_node: u32, op_index: usize, node: u32) -> Rng {
+    Rng::new(mix64(mix64(plan_seed, seed_node as u64), mix64(op_index as u64, node as u64)))
+}
+
+/// Select up to `k` neighbors under a strategy. Shared with the
+/// distributed executor.
+pub fn select_neighbors(
+    neighbors: &[u32],
+    k: usize,
+    strategy: Strategy,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    if neighbors.len() <= k {
+        return neighbors.to_vec();
+    }
+    match strategy {
+        Strategy::TopK => neighbors[..k].to_vec(),
+        Strategy::RandomUniform => {
+            rng.sample_distinct(neighbors.len(), k).into_iter().map(|i| neighbors[i]).collect()
+        }
+    }
+}
+
+/// Execute the plan for one seed against a CSR-neighbor closure.
+///
+/// `neighbors(op_index, edge_set, node)` returns the out-neighbors; the
+/// in-memory path reads the store directly, the distributed path issues
+/// shard RPCs with retries.
+pub fn expand_one<F>(
+    spec: &SamplingSpec,
+    plan_seed: u64,
+    seed: u32,
+    mut neighbors: F,
+) -> Result<EdgeAcc>
+where
+    F: FnMut(usize, &str, u32) -> Result<Vec<u32>>,
+{
+    // op name -> nodes produced (in first-seen order, deduped).
+    let mut produced: BTreeMap<&str, Vec<u32>> = BTreeMap::new();
+    produced.insert(spec.seed_op.as_str(), vec![seed]);
+    let mut edges = EdgeAcc::new();
+    for (op_idx, op) in spec.ops.iter().enumerate() {
+        // Union of the input frontiers, first-occurrence order.
+        let mut inputs = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for input in &op.input_ops {
+            if let Some(nodes) = produced.get(input.as_str()) {
+                for &n in nodes {
+                    if seen.insert(n) {
+                        inputs.push(n);
+                    }
+                }
+            }
+        }
+        let mut out_nodes = Vec::new();
+        let mut out_seen = std::collections::HashSet::new();
+        let acc = edges.entry(op.edge_set.clone()).or_default();
+        for &node in &inputs {
+            let nbrs = neighbors(op_idx, &op.edge_set, node)?;
+            let mut rng = edge_rng(plan_seed, seed, op_idx, node);
+            for t in select_neighbors(&nbrs, op.sample_size, op.strategy, &mut rng) {
+                acc.push((node, t));
+                if out_seen.insert(t) {
+                    out_nodes.push(t);
+                }
+            }
+        }
+        produced.insert(op.op_name.as_str(), out_nodes);
+    }
+    Ok(edges)
+}
+
+/// The §6.1.2 sampler.
+pub struct InMemorySampler {
+    store: Arc<GraphStore>,
+    spec: SamplingSpec,
+    plan_seed: u64,
+}
+
+impl InMemorySampler {
+    pub fn new(store: Arc<GraphStore>, spec: SamplingSpec, plan_seed: u64) -> Result<InMemorySampler> {
+        validate_spec(&store.schema, &spec)?;
+        Ok(InMemorySampler { store, spec, plan_seed })
+    }
+
+    pub fn spec(&self) -> &SamplingSpec {
+        &self.spec
+    }
+
+    /// Sample the rooted subgraph for one seed node.
+    pub fn sample(&self, seed: u32) -> Result<GraphTensor> {
+        let edges = expand_one(&self.spec, self.plan_seed, seed, |_, edge_set, node| {
+            Ok(self.store.edge_column(edge_set)?.neighbors(node).to_vec())
+        })?;
+        assemble_subgraph(&self.store.schema, &self.spec.seed_node_set, seed, &edges, |set, ids| {
+            Ok(self.store.node_column(set)?.gather(ids))
+        })
+    }
+
+    /// Sample many seeds (an iterator adapter for the pipeline).
+    pub fn sample_many<'a>(
+        &'a self,
+        seeds: &'a [u32],
+    ) -> impl Iterator<Item = Result<GraphTensor>> + 'a {
+        seeds.iter().map(move |&s| self.sample(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::spec::{mag_sampling_spec_scaled, SamplingSpecBuilder};
+    use crate::synth::mag::{generate, MagConfig};
+    use crate::util::proptest::check;
+
+    fn setup() -> (Arc<GraphStore>, SamplingSpec) {
+        let ds = generate(&MagConfig::tiny());
+        let spec = mag_sampling_spec_scaled(&ds.store.schema, 0.25).unwrap();
+        (Arc::new(ds.store), spec)
+    }
+
+    #[test]
+    fn sample_produces_rooted_subgraph() {
+        let (store, spec) = setup();
+        let s = InMemorySampler::new(store.clone(), spec, 42).unwrap();
+        let g = s.sample(0).unwrap();
+        g.validate().unwrap();
+        let (_, ids) = g.node_set("paper").unwrap().feature("#id").unwrap().as_i64().unwrap();
+        assert_eq!(ids[0], 0, "seed first");
+        assert!(g.num_nodes("paper").unwrap() >= 1);
+        // Features came along.
+        let (dims, _) = g.node_set("paper").unwrap().feature("feat").unwrap().as_f32().unwrap();
+        assert_eq!(dims, &[16]);
+    }
+
+    #[test]
+    fn deterministic_per_plan_seed() {
+        let (store, spec) = setup();
+        let a = InMemorySampler::new(store.clone(), spec.clone(), 7).unwrap();
+        let b = InMemorySampler::new(store.clone(), spec.clone(), 7).unwrap();
+        let c = InMemorySampler::new(store, spec, 8).unwrap();
+        for seed in [0u32, 5, 50] {
+            assert_eq!(a.sample(seed).unwrap(), b.sample(seed).unwrap());
+        }
+        // Different plan seed gives (almost surely) different subgraphs
+        // for a node with enough neighbors; just check not all equal.
+        let same = (0..20u32)
+            .filter(|&s| a.sample(s).unwrap() == c.sample(s).unwrap())
+            .count();
+        assert!(same < 20);
+    }
+
+    #[test]
+    fn respects_sample_sizes() {
+        let (store, _) = setup();
+        let b = SamplingSpecBuilder::new(&store.schema, Strategy::RandomUniform);
+        let seed = b.seed("paper").unwrap();
+        let _cited = b.sample(&seed, 3, "cites").unwrap();
+        let spec = b.build().unwrap();
+        let s = InMemorySampler::new(store.clone(), spec, 1).unwrap();
+        for seed_node in 0..60u32 {
+            let g = s.sample(seed_node).unwrap();
+            let n_edges = g.num_edges("cites").unwrap();
+            assert!(n_edges <= 3, "at most k edges from the seed");
+            let deg = store.edge_column("cites").unwrap().out_degree(seed_node);
+            assert_eq!(n_edges, deg.min(3), "exactly min(degree, k) — no replacement");
+        }
+    }
+
+    #[test]
+    fn topk_is_prefix_of_adjacency() {
+        let (store, _) = setup();
+        let b = SamplingSpecBuilder::new(&store.schema, Strategy::TopK);
+        let seed = b.seed("paper").unwrap();
+        let _ = b.sample(&seed, 2, "cites").unwrap();
+        let spec = b.build().unwrap();
+        let s = InMemorySampler::new(store.clone(), spec, 1).unwrap();
+        for seed_node in 0..40u32 {
+            let g = s.sample(seed_node).unwrap();
+            let want: Vec<i64> = store
+                .edge_column("cites")
+                .unwrap()
+                .neighbors(seed_node)
+                .iter()
+                .take(2)
+                .map(|&x| x as i64)
+                .collect();
+            let es = g.edge_set("cites").unwrap();
+            let (_, pid) = g.node_set("paper").unwrap().feature("#id").unwrap().as_i64().unwrap();
+            let got: Vec<i64> =
+                es.adjacency.target.iter().map(|&t| pid[t as usize]).collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn prop_subgraph_nodes_bounded_by_plan() {
+        let (store, spec) = setup();
+        let bound = spec.max_nodes_per_seed();
+        let s = InMemorySampler::new(store.clone(), spec, 3).unwrap();
+        check("subgraph ≤ plan bound", 30, |rng| {
+            let seed = rng.uniform(120) as u32;
+            let g = s.sample(seed).unwrap();
+            let total: usize =
+                g.node_sets.keys().map(|k| g.num_nodes(k).unwrap()).sum();
+            assert!(total <= bound + 200, "nodes {total} vs bound {bound}");
+            g.validate().unwrap();
+        });
+    }
+
+    #[test]
+    fn prop_all_edges_reference_sampled_nodes() {
+        // assemble_subgraph validation covers index ranges; here check
+        // that original-id endpoints really are store neighbors.
+        let (store, spec) = setup();
+        let s = InMemorySampler::new(store.clone(), spec, 9).unwrap();
+        check("sampled edges exist in store", 20, |rng| {
+            let seed = rng.uniform(120) as u32;
+            let g = s.sample(seed).unwrap();
+            for (name, es) in &g.edge_sets {
+                let ec = store.edge_column(name).unwrap();
+                let (_, src_ids) = g
+                    .node_set(&es.adjacency.source_set)
+                    .unwrap()
+                    .feature("#id")
+                    .unwrap()
+                    .as_i64()
+                    .unwrap();
+                let (_, tgt_ids) = g
+                    .node_set(&es.adjacency.target_set)
+                    .unwrap()
+                    .feature("#id")
+                    .unwrap()
+                    .as_i64()
+                    .unwrap();
+                for e in 0..es.total() {
+                    let s_orig = src_ids[es.adjacency.source[e] as usize] as u32;
+                    let t_orig = tgt_ids[es.adjacency.target[e] as usize] as u32;
+                    assert!(
+                        ec.neighbors(s_orig).contains(&t_orig),
+                        "edge {name} {s_orig}->{t_orig} not in store"
+                    );
+                }
+            }
+        });
+    }
+}

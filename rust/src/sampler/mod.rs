@@ -1,0 +1,215 @@
+//! Rooted-subgraph sampling (paper §6.1, §8.2).
+//!
+//! A [`spec::SamplingSpec`] describes which edge sets to expand through,
+//! how many neighbors to keep, and with what strategy — built fluently
+//! with [`spec::SamplingSpecBuilder`] exactly as Figure 6 does. The spec
+//! compiles to the op-plan of appendix A.6.2 (`SEED->paper`,
+//! `paper->paper`, `(paper->paper|SEED->paper)->author`, …).
+//!
+//! Two executors share the plan semantics:
+//! * [`inmem::InMemorySampler`] — the §6.1.2 medium-scale path: plan
+//!   execution over the whole [`crate::store::GraphStore`] on one
+//!   thread, generating GraphTensors on demand.
+//! * [`distributed`] — the §6.1.1 large-scale path: **Algorithm 1**,
+//!   stage-wise frontier expansion over the sharded store with
+//!   group-by-sample-id, node dedup, feature join, and GraphTensor
+//!   creation, driven by the [`crate::coordinator`] leader/worker fleet.
+
+pub mod distributed;
+pub mod inmem;
+pub mod spec;
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};
+use crate::{Error, Result};
+
+/// Edges collected for one sample during plan execution, keyed by edge
+/// set: (source original id, target original id).
+pub type EdgeAcc = BTreeMap<String, Vec<(u32, u32)>>;
+
+/// Assemble a rooted GraphTensor from accumulated edges.
+///
+/// This is the `DeduplicateNodes` + `lookup_features` +
+/// `create_graph_tensors` tail of Algorithm 1, shared by both samplers:
+/// * node ids are deduplicated per node set (the seed is always index 0
+///   of the seed node set);
+/// * features are fetched via `lookup` (store gather or sharded RPC);
+/// * every node set gets an `"#id"` i64 feature with original ids
+///   (A.6.1's convention), so embedding-table models can key on them;
+/// * context records the `"seed"` id.
+pub fn assemble_subgraph<F>(
+    schema: &crate::schema::GraphSchema,
+    seed_set: &str,
+    seed: u32,
+    edges: &EdgeAcc,
+    mut lookup: F,
+) -> Result<GraphTensor>
+where
+    F: FnMut(&str, &[u32]) -> Result<BTreeMap<String, Feature>>,
+{
+    // Dedup nodes per set, seed first.
+    let mut node_ids: BTreeMap<String, Vec<u32>> = BTreeMap::new();
+    let mut node_index: BTreeMap<String, BTreeMap<u32, u32>> = BTreeMap::new();
+    {
+        let ids = node_ids.entry(seed_set.to_string()).or_default();
+        ids.push(seed);
+        node_index.entry(seed_set.to_string()).or_default().insert(seed, 0);
+    }
+    let intern = |set: &str, id: u32, ids: &mut BTreeMap<String, Vec<u32>>, idx: &mut BTreeMap<String, BTreeMap<u32, u32>>| -> u32 {
+        let index = idx.entry(set.to_string()).or_default();
+        if let Some(&i) = index.get(&id) {
+            return i;
+        }
+        let list = ids.entry(set.to_string()).or_default();
+        let i = list.len() as u32;
+        list.push(id);
+        index.insert(id, i);
+        i
+    };
+
+    // Local edge lists with interned indices, dedup per edge set.
+    let mut local_edges: BTreeMap<String, (Vec<u32>, Vec<u32>)> = BTreeMap::new();
+    for (edge_set, pairs) in edges {
+        let es_spec = schema.edge_set(edge_set)?;
+        let mut seen = std::collections::HashSet::new();
+        let (src_list, tgt_list) = local_edges.entry(edge_set.clone()).or_default();
+        for &(s, t) in pairs {
+            if !seen.insert((s, t)) {
+                continue; // duplicate edge from overlapping ops
+            }
+            let si = intern(&es_spec.source, s, &mut node_ids, &mut node_index);
+            let ti = intern(&es_spec.target, t, &mut node_ids, &mut node_index);
+            src_list.push(si);
+            tgt_list.push(ti);
+        }
+    }
+
+    // Every node set in the schema appears in the output (possibly
+    // empty), so downstream batching sees a uniform structure.
+    let mut node_sets = BTreeMap::new();
+    for (set_name, _) in &schema.node_sets {
+        let ids = node_ids.get(set_name).cloned().unwrap_or_default();
+        let mut ns = NodeSet::new(vec![ids.len()]);
+        ns.features = lookup(set_name, &ids)?;
+        ns.features
+            .insert("#id".into(), Feature::i64_vec(ids.iter().map(|&i| i as i64).collect()));
+        node_sets.insert(set_name.clone(), ns);
+    }
+    let mut edge_sets = BTreeMap::new();
+    for (set_name, spec) in &schema.edge_sets {
+        let (source, target) = local_edges.remove(set_name).unwrap_or_default();
+        edge_sets.insert(
+            set_name.clone(),
+            EdgeSet::new(
+                vec![source.len()],
+                Adjacency {
+                    source_set: spec.source.clone(),
+                    target_set: spec.target.clone(),
+                    source,
+                    target,
+                },
+            ),
+        );
+    }
+    let context = Context::default().with_feature("seed", Feature::i64_vec(vec![seed as i64]));
+    let g = GraphTensor::from_pieces(context, node_sets, edge_sets)?;
+    Ok(g)
+}
+
+/// Shared validation: the sampling spec's edge sets must exist in the
+/// schema and chain compatibly (op inputs produce the op's source set).
+pub fn validate_spec(
+    schema: &crate::schema::GraphSchema,
+    spec: &spec::SamplingSpec,
+) -> Result<()> {
+    if !schema.node_sets.contains_key(&spec.seed_node_set) {
+        return Err(Error::Sampler(format!(
+            "seed node set {:?} not in schema",
+            spec.seed_node_set
+        )));
+    }
+    // op name -> node set produced
+    let mut produces: BTreeMap<&str, &str> = BTreeMap::new();
+    produces.insert(spec.seed_op.as_str(), spec.seed_node_set.as_str());
+    for op in &spec.ops {
+        let es = schema
+            .edge_set(&op.edge_set)
+            .map_err(|_| Error::Sampler(format!("edge set {:?} not in schema", op.edge_set)))?;
+        for input in &op.input_ops {
+            let Some(&set) = produces.get(input.as_str()) else {
+                return Err(Error::Sampler(format!(
+                    "op {:?} references unknown input {:?}",
+                    op.op_name, input
+                )));
+            };
+            if set != es.source {
+                return Err(Error::Sampler(format!(
+                    "op {:?}: input {input:?} yields {set:?} but edge set {:?} starts at {:?}",
+                    op.op_name, op.edge_set, es.source
+                )));
+            }
+        }
+        if op.sample_size == 0 {
+            return Err(Error::Sampler(format!("op {:?}: sample_size 0", op.op_name)));
+        }
+        produces.insert(op.op_name.as_str(), es.target.as_str());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::mag::{generate, mag_schema, MagConfig};
+
+    #[test]
+    fn assemble_minimal_subgraph() {
+        let cfg = MagConfig::tiny();
+        let ds = generate(&cfg);
+        let schema = mag_schema(&cfg);
+        let mut edges = EdgeAcc::new();
+        edges.insert("cites".into(), vec![(0, 1), (0, 2), (0, 1)]); // dup edge
+        let g = assemble_subgraph(&schema, "paper", 0, &edges, |set, ids| {
+            Ok(ds.store.node_column(set).unwrap().gather(ids))
+        })
+        .unwrap();
+        assert_eq!(g.num_nodes("paper").unwrap(), 3);
+        assert_eq!(g.num_edges("cites").unwrap(), 2, "duplicate edge removed");
+        // Seed is node 0.
+        let ids = g.node_set("paper").unwrap().feature("#id").unwrap();
+        let (_, id_vals) = ids.as_i64().unwrap();
+        assert_eq!(id_vals[0], 0);
+        // Seed in context.
+        let (_, s) = g.context.feature("seed").unwrap().as_i64().unwrap();
+        assert_eq!(s, &[0]);
+        // All schema sets present even if empty.
+        assert_eq!(g.num_nodes("institution").unwrap(), 0);
+        assert_eq!(g.num_edges("writes").unwrap(), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn assemble_preserves_edge_endpoints() {
+        let cfg = MagConfig::tiny();
+        let ds = generate(&cfg);
+        let schema = mag_schema(&cfg);
+        let mut edges = EdgeAcc::new();
+        edges.insert("written".into(), vec![(5, 7), (5, 9)]);
+        edges.insert("affiliated_with".into(), vec![(7, 1), (9, 1)]);
+        let g = assemble_subgraph(&schema, "paper", 5, &edges, |set, ids| {
+            Ok(ds.store.node_column(set).unwrap().gather(ids))
+        })
+        .unwrap();
+        assert_eq!(g.num_nodes("paper").unwrap(), 1);
+        assert_eq!(g.num_nodes("author").unwrap(), 2);
+        assert_eq!(g.num_nodes("institution").unwrap(), 1);
+        // written edges go paper(0) -> authors(0,1)
+        let es = g.edge_set("written").unwrap();
+        assert_eq!(es.adjacency.source, vec![0, 0]);
+        assert_eq!(es.adjacency.target, vec![0, 1]);
+        // #id features carry original ids for embedding lookup.
+        let (_, aid) = g.node_set("author").unwrap().feature("#id").unwrap().as_i64().unwrap();
+        assert_eq!(aid, &[7, 9]);
+    }
+}

@@ -1,0 +1,401 @@
+//! `SamplingSpecBuilder` (paper §8.2, Figure 6, appendix A.6.2).
+//!
+//! The builder produces a [`SamplingSpec`]: a seed op plus a DAG of
+//! sampling ops, each naming its input ops, the edge set to expand
+//! through, a sample size and a strategy. Op names follow the paper's
+//! generated plan: `SEED->paper`, then `srcset->tgtset` for single-input
+//! ops and `(in1|in2)->tgtset` for joins (A.6.2), with `#k` suffixes to
+//! disambiguate repeats.
+
+use crate::schema::GraphSchema;
+use crate::util::json::{obj, str_arr, Json};
+use crate::{Error, Result};
+
+/// Neighbor sampling strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Uniform without replacement (the paper's RANDOM_UNIFORM).
+    RandomUniform,
+    /// Deterministic first-k by adjacency order (reproducible smoke
+    /// tests; also how "top-k by stored rank" pipelines behave).
+    TopK,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::RandomUniform => "RANDOM_UNIFORM",
+            Strategy::TopK => "TOP_K",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Strategy> {
+        match s {
+            "RANDOM_UNIFORM" => Ok(Strategy::RandomUniform),
+            "TOP_K" => Ok(Strategy::TopK),
+            other => Err(Error::Sampler(format!("unknown strategy {other:?}"))),
+        }
+    }
+}
+
+/// One sampling op (A.6.2's `sampling_ops` entry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingOp {
+    pub op_name: String,
+    pub input_ops: Vec<String>,
+    pub edge_set: String,
+    pub sample_size: usize,
+    pub strategy: Strategy,
+}
+
+/// The full sampling plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingSpec {
+    pub seed_op: String,
+    pub seed_node_set: String,
+    /// Topologically ordered (builder emits them in creation order).
+    pub ops: Vec<SamplingOp>,
+}
+
+impl SamplingSpec {
+    /// Serialize to JSON (the protobuf substitute).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "seed_op",
+                obj(vec![
+                    ("op_name", Json::Str(self.seed_op.clone())),
+                    ("node_set_name", Json::Str(self.seed_node_set.clone())),
+                ]),
+            ),
+            (
+                "sampling_ops",
+                Json::Arr(
+                    self.ops
+                        .iter()
+                        .map(|op| {
+                            obj(vec![
+                                ("op_name", Json::Str(op.op_name.clone())),
+                                ("input_op_names", str_arr(&op.input_ops)),
+                                ("edge_set_name", Json::Str(op.edge_set.clone())),
+                                ("sample_size", Json::Int(op.sample_size as i64)),
+                                ("strategy", Json::Str(op.strategy.name().into())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SamplingSpec> {
+        let seed = v.get("seed_op")?;
+        let mut ops = Vec::new();
+        for op in v.get("sampling_ops")?.as_arr()? {
+            ops.push(SamplingOp {
+                op_name: op.get("op_name")?.as_str()?.to_string(),
+                input_ops: op
+                    .get("input_op_names")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_str().map(|x| x.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+                edge_set: op.get("edge_set_name")?.as_str()?.to_string(),
+                sample_size: op.get("sample_size")?.as_usize()?,
+                strategy: Strategy::from_name(op.get("strategy")?.as_str()?)?,
+            });
+        }
+        Ok(SamplingSpec {
+            seed_op: seed.get("op_name")?.as_str()?.to_string(),
+            seed_node_set: seed.get("node_set_name")?.as_str()?.to_string(),
+            ops,
+        })
+    }
+
+    /// Total fan-out upper bound per seed (product along the widest
+    /// path) — used by PadSpec derivation heuristics.
+    pub fn max_nodes_per_seed(&self) -> usize {
+        // Upper bound: each op contributes |inputs' bound| × sample_size.
+        use std::collections::BTreeMap;
+        let mut bound: BTreeMap<&str, usize> = BTreeMap::new();
+        bound.insert(self.seed_op.as_str(), 1);
+        let mut total = 1;
+        for op in &self.ops {
+            let in_bound: usize = op.input_ops.iter().map(|i| bound.get(i.as_str()).copied().unwrap_or(1)).sum();
+            let produced = in_bound * op.sample_size;
+            bound.insert(op.op_name.as_str(), produced);
+            total += produced;
+        }
+        total
+    }
+}
+
+/// A handle to one or more already-created ops, as returned by
+/// `seed()` / `sample()` / `join()` — mirrors Figure 6's fluent API.
+#[derive(Debug, Clone)]
+pub struct OpHandle {
+    /// Ops whose outputs this handle denotes.
+    op_names: Vec<String>,
+    /// Node set those ops produce.
+    node_set: String,
+}
+
+/// Fluent builder for [`SamplingSpec`].
+pub struct SamplingSpecBuilder {
+    schema: GraphSchema,
+    default_strategy: Strategy,
+    state: std::cell::RefCell<BuilderState>,
+}
+
+struct BuilderState {
+    seed_op: Option<(String, String)>,
+    ops: Vec<SamplingOp>,
+    used_names: std::collections::HashSet<String>,
+}
+
+impl SamplingSpecBuilder {
+    pub fn new(schema: &GraphSchema, default_strategy: Strategy) -> SamplingSpecBuilder {
+        SamplingSpecBuilder {
+            schema: schema.clone(),
+            default_strategy,
+            state: std::cell::RefCell::new(BuilderState {
+                seed_op: None,
+                ops: Vec::new(),
+                used_names: std::collections::HashSet::new(),
+            }),
+        }
+    }
+
+    /// Declare the seed node set ("Each paper node is a seed…").
+    pub fn seed(&self, node_set: &str) -> Result<OpHandle> {
+        self.schema.node_set(node_set)?;
+        let name = format!("SEED->{node_set}");
+        let mut st = self.state.borrow_mut();
+        if st.seed_op.is_some() {
+            return Err(Error::Sampler("seed() called twice".into()));
+        }
+        st.seed_op = Some((name.clone(), node_set.to_string()));
+        st.used_names.insert(name.clone());
+        Ok(OpHandle { op_names: vec![name], node_set: node_set.to_string() })
+    }
+
+    /// Sample up to `k` neighbors along `edge_set` from every node the
+    /// handle denotes.
+    pub fn sample(&self, from: &OpHandle, k: usize, edge_set: &str) -> Result<OpHandle> {
+        let es = self.schema.edge_set(edge_set)?;
+        if es.source != from.node_set {
+            return Err(Error::Sampler(format!(
+                "cannot sample {edge_set:?} (source {:?}) from nodes of {:?}",
+                es.source, from.node_set
+            )));
+        }
+        let mut st = self.state.borrow_mut();
+        let base = if from.op_names.len() == 1 {
+            format!("{}->{}", from.node_set, es.target)
+        } else {
+            format!("({})->{}", from.op_names.join("|"), es.target)
+        };
+        let mut name = base.clone();
+        let mut n = 2;
+        while st.used_names.contains(&name) {
+            name = format!("{base}#{n}");
+            n += 1;
+        }
+        st.used_names.insert(name.clone());
+        st.ops.push(SamplingOp {
+            op_name: name.clone(),
+            input_ops: from.op_names.clone(),
+            edge_set: edge_set.to_string(),
+            sample_size: k,
+            strategy: self.default_strategy,
+        });
+        Ok(OpHandle { op_names: vec![name], node_set: es.target.clone() })
+    }
+
+    /// Join handles over the same node set (Figure 6's
+    /// `cited_papers.join([seed_paper])`).
+    pub fn join(&self, handles: &[&OpHandle]) -> Result<OpHandle> {
+        let Some(first) = handles.first() else {
+            return Err(Error::Sampler("join of zero handles".into()));
+        };
+        let node_set = first.node_set.clone();
+        let mut op_names = Vec::new();
+        for h in handles {
+            if h.node_set != node_set {
+                return Err(Error::Sampler(format!(
+                    "join over mixed node sets {:?} vs {:?}",
+                    h.node_set, node_set
+                )));
+            }
+            op_names.extend(h.op_names.iter().cloned());
+        }
+        Ok(OpHandle { op_names, node_set })
+    }
+
+    /// Finalize.
+    pub fn build(&self) -> Result<SamplingSpec> {
+        let st = self.state.borrow();
+        let (seed_op, seed_node_set) = st
+            .seed_op
+            .clone()
+            .ok_or_else(|| Error::Sampler("build() before seed()".into()))?;
+        let spec = SamplingSpec { seed_op, seed_node_set, ops: st.ops.clone() };
+        super::validate_spec(&self.schema, &spec)?;
+        Ok(spec)
+    }
+}
+
+/// The exact Figure 6 sampling program for OGBN-MAG.
+pub fn mag_sampling_spec(schema: &GraphSchema) -> Result<SamplingSpec> {
+    mag_sampling_spec_scaled(schema, 1.0)
+}
+
+/// Figure 6 with all fan-outs scaled by `f` (≥ epsilon) — small graphs
+/// use f < 1 so subgraphs stay proportionate.
+pub fn mag_sampling_spec_scaled(schema: &GraphSchema, f: f64) -> Result<SamplingSpec> {
+    let k = |base: usize| ((base as f64 * f).round() as usize).max(1);
+    let mut sizes = std::collections::BTreeMap::new();
+    sizes.insert("cites".to_string(), k(32));
+    sizes.insert("written".to_string(), k(8));
+    sizes.insert("writes".to_string(), k(16));
+    sizes.insert("affiliated_with".to_string(), k(16));
+    sizes.insert("has_topic".to_string(), k(16));
+    mag_sampling_spec_sized(schema, &sizes)
+}
+
+/// Figure 6's program with explicit per-edge-set fan-outs (the
+/// `sampling.sizes` block of `configs/*.json`).
+pub fn mag_sampling_spec_sized(
+    schema: &GraphSchema,
+    sizes: &std::collections::BTreeMap<String, usize>,
+) -> Result<SamplingSpec> {
+    let k = |es: &str| -> Result<usize> {
+        sizes
+            .get(es)
+            .copied()
+            .ok_or_else(|| Error::Sampler(format!("sampling sizes missing edge set {es:?}")))
+    };
+    let b = SamplingSpecBuilder::new(schema, Strategy::RandomUniform);
+    // Each paper node is a seed for graph sampling.
+    let seed_paper = b.seed("paper")?;
+    // From each seed paper, sample cited papers.
+    let cited_papers = b.sample(&seed_paper, k("cites")?, "cites")?;
+    // From each paper (seed/cited), sample up to 8 authors.
+    let authors = b.sample(&b.join(&[&cited_papers, &seed_paper])?, k("written")?, "written")?;
+    // From these authors, sample up to 16 extra papers written by each.
+    let author_papers = b.sample(&authors, k("writes")?, "writes")?;
+    // From these authors, sample their affiliations.
+    let _affils = b.sample(&authors, k("affiliated_with")?, "affiliated_with")?;
+    // From each paper (seed/cited/written), sample topics.
+    let _topics = b.sample(
+        &b.join(&[&author_papers, &seed_paper, &cited_papers])?,
+        k("has_topic")?,
+        "has_topic",
+    )?;
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::mag::{mag_schema, MagConfig};
+
+    #[test]
+    fn figure6_produces_a62_plan() {
+        let schema = mag_schema(&MagConfig::tiny());
+        let spec = mag_sampling_spec(&schema).unwrap();
+        assert_eq!(spec.seed_op, "SEED->paper");
+        assert_eq!(spec.seed_node_set, "paper");
+        let names: Vec<&str> = spec.ops.iter().map(|o| o.op_name.as_str()).collect();
+        // The exact generated plan of appendix A.6.2.
+        assert_eq!(
+            names,
+            vec![
+                "paper->paper",
+                "(paper->paper|SEED->paper)->author",
+                "author->paper",
+                "author->institution",
+                "(author->paper|SEED->paper|paper->paper)->field_of_study",
+            ]
+        );
+        let authors_op = &spec.ops[1];
+        assert_eq!(authors_op.input_ops, vec!["paper->paper", "SEED->paper"]);
+        assert_eq!(authors_op.edge_set, "written");
+        assert_eq!(authors_op.sample_size, 8);
+        assert_eq!(authors_op.strategy, Strategy::RandomUniform);
+        let topics_op = &spec.ops[4];
+        assert_eq!(
+            topics_op.input_ops,
+            vec!["author->paper", "SEED->paper", "paper->paper"]
+        );
+        assert_eq!(topics_op.edge_set, "has_topic");
+        assert_eq!(topics_op.sample_size, 16);
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let schema = mag_schema(&MagConfig::tiny());
+        let spec = mag_sampling_spec(&schema).unwrap();
+        let json = spec.to_json();
+        let spec2 = SamplingSpec::from_json(&json).unwrap();
+        assert_eq!(spec, spec2);
+    }
+
+    #[test]
+    fn wrong_source_set_rejected() {
+        let schema = mag_schema(&MagConfig::tiny());
+        let b = SamplingSpecBuilder::new(&schema, Strategy::RandomUniform);
+        let seed = b.seed("paper").unwrap();
+        // "writes" starts at author, not paper.
+        assert!(b.sample(&seed, 4, "writes").is_err());
+    }
+
+    #[test]
+    fn join_mixed_sets_rejected() {
+        let schema = mag_schema(&MagConfig::tiny());
+        let b = SamplingSpecBuilder::new(&schema, Strategy::RandomUniform);
+        let seed = b.seed("paper").unwrap();
+        let authors = b.sample(&seed, 4, "written").unwrap();
+        assert!(b.join(&[&seed, &authors]).is_err());
+    }
+
+    #[test]
+    fn duplicate_names_disambiguated() {
+        let schema = mag_schema(&MagConfig::tiny());
+        let b = SamplingSpecBuilder::new(&schema, Strategy::RandomUniform);
+        let seed = b.seed("paper").unwrap();
+        let c1 = b.sample(&seed, 4, "cites").unwrap();
+        let c2 = b.sample(&seed, 8, "cites").unwrap();
+        let spec = b.build().unwrap();
+        assert_eq!(spec.ops[0].op_name, "paper->paper");
+        assert_eq!(spec.ops[1].op_name, "paper->paper#2");
+        let _ = (c1, c2);
+    }
+
+    #[test]
+    fn seed_twice_rejected() {
+        let schema = mag_schema(&MagConfig::tiny());
+        let b = SamplingSpecBuilder::new(&schema, Strategy::RandomUniform);
+        b.seed("paper").unwrap();
+        assert!(b.seed("author").is_err());
+    }
+
+    #[test]
+    fn max_nodes_per_seed_bound() {
+        let schema = mag_schema(&MagConfig::tiny());
+        let b = SamplingSpecBuilder::new(&schema, Strategy::RandomUniform);
+        let seed = b.seed("paper").unwrap();
+        let cited = b.sample(&seed, 4, "cites").unwrap();
+        let _authors = b.sample(&b.join(&[&cited, &seed]).unwrap(), 2, "written").unwrap();
+        let spec = b.build().unwrap();
+        // 1 seed + 4 cited + (4+1)*2 authors = 15
+        assert_eq!(spec.max_nodes_per_seed(), 15);
+    }
+
+    #[test]
+    fn scaled_spec_minimum_one() {
+        let schema = mag_schema(&MagConfig::tiny());
+        let spec = mag_sampling_spec_scaled(&schema, 0.01).unwrap();
+        assert!(spec.ops.iter().all(|o| o.sample_size >= 1));
+    }
+}

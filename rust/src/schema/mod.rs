@@ -1,0 +1,280 @@
+//! `GraphSchema` — the declarative heterogeneous data model (paper §3.1).
+//!
+//! A schema names the node sets, edge sets (with their source/target
+//! node sets) and context features of a heterogeneous graph, and for
+//! every feature its dtype and per-item shape. `GraphTensor` values
+//! ([`crate::graph`]) are validated against a schema, exactly as
+//! TF-GNN validates parsed `tf.train.Example` records.
+//!
+//! The paper serializes schemas as protocol buffers; this reproduction
+//! uses a JSON text format (see [`parse`]) carrying the same content,
+//! including the `metadata { filename, cardinality }` annotations used
+//! by the sampler (§8, appendix A.6.1).
+
+pub mod parse;
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Feature element type. TF-GNN supports int, float and string features
+/// (§3.1); we mirror that with i64 / f32 / UTF-8 string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I64,
+    Str,
+}
+
+impl DType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I64 => "int64",
+            DType::Str => "string",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "DT_FLOAT" | "f32" => Ok(DType::F32),
+            "int64" | "DT_INT64" | "i64" => Ok(DType::I64),
+            "string" | "DT_STRING" | "str" => Ok(DType::Str),
+            other => Err(Error::Schema(format!("unknown dtype {other:?}"))),
+        }
+    }
+}
+
+/// Per-item feature shape: the `[f1, …, fk]` dims of §3.1. `None` marks
+/// a ragged dimension (variable length per item), rendered as `null` in
+/// the text format — TF-GNN's `tf.RaggedTensor` case.
+pub type FeatureShape = Vec<Option<usize>>;
+
+/// Declaration of a single feature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureSpec {
+    pub dtype: DType,
+    pub shape: FeatureShape,
+}
+
+impl FeatureSpec {
+    pub fn f32(dims: &[usize]) -> FeatureSpec {
+        FeatureSpec { dtype: DType::F32, shape: dims.iter().map(|&d| Some(d)).collect() }
+    }
+
+    pub fn i64(dims: &[usize]) -> FeatureSpec {
+        FeatureSpec { dtype: DType::I64, shape: dims.iter().map(|&d| Some(d)).collect() }
+    }
+
+    pub fn string() -> FeatureSpec {
+        FeatureSpec { dtype: DType::Str, shape: vec![] }
+    }
+
+    /// A rank-1 ragged float feature (`[None]` per item).
+    pub fn ragged_f32() -> FeatureSpec {
+        FeatureSpec { dtype: DType::F32, shape: vec![None] }
+    }
+
+    /// Is any dimension ragged?
+    pub fn is_ragged(&self) -> bool {
+        self.shape.iter().any(|d| d.is_none())
+    }
+
+    /// Number of scalar elements per item, if fully dense.
+    pub fn dense_elems(&self) -> Option<usize> {
+        self.shape.iter().try_fold(1usize, |acc, d| d.map(|d| acc * d))
+    }
+}
+
+/// Source metadata for a node/edge set (appendix A.6.1): where the raw
+/// entities live and how many there are. The sampler and synthetic
+/// generators fill these in.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Metadata {
+    pub filename: Option<String>,
+    pub cardinality: Option<u64>,
+}
+
+/// Declaration of a node set and its features.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NodeSetSpec {
+    pub features: BTreeMap<String, FeatureSpec>,
+    pub metadata: Metadata,
+}
+
+/// Declaration of an edge set: its endpoint node sets and its features.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeSetSpec {
+    pub source: String,
+    pub target: String,
+    pub features: BTreeMap<String, FeatureSpec>,
+    pub metadata: Metadata,
+}
+
+/// The full heterogeneous graph schema (§3.1).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GraphSchema {
+    pub context: BTreeMap<String, FeatureSpec>,
+    pub node_sets: BTreeMap<String, NodeSetSpec>,
+    pub edge_sets: BTreeMap<String, EdgeSetSpec>,
+}
+
+impl GraphSchema {
+    /// Structural validation: every edge set references declared node
+    /// sets; names are non-empty.
+    pub fn validate(&self) -> Result<()> {
+        for (name, es) in &self.edge_sets {
+            if name.is_empty() {
+                return Err(Error::Schema("empty edge set name".into()));
+            }
+            for (role, set) in [("source", &es.source), ("target", &es.target)] {
+                if !self.node_sets.contains_key(set) {
+                    return Err(Error::Schema(format!(
+                        "edge set {name:?} {role} references unknown node set {set:?}"
+                    )));
+                }
+            }
+        }
+        if self.node_sets.keys().any(|k| k.is_empty()) {
+            return Err(Error::Schema("empty node set name".into()));
+        }
+        Ok(())
+    }
+
+    pub fn node_set(&self, name: &str) -> Result<&NodeSetSpec> {
+        self.node_sets
+            .get(name)
+            .ok_or_else(|| Error::Schema(format!("unknown node set {name:?}")))
+    }
+
+    pub fn edge_set(&self, name: &str) -> Result<&EdgeSetSpec> {
+        self.edge_sets
+            .get(name)
+            .ok_or_else(|| Error::Schema(format!("unknown edge set {name:?}")))
+    }
+
+    /// Edge sets incident to `node_set` as the given endpoint role.
+    pub fn edge_sets_into(&self, node_set: &str) -> Vec<&str> {
+        self.edge_sets
+            .iter()
+            .filter(|(_, es)| es.target == node_set)
+            .map(|(k, _)| k.as_str())
+            .collect()
+    }
+
+    pub fn edge_sets_from(&self, node_set: &str) -> Vec<&str> {
+        self.edge_sets
+            .iter()
+            .filter(|(_, es)| es.source == node_set)
+            .map(|(k, _)| k.as_str())
+            .collect()
+    }
+
+    /// Builder-style helpers used by generators and tests.
+    pub fn with_node_set(mut self, name: &str, spec: NodeSetSpec) -> Self {
+        self.node_sets.insert(name.to_string(), spec);
+        self
+    }
+
+    pub fn with_edge_set(mut self, name: &str, spec: EdgeSetSpec) -> Self {
+        self.edge_sets.insert(name.to_string(), spec);
+        self
+    }
+
+    pub fn with_context_feature(mut self, name: &str, spec: FeatureSpec) -> Self {
+        self.context.insert(name.to_string(), spec);
+        self
+    }
+}
+
+/// The recommendation-system example schema from Figure 2a, used across
+/// tests and the `recsys_spending` example.
+pub fn recsys_example_schema() -> GraphSchema {
+    let mut items = NodeSetSpec::default();
+    items.features.insert("category".into(), FeatureSpec::string());
+    items.features.insert("price".into(), FeatureSpec::ragged_f32());
+    let mut users = NodeSetSpec::default();
+    users.features.insert("name".into(), FeatureSpec::string());
+    users.features.insert("age".into(), FeatureSpec::i64(&[]));
+    users.features.insert("country".into(), FeatureSpec::i64(&[]));
+    GraphSchema::default()
+        .with_node_set("items", items)
+        .with_node_set("users", users)
+        .with_edge_set(
+            "purchased",
+            EdgeSetSpec {
+                source: "items".into(),
+                target: "users".into(),
+                features: BTreeMap::new(),
+                metadata: Metadata::default(),
+            },
+        )
+        .with_edge_set(
+            "is-friend",
+            EdgeSetSpec {
+                source: "users".into(),
+                target: "users".into(),
+                features: BTreeMap::new(),
+                metadata: Metadata::default(),
+            },
+        )
+        .with_context_feature("scores", FeatureSpec::f32(&[4]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recsys_schema_validates() {
+        let s = recsys_example_schema();
+        s.validate().unwrap();
+        assert_eq!(s.node_sets.len(), 2);
+        assert_eq!(s.edge_sets.len(), 2);
+        assert_eq!(s.edge_set("purchased").unwrap().source, "items");
+        assert_eq!(s.edge_set("is-friend").unwrap().target, "users");
+    }
+
+    #[test]
+    fn bad_edge_reference_rejected() {
+        let s = GraphSchema::default().with_edge_set(
+            "e",
+            EdgeSetSpec {
+                source: "missing".into(),
+                target: "also_missing".into(),
+                features: BTreeMap::new(),
+                metadata: Metadata::default(),
+            },
+        );
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn incident_edge_sets() {
+        let s = recsys_example_schema();
+        assert_eq!(s.edge_sets_into("users"), vec!["is-friend", "purchased"]);
+        assert_eq!(s.edge_sets_from("items"), vec!["purchased"]);
+        assert_eq!(s.edge_sets_from("users"), vec!["is-friend"]);
+        assert!(s.edge_sets_into("items").is_empty());
+    }
+
+    #[test]
+    fn feature_spec_helpers() {
+        assert!(FeatureSpec::ragged_f32().is_ragged());
+        assert!(!FeatureSpec::f32(&[128]).is_ragged());
+        assert_eq!(FeatureSpec::f32(&[128]).dense_elems(), Some(128));
+        assert_eq!(FeatureSpec::f32(&[3, 4]).dense_elems(), Some(12));
+        assert_eq!(FeatureSpec::ragged_f32().dense_elems(), None);
+        assert_eq!(FeatureSpec::i64(&[]).dense_elems(), Some(1));
+    }
+
+    #[test]
+    fn dtype_names_roundtrip() {
+        for d in [DType::F32, DType::I64, DType::Str] {
+            assert_eq!(DType::from_name(d.name()).unwrap(), d);
+        }
+        // Protobuf-style names accepted for compatibility with A.6.1.
+        assert_eq!(DType::from_name("DT_FLOAT").unwrap(), DType::F32);
+        assert!(DType::from_name("complex128").is_err());
+    }
+}

@@ -1,0 +1,275 @@
+//! Schema text format: JSON carrying the same content as the paper's
+//! protobuf `GraphSchema` (appendix A.6.1).
+//!
+//! ```json
+//! {
+//!   "node_sets": {
+//!     "paper": {
+//!       "features": {"feat": {"dtype": "float32", "shape": [128]}},
+//!       "metadata": {"filename": "nodes-paper.rec@397", "cardinality": 736389}
+//!     }
+//!   },
+//!   "edge_sets": {
+//!     "cites": {"source": "paper", "target": "paper"}
+//!   },
+//!   "context": {"seconds": {"dtype": "int64", "shape": [1]}}
+//! }
+//! ```
+//!
+//! Ragged dims are `null` in the shape array.
+
+use std::collections::BTreeMap;
+
+use super::{DType, EdgeSetSpec, FeatureSpec, GraphSchema, Metadata, NodeSetSpec};
+use crate::util::json::{obj, Json};
+use crate::Result;
+
+/// Serialize a schema to pretty JSON text.
+pub fn to_text(schema: &GraphSchema) -> String {
+    schema_to_json(schema).to_pretty()
+}
+
+/// Parse a schema from JSON text and validate it.
+pub fn from_text(text: &str) -> Result<GraphSchema> {
+    let v = Json::parse(text)?;
+    let schema = schema_from_json(&v)?;
+    schema.validate()?;
+    Ok(schema)
+}
+
+/// Read a schema from a file path.
+pub fn read_schema(path: &std::path::Path) -> Result<GraphSchema> {
+    let text = std::fs::read_to_string(path)?;
+    from_text(&text)
+}
+
+/// Write a schema to a file path.
+pub fn write_schema(schema: &GraphSchema, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, to_text(schema))?;
+    Ok(())
+}
+
+pub fn schema_to_json(schema: &GraphSchema) -> Json {
+    let node_sets = Json::Obj(
+        schema
+            .node_sets
+            .iter()
+            .map(|(k, ns)| {
+                let mut fields = vec![("features", features_to_json(&ns.features))];
+                if let Some(m) = metadata_to_json(&ns.metadata) {
+                    fields.push(("metadata", m));
+                }
+                (k.clone(), obj(fields))
+            })
+            .collect(),
+    );
+    let edge_sets = Json::Obj(
+        schema
+            .edge_sets
+            .iter()
+            .map(|(k, es)| {
+                let mut fields = vec![
+                    ("source", Json::Str(es.source.clone())),
+                    ("target", Json::Str(es.target.clone())),
+                    ("features", features_to_json(&es.features)),
+                ];
+                if let Some(m) = metadata_to_json(&es.metadata) {
+                    fields.push(("metadata", m));
+                }
+                (k.clone(), obj(fields))
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("context", features_to_json(&schema.context)),
+        ("node_sets", node_sets),
+        ("edge_sets", edge_sets),
+    ])
+}
+
+pub fn schema_from_json(v: &Json) -> Result<GraphSchema> {
+    let mut schema = GraphSchema::default();
+    if let Some(ctx) = v.opt("context") {
+        schema.context = features_from_json(ctx)?;
+    }
+    if let Some(ns) = v.opt("node_sets") {
+        for (name, spec) in ns.as_obj()? {
+            let features = match spec.opt("features") {
+                Some(f) => features_from_json(f)?,
+                None => BTreeMap::new(),
+            };
+            let metadata = metadata_from_json(spec.opt("metadata"))?;
+            schema.node_sets.insert(name.clone(), NodeSetSpec { features, metadata });
+        }
+    }
+    if let Some(es) = v.opt("edge_sets") {
+        for (name, spec) in es.as_obj()? {
+            let features = match spec.opt("features") {
+                Some(f) => features_from_json(f)?,
+                None => BTreeMap::new(),
+            };
+            schema.edge_sets.insert(
+                name.clone(),
+                EdgeSetSpec {
+                    source: spec.get("source")?.as_str()?.to_string(),
+                    target: spec.get("target")?.as_str()?.to_string(),
+                    features,
+                    metadata: metadata_from_json(spec.opt("metadata"))?,
+                },
+            );
+        }
+    }
+    Ok(schema)
+}
+
+fn features_to_json(features: &BTreeMap<String, FeatureSpec>) -> Json {
+    Json::Obj(
+        features
+            .iter()
+            .map(|(k, f)| {
+                let shape = Json::Arr(
+                    f.shape
+                        .iter()
+                        .map(|d| match d {
+                            Some(n) => Json::Int(*n as i64),
+                            None => Json::Null,
+                        })
+                        .collect(),
+                );
+                (
+                    k.clone(),
+                    obj(vec![("dtype", Json::Str(f.dtype.name().into())), ("shape", shape)]),
+                )
+            })
+            .collect(),
+    )
+}
+
+fn features_from_json(v: &Json) -> Result<BTreeMap<String, FeatureSpec>> {
+    let mut out = BTreeMap::new();
+    for (name, spec) in v.as_obj()? {
+        let dtype = DType::from_name(spec.get("dtype")?.as_str()?)?;
+        let mut shape = Vec::new();
+        if let Some(dims) = spec.opt("shape") {
+            for d in dims.as_arr()? {
+                match d {
+                    Json::Null => shape.push(None),
+                    other => shape.push(Some(other.as_usize()?)),
+                }
+            }
+        }
+        out.insert(name.clone(), FeatureSpec { dtype, shape });
+    }
+    Ok(out)
+}
+
+fn metadata_to_json(m: &Metadata) -> Option<Json> {
+    if m.filename.is_none() && m.cardinality.is_none() {
+        return None;
+    }
+    let mut fields = Vec::new();
+    if let Some(f) = &m.filename {
+        fields.push(("filename", Json::Str(f.clone())));
+    }
+    if let Some(c) = m.cardinality {
+        fields.push(("cardinality", Json::Int(c as i64)));
+    }
+    Some(obj(fields))
+}
+
+fn metadata_from_json(v: Option<&Json>) -> Result<Metadata> {
+    let Some(v) = v else { return Ok(Metadata::default()) };
+    Ok(Metadata {
+        filename: match v.opt("filename") {
+            Some(f) => Some(f.as_str()?.to_string()),
+            None => None,
+        },
+        cardinality: match v.opt("cardinality") {
+            Some(c) => Some(c.as_i64()? as u64),
+            None => None,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::recsys_example_schema;
+
+    #[test]
+    fn roundtrip_recsys() {
+        let s = recsys_example_schema();
+        let text = to_text(&s);
+        let s2 = from_text(&text).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn roundtrip_with_metadata() {
+        let mut s = recsys_example_schema();
+        s.node_sets.get_mut("items").unwrap().metadata = Metadata {
+            filename: Some("nodes-items.rec@4".into()),
+            cardinality: Some(123456),
+        };
+        let s2 = from_text(&to_text(&s)).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn ragged_dims_as_null() {
+        let s = recsys_example_schema();
+        let text = to_text(&s);
+        assert!(text.contains("null"), "ragged price dim serialized as null: {text}");
+    }
+
+    #[test]
+    fn parse_mag_like_schema() {
+        // Condensed version of appendix A.6.1.
+        let text = r#"{
+          "node_sets": {
+            "paper": {"features": {
+               "feat": {"dtype": "float32", "shape": [128]},
+               "labels": {"dtype": "int64", "shape": [1]},
+               "year": {"dtype": "int64", "shape": [1]}},
+               "metadata": {"filename": "nodes-paper.rec@397", "cardinality": 736389}},
+            "author": {"features": {}, "metadata": {"cardinality": 1134649}},
+            "institution": {"features": {}},
+            "field_of_study": {"features": {}}
+          },
+          "edge_sets": {
+            "cites": {"source": "paper", "target": "paper"},
+            "writes": {"source": "author", "target": "paper"},
+            "affiliated_with": {"source": "author", "target": "institution"},
+            "has_topic": {"source": "paper", "target": "field_of_study"}
+          }
+        }"#;
+        let s = from_text(text).unwrap();
+        assert_eq!(s.node_sets.len(), 4);
+        assert_eq!(s.edge_sets.len(), 4);
+        assert_eq!(s.node_set("paper").unwrap().features["feat"].dense_elems(), Some(128));
+        assert_eq!(s.node_set("paper").unwrap().metadata.cardinality, Some(736389));
+        assert_eq!(s.edge_set("writes").unwrap().target, "paper");
+    }
+
+    #[test]
+    fn invalid_schema_text_rejected() {
+        assert!(from_text("{").is_err());
+        assert!(from_text(r#"{"edge_sets": {"e": {"source": "x", "target": "y"}}}"#).is_err());
+        assert!(
+            from_text(r#"{"node_sets": {"n": {"features": {"f": {"dtype": "quaternion"}}}}}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let s = recsys_example_schema();
+        let dir = std::env::temp_dir().join(format!("tfgnn-schema-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("schema.json");
+        write_schema(&s, &path).unwrap();
+        let s2 = read_schema(&path).unwrap();
+        assert_eq!(s, s2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

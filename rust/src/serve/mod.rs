@@ -1,0 +1,291 @@
+//! Online inference (paper §6.3).
+//!
+//! The paper's serving story: host the exported model behind a service;
+//! the caller provides GraphTensors "perhaps via the in-memory
+//! sampler". [`InferenceServer`] implements exactly that shape — a
+//! vLLM-router-style dynamic batcher in front of the AOT `forward`
+//! program:
+//!
+//! * clients submit root node ids ([`ServerHandle::submit`]);
+//! * the batcher thread collects up to `max_batch` requests or until
+//!   `max_wait` elapses, samples each root's subgraph with the
+//!   in-memory sampler, merges + pads to the static shape, and runs
+//!   one `forward` execution;
+//! * each request gets back its logits row, predicted class, and
+//!   timing (queue + batch + execute breakdown for the benches).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::graph::pad::{fit_or_skip, PadSpec};
+use crate::runtime::batch::{build_batch, is_batch_slot, RootTask};
+use crate::runtime::manifest::ModelEntry;
+use crate::runtime::{host_to_literal, literal_to_host, HostTensor, Program, Runtime};
+use crate::sampler::inmem::InMemorySampler;
+use crate::{Error, Result};
+
+/// A completed prediction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub seed: u32,
+    pub predicted: usize,
+    pub logits: Vec<f32>,
+    /// Time from submit to response.
+    pub latency: Duration,
+    /// Requests in the same executed batch.
+    pub batch_size: usize,
+}
+
+struct Request {
+    seed: u32,
+    submitted: Instant,
+    reply: Sender<Result<Response>>,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max roots per forward execution (≤ the model's component cap - 1).
+    pub max_batch: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+}
+
+/// Aggregate server counters.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub skipped_oversize: AtomicU64,
+}
+
+/// Client handle: submit requests, then `shutdown()`.
+pub struct ServerHandle {
+    tx: Option<Sender<Request>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    pub stats: Arc<ServeStats>,
+}
+
+impl ServerHandle {
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, seed: u32) -> Receiver<Result<Response>> {
+        let (reply_tx, reply_rx) = channel();
+        let req = Request { seed, submitted: Instant::now(), reply: reply_tx };
+        self.tx.as_ref().expect("server running").send(req).expect("server alive");
+        reply_rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn predict(&self, seed: u32) -> Result<Response> {
+        self.submit(seed)
+            .recv()
+            .map_err(|_| Error::Runtime("server dropped request".into()))?
+    }
+
+    /// Stop accepting requests and join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Build and start the server.
+///
+/// PJRT handles are not `Send`, so the worker thread constructs its own
+/// client, compiles `forward`, and uploads the params itself; this
+/// function only passes plain data (paths, specs, host tensors) across
+/// the thread boundary and waits for the worker's startup report.
+pub fn serve(
+    artifacts_dir: &std::path::Path,
+    entry: &ModelEntry,
+    params: Vec<(String, HostTensor)>,
+    sampler: Arc<InMemorySampler>,
+    pad: PadSpec,
+    task: RootTask,
+    cfg: ServeConfig,
+) -> Result<ServerHandle> {
+    let forward_spec = entry.program("forward")?.clone();
+    let dir = artifacts_dir.to_path_buf();
+    let stats = Arc::new(ServeStats::default());
+    let (tx, rx) = channel::<Request>();
+    let (ready_tx, ready_rx) = channel::<Result<()>>();
+    let stats_w = Arc::clone(&stats);
+    let max_batch = cfg.max_batch;
+    let max_wait = cfg.max_wait;
+    let worker = std::thread::Builder::new()
+        .name("tfgnn-serve".into())
+        .spawn(move || {
+            // Build the PJRT world inside the thread (handles are !Send).
+            let setup = (|| -> Result<(Runtime, Program, Vec<xla::Literal>)> {
+                let rt = Runtime::cpu()?;
+                let forward = rt.load_program(&dir, &forward_spec)?;
+                // Forward may have a pruned signature (dead params
+                // dropped by jax); resolve each param slot by name from
+                // the full checkpoint/trainer param list.
+                let by_name: std::collections::BTreeMap<&str, &HostTensor> =
+                    params.iter().map(|(n, t)| (n.as_str(), t)).collect();
+                let mut param_lits = Vec::new();
+                for spec in &forward.spec.inputs {
+                    if !spec.name.starts_with("param.") {
+                        continue;
+                    }
+                    let t = by_name.get(spec.name.as_str()).ok_or_else(|| {
+                        Error::Runtime(format!("server params missing slot {}", spec.name))
+                    })?;
+                    if !t.matches(spec) {
+                        return Err(Error::Runtime(format!(
+                            "param {} does not match forward slot shape",
+                            spec.name
+                        )));
+                    }
+                    param_lits.push(host_to_literal(t)?);
+                }
+                Ok((rt, forward, param_lits))
+            })();
+            match setup {
+                Ok((rt, forward, param_bufs)) => {
+                    let _ = ready_tx.send(Ok(()));
+                    serve_loop(
+                        rx, rt, forward, param_bufs, sampler, pad, task, max_batch, max_wait,
+                        stats_w,
+                    );
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+            }
+        })
+        .expect("spawn server");
+    ready_rx
+        .recv()
+        .map_err(|_| Error::Runtime("server thread died during startup".into()))??;
+    Ok(ServerHandle { tx: Some(tx), worker: Some(worker), stats })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_loop(
+    rx: Receiver<Request>,
+    rt: Runtime,
+    forward: Program,
+    param_bufs: Vec<xla::Literal>,
+    sampler: Arc<InMemorySampler>,
+    pad: PadSpec,
+    task: RootTask,
+    max_batch: usize,
+    max_wait: Duration,
+    stats: Arc<ServeStats>,
+) {
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders gone: shutdown
+        };
+        let mut wave = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while wave.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => wave.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        stats.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        let batch_size = wave.len();
+        let result = execute_wave(&rt, &forward, &param_bufs, &sampler, &pad, &task, &wave);
+        match result {
+            Ok(logits) => {
+                let classes = logits.1;
+                for (k, req) in wave.into_iter().enumerate() {
+                    let row = logits.0[k * classes..(k + 1) * classes].to_vec();
+                    let predicted = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    let resp = Response {
+                        seed: req.seed,
+                        predicted,
+                        logits: row,
+                        latency: req.submitted.elapsed(),
+                        batch_size,
+                    };
+                    let _ = req.reply.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                stats.skipped_oversize.fetch_add(1, Ordering::Relaxed);
+                let msg = e.to_string();
+                for req in wave {
+                    let _ = req.reply.send(Err(Error::Runtime(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+/// Sample, merge, pad, execute one wave; returns (flat logits, classes).
+fn execute_wave(
+    rt: &Runtime,
+    forward: &Program,
+    param_bufs: &[xla::Literal],
+    sampler: &InMemorySampler,
+    pad: &PadSpec,
+    task: &RootTask,
+    wave: &[Request],
+) -> Result<(Vec<f32>, usize)> {
+    let graphs = wave
+        .iter()
+        .map(|r| sampler.sample(r.seed))
+        .collect::<Result<Vec<_>>>()?;
+    let merged = crate::graph::batch::merge(&graphs)?;
+    let padded = fit_or_skip(&merged, pad)
+        .ok_or_else(|| Error::Runtime("request wave exceeds pad caps".into()))?;
+    let inputs = &forward.spec.inputs;
+    let batch = build_batch(&padded, task, inputs)?;
+    let mut batch_lits = Vec::with_capacity(batch.len());
+    for (idx, t) in &batch {
+        batch_lits.push((*idx, host_to_literal(t)?));
+    }
+    let _ = rt;
+    let mut args: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
+    let mut it = batch_lits.iter();
+    for (i, spec) in inputs.iter().enumerate() {
+        if i < param_bufs.len() {
+            args.push(&param_bufs[i]);
+        } else if is_batch_slot(&spec.name) {
+            let (idx, lit) =
+                it.next().ok_or_else(|| Error::Runtime("slots exhausted".into()))?;
+            debug_assert_eq!(*idx, i);
+            args.push(lit);
+        } else {
+            return Err(Error::Runtime(format!("unhandled forward slot {:?}", spec.name)));
+        }
+    }
+    let outputs = forward.execute_literals(&args)?;
+    let logits = literal_to_host(&outputs[0])?;
+    let shape = logits.shape().to_vec();
+    let HostTensor::F32(_, data) = logits else {
+        return Err(Error::Runtime("logits not f32".into()));
+    };
+    Ok((data, shape[1]))
+}

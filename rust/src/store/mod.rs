@@ -1,0 +1,410 @@
+//! In-memory heterogeneous graph store — the substrate under sampling.
+//!
+//! The paper's distributed sampler (§6.1.1) runs over graph data held in
+//! a distributed key-value/columnar substrate (at Google: Bigtable-like
+//! storage queried by a FlumeJava pipeline). This module provides the
+//! equivalent: [`GraphStore`] holds the full heterogeneous graph in
+//! columnar form with CSR adjacency per edge set; [`sharded`] wraps it
+//! in an RPC-shaped, failure-injectable sharded service that the
+//! distributed sampler's workers query.
+
+pub mod sharded;
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};
+use crate::schema::{DType, GraphSchema};
+use crate::{Error, Result};
+
+/// Columnar node features for one node set.
+#[derive(Debug, Clone, Default)]
+pub struct NodeColumn {
+    pub count: usize,
+    /// Dense f32 features: name → (per-item dim, flat data).
+    pub f32s: BTreeMap<String, (usize, Vec<f32>)>,
+    /// Dense i64 features: name → (per-item dim, flat data).
+    pub i64s: BTreeMap<String, (usize, Vec<i64>)>,
+}
+
+impl NodeColumn {
+    pub fn new(count: usize) -> NodeColumn {
+        NodeColumn { count, ..Default::default() }
+    }
+
+    pub fn add_f32(&mut self, name: &str, dim: usize, data: Vec<f32>) -> Result<()> {
+        if data.len() != self.count * dim.max(1) {
+            return Err(Error::Feature(format!(
+                "column {name:?}: {} values for {} nodes × dim {dim}",
+                data.len(),
+                self.count
+            )));
+        }
+        self.f32s.insert(name.to_string(), (dim, data));
+        Ok(())
+    }
+
+    pub fn add_i64(&mut self, name: &str, dim: usize, data: Vec<i64>) -> Result<()> {
+        if data.len() != self.count * dim.max(1) {
+            return Err(Error::Feature(format!(
+                "column {name:?}: {} values for {} nodes × dim {dim}",
+                data.len(),
+                self.count
+            )));
+        }
+        self.i64s.insert(name.to_string(), (dim, data));
+        Ok(())
+    }
+
+    /// Gather rows for `nodes` into a [`Feature`] map.
+    pub fn gather(&self, nodes: &[u32]) -> BTreeMap<String, Feature> {
+        let mut out = BTreeMap::new();
+        for (name, (dim, data)) in &self.f32s {
+            let d = (*dim).max(1);
+            let mut rows = Vec::with_capacity(nodes.len() * d);
+            for &n in nodes {
+                let n = n as usize;
+                rows.extend_from_slice(&data[n * d..(n + 1) * d]);
+            }
+            let dims = if *dim == 0 { vec![] } else { vec![*dim] };
+            out.insert(name.clone(), Feature::F32 { dims, data: rows });
+        }
+        for (name, (dim, data)) in &self.i64s {
+            let d = (*dim).max(1);
+            let mut rows = Vec::with_capacity(nodes.len() * d);
+            for &n in nodes {
+                let n = n as usize;
+                rows.extend_from_slice(&data[n * d..(n + 1) * d]);
+            }
+            let dims = if *dim == 0 { vec![] } else { vec![*dim] };
+            out.insert(name.clone(), Feature::I64 { dims, data: rows });
+        }
+        out
+    }
+}
+
+/// CSR adjacency for one edge set, indexed by source node.
+#[derive(Debug, Clone)]
+pub struct EdgeColumn {
+    pub source_set: String,
+    pub target_set: String,
+    /// `offsets[s]..offsets[s+1]` indexes `targets` for source node `s`.
+    pub offsets: Vec<usize>,
+    pub targets: Vec<u32>,
+}
+
+impl EdgeColumn {
+    /// Build CSR from an (unsorted) edge list.
+    pub fn from_edge_list(
+        source_set: &str,
+        target_set: &str,
+        num_source_nodes: usize,
+        edges: &[(u32, u32)],
+    ) -> EdgeColumn {
+        let mut degree = vec![0usize; num_source_nodes];
+        for &(s, _) in edges {
+            degree[s as usize] += 1;
+        }
+        let mut offsets = Vec::with_capacity(num_source_nodes + 1);
+        offsets.push(0);
+        for d in &degree {
+            offsets.push(offsets.last().unwrap() + d);
+        }
+        let mut targets = vec![0u32; edges.len()];
+        let mut cursor = offsets.clone();
+        for &(s, t) in edges {
+            let s = s as usize;
+            targets[cursor[s]] = t;
+            cursor[s] += 1;
+        }
+        EdgeColumn {
+            source_set: source_set.to_string(),
+            target_set: target_set.to_string(),
+            offsets,
+            targets,
+        }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Out-neighbors of `node`.
+    pub fn neighbors(&self, node: u32) -> &[u32] {
+        let n = node as usize;
+        &self.targets[self.offsets[n]..self.offsets[n + 1]]
+    }
+
+    pub fn out_degree(&self, node: u32) -> usize {
+        let n = node as usize;
+        self.offsets[n + 1] - self.offsets[n]
+    }
+
+    /// Reverse this edge set (target becomes source) — used to derive
+    /// e.g. `written` from `writes` as §8's schema does.
+    pub fn reversed(&self, num_target_nodes: usize) -> EdgeColumn {
+        let mut edges = Vec::with_capacity(self.num_edges());
+        for s in 0..self.offsets.len() - 1 {
+            for &t in self.neighbors(s as u32) {
+                edges.push((t, s as u32));
+            }
+        }
+        EdgeColumn::from_edge_list(&self.target_set, &self.source_set, num_target_nodes, &edges)
+    }
+}
+
+/// The full heterogeneous graph in columnar + CSR form.
+#[derive(Debug, Clone)]
+pub struct GraphStore {
+    pub schema: GraphSchema,
+    pub nodes: BTreeMap<String, NodeColumn>,
+    pub edges: BTreeMap<String, EdgeColumn>,
+}
+
+impl GraphStore {
+    pub fn new(schema: GraphSchema) -> GraphStore {
+        GraphStore { schema, nodes: BTreeMap::new(), edges: BTreeMap::new() }
+    }
+
+    pub fn node_count(&self, set: &str) -> Result<usize> {
+        self.nodes
+            .get(set)
+            .map(|c| c.count)
+            .ok_or_else(|| Error::Graph(format!("store has no node set {set:?}")))
+    }
+
+    pub fn edge_column(&self, set: &str) -> Result<&EdgeColumn> {
+        self.edges
+            .get(set)
+            .ok_or_else(|| Error::Graph(format!("store has no edge set {set:?}")))
+    }
+
+    pub fn node_column(&self, set: &str) -> Result<&NodeColumn> {
+        self.nodes
+            .get(set)
+            .ok_or_else(|| Error::Graph(format!("store has no node set {set:?}")))
+    }
+
+    /// Consistency checks: edge endpoints within node counts, schema
+    /// agreement on endpoint sets, dtypes of columns declared.
+    pub fn validate(&self) -> Result<()> {
+        self.schema.validate()?;
+        for (name, ec) in &self.edges {
+            let spec = self.schema.edge_set(name)?;
+            if spec.source != ec.source_set || spec.target != ec.target_set {
+                return Err(Error::Schema(format!(
+                    "edge column {name:?} endpoints disagree with schema"
+                )));
+            }
+            let n_src = self.node_count(&ec.source_set)?;
+            let n_tgt = self.node_count(&ec.target_set)?;
+            if ec.offsets.len() != n_src + 1 {
+                return Err(Error::Graph(format!(
+                    "edge column {name:?}: offsets len {} != {} + 1",
+                    ec.offsets.len(),
+                    n_src
+                )));
+            }
+            if let Some(&bad) = ec.targets.iter().find(|&&t| (t as usize) >= n_tgt) {
+                return Err(Error::Graph(format!(
+                    "edge column {name:?}: target {bad} out of range {n_tgt}"
+                )));
+            }
+        }
+        for (name, nc) in &self.nodes {
+            let spec = self.schema.node_set(name)?;
+            for (fname, fspec) in &spec.features {
+                let declared_dim = fspec.dense_elems();
+                let found = match fspec.dtype {
+                    DType::F32 => nc.f32s.get(fname).map(|(d, _)| (*d).max(1)),
+                    DType::I64 => nc.i64s.get(fname).map(|(d, _)| (*d).max(1)),
+                    DType::Str => continue, // store keeps numeric columns only
+                };
+                match (declared_dim, found) {
+                    (Some(want), Some(have)) if want == have => {}
+                    (Some(want), Some(have)) => {
+                        return Err(Error::Feature(format!(
+                            "column {name}/{fname}: dim {have} != schema {want}"
+                        )))
+                    }
+                    (_, None) => {
+                        return Err(Error::Feature(format!(
+                            "column {name}/{fname} declared in schema but missing in store"
+                        )))
+                    }
+                    (None, _) => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total edges across edge sets (bench reporting).
+    pub fn total_edges(&self) -> usize {
+        self.edges.values().map(|e| e.num_edges()).sum()
+    }
+
+    /// Export the *whole* store as a single-component GraphTensor — the
+    /// "small scale: no sampling" path (§6.1.3).
+    pub fn to_graph_tensor(&self) -> Result<GraphTensor> {
+        let mut node_sets = BTreeMap::new();
+        for (name, nc) in &self.nodes {
+            let all: Vec<u32> = (0..nc.count as u32).collect();
+            let mut ns = NodeSet::new(vec![nc.count]);
+            ns.features = nc.gather(&all);
+            node_sets.insert(name.clone(), ns);
+        }
+        let mut edge_sets = BTreeMap::new();
+        for (name, ec) in &self.edges {
+            let mut source = Vec::with_capacity(ec.num_edges());
+            let mut target = Vec::with_capacity(ec.num_edges());
+            for s in 0..ec.offsets.len() - 1 {
+                for &t in ec.neighbors(s as u32) {
+                    source.push(s as u32);
+                    target.push(t);
+                }
+            }
+            edge_sets.insert(
+                name.clone(),
+                EdgeSet::new(
+                    vec![source.len()],
+                    Adjacency {
+                        source_set: ec.source_set.clone(),
+                        target_set: ec.target_set.clone(),
+                        source,
+                        target,
+                    },
+                ),
+            );
+        }
+        GraphTensor::from_pieces(Context::default(), node_sets, edge_sets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::{EdgeSetSpec, FeatureSpec, Metadata, NodeSetSpec};
+
+    pub fn tiny_schema() -> GraphSchema {
+        let mut a = NodeSetSpec::default();
+        a.features.insert("x".into(), FeatureSpec::f32(&[2]));
+        let b = NodeSetSpec::default();
+        GraphSchema::default()
+            .with_node_set("a", a)
+            .with_node_set("b", b)
+            .with_edge_set(
+                "ab",
+                EdgeSetSpec {
+                    source: "a".into(),
+                    target: "b".into(),
+                    features: BTreeMap::new(),
+                    metadata: Metadata::default(),
+                },
+            )
+    }
+
+    pub fn tiny_store() -> GraphStore {
+        let mut store = GraphStore::new(tiny_schema());
+        let mut a = NodeColumn::new(3);
+        a.add_f32("x", 2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        store.nodes.insert("a".into(), a);
+        store.nodes.insert("b".into(), NodeColumn::new(2));
+        store.edges.insert(
+            "ab".into(),
+            EdgeColumn::from_edge_list("a", "b", 3, &[(0, 1), (0, 0), (2, 1)]),
+        );
+        store
+    }
+
+    #[test]
+    fn csr_construction() {
+        let s = tiny_store();
+        let ec = s.edge_column("ab").unwrap();
+        assert_eq!(ec.num_edges(), 3);
+        assert_eq!(ec.out_degree(0), 2);
+        assert_eq!(ec.out_degree(1), 0);
+        assert_eq!(ec.out_degree(2), 1);
+        let mut n0 = ec.neighbors(0).to_vec();
+        n0.sort();
+        assert_eq!(n0, vec![0, 1]);
+        assert_eq!(ec.neighbors(2), &[1]);
+    }
+
+    #[test]
+    fn reverse_edges() {
+        let s = tiny_store();
+        let rev = s.edge_column("ab").unwrap().reversed(2);
+        assert_eq!(rev.source_set, "b");
+        assert_eq!(rev.num_edges(), 3);
+        let mut from_b1 = rev.neighbors(1).to_vec();
+        from_b1.sort();
+        assert_eq!(from_b1, vec![0, 2]); // b1 was target of a0 and a2
+        assert_eq!(rev.neighbors(0), &[0]);
+    }
+
+    #[test]
+    fn double_reverse_is_identity() {
+        let s = tiny_store();
+        let ec = s.edge_column("ab").unwrap();
+        let back = ec.reversed(2).reversed(3);
+        assert_eq!(back.offsets, ec.offsets);
+        let mut a: Vec<_> = back.targets.clone();
+        let mut b: Vec<_> = ec.targets.clone();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gather_features() {
+        let s = tiny_store();
+        let feats = s.node_column("a").unwrap().gather(&[2, 0]);
+        let (dims, data) = feats["x"].as_f32().unwrap();
+        assert_eq!(dims, &[2]);
+        assert_eq!(data, &[4.0, 5.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn validate_catches_problems() {
+        let s = tiny_store();
+        s.validate().unwrap();
+        // Missing declared column.
+        let mut bad = s.clone();
+        bad.nodes.get_mut("a").unwrap().f32s.remove("x");
+        assert!(bad.validate().is_err());
+        // Out-of-range target.
+        let mut bad = s.clone();
+        bad.edges.get_mut("ab").unwrap().targets[0] = 99;
+        assert!(bad.validate().is_err());
+        // Wrong dim.
+        let mut bad = s;
+        let col = bad.nodes.get_mut("a").unwrap();
+        col.f32s.insert("x".into(), (3, vec![0.0; 9]));
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn to_graph_tensor_full_export() {
+        let s = tiny_store();
+        let g = s.to_graph_tensor().unwrap();
+        assert_eq!(g.num_nodes("a").unwrap(), 3);
+        assert_eq!(g.num_nodes("b").unwrap(), 2);
+        assert_eq!(g.num_edges("ab").unwrap(), 3);
+        g.validate().unwrap();
+        let (dims, _) = g.node_set("a").unwrap().feature("x").unwrap().as_f32().unwrap();
+        assert_eq!(dims, &[2]);
+    }
+
+    #[test]
+    fn scalar_i64_column() {
+        let mut store = tiny_store();
+        store.nodes.get_mut("a").unwrap().add_i64("label", 0, vec![5, 6, 7]).unwrap();
+        let feats = store.node_column("a").unwrap().gather(&[1]);
+        let (dims, data) = feats["label"].as_i64().unwrap();
+        assert!(dims.is_empty());
+        assert_eq!(data, &[6]);
+    }
+}
+
+#[cfg(test)]
+pub use tests::{tiny_schema, tiny_store};

@@ -1,0 +1,198 @@
+//! Sharded, RPC-shaped view of a [`GraphStore`] with failure injection.
+//!
+//! The distributed sampler's workers (§6.1.1, Algorithm 1) never touch
+//! the `GraphStore` directly; they issue [`ShardedStore::sample_neighbors`]
+//! and [`ShardedStore::lookup_features`] requests, which are routed to
+//! the shard owning each node (hash partitioning, like the paper's
+//! storage substrate). Each shard tracks request counters, and an
+//! injectable failure rate makes a fraction of requests fail
+//! transiently — exercising the retry path that backs the paper's
+//! resilience claim versus Graph-Learn (§7: "TF-GNN samples a large
+//! graph into subgraphs using a resilient distributed system").
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::GraphStore;
+use crate::util::rng::mix64;
+use crate::{Error, Result};
+
+/// Per-shard service statistics.
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    pub adjacency_requests: AtomicU64,
+    pub feature_requests: AtomicU64,
+    pub injected_failures: AtomicU64,
+}
+
+/// Hash-partitioned store façade.
+pub struct ShardedStore {
+    store: Arc<GraphStore>,
+    pub num_shards: usize,
+    pub stats: Vec<ShardStats>,
+    /// Probability that any single request fails transiently.
+    failure_rate: f64,
+    /// Deterministic failure stream (seeded); uses a counter so the
+    /// failure pattern is reproducible but uncorrelated with keys.
+    failure_seed: u64,
+    failure_counter: AtomicU64,
+}
+
+impl ShardedStore {
+    pub fn new(store: Arc<GraphStore>, num_shards: usize) -> ShardedStore {
+        assert!(num_shards > 0);
+        ShardedStore {
+            store,
+            num_shards,
+            stats: (0..num_shards).map(|_| ShardStats::default()).collect(),
+            failure_rate: 0.0,
+            failure_seed: 0,
+            failure_counter: AtomicU64::new(0),
+        }
+    }
+
+    /// Enable transient failure injection.
+    pub fn with_failures(mut self, rate: f64, seed: u64) -> ShardedStore {
+        self.failure_rate = rate;
+        self.failure_seed = seed;
+        self
+    }
+
+    pub fn store(&self) -> &GraphStore {
+        &self.store
+    }
+
+    /// Which shard owns `node` of `set`?
+    pub fn shard_of(&self, set: &str, node: u32) -> usize {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in set.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        (mix64(h, node as u64) % self.num_shards as u64) as usize
+    }
+
+    fn maybe_fail(&self, shard: usize) -> Result<()> {
+        if self.failure_rate > 0.0 {
+            let n = self.failure_counter.fetch_add(1, Ordering::Relaxed);
+            let r = mix64(self.failure_seed, n) as f64 / u64::MAX as f64;
+            if r < self.failure_rate {
+                self.stats[shard].injected_failures.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::Sampler(format!(
+                    "transient shard failure (shard {shard}, injected)"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Out-neighbors of `node` along `edge_set` — one "RPC".
+    pub fn neighbors(&self, edge_set: &str, node: u32) -> Result<&[u32]> {
+        let ec = self.store.edge_column(edge_set)?;
+        let shard = self.shard_of(&ec.source_set, node);
+        self.stats[shard].adjacency_requests.fetch_add(1, Ordering::Relaxed);
+        self.maybe_fail(shard)?;
+        Ok(ec.neighbors(node))
+    }
+
+    /// Feature rows for a batch of nodes of one set — one "RPC" per
+    /// owning shard (the batch is grouped by shard, as a real
+    /// distributed lookup would be).
+    pub fn lookup_features(
+        &self,
+        node_set: &str,
+        nodes: &[u32],
+    ) -> Result<std::collections::BTreeMap<String, crate::graph::Feature>> {
+        let nc = self.store.node_column(node_set)?;
+        // Group by shard to count per-shard load faithfully.
+        let mut shards_hit = vec![false; self.num_shards];
+        for &n in nodes {
+            shards_hit[self.shard_of(node_set, n)] = true;
+        }
+        let mut first_hit = 0;
+        for (shard, hit) in shards_hit.iter().enumerate() {
+            if *hit {
+                self.stats[shard].feature_requests.fetch_add(1, Ordering::Relaxed);
+                first_hit = shard;
+            }
+        }
+        // One failure draw per gather: the scatter-gather is one logical
+        // RPC from the caller's perspective, so its retry loop converges
+        // for any per-call failure rate p (p^attempts), instead of
+        // compounding across shards (1-(1-p)^shards per attempt would
+        // make batched lookups unrecoverable at modest p).
+        self.maybe_fail(first_hit)?;
+        Ok(nc.gather(nodes))
+    }
+
+    /// Aggregate counters (for benches / EXPERIMENTS.md).
+    pub fn total_requests(&self) -> (u64, u64, u64) {
+        let adj = self.stats.iter().map(|s| s.adjacency_requests.load(Ordering::Relaxed)).sum();
+        let feat = self.stats.iter().map(|s| s.feature_requests.load(Ordering::Relaxed)).sum();
+        let fail = self.stats.iter().map(|s| s.injected_failures.load(Ordering::Relaxed)).sum();
+        (adj, feat, fail)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::tiny_store;
+
+    #[test]
+    fn routes_and_counts() {
+        let s = ShardedStore::new(Arc::new(tiny_store()), 4);
+        let n = s.neighbors("ab", 0).unwrap();
+        assert_eq!(n.len(), 2);
+        let feats = s.lookup_features("a", &[0, 1, 2]).unwrap();
+        assert!(feats.contains_key("x"));
+        let (adj, feat, fail) = s.total_requests();
+        assert_eq!(adj, 1);
+        assert!(feat >= 1);
+        assert_eq!(fail, 0);
+    }
+
+    #[test]
+    fn shard_assignment_balanced_and_stable() {
+        let s = ShardedStore::new(Arc::new(tiny_store()), 8);
+        let mut counts = vec![0usize; 8];
+        for n in 0..8000u32 {
+            let sh = s.shard_of("paper", n);
+            assert_eq!(sh, s.shard_of("paper", n), "stable");
+            counts[sh] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 1000).abs() < 200, "balanced: {counts:?}");
+        }
+        // Different sets hash differently.
+        assert_ne!(
+            (0..100).map(|n| s.shard_of("a", n)).collect::<Vec<_>>(),
+            (0..100).map(|n| s.shard_of("b", n)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn failure_injection_deterministic() {
+        let run = |seed: u64| {
+            let s = ShardedStore::new(Arc::new(tiny_store()), 2).with_failures(0.5, seed);
+            (0..64).map(|_| s.neighbors("ab", 0).is_err()).collect::<Vec<_>>()
+        };
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a, b, "same seed, same failures");
+        assert_ne!(a, c, "different seed, different failures");
+        assert!(a.iter().any(|&x| x), "some failures at 50%");
+        assert!(a.iter().any(|&x| !x), "some successes at 50%");
+    }
+
+    #[test]
+    fn zero_failure_rate_never_fails() {
+        let s = ShardedStore::new(Arc::new(tiny_store()), 2);
+        for _ in 0..100 {
+            s.neighbors("ab", 2).unwrap();
+        }
+        let (_, _, fail) = s.total_requests();
+        assert_eq!(fail, 0);
+    }
+}

@@ -1,0 +1,499 @@
+//! **synth-MAG**: the OGBN-MAG substitute (DESIGN.md §Substitutions).
+//!
+//! A stochastic-block heterogeneous academic graph with the exact §8
+//! schema: node sets `paper` / `author` / `institution` /
+//! `field_of_study`, edge sets `cites` (paper→paper), `writes`
+//! (author→paper), `written` (paper→author, the reverse — the sampling
+//! spec of Fig. 6 traverses it), `affiliated_with` (author→institution)
+//! and `has_topic` (paper→field_of_study).
+//!
+//! Latent structure mirrors what makes OGBN-MAG learnable:
+//! * every paper belongs to a latent *topic community*;
+//! * its venue **label** is drawn from a community-specific distribution
+//!   (so labels are predictable from community evidence);
+//! * its 128-d `feat` vector = label centroid + community centroid +
+//!   Gaussian noise (so features carry signal but not the full answer);
+//! * `cites` edges prefer same-community papers and older targets;
+//! * authors have home communities; `writes` links them to papers of
+//!   their community; `has_topic` maps communities onto fields of study;
+//! * `year` gives the temporal train/validation/test split of §8.1
+//!   (train: year ≤ split0, validation: = split1, test: ≥ split2).
+//!
+//! GNN value-add: a paper's own features give moderate accuracy; pooling
+//! neighbors (cited papers, co-authored papers, fields) denoises the
+//! community estimate, so message passing beats the feature-only
+//! baseline — the qualitative property Table 1 relies on.
+
+use std::collections::BTreeMap;
+
+use crate::schema::{EdgeSetSpec, FeatureSpec, GraphSchema, Metadata, NodeSetSpec};
+use crate::store::{EdgeColumn, GraphStore, NodeColumn};
+use crate::util::rng::{mix64, Rng};
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct MagConfig {
+    pub num_papers: usize,
+    pub num_authors: usize,
+    pub num_institutions: usize,
+    pub num_fields: usize,
+    /// Venue classes (OGBN-MAG has 349).
+    pub num_classes: usize,
+    /// Latent topic communities.
+    pub num_communities: usize,
+    /// Paper feature dimension (OGBN-MAG: 128).
+    pub feature_dim: usize,
+    /// Mean citations per paper.
+    pub mean_citations: f64,
+    /// Mean authors per paper.
+    pub mean_authors_per_paper: f64,
+    /// Mean fields of study per paper.
+    pub mean_topics: f64,
+    /// Probability a cites edge stays within the community.
+    pub community_coherence: f64,
+    /// Probability the venue label equals the community's modal venue.
+    pub label_coherence: f64,
+    /// Feature noise standard deviation.
+    pub feature_noise: f32,
+    /// Year range [min, max] inclusive; split: train ≤ max-2,
+    /// validation = max-1, test = max (like §8.1's 2017/2018/2019).
+    pub year_min: i64,
+    pub year_max: i64,
+    pub seed: u64,
+}
+
+impl Default for MagConfig {
+    fn default() -> MagConfig {
+        MagConfig {
+            num_papers: 4000,
+            num_authors: 6000,
+            num_institutions: 200,
+            num_fields: 120,
+            num_classes: 20,
+            num_communities: 20,
+            feature_dim: 128,
+            mean_citations: 8.0,
+            mean_authors_per_paper: 3.0,
+            mean_topics: 2.0,
+            community_coherence: 0.85,
+            label_coherence: 0.75,
+            feature_noise: 0.8,
+            year_min: 2010,
+            year_max: 2019,
+            seed: 17,
+        }
+    }
+}
+
+impl MagConfig {
+    /// A tiny config for unit tests.
+    pub fn tiny() -> MagConfig {
+        MagConfig {
+            num_papers: 120,
+            num_authors: 150,
+            num_institutions: 10,
+            num_fields: 12,
+            num_classes: 4,
+            num_communities: 4,
+            feature_dim: 16,
+            mean_citations: 4.0,
+            mean_authors_per_paper: 2.0,
+            mean_topics: 1.5,
+            ..MagConfig::default()
+        }
+    }
+}
+
+/// The generated dataset: store + task metadata.
+pub struct MagDataset {
+    pub store: GraphStore,
+    pub config: MagConfig,
+    /// Venue label per paper.
+    pub labels: Vec<i64>,
+    /// Publication year per paper.
+    pub years: Vec<i64>,
+    /// Ground-truth community (for diagnostics only; not a feature).
+    pub communities: Vec<u32>,
+}
+
+/// Split membership derived from years (§8.1 temporal protocol).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Validation,
+    Test,
+}
+
+impl MagDataset {
+    pub fn split_of(&self, paper: u32) -> Split {
+        let y = self.years[paper as usize];
+        if y <= self.config.year_max - 2 {
+            Split::Train
+        } else if y == self.config.year_max - 1 {
+            Split::Validation
+        } else {
+            Split::Test
+        }
+    }
+
+    /// Papers in a split.
+    pub fn papers_in_split(&self, split: Split) -> Vec<u32> {
+        (0..self.config.num_papers as u32).filter(|&p| self.split_of(p) == split).collect()
+    }
+}
+
+/// The §8 / Figure 5 schema (appendix A.6.1), parameterized by config.
+pub fn mag_schema(cfg: &MagConfig) -> GraphSchema {
+    let mut paper = NodeSetSpec::default();
+    paper.features.insert("feat".into(), FeatureSpec::f32(&[cfg.feature_dim]));
+    paper.features.insert("labels".into(), FeatureSpec::i64(&[]));
+    paper.features.insert("year".into(), FeatureSpec::i64(&[]));
+    paper.metadata = Metadata {
+        filename: Some("nodes-paper.gts".into()),
+        cardinality: Some(cfg.num_papers as u64),
+    };
+    let mut author = NodeSetSpec::default();
+    author.metadata =
+        Metadata { filename: None, cardinality: Some(cfg.num_authors as u64) };
+    // Institutions and fields of study carry only an id embedding handle
+    // ("#id" in A.6.1); models learn embedding tables for them (§8.1).
+    let mut institution = NodeSetSpec::default();
+    institution.metadata =
+        Metadata { filename: None, cardinality: Some(cfg.num_institutions as u64) };
+    let mut field = NodeSetSpec::default();
+    field.metadata = Metadata { filename: None, cardinality: Some(cfg.num_fields as u64) };
+
+    let es = |src: &str, tgt: &str| EdgeSetSpec {
+        source: src.into(),
+        target: tgt.into(),
+        features: BTreeMap::new(),
+        metadata: Metadata::default(),
+    };
+    GraphSchema::default()
+        .with_node_set("paper", paper)
+        .with_node_set("author", author)
+        .with_node_set("institution", institution)
+        .with_node_set("field_of_study", field)
+        .with_edge_set("cites", es("paper", "paper"))
+        .with_edge_set("writes", es("author", "paper"))
+        .with_edge_set("written", es("paper", "author"))
+        .with_edge_set("affiliated_with", es("author", "institution"))
+        .with_edge_set("has_topic", es("paper", "field_of_study"))
+}
+
+/// Generate the dataset.
+pub fn generate(cfg: &MagConfig) -> MagDataset {
+    let mut rng = Rng::new(cfg.seed);
+    let k = cfg.num_communities;
+
+    // --- latent assignments -------------------------------------------------
+    // Papers → communities (Zipf-ish so communities are imbalanced like
+    // real venues), years uniform.
+    let communities: Vec<u32> =
+        (0..cfg.num_papers).map(|_| (rng.zipf(k, 1.5) - 1) as u32).collect();
+    let years: Vec<i64> = (0..cfg.num_papers)
+        .map(|_| cfg.year_min + rng.uniform((cfg.year_max - cfg.year_min + 1) as usize) as i64)
+        .collect();
+
+    // Community → modal venue map (surjective onto classes, with noise).
+    let modal_venue: Vec<i64> = (0..k).map(|c| (c % cfg.num_classes) as i64).collect();
+    let labels: Vec<i64> = communities
+        .iter()
+        .map(|&c| {
+            if rng.chance(cfg.label_coherence) {
+                modal_venue[c as usize]
+            } else {
+                rng.uniform(cfg.num_classes) as i64
+            }
+        })
+        .collect();
+
+    // Label + community centroids for features.
+    let centroid = |tag: u64, id: u64, dim: usize| -> Vec<f32> {
+        let mut s = mix64(cfg.seed ^ tag, id);
+        (0..dim)
+            .map(|_| {
+                let v = crate::util::rng::splitmix64(&mut s);
+                ((v >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+            })
+            .collect()
+    };
+    let label_centroids: Vec<Vec<f32>> =
+        (0..cfg.num_classes).map(|l| centroid(0x1abe1, l as u64, cfg.feature_dim)).collect();
+    let comm_centroids: Vec<Vec<f32>> =
+        (0..k).map(|c| centroid(0xc0331, c as u64, cfg.feature_dim)).collect();
+
+    let mut feat = Vec::with_capacity(cfg.num_papers * cfg.feature_dim);
+    for p in 0..cfg.num_papers {
+        let lc = &label_centroids[labels[p] as usize];
+        let cc = &comm_centroids[communities[p] as usize];
+        for d in 0..cfg.feature_dim {
+            feat.push(lc[d] + 0.5 * cc[d] + cfg.feature_noise * rng.normal());
+        }
+    }
+
+    // Authors → home community, institution.
+    let author_comm: Vec<u32> =
+        (0..cfg.num_authors).map(|_| (rng.zipf(k, 1.5) - 1) as u32).collect();
+    let author_inst: Vec<u32> =
+        (0..cfg.num_authors).map(|_| rng.uniform(cfg.num_institutions) as u32).collect();
+
+    // Community → member papers / authors (for edge sampling).
+    let mut comm_papers: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (p, &c) in communities.iter().enumerate() {
+        comm_papers[c as usize].push(p as u32);
+    }
+    let mut comm_authors: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (a, &c) in author_comm.iter().enumerate() {
+        comm_authors[c as usize].push(a as u32);
+    }
+
+    // --- edges ---------------------------------------------------------------
+    // cites: prefer same community and older targets.
+    let mut cites = Vec::new();
+    for p in 0..cfg.num_papers as u32 {
+        let c = communities[p as usize] as usize;
+        let n_cites = sample_count(&mut rng, cfg.mean_citations);
+        for _ in 0..n_cites {
+            let pool: &[u32] = if rng.chance(cfg.community_coherence) && comm_papers[c].len() > 1
+            {
+                &comm_papers[c]
+            } else {
+                &[]
+            };
+            let q = if pool.is_empty() {
+                rng.uniform(cfg.num_papers) as u32
+            } else {
+                *rng.choose(pool)
+            };
+            if q != p && years[q as usize] <= years[p as usize] {
+                cites.push((p, q));
+            }
+        }
+    }
+    cites.sort_unstable();
+    cites.dedup();
+
+    // writes: each paper gets authors from its community.
+    let mut writes = Vec::new();
+    for p in 0..cfg.num_papers as u32 {
+        let c = communities[p as usize] as usize;
+        let n_auth = 1 + sample_count(&mut rng, cfg.mean_authors_per_paper - 1.0);
+        for _ in 0..n_auth {
+            let a = if !comm_authors[c].is_empty() && rng.chance(cfg.community_coherence) {
+                *rng.choose(&comm_authors[c])
+            } else {
+                rng.uniform(cfg.num_authors) as u32
+            };
+            writes.push((a, p));
+        }
+    }
+    writes.sort_unstable();
+    writes.dedup();
+
+    // affiliated_with: author → their institution.
+    let affiliated: Vec<(u32, u32)> =
+        (0..cfg.num_authors as u32).map(|a| (a, author_inst[a as usize])).collect();
+
+    // has_topic: community-correlated fields.
+    let mut has_topic = Vec::new();
+    let fields_per_comm = (cfg.num_fields / k).max(1);
+    for p in 0..cfg.num_papers as u32 {
+        let c = communities[p as usize] as usize;
+        let n_topics = 1 + sample_count(&mut rng, cfg.mean_topics - 1.0);
+        for _ in 0..n_topics {
+            let f = if rng.chance(cfg.community_coherence) {
+                (c * fields_per_comm + rng.uniform(fields_per_comm)) % cfg.num_fields
+            } else {
+                rng.uniform(cfg.num_fields)
+            };
+            has_topic.push((p, f as u32));
+        }
+    }
+    has_topic.sort_unstable();
+    has_topic.dedup();
+
+    // --- assemble store ------------------------------------------------------
+    let schema = mag_schema(cfg);
+    let mut store = GraphStore::new(schema);
+
+    let mut paper_col = NodeColumn::new(cfg.num_papers);
+    paper_col.add_f32("feat", cfg.feature_dim, feat).unwrap();
+    paper_col.add_i64("labels", 0, labels.clone()).unwrap();
+    paper_col.add_i64("year", 0, years.clone()).unwrap();
+    store.nodes.insert("paper".into(), paper_col);
+    store.nodes.insert("author".into(), NodeColumn::new(cfg.num_authors));
+    store.nodes.insert("institution".into(), NodeColumn::new(cfg.num_institutions));
+    store.nodes.insert("field_of_study".into(), NodeColumn::new(cfg.num_fields));
+
+    let writes_col = EdgeColumn::from_edge_list("author", "paper", cfg.num_authors, &writes);
+    let written_col = writes_col.reversed(cfg.num_papers);
+    store.edges.insert(
+        "cites".into(),
+        EdgeColumn::from_edge_list("paper", "paper", cfg.num_papers, &cites),
+    );
+    store.edges.insert("writes".into(), writes_col);
+    store.edges.insert("written".into(), written_col);
+    store.edges.insert(
+        "affiliated_with".into(),
+        EdgeColumn::from_edge_list("author", "institution", cfg.num_authors, &affiliated),
+    );
+    store.edges.insert(
+        "has_topic".into(),
+        EdgeColumn::from_edge_list("paper", "field_of_study", cfg.num_papers, &has_topic),
+    );
+
+    store.validate().expect("generated store is valid");
+    MagDataset { store, config: cfg.clone(), labels, years, communities }
+}
+
+/// Poisson-ish count with the given mean (geometric mixture — cheap and
+/// adequate for degree distributions).
+fn sample_count(rng: &mut Rng, mean: f64) -> usize {
+    if mean <= 0.0 {
+        return 0;
+    }
+    // Sum of two geometrics approximates a modest-variance count.
+    let p = 1.0 / (1.0 + mean / 2.0);
+    let mut total = 0;
+    for _ in 0..2 {
+        let mut n = 0;
+        while !rng.chance(p) && n < 10_000 {
+            n += 1;
+        }
+        total += n;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_valid_store() {
+        let ds = generate(&MagConfig::tiny());
+        ds.store.validate().unwrap();
+        assert_eq!(ds.store.node_count("paper").unwrap(), 120);
+        assert_eq!(ds.store.node_count("author").unwrap(), 150);
+        assert!(ds.store.edge_column("cites").unwrap().num_edges() > 50);
+        assert!(ds.store.edge_column("writes").unwrap().num_edges() >= 120);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&MagConfig::tiny());
+        let b = generate(&MagConfig::tiny());
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(
+            a.store.edge_column("cites").unwrap().targets,
+            b.store.edge_column("cites").unwrap().targets
+        );
+        let mut cfg = MagConfig::tiny();
+        cfg.seed = 99;
+        let c = generate(&cfg);
+        assert_ne!(a.labels, c.labels);
+    }
+
+    #[test]
+    fn written_is_reverse_of_writes() {
+        let ds = generate(&MagConfig::tiny());
+        let writes = ds.store.edge_column("writes").unwrap();
+        let written = ds.store.edge_column("written").unwrap();
+        assert_eq!(writes.num_edges(), written.num_edges());
+        // Every (a -> p) in writes appears as (p -> a) in written.
+        for a in 0..ds.config.num_authors as u32 {
+            for &p in writes.neighbors(a) {
+                assert!(written.neighbors(p).contains(&a));
+            }
+        }
+    }
+
+    #[test]
+    fn cites_respects_time() {
+        let ds = generate(&MagConfig::tiny());
+        let cites = ds.store.edge_column("cites").unwrap();
+        for p in 0..ds.config.num_papers as u32 {
+            for &q in cites.neighbors(p) {
+                assert!(
+                    ds.years[q as usize] <= ds.years[p as usize],
+                    "paper can only cite same-year or older"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn splits_partition_papers() {
+        let ds = generate(&MagConfig::tiny());
+        let train = ds.papers_in_split(Split::Train);
+        let val = ds.papers_in_split(Split::Validation);
+        let test = ds.papers_in_split(Split::Test);
+        assert_eq!(train.len() + val.len() + test.len(), ds.config.num_papers);
+        assert!(!train.is_empty() && !val.is_empty() && !test.is_empty());
+        for &p in &train {
+            assert!(ds.years[p as usize] <= ds.config.year_max - 2);
+        }
+    }
+
+    #[test]
+    fn labels_in_range_and_correlated_with_community() {
+        let ds = generate(&MagConfig::tiny());
+        assert!(ds.labels.iter().all(|&l| l >= 0 && l < ds.config.num_classes as i64));
+        // Label coherence: most papers of a community share its modal venue.
+        let mut agree = 0;
+        for p in 0..ds.config.num_papers {
+            let modal = (ds.communities[p] as usize % ds.config.num_classes) as i64;
+            if ds.labels[p] == modal {
+                agree += 1;
+            }
+        }
+        let frac = agree as f64 / ds.config.num_papers as f64;
+        assert!(frac > 0.6, "label-community coherence {frac}");
+    }
+
+    #[test]
+    fn features_carry_label_signal() {
+        // Nearest-centroid on the generated features should beat chance
+        // by a wide margin — this is what makes the dataset learnable.
+        let cfg = MagConfig::tiny();
+        let ds = generate(&cfg);
+        let col = ds.store.node_column("paper").unwrap();
+        let (dim, feat) = &col.f32s["feat"];
+        // Per-label centroid of the train papers.
+        let mut sums = vec![0.0f64; cfg.num_classes * dim];
+        let mut counts = vec![0usize; cfg.num_classes];
+        for &p in &ds.papers_in_split(Split::Train) {
+            let l = ds.labels[p as usize] as usize;
+            counts[l] += 1;
+            for d in 0..*dim {
+                sums[l * dim + d] += feat[p as usize * dim + d] as f64;
+            }
+        }
+        let mut correct = 0;
+        let test = ds.papers_in_split(Split::Test);
+        for &p in &test {
+            let mut best = (f64::MAX, 0usize);
+            for l in 0..cfg.num_classes {
+                if counts[l] == 0 {
+                    continue;
+                }
+                let mut dist = 0.0;
+                for d in 0..*dim {
+                    let c = sums[l * dim + d] / counts[l] as f64;
+                    let x = feat[p as usize * dim + d] as f64 - c;
+                    dist += x * x;
+                }
+                if dist < best.0 {
+                    best = (dist, l);
+                }
+            }
+            if best.1 == ds.labels[p as usize] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        let chance = 1.0 / cfg.num_classes as f64;
+        assert!(acc > 2.0 * chance, "nearest-centroid acc {acc} vs chance {chance}");
+    }
+}

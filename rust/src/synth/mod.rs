@@ -1,0 +1,14 @@
+//! Synthetic dataset generators.
+//!
+//! The paper's running examples are (a) the recommendation-system graph
+//! of Figure 2 and (b) OGBN-MAG (§8). OGBN-MAG itself is not available
+//! in this offline environment, so [`mag`] generates **synth-MAG**: a
+//! stochastic-block heterogeneous academic graph with the exact §8
+//! schema (paper / author / institution / field_of_study node sets and
+//! cites / writes / written / affiliated_with / has_topic edge sets),
+//! 128-d paper features correlated with venue labels, and a temporal
+//! train/validation/test split by paper year — the same protocol the
+//! paper describes. See DESIGN.md §Substitutions.
+
+pub mod mag;
+pub mod recsys;

@@ -1,0 +1,76 @@
+//! The recommendation-system example graph of Figure 2 / appendix A.1.
+//!
+//! Used by the `recsys_spending` example and by data-model tests: it is
+//! the paper's own worked example, so reproducing its tensors exactly
+//! (including the `[4, 2]` flight→Yumiko edge) is a correctness check on
+//! the whole data model.
+
+use crate::graph::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};
+
+/// Build the exact Figure 2b / appendix A.1 GraphTensor.
+pub fn recsys_example_graph() -> GraphTensor {
+    let items = NodeSet::new(vec![6])
+        .with_feature(
+            "category",
+            Feature::str_vec(vec!["food", "show ticket", "shoes", "book", "flight", "groceries"]),
+        )
+        .with_feature(
+            "price",
+            Feature::ragged_f32(vec![
+                vec![22.34, 23.42, 12.99],
+                vec![27.99, 34.50],
+                vec![89.99],
+                vec![24.99, 45.00],
+                vec![350.00],
+                vec![45.13, 79.80, 12.35],
+            ]),
+        );
+    let users = NodeSet::new(vec![4])
+        .with_feature("name", Feature::str_vec(vec!["Shawn", "Jeorg", "Yumiko", "Sophie"]))
+        .with_feature("age", Feature::i64_vec(vec![24, 32, 27, 38]))
+        .with_feature("country", Feature::i64_vec(vec![3, 2, 1, 0]));
+    let purchased = EdgeSet::new(
+        vec![7],
+        Adjacency {
+            source_set: "items".into(),
+            target_set: "users".into(),
+            source: vec![0, 1, 2, 3, 4, 5, 5],
+            target: vec![1, 1, 0, 0, 2, 3, 0],
+        },
+    );
+    let is_friend = EdgeSet::new(
+        vec![3],
+        Adjacency {
+            source_set: "users".into(),
+            target_set: "users".into(),
+            source: vec![1, 2, 3],
+            target: vec![0, 0, 0],
+        },
+    );
+    let context =
+        Context::default().with_feature("scores", Feature::f32_mat(4, vec![0.45, 0.98, 0.10, 0.25]));
+    GraphTensor::from_pieces(
+        context,
+        [("items".to_string(), items), ("users".to_string(), users)].into(),
+        [("purchased".to_string(), purchased), ("is-friend".to_string(), is_friend)].into(),
+    )
+    .expect("recsys example graph is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_appendix_a1() {
+        let g = recsys_example_graph();
+        assert_eq!(g.num_nodes("items").unwrap(), 6);
+        assert_eq!(g.num_nodes("users").unwrap(), 4);
+        assert_eq!(g.num_edges("purchased").unwrap(), 7);
+        assert_eq!(g.num_edges("is-friend").unwrap(), 3);
+        let scores = g.context.feature("scores").unwrap();
+        let (dims, data) = scores.as_f32().unwrap();
+        assert_eq!(dims, &[4]);
+        assert_eq!(data, &[0.45, 0.98, 0.10, 0.25]);
+    }
+}

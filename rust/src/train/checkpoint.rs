@@ -1,0 +1,176 @@
+//! Parameter checkpoints (the SavedModel stand-in, §6.2.2 / §6.3).
+//!
+//! Format: magic `TFGC`, then per tensor: name, dtype tag, shape,
+//! raw little-endian data, followed by a trailing FNV checksum of the
+//! whole payload. Restorable by [`load`] and consumed by the serving
+//! path as its "exported model".
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::runtime::HostTensor;
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"TFGC";
+
+fn fnv(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Save named tensors to a checkpoint file.
+pub fn save(path: &Path, params: &[(String, HostTensor)]) -> Result<()> {
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&(params.len() as u64).to_le_bytes());
+    for (name, t) in params {
+        payload.extend_from_slice(&(name.len() as u64).to_le_bytes());
+        payload.extend_from_slice(name.as_bytes());
+        let shape = t.shape();
+        payload.push(match t {
+            HostTensor::F32(..) => 0,
+            HostTensor::I32(..) => 1,
+            HostTensor::I64(..) => 2,
+        });
+        payload.extend_from_slice(&(shape.len() as u64).to_le_bytes());
+        for &d in shape {
+            payload.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        match t {
+            HostTensor::F32(_, v) => {
+                for x in v {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            HostTensor::I32(_, v) => {
+                for x in v {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            HostTensor::I64(_, v) => {
+                for x in v {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&payload)?;
+    f.write_all(&fnv(&payload).to_le_bytes())?;
+    Ok(())
+}
+
+/// Load a checkpoint file.
+pub fn load(path: &Path) -> Result<Vec<(String, HostTensor)>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.len() < 12 || &bytes[..4] != MAGIC {
+        return Err(Error::Codec(format!("{}: not a checkpoint", path.display())));
+    }
+    let payload = &bytes[4..bytes.len() - 8];
+    let want = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if fnv(payload) != want {
+        return Err(Error::Codec(format!("{}: checksum mismatch", path.display())));
+    }
+    let mut i = 0usize;
+    let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+        if *i + n > payload.len() {
+            return Err(Error::Codec("checkpoint truncated".into()));
+        }
+        let s = &payload[*i..*i + n];
+        *i += n;
+        Ok(s)
+    };
+    let read_u64 =
+        |i: &mut usize| -> Result<u64> { Ok(u64::from_le_bytes(take(i, 8)?.try_into().unwrap())) };
+    let count = read_u64(&mut i)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u64(&mut i)? as usize;
+        let name = String::from_utf8(take(&mut i, name_len)?.to_vec())
+            .map_err(|_| Error::Codec("bad name".into()))?;
+        let tag = take(&mut i, 1)?[0];
+        let rank = read_u64(&mut i)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u64(&mut i)? as usize);
+        }
+        let elems = shape.iter().product::<usize>().max(1);
+        let t = match tag {
+            0 => {
+                let raw = take(&mut i, elems * 4)?;
+                HostTensor::F32(
+                    shape,
+                    raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                )
+            }
+            1 => {
+                let raw = take(&mut i, elems * 4)?;
+                HostTensor::I32(
+                    shape,
+                    raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                )
+            }
+            2 => {
+                let raw = take(&mut i, elems * 8)?;
+                HostTensor::I64(
+                    shape,
+                    raw.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect(),
+                )
+            }
+            t => return Err(Error::Codec(format!("bad dtype tag {t}"))),
+        };
+        out.push((name, t));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("tfgnn-ckpt-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let params = vec![
+            ("param.w".to_string(), HostTensor::F32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-7, 9.9])),
+            ("param.ids".to_string(), HostTensor::I32(vec![4], vec![1, -2, 3, 4])),
+            ("param.big".to_string(), HostTensor::I64(vec![], vec![i64::MAX])),
+        ];
+        let p = tmp("rt.ckpt");
+        save(&p, &params).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(params, back);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let params = vec![("w".to_string(), HostTensor::F32(vec![2], vec![1.0, 2.0]))];
+        let p = tmp("corrupt.ckpt");
+        save(&p, &params).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[10] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn not_a_checkpoint() {
+        let p = tmp("junk.ckpt");
+        std::fs::write(&p, b"hello world junk").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

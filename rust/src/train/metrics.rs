@@ -1,0 +1,80 @@
+//! Masked metric accumulation over an epoch.
+
+use super::StepMetrics;
+
+/// Accumulates weighted loss and accuracy across steps.
+#[derive(Debug, Default, Clone)]
+pub struct EpochMetrics {
+    pub steps: usize,
+    pub loss_sum: f64,
+    pub correct: f64,
+    pub weight: f64,
+}
+
+impl EpochMetrics {
+    pub fn add(&mut self, m: StepMetrics) {
+        self.steps += 1;
+        self.loss_sum += m.loss as f64 * m.weight as f64;
+        self.correct += m.correct as f64;
+        self.weight += m.weight as f64;
+    }
+
+    /// Example-weighted mean loss.
+    pub fn loss(&self) -> f64 {
+        if self.weight > 0.0 {
+            self.loss_sum / self.weight
+        } else {
+            0.0
+        }
+    }
+
+    /// Accuracy over real (unmasked) roots.
+    pub fn accuracy(&self) -> f64 {
+        if self.weight > 0.0 {
+            self.correct / self.weight
+        } else {
+            0.0
+        }
+    }
+
+    /// Number of real examples seen.
+    pub fn examples(&self) -> usize {
+        self.weight as usize
+    }
+}
+
+impl std::fmt::Display for EpochMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "loss {:.4} acc {:.4} ({} examples, {} steps)",
+            self.loss(),
+            self.accuracy(),
+            self.examples(),
+            self.steps
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_accumulation() {
+        let mut m = EpochMetrics::default();
+        m.add(StepMetrics { loss: 1.0, correct: 4.0, weight: 8.0 });
+        m.add(StepMetrics { loss: 3.0, correct: 2.0, weight: 4.0 });
+        assert_eq!(m.steps, 2);
+        assert!((m.loss() - (1.0 * 8.0 + 3.0 * 4.0) / 12.0).abs() < 1e-9);
+        assert!((m.accuracy() - 0.5).abs() < 1e-9);
+        assert_eq!(m.examples(), 12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = EpochMetrics::default();
+        assert_eq!(m.loss(), 0.0);
+        assert_eq!(m.accuracy(), 0.0);
+    }
+}

@@ -1,0 +1,320 @@
+//! Training on the AOT train-step (paper §6.2).
+//!
+//! [`Trainer`] owns the compiled `init`/`train_step`/`eval_step`
+//! programs and the **device-resident** model state: params, Adam
+//! moments and the step counter stay as PJRT buffers between steps;
+//! each step uploads only the batch tensors and downloads only the
+//! three scalar metrics. Hyper-parameters (`hp.*` slots) are runtime
+//! scalars so the sweep harness varies them per run.
+//!
+//! [`metrics::EpochMetrics`] accumulates masked loss/accuracy;
+//! [`checkpoint`] saves/restores params with the same binary codec as
+//! graph records (SavedModel stand-in, §6.2.2).
+
+pub mod checkpoint;
+pub mod metrics;
+
+use std::path::Path;
+
+use crate::graph::pad::Padded;
+use crate::runtime::batch::{build_batch, is_batch_slot, RootTask};
+use crate::runtime::manifest::ModelEntry;
+use crate::runtime::{host_to_literal, HostTensor, Program, Runtime};
+use crate::{Error, Result};
+
+/// Runtime hyper-parameters (the A.6.3 search space's continuous part).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hyperparams {
+    pub learning_rate: f32,
+    pub dropout: f32,
+    pub weight_decay: f32,
+}
+
+impl Hyperparams {
+    pub fn from_manifest(m: &crate::runtime::manifest::Manifest) -> Result<Hyperparams> {
+        let t = m.config.get("train")?;
+        Ok(Hyperparams {
+            learning_rate: t.get("learning_rate")?.as_f64()? as f32,
+            dropout: m.config.get("model")?.get("dropout")?.as_f64()? as f32,
+            weight_decay: t.get("weight_decay")?.as_f64()? as f32,
+        })
+    }
+}
+
+/// Scalar metrics from one train/eval step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub correct: f32,
+    pub weight: f32,
+}
+
+/// The trainer: compiled programs + model/optimizer state.
+pub struct Trainer {
+    pub rt: Runtime,
+    pub entry: ModelEntry,
+    init_prog: Program,
+    train_prog: Program,
+    eval_prog: Program,
+    /// Model state as literals: params ++ adam_m ++ adam_v ++ [step].
+    /// (PJRT in this crate returns a single tuple buffer per execution
+    /// with no buffer-level untuple, so state round-trips as literals —
+    /// a host memcpy per step on the CPU client; see §Perf.)
+    state: Vec<xla::Literal>,
+    /// Number of param leaves.
+    n_params: usize,
+    pub task: RootTask,
+    pub hp: Hyperparams,
+    pub steps_done: u64,
+}
+
+impl Trainer {
+    /// Load programs, run `init`, set up state.
+    pub fn new(
+        rt: Runtime,
+        artifacts_dir: &Path,
+        entry: &ModelEntry,
+        task: RootTask,
+        hp: Hyperparams,
+    ) -> Result<Trainer> {
+        let init_prog = rt.load_program(artifacts_dir, entry.program("init")?)?;
+        let train_prog = rt.load_program(artifacts_dir, entry.program("train_step")?)?;
+        let eval_prog = rt.load_program(artifacts_dir, entry.program("eval_step")?)?;
+
+        // The trainer feeds state positionally: train_step's leading
+        // inputs must be params ++ adam_m ++ adam_v ++ step, unpruned.
+        // (jax only prunes dead args; in train_step every param feeds
+        // its own Adam update, so this holds for any arch — assert it
+        // loudly in case a future model breaks the invariant.)
+        let n = init_prog.spec.outputs.len();
+        for (i, slot) in train_prog.spec.inputs.iter().take(3 * n + 1).enumerate() {
+            let want_prefix = match i {
+                k if k < n => "param.",
+                k if k < 2 * n => "adam_m.",
+                k if k < 3 * n => "adam_v.",
+                _ => "step",
+            };
+            if !slot.name.starts_with(want_prefix) {
+                return Err(Error::Runtime(format!(
+                    "train_step slot {i} is {:?}, expected prefix {want_prefix:?} — \
+                     state layout was pruned; regenerate artifacts",
+                    slot.name
+                )));
+            }
+        }
+        let params = init_prog.execute_literals(&[])?;
+        let n_params = init_prog.spec.outputs.len();
+        if params.len() != n_params {
+            return Err(Error::Runtime(format!(
+                "init produced {} literals for {} params",
+                params.len(),
+                n_params
+            )));
+        }
+        // Zero Adam state mirrors each param's shape.
+        let mut state = Vec::with_capacity(3 * n_params + 1);
+        for p in params {
+            state.push(p);
+        }
+        for _slot in 0..2 {
+            for i in 0..n_params {
+                let spec = &init_prog.spec.outputs[i];
+                let zeros = HostTensor::F32(spec.shape.clone(), vec![0.0; spec.elems()]);
+                state.push(host_to_literal(&zeros)?);
+            }
+        }
+        state.push(host_to_literal(&HostTensor::I32(vec![], vec![0]))?);
+        Ok(Trainer {
+            rt,
+            entry: entry.clone(),
+            init_prog,
+            train_prog,
+            eval_prog,
+            state,
+            n_params,
+            task,
+            hp,
+            steps_done: 0,
+        })
+    }
+
+    /// Re-initialize params and optimizer state without recompiling the
+    /// programs — the sweep harness runs one trial per reset (compiling
+    /// the train-step HLO dominates trial cost otherwise; see §Perf).
+    pub fn reset(&mut self) -> Result<()> {
+        let params = self.init_prog.execute_literals(&[])?;
+        let mut state = Vec::with_capacity(3 * self.n_params + 1);
+        for p in params {
+            state.push(p);
+        }
+        for _slot in 0..2 {
+            for i in 0..self.n_params {
+                let spec = &self.init_prog.spec.outputs[i];
+                let zeros = HostTensor::F32(spec.shape.clone(), vec![0.0; spec.elems()]);
+                state.push(host_to_literal(&zeros)?);
+            }
+        }
+        state.push(host_to_literal(&HostTensor::I32(vec![], vec![0]))?);
+        self.state = state;
+        self.steps_done = 0;
+        Ok(())
+    }
+
+    /// Execute one training step on a padded batch.
+    pub fn train_batch(&mut self, padded: &Padded) -> Result<StepMetrics> {
+        let inputs = &self.train_prog.spec.inputs;
+        let n_state = 3 * self.n_params + 1;
+        let hp_lr = host_to_literal(&HostTensor::F32(vec![], vec![self.hp.learning_rate]))?;
+        let hp_do = host_to_literal(&HostTensor::F32(vec![], vec![self.hp.dropout]))?;
+        let hp_wd = host_to_literal(&HostTensor::F32(vec![], vec![self.hp.weight_decay]))?;
+        let batch = build_batch(padded, &self.task, inputs)?;
+        let mut batch_lits = Vec::with_capacity(batch.len());
+        for (idx, t) in &batch {
+            if !t.matches(&inputs[*idx]) {
+                return Err(Error::Runtime(format!(
+                    "batch slot {} mismatch: built {}{:?}, manifest {}{:?}",
+                    inputs[*idx].name,
+                    t.dtype_name(),
+                    t.shape(),
+                    inputs[*idx].dtype,
+                    inputs[*idx].shape,
+                )));
+            }
+            batch_lits.push((*idx, host_to_literal(t)?));
+        }
+
+        // Assemble argument list in manifest order.
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
+        let mut batch_iter = batch_lits.iter().peekable();
+        for (i, spec) in inputs.iter().enumerate() {
+            if i < n_state {
+                args.push(&self.state[i]);
+            } else if spec.name == "hp.learning_rate" {
+                args.push(&hp_lr);
+            } else if spec.name == "hp.dropout" {
+                args.push(&hp_do);
+            } else if spec.name == "hp.weight_decay" {
+                args.push(&hp_wd);
+            } else if is_batch_slot(&spec.name) {
+                let (idx, lit) = batch_iter
+                    .next()
+                    .ok_or_else(|| Error::Runtime("batch slots exhausted".into()))?;
+                if *idx != i {
+                    return Err(Error::Runtime(format!(
+                        "batch slot order mismatch at {} ({})",
+                        i, spec.name
+                    )));
+                }
+                args.push(lit);
+            } else {
+                return Err(Error::Runtime(format!("unhandled input slot {:?}", spec.name)));
+            }
+        }
+
+        let mut outputs = self.train_prog.execute_literals(&args)?;
+        // Outputs: params ++ m ++ v ++ step ++ (loss, correct, weight).
+        let weight = scalar_f32(&outputs[n_state + 2])?;
+        let correct = scalar_f32(&outputs[n_state + 1])?;
+        let loss = scalar_f32(&outputs[n_state])?;
+        outputs.truncate(n_state);
+        self.state = outputs;
+        self.steps_done += 1;
+        Ok(StepMetrics { loss, correct, weight })
+    }
+
+    /// Evaluate one padded batch (no state change).
+    ///
+    /// Eval/forward artifacts may have a *pruned* signature (jax drops
+    /// dead arguments, e.g. the last layer's author-side weights), so
+    /// param slots are resolved by name against the train-step layout.
+    pub fn eval_batch(&self, padded: &Padded) -> Result<StepMetrics> {
+        let inputs = &self.eval_prog.spec.inputs;
+        let batch = build_batch(padded, &self.task, inputs)?;
+        let mut batch_lits = Vec::with_capacity(batch.len());
+        for (idx, t) in &batch {
+            batch_lits.push((*idx, host_to_literal(t)?));
+        }
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
+        let mut batch_iter = batch_lits.iter();
+        for (i, spec) in inputs.iter().enumerate() {
+            if let Some(name) = spec.name.strip_prefix("param.") {
+                args.push(&self.state[self.param_slot(name)?]);
+            } else if is_batch_slot(&spec.name) {
+                let (idx, lit) = batch_iter
+                    .next()
+                    .ok_or_else(|| Error::Runtime("batch slots exhausted".into()))?;
+                if *idx != i {
+                    return Err(Error::Runtime("eval batch slot order mismatch".into()));
+                }
+                args.push(lit);
+            } else {
+                return Err(Error::Runtime(format!("unhandled eval slot {:?}", spec.name)));
+            }
+        }
+        let outputs = self.eval_prog.execute_literals(&args)?;
+        Ok(StepMetrics {
+            loss: scalar_f32(&outputs[0])?,
+            correct: scalar_f32(&outputs[1])?,
+            weight: scalar_f32(&outputs[2])?,
+        })
+    }
+
+    /// Download current params (name → tensor), e.g. for checkpointing.
+    pub fn params_to_host(&self) -> Result<Vec<(String, HostTensor)>> {
+        let mut out = Vec::with_capacity(self.n_params);
+        for i in 0..self.n_params {
+            let spec = &self.train_prog.spec.inputs[i];
+            out.push((spec.name.clone(), crate::runtime::literal_to_host(&self.state[i])?));
+        }
+        Ok(out)
+    }
+
+    /// Restore params from host tensors (checkpoint load). Adam state
+    /// and step are reset.
+    pub fn params_from_host(&mut self, params: &[(String, HostTensor)]) -> Result<()> {
+        if params.len() != self.n_params {
+            return Err(Error::Runtime(format!(
+                "checkpoint has {} params, model wants {}",
+                params.len(),
+                self.n_params
+            )));
+        }
+        for (i, (name, t)) in params.iter().enumerate() {
+            let spec = &self.train_prog.spec.inputs[i];
+            if &spec.name != name || !t.matches(spec) {
+                return Err(Error::Runtime(format!(
+                    "checkpoint param {i} ({name}) does not match manifest slot {}",
+                    spec.name
+                )));
+            }
+            self.state[i] = host_to_literal(t)?;
+        }
+        Ok(())
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.entry.param_count
+    }
+
+    /// State index of a named param (train-step layout).
+    fn param_slot(&self, name: &str) -> Result<usize> {
+        let want = format!("param.{name}");
+        self.train_prog
+            .spec
+            .inputs[..self.n_params]
+            .iter()
+            .position(|t| t.name == want)
+            .ok_or_else(|| Error::Runtime(format!("no param slot {want:?}")))
+    }
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    match crate::runtime::literal_to_host(lit)? {
+        HostTensor::F32(_, v) if v.len() == 1 => Ok(v[0]),
+        other => Err(Error::Runtime(format!(
+            "expected scalar f32, got {}{:?}",
+            other.dtype_name(),
+            other.shape()
+        ))),
+    }
+}

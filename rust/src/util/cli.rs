@@ -1,0 +1,171 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and a generated usage string. Used by
+//! `rust/src/main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line: positionals plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates option parsing.
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let val = match inline_val {
+                    Some(v) => Some(v),
+                    None => {
+                        // Take the next token as a value unless it looks
+                        // like another option.
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => it.next(),
+                            _ => None,
+                        }
+                    }
+                };
+                let entry = args.options.entry(key).or_default();
+                if let Some(v) = val {
+                    entry.push(v);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Was `--key` present (with or without a value)?
+    pub fn flag(&self, key: &str) -> bool {
+        self.options.contains_key(key)
+    }
+
+    /// Last value of `--key`, if any.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeated `--key`.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.options
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Required string option.
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| Error::Pipeline(format!("missing required option --{key}")))
+    }
+
+    /// Typed option with a default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| Error::Pipeline(format!("bad value for --{key}: {s:?}"))),
+        }
+    }
+
+    /// First positional (typically the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Positionals after the subcommand.
+    pub fn rest(&self) -> &[String] {
+        if self.positional.is_empty() {
+            &[]
+        } else {
+            &self.positional[1..]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("train --steps 100 --verbose --out=dir/x");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get("steps"), Some("100"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("dir/x"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("x --n 5");
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 5);
+        assert_eq!(a.get_or("m", 7usize).unwrap(), 7);
+        assert!(a.get_or::<usize>("n", 0).is_ok());
+        let b = parse("x --n five");
+        assert!(b.get_or::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse("run --fast --steps 3");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("steps"), Some("3"));
+        // --fast consumed no value because --steps starts with --.
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn repeated_options() {
+        let a = parse("x --dim 1 --dim 2 --dim 3");
+        assert_eq!(a.get_all("dim"), vec!["1", "2", "3"]);
+        assert_eq!(a.get("dim"), Some("3"));
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse("x --k v -- --not-an-option pos2");
+        assert_eq!(a.positional, vec!["x", "--not-an-option", "pos2"]);
+    }
+
+    #[test]
+    fn required_missing() {
+        let a = parse("x");
+        assert!(a.req("needed").is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // A value starting with '-' (not '--') is consumed as a value.
+        let a = parse("x --lr -0.5");
+        assert_eq!(a.get("lr"), Some("-0.5"));
+    }
+}

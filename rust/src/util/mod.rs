@@ -1,0 +1,16 @@
+//! From-scratch substrates.
+//!
+//! The build image is offline and only the `xla` crate's dependency
+//! closure is vendored, so the generic infrastructure a project would
+//! normally pull from crates.io is implemented here: a JSON codec
+//! ([`json`]), deterministic RNGs ([`rng`]), a CLI argument parser
+//! ([`cli`]), a thread pool ([`threadpool`]), summary statistics and a
+//! bench timer ([`stats`]), and a miniature property-testing harness
+//! ([`proptest`]).
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,126 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property against many deterministically generated
+//! random cases; on failure it reports the seed of the failing case so
+//! the exact input can be replayed with [`replay`]. Generators are plain
+//! closures over [`Rng`], composing via ordinary Rust.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't get the workspace rpath to
+//! //  libxla_extension's bundled libstdc++ on this image)
+//! use tfgnn::util::proptest::check;
+//! check("reverse twice is identity", 200, |rng| {
+//!     let n = rng.uniform(20);
+//!     let v: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Environment knob: `TFGNN_PROPTEST_CASES` multiplies case counts
+/// (e.g. set to 10 for a deep overnight run).
+fn case_multiplier() -> usize {
+    std::env::var("TFGNN_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// Run `prop` against `cases` random inputs. Each case gets an `Rng`
+/// seeded from the property name and case index, so failures are
+/// reproducible independent of execution order.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    let cases = cases * case_multiplier();
+    for case in 0..cases {
+        let seed = seed_for(name, case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = panic_message(&payload);
+            panic!(
+                "property {name:?} failed on case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed (used while debugging).
+pub fn replay<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+fn seed_for(name: &str, case: u64) -> u64 {
+    // FNV-1a over the name, mixed with the case index.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    super::rng::mix64(h, case)
+}
+
+fn panic_message(payload: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 50, |rng| {
+            let a = rng.uniform(1000) as i64;
+            let b = rng.uniform(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 3, |_rng| {
+                panic!("boom");
+            });
+        });
+        let msg = panic_message(&r.unwrap_err());
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn seeds_are_stable() {
+        // Pin the derivation so failures stay replayable across refactors.
+        assert_eq!(seed_for("x", 0), seed_for("x", 0));
+        assert_ne!(seed_for("x", 0), seed_for("x", 1));
+        assert_ne!(seed_for("x", 0), seed_for("y", 0));
+    }
+
+    #[test]
+    fn replay_reproduces_case_stream() {
+        let seed = seed_for("stream", 4);
+        let mut first = Vec::new();
+        replay(seed, |rng| {
+            first.push(rng.next_u64());
+        });
+        let mut second = Vec::new();
+        replay(seed, |rng| {
+            second.push(rng.next_u64());
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,300 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! All stochastic behaviour in the library (synthetic graph generation,
+//! sampling strategies, shuffling, parameter sweeps) flows through
+//! [`Rng`], a PCG-XSH-RR 64/32 generator seeded via SplitMix64. Being
+//! fully deterministic per seed makes every experiment in
+//! EXPERIMENTS.md reproducible bit-for-bit.
+
+/// SplitMix64 step — used for seeding and cheap hash mixing.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless 64-bit mix of two values — used to derive per-entity seeds
+/// (e.g. per-node feature noise) without carrying RNG state around.
+#[inline]
+pub fn mix64(a: u64, b: u64) -> u64 {
+    let mut s = a ^ b.rotate_left(32) ^ 0x9E3779B97F4A7C15;
+    splitmix64(&mut s)
+}
+
+/// PCG-XSH-RR 64/32: small, fast, statistically solid.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Rng {
+    /// Create a generator from a seed. Distinct seeds give independent
+    /// streams (seed also perturbs the increment).
+    pub fn new(seed: u64) -> Rng {
+        let mut sm = seed;
+        let state = splitmix64(&mut sm);
+        let inc = splitmix64(&mut sm) | 1;
+        let mut rng = Rng { state, inc };
+        rng.next_u32(); // advance away from the seed-correlated state
+        rng
+    }
+
+    /// Derive an independent child stream (for per-worker RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(mix64(self.next_u64(), tag))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift with rejection.
+    #[inline]
+    pub fn uniform(&mut self, n: usize) -> usize {
+        assert!(n > 0, "uniform(0)");
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_hi_lo(x, n);
+            if lo < n {
+                // Rejection zone: the low 2^64 % n values are over-represented.
+                let threshold = n.wrapping_neg() % n;
+                if lo < threshold {
+                    continue;
+                }
+            }
+            return hi as usize;
+        }
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Geometric-ish power-law degree helper: samples from a Zipf-like
+    /// distribution over `[1, max]` with exponent `alpha` via inverse
+    /// transform on the continuous approximation.
+    pub fn zipf(&mut self, max: usize, alpha: f64) -> usize {
+        debug_assert!(alpha > 1.0);
+        let u = self.f64();
+        let m = max as f64;
+        let a1 = 1.0 - alpha;
+        let x = ((m.powf(a1) - 1.0) * u + 1.0).powf(1.0 / a1);
+        (x as usize).clamp(1, max)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.uniform(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k <= n). Uses Floyd's
+    /// algorithm: O(k) expected, no allocation of the full range.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct: k={k} > n={n}");
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.uniform(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+
+    /// Sample `k` items from `[0, n)` **with** replacement.
+    pub fn sample_with_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.uniform(n)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.uniform(items.len())]
+    }
+}
+
+#[inline]
+fn mul_hi_lo(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_streams() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_range_and_covers() {
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = rng.uniform(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets hit");
+    }
+
+    #[test]
+    fn uniform_roughly_uniform() {
+        let mut rng = Rng::new(4);
+        let mut counts = [0usize; 8];
+        let n = 80_000;
+        for _ in 0..n {
+            counts[rng.uniform(8)] += 1;
+        }
+        for &c in &counts {
+            let expect = n / 8;
+            assert!(
+                (c as i64 - expect as i64).unsigned_abs() < (expect / 10) as u64,
+                "bucket count {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_bounds_and_mean() {
+        let mut rng = Rng::new(5);
+        let mut sum = 0.0f64;
+        for _ in 0..10_000 {
+            let x = rng.f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(6);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = rng.normal() as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(8);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "shuffle changed order");
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut rng = Rng::new(9);
+        for n in [1usize, 5, 20, 100] {
+            for k in [0usize, 1, n / 2, n] {
+                let s = rng.sample_distinct(n, k);
+                assert_eq!(s.len(), k);
+                let set: std::collections::HashSet<_> = s.iter().collect();
+                assert_eq!(set.len(), k, "distinct");
+                assert!(s.iter().all(|&x| x < n));
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_bounds() {
+        let mut rng = Rng::new(10);
+        for _ in 0..1000 {
+            let z = rng.zipf(50, 2.0);
+            assert!((1..=50).contains(&z));
+        }
+        // Head should be heavier than tail.
+        let mut head = 0;
+        let mut tail = 0;
+        for _ in 0..5000 {
+            let z = rng.zipf(50, 2.0);
+            if z <= 5 {
+                head += 1;
+            } else if z > 25 {
+                tail += 1;
+            }
+        }
+        assert!(head > tail * 3, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(11);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,214 @@
+//! Summary statistics and a micro-bench timer.
+//!
+//! `cargo bench` targets in this repo use `harness = false` (criterion is
+//! not available offline), so [`Bench`] provides the warmup → repeat →
+//! summarize loop and prints rows that the bench binaries format into the
+//! paper's tables.
+
+use std::time::{Duration, Instant};
+
+/// Summary of a sample of f64 observations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of(empty)");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Percentile of an already-sorted sample (linear interpolation).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Mean ± std of accuracy-like observations, formatted as the paper
+/// prints Table 1 (four decimal places).
+pub fn fmt_mean_std(samples: &[f64]) -> String {
+    let s = Summary::of(samples);
+    format!("{:.4} ± {:.4}", s.mean, s.std)
+}
+
+/// Format a duration human-readably for bench rows.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Micro-bench runner: warms up, then measures `iters` runs of `f`.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Bench {
+        Bench { warmup, iters }
+    }
+
+    /// Run and summarize wall time in seconds per iteration.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Summary::of(&samples)
+    }
+
+    /// Run, report a throughput summary (`items / sec`) for a workload of
+    /// `items` units per iteration.
+    pub fn throughput<F: FnMut()>(&self, items: usize, f: F) -> Summary {
+        let time = self.run(f);
+        // Throughput distribution: items / time for each sample is not
+        // recoverable from the summary, so convert mean/percentiles.
+        Summary {
+            n: time.n,
+            mean: items as f64 / time.mean,
+            std: items as f64 * time.std / (time.mean * time.mean),
+            min: items as f64 / time.max,
+            p50: items as f64 / time.p50,
+            p95: items as f64 / time.min,
+            max: items as f64 / time.min,
+        }
+    }
+}
+
+/// A labelled bench row printer producing aligned, greppable output:
+/// `BENCH <group> <name> mean=… p50=… p95=…`.
+pub fn print_row(group: &str, name: &str, s: &Summary, unit: &str) {
+    println!(
+        "BENCH {group:<24} {name:<32} mean={:>12} p50={:>12} p95={:>12} n={}",
+        fmt_value(s.mean, unit),
+        fmt_value(s.p50, unit),
+        fmt_value(s.p95, unit),
+        s.n
+    );
+}
+
+fn fmt_value(v: f64, unit: &str) -> String {
+    match unit {
+        "s" => fmt_duration(Duration::from_secs_f64(v.max(0.0))),
+        "items/s" => {
+            if v >= 1e6 {
+                format!("{:.2}M/s", v / 1e6)
+            } else if v >= 1e3 {
+                format!("{:.2}K/s", v / 1e3)
+            } else {
+                format!("{v:.1}/s")
+            }
+        }
+        _ => format!("{v:.4}{unit}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 4.0).abs() < 1e-12);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[5.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 5.0);
+        assert_eq!(s.p95, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile(&sorted, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile(&sorted, 0.95) - 9.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn std_matches_hand_calc() {
+        let s = Summary::of(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        // Sample std of this classic set is ~2.138.
+        assert!((s.std - 2.138).abs() < 0.01, "std {}", s.std);
+    }
+
+    #[test]
+    fn bench_runs_expected_iters() {
+        let mut count = 0;
+        let b = Bench::new(2, 5);
+        let s = b.run(|| count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_duration(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).contains("s"));
+    }
+
+    #[test]
+    fn fmt_mean_std_shape() {
+        let s = fmt_mean_std(&[0.5, 0.51, 0.52]);
+        assert!(s.contains('±'), "{s}");
+    }
+}

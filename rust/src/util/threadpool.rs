@@ -1,0 +1,179 @@
+//! A small fixed-size thread pool over `std::sync::mpsc`.
+//!
+//! Used by the distributed sampler's worker fleet, the pipeline's
+//! parallel parse stage, and the sweep harness. Supports fire-and-forget
+//! jobs, scoped parallel-map with result collection, and clean shutdown
+//! on drop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> ThreadPool {
+        assert!(n > 0, "ThreadPool::new(0)");
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let in_flight = Arc::clone(&in_flight);
+                std::thread::Builder::new()
+                    .name(format!("tfgnn-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                in_flight.fetch_sub(1, Ordering::Release);
+                            }
+                            Err(_) => break, // sender dropped: shutdown
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, in_flight }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::Acquire);
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Block until all submitted jobs have completed.
+    pub fn wait_idle(&self) {
+        while self.in_flight.load(Ordering::Acquire) > 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Parallel map: applies `f` to each item, preserving order.
+    ///
+    /// `f` must be `Sync` because multiple workers call it concurrently.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let r = f(item);
+                // Receiver may be gone if the caller panicked; ignore.
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker died before sending result");
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel -> workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<usize>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.map(Vec::<usize>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must block until queue drained by workers…
+        // NOTE: drop closes the channel; already-queued jobs still run
+        // because workers drain the channel before seeing disconnect.
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallel_speedup_smoke() {
+        // Not a perf assertion, just exercises concurrency paths.
+        let pool = ThreadPool::new(8);
+        let out = pool.map((0..64).collect::<Vec<u64>>(), |x| {
+            let mut acc = x;
+            for _ in 0..1000 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 64);
+    }
+}

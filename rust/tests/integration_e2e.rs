@@ -1,0 +1,126 @@
+//! Integration: the full Fig. 4 pipeline, distributed-sampler edition.
+//!
+//! synth-MAG → sharded store → Algorithm 1 leader/worker sampling →
+//! shard files on disk → ShardProvider pipeline → AOT training →
+//! accuracy better than chance. Exercises every layer together.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use tfgnn::coordinator::{run_sampling_to_shards, CoordinatorConfig};
+use tfgnn::pipeline::{epoch_stream, DatasetProvider, PipelineConfig, ShardProvider};
+use tfgnn::runner::MagEnv;
+use tfgnn::runtime::batch::RootTask;
+use tfgnn::runtime::Runtime;
+use tfgnn::store::sharded::ShardedStore;
+use tfgnn::synth::mag::Split;
+use tfgnn::train::metrics::EpochMetrics;
+use tfgnn::train::{Hyperparams, Trainer};
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn full_pipeline_samples_trains_and_beats_chance() {
+    let Some(dir) = artifacts() else { return };
+    let env = MagEnv::from_artifacts(dir).unwrap();
+    let tmp = std::env::temp_dir().join(format!("tfgnn-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+
+    // Stage 1: distributed sampling with injected RPC failures AND
+    // worker crashes — the resilience path must still produce exact
+    // results (cross-checked against the in-memory sampler elsewhere).
+    let train_seeds = env.dataset.papers_in_split(Split::Train);
+    let subset = &train_seeds[..320.min(train_seeds.len())];
+    let sharded = Arc::new(
+        ShardedStore::new(Arc::clone(&env.store), 8).with_failures(0.05, 99),
+    );
+    let cfg = CoordinatorConfig {
+        num_workers: 4,
+        batch_size: 16,
+        worker_crash_rate: 0.1,
+        crash_seed: 5,
+        max_item_attempts: 40,
+        ..Default::default()
+    };
+    let (set, report) = run_sampling_to_shards(
+        sharded,
+        env.sampler.spec(),
+        env.manifest.plan_seed().unwrap(),
+        subset,
+        &cfg,
+        &tmp,
+        "train",
+        4,
+    )
+    .unwrap();
+    assert_eq!(report.stats.subgraphs, subset.len());
+    assert!(report.stats.retried_rpcs > 0, "RPC failures exercised");
+    assert_eq!(set.count().unwrap(), subset.len());
+
+    // Stage 2: stream the shards through the padding pipeline into the
+    // AOT trainer.
+    let provider = Arc::new(ShardProvider::new(set));
+    let mut pipe = PipelineConfig::new(env.batch_size, env.pad.clone());
+    pipe.shuffle_buffer = 32;
+    pipe.shuffle_seed = 11;
+    let entry = env.manifest.model("mpnn").unwrap().clone();
+    let hp = Hyperparams { learning_rate: 2e-3, dropout: 0.1, weight_decay: 1e-5 };
+    let mut trainer =
+        Trainer::new(Runtime::cpu().unwrap(), dir, &entry, RootTask::default(), hp).unwrap();
+
+    let mut first_epoch = EpochMetrics::default();
+    let mut last_epoch = EpochMetrics::default();
+    let epochs = 6;
+    for epoch in 0..epochs {
+        let stream = epoch_stream(
+            Arc::clone(&provider) as Arc<dyn DatasetProvider>,
+            pipe.clone(),
+            epoch,
+        )
+        .unwrap();
+        let mut metrics = EpochMetrics::default();
+        for padded in stream.iter() {
+            metrics.add(trainer.train_batch(&padded).unwrap());
+        }
+        assert!(metrics.steps > 0, "pipeline produced batches");
+        if epoch == 0 {
+            first_epoch = metrics.clone();
+        }
+        if epoch == epochs - 1 {
+            last_epoch = metrics.clone();
+        }
+    }
+    assert!(
+        last_epoch.loss() < first_epoch.loss(),
+        "training loss must decrease: {:.4} -> {:.4}",
+        first_epoch.loss(),
+        last_epoch.loss()
+    );
+
+    // Stage 3: validation accuracy clearly better than chance
+    // (20 classes -> 5%).
+    let val_seeds = env.dataset.papers_in_split(Split::Validation);
+    let mut val = EpochMetrics::default();
+    for padded in env.eval_batches(&val_seeds, Some(12)) {
+        if let Some(p) = padded.unwrap() {
+            val.add(trainer.eval_batch(&p).unwrap());
+        }
+    }
+    assert!(val.examples() > 0);
+    let chance = 1.0 / 20.0;
+    assert!(
+        val.accuracy() > 3.0 * chance,
+        "val accuracy {:.4} not above chance {chance}",
+        val.accuracy()
+    );
+
+    std::fs::remove_dir_all(&tmp).unwrap();
+}

@@ -1,0 +1,29 @@
+//! One-off probe: distribution of merged-batch sizes vs the pad caps.
+use std::sync::Arc;
+use tfgnn::runner::MagEnv;
+
+#[test]
+#[ignore]
+fn probe_batch_sizes() {
+    let env = MagEnv::from_artifacts(std::path::Path::new("artifacts")).unwrap();
+    let seeds = env.dataset.papers_in_split(tfgnn::synth::mag::Split::Train);
+    let sampler = Arc::clone(&env.sampler);
+    let mut maxes: std::collections::BTreeMap<String, usize> = Default::default();
+    let bs = env.batch_size;
+    for chunk in seeds.chunks(bs).take(60) {
+        if chunk.len() < bs { continue; }
+        let graphs: Vec<_> = chunk.iter().map(|&s| sampler.sample(s).unwrap()).collect();
+        let merged = tfgnn::graph::batch::merge(&graphs).unwrap();
+        for (name, ns) in &merged.node_sets {
+            let e = maxes.entry(format!("node {name}")).or_default();
+            *e = (*e).max(ns.total());
+        }
+        for (name, es) in &merged.edge_sets {
+            let e = maxes.entry(format!("edge {name}")).or_default();
+            *e = (*e).max(es.total());
+        }
+    }
+    println!("max sizes over 60 batches of {bs}:");
+    for (k, v) in &maxes { println!("  {k:<24} {v}"); }
+    println!("caps: {:?} {:?}", env.pad.node_caps, env.pad.edge_caps);
+}
