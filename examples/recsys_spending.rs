@@ -12,8 +12,9 @@
 use tfgnn::graph::io::{ShardReader, ShardWriter};
 use tfgnn::graph::Feature;
 use tfgnn::ops::{
-    broadcast_context_to_nodes, broadcast_node_to_edges, pool_edges_to_node,
-    pool_nodes_to_context, segment_softmax, Reduce, Tag,
+    broadcast_context_to_nodes, broadcast_node_to_edges, broadcast_pool_fused,
+    pool_edges_to_node, pool_nodes_to_context, segment_softmax, softmax_weighted_pool_fused,
+    Reduce, Tag,
 };
 use tfgnn::synth::recsys::recsys_example_graph;
 
@@ -33,11 +34,19 @@ fn main() -> tfgnn::Result<()> {
         graph.node_set("items")?.feature("latest_price")?.as_f32()?.1
     );
 
-    // ---- spending via broadcast + sum-pool (A.3 step 2) --------------------
+    // ---- spending via fused broadcast→pool (A.3 step 2) --------------------
+    // The fused fast path gathers item prices straight into per-user
+    // sums over the cached CSR view — no per-edge tensor.
     let latest = graph.node_set("items")?.feature("latest_price")?.clone();
-    let purchase_prices = broadcast_node_to_edges(&graph, "purchased", Tag::Source, &latest)?;
     let spending =
+        broadcast_pool_fused(&graph, "purchased", Tag::Source, Tag::Target, Reduce::Sum, &latest)?;
+    // The unfused two-step sequence stays the bit-for-bit oracle; the
+    // per-edge tensor it materializes is still wanted below for the
+    // attention printout.
+    let purchase_prices = broadcast_node_to_edges(&graph, "purchased", Tag::Source, &latest)?;
+    let spending_oracle =
         pool_edges_to_node(&graph, "purchased", Tag::Target, Reduce::Sum, &purchase_prices)?;
+    assert_eq!(spending, spending_oracle, "fused path == broadcast+pool oracle");
     let names = graph.node_set("users")?.feature("name")?.as_str()?.to_vec();
     println!("\nuser spending:");
     for (n, s) in names.iter().zip(spending.as_f32()?.1) {
@@ -62,6 +71,21 @@ fn main() -> tfgnn::Result<()> {
             "  {} -> {:<12} α = {alpha:.3}",
             names[adj.target[e] as usize], cats[adj.source[e] as usize]
         );
+    }
+
+    // ---- fused attention readout: price-weighted expected price ------------
+    // softmax(logits) ⊙ item prices, pooled per user, in one fused pass.
+    let expected = softmax_weighted_pool_fused(
+        &graph,
+        "purchased",
+        Tag::Source,
+        Tag::Target,
+        &purchase_prices, // logits: one scalar per edge
+        &latest,          // values: gathered from items
+    )?;
+    println!("\nattention-weighted expected purchase price (per user):");
+    for (n, v) in names.iter().zip(expected.as_f32()?.1) {
+        println!("  {n:<8} {v:>8.2}");
     }
 
     // ---- persist the engineered graph like the sampler would ---------------

@@ -34,9 +34,32 @@ def segment_mean_ref(data, segment_ids, num_segments):
 
 
 def segment_max_ref(data, segment_ids, num_segments):
-    """Max by segment; empty segments yield 0 (matches rust ops)."""
+    """Max by segment; only *empty* segments yield 0 (matches rust ops).
+
+    Legitimate non-finite inputs pass through: a segment holding -inf
+    reports -inf, and NaN inputs poison their segment (like a
+    sequential reduce_max). Zeroing every non-finite output — the old
+    behaviour — silently rewrote real data; rust's
+    ``ops::segment::segment_max`` tracks per-segment counts for the
+    same reason.
+    """
     out = jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
-    return jnp.where(jnp.isfinite(out), out, 0.0)
+    counts = jax.ops.segment_sum(
+        jnp.ones((data.shape[0],), jnp.float32), segment_ids, num_segments=num_segments
+    )
+    empty = counts == 0.0
+    if out.ndim > 1:
+        empty = empty[:, None]
+    # NaN stickiness: segment_max ignores NaN under unordered compares,
+    # so re-poison any segment that received one.
+    has_nan = (
+        jax.ops.segment_sum(
+            jnp.isnan(data).astype(jnp.float32), segment_ids, num_segments=num_segments
+        )
+        > 0.0
+    )
+    out = jnp.where(has_nan, jnp.nan, out)
+    return jnp.where(empty, 0.0, out)
 
 
 def segment_softmax_ref(logits, segment_ids, num_segments):

@@ -1,15 +1,22 @@
 //! Micro-bench: API level 2 data-exchange ops (experiment µ in
 //! DESIGN.md) — broadcast/pool/softmax cost vs edge count and feature
-//! width, plus merge/pad pipeline-stage costs.
+//! width, fused vs unfused message passing at 1..N threads, plus
+//! merge/pad pipeline-stage costs.
 //!
 //! Run: `cargo bench --bench graph_ops`
+
+use std::sync::Arc;
 
 use tfgnn::graph::batch::merge;
 use tfgnn::graph::pad::{pad, PadSpec};
 use tfgnn::graph::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};
-use tfgnn::ops::{broadcast_node_to_edges, pool_edges_to_node, segment_softmax, Reduce, Tag};
+use tfgnn::ops::{
+    broadcast_node_to_edges, broadcast_pool_fused, pool_edges_to_node, segment_softmax,
+    softmax_weighted_pool_fused, ParallelOps, Reduce, Tag,
+};
 use tfgnn::util::rng::Rng;
 use tfgnn::util::stats::{print_row, Bench};
+use tfgnn::util::threadpool::ThreadPool;
 
 fn bipartite(n_nodes: usize, n_edges: usize, dim: usize, rng: &mut Rng) -> GraphTensor {
     let a = NodeSet::new(vec![n_nodes]).with_feature(
@@ -67,6 +74,76 @@ fn main() {
             let _ = segment_softmax(&g, "e", Tag::Target, &logits).unwrap();
         });
         print_row("segment_softmax", &label, &s, "items/s");
+    }
+
+    // ------------------------------------------------------------------
+    // Fused broadcast→pool vs the unfused two-step sequence, serial and
+    // sharded across the ThreadPool. The large setting is MAG-sized: a
+    // sampled-subgraph epoch's worth of message passing (1M edges over
+    // 100K nodes, d=32) — the acceptance workload of PR 1.
+    // ------------------------------------------------------------------
+    println!("\n# fused broadcast→pool message passing (vs unfused, 1..N threads)");
+    for &(n_nodes, n_edges, dim, tag) in &[
+        (10_000usize, 100_000usize, 32usize, "e=100K"),
+        (100_000, 1_000_000, 32, "mag-sized e=1M"),
+    ] {
+        let g = bipartite(n_nodes, n_edges, dim, &mut rng);
+        let h = g.node_set("a").unwrap().feature("h").unwrap().clone();
+        let label = format!("{tag} n={n_nodes} d={dim}");
+
+        let s = bench.throughput(n_edges, || {
+            let on_edges = broadcast_node_to_edges(&g, "e", Tag::Source, &h).unwrap();
+            let _ = pool_edges_to_node(&g, "e", Tag::Target, Reduce::Sum, &on_edges).unwrap();
+        });
+        print_row("bp/sum/unfused", &label, &s, "items/s");
+
+        let s = bench.throughput(n_edges, || {
+            let _ =
+                broadcast_pool_fused(&g, "e", Tag::Source, Tag::Target, Reduce::Sum, &h).unwrap();
+        });
+        print_row("bp/sum/fused-1t", &label, &s, "items/s");
+
+        for threads in [2usize, 4, 8] {
+            let par = ParallelOps::new(Arc::new(ThreadPool::new(threads)));
+            let s = bench.throughput(n_edges, || {
+                let _ = par
+                    .broadcast_pool_fused(&g, "e", Tag::Source, Tag::Target, Reduce::Sum, &h)
+                    .unwrap();
+            });
+            print_row(&format!("bp/sum/fused-{threads}t"), &label, &s, "items/s");
+        }
+
+        // Attention: softmax over receiver groups + weighted pool.
+        let logits = Feature::f32_vec((0..n_edges).map(|_| rng.range_f32(-4.0, 4.0)).collect());
+        let s = bench.throughput(n_edges, || {
+            let w = segment_softmax(&g, "e", Tag::Target, &logits).unwrap();
+            let msgs = broadcast_node_to_edges(&g, "e", Tag::Source, &h).unwrap();
+            let (mdims, mv) = msgs.as_f32().unwrap();
+            let (_, wv) = w.as_f32().unwrap();
+            let weighted = Feature::F32 {
+                dims: mdims.to_vec(),
+                data: mv.iter().enumerate().map(|(i, &x)| wv[i / dim] * x).collect(),
+            };
+            let _ = pool_edges_to_node(&g, "e", Tag::Target, Reduce::Sum, &weighted).unwrap();
+        });
+        print_row("attn/unfused", &label, &s, "items/s");
+
+        let s = bench.throughput(n_edges, || {
+            let _ =
+                softmax_weighted_pool_fused(&g, "e", Tag::Source, Tag::Target, &logits, &h)
+                    .unwrap();
+        });
+        print_row("attn/fused-1t", &label, &s, "items/s");
+
+        for threads in [4usize, 8] {
+            let par = ParallelOps::new(Arc::new(ThreadPool::new(threads)));
+            let s = bench.throughput(n_edges, || {
+                let _ = par
+                    .softmax_weighted_pool_fused(&g, "e", Tag::Source, Tag::Target, &logits, &h)
+                    .unwrap();
+            });
+            print_row(&format!("attn/fused-{threads}t"), &label, &s, "items/s");
+        }
     }
 
     println!("\n# batching stages: merge + pad (pipeline hot path)");

@@ -1,0 +1,268 @@
+//! Cached CSR (compressed sparse row) views of edge-set adjacency.
+//!
+//! The data-exchange ops of §4.1 are COO-oriented: an edge set stores
+//! parallel `source`/`target` index arrays, and a broadcast→pool
+//! round-trip walks them twice while materializing a full
+//! `[num_edges, d]` intermediate. The fused fast path (`ops::fused`)
+//! instead walks a *per-receiver* view: for each node, the ids of its
+//! incident edges plus the node at the opposite endpoint. That view is
+//! exactly a CSR adjacency, and it only depends on the (immutable)
+//! adjacency arrays — so it is built lazily on first use and memoized
+//! on the [`EdgeSet`](super::EdgeSet) itself, surviving feature
+//! engineering, multiple model layers, and repeated serving requests
+//! over the same graph.
+//!
+//! Building the view also validates both endpoint arrays against their
+//! node-set sizes, turning corrupt adjacency into a proper
+//! [`Error::Graph`] instead of a slice panic deep inside a kernel.
+//!
+//! Construction is a stable counting sort over edge ids, so within
+//! each receiver row the edge ids are ascending. The fused kernels
+//! rely on this: accumulating a row in ascending edge order performs
+//! float additions in exactly the order the unfused
+//! `segment_sum`-style oracle does, keeping the two paths bit-for-bit
+//! identical.
+
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+use crate::{Error, Result};
+
+/// Which endpoint the rows of a CSR view are keyed by (the *receiver*
+/// of a pool, mirroring `ops::Tag`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Incidence {
+    BySource,
+    ByTarget,
+}
+
+/// A per-node view of one edge set's adjacency.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csr {
+    /// Row boundaries: node `v`'s incident edges live at
+    /// `edges[offsets[v]..offsets[v+1]]`. Length `num_nodes + 1`.
+    pub offsets: Vec<usize>,
+    /// Edge ids grouped by incident node, ascending within each row.
+    pub edges: Vec<u32>,
+    /// For `edges[k]`, the node at the *opposite* endpoint.
+    pub neighbors: Vec<u32>,
+}
+
+impl Csr {
+    /// Number of nodes (rows).
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of edges.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Edge ids incident to node `v`.
+    pub fn row(&self, v: usize) -> &[u32] {
+        &self.edges[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Opposite-endpoint node ids for node `v`'s incident edges.
+    pub fn row_neighbors(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Build a CSR view keyed by `keyed` (length-checked elsewhere;
+    /// `keyed` and `opposite` are the two parallel COO index arrays).
+    ///
+    /// Validates every index: `keyed[e] < n_keyed` and
+    /// `opposite[e] < n_opposite`, reporting the offending edge.
+    pub fn build(
+        edge_set: &str,
+        keyed: &[u32],
+        opposite: &[u32],
+        n_keyed: usize,
+        n_opposite: usize,
+    ) -> Result<Csr> {
+        debug_assert_eq!(keyed.len(), opposite.len());
+        let mut counts = vec![0usize; n_keyed + 1];
+        for (e, &v) in keyed.iter().enumerate() {
+            if v as usize >= n_keyed {
+                return Err(Error::Graph(format!(
+                    "edge set {edge_set:?}: edge {e} references node {v} \
+                     but the keyed node set has {n_keyed} nodes"
+                )));
+            }
+            counts[v as usize + 1] += 1;
+        }
+        for (e, &v) in opposite.iter().enumerate() {
+            if v as usize >= n_opposite {
+                return Err(Error::Graph(format!(
+                    "edge set {edge_set:?}: edge {e} references node {v} \
+                     but the opposite node set has {n_opposite} nodes"
+                )));
+            }
+        }
+        // Prefix sums -> row offsets.
+        let mut offsets = counts;
+        for i in 1..offsets.len() {
+            offsets[i] += offsets[i - 1];
+        }
+        // Stable scatter: edge ids ascending within each row.
+        let mut cursor = offsets.clone();
+        let mut edges = vec![0u32; keyed.len()];
+        let mut neighbors = vec![0u32; keyed.len()];
+        for (e, (&v, &u)) in keyed.iter().zip(opposite).enumerate() {
+            let at = cursor[v as usize];
+            edges[at] = e as u32;
+            neighbors[at] = u;
+            cursor[v as usize] = at + 1;
+        }
+        Ok(Csr { offsets, edges, neighbors })
+    }
+}
+
+/// Lazily-built, memoized CSR views for one edge set (one per
+/// incidence direction).
+///
+/// Lives on [`EdgeSet`](super::EdgeSet) but is deliberately invisible
+/// to its derived semantics: clones carry already-built views (they
+/// are immutable and shared via `Arc`), equality ignores the cache,
+/// and (de)serialization skips it.
+pub struct CsrCache {
+    by_source: OnceLock<Arc<Csr>>,
+    by_target: OnceLock<Arc<Csr>>,
+}
+
+impl CsrCache {
+    pub fn new() -> CsrCache {
+        CsrCache { by_source: OnceLock::new(), by_target: OnceLock::new() }
+    }
+
+    /// The memoized view for `inc`, building it on first use via
+    /// `build` (which receives the incidence to construct).
+    pub fn get_or_build(
+        &self,
+        inc: Incidence,
+        build: impl FnOnce() -> Result<Csr>,
+    ) -> Result<Arc<Csr>> {
+        let slot = match inc {
+            Incidence::BySource => &self.by_source,
+            Incidence::ByTarget => &self.by_target,
+        };
+        if let Some(csr) = slot.get() {
+            return Ok(Arc::clone(csr));
+        }
+        // Not cached: build outside the lock; a racing builder's value
+        // simply loses the `set` and is dropped (same contents anyway).
+        let built = Arc::new(build()?);
+        let _ = slot.set(Arc::clone(&built));
+        Ok(Arc::clone(slot.get().unwrap_or(&built)))
+    }
+
+    /// Whether a view is already built (used by tests to assert
+    /// memoization without timing).
+    pub fn is_built(&self, inc: Incidence) -> bool {
+        match inc {
+            Incidence::BySource => self.by_source.get().is_some(),
+            Incidence::ByTarget => self.by_target.get().is_some(),
+        }
+    }
+}
+
+impl Default for CsrCache {
+    fn default() -> Self {
+        CsrCache::new()
+    }
+}
+
+impl Clone for CsrCache {
+    fn clone(&self) -> Self {
+        let c = CsrCache::new();
+        if let Some(v) = self.by_source.get() {
+            let _ = c.by_source.set(Arc::clone(v));
+        }
+        if let Some(v) = self.by_target.get() {
+            let _ = c.by_target.set(Arc::clone(v));
+        }
+        c
+    }
+}
+
+/// The cache is derived state: two edge sets are equal iff their real
+/// contents are, regardless of which views happen to be built.
+impl PartialEq for CsrCache {
+    fn eq(&self, _other: &Self) -> bool {
+        true
+    }
+}
+
+impl fmt::Debug for CsrCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "CsrCache {{ by_source: {}, by_target: {} }}",
+            if self.by_source.get().is_some() { "built" } else { "-" },
+            if self.by_target.get().is_some() { "built" } else { "-" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_groups_and_sorts_edge_ids() {
+        // Edges (source -> target): 0:2->0, 1:0->1, 2:2->1, 3:1->0
+        let source = [2u32, 0, 2, 1];
+        let target = [0u32, 1, 1, 0];
+        let csr = Csr::build("e", &target, &source, 2, 3).unwrap();
+        assert_eq!(csr.num_nodes(), 2);
+        assert_eq!(csr.num_edges(), 4);
+        assert_eq!(csr.row(0), &[0, 3]); // edges into target 0, ascending
+        assert_eq!(csr.row(1), &[1, 2]);
+        assert_eq!(csr.row_neighbors(0), &[2, 1]); // their sources
+        assert_eq!(csr.row_neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn build_handles_isolated_nodes() {
+        let csr = Csr::build("e", &[], &[], 3, 3).unwrap();
+        assert_eq!(csr.num_nodes(), 3);
+        for v in 0..3 {
+            assert!(csr.row(v).is_empty());
+        }
+    }
+
+    #[test]
+    fn build_rejects_out_of_range_indices() {
+        let err = Csr::build("e", &[5], &[0], 2, 2).unwrap_err().to_string();
+        assert!(err.contains("graph error"), "{err}");
+        assert!(err.contains("edge 0"), "{err}");
+        let err = Csr::build("e", &[1], &[9], 2, 2).unwrap_err().to_string();
+        assert!(err.contains("opposite"), "{err}");
+    }
+
+    #[test]
+    fn cache_memoizes_and_clone_shares() {
+        let cache = CsrCache::new();
+        assert!(!cache.is_built(Incidence::ByTarget));
+        let a = cache
+            .get_or_build(Incidence::ByTarget, || Csr::build("e", &[0, 1], &[1, 0], 2, 2))
+            .unwrap();
+        assert!(cache.is_built(Incidence::ByTarget));
+        assert!(!cache.is_built(Incidence::BySource));
+        let b = cache
+            .get_or_build(Incidence::ByTarget, || panic!("must be memoized"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup reuses the built view");
+        let cloned = cache.clone();
+        assert!(cloned.is_built(Incidence::ByTarget), "clones inherit built views");
+    }
+
+    #[test]
+    fn cache_is_invisible_to_equality() {
+        let a = CsrCache::new();
+        let b = CsrCache::new();
+        let _ = a.get_or_build(Incidence::BySource, || Csr::build("e", &[0], &[0], 1, 1));
+        assert_eq!(a, b);
+    }
+}

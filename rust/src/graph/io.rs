@@ -275,10 +275,10 @@ pub fn decode_graph(bytes: &[u8]) -> Result<GraphTensor> {
         let source = d.u32_vec()?;
         let target = d.u32_vec()?;
         let features = decode_features(&mut d)?;
-        edge_sets.insert(
-            name,
-            EdgeSet { sizes, adjacency: Adjacency { source_set, target_set, source, target }, features },
-        );
+        let mut es =
+            EdgeSet::new(sizes, Adjacency { source_set, target_set, source, target });
+        es.features = features;
+        edge_sets.insert(name, es);
     }
     if d.i != bytes.len() {
         return Err(d.err("trailing bytes"));

@@ -16,8 +16,10 @@
 //! `tf.train.Example` + TFRecord shards.
 
 pub mod batch;
+pub mod csr;
 pub mod io;
 pub mod pad;
 mod tensor;
 
+pub use csr::{Csr, Incidence};
 pub use tensor::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};

@@ -150,6 +150,9 @@ pub fn pad(graph: &GraphTensor, spec: &PadSpec) -> Result<Padded> {
         let tgt_sink = pad_node_start[&es.adjacency.target_set];
         es.adjacency.source.extend(std::iter::repeat(src_sink).take(extra));
         es.adjacency.target.extend(std::iter::repeat(tgt_sink).take(extra));
+        // The adjacency changed: drop any CSR view inherited from the
+        // unpadded graph's cache (it is memoized per EdgeSet).
+        es.invalidate_csr();
         for (fname, f) in es.features.iter_mut() {
             pad_feature(f, extra).map_err(|e| {
                 Error::Graph(format!("padding edge feature {name}/{fname}: {e}"))

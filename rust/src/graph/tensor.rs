@@ -1,7 +1,9 @@
 //! Core GraphTensor containers and structural validation.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
+use super::csr::{self, Csr, Incidence};
 use crate::schema::{DType, FeatureSpec, GraphSchema};
 use crate::{Error, Result};
 
@@ -250,17 +252,20 @@ impl NodeSet {
     }
 }
 
-/// An edge set instance: per-component sizes, adjacency, features.
+/// An edge set instance: per-component sizes, adjacency, features,
+/// plus a lazily-built CSR view of the adjacency (derived state; see
+/// [`csr::CsrCache`] — ignored by equality and serialization).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EdgeSet {
     pub sizes: Vec<usize>,
     pub adjacency: Adjacency,
     pub features: BTreeMap<String, Feature>,
+    pub(crate) csr: csr::CsrCache,
 }
 
 impl EdgeSet {
     pub fn new(sizes: Vec<usize>, adjacency: Adjacency) -> EdgeSet {
-        EdgeSet { sizes, adjacency, features: BTreeMap::new() }
+        EdgeSet { sizes, adjacency, features: BTreeMap::new(), csr: csr::CsrCache::new() }
     }
 
     pub fn total(&self) -> usize {
@@ -276,6 +281,16 @@ impl EdgeSet {
         self.features
             .get(name)
             .ok_or_else(|| Error::Feature(format!("edge feature {name:?} not found")))
+    }
+
+    /// Drop any memoized CSR views. Call after mutating `adjacency` —
+    /// or resizing an endpoint node set — in place (the fields are
+    /// public, so the cache cannot observe the change itself);
+    /// constructors start with an empty cache. `GraphTensor::csr` has a
+    /// size-based staleness tripwire, but same-size index rewrites are
+    /// only caught by calling this.
+    pub fn invalidate_csr(&mut self) {
+        self.csr = csr::CsrCache::new();
     }
 }
 
@@ -346,6 +361,53 @@ impl GraphTensor {
 
     pub fn num_edges(&self, set: &str) -> Result<usize> {
         Ok(self.edge_set(set)?.total())
+    }
+
+    /// The memoized CSR view of an edge set's adjacency, keyed by the
+    /// `inc` endpoint (the receiver of a pool). Built on first use;
+    /// subsequent calls — later model layers, repeated ops on the same
+    /// graph, clones of this graph — share the same `Arc`.
+    ///
+    /// Building validates both endpoint index arrays against their
+    /// node-set sizes, so corrupt adjacency surfaces as
+    /// [`Error::Graph`] here rather than a slice panic in a kernel.
+    pub fn csr(&self, edge_set: &str, inc: Incidence) -> Result<Arc<Csr>> {
+        let es = self.edge_set(edge_set)?;
+        let (keyed, opposite, keyed_set, opposite_set) = match inc {
+            Incidence::BySource => (
+                &es.adjacency.source,
+                &es.adjacency.target,
+                &es.adjacency.source_set,
+                &es.adjacency.target_set,
+            ),
+            Incidence::ByTarget => (
+                &es.adjacency.target,
+                &es.adjacency.source,
+                &es.adjacency.target_set,
+                &es.adjacency.source_set,
+            ),
+        };
+        let n_keyed = self.num_nodes(keyed_set)?;
+        let n_opposite = self.num_nodes(opposite_set)?;
+        let csr = es
+            .csr
+            .get_or_build(inc, || Csr::build(edge_set, keyed, opposite, n_keyed, n_opposite))?;
+        // Cheap staleness tripwire: the fields are public, so adjacency
+        // or node sets may have been mutated after the view was built
+        // without `invalidate_csr`. Catch the size-changing cases
+        // (anything else is on the mutator) instead of silently
+        // returning wrong-shaped results.
+        if csr.num_nodes() != n_keyed || csr.num_edges() != keyed.len() {
+            return Err(Error::Graph(format!(
+                "edge set {edge_set:?}: stale CSR cache ({} nodes / {} edges cached, \
+                 {n_keyed} / {} now) — call EdgeSet::invalidate_csr after mutating \
+                 adjacency or node sets",
+                csr.num_nodes(),
+                csr.num_edges(),
+                keyed.len()
+            )));
+        }
+        Ok(csr)
     }
 
     /// Structural invariants:

@@ -36,36 +36,59 @@ pub mod synth;
 pub mod train;
 pub mod util;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+/// image is offline, so proc-macro crates like `thiserror` are out).
+#[derive(Debug)]
 pub enum Error {
     /// Schema validation or lookup failure.
-    #[error("schema error: {0}")]
     Schema(String),
     /// GraphTensor structural invariant violated.
-    #[error("graph error: {0}")]
     Graph(String),
     /// Feature missing / wrong dtype / wrong shape.
-    #[error("feature error: {0}")]
     Feature(String),
     /// Sampling plan or execution failure.
-    #[error("sampler error: {0}")]
     Sampler(String),
     /// Input pipeline failure.
-    #[error("pipeline error: {0}")]
     Pipeline(String),
     /// AOT artifact / PJRT runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// (De)serialization failure.
-    #[error("codec error: {0}")]
     Codec(String),
     /// I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// XLA/PJRT failure.
-    #[error("xla error: {0}")]
     Xla(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Schema(m) => write!(f, "schema error: {m}"),
+            Error::Graph(m) => write!(f, "graph error: {m}"),
+            Error::Feature(m) => write!(f, "feature error: {m}"),
+            Error::Sampler(m) => write!(f, "sampler error: {m}"),
+            Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

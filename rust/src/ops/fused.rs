@@ -1,0 +1,558 @@
+//! Fused broadcast→pool message passing (the §4.1 hot path).
+//!
+//! A GNN convolution's data exchange is `broadcast_node_to_edges`
+//! followed by `pool_edges_to_node`: gather a sender-node value onto
+//! every edge, then reduce per receiver node. Composed from the two
+//! primitives, that materializes a `[num_edges, d]` intermediate and
+//! walks the COO index arrays twice — exactly the overhead the paper's
+//! Keras convolutions (and tf_geometric's fused CSR kernels) avoid
+//! when no per-edge computation is required.
+//!
+//! [`broadcast_pool_fused`] performs the round trip in one pass over
+//! the edge set's cached CSR view ([`GraphTensor::csr`]): for each
+//! receiver node, gather directly from the sender-node values and
+//! accumulate into the output row. No per-edge buffer exists at any
+//! point. [`softmax_weighted_pool_fused`] does the same for the
+//! attention pattern (§4.3): per-receiver softmax over edge logits,
+//! then a weighted sum of sender values, with only an O(max-degree)
+//! scratch buffer.
+//!
+//! **Bit-for-bit contract.** Both functions are drop-in replacements
+//! for the unfused op sequence, asserted down to f32 bit patterns by
+//! property tests: within a receiver row the CSR lists edge ids in
+//! ascending order, which is exactly the order the unfused
+//! `segment_*` oracle touches that receiver's edges, so every float
+//! accumulation happens in the same sequence. The unfused path stays
+//! in `ops` as the oracle (and for pipelines that *do* need the
+//! per-edge tensor, e.g. to attach edge features).
+//!
+//! [`ParallelOps`] runs the same kernels sharded over receiver-node
+//! ranges on the existing [`util::ThreadPool`](crate::util::threadpool)
+//! — rows are independent, so the parallel output is identical (not
+//! merely close) for every thread count.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use super::{dense_f32, elems_per_item, Reduce, Tag};
+use crate::graph::{Csr, Feature, GraphTensor};
+use crate::util::threadpool::ThreadPool;
+use crate::{Error, Result};
+
+/// Everything a kernel needs, resolved once per call: the CSR view
+/// keyed by the receiver endpoint plus gather rules for the sender.
+struct FusedPlan {
+    csr: Arc<Csr>,
+    /// Sender == receiver endpoint: gather from the row node itself
+    /// (the CSR's `neighbors` hold the *opposite* endpoint).
+    gather_self: bool,
+    d: usize,
+}
+
+fn plan(
+    g: &GraphTensor,
+    edge_set: &str,
+    send_tag: Tag,
+    recv_tag: Tag,
+    value: &Feature,
+    what: &str,
+) -> Result<(FusedPlan, Vec<usize>)> {
+    let es = g.edge_set(edge_set)?;
+    let send_set = match send_tag {
+        Tag::Source => &es.adjacency.source_set,
+        Tag::Target => &es.adjacency.target_set,
+    };
+    let n_send = g.num_nodes(send_set)?;
+    if value.len() != n_send {
+        return Err(Error::Feature(format!(
+            "{what}: value has {} items, node set {send_set:?} has {n_send}",
+            value.len()
+        )));
+    }
+    let (dims, _) = dense_f32(value, what)?;
+    let csr = g.csr(edge_set, recv_tag.incidence())?;
+    let d = elems_per_item(dims);
+    Ok((FusedPlan { csr, gather_self: send_tag == recv_tag, d }, dims.to_vec()))
+}
+
+/// [`plan`] plus the logits checks shared by the serial and parallel
+/// softmax entry points (one scalar per edge, edge count match).
+fn softmax_plan(
+    g: &GraphTensor,
+    edge_set: &str,
+    send_tag: Tag,
+    recv_tag: Tag,
+    logits: &Feature,
+    values: &Feature,
+) -> Result<(FusedPlan, Vec<usize>)> {
+    let (plan, dims) = plan(g, edge_set, send_tag, recv_tag, values, "softmax_weighted_pool_fused")?;
+    let (ldims, _) = dense_f32(logits, "softmax_weighted_pool_fused logits")?;
+    if elems_per_item(ldims) != 1 {
+        return Err(Error::Feature(
+            "softmax_weighted_pool_fused: logits must be one scalar per edge".into(),
+        ));
+    }
+    if logits.len() != plan.csr.num_edges() {
+        return Err(Error::Feature(format!(
+            "softmax_weighted_pool_fused: {} logits for {} edges",
+            logits.len(),
+            plan.csr.num_edges()
+        )));
+    }
+    Ok((plan, dims))
+}
+
+/// One fused broadcast→pool pass over `range` of receiver nodes,
+/// writing `range.len() * d` output values. Kept free of `Feature`
+/// plumbing so the serial and parallel paths share it verbatim.
+fn pool_rows(plan: &FusedPlan, data: &[f32], reduce: Reduce, range: Range<usize>) -> Vec<f32> {
+    let d = plan.d;
+    let csr = &*plan.csr;
+    let mut out = vec![0.0f32; range.len() * d];
+    for (row_i, r) in range.enumerate() {
+        let acc = &mut out[row_i * d..(row_i + 1) * d];
+        let neighbors = csr.row_neighbors(r);
+        match reduce {
+            Reduce::Sum | Reduce::Mean => {
+                for &v in neighbors {
+                    let v = if plan.gather_self { r } else { v as usize };
+                    let src = &data[v * d..(v + 1) * d];
+                    for (o, x) in acc.iter_mut().zip(src) {
+                        *o += x;
+                    }
+                }
+                if reduce == Reduce::Mean && !neighbors.is_empty() {
+                    // Same expression as segment_mean: one reciprocal,
+                    // then a multiply — not a divide — per element.
+                    let inv = 1.0 / neighbors.len() as f32;
+                    for o in acc.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+            }
+            Reduce::Max | Reduce::Min => {
+                if neighbors.is_empty() {
+                    continue; // empty segments stay 0 (padded-graph rule)
+                }
+                let init =
+                    if reduce == Reduce::Max { f32::NEG_INFINITY } else { f32::INFINITY };
+                acc.fill(init);
+                for &v in neighbors {
+                    let v = if plan.gather_self { r } else { v as usize };
+                    let src = &data[v * d..(v + 1) * d];
+                    for (o, x) in acc.iter_mut().zip(src) {
+                        // Mirrors segment_max/min exactly, including
+                        // NaN stickiness.
+                        let better = if reduce == Reduce::Max { *x > *o } else { *x < *o };
+                        if x.is_nan() || (!o.is_nan() && better) {
+                            *o = *x;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One fused softmax→weighted-pool pass over `range` of receiver
+/// nodes. `logits` is one scalar per edge (indexed by edge id);
+/// `values` is the `[n_send, d]` sender-node value buffer.
+fn softmax_pool_rows(
+    plan: &FusedPlan,
+    logits: &[f32],
+    values: &[f32],
+    range: Range<usize>,
+) -> Vec<f32> {
+    let d = plan.d;
+    let csr = &*plan.csr;
+    let mut out = vec![0.0f32; range.len() * d];
+    let mut exps: Vec<f32> = Vec::new(); // O(max degree) scratch, reused
+    for (row_i, r) in range.enumerate() {
+        let edges = csr.row(r);
+        if edges.is_empty() {
+            continue;
+        }
+        // Pass 1: per-receiver max logit, in ascending edge order (the
+        // same fold segment_softmax_values performs per segment).
+        let mut m = f32::NEG_INFINITY;
+        for &e in edges {
+            let l = logits[e as usize];
+            if l > m {
+                m = l;
+            }
+        }
+        // Pass 2: exp(l - max), accumulating the normalizer in order.
+        exps.clear();
+        let mut sum = 0.0f32;
+        for &e in edges {
+            let x = (logits[e as usize] - m).exp();
+            exps.push(x);
+            sum += x;
+        }
+        // Pass 3: weighted gather-accumulate from the sender values.
+        let acc = &mut out[row_i * d..(row_i + 1) * d];
+        for (k, &v) in csr.row_neighbors(r).iter().enumerate() {
+            let w = exps[k] / sum;
+            let v = if plan.gather_self { r } else { v as usize };
+            let src = &values[v * d..(v + 1) * d];
+            for (o, x) in acc.iter_mut().zip(src) {
+                *o += w * x;
+            }
+        }
+    }
+    out
+}
+
+/// Fused `pool_edges_to_node(recv_tag, reduce,
+/// broadcast_node_to_edges(send_tag, value))` — identical output
+/// (bit-for-bit), no `[num_edges, d]` intermediate.
+pub fn broadcast_pool_fused(
+    g: &GraphTensor,
+    edge_set: &str,
+    send_tag: Tag,
+    recv_tag: Tag,
+    reduce: Reduce,
+    value: &Feature,
+) -> Result<Feature> {
+    let (plan, dims) = plan(g, edge_set, send_tag, recv_tag, value, "broadcast_pool_fused")?;
+    let (_, data) = dense_f32(value, "broadcast_pool_fused")?;
+    let n_recv = plan.csr.num_nodes();
+    let out = pool_rows(&plan, data, reduce, 0..n_recv);
+    Ok(Feature::F32 { dims, data: out })
+}
+
+/// Fused attention aggregation: softmax the per-edge `logits` within
+/// each `recv_tag` group (exactly [`segment_softmax`](super::segment_softmax)),
+/// then sum-pool the softmax-weighted `send_tag` node values to the
+/// receivers. Equals the unfused sequence bit-for-bit.
+pub fn softmax_weighted_pool_fused(
+    g: &GraphTensor,
+    edge_set: &str,
+    send_tag: Tag,
+    recv_tag: Tag,
+    logits: &Feature,
+    values: &Feature,
+) -> Result<Feature> {
+    let (plan, dims) = softmax_plan(g, edge_set, send_tag, recv_tag, logits, values)?;
+    let (_, data) = dense_f32(values, "softmax_weighted_pool_fused")?;
+    let (_, ldata) = dense_f32(logits, "softmax_weighted_pool_fused logits")?;
+    let n_recv = plan.csr.num_nodes();
+    let out = softmax_pool_rows(&plan, ldata, data, 0..n_recv);
+    Ok(Feature::F32 { dims, data: out })
+}
+
+/// The fused kernels sharded over receiver-node ranges on the shared
+/// [`ThreadPool`]. Receiver rows are independent, so results are
+/// identical to the serial fused path (and therefore to the unfused
+/// oracle) for every worker count — asserted by property tests.
+pub struct ParallelOps {
+    pool: Arc<ThreadPool>,
+}
+
+impl ParallelOps {
+    pub fn new(pool: Arc<ThreadPool>) -> ParallelOps {
+        ParallelOps { pool }
+    }
+
+    /// Worker count of the underlying pool.
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Split `n` rows into ~4 chunks per worker (bounded by `n`) so
+    /// skewed degree distributions still balance.
+    fn chunks(&self, n: usize) -> Vec<(usize, usize)> {
+        let target = (self.pool.size() * 4).clamp(1, n.max(1));
+        let per = n.div_ceil(target);
+        let mut out = Vec::new();
+        let mut at = 0;
+        while at < n {
+            let end = (at + per).min(n);
+            out.push((at, end));
+            at = end;
+        }
+        out
+    }
+
+    /// Parallel [`broadcast_pool_fused`].
+    pub fn broadcast_pool_fused(
+        &self,
+        g: &GraphTensor,
+        edge_set: &str,
+        send_tag: Tag,
+        recv_tag: Tag,
+        reduce: Reduce,
+        value: &Feature,
+    ) -> Result<Feature> {
+        let (plan, dims) =
+            plan(g, edge_set, send_tag, recv_tag, value, "broadcast_pool_fused")?;
+        let (_, data) = dense_f32(value, "broadcast_pool_fused")?;
+        let n_recv = plan.csr.num_nodes();
+        // The pool requires 'static jobs; share the (node-sized, not
+        // edge-sized) value buffer via one Arc copy.
+        let data: Arc<Vec<f32>> = Arc::new(data.to_vec());
+        let plan = Arc::new(plan);
+        let chunks = self.chunks(n_recv);
+        let parts = self.pool.map(chunks, {
+            let plan = Arc::clone(&plan);
+            let data = Arc::clone(&data);
+            move |(s, e)| pool_rows(&plan, &data, reduce, s..e)
+        });
+        let mut out = Vec::with_capacity(n_recv * plan.d);
+        for p in parts {
+            out.extend_from_slice(&p);
+        }
+        Ok(Feature::F32 { dims, data: out })
+    }
+
+    /// Parallel [`softmax_weighted_pool_fused`].
+    pub fn softmax_weighted_pool_fused(
+        &self,
+        g: &GraphTensor,
+        edge_set: &str,
+        send_tag: Tag,
+        recv_tag: Tag,
+        logits: &Feature,
+        values: &Feature,
+    ) -> Result<Feature> {
+        let (plan, dims) = softmax_plan(g, edge_set, send_tag, recv_tag, logits, values)?;
+        let (_, data) = dense_f32(values, "softmax_weighted_pool_fused")?;
+        let (_, ldata) = dense_f32(logits, "softmax_weighted_pool_fused logits")?;
+        let n_recv = plan.csr.num_nodes();
+        let data: Arc<Vec<f32>> = Arc::new(data.to_vec());
+        let ldata: Arc<Vec<f32>> = Arc::new(ldata.to_vec());
+        let plan = Arc::new(plan);
+        let chunks = self.chunks(n_recv);
+        let parts = self.pool.map(chunks, {
+            let plan = Arc::clone(&plan);
+            let data = Arc::clone(&data);
+            let ldata = Arc::clone(&ldata);
+            move |(s, e)| softmax_pool_rows(&plan, &ldata, &data, s..e)
+        });
+        let mut out = Vec::with_capacity(n_recv * plan.d);
+        for p in parts {
+            out.extend_from_slice(&p);
+        }
+        Ok(Feature::F32 { dims, data: out })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Adjacency, Context, EdgeSet, GraphTensor, NodeSet};
+    use crate::ops::{broadcast_node_to_edges, pool_edges_to_node, segment_softmax};
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    /// Single-component graph over one node set "n" with `n_nodes`
+    /// nodes and `n_edges` random edges in edge set "e".
+    fn random_graph(rng: &mut Rng, n_nodes: usize, n_edges: usize) -> GraphTensor {
+        let ns = NodeSet::new(vec![n_nodes]);
+        let es = EdgeSet::new(
+            vec![n_edges],
+            Adjacency {
+                source_set: "n".into(),
+                target_set: "n".into(),
+                source: (0..n_edges).map(|_| rng.uniform(n_nodes) as u32).collect(),
+                target: (0..n_edges).map(|_| rng.uniform(n_nodes) as u32).collect(),
+            },
+        );
+        GraphTensor::from_pieces(
+            Context::default(),
+            [("n".to_string(), ns)].into(),
+            [("e".to_string(), es)].into(),
+        )
+        .unwrap()
+    }
+
+    /// The unfused reference: broadcast then pool.
+    fn oracle(
+        g: &GraphTensor,
+        send: Tag,
+        recv: Tag,
+        reduce: Reduce,
+        value: &Feature,
+    ) -> Feature {
+        let on_edges = broadcast_node_to_edges(g, "e", send, value).unwrap();
+        pool_edges_to_node(g, "e", recv, reduce, &on_edges).unwrap()
+    }
+
+    fn assert_bits_eq(a: &Feature, b: &Feature, what: &str) {
+        let (da, va) = a.as_f32().unwrap();
+        let (db, vb) = b.as_f32().unwrap();
+        assert_eq!(da, db, "{what}: dims");
+        assert_eq!(va.len(), vb.len(), "{what}: len");
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+        }
+    }
+
+    const TAGS: [Tag; 2] = [Tag::Source, Tag::Target];
+    const REDUCTIONS: [Reduce; 4] = [Reduce::Sum, Reduce::Mean, Reduce::Max, Reduce::Min];
+
+    /// The acceptance property: fused == unfused, bit-for-bit, for all
+    /// four reductions, all tag combinations, d ∈ 1..=8, and thread
+    /// counts 1 / 2 / 8.
+    #[test]
+    fn prop_fused_matches_oracle_bitexact() {
+        check("broadcast_pool_fused == broadcast+pool", 40, |rng| {
+            let n_nodes = 1 + rng.uniform(24);
+            let n_edges = rng.uniform(80);
+            let d = 1 + rng.uniform(8);
+            let g = random_graph(rng, n_nodes, n_edges);
+            let value =
+                Feature::f32_mat(d, (0..n_nodes * d).map(|_| rng.range_f32(-3.0, 3.0)).collect());
+            let threads = [1usize, 2, 8].map(|t| ParallelOps::new(Arc::new(ThreadPool::new(t))));
+            for send in TAGS {
+                for recv in TAGS {
+                    for reduce in REDUCTIONS {
+                        let want = oracle(&g, send, recv, reduce, &value);
+                        let got =
+                            broadcast_pool_fused(&g, "e", send, recv, reduce, &value).unwrap();
+                        assert_bits_eq(&want, &got, &format!("serial {send:?}->{recv:?} {reduce:?}"));
+                        for par in &threads {
+                            let got = par
+                                .broadcast_pool_fused(&g, "e", send, recv, reduce, &value)
+                                .unwrap();
+                            assert_bits_eq(
+                                &want,
+                                &got,
+                                &format!("{}t {send:?}->{recv:?} {reduce:?}", par.threads()),
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    /// Same property with non-finite values present: ±inf and NaN flow
+    /// through both paths identically.
+    #[test]
+    fn prop_fused_matches_oracle_nonfinite() {
+        check("fused handles ±inf / NaN like the oracle", 25, |rng| {
+            let n_nodes = 1 + rng.uniform(12);
+            let n_edges = rng.uniform(40);
+            let d = 1 + rng.uniform(4);
+            let g = random_graph(rng, n_nodes, n_edges);
+            let value = Feature::f32_mat(
+                d,
+                (0..n_nodes * d)
+                    .map(|_| match rng.uniform(10) {
+                        0 => f32::INFINITY,
+                        1 => f32::NEG_INFINITY,
+                        2 => f32::NAN,
+                        _ => rng.range_f32(-2.0, 2.0),
+                    })
+                    .collect(),
+            );
+            for reduce in REDUCTIONS {
+                let want = oracle(&g, Tag::Source, Tag::Target, reduce, &value);
+                let got =
+                    broadcast_pool_fused(&g, "e", Tag::Source, Tag::Target, reduce, &value)
+                        .unwrap();
+                assert_bits_eq(&want, &got, &format!("nonfinite {reduce:?}"));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_softmax_pool_matches_oracle_bitexact() {
+        check("softmax_weighted_pool_fused == softmax+mul+pool", 40, |rng| {
+            let n_nodes = 1 + rng.uniform(24);
+            let n_edges = rng.uniform(80);
+            let d = 1 + rng.uniform(8);
+            let g = random_graph(rng, n_nodes, n_edges);
+            let values =
+                Feature::f32_mat(d, (0..n_nodes * d).map(|_| rng.range_f32(-3.0, 3.0)).collect());
+            let logits =
+                Feature::f32_vec((0..n_edges).map(|_| rng.range_f32(-6.0, 6.0)).collect());
+            let threads = [1usize, 2, 8].map(|t| ParallelOps::new(Arc::new(ThreadPool::new(t))));
+            for send in TAGS {
+                for recv in TAGS {
+                    // Unfused oracle: weights, broadcast, scale, pool.
+                    let w = segment_softmax(&g, "e", recv, &logits).unwrap();
+                    let (_, wv) = w.as_f32().unwrap();
+                    let msgs = broadcast_node_to_edges(&g, "e", send, &values).unwrap();
+                    let (mdims, mv) = msgs.as_f32().unwrap();
+                    let weighted = Feature::F32 {
+                        dims: mdims.to_vec(),
+                        data: mv
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &x)| wv[i / d] * x)
+                            .collect(),
+                    };
+                    let want =
+                        pool_edges_to_node(&g, "e", recv, Reduce::Sum, &weighted).unwrap();
+                    let got = softmax_weighted_pool_fused(&g, "e", send, recv, &logits, &values)
+                        .unwrap();
+                    assert_bits_eq(&want, &got, &format!("serial softmax {send:?}->{recv:?}"));
+                    for par in &threads {
+                        let got = par
+                            .softmax_weighted_pool_fused(&g, "e", send, recv, &logits, &values)
+                            .unwrap();
+                        assert_bits_eq(
+                            &want,
+                            &got,
+                            &format!("{}t softmax {send:?}->{recv:?}", par.threads()),
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fused_on_recsys_example() {
+        // The A.3 spending computation through the fused path.
+        let g = crate::synth::recsys::recsys_example_graph();
+        let price = g.node_set("items").unwrap().feature("price").unwrap().clone();
+        let latest: Vec<f32> = (0..6).map(|i| price.ragged_row_f32(i).unwrap()[0]).collect();
+        let latest = Feature::f32_vec(latest);
+        let spending =
+            broadcast_pool_fused(&g, "purchased", Tag::Source, Tag::Target, Reduce::Sum, &latest)
+                .unwrap();
+        let (_, sp) = spending.as_f32().unwrap();
+        assert!((sp[0] - (89.99 + 24.99 + 45.13)).abs() < 1e-4);
+        assert!((sp[1] - (22.34 + 27.99)).abs() < 1e-4);
+        assert!((sp[2] - 350.0).abs() < 1e-4);
+        assert!((sp[3] - 45.13).abs() < 1e-4);
+    }
+
+    #[test]
+    fn fused_uses_memoized_csr() {
+        let g = crate::synth::recsys::recsys_example_graph();
+        let es = g.edge_set("purchased").unwrap();
+        assert!(!es.csr.is_built(crate::graph::Incidence::ByTarget));
+        let v = Feature::f32_vec(vec![1.0; 6]);
+        let _ =
+            broadcast_pool_fused(&g, "purchased", Tag::Source, Tag::Target, Reduce::Sum, &v)
+                .unwrap();
+        assert!(
+            g.edge_set("purchased").unwrap().csr.is_built(crate::graph::Incidence::ByTarget),
+            "first fused call builds + memoizes the CSR view"
+        );
+    }
+
+    #[test]
+    fn fused_rejects_bad_shapes() {
+        let g = crate::synth::recsys::recsys_example_graph();
+        let wrong = Feature::f32_vec(vec![1.0; 5]);
+        assert!(broadcast_pool_fused(&g, "purchased", Tag::Source, Tag::Target, Reduce::Sum, &wrong)
+            .is_err());
+        let v = Feature::f32_vec(vec![1.0; 6]);
+        let bad_logits = Feature::f32_vec(vec![0.0; 3]); // 7 edges
+        assert!(softmax_weighted_pool_fused(
+            &g,
+            "purchased",
+            Tag::Source,
+            Tag::Target,
+            &bad_logits,
+            &v
+        )
+        .is_err());
+    }
+}

@@ -19,14 +19,16 @@
 //! (by name) or an unstored value tensor, mirroring
 //! `feature_name=` / `feature_value=` in the TF-GNN API.
 
+mod fused;
 pub mod model_ref;
 mod segment;
 
+pub use fused::{broadcast_pool_fused, softmax_weighted_pool_fused, ParallelOps};
 pub use segment::{
     segment_max, segment_mean, segment_min, segment_softmax_values, segment_sum,
 };
 
-use crate::graph::{Feature, GraphTensor};
+use crate::graph::{Feature, GraphTensor, Incidence};
 use crate::{Error, Result};
 
 /// Edge endpoint selector (tfgnn.SOURCE / tfgnn.TARGET).
@@ -34,6 +36,16 @@ use crate::{Error, Result};
 pub enum Tag {
     Source,
     Target,
+}
+
+impl Tag {
+    /// The CSR incidence keyed by this endpoint.
+    pub fn incidence(self) -> Incidence {
+        match self {
+            Tag::Source => Incidence::BySource,
+            Tag::Target => Incidence::ByTarget,
+        }
+    }
 }
 
 /// Pooling reduction type.
@@ -76,6 +88,21 @@ fn elems_per_item(dims: &[usize]) -> usize {
     dims.iter().product::<usize>().max(1)
 }
 
+/// Guard against corrupt adjacency: every segment id must address a
+/// real node, otherwise downstream slice arithmetic panics. Graphs
+/// that went through [`GraphTensor::validate`] can't trip this, but
+/// ops also run on hand-built / deserialized-in-parts tensors, so the
+/// hot-path entry points check once and fail with [`Error::Graph`].
+fn check_indices(edge_set: &str, tag: Tag, indices: &[u32], n_nodes: usize) -> Result<()> {
+    if let Some((e, &i)) = indices.iter().enumerate().find(|&(_, &i)| i as usize >= n_nodes) {
+        return Err(Error::Graph(format!(
+            "edge set {edge_set:?}: {tag:?} index {i} at edge {e} out of range \
+             (node set has {n_nodes} nodes)"
+        )));
+    }
+    Ok(())
+}
+
 /// `tfgnn.broadcast_node_to_edges`: for each edge, the value at its
 /// `tag` endpoint node.
 pub fn broadcast_node_to_edges(
@@ -101,6 +128,7 @@ pub fn broadcast_node_to_edges(
             value.len()
         )));
     }
+    check_indices(edge_set, tag, indices, n_nodes)?;
     let d = elems_per_item(dims);
     let mut out = Vec::with_capacity(indices.len() * d);
     for &i in indices {
@@ -153,6 +181,7 @@ pub fn pool_edges_to_node(
             es.total()
         )));
     }
+    check_indices(edge_set, tag, indices, n_nodes)?;
     let d = elems_per_item(dims);
     let out = match reduce {
         Reduce::Sum => segment_sum(data, indices, n_nodes, d),
@@ -294,6 +323,7 @@ pub fn segment_softmax(
     if logits.len() != es.total() {
         return Err(Error::Feature("segment_softmax: logits count mismatch".into()));
     }
+    check_indices(edge_set, tag, indices, n_nodes)?;
     let d = elems_per_item(dims);
     Ok(Feature::F32 {
         dims: dims.to_vec(),
@@ -416,6 +446,36 @@ mod tests {
         assert!(broadcast_context_to_nodes(&g, "users", &wrong).is_err());
         let int_feature = Feature::i64_vec(vec![1, 2, 3, 4, 5, 6]);
         assert!(broadcast_node_to_edges(&g, "purchased", Tag::Source, &int_feature).is_err());
+    }
+
+    /// Regression: out-of-range segment ids used to cause slice panics
+    /// deep inside the segment kernels; they are now a proper
+    /// `Error::Graph` (ops can see hand-built graphs that never went
+    /// through `GraphTensor::validate`).
+    #[test]
+    fn corrupt_adjacency_is_an_error_not_a_panic() {
+        let mut g = recsys_example_graph();
+        g.edge_sets.get_mut("purchased").unwrap().adjacency.target[3] = 99;
+        let vals = Feature::f32_vec(vec![1.0; 7]);
+        let err = pool_edges_to_node(&g, "purchased", Tag::Target, Reduce::Sum, &vals)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("graph error"), "{err}");
+        assert!(err.contains("edge 3"), "{err}");
+        let node_vals = Feature::f32_vec(vec![1.0; 4]);
+        assert!(broadcast_node_to_edges(&g, "purchased", Tag::Target, &node_vals).is_err());
+        assert!(segment_softmax(&g, "purchased", Tag::Target, &vals).is_err());
+        // The fused path reports it too (via the CSR build).
+        let item_vals = Feature::f32_vec(vec![1.0; 6]);
+        assert!(broadcast_pool_fused(
+            &g,
+            "purchased",
+            Tag::Source,
+            Tag::Target,
+            Reduce::Sum,
+            &item_vals
+        )
+        .is_err());
     }
 
     #[test]

@@ -121,6 +121,79 @@ impl Mat {
     }
 }
 
+/// The unfused message-passing step, kept as the bit-for-bit oracle
+/// for [`edge_conv_fused`]: gather both endpoint states, concat,
+/// message MLP `relu(W·[s‖r] + b)`, then sum-pool to the receiver.
+/// Materializes four `[num_edges, …]` matrices.
+pub fn edge_conv_unfused(
+    sender_h: &Mat,
+    receiver_h: &Mat,
+    sender_idx: &[i32],
+    receiver_idx: &[i32],
+    w: &Mat,
+    b: &[f32],
+    n_recv: usize,
+) -> Mat {
+    let sender = sender_h.gather(sender_idx);
+    let receiver = receiver_h.gather(receiver_idx);
+    let x = Mat::concat_cols(&[&sender, &receiver]);
+    let mut msg = x.matmul(w);
+    msg.add_bias(b);
+    msg.relu();
+    msg.segment_sum(receiver_idx, n_recv)
+}
+
+/// Fused edge convolution: one pass over the edges computing each
+/// message row on an O(hidden)-sized scratch buffer and accumulating
+/// straight into the receiver's output row — no `[num_edges, …]`
+/// intermediates (the unfused path materializes gathered sender,
+/// gathered receiver, their concat, and the messages).
+///
+/// Bit-for-bit equal to [`edge_conv_unfused`]: the per-row dot-product
+/// loop mirrors [`Mat::matmul`] (including its skip of zero
+/// activations), and edges are visited in ascending id order, which is
+/// the accumulation order of [`Mat::segment_sum`].
+pub fn edge_conv_fused(
+    sender_h: &Mat,
+    receiver_h: &Mat,
+    sender_idx: &[i32],
+    receiver_idx: &[i32],
+    w: &Mat,
+    b: &[f32],
+    n_recv: usize,
+) -> Mat {
+    let in_cols = sender_h.cols + receiver_h.cols;
+    assert_eq!(in_cols, w.rows, "edge_conv_fused: W shape");
+    assert_eq!(w.cols, b.len(), "edge_conv_fused: bias shape");
+    assert_eq!(sender_idx.len(), receiver_idx.len());
+    let mut out = Mat::zeros(n_recv, w.cols);
+    let mut xrow = vec![0.0f32; in_cols];
+    let mut msg = vec![0.0f32; w.cols];
+    for (&s, &r) in sender_idx.iter().zip(receiver_idx) {
+        xrow[..sender_h.cols].copy_from_slice(sender_h.row(s as usize));
+        xrow[sender_h.cols..].copy_from_slice(receiver_h.row(r as usize));
+        // msg = xrow @ W, with matmul's zero-activation skip; the bias
+        // is added *after* the dot products (float addition is not
+        // associative — starting from `b` would change the bits).
+        msg.fill(0.0);
+        for (k, &a) in xrow.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let wrow = &w.data[k * w.cols..(k + 1) * w.cols];
+            for (o, &wv) in msg.iter_mut().zip(wrow) {
+                *o += a * wv;
+            }
+        }
+        let dst = &mut out.data[r as usize * w.cols..(r as usize + 1) * w.cols];
+        for ((o, &m), &bb) in dst.iter_mut().zip(&msg).zip(b) {
+            let m = m + bb;
+            *o += if m < 0.0 { 0.0 } else { m };
+        }
+    }
+    out
+}
+
 /// Named parameter lookup over a checkpoint/params list.
 pub struct ParamMap<'a>(BTreeMap<&'a str, &'a HostTensor>);
 
@@ -264,13 +337,18 @@ pub fn mpnn_forward_reference(
                 let src: Vec<i32> = adj.source.iter().map(|&x| x as i32).collect();
                 let tgt: Vec<i32> = adj.target.iter().map(|&x| x as i32).collect();
                 let send_set = &rc.edge_endpoints[es].1;
-                let sender = h[send_set].gather(&tgt);
-                let receiver = h[node_set].gather(&src);
-                let x = Mat::concat_cols(&[&sender, &receiver]);
-                let mut msg = x.matmul(&p.mat(&format!("l{layer}.{node_set}.{es}.msg.w"))?);
-                msg.add_bias(&p.vec(&format!("l{layer}.{node_set}.{es}.msg.b"))?);
-                msg.relu();
-                pooled.push(msg.segment_sum(&src, n_recv));
+                // Fused gather→concat→MLP→pool; bit-for-bit equal to
+                // the unfused sequence (edge_conv_unfused) but without
+                // the four [num_edges, …] intermediates.
+                pooled.push(edge_conv_fused(
+                    &h[send_set],
+                    &h[node_set],
+                    &tgt,
+                    &src,
+                    &p.mat(&format!("l{layer}.{node_set}.{es}.msg.w"))?,
+                    &p.vec(&format!("l{layer}.{node_set}.{es}.msg.b"))?,
+                    n_recv,
+                ));
             }
             let mut parts: Vec<&Mat> = vec![&h[node_set]];
             parts.extend(pooled.iter());
@@ -319,6 +397,49 @@ mod tests {
         let cc = Mat::concat_cols(&[&a, &a]);
         assert_eq!(cc.cols, 6);
         assert_eq!(cc.row(1), &[4.0, 5.0, 6.0, 4.0, 5.0, 6.0]);
+    }
+
+    /// The fused edge conv must reproduce the unfused oracle exactly —
+    /// this is what keeps `mpnn_forward_reference` a valid bit-level
+    /// reference for the AOT programs after the fusion.
+    #[test]
+    fn fused_edge_conv_matches_unfused_bitexact() {
+        use crate::util::proptest::check;
+        check("edge_conv fused == unfused", 40, |rng| {
+            let n_send = 1 + rng.uniform(12);
+            let n_recv = 1 + rng.uniform(12);
+            let n_edges = rng.uniform(40);
+            let d_in = 1 + rng.uniform(6);
+            let d_out = 1 + rng.uniform(6);
+            let mk = |rows: usize, cols: usize, rng: &mut crate::util::rng::Rng| Mat {
+                rows,
+                cols,
+                data: (0..rows * cols)
+                    .map(|_| {
+                        // Mix in exact zeros to exercise matmul's
+                        // zero-activation skip on both paths.
+                        if rng.chance(0.2) {
+                            0.0
+                        } else {
+                            rng.range_f32(-2.0, 2.0)
+                        }
+                    })
+                    .collect(),
+            };
+            let sender_h = mk(n_send, d_in, rng);
+            let receiver_h = mk(n_recv, d_in, rng);
+            let w = mk(2 * d_in, d_out, rng);
+            let b: Vec<f32> = (0..d_out).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let sidx: Vec<i32> = (0..n_edges).map(|_| rng.uniform(n_send) as i32).collect();
+            let ridx: Vec<i32> = (0..n_edges).map(|_| rng.uniform(n_recv) as i32).collect();
+            let want = edge_conv_unfused(&sender_h, &receiver_h, &sidx, &ridx, &w, &b, n_recv);
+            let got = edge_conv_fused(&sender_h, &receiver_h, &sidx, &ridx, &w, &b, n_recv);
+            assert_eq!(want.rows, got.rows);
+            assert_eq!(want.cols, got.cols);
+            for (i, (x, y)) in want.data.iter().zip(&got.data).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "element {i}: {x} vs {y}");
+            }
+        });
     }
 
     #[test]

@@ -42,45 +42,61 @@ pub fn segment_mean(data: &[f32], segments: &[u32], num_segments: usize, d: usiz
 /// missing inputs in `pool` with max is the dtype min; we clamp empties
 /// to 0 so padded graphs stay finite — documented deviation, asserted in
 /// tests on both sides of the AOT boundary).
+///
+/// Only *empty* segments are clamped: legitimate `±inf` inputs pass
+/// through, and a NaN input makes its segment NaN (sticky, like a
+/// sequential `reduce_max` over the segment). An earlier version
+/// zeroed every non-finite output, silently rewriting real data.
 pub fn segment_max(data: &[f32], segments: &[u32], num_segments: usize, d: usize) -> Vec<f32> {
+    debug_assert_eq!(data.len(), segments.len() * d);
     let mut out = vec![f32::NEG_INFINITY; num_segments * d];
+    let mut counts = vec![0u32; num_segments];
     for (i, &s) in segments.iter().enumerate() {
         let s = s as usize;
+        counts[s] += 1;
         let src = &data[i * d..(i + 1) * d];
         let dst = &mut out[s * d..(s + 1) * d];
         for (o, v) in dst.iter_mut().zip(src) {
-            if *v > *o {
+            if v.is_nan() || (!o.is_nan() && *v > *o) {
                 *o = *v;
             }
         }
     }
-    for v in &mut out {
-        if !v.is_finite() {
-            *v = 0.0;
-        }
-    }
+    zero_empty_segments(&mut out, &counts, d);
     out
 }
 
-/// Min per segment; empty segments yield 0.
+/// Min per segment; empty segments yield 0 (same clamping rules as
+/// [`segment_max`]).
 pub fn segment_min(data: &[f32], segments: &[u32], num_segments: usize, d: usize) -> Vec<f32> {
+    debug_assert_eq!(data.len(), segments.len() * d);
     let mut out = vec![f32::INFINITY; num_segments * d];
+    let mut counts = vec![0u32; num_segments];
     for (i, &s) in segments.iter().enumerate() {
         let s = s as usize;
+        counts[s] += 1;
         let src = &data[i * d..(i + 1) * d];
         let dst = &mut out[s * d..(s + 1) * d];
         for (o, v) in dst.iter_mut().zip(src) {
-            if *v < *o {
+            if v.is_nan() || (!o.is_nan() && *v < *o) {
                 *o = *v;
             }
         }
     }
-    for v in &mut out {
-        if !v.is_finite() {
-            *v = 0.0;
+    zero_empty_segments(&mut out, &counts, d);
+    out
+}
+
+/// Overwrite the rows of segments with no contributing items with 0
+/// (the padded-graph deviation documented on [`segment_max`]).
+fn zero_empty_segments(out: &mut [f32], counts: &[u32], d: usize) {
+    for (s, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            for v in &mut out[s * d..(s + 1) * d] {
+                *v = 0.0;
+            }
         }
     }
-    out
 }
 
 /// Numerically stable softmax within each segment (per element column):
@@ -155,6 +171,40 @@ mod tests {
         let seg = [0, 0, 1];
         assert_eq!(segment_max(&data, &seg, 3, 1), vec![-1.0, -3.0, 0.0]);
         assert_eq!(segment_min(&data, &seg, 3, 1), vec![-5.0, -3.0, 0.0]);
+    }
+
+    /// Regression: non-finite *inputs* must survive max/min pooling;
+    /// only empty segments are clamped to 0.
+    #[test]
+    fn max_min_preserve_infinities() {
+        let data = [f32::INFINITY, 1.0, f32::NEG_INFINITY, 2.0];
+        let seg = [0, 0, 1, 1];
+        // Segment 2 is empty -> 0 on both sides (padded-graph deviation).
+        assert_eq!(segment_max(&data, &seg, 3, 1), vec![f32::INFINITY, 2.0, 0.0]);
+        assert_eq!(segment_min(&data, &seg, 3, 1), vec![1.0, f32::NEG_INFINITY, 0.0]);
+    }
+
+    #[test]
+    fn max_min_all_neg_inf_segment_survives() {
+        // A segment whose only value is -inf must report -inf, not 0
+        // (the old clamp confused it with an empty segment).
+        let data = [f32::NEG_INFINITY];
+        let seg = [0];
+        assert_eq!(segment_max(&data, &seg, 2, 1), vec![f32::NEG_INFINITY, 0.0]);
+        let data = [f32::INFINITY];
+        assert_eq!(segment_min(&data, &seg, 2, 1), vec![f32::INFINITY, 0.0]);
+    }
+
+    #[test]
+    fn max_min_propagate_nan() {
+        let data = [1.0, f32::NAN, 3.0, 4.0];
+        let seg = [0, 0, 0, 1];
+        let mx = segment_max(&data, &seg, 2, 1);
+        assert!(mx[0].is_nan(), "NaN input poisons its segment: {mx:?}");
+        assert_eq!(mx[1], 4.0);
+        let mn = segment_min(&data, &seg, 2, 1);
+        assert!(mn[0].is_nan());
+        assert_eq!(mn[1], 4.0);
     }
 
     #[test]

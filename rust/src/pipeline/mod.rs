@@ -18,6 +18,7 @@ use std::sync::Arc;
 
 use crate::graph::pad::{fit_or_skip, PadSpec, Padded};
 use crate::graph::{batch::merge, io::ShardSet, GraphTensor};
+use crate::ops::{broadcast_pool_fused, Reduce, Tag};
 use crate::sampler::inmem::InMemorySampler;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
@@ -118,6 +119,73 @@ impl<I: Iterator> Iterator for ShuffleBuffer<I> {
     }
 }
 
+/// A per-example feature-engineering transform (the A.3 flow as a
+/// pipeline stage): applied to each GraphTensor after reading and
+/// before shuffling/batching. Cheap to clone; a transform that fails
+/// drops the example and counts a read error.
+#[derive(Clone)]
+pub struct FeatureMap(Arc<dyn Fn(GraphTensor) -> Result<GraphTensor> + Send + Sync>);
+
+impl FeatureMap {
+    pub fn new(
+        f: impl Fn(GraphTensor) -> Result<GraphTensor> + Send + Sync + 'static,
+    ) -> FeatureMap {
+        FeatureMap(Arc::new(f))
+    }
+
+    pub fn apply(&self, g: GraphTensor) -> Result<GraphTensor> {
+        (self.0)(g)
+    }
+}
+
+impl std::fmt::Debug for FeatureMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "FeatureMap(..)")
+    }
+}
+
+/// The canonical engineered feature: pool a `send_tag`-node feature
+/// across `edge_set` onto the `recv_tag` nodes (e.g. "sum of purchase
+/// prices per user", "mean cited-paper embedding"). Runs on the fused
+/// broadcast→pool fast path — no `[num_edges, d]` intermediate per
+/// example — and stores the result as `out_feature` on the receiver
+/// node set.
+pub fn pooled_neighbor_feature(
+    edge_set: &str,
+    send_tag: Tag,
+    recv_tag: Tag,
+    reduce: Reduce,
+    src_feature: &str,
+    out_feature: &str,
+) -> FeatureMap {
+    let edge_set = edge_set.to_string();
+    let src_feature = src_feature.to_string();
+    let out_feature = out_feature.to_string();
+    FeatureMap::new(move |mut g: GraphTensor| {
+        let adj = &g.edge_set(&edge_set)?.adjacency;
+        let send_set = match send_tag {
+            Tag::Source => adj.source_set.clone(),
+            Tag::Target => adj.target_set.clone(),
+        };
+        let recv_set = match recv_tag {
+            Tag::Source => adj.source_set.clone(),
+            Tag::Target => adj.target_set.clone(),
+        };
+        let value = g.node_set(&send_set)?.feature(&src_feature)?;
+        let pooled = broadcast_pool_fused(&g, &edge_set, send_tag, recv_tag, reduce, value)?;
+        // The closure owns the graph: insert in place (no
+        // replace_node_features, which deep-clones every feature), then
+        // re-validate the touched set's invariant directly.
+        let ns = g
+            .node_sets
+            .get_mut(&recv_set)
+            .ok_or_else(|| Error::Graph(format!("unknown node set {recv_set:?}")))?;
+        pooled.validate(ns.total(), &format!("{recv_set}/{out_feature}"))?;
+        ns.features.insert(out_feature.clone(), pooled);
+        Ok(g)
+    })
+}
+
 /// Pipeline configuration.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -133,6 +201,9 @@ pub struct PipelineConfig {
     /// Threads for the merge+pad preparation stage (tf.data-service
     /// analog); 0 or 1 = prepare inline on the producer thread.
     pub prep_threads: usize,
+    /// Optional feature-engineering stage applied per example before
+    /// shuffling/batching (see [`FeatureMap`]).
+    pub feature_map: Option<FeatureMap>,
 }
 
 impl PipelineConfig {
@@ -145,6 +216,7 @@ impl PipelineConfig {
             prefetch_depth: 4,
             drop_remainder: true,
             prep_threads: 0,
+            feature_map: None,
         }
     }
 }
@@ -209,20 +281,38 @@ pub fn epoch_stream(
                     return;
                 }
             };
-            let counted = source.filter_map(|r| match r {
+            let stats_c = Arc::clone(&stats_p);
+            let counted = source.filter_map(move |r| match r {
                 Ok(g) => {
-                    stats_p.graphs_read.fetch_add(1, Ordering::Relaxed);
+                    stats_c.graphs_read.fetch_add(1, Ordering::Relaxed);
                     Some(g)
                 }
                 Err(_) => {
-                    stats_p.read_errors.fetch_add(1, Ordering::Relaxed);
+                    stats_c.read_errors.fetch_add(1, Ordering::Relaxed);
                     None
                 }
             });
+            // Feature-engineering stage (fused broadcast→pool fast
+            // path): per-example, before shuffling/batching. Failures
+            // drop the example and count as read errors.
+            let engineered: Box<dyn Iterator<Item = GraphTensor>> =
+                match cfg.feature_map.clone() {
+                    Some(fm) => {
+                        let stats_f = Arc::clone(&stats_p);
+                        Box::new(counted.filter_map(move |g| match fm.apply(g) {
+                            Ok(g) => Some(g),
+                            Err(_) => {
+                                stats_f.read_errors.fetch_add(1, Ordering::Relaxed);
+                                None
+                            }
+                        }))
+                    }
+                    None => Box::new(counted),
+                };
             let shuffled: Box<dyn Iterator<Item = GraphTensor>> = if cfg.shuffle_buffer > 0 {
-                Box::new(ShuffleBuffer::new(counted, cfg.shuffle_buffer, cfg.shuffle_seed))
+                Box::new(ShuffleBuffer::new(engineered, cfg.shuffle_buffer, cfg.shuffle_seed))
             } else {
-                Box::new(counted)
+                Box::new(engineered)
             };
 
             // Batch → merge → pad, optionally on a prep pool.
@@ -433,6 +523,64 @@ mod tests {
         let stream = epoch_stream(Arc::new(sp), cfg, 0).unwrap();
         assert!(stream.iter().count() > 0);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn feature_map_engineers_each_example() {
+        // Pool each paper's cited-paper embeddings (mean) into a new
+        // node feature, per example, on the fused fast path.
+        let (provider, pad) = mag_provider();
+        let fm = pooled_neighbor_feature(
+            "cites",
+            Tag::Source,
+            Tag::Target,
+            Reduce::Mean,
+            "feat",
+            "cited_feat_mean",
+        );
+        // Unit-level: the transform matches the unfused oracle on one
+        // raw example.
+        let g = provider.sampler.sample(provider.seeds[0]).unwrap();
+        let engineered = fm.apply(g.clone()).unwrap();
+        let got = engineered
+            .node_set("paper")
+            .unwrap()
+            .feature("cited_feat_mean")
+            .unwrap()
+            .clone();
+        let feat = g.node_set("paper").unwrap().feature("feat").unwrap().clone();
+        let on_edges =
+            crate::ops::broadcast_node_to_edges(&g, "cites", Tag::Source, &feat).unwrap();
+        let want =
+            crate::ops::pool_edges_to_node(&g, "cites", Tag::Target, Reduce::Mean, &on_edges)
+                .unwrap();
+        assert_eq!(got, want, "fused pipeline stage == unfused oracle");
+
+        // Pipeline-level: every emitted batch carries the new feature
+        // (padded to the static cap like any other feature).
+        let mut cfg = PipelineConfig::new(2, pad);
+        cfg.feature_map = Some(fm);
+        let stream = epoch_stream(provider, cfg, 0).unwrap();
+        let batches: Vec<Padded> = stream.iter().collect();
+        assert!(!batches.is_empty());
+        for b in &batches {
+            let ns = b.graph.node_set("paper").unwrap();
+            let f = ns.feature("cited_feat_mean").unwrap();
+            assert_eq!(f.len(), ns.total(), "engineered feature padded with the batch");
+        }
+    }
+
+    #[test]
+    fn failing_feature_map_drops_examples_not_pipeline() {
+        let (provider, pad) = mag_provider();
+        let n = provider.len_hint().unwrap();
+        let mut cfg = PipelineConfig::new(2, pad);
+        cfg.feature_map =
+            Some(FeatureMap::new(|_g| Err(Error::Feature("engineered to fail".into()))));
+        let stream = epoch_stream(provider, cfg, 0).unwrap();
+        let batches: Vec<Padded> = stream.iter().collect();
+        assert!(batches.is_empty(), "every example dropped");
+        assert_eq!(stream.stats.read_errors.load(Ordering::Relaxed) as usize, n);
     }
 
     #[test]

@@ -1,22 +1,53 @@
 //! A small fixed-size thread pool over `std::sync::mpsc`.
 //!
 //! Used by the distributed sampler's worker fleet, the pipeline's
-//! parallel parse stage, and the sweep harness. Supports fire-and-forget
-//! jobs, scoped parallel-map with result collection, and clean shutdown
-//! on drop.
+//! parallel parse stage, the fused parallel graph ops
+//! (`ops::ParallelOps`), and the sweep harness. Supports fire-and-forget
+//! jobs, scoped parallel-map with result collection (panics in the
+//! mapped closure propagate to the caller), and clean shutdown on drop.
+//!
+//! Panic safety: a panicking job must neither kill its worker thread
+//! nor leak an `in_flight` increment — otherwise `wait_idle()` blocks
+//! forever and `map()` sees its result channel die. Jobs therefore run
+//! under `catch_unwind`, and the in-flight count is decremented by a
+//! drop guard that runs even while unwinding. The count lives behind a
+//! `Mutex` paired with a `Condvar`, so `wait_idle` blocks instead of
+//! spinning on `yield_now` (the earlier atomic-counter design also had
+//! its `fetch_add`/`fetch_sub` orderings inverted; the lock supersedes
+//! that entirely).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Job accounting shared between the pool handle and its workers.
+struct Shared {
+    in_flight: Mutex<usize>,
+    idle: Condvar,
+}
+
+/// Decrements `in_flight` when dropped — also during a panic unwind, so
+/// a panicking job can never strand `wait_idle`.
+struct InFlightGuard(Arc<Shared>);
+
+impl Drop for InFlightGuard {
+    fn drop(&mut self) {
+        let mut n = self.0.in_flight.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.0.idle.notify_all();
+        }
+    }
+}
 
 /// Fixed-size worker pool.
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
-    in_flight: Arc<AtomicUsize>,
+    shared: Arc<Shared>,
 }
 
 impl ThreadPool {
@@ -25,11 +56,11 @@ impl ThreadPool {
         assert!(n > 0, "ThreadPool::new(0)");
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let in_flight = Arc::new(AtomicUsize::new(0));
+        let shared = Arc::new(Shared { in_flight: Mutex::new(0), idle: Condvar::new() });
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
-                let in_flight = Arc::clone(&in_flight);
+                let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("tfgnn-pool-{i}"))
                     .spawn(move || loop {
@@ -39,8 +70,11 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
-                                in_flight.fetch_sub(1, Ordering::Release);
+                                let _guard = InFlightGuard(Arc::clone(&shared));
+                                // Swallow the panic here so the worker
+                                // survives; `map` re-raises it in the
+                                // caller via its result channel.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
                             }
                             Err(_) => break, // sender dropped: shutdown
                         }
@@ -48,7 +82,7 @@ impl ThreadPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, in_flight }
+        ThreadPool { tx: Some(tx), workers, shared }
     }
 
     /// Number of workers.
@@ -56,9 +90,10 @@ impl ThreadPool {
         self.workers.len()
     }
 
-    /// Enqueue a job.
+    /// Enqueue a job. A panic inside the job is caught on the worker
+    /// (fire-and-forget jobs have nowhere to surface it).
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.in_flight.fetch_add(1, Ordering::Acquire);
+        *self.shared.in_flight.lock().unwrap() += 1;
         self.tx
             .as_ref()
             .expect("pool already shut down")
@@ -66,16 +101,20 @@ impl ThreadPool {
             .expect("pool workers gone");
     }
 
-    /// Block until all submitted jobs have completed.
+    /// Block until all submitted jobs have completed (including jobs
+    /// that panicked).
     pub fn wait_idle(&self) {
-        while self.in_flight.load(Ordering::Acquire) > 0 {
-            std::thread::yield_now();
+        let mut n = self.shared.in_flight.lock().unwrap();
+        while *n > 0 {
+            n = self.shared.idle.wait(n).unwrap();
         }
     }
 
     /// Parallel map: applies `f` to each item, preserving order.
     ///
     /// `f` must be `Sync` because multiple workers call it concurrently.
+    /// If `f` panics on any item, the panic is re-raised here (after all
+    /// results have been collected) and the pool remains usable.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -84,21 +123,31 @@ impl ThreadPool {
     {
         let n = items.len();
         let f = Arc::new(f);
-        let (rtx, rrx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        type Slot<R> = (usize, std::thread::Result<R>);
+        let (rtx, rrx): (Sender<Slot<R>>, Receiver<Slot<R>>) = channel();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let rtx = rtx.clone();
             self.execute(move || {
-                let r = f(item);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
                 // Receiver may be gone if the caller panicked; ignore.
                 let _ = rtx.send((i, r));
             });
         }
         drop(rtx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panic_payload = None;
         for _ in 0..n {
-            let (i, r) = rrx.recv().expect("worker died before sending result");
-            out[i] = Some(r);
+            // Workers survive job panics, so every job sends exactly one
+            // result; a dead channel would mean the pool itself is gone.
+            let (i, r) = rrx.recv().expect("pool worker disappeared");
+            match r {
+                Ok(r) => out[i] = Some(r),
+                Err(payload) => panic_payload = Some(payload),
+            }
+        }
+        if let Some(payload) = panic_payload {
+            std::panic::resume_unwind(payload);
         }
         out.into_iter().map(|o| o.unwrap()).collect()
     }
@@ -116,7 +165,7 @@ impl Drop for ThreadPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn executes_all_jobs() {
@@ -175,5 +224,47 @@ mod tests {
             acc
         });
         assert_eq!(out.len(), 64);
+    }
+
+    /// Regression: a panicking job used to kill its worker without
+    /// decrementing `in_flight`, hanging `wait_idle` forever.
+    #[test]
+    fn panicking_job_does_not_hang_wait_idle() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i % 4 == 0 {
+                    panic!("job {i} exploded");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle(); // must return despite 5 panics
+        assert_eq!(counter.load(Ordering::SeqCst), 15);
+        // All workers survived; the pool is still fully usable.
+        let out = pool.map(vec![1usize, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    /// Regression: `map` used to die with "worker died before sending
+    /// result" when `f` panicked; now the panic propagates to the
+    /// caller and the pool survives.
+    #[test]
+    fn map_propagates_panic_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.map((0..10).collect::<Vec<usize>>(), |x| {
+                if x == 7 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        }));
+        assert!(r.is_err(), "map must re-raise the closure panic");
+        pool.wait_idle();
+        let out = pool.map((0..10).collect::<Vec<usize>>(), |x| x * 2);
+        assert_eq!(out.len(), 10);
     }
 }
