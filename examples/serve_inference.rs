@@ -14,6 +14,7 @@ use std::time::Duration;
 use tfgnn::runner::MagEnv;
 use tfgnn::runtime::batch::RootTask;
 use tfgnn::runtime::Runtime;
+use tfgnn::sampler::SamplerConfig;
 use tfgnn::serve::{serve, ServeConfig};
 use tfgnn::synth::mag::Split;
 use tfgnn::train::{Hyperparams, Trainer};
@@ -32,7 +33,12 @@ fn main() -> tfgnn::Result<()> {
     drop(trainer);
 
     let seeds = env.dataset.papers_in_split(Split::Test);
-    for (max_batch, max_wait_ms) in [(1usize, 0u64), (4, 2), (8, 5)] {
+    // (max_batch, wait, sampler threads): the third column turns on the
+    // parallel wave sampler — the whole batch of roots expands
+    // concurrently before padding.
+    for (max_batch, max_wait_ms, threads) in
+        [(1usize, 0u64, 1usize), (4, 2, 1), (8, 5, 1), (8, 5, 4)]
+    {
         let handle = serve(
             dir,
             &entry,
@@ -40,7 +46,11 @@ fn main() -> tfgnn::Result<()> {
             Arc::clone(&env.sampler),
             env.pad.clone(),
             RootTask::default(),
-            ServeConfig { max_batch, max_wait: Duration::from_millis(max_wait_ms) },
+            ServeConfig {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+                sampler: SamplerConfig::with_threads(threads),
+            },
         )?;
         // Closed-loop clients: 4 threads × 16 requests each.
         let t0 = std::time::Instant::now();
@@ -69,7 +79,7 @@ fn main() -> tfgnn::Result<()> {
         let batches = handle.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
         let reqs = handle.stats.requests.load(std::sync::atomic::Ordering::Relaxed);
         println!(
-            "max_batch={max_batch:<2} wait={max_wait_ms}ms | {reqs} reqs in {wall:.2}s \
+            "max_batch={max_batch:<2} wait={max_wait_ms}ms threads={threads} | {reqs} reqs in {wall:.2}s \
              ({:.1} req/s) | latency p50 {:.1}ms p95 {:.1}ms | avg batch {:.2}",
             reqs as f64 / wall,
             s.p50 * 1e3,

@@ -1,9 +1,11 @@
 //! Micro-bench: API level 2 data-exchange ops (experiment µ in
 //! DESIGN.md) — broadcast/pool/softmax cost vs edge count and feature
 //! width, fused vs unfused message passing at 1..N threads, plus
-//! merge/pad pipeline-stage costs.
+//! merge/pad pipeline-stage costs. Rows land in `BENCH_graph_ops.json`
+//! for the perf-tracking CI lane.
 //!
 //! Run: `cargo bench --bench graph_ops`
+//! (set `TFGNN_BENCH_SMOKE=1` for the short CI mode).
 
 use std::sync::Arc;
 
@@ -15,7 +17,7 @@ use tfgnn::ops::{
     softmax_weighted_pool_fused, ParallelOps, Reduce, Tag,
 };
 use tfgnn::util::rng::Rng;
-use tfgnn::util::stats::{print_row, Bench};
+use tfgnn::util::stats::{smoke, Bench, BenchReport};
 use tfgnn::util::threadpool::ThreadPool;
 
 fn bipartite(n_nodes: usize, n_edges: usize, dim: usize, rng: &mut Rng) -> GraphTensor {
@@ -45,13 +47,17 @@ fn bipartite(n_nodes: usize, n_edges: usize, dim: usize, rng: &mut Rng) -> Graph
 }
 
 fn main() {
-    let bench = Bench::new(3, 15);
+    let bench = Bench::from_env(3, 15);
     let mut rng = Rng::new(42);
+    let mut report = BenchReport::new("graph_ops");
 
     println!("# broadcast / pool / softmax over one edge set");
-    for &(n_nodes, n_edges, dim) in
+    let base_sizes: &[(usize, usize, usize)] = if smoke() {
+        &[(1_000, 10_000, 32)]
+    } else {
         &[(1_000, 10_000, 32), (10_000, 100_000, 32), (10_000, 100_000, 128)]
-    {
+    };
+    for &(n_nodes, n_edges, dim) in base_sizes {
         let g = bipartite(n_nodes, n_edges, dim, &mut rng);
         let h = g.node_set("a").unwrap().feature("h").unwrap().clone();
         let label = format!("n={n_nodes} e={n_edges} d={dim}");
@@ -59,21 +65,27 @@ fn main() {
         let s = bench.throughput(n_edges, || {
             let _ = broadcast_node_to_edges(&g, "e", Tag::Source, &h).unwrap();
         });
-        print_row("broadcast_node_to_edges", &label, &s, "items/s");
+        report.row("broadcast_node_to_edges", &label, 1, &s, "items/s");
 
         let on_edges = broadcast_node_to_edges(&g, "e", Tag::Source, &h).unwrap();
         for reduce in [Reduce::Sum, Reduce::Mean, Reduce::Max] {
             let s = bench.throughput(n_edges, || {
                 let _ = pool_edges_to_node(&g, "e", Tag::Target, reduce, &on_edges).unwrap();
             });
-            print_row(&format!("pool_edges_to_node/{}", reduce.name()), &label, &s, "items/s");
+            report.row(
+                &format!("pool_edges_to_node/{}", reduce.name()),
+                &label,
+                1,
+                &s,
+                "items/s",
+            );
         }
 
         let logits = Feature::f32_vec((0..n_edges).map(|_| rng.range_f32(-4.0, 4.0)).collect());
         let s = bench.throughput(n_edges, || {
             let _ = segment_softmax(&g, "e", Tag::Target, &logits).unwrap();
         });
-        print_row("segment_softmax", &label, &s, "items/s");
+        report.row("segment_softmax", &label, 1, &s, "items/s");
     }
 
     // ------------------------------------------------------------------
@@ -83,10 +95,12 @@ fn main() {
     // 100K nodes, d=32) — the acceptance workload of PR 1.
     // ------------------------------------------------------------------
     println!("\n# fused broadcast→pool message passing (vs unfused, 1..N threads)");
-    for &(n_nodes, n_edges, dim, tag) in &[
-        (10_000usize, 100_000usize, 32usize, "e=100K"),
-        (100_000, 1_000_000, 32, "mag-sized e=1M"),
-    ] {
+    let fused_sizes: &[(usize, usize, usize, &str)] = if smoke() {
+        &[(10_000, 100_000, 32, "e=100K")]
+    } else {
+        &[(10_000, 100_000, 32, "e=100K"), (100_000, 1_000_000, 32, "mag-sized e=1M")]
+    };
+    for &(n_nodes, n_edges, dim, tag) in fused_sizes {
         let g = bipartite(n_nodes, n_edges, dim, &mut rng);
         let h = g.node_set("a").unwrap().feature("h").unwrap().clone();
         let label = format!("{tag} n={n_nodes} d={dim}");
@@ -95,13 +109,13 @@ fn main() {
             let on_edges = broadcast_node_to_edges(&g, "e", Tag::Source, &h).unwrap();
             let _ = pool_edges_to_node(&g, "e", Tag::Target, Reduce::Sum, &on_edges).unwrap();
         });
-        print_row("bp/sum/unfused", &label, &s, "items/s");
+        report.row("bp/sum/unfused", &label, 1, &s, "items/s");
 
         let s = bench.throughput(n_edges, || {
             let _ =
                 broadcast_pool_fused(&g, "e", Tag::Source, Tag::Target, Reduce::Sum, &h).unwrap();
         });
-        print_row("bp/sum/fused-1t", &label, &s, "items/s");
+        report.row("bp/sum/fused", &label, 1, &s, "items/s");
 
         for threads in [2usize, 4, 8] {
             let par = ParallelOps::new(Arc::new(ThreadPool::new(threads)));
@@ -110,7 +124,7 @@ fn main() {
                     .broadcast_pool_fused(&g, "e", Tag::Source, Tag::Target, Reduce::Sum, &h)
                     .unwrap();
             });
-            print_row(&format!("bp/sum/fused-{threads}t"), &label, &s, "items/s");
+            report.row("bp/sum/fused", &label, threads, &s, "items/s");
         }
 
         // Attention: softmax over receiver groups + weighted pool.
@@ -126,14 +140,14 @@ fn main() {
             };
             let _ = pool_edges_to_node(&g, "e", Tag::Target, Reduce::Sum, &weighted).unwrap();
         });
-        print_row("attn/unfused", &label, &s, "items/s");
+        report.row("attn/unfused", &label, 1, &s, "items/s");
 
         let s = bench.throughput(n_edges, || {
             let _ =
                 softmax_weighted_pool_fused(&g, "e", Tag::Source, Tag::Target, &logits, &h)
                     .unwrap();
         });
-        print_row("attn/fused-1t", &label, &s, "items/s");
+        report.row("attn/fused", &label, 1, &s, "items/s");
 
         for threads in [4usize, 8] {
             let par = ParallelOps::new(Arc::new(ThreadPool::new(threads)));
@@ -142,7 +156,7 @@ fn main() {
                     .softmax_weighted_pool_fused(&g, "e", Tag::Source, Tag::Target, &logits, &h)
                     .unwrap();
             });
-            print_row(&format!("attn/fused-{threads}t"), &label, &s, "items/s");
+            report.row("attn/fused", &label, threads, &s, "items/s");
         }
     }
 
@@ -154,13 +168,16 @@ fn main() {
         let s = bench.throughput(batch_size, || {
             let _ = merge(&graphs).unwrap();
         });
-        print_row("merge", &label, &s, "items/s");
+        report.row("merge", &label, 1, &s, "items/s");
 
         let merged = merge(&graphs).unwrap();
         let spec = PadSpec::fit(&graphs.iter().collect::<Vec<_>>(), batch_size, 1.3);
         let s = bench.throughput(batch_size, || {
             let _ = pad(&merged, &spec).unwrap();
         });
-        print_row("pad", &label, &s, "items/s");
+        report.row("pad", &label, 1, &s, "items/s");
     }
+
+    let path = report.write().expect("write bench json");
+    println!("\nwrote {}", path.display());
 }

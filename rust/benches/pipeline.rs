@@ -11,6 +11,7 @@ use tfgnn::graph::batch::merge;
 use tfgnn::graph::pad::fit_or_skip;
 use tfgnn::pipeline::{epoch_stream, DatasetProvider, PipelineConfig, SamplingProvider};
 use tfgnn::runner::MagEnv;
+use tfgnn::sampler::SamplerConfig;
 use tfgnn::runtime::batch::RootTask;
 use tfgnn::runtime::Runtime;
 use tfgnn::synth::mag::Split;
@@ -50,12 +51,13 @@ fn main() {
 
     // ---- end-to-end producer -------------------------------------------------
     println!("\n# pipeline producer throughput (graphs/s), one epoch over {} seeds", seeds.len());
-    for prep_threads in [0usize, 2, 4] {
-        let provider = Arc::new(SamplingProvider {
-            sampler: Arc::clone(&env.sampler),
-            seeds: seeds.clone(),
-            shuffle_seed: 7,
-        });
+    for (prep_threads, sampler_threads) in
+        [(0usize, 1usize), (2, 1), (4, 1), (2, 4), (4, 4)]
+    {
+        let mut provider =
+            SamplingProvider::new(Arc::clone(&env.sampler), seeds.clone(), 7);
+        provider.sampling = SamplerConfig::with_threads(sampler_threads);
+        let provider = Arc::new(provider);
         let mut cfg = PipelineConfig::new(env.batch_size, env.pad.clone());
         cfg.shuffle_buffer = 64;
         cfg.prep_threads = prep_threads;
@@ -73,7 +75,12 @@ fn main() {
             }
             assert!(count > 0);
         });
-        print_row("pipeline/producer", &format!("prep_threads={prep_threads}"), &s, "items/s");
+        print_row(
+            "pipeline/producer",
+            &format!("prep_threads={prep_threads} sampler_threads={sampler_threads}"),
+            &s,
+            "items/s",
+        );
     }
 
     // ---- pipeline + executor overlap -----------------------------------------
@@ -93,11 +100,11 @@ fn main() {
     let step_time = s.mean;
 
     // End-to-end: pipeline feeding the trainer.
-    let provider = Arc::new(SamplingProvider {
-        sampler: Arc::clone(&env.sampler),
-        seeds: seeds[..48 * env.batch_size.min(seeds.len() / env.batch_size)].to_vec(),
-        shuffle_seed: 7,
-    });
+    let provider = Arc::new(SamplingProvider::new(
+        Arc::clone(&env.sampler),
+        seeds[..48 * env.batch_size.min(seeds.len() / env.batch_size)].to_vec(),
+        7,
+    ));
     let mut cfg = PipelineConfig::new(env.batch_size, env.pad.clone());
     cfg.prep_threads = 2;
     let t0 = std::time::Instant::now();

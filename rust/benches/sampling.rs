@@ -1,24 +1,36 @@
-//! Bench: Algorithm 1 distributed sampling (experiment A1 in
-//! DESIGN.md) — subgraph throughput vs worker count, the cost of
-//! resilience (failure injection + retries), and in-memory vs
-//! distributed executor comparison.
+//! Bench: the sampling engine (experiment A1 in DESIGN.md).
+//!
+//! Covers the in-memory CSR sampler (serial vs batch-parallel), the
+//! Algorithm 1 shard-fanout engine vs its single-threaded oracle, a
+//! seeds × fanout × threads grid, the price of resilience (failure
+//! injection + retries), and the leader/worker coordinator. Every
+//! parallel configuration is cross-checked against the serial oracle
+//! (bit-for-bit GraphTensor equality) before it is timed, and every
+//! row lands in `BENCH_sampling.json` for the perf-tracking CI lane.
 //!
 //! Run: `cargo bench --bench sampling`
+//! (set `TFGNN_BENCH_SMOKE=1` for the short CI mode).
 
 use std::sync::Arc;
 
 use tfgnn::coordinator::{run_sampling, CoordinatorConfig};
+use tfgnn::sampler::distributed::{sample_batch, sample_batch_parallel};
 use tfgnn::sampler::inmem::InMemorySampler;
 use tfgnn::sampler::spec::mag_sampling_spec_scaled;
+use tfgnn::sampler::{RetryPolicy, SamplerConfig};
 use tfgnn::store::sharded::ShardedStore;
 use tfgnn::synth::mag::{generate, MagConfig};
-use tfgnn::util::stats::{print_row, Bench};
+use tfgnn::util::stats::{smoke, Bench, BenchReport};
+use tfgnn::util::ThreadPool;
 
 fn main() {
-    // A denser graph than the training config so sampling has real work.
+    // A MAG-sized synth graph, dense enough that sampling has real
+    // work; smoke mode shrinks it so CI finishes in seconds.
+    let (papers, authors, n_seeds) =
+        if smoke() { (2_000, 3_000, 200) } else { (20_000, 30_000, 2_000) };
     let cfg = MagConfig {
-        num_papers: 20_000,
-        num_authors: 30_000,
+        num_papers: papers,
+        num_authors: authors,
         num_institutions: 500,
         num_fields: 200,
         ..MagConfig::default()
@@ -26,55 +38,145 @@ fn main() {
     let ds = generate(&cfg);
     let store = Arc::new(ds.store);
     let spec = mag_sampling_spec_scaled(&store.schema, 0.25).unwrap();
-    let seeds: Vec<u32> = (0..2_000).collect();
-    let bench = Bench::new(1, 5);
+    let seeds: Vec<u32> = (0..n_seeds as u32).collect();
+    let bench = Bench::from_env(1, 5);
+    let mut report = BenchReport::new("sampling");
 
-    println!("# in-memory sampler (§6.1.2), single thread");
+    // ---- in-memory sampler: CSR fast path, serial vs batch-parallel ----
+    println!("# in-memory sampler (§6.1.2): CSR fast path, 1..8 threads");
     let sampler = InMemorySampler::new(Arc::clone(&store), spec.clone(), 42).unwrap();
+    let serial_out = sampler.sample_batch(&seeds, &SamplerConfig::default()).unwrap();
     let s = bench.throughput(seeds.len(), || {
-        for &seed in &seeds {
-            let _ = sampler.sample(seed).unwrap();
-        }
+        let _ = sampler.sample_batch(&seeds, &SamplerConfig::default()).unwrap();
     });
-    print_row("sample/inmem", "2000 seeds", &s, "items/s");
-
-    println!("\n# Algorithm 1 over the sharded store: scaling with workers");
-    for workers in [1usize, 2, 4, 8] {
-        let sharded = Arc::new(ShardedStore::new(Arc::clone(&store), 16));
-        let coord = CoordinatorConfig { num_workers: workers, batch_size: 64, ..Default::default() };
-        let spec2 = spec.clone();
-        let seeds2 = seeds.clone();
-        let s = bench.throughput(seeds.len(), move || {
-            let (_graphs, _report) =
-                run_sampling(Arc::clone(&sharded), &spec2, 42, &seeds2, &coord).unwrap();
+    report.row("sample/inmem", &format!("{n_seeds} seeds"), 1, &s, "items/s");
+    let inmem_1t = s.mean;
+    let mut inmem_8t = inmem_1t;
+    for threads in [2usize, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        let check = sampler.sample_batch_with_pool(&seeds, &pool).unwrap();
+        assert_eq!(check, serial_out, "parallel batch == serial, threads={threads}");
+        let s = bench.throughput(seeds.len(), || {
+            let _ = sampler.sample_batch_with_pool(&seeds, &pool).unwrap();
         });
-        print_row("sample/distributed", &format!("workers={workers}"), &s, "items/s");
+        report.row("sample/inmem", &format!("{n_seeds} seeds"), threads, &s, "items/s");
+        if threads == 8 {
+            inmem_8t = s.mean;
+        }
+    }
+    println!("BENCH sample/inmem speedup 8t vs 1t: {:.2}x", inmem_8t / inmem_1t);
+
+    // ---- Algorithm 1: shard-fanout engine vs serial oracle -------------
+    println!("\n# Algorithm 1 over the sharded store: shard-fanout engine");
+    let sharded = Arc::new(ShardedStore::new(Arc::clone(&store), 16));
+    let (dist_serial, _) =
+        sample_batch(&sharded, &spec, 42, &seeds, &RetryPolicy::default()).unwrap();
+    assert_eq!(dist_serial, serial_out, "Algorithm 1 == in-memory sampler");
+    let s = bench.throughput(seeds.len(), || {
+        let _ = sample_batch(&sharded, &spec, 42, &seeds, &RetryPolicy::default()).unwrap();
+    });
+    report.row("sample/distributed", "shard fanout", 1, &s, "items/s");
+    let dist_1t = s.mean;
+    let mut dist_8t = dist_1t;
+    for threads in [2usize, 4, 8] {
+        let scfg = SamplerConfig::with_threads(threads);
+        let pool = ThreadPool::new(threads);
+        let (got, _) =
+            sample_batch_parallel(&sharded, &spec, 42, &seeds, &scfg, Some(&pool)).unwrap();
+        assert_eq!(got, dist_serial, "shard fanout == serial oracle, threads={threads}");
+        let s = bench.throughput(seeds.len(), || {
+            let _ = sample_batch_parallel(&sharded, &spec, 42, &seeds, &scfg, Some(&pool))
+                .unwrap();
+        });
+        report.row("sample/distributed", "shard fanout", threads, &s, "items/s");
+        if threads == 8 {
+            dist_8t = s.mean;
+        }
+    }
+    println!("BENCH sample/distributed speedup 8t vs 1t: {:.2}x", dist_8t / dist_1t);
+
+    // ---- seeds × fanout × threads grid ---------------------------------
+    println!("\n# seeds × fanout × threads grid (in-memory batch sampler)");
+    let grid_seeds: &[usize] = if smoke() { &[64] } else { &[256, 1_024] };
+    for &f in &[0.1f64, 0.25, 1.0] {
+        let fspec = mag_sampling_spec_scaled(&store.schema, f).unwrap();
+        let fsampler = InMemorySampler::new(Arc::clone(&store), fspec, 42).unwrap();
+        for &n in grid_seeds {
+            let ss: Vec<u32> = (0..n as u32).collect();
+            let want = fsampler.sample_batch(&ss, &SamplerConfig::default()).unwrap();
+            for threads in [1usize, 8] {
+                let label = format!("fanout={f} seeds={n}");
+                if threads == 1 {
+                    let s = bench.throughput(n, || {
+                        let _ =
+                            fsampler.sample_batch(&ss, &SamplerConfig::default()).unwrap();
+                    });
+                    report.row("sample/grid", &label, 1, &s, "items/s");
+                } else {
+                    let pool = ThreadPool::new(threads);
+                    let check = fsampler.sample_batch_with_pool(&ss, &pool).unwrap();
+                    assert_eq!(check, want, "grid {label} threads={threads}");
+                    let s = bench.throughput(n, || {
+                        let _ = fsampler.sample_batch_with_pool(&ss, &pool).unwrap();
+                    });
+                    report.row("sample/grid", &label, threads, &s, "items/s");
+                }
+            }
+        }
     }
 
-    println!("\n# the price of resilience: transient failures + worker crashes");
-    for (fail, crash) in [(0.0, 0.0), (0.05, 0.0), (0.05, 0.05), (0.20, 0.10)] {
-        let sharded = Arc::new(
+    // ---- the price of resilience ---------------------------------------
+    println!("\n# the price of resilience: transient shard failures + retries");
+    for fail in [0.0f64, 0.05, 0.20] {
+        let flaky =
+            Arc::new(ShardedStore::new(Arc::clone(&store), 16).with_failures(fail, 99));
+        let scfg = SamplerConfig {
+            threads: 8,
+            retry: RetryPolicy { max_attempts: 100 },
+            ..SamplerConfig::default()
+        };
+        let pool = ThreadPool::new(8);
+        let (got, _) =
+            sample_batch_parallel(&flaky, &spec, 42, &seeds, &scfg, Some(&pool)).unwrap();
+        assert_eq!(got, dist_serial, "identical output under rpc_fail={fail}");
+        let s = bench.throughput(seeds.len(), || {
+            let _ =
+                sample_batch_parallel(&flaky, &spec, 42, &seeds, &scfg, Some(&pool)).unwrap();
+        });
+        report.row("sample/resilience", &format!("rpc_fail={fail}"), 8, &s, "items/s");
+    }
+
+    // ---- coordinator: leader/worker fleet, incl. crash requeue ---------
+    // RPC-failure and worker-crash rates vary independently so the
+    // crash-requeue cost is not confounded with RPC retry cost.
+    println!("\n# coordinator (leader/worker fleet; last rows exercise crash requeue)");
+    for (workers, fail, crash) in
+        [(1usize, 0.0f64, 0.0f64), (4, 0.0, 0.0), (4, 0.0, 0.05), (4, 0.20, 0.10)]
+    {
+        let sharded2 = Arc::new(
             ShardedStore::new(Arc::clone(&store), 16).with_failures(fail, 99),
         );
         let coord = CoordinatorConfig {
-            num_workers: 4,
+            num_workers: workers,
             batch_size: 64,
             worker_crash_rate: crash,
             crash_seed: 5,
             max_item_attempts: 100,
             ..Default::default()
         };
-        let spec2 = spec.clone();
-        let seeds2 = seeds.clone();
-        let s = bench.throughput(seeds.len(), move || {
-            let (_g, _r) =
-                run_sampling(Arc::clone(&sharded), &spec2, 42, &seeds2, &coord).unwrap();
+        let s = bench.throughput(seeds.len(), || {
+            let (_graphs, _report) =
+                run_sampling(Arc::clone(&sharded2), &spec, 42, &seeds, &coord).unwrap();
         });
-        print_row(
-            "sample/resilience",
+        report.row(
+            "sample/coordinator",
             &format!("rpc_fail={fail} crash={crash}"),
+            workers,
             &s,
             "items/s",
         );
     }
+
+    let path = report.write().expect("write bench json");
+    println!("\nwrote {}", path.display());
 }

@@ -169,6 +169,7 @@ fn train(args: &Args) -> Result<()> {
         None => None,
     };
     cfg.prep_threads = args.get_or("prep-threads", 2)?;
+    cfg.sampler_threads = args.get_or("sampler-threads", 0)?;
     cfg.verbose = true;
     if let Some(p) = args.get("ckpt") {
         cfg.checkpoint = Some(PathBuf::from(p));
@@ -257,6 +258,9 @@ fn serve_bench(args: &Args) -> Result<()> {
         tfgnn::serve::ServeConfig {
             max_batch,
             max_wait: std::time::Duration::from_millis(args.get_or("max-wait-ms", 5u64)?),
+            sampler: tfgnn::sampler::SamplerConfig::with_threads(
+                args.get_or("sampler-threads", 1usize)?,
+            ),
         },
     )?;
     let seeds = env.dataset.papers_in_split(tfgnn::synth::mag::Split::Test);

@@ -20,7 +20,9 @@ use crate::graph::pad::{fit_or_skip, PadSpec, Padded};
 use crate::graph::{batch::merge, io::ShardSet, GraphTensor};
 use crate::ops::{broadcast_pool_fused, Reduce, Tag};
 use crate::sampler::inmem::InMemorySampler;
+use crate::sampler::SamplerConfig;
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
 
 /// A source of example GraphTensors (the Runner's `DatasetProvider`).
@@ -66,10 +68,59 @@ impl DatasetProvider for ShardProvider {
 
 /// Samples subgraphs on demand (§6.1.2: samples "are used on-demand
 /// during training", not persisted). Seeds are reshuffled every epoch.
+///
+/// With `sampling.threads > 1` the sampling stage fans out: the
+/// epoch's iterator owns a thread pool and samples each wave of
+/// `sampling.chunk_size` seeds in parallel across it (the producer
+/// thread as a whole is already decoupled from the consumer by the
+/// bounded prefetch channel). Per-`(plan_seed, seed, op, node)` RNG
+/// keying plus the pool's order-preserving map make the stream
+/// bit-for-bit identical to serial sampling — only faster.
 pub struct SamplingProvider {
     pub sampler: Arc<InMemorySampler>,
     pub seeds: Vec<u32>,
     pub shuffle_seed: u64,
+    /// Sampling-stage execution knobs (threads, wave size).
+    pub sampling: SamplerConfig,
+}
+
+impl SamplingProvider {
+    pub fn new(
+        sampler: Arc<InMemorySampler>,
+        seeds: Vec<u32>,
+        shuffle_seed: u64,
+    ) -> SamplingProvider {
+        SamplingProvider { sampler, seeds, shuffle_seed, sampling: SamplerConfig::default() }
+    }
+}
+
+/// Wave-parallel sampling iterator — the pipeline's sampling stage
+/// when `SamplerConfig::threads > 1`. Each refill blocks on one
+/// `map` over the next `chunk` seeds (within-wave parallelism, not
+/// read-ahead). Owns its pool; dropping the epoch stream drops the
+/// pool and joins the workers.
+struct ParallelSampleIter {
+    sampler: Arc<InMemorySampler>,
+    pool: ThreadPool,
+    seeds: std::vec::IntoIter<u32>,
+    chunk: usize,
+    buf: std::collections::VecDeque<Result<GraphTensor>>,
+}
+
+impl Iterator for ParallelSampleIter {
+    type Item = Result<GraphTensor>;
+
+    fn next(&mut self) -> Option<Result<GraphTensor>> {
+        if self.buf.is_empty() {
+            let wave: Vec<u32> = self.seeds.by_ref().take(self.chunk).collect();
+            if wave.is_empty() {
+                return None;
+            }
+            let sampler = Arc::clone(&self.sampler);
+            self.buf = self.pool.map(wave, move |s| sampler.sample(s)).into();
+        }
+        self.buf.pop_front()
+    }
 }
 
 impl DatasetProvider for SamplingProvider {
@@ -77,6 +128,15 @@ impl DatasetProvider for SamplingProvider {
         let mut seeds = self.seeds.clone();
         let mut rng = Rng::new(self.shuffle_seed ^ epoch.wrapping_mul(0x9E3779B97F4A7C15));
         rng.shuffle(&mut seeds);
+        if self.sampling.parallel() {
+            return Ok(Box::new(ParallelSampleIter {
+                sampler: Arc::clone(&self.sampler),
+                pool: ThreadPool::new(self.sampling.threads),
+                seeds: seeds.into_iter(),
+                chunk: self.sampling.chunk_size.max(1),
+                buf: std::collections::VecDeque::new(),
+            }));
+        }
         let sampler = Arc::clone(&self.sampler);
         Ok(Box::new(seeds.into_iter().map(move |s| sampler.sample(s))))
     }
@@ -407,7 +467,7 @@ mod tests {
         // Derive a pad spec from a sample prefix, like the Runner does.
         let probe: Vec<_> = seeds.iter().take(8).map(|&s| sampler.sample(s).unwrap()).collect();
         let pad = PadSpec::fit(&probe.iter().collect::<Vec<_>>(), 4, 2.0);
-        (Arc::new(SamplingProvider { sampler, seeds, shuffle_seed: 5 }), pad)
+        (Arc::new(SamplingProvider::new(sampler, seeds, 5)), pad)
     }
 
     #[test]
@@ -468,6 +528,33 @@ mod tests {
         assert_eq!(inline.len(), parallel.len());
         for (a, b) in inline.iter().zip(&parallel) {
             assert_eq!(a.graph, b.graph, "prep pool must not reorder or alter batches");
+        }
+    }
+
+    #[test]
+    fn parallel_sampling_stage_matches_serial() {
+        // The sampling stage at threads > 1 must feed the pipeline the
+        // exact same example stream (order and bits) as serial.
+        let (provider, pad) = mag_provider();
+        let cfg = PipelineConfig { shuffle_buffer: 16, ..PipelineConfig::new(4, pad) };
+        let serial: Vec<Padded> =
+            epoch_stream(Arc::clone(&provider) as Arc<dyn DatasetProvider>, cfg.clone(), 0)
+                .unwrap()
+                .iter()
+                .collect();
+        for threads in [2usize, 8] {
+            let par_provider = Arc::new(SamplingProvider {
+                sampler: Arc::clone(&provider.sampler),
+                seeds: provider.seeds.clone(),
+                shuffle_seed: provider.shuffle_seed,
+                sampling: SamplerConfig { threads, chunk_size: 7, ..SamplerConfig::default() },
+            });
+            let parallel: Vec<Padded> =
+                epoch_stream(par_provider, cfg.clone(), 0).unwrap().iter().collect();
+            assert_eq!(serial.len(), parallel.len());
+            for (a, b) in serial.iter().zip(&parallel) {
+                assert_eq!(a.graph, b.graph, "threads={threads}");
+            }
         }
     }
 

@@ -22,6 +22,7 @@ use crate::runtime::manifest::Manifest;
 use crate::runtime::Runtime;
 use crate::sampler::inmem::InMemorySampler;
 use crate::sampler::spec::mag_sampling_spec_sized;
+use crate::sampler::SamplerConfig;
 use crate::store::GraphStore;
 use crate::synth::mag::{generate, MagDataset, Split};
 use crate::train::metrics::EpochMetrics;
@@ -44,6 +45,8 @@ pub struct RunConfig {
     pub shuffle_seed: u64,
     /// Threads for the merge+pad prep stage.
     pub prep_threads: usize,
+    /// Threads for the sampling stage (0/1 = serial).
+    pub sampler_threads: usize,
     /// Where to write the final checkpoint (None = skip).
     pub checkpoint: Option<PathBuf>,
     /// Print per-epoch progress lines.
@@ -61,6 +64,7 @@ impl RunConfig {
             hp: None,
             shuffle_seed: 0x7f4a,
             prep_threads: 0,
+            sampler_threads: 0,
             checkpoint: None,
             verbose: false,
         }
@@ -180,6 +184,7 @@ pub fn run_in_env(cfg: &RunConfig, env: &MagEnv, trainer: &mut Trainer) -> Resul
         sampler: Arc::clone(&env.sampler),
         seeds: train_seeds,
         shuffle_seed: cfg.shuffle_seed,
+        sampling: SamplerConfig::with_threads(cfg.sampler_threads),
     });
     let mut pipe_cfg = PipelineConfig::new(env.batch_size, env.pad.clone());
     pipe_cfg.shuffle_buffer = 4 * env.batch_size;

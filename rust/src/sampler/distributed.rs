@@ -19,14 +19,25 @@
 //! deduplicated, features joined, and GraphTensors assembled — shared
 //! tail code with the in-memory sampler, which the equivalence tests
 //! exploit.
+//!
+//! [`sample_batch_parallel`] is the same algorithm with **shard
+//! fanout**: per stage, the frontier is grouped by owning shard and the
+//! per-shard lookups run concurrently over [`crate::util::ThreadPool`],
+//! then merge back in the serial iteration order. Because neighbor
+//! selection is RNG-keyed per `(plan_seed, seed, op, node)` and the
+//! merge order is fixed, the parallel engine is bit-for-bit equal to
+//! [`sample_batch`] for every thread count — the determinism contract
+//! DESIGN.md's sampling-engine section spells out.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use super::inmem::{edge_rng, select_neighbors};
 use super::spec::SamplingSpec;
-use super::{assemble_subgraph, validate_spec, EdgeAcc};
+use super::{assemble_subgraph, validate_spec, EdgeAcc, SamplerConfig};
 use crate::graph::GraphTensor;
 use crate::store::sharded::ShardedStore;
+use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
 
 /// Retry policy for shard RPCs.
@@ -43,16 +54,47 @@ impl Default for RetryPolicy {
 
 impl RetryPolicy {
     /// Run `f`, retrying transient failures up to the limit.
-    pub fn run<T, F: FnMut() -> Result<T>>(&self, mut f: F) -> Result<T> {
+    pub fn run<T, F: FnMut() -> Result<T>>(&self, f: F) -> Result<T> {
+        self.run_ctx("RPC", f)
+    }
+
+    /// Run `f` with `what` naming the target (e.g. `"shard 3"`).
+    ///
+    /// On exhaustion the error is a structured [`Error::Graph`] that
+    /// carries the target, the attempt count and the last underlying
+    /// error. `max_attempts == 0` is a configuration error, not a
+    /// silent clamp to one attempt: it fails immediately, before `f`
+    /// ever runs, so a misconfigured policy cannot masquerade as a
+    /// single-try one.
+    pub fn run_ctx<T, F: FnMut() -> Result<T>>(&self, what: &str, f: F) -> Result<T> {
+        self.run_lazy(|| what.to_string(), f)
+    }
+
+    /// [`run_ctx`](RetryPolicy::run_ctx) with the context built only
+    /// when an error message is actually needed — hot loops (one call
+    /// per adjacency RPC) must not pay a `format!` per lookup for a
+    /// string that almost never gets used.
+    pub fn run_lazy<T, C, F>(&self, what: C, mut f: F) -> Result<T>
+    where
+        C: Fn() -> String,
+        F: FnMut() -> Result<T>,
+    {
+        if self.max_attempts == 0 {
+            return Err(Error::Graph(format!(
+                "{}: RetryPolicy {{ max_attempts: 0 }} permits no attempts",
+                what()
+            )));
+        }
         let mut last = None;
-        for _ in 0..self.max_attempts.max(1) {
+        for _ in 0..self.max_attempts {
             match f() {
                 Ok(v) => return Ok(v),
                 Err(e) => last = Some(e),
             }
         }
-        Err(Error::Sampler(format!(
-            "RPC failed after {} attempts: {}",
+        Err(Error::Graph(format!(
+            "{} failed after {} attempts: last error: {}",
+            what(),
             self.max_attempts,
             last.unwrap()
         )))
@@ -67,6 +109,34 @@ pub struct SampleStats {
     pub adjacency_rpcs: usize,
     pub retried_rpcs: usize,
     pub subgraphs: usize,
+}
+
+/// Per-op frontier construction shared by the serial oracle and the
+/// parallel engine: per sample, the deduped union of the op's input
+/// outputs in first-occurrence order. The bit-for-bit contract between
+/// the two executors depends on both using exactly this ordering, so
+/// it lives in one place.
+fn build_frontiers(
+    op: &super::spec::SamplingOp,
+    produced: &BTreeMap<&str, Vec<Vec<u32>>>,
+    num_samples: usize,
+    stats: &mut SampleStats,
+) -> Vec<Vec<u32>> {
+    let mut frontier: Vec<Vec<u32>> = vec![Vec::new(); num_samples];
+    for (k, f) in frontier.iter_mut().enumerate() {
+        let mut seen = std::collections::HashSet::new();
+        for input in &op.input_ops {
+            if let Some(per_sample) = produced.get(input.as_str()) {
+                for &n in &per_sample[k] {
+                    if seen.insert(n) {
+                        f.push(n);
+                    }
+                }
+            }
+        }
+        stats.frontier_entries += f.len();
+    }
+    frontier
 }
 
 /// Execute the plan for a batch of seeds over the sharded store.
@@ -91,24 +161,10 @@ pub fn sample_batch(
     let mut edges: Vec<EdgeAcc> = seeds.iter().map(|_| EdgeAcc::new()).collect();
 
     for (op_idx, op) in spec.ops.iter().enumerate() {
-        // Build the frontier for this op: per sample, the deduped union
-        // of input-op outputs (first-occurrence order → deterministic).
-        let mut frontier: Vec<Vec<u32>> = vec![Vec::new(); seeds.len()];
-        for (k, f) in frontier.iter_mut().enumerate() {
-            let mut seen = std::collections::HashSet::new();
-            for input in &op.input_ops {
-                if let Some(per_sample) = produced.get(input.as_str()) {
-                    for &n in &per_sample[k] {
-                        if seen.insert(n) {
-                            f.push(n);
-                        }
-                    }
-                }
-            }
-            stats.frontier_entries += f.len();
-        }
+        let frontier = build_frontiers(op, &produced, seeds.len(), &mut stats);
 
         // Distributed Sample(): join frontier with the edge set.
+        let src_set = schema.edge_set(&op.edge_set)?.source.clone();
         let mut out: Vec<Vec<u32>> = vec![Vec::new(); seeds.len()];
         for (k, nodes) in frontier.iter().enumerate() {
             let mut out_seen = std::collections::HashSet::new();
@@ -116,10 +172,13 @@ pub fn sample_batch(
             for &node in nodes {
                 stats.adjacency_rpcs += 1;
                 let mut attempts = 0usize;
-                let nbrs = retry.run(|| {
-                    attempts += 1;
-                    store.neighbors(&op.edge_set, node).map(|n| n.to_vec())
-                })?;
+                let nbrs = retry.run_lazy(
+                    || format!("shard {}", store.shard_of(&src_set, node)),
+                    || {
+                        attempts += 1;
+                        store.neighbors(&op.edge_set, node).map(|n| n.to_vec())
+                    },
+                )?;
                 stats.retried_rpcs += attempts - 1;
                 let mut rng = edge_rng(plan_seed, seeds[k], op_idx, node);
                 for t in select_neighbors(&nbrs, op.sample_size, op.strategy, &mut rng) {
@@ -138,9 +197,153 @@ pub fn sample_batch(
     let mut graphs = Vec::with_capacity(seeds.len());
     for (k, &seed) in seeds.iter().enumerate() {
         let g = assemble_subgraph(schema, &spec.seed_node_set, seed, &edges[k], |set, ids| {
-            retry.run(|| store.lookup_features(set, ids))
+            retry.run_ctx("feature lookup", || store.lookup_features(set, ids))
         })?;
         graphs.push(g);
+    }
+    stats.subgraphs = graphs.len();
+    Ok((graphs, stats))
+}
+
+/// One frontier entry during a fanout stage: the entry's position in
+/// serial iteration order, the frontier node and its sample's seed.
+type ShardItem = (usize, u32, u32);
+
+/// Shard-fanout parallel execution of Algorithm 1 — the parallel
+/// sampling engine.
+///
+/// Each sampling stage flattens the whole batch's frontier to
+/// `(sample, node)` entries in the serial iteration order, groups them
+/// by owning shard, and issues the per-shard adjacency lookups
+/// **concurrently** on the thread pool (one task per shard, each
+/// lookup under [`RetryPolicy::run_ctx`] tagged with its shard).
+/// Neighbor selection draws from the RNG keyed by
+/// `(plan_seed, seed, op, node)` — never from scheduling — and the
+/// merge replays the entries in their original order, so the output is
+/// **bit-for-bit equal** to [`sample_batch`] at every thread count,
+/// including under injected shard failures. The per-seed assembly tail
+/// (node dedup, feature join, GraphTensor creation) fans out over the
+/// same pool, with `map`'s order preservation keeping seed order.
+///
+/// `cfg.threads <= 1` delegates to the single-threaded oracle. Pass an
+/// existing `pool` to amortize worker spawn across calls (the serving
+/// batcher does); otherwise a transient pool of `cfg.threads` workers
+/// is created for this batch.
+pub fn sample_batch_parallel(
+    store: &Arc<ShardedStore>,
+    spec: &SamplingSpec,
+    plan_seed: u64,
+    seeds: &[u32],
+    cfg: &SamplerConfig,
+    pool: Option<&ThreadPool>,
+) -> Result<(Vec<GraphTensor>, SampleStats)> {
+    if cfg.threads <= 1 {
+        return sample_batch(store, spec, plan_seed, seeds, &cfg.retry);
+    }
+    let owned_pool;
+    let pool = match pool {
+        Some(p) => p,
+        None => {
+            owned_pool = ThreadPool::new(cfg.threads);
+            &owned_pool
+        }
+    };
+    let schema = &store.store().schema;
+    validate_spec(schema, spec)?;
+    let mut stats = SampleStats { seeds: seeds.len(), ..Default::default() };
+
+    let mut produced: BTreeMap<&str, Vec<Vec<u32>>> = BTreeMap::new();
+    produced.insert(spec.seed_op.as_str(), seeds.iter().map(|&s| vec![s]).collect());
+    let mut edges: Vec<EdgeAcc> = seeds.iter().map(|_| EdgeAcc::new()).collect();
+
+    for (op_idx, op) in spec.ops.iter().enumerate() {
+        let frontier = build_frontiers(op, &produced, seeds.len(), &mut stats);
+
+        // Flatten to entries in serial order, then group by shard.
+        let src_set = schema.edge_set(&op.edge_set)?.source.clone();
+        let mut entries: Vec<(usize, u32)> = Vec::new();
+        for (k, nodes) in frontier.iter().enumerate() {
+            for &node in nodes {
+                entries.push((k, node));
+            }
+        }
+        stats.adjacency_rpcs += entries.len();
+        let mut by_shard: Vec<Vec<ShardItem>> = vec![Vec::new(); store.num_shards];
+        for (idx, &(k, node)) in entries.iter().enumerate() {
+            by_shard[store.shard_of(&src_set, node)].push((idx, node, seeds[k]));
+        }
+        let tasks: Vec<(usize, Vec<ShardItem>)> = by_shard
+            .into_iter()
+            .enumerate()
+            .filter(|(_, items)| !items.is_empty())
+            .collect();
+
+        // Fan out: one task per shard with pending lookups.
+        let store_c = Arc::clone(store);
+        let edge_set = op.edge_set.clone();
+        let sample_size = op.sample_size;
+        let strategy = op.strategy;
+        let retry = cfg.retry.clone();
+        let results = pool.map(tasks, move |(shard, items): (usize, Vec<ShardItem>)| {
+            let ctx = format!("shard {shard}");
+            let mut rows = Vec::with_capacity(items.len());
+            let mut retried = 0usize;
+            for (idx, node, seed_node) in items {
+                let mut attempts = 0usize;
+                let nbrs = retry.run_ctx(&ctx, || {
+                    attempts += 1;
+                    store_c.neighbors(&edge_set, node).map(|n| n.to_vec())
+                })?;
+                retried += attempts - 1;
+                let mut rng = edge_rng(plan_seed, seed_node, op_idx, node);
+                rows.push((idx, select_neighbors(&nbrs, sample_size, strategy, &mut rng)));
+            }
+            Ok::<_, Error>((rows, retried))
+        });
+
+        // Deterministic merge: scatter per-entry selections (errors
+        // surface in shard order, not completion order), then replay
+        // the serial iteration order.
+        let mut selected: Vec<Vec<u32>> = vec![Vec::new(); entries.len()];
+        for r in results {
+            let (rows, retried) = r?;
+            stats.retried_rpcs += retried;
+            for (idx, sel) in rows {
+                selected[idx] = sel;
+            }
+        }
+        let mut out: Vec<Vec<u32>> = vec![Vec::new(); seeds.len()];
+        let mut out_seen: Vec<std::collections::HashSet<u32>> =
+            vec![std::collections::HashSet::new(); seeds.len()];
+        for acc in edges.iter_mut() {
+            acc.entry(op.edge_set.clone()).or_default();
+        }
+        for (idx, &(k, node)) in entries.iter().enumerate() {
+            let acc = edges[k].get_mut(&op.edge_set).unwrap();
+            for &t in &selected[idx] {
+                acc.push((node, t));
+                if out_seen[k].insert(t) {
+                    out[k].push(t);
+                }
+            }
+        }
+        produced.insert(op.op_name.as_str(), out);
+    }
+
+    // Assembly tail: dedup + feature join + tensor creation, one task
+    // per seed; `map` preserves seed order.
+    let items: Vec<(u32, EdgeAcc)> = seeds.iter().copied().zip(edges).collect();
+    let store_c = Arc::clone(store);
+    let seed_set = spec.seed_node_set.clone();
+    let retry = cfg.retry.clone();
+    let assembled = pool.map(items, move |(seed, acc): (u32, EdgeAcc)| {
+        assemble_subgraph(&store_c.store().schema, &seed_set, seed, &acc, |set, ids| {
+            retry.run_ctx("feature lookup", || store_c.lookup_features(set, ids))
+        })
+    });
+    let mut graphs = Vec::with_capacity(seeds.len());
+    for g in assembled {
+        graphs.push(g?);
     }
     stats.subgraphs = graphs.len();
     Ok((graphs, stats))
@@ -225,5 +428,117 @@ mod tests {
             sample_batch(&sharded, &spec, 1, &[], &RetryPolicy::default()).unwrap();
         assert!(graphs.is_empty());
         assert_eq!(stats.subgraphs, 0);
+    }
+
+    #[test]
+    fn zero_max_attempts_is_an_error_not_a_clamp() {
+        // Regression: max_attempts = 0 used to silently clamp to one
+        // attempt; now it is a structured configuration error.
+        let policy = RetryPolicy { max_attempts: 0 };
+        let mut ran = false;
+        let err = policy.run_ctx("shard 5", || {
+            ran = true;
+            Ok::<(), Error>(())
+        });
+        assert!(!ran, "f must never run under max_attempts = 0");
+        let msg = err.err().unwrap().to_string();
+        assert!(msg.contains("graph error"), "{msg}");
+        assert!(msg.contains("shard 5"), "{msg}");
+        assert!(msg.contains("max_attempts: 0"), "{msg}");
+    }
+
+    #[test]
+    fn exhaustion_error_names_shard_and_attempts() {
+        let policy = RetryPolicy { max_attempts: 4 };
+        let err = policy
+            .run_ctx("shard 2", || Err::<(), _>(Error::Sampler("transient".into())))
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("graph error"), "{err}");
+        assert!(err.contains("shard 2"), "{err}");
+        assert!(err.contains("after 4 attempts"), "{err}");
+        assert!(err.contains("transient"), "{err}");
+    }
+
+    #[test]
+    fn parallel_engine_matches_serial_oracle() {
+        let (store, spec) = setup();
+        let sharded = Arc::new(ShardedStore::new(store, 8));
+        let seeds: Vec<u32> = (0..40).collect();
+        let (want, wstats) =
+            sample_batch(&sharded, &spec, 42, &seeds, &RetryPolicy::default()).unwrap();
+        for threads in [2usize, 4, 8] {
+            let cfg = SamplerConfig::with_threads(threads);
+            let (got, stats) =
+                sample_batch_parallel(&sharded, &spec, 42, &seeds, &cfg, None).unwrap();
+            assert_eq!(got, want, "threads={threads}: bit-for-bit equal to serial");
+            assert_eq!(stats.subgraphs, 40);
+            assert_eq!(stats.seeds, wstats.seeds);
+            assert_eq!(stats.frontier_entries, wstats.frontier_entries);
+            assert_eq!(stats.adjacency_rpcs, wstats.adjacency_rpcs);
+        }
+    }
+
+    #[test]
+    fn parallel_engine_single_thread_delegates_to_serial() {
+        let (store, spec) = setup();
+        let sharded = Arc::new(ShardedStore::new(store, 4));
+        let seeds: Vec<u32> = (0..12).collect();
+        let cfg = SamplerConfig::with_threads(1);
+        let (got, _) = sample_batch_parallel(&sharded, &spec, 9, &seeds, &cfg, None).unwrap();
+        let (want, _) =
+            sample_batch(&sharded, &spec, 9, &seeds, &RetryPolicy::default()).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_engine_resilient_to_transient_failures() {
+        let (store, spec) = setup();
+        let reliable = Arc::new(ShardedStore::new(store.clone(), 8));
+        let flaky = Arc::new(ShardedStore::new(store, 8).with_failures(0.3, 77));
+        let seeds: Vec<u32> = (0..25).collect();
+        let (want, _) =
+            sample_batch(&reliable, &spec, 3, &seeds, &RetryPolicy::default()).unwrap();
+        let cfg = SamplerConfig {
+            threads: 8,
+            retry: RetryPolicy { max_attempts: 64 },
+            ..SamplerConfig::default()
+        };
+        let (got, stats) = sample_batch_parallel(&flaky, &spec, 3, &seeds, &cfg, None).unwrap();
+        assert_eq!(got, want, "identical output despite 30% transient shard failures");
+        assert!(stats.retried_rpcs > 0, "failures actually happened and were retried");
+    }
+
+    #[test]
+    fn parallel_engine_reuses_caller_pool() {
+        let (store, spec) = setup();
+        let sharded = Arc::new(ShardedStore::new(store, 4));
+        let pool = ThreadPool::new(4);
+        let seeds: Vec<u32> = (0..10).collect();
+        let cfg = SamplerConfig::with_threads(4);
+        let (a, _) =
+            sample_batch_parallel(&sharded, &spec, 5, &seeds, &cfg, Some(&pool)).unwrap();
+        let (b, _) =
+            sample_batch_parallel(&sharded, &spec, 5, &seeds, &cfg, Some(&pool)).unwrap();
+        assert_eq!(a, b, "same pool, same results — and the pool survives");
+        let out = pool.map(vec![1usize, 2], |x| x + 1);
+        assert_eq!(out, vec![2, 3]);
+    }
+
+    #[test]
+    fn parallel_engine_fails_cleanly_when_retries_exhausted() {
+        let (store, spec) = setup();
+        let dead = Arc::new(ShardedStore::new(store, 2).with_failures(1.0, 5));
+        let cfg = SamplerConfig {
+            threads: 4,
+            retry: RetryPolicy { max_attempts: 3 },
+            ..SamplerConfig::default()
+        };
+        let err = sample_batch_parallel(&dead, &spec, 7, &[0, 1], &cfg, None);
+        assert!(err.is_err());
+        let msg = err.err().unwrap().to_string();
+        assert!(msg.contains("after 3 attempts"), "{msg}");
+        assert!(msg.contains("shard"), "{msg}");
     }
 }

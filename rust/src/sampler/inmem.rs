@@ -11,15 +11,29 @@
 //! the distributed sampler and any worker interleaving all produce
 //! bit-identical subgraphs for the same plan seed — asserted by the
 //! cross-implementation equivalence tests in `distributed.rs`.
+//!
+//! **CSR fast path**: construction compiles the plan — each op's edge
+//! set is materialized once as a shared [`crate::graph::csr::Csr`]
+//! view, so the per-seed hot loop reads neighbor slices straight out
+//! of CSR rows instead of re-resolving columns through per-lookup hash
+//! joins (and without allocating a `Vec` per lookup, as the generic
+//! [`expand_one`] closure interface must). [`expand_one`] remains the
+//! oracle the fast path is tested against. Cloning the sampler is
+//! cheap (heavy state is `Arc`-shared), which is what lets
+//! [`InMemorySampler::sample_batch_with_pool`] fan a batch of seeds
+//! out across a [`ThreadPool`] — order-preserving and bit-for-bit
+//! equal to serial sampling.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use super::spec::{SamplingSpec, Strategy};
-use super::{assemble_subgraph, validate_spec, EdgeAcc};
+use super::{assemble_subgraph, validate_spec, EdgeAcc, SamplerConfig};
+use crate::graph::csr::Csr;
 use crate::graph::GraphTensor;
 use crate::store::GraphStore;
 use crate::util::rng::{mix64, Rng};
+use crate::util::threadpool::ThreadPool;
 use crate::Result;
 
 /// Derive the per-(seed, op, node) sampling RNG. Shared with the
@@ -97,16 +111,42 @@ where
 }
 
 /// The §6.1.2 sampler.
+#[derive(Clone)]
 pub struct InMemorySampler {
     store: Arc<GraphStore>,
-    spec: SamplingSpec,
+    spec: Arc<SamplingSpec>,
     plan_seed: u64,
+    /// Per-op CSR view of the op's edge set (index-aligned with
+    /// `spec.ops`; ops over the same edge set share one view).
+    csr: Vec<Arc<Csr>>,
 }
 
 impl InMemorySampler {
     pub fn new(store: Arc<GraphStore>, spec: SamplingSpec, plan_seed: u64) -> Result<InMemorySampler> {
         validate_spec(&store.schema, &spec)?;
-        Ok(InMemorySampler { store, spec, plan_seed })
+        // Compile the plan: one validated CSR view per distinct edge
+        // set, shared by every op that expands through it.
+        let mut by_edge_set: BTreeMap<String, Arc<Csr>> = BTreeMap::new();
+        let mut csr = Vec::with_capacity(spec.ops.len());
+        for op in &spec.ops {
+            if let Some(view) = by_edge_set.get(&op.edge_set) {
+                csr.push(Arc::clone(view));
+                continue;
+            }
+            let ec = store.edge_column(&op.edge_set)?;
+            let n_src = ec.offsets.len() - 1;
+            let n_tgt = store.node_count(&ec.target_set)?;
+            let mut keyed = Vec::with_capacity(ec.num_edges());
+            for s in 0..n_src {
+                for _ in ec.offsets[s]..ec.offsets[s + 1] {
+                    keyed.push(s as u32);
+                }
+            }
+            let view = Arc::new(Csr::build(&op.edge_set, &keyed, &ec.targets, n_src, n_tgt)?);
+            by_edge_set.insert(op.edge_set.clone(), Arc::clone(&view));
+            csr.push(view);
+        }
+        Ok(InMemorySampler { store, spec: Arc::new(spec), plan_seed, csr })
     }
 
     pub fn spec(&self) -> &SamplingSpec {
@@ -115,12 +155,50 @@ impl InMemorySampler {
 
     /// Sample the rooted subgraph for one seed node.
     pub fn sample(&self, seed: u32) -> Result<GraphTensor> {
-        let edges = expand_one(&self.spec, self.plan_seed, seed, |_, edge_set, node| {
-            Ok(self.store.edge_column(edge_set)?.neighbors(node).to_vec())
-        })?;
+        let edges = self.expand_fast(seed);
         assemble_subgraph(&self.store.schema, &self.spec.seed_node_set, seed, &edges, |set, ids| {
             Ok(self.store.node_column(set)?.gather(ids))
         })
+    }
+
+    /// CSR fast path of [`expand_one`]: identical iteration order, RNG
+    /// keying and selection — only the neighbor lookups differ (direct
+    /// CSR row slices instead of per-lookup column resolution plus a
+    /// `Vec` allocation). `fast_path_matches_generic_oracle` pins the
+    /// bit-for-bit equivalence.
+    fn expand_fast(&self, seed: u32) -> EdgeAcc {
+        let mut produced: BTreeMap<&str, Vec<u32>> = BTreeMap::new();
+        produced.insert(self.spec.seed_op.as_str(), vec![seed]);
+        let mut edges = EdgeAcc::new();
+        for (op_idx, op) in self.spec.ops.iter().enumerate() {
+            let view = &self.csr[op_idx];
+            let mut inputs = Vec::new();
+            let mut seen = std::collections::HashSet::new();
+            for input in &op.input_ops {
+                if let Some(nodes) = produced.get(input.as_str()) {
+                    for &n in nodes {
+                        if seen.insert(n) {
+                            inputs.push(n);
+                        }
+                    }
+                }
+            }
+            let mut out_nodes = Vec::new();
+            let mut out_seen = std::collections::HashSet::new();
+            let acc = edges.entry(op.edge_set.clone()).or_default();
+            for &node in &inputs {
+                let nbrs = view.row_neighbors(node as usize);
+                let mut rng = edge_rng(self.plan_seed, seed, op_idx, node);
+                for t in select_neighbors(nbrs, op.sample_size, op.strategy, &mut rng) {
+                    acc.push((node, t));
+                    if out_seen.insert(t) {
+                        out_nodes.push(t);
+                    }
+                }
+            }
+            produced.insert(op.op_name.as_str(), out_nodes);
+        }
+        edges
     }
 
     /// Sample many seeds (an iterator adapter for the pipeline).
@@ -129,6 +207,33 @@ impl InMemorySampler {
         seeds: &'a [u32],
     ) -> impl Iterator<Item = Result<GraphTensor>> + 'a {
         seeds.iter().map(move |&s| self.sample(s))
+    }
+
+    /// Sample a batch of seeds fanned out over `pool`. Seeds are
+    /// independent and selection is RNG-keyed, so the result is
+    /// bit-for-bit identical to sampling serially, in seed order.
+    pub fn sample_batch_with_pool(
+        &self,
+        seeds: &[u32],
+        pool: &ThreadPool,
+    ) -> Result<Vec<GraphTensor>> {
+        let this = self.clone();
+        let results = pool.map(seeds.to_vec(), move |s| this.sample(s));
+        let mut out = Vec::with_capacity(results.len());
+        for g in results {
+            out.push(g?);
+        }
+        Ok(out)
+    }
+
+    /// Sample a batch under `cfg`: serial when `cfg.threads <= 1`,
+    /// else on a transient pool of `cfg.threads` workers.
+    pub fn sample_batch(&self, seeds: &[u32], cfg: &SamplerConfig) -> Result<Vec<GraphTensor>> {
+        if !cfg.parallel() {
+            return seeds.iter().map(|&s| self.sample(s)).collect();
+        }
+        let pool = ThreadPool::new(cfg.threads);
+        self.sample_batch_with_pool(seeds, &pool)
     }
 }
 
@@ -217,6 +322,46 @@ mod tests {
                 es.adjacency.target.iter().map(|&t| pid[t as usize]).collect();
             assert_eq!(got, want);
         }
+    }
+
+    #[test]
+    fn fast_path_matches_generic_oracle() {
+        // The CSR fast path must be bit-for-bit the generic closure
+        // path ([`expand_one`] + store lookups), seed by seed.
+        let (store, spec) = setup();
+        let s = InMemorySampler::new(store.clone(), spec.clone(), 42).unwrap();
+        for seed in 0..40u32 {
+            let edges = expand_one(&spec, 42, seed, |_, edge_set, node| {
+                Ok(store.edge_column(edge_set)?.neighbors(node).to_vec())
+            })
+            .unwrap();
+            let want = assemble_subgraph(
+                &store.schema,
+                &spec.seed_node_set,
+                seed,
+                &edges,
+                |set, ids| Ok(store.node_column(set)?.gather(ids)),
+            )
+            .unwrap();
+            assert_eq!(s.sample(seed).unwrap(), want, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn batch_parallel_matches_serial() {
+        let (store, spec) = setup();
+        let s = InMemorySampler::new(store, spec, 11).unwrap();
+        let seeds: Vec<u32> = (0..50).collect();
+        let serial = s.sample_batch(&seeds, &SamplerConfig::default()).unwrap();
+        assert_eq!(serial.len(), 50);
+        for threads in [2usize, 8] {
+            let par = s.sample_batch(&seeds, &SamplerConfig::with_threads(threads)).unwrap();
+            assert_eq!(par, serial, "threads={threads}: order and bits preserved");
+        }
+        // Caller-owned pool variant.
+        let pool = ThreadPool::new(4);
+        let pooled = s.sample_batch_with_pool(&seeds, &pool).unwrap();
+        assert_eq!(pooled, serial);
     }
 
     #[test]

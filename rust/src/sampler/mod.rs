@@ -24,6 +24,45 @@ use std::collections::BTreeMap;
 use crate::graph::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};
 use crate::{Error, Result};
 
+pub use distributed::RetryPolicy;
+
+/// Execution knobs for the sampling engine, threaded through the
+/// pipeline's sampling stage and the serving batcher.
+///
+/// `threads == 0` or `1` means single-threaded execution — the oracle
+/// path every parallel mode is bit-for-bit equivalent to (neighbor
+/// selection draws from an RNG keyed by `(plan_seed, seed, op, node)`,
+/// so scheduling never influences results; see `inmem::edge_rng`).
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    /// Worker threads for batch sampling (shard fanout + per-seed
+    /// subgraph assembly). 0/1 = serial.
+    pub threads: usize,
+    /// Seeds per parallel wave when sampling is streamed (the pipeline
+    /// provider samples ahead in waves of this size).
+    pub chunk_size: usize,
+    /// Per-RPC retry policy against the sharded store.
+    pub retry: RetryPolicy,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> SamplerConfig {
+        SamplerConfig { threads: 1, chunk_size: 64, retry: RetryPolicy::default() }
+    }
+}
+
+impl SamplerConfig {
+    /// Convenience: a config with `threads` workers, defaults elsewhere.
+    pub fn with_threads(threads: usize) -> SamplerConfig {
+        SamplerConfig { threads, ..SamplerConfig::default() }
+    }
+
+    /// Whether this config asks for parallel execution.
+    pub fn parallel(&self) -> bool {
+        self.threads > 1
+    }
+}
+
 /// Edges collected for one sample during plan execution, keyed by edge
 /// set: (source original id, target original id).
 pub type EdgeAcc = BTreeMap<String, Vec<(u32, u32)>>;

@@ -8,9 +8,10 @@
 //!
 //! * clients submit root node ids ([`ServerHandle::submit`]);
 //! * the batcher thread collects up to `max_batch` requests or until
-//!   `max_wait` elapses, samples each root's subgraph with the
-//!   in-memory sampler, merges + pads to the static shape, and runs
-//!   one `forward` execution;
+//!   `max_wait` elapses, samples the whole wave of roots — **in
+//!   parallel** over the server's sampling pool when
+//!   [`ServeConfig::sampler`] asks for threads — merges + pads to the
+//!   static shape, and runs one `forward` execution;
 //! * each request gets back its logits row, predicted class, and
 //!   timing (queue + batch + execute breakdown for the benches).
 
@@ -24,6 +25,8 @@ use crate::runtime::batch::{build_batch, is_batch_slot, RootTask};
 use crate::runtime::manifest::ModelEntry;
 use crate::runtime::{host_to_literal, literal_to_host, HostTensor, Program, Runtime};
 use crate::sampler::inmem::InMemorySampler;
+use crate::sampler::SamplerConfig;
+use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
 
 /// A completed prediction.
@@ -51,6 +54,21 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Max time the batcher waits to fill a batch.
     pub max_wait: Duration,
+    /// Sampling-stage knobs: with `threads > 1` the batcher samples a
+    /// whole wave of roots concurrently on a pool it owns (spawned once
+    /// at startup), before padding. Results are bit-for-bit those of
+    /// serial sampling.
+    pub sampler: SamplerConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            sampler: SamplerConfig::default(),
+        }
+    }
 }
 
 /// Aggregate server counters.
@@ -125,6 +143,7 @@ pub fn serve(
     let stats_w = Arc::clone(&stats);
     let max_batch = cfg.max_batch;
     let max_wait = cfg.max_wait;
+    let sampler_cfg = cfg.sampler.clone();
     let worker = std::thread::Builder::new()
         .name("tfgnn-serve".into())
         .spawn(move || {
@@ -160,7 +179,7 @@ pub fn serve(
                     let _ = ready_tx.send(Ok(()));
                     serve_loop(
                         rx, rt, forward, param_bufs, sampler, pad, task, max_batch, max_wait,
-                        stats_w,
+                        sampler_cfg, stats_w,
                     );
                 }
                 Err(e) => {
@@ -186,8 +205,15 @@ fn serve_loop(
     task: RootTask,
     max_batch: usize,
     max_wait: Duration,
+    sampler_cfg: SamplerConfig,
     stats: Arc<ServeStats>,
 ) {
+    // The sampling pool outlives every wave: spawn once at startup.
+    let pool = if sampler_cfg.parallel() {
+        Some(ThreadPool::new(sampler_cfg.threads))
+    } else {
+        None
+    };
     loop {
         // Block for the first request of a batch.
         let first = match rx.recv() {
@@ -210,7 +236,8 @@ fn serve_loop(
         stats.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
         stats.batches.fetch_add(1, Ordering::Relaxed);
         let batch_size = wave.len();
-        let result = execute_wave(&rt, &forward, &param_bufs, &sampler, &pad, &task, &wave);
+        let result =
+            execute_wave(&rt, &forward, &param_bufs, &sampler, pool.as_ref(), &pad, &task, &wave);
         match result {
             Ok(logits) => {
                 let classes = logits.1;
@@ -244,19 +271,28 @@ fn serve_loop(
 }
 
 /// Sample, merge, pad, execute one wave; returns (flat logits, classes).
+#[allow(clippy::too_many_arguments)]
 fn execute_wave(
     rt: &Runtime,
     forward: &Program,
     param_bufs: &[xla::Literal],
     sampler: &InMemorySampler,
+    pool: Option<&ThreadPool>,
     pad: &PadSpec,
     task: &RootTask,
     wave: &[Request],
 ) -> Result<(Vec<f32>, usize)> {
-    let graphs = wave
-        .iter()
-        .map(|r| sampler.sample(r.seed))
-        .collect::<Result<Vec<_>>>()?;
+    // The whole wave of roots samples as one batch — fanned out over
+    // the sampling pool when configured, serially otherwise; either
+    // way the subgraphs are identical, in request order.
+    let seeds: Vec<u32> = wave.iter().map(|r| r.seed).collect();
+    let graphs = match pool {
+        Some(p) => sampler.sample_batch_with_pool(&seeds, p)?,
+        None => seeds
+            .iter()
+            .map(|&s| sampler.sample(s))
+            .collect::<Result<Vec<_>>>()?,
+    };
     let merged = crate::graph::batch::merge(&graphs)?;
     let padded = fit_or_skip(&merged, pad)
         .ok_or_else(|| Error::Runtime("request wave exceeds pad caps".into()))?;

@@ -1,7 +1,7 @@
 //! Sharded, RPC-shaped view of a [`GraphStore`] with failure injection.
 //!
 //! The distributed sampler's workers (§6.1.1, Algorithm 1) never touch
-//! the `GraphStore` directly; they issue [`ShardedStore::sample_neighbors`]
+//! the `GraphStore` directly; they issue [`ShardedStore::neighbors`]
 //! and [`ShardedStore::lookup_features`] requests, which are routed to
 //! the shard owning each node (hash partitioning, like the paper's
 //! storage substrate). Each shard tracks request counters, and an
@@ -9,6 +9,16 @@
 //! transiently — exercising the retry path that backs the paper's
 //! resilience claim versus Graph-Learn (§7: "TF-GNN samples a large
 //! graph into subgraphs using a resilient distributed system").
+//!
+//! The façade is fully thread-safe (counters and the failure stream
+//! are atomics), which is what lets the shard-fanout engine
+//! ([`crate::sampler::distributed::sample_batch_parallel`]) group a
+//! whole frontier by [`ShardedStore::shard_of`] and issue every
+//! shard's lookups concurrently. Failure injection decides only
+//! *whether* a request fails, never what it returns, so the failure
+//! draw order being scheduling-dependent under concurrency cannot
+//! leak into sampled results — retries always converge to the
+//! failure-free answer.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;

@@ -14,3 +14,5 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+
+pub use threadpool::ThreadPool;

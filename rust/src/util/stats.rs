@@ -4,8 +4,17 @@
 //! not available offline), so [`Bench`] provides the warmup → repeat →
 //! summarize loop and prints rows that the bench binaries format into the
 //! paper's tables.
+//!
+//! The perf-tracking CI lane drives two knobs here: [`smoke`] /
+//! [`Bench::from_env`] cap iteration counts (`TFGNN_BENCH_SMOKE=1`) so
+//! the bench binaries finish in seconds, and [`BenchReport`] records
+//! every row machine-readably (`name`, `threads`, `ns_per_op`, …) and
+//! writes `BENCH_<bench>.json` for upload as a per-PR artifact.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use super::json::{obj, Json};
 
 /// Summary of a sample of f64 observations.
 #[derive(Debug, Clone, PartialEq)]
@@ -94,6 +103,16 @@ impl Bench {
         Bench { warmup, iters }
     }
 
+    /// `new(warmup, iters)`, collapsed to `(0, 2)` in smoke mode — the
+    /// CI lane's env-capped iteration counts.
+    pub fn from_env(warmup: usize, iters: usize) -> Bench {
+        if smoke() {
+            Bench::new(0, 2)
+        } else {
+            Bench::new(warmup, iters)
+        }
+    }
+
     /// Run and summarize wall time in seconds per iteration.
     pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
         for _ in 0..self.warmup {
@@ -136,6 +155,102 @@ pub fn print_row(group: &str, name: &str, s: &Summary, unit: &str) {
         fmt_value(s.p95, unit),
         s.n
     );
+}
+
+/// True when the benches run in short "smoke" mode
+/// (`TFGNN_BENCH_SMOKE=1`): workloads shrink and iteration counts
+/// collapse so the CI job finishes fast while still emitting every
+/// `BENCH_*.json` row.
+pub fn smoke() -> bool {
+    std::env::var("TFGNN_BENCH_SMOKE").map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+/// One machine-readable bench row.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    /// `group/name` label, stable across PRs so rows can be diffed.
+    pub name: String,
+    /// Parallelism of the measured configuration (1 = serial).
+    pub threads: usize,
+    /// Nanoseconds per item (derived from the summary and unit).
+    pub ns_per_op: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub unit: String,
+}
+
+/// Collects bench rows, echoing each through [`print_row`], and writes
+/// them as `BENCH_<bench>.json` — the artifact the `bench-smoke` CI job
+/// uploads so the perf trajectory is tracked per PR.
+pub struct BenchReport {
+    bench: String,
+    rows: Vec<BenchRow>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> BenchReport {
+        BenchReport { bench: bench.to_string(), rows: Vec::new() }
+    }
+
+    /// Record and print one row. `threads` is the configuration's
+    /// parallelism (1 for serial rows).
+    pub fn row(&mut self, group: &str, name: &str, threads: usize, s: &Summary, unit: &str) {
+        print_row(group, name, s, unit);
+        let ns_per_op = match unit {
+            "items/s" if s.mean > 0.0 => 1e9 / s.mean,
+            "s" => s.mean * 1e9,
+            _ => f64::NAN, // serialized as null
+        };
+        self.rows.push(BenchRow {
+            name: format!("{group}/{name}"),
+            threads,
+            ns_per_op,
+            mean: s.mean,
+            p50: s.p50,
+            p95: s.p95,
+            unit: unit.to_string(),
+        });
+    }
+
+    /// Serialize to the artifact JSON document.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("threads", Json::Int(r.threads as i64)),
+                    ("ns_per_op", Json::Num(r.ns_per_op)),
+                    ("mean", Json::Num(r.mean)),
+                    ("p50", Json::Num(r.p50)),
+                    ("p95", Json::Num(r.p95)),
+                    ("unit", Json::Str(r.unit.clone())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("bench", Json::Str(self.bench.clone())),
+            ("smoke", Json::Bool(smoke())),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    /// Write the artifact to `path`.
+    pub fn write_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+
+    /// Write to `$TFGNN_BENCH_JSON` if set, else `BENCH_<bench>.json`
+    /// in the working directory; returns the path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = std::env::var("TFGNN_BENCH_JSON")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(format!("BENCH_{}.json", self.bench)));
+        self.write_to(&path)?;
+        Ok(path)
+    }
 }
 
 fn fmt_value(v: f64, unit: &str) -> String {
@@ -210,5 +325,41 @@ mod tests {
     fn fmt_mean_std_shape() {
         let s = fmt_mean_std(&[0.5, 0.51, 0.52]);
         assert!(s.contains('±'), "{s}");
+    }
+
+    #[test]
+    fn bench_report_rows_and_ns_per_op() {
+        let mut r = BenchReport::new("unit");
+        // 1e6 items/s mean -> 1000 ns per item.
+        let s = Summary { n: 3, mean: 1e6, std: 0.0, min: 1e6, p50: 1e6, p95: 1e6, max: 1e6 };
+        r.row("g", "items", 4, &s, "items/s");
+        // 2 ms per iteration -> 2e6 ns.
+        let t = Summary { n: 3, mean: 2e-3, std: 0.0, min: 2e-3, p50: 2e-3, p95: 2e-3, max: 2e-3 };
+        r.row("g", "time", 1, &t, "s");
+        assert_eq!(r.rows.len(), 2);
+        assert_eq!(r.rows[0].name, "g/items");
+        assert_eq!(r.rows[0].threads, 4);
+        assert!((r.rows[0].ns_per_op - 1000.0).abs() < 1e-9, "{}", r.rows[0].ns_per_op);
+        assert!((r.rows[1].ns_per_op - 2e6).abs() < 1e-3, "{}", r.rows[1].ns_per_op);
+    }
+
+    #[test]
+    fn bench_report_json_roundtrip() {
+        let mut r = BenchReport::new("unit");
+        let s =
+            Summary { n: 1, mean: 500.0, std: 0.0, min: 500.0, p50: 500.0, p95: 500.0, max: 500.0 };
+        r.row("sample", "seeds=8", 8, &s, "items/s");
+        let dir = std::env::temp_dir().join(format!("tfgnn-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_unit.json");
+        r.write_to(&path).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "unit");
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().as_str().unwrap(), "sample/seeds=8");
+        assert_eq!(rows[0].get("threads").unwrap().as_i64().unwrap(), 8);
+        assert!(rows[0].get("ns_per_op").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -166,6 +166,8 @@ fn serving_returns_consistent_predictions() {
         tfgnn::serve::ServeConfig {
             max_batch: env.batch_size,
             max_wait: std::time::Duration::from_millis(2),
+            // Exercise the parallel wave-sampling path end to end.
+            sampler: tfgnn::sampler::SamplerConfig::with_threads(4),
         },
     )
     .unwrap();
@@ -217,6 +219,7 @@ fn aot_forward_matches_rust_reference() {
         tfgnn::serve::ServeConfig {
             max_batch: 1,
             max_wait: std::time::Duration::from_millis(0),
+            ..Default::default()
         },
     )
     .unwrap();

@@ -1,0 +1,90 @@
+//! Property tests for the sampling engine's determinism contract:
+//! the shard-fanout parallel engine, the CSR in-memory fast path and
+//! the single-threaded Algorithm 1 oracle must produce **identical
+//! GraphTensors** for every (seed set, fanout, thread count, failure
+//! rate) — the invariant DESIGN.md's sampling-engine section promises
+//! and everything downstream (pipeline, serving, coordinator) leans on.
+
+use std::sync::Arc;
+
+use tfgnn::sampler::distributed::{sample_batch, sample_batch_parallel};
+use tfgnn::sampler::inmem::InMemorySampler;
+use tfgnn::sampler::spec::mag_sampling_spec_scaled;
+use tfgnn::sampler::{RetryPolicy, SamplerConfig};
+use tfgnn::store::sharded::ShardedStore;
+use tfgnn::store::GraphStore;
+use tfgnn::synth::mag::{generate, MagConfig};
+use tfgnn::util::proptest::check;
+
+fn store() -> Arc<GraphStore> {
+    let ds = generate(&MagConfig::tiny());
+    Arc::new(ds.store)
+}
+
+#[test]
+fn prop_parallel_equals_serial_across_seeds_fanouts_threads() {
+    let store = store();
+    check("parallel sampler == serial oracle", 12, |rng| {
+        // Random fanout scale, seed set and plan seed per case.
+        let fanout = 0.05 + rng.f64() * 0.95;
+        let spec = mag_sampling_spec_scaled(&store.schema, fanout).unwrap();
+        let n_seeds = 1 + rng.uniform(30);
+        let seeds: Vec<u32> = (0..n_seeds).map(|_| rng.uniform(120) as u32).collect();
+        let plan_seed = rng.next_u64();
+        let num_shards = 1 + rng.uniform(8);
+
+        let sharded = Arc::new(ShardedStore::new(Arc::clone(&store), num_shards));
+        let (want, _) =
+            sample_batch(&sharded, &spec, plan_seed, &seeds, &RetryPolicy::default()).unwrap();
+
+        // The in-memory CSR fast path agrees seed by seed.
+        let inmem = InMemorySampler::new(Arc::clone(&store), spec.clone(), plan_seed).unwrap();
+        for (k, &s) in seeds.iter().enumerate() {
+            assert_eq!(want[k], inmem.sample(s).unwrap(), "inmem seed {s}");
+        }
+
+        for threads in [1usize, 2, 8] {
+            let cfg = SamplerConfig::with_threads(threads);
+            let (got, stats) =
+                sample_batch_parallel(&sharded, &spec, plan_seed, &seeds, &cfg, None).unwrap();
+            assert_eq!(got, want, "threads={threads} fanout={fanout:.2} seeds={n_seeds}");
+            assert_eq!(stats.subgraphs, seeds.len());
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_equals_serial_under_injected_shard_failures() {
+    let store = store();
+    check("parallel sampler resilient == serial reliable", 10, |rng| {
+        let fanout = 0.1 + rng.f64() * 0.6;
+        let spec = mag_sampling_spec_scaled(&store.schema, fanout).unwrap();
+        let seeds: Vec<u32> = (0..1 + rng.uniform(20)).map(|_| rng.uniform(120) as u32).collect();
+        let plan_seed = rng.next_u64();
+        let failure_rate = 0.1 + rng.f64() * 0.3;
+        let failure_seed = rng.next_u64();
+
+        let reliable = Arc::new(ShardedStore::new(Arc::clone(&store), 4));
+        let (want, _) =
+            sample_batch(&reliable, &spec, plan_seed, &seeds, &RetryPolicy::default()).unwrap();
+
+        let flaky = Arc::new(
+            ShardedStore::new(Arc::clone(&store), 4).with_failures(failure_rate, failure_seed),
+        );
+        for threads in [1usize, 2, 8] {
+            let cfg = SamplerConfig {
+                threads,
+                retry: RetryPolicy { max_attempts: 200 },
+                ..SamplerConfig::default()
+            };
+            let (got, _) =
+                sample_batch_parallel(&flaky, &spec, plan_seed, &seeds, &cfg, None).unwrap();
+            assert_eq!(
+                got, want,
+                "threads={threads} fail={failure_rate:.2}: retries must hide failures"
+            );
+        }
+        let (_, _, injected) = flaky.total_requests();
+        assert!(injected > 0, "failure injection actually fired");
+    });
+}
