@@ -1,0 +1,165 @@
+//! Bench: the native training engine (train step throughput).
+//!
+//! Times `NativeTrainer::train_batch` — forward-with-tape, reverse-mode
+//! backward, deterministic all-reduce, Adam — over pipeline-shaped
+//! padded batches of a MAG-sized synth graph, at 1/2/4/8 replica
+//! threads, plus the forward-only eval path. **Parity is asserted
+//! before any timing**: the 1-thread trainer must match the serial
+//! oracle bit-for-bit (params and loss), and the 8-thread loss must
+//! match within 1e-5 relative. Every row lands in `BENCH_training.json`
+//! for the perf-tracking CI lane; on a quiet 8-core box the 8-thread
+//! row is expected ≥2× the serial row (recorded in ROADMAP.md).
+//!
+//! Run: `cargo bench --bench training`
+//! (set `TFGNN_BENCH_SMOKE=1` for the short CI mode).
+
+use std::sync::Arc;
+
+use tfgnn::graph::pad::{fit_or_skip, Padded, PadSpec};
+use tfgnn::ops::model_ref::ModelConfig;
+use tfgnn::runtime::batch::RootTask;
+use tfgnn::sampler::inmem::InMemorySampler;
+use tfgnn::sampler::spec::mag_sampling_spec_scaled;
+use tfgnn::synth::mag::{generate, MagConfig, Split};
+use tfgnn::train::native::{train_step_oracle, Adam, AdamConfig, NativeModel, NativeTrainer};
+use tfgnn::util::stats::{smoke, Bench, BenchReport};
+
+fn rel_diff(a: f32, b: f32) -> f64 {
+    let (a, b) = (a as f64, b as f64);
+    (a - b).abs() / a.abs().max(b.abs()).max(1e-12)
+}
+
+fn main() {
+    // Workload: smoke mode shrinks the graph, model and batch count so
+    // the CI lane finishes in seconds but still emits every row.
+    let (papers, authors, hidden, layers, n_batches) =
+        if smoke() { (1_000, 1_500, 16, 1, 2) } else { (4_000, 6_000, 64, 2, 8) };
+    let batch = 8usize;
+    let mag = MagConfig {
+        num_papers: papers,
+        num_authors: authors,
+        num_institutions: 200,
+        num_fields: 120,
+        ..MagConfig::default()
+    };
+    let ds = generate(&mag);
+    let store = Arc::new(ds.store);
+    let spec = mag_sampling_spec_scaled(&store.schema, 0.25).unwrap();
+    let sampler = InMemorySampler::new(Arc::clone(&store), spec, 42).unwrap();
+    let train_seeds = ds.papers_in_split(Split::Train);
+
+    // Padded batches exactly as the pipeline would emit them.
+    let probe: Vec<_> =
+        train_seeds.iter().take(16).map(|&s| sampler.sample(s).unwrap()).collect();
+    let pad = PadSpec::fit(&probe.iter().collect::<Vec<_>>(), batch, 2.0);
+    let mut batches: Vec<Padded> = Vec::new();
+    let mut at = 0usize;
+    while batches.len() < n_batches && at + batch <= train_seeds.len() {
+        let graphs: Vec<_> = train_seeds[at..at + batch]
+            .iter()
+            .map(|&s| sampler.sample(s).unwrap())
+            .collect();
+        at += batch;
+        let merged = tfgnn::graph::batch::merge(&graphs).unwrap();
+        if let Some(p) = fit_or_skip(&merged, &pad) {
+            batches.push(p);
+        }
+    }
+    assert!(!batches.is_empty(), "no batch fit the pad spec");
+    let roots_per_pass: usize = batches.iter().map(|b| b.num_real_components).sum();
+
+    let model_cfg = ModelConfig::for_mag(&mag, hidden, hidden, layers);
+    let task = RootTask::default();
+    let adam = AdamConfig::default();
+    let model0 = NativeModel::init(model_cfg, 3).unwrap();
+    println!(
+        "# native training engine: {} params, batch {batch}, {} prepared batches",
+        model0.param_elems(),
+        batches.len()
+    );
+
+    // ---- parity gates (must pass before any timing) --------------------
+    let mut oracle_model = model0.clone();
+    let mut oracle_opt = Adam::new(adam, &oracle_model.params);
+    let m_oracle = train_step_oracle(&mut oracle_model, &mut oracle_opt, &batches[0], &task)
+        .unwrap();
+    let mut t1 = NativeTrainer::new(model0.clone(), adam, task.clone(), 1);
+    let m1 = t1.train_batch(&batches[0]).unwrap();
+    assert_eq!(
+        m1.loss.to_bits(),
+        m_oracle.loss.to_bits(),
+        "1-thread loss == serial oracle, bit-for-bit"
+    );
+    for (name, a, b) in t1
+        .model()
+        .names
+        .iter()
+        .zip(&t1.model().params)
+        .zip(&oracle_model.params)
+        .map(|((n, a), b)| (n, a, b))
+    {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "param {name} diverged from oracle");
+        }
+    }
+    let mut t8 = NativeTrainer::new(model0.clone(), adam, task.clone(), 8);
+    let m8 = t8.train_batch(&batches[0]).unwrap();
+    assert!(
+        rel_diff(m1.loss, m8.loss) <= 1e-5,
+        "8-thread loss {} vs serial {} (rel {})",
+        m8.loss,
+        m1.loss,
+        rel_diff(m1.loss, m8.loss)
+    );
+    println!("# parity gates passed: 1t == oracle (bit), 8t loss within 1e-5");
+
+    // ---- train-step throughput, 1..8 replica threads -------------------
+    println!("\n# train step (forward+backward+all-reduce+Adam), items = roots/s");
+    let bench = Bench::from_env(1, 5);
+    let mut report = BenchReport::new("training");
+    let mut serial_rate = 0.0f64;
+    let mut rate_8t = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let mut tr = NativeTrainer::new(model0.clone(), adam, task.clone(), threads);
+        let s = bench.throughput(roots_per_pass, || {
+            for b in &batches {
+                tr.train_batch(b).unwrap();
+            }
+        });
+        report.row(
+            "train/native_step",
+            &format!("batch={batch} hidden={hidden} layers={layers}"),
+            threads,
+            &s,
+            "items/s",
+        );
+        if threads == 1 {
+            serial_rate = s.mean;
+        }
+        if threads == 8 {
+            rate_8t = s.mean;
+        }
+    }
+    println!("BENCH train/native_step speedup 8t vs 1t: {:.2}x", rate_8t / serial_rate);
+
+    // ---- eval (forward-only) throughput --------------------------------
+    println!("\n# eval step (fused forward only)");
+    for threads in [1usize, 8] {
+        let tr = NativeTrainer::new(model0.clone(), adam, task.clone(), threads);
+        let s = bench.throughput(roots_per_pass, || {
+            for b in &batches {
+                tr.eval_batch(b).unwrap();
+            }
+        });
+        report.row(
+            "train/native_eval",
+            &format!("batch={batch} hidden={hidden} layers={layers}"),
+            threads,
+            &s,
+            "items/s",
+        );
+    }
+
+    let path = report.write().expect("write bench json");
+    println!("\nwrote {}", path.display());
+}

@@ -5,6 +5,7 @@
 //! tfgnn generate --out DIR            # synth-MAG -> stats + schema file
 //! tfgnn sample   --out DIR [--workers N] [--shards K] [--crash-rate P]
 //! tfgnn train    [--arch mpnn] [--epochs N] [--ckpt PATH]
+//!                [--engine aot|native] [--trainer-threads N] [--config PATH]
 //! tfgnn eval     --ckpt PATH [--arch mpnn]
 //! tfgnn sweep    [--arch mpnn] [--epochs N] [--top K]
 //! tfgnn serve-bench [--requests N] [--max-batch B]
@@ -12,7 +13,10 @@
 //!
 //! All subcommands read `artifacts/manifest.json` (written by
 //! `make artifacts`), so the Rust binary is self-contained after the
-//! one-time AOT build.
+//! one-time AOT build. Exception: `train --engine native` needs no
+//! artifacts at all — point `--config` at a raw `configs/*.json`
+//! (e.g. `configs/mag_small.json`) and the pure-Rust reverse-mode
+//! engine trains data-parallel over `--trainer-threads` replicas.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -170,12 +174,25 @@ fn train(args: &Args) -> Result<()> {
     };
     cfg.prep_threads = args.get_or("prep-threads", 2)?;
     cfg.sampler_threads = args.get_or("sampler-threads", 0)?;
+    cfg.engine = match args.get("engine") {
+        Some(e) => tfgnn::runner::EngineKind::parse(e)?,
+        None => tfgnn::runner::EngineKind::Aot,
+    };
+    cfg.trainer_threads = args.get_or("trainer-threads", 0)?;
+    if let Some(p) = args.get("config") {
+        cfg.config_path = Some(PathBuf::from(p));
+    }
     cfg.verbose = true;
     if let Some(p) = args.get("ckpt") {
         cfg.checkpoint = Some(PathBuf::from(p));
     }
     if args.get("lr").is_some() || args.get("dropout").is_some() || args.get("wd").is_some() {
-        let m = Manifest::load(&cfg.artifacts_dir)?;
+        let m = match (&cfg.engine, &cfg.config_path) {
+            (tfgnn::runner::EngineKind::Native, Some(p)) => {
+                tfgnn::runner::manifest_from_config_file(p)?
+            }
+            _ => Manifest::load(&cfg.artifacts_dir)?,
+        };
         let mut hp = Hyperparams::from_manifest(&m)?;
         hp.learning_rate = args.get_or("lr", hp.learning_rate)?;
         hp.dropout = args.get_or("dropout", hp.dropout)?;

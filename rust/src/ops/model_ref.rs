@@ -8,6 +8,16 @@
 //! cross-language correctness check in the repo: it validates the whole
 //! chain (Pallas kernel → jax model → HLO text → PJRT execution →
 //! literal marshalling) against an independent implementation.
+//!
+//! The forward is exposed as **staged functions** ([`encode_dense`],
+//! [`edge_conv_tape`], [`node_update`], [`root_readout`]) rather than
+//! one monolithic pass: each stage returns its pre-activation(s)
+//! alongside the output, which is exactly what the native training
+//! engine ([`crate::train::native`]) records on its tape for the
+//! backward pass. [`mpnn_forward_reference`] composes the same stages
+//! (with the fused edge convolution on the hot edge loop), so the
+//! reference and the native engine share one source of truth for the
+//! forward semantics.
 
 use std::collections::BTreeMap;
 
@@ -15,6 +25,7 @@ use crate::graph::pad::Padded;
 use crate::runtime::batch::{root_indices, RootTask};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::HostTensor;
+use crate::util::json::Json;
 use crate::{Error, Result};
 
 /// Dense row-major matrix.
@@ -119,6 +130,49 @@ impl Mat {
         }
         out
     }
+
+    /// Transposed copy (used by the reverse-mode matmul rules).
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Element-wise `self += other` (shapes must match).
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!(self.rows, other.rows, "add_assign: row mismatch");
+        assert_eq!(self.cols, other.cols, "add_assign: col mismatch");
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Element-wise scale by a scalar.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Per-column sums (the bias gradient).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (o, &v) in out.iter_mut().zip(self.row(r)) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// A zero matrix of the same shape.
+    pub fn zeros_like(&self) -> Mat {
+        Mat::zeros(self.rows, self.cols)
+    }
 }
 
 /// The unfused message-passing step, kept as the bit-for-bit oracle
@@ -141,6 +195,41 @@ pub fn edge_conv_unfused(
     msg.add_bias(b);
     msg.relu();
     msg.segment_sum(receiver_idx, n_recv)
+}
+
+/// Saved activations of one edge convolution — the tape entries the
+/// native backward pass needs: the concatenated per-edge input and the
+/// pre-relu messages.
+#[derive(Debug, Clone)]
+pub struct EdgeConvSaved {
+    /// `[num_edges, d_sender + d_receiver]` gathered+concatenated input.
+    pub x_edge: Mat,
+    /// `[num_edges, d_out]` messages before the relu.
+    pub z_msg: Mat,
+}
+
+/// Tape variant of the edge convolution: the same staged sequence as
+/// [`edge_conv_unfused`] (and therefore bit-for-bit equal to
+/// [`edge_conv_fused`] — see the fusion property test), returning the
+/// saved activations alongside the pooled output.
+pub fn edge_conv_tape(
+    sender_h: &Mat,
+    receiver_h: &Mat,
+    sender_idx: &[i32],
+    receiver_idx: &[i32],
+    w: &Mat,
+    b: &[f32],
+    n_recv: usize,
+) -> (Mat, EdgeConvSaved) {
+    let sender = sender_h.gather(sender_idx);
+    let receiver = receiver_h.gather(receiver_idx);
+    let x_edge = Mat::concat_cols(&[&sender, &receiver]);
+    let mut z_msg = x_edge.matmul(w);
+    z_msg.add_bias(b);
+    let mut msg = z_msg.clone();
+    msg.relu();
+    let pooled = msg.segment_sum(receiver_idx, n_recv);
+    (pooled, EdgeConvSaved { x_edge, z_msg })
 }
 
 /// Fused edge convolution: one pass over the edges computing each
@@ -194,6 +283,53 @@ pub fn edge_conv_fused(
     out
 }
 
+/// Stage: initial node state from dense features —
+/// `z = Σ_f x_f @ W_f + b`, `h = relu(z)`. Returns `(h, z)`; the
+/// pre-activation `z` is the tape entry the backward pass masks the
+/// relu with.
+pub fn encode_dense(xs: &[Mat], ws: &[&Mat], b: &[f32]) -> (Mat, Mat) {
+    assert_eq!(xs.len(), ws.len(), "encode_dense: feature/weight count");
+    assert!(!xs.is_empty(), "encode_dense: no features");
+    let mut z = Mat::zeros(xs[0].rows, ws[0].cols);
+    for (x, w) in xs.iter().zip(ws) {
+        let xw = x.matmul(w);
+        z.add_assign(&xw);
+    }
+    z.add_bias(b);
+    let mut h = z.clone();
+    h.relu();
+    (h, z)
+}
+
+/// Saved activations of one next-state update: the concatenated input
+/// `[h ‖ pooled…]` and the pre-relu output.
+#[derive(Debug, Clone)]
+pub struct NodeUpdateSaved {
+    pub x_cat: Mat,
+    pub z: Mat,
+}
+
+/// Stage: next-state MLP — `x = concat(parts)`, `z = x @ W + b`,
+/// `h = relu(z)`. Returns `(h, saved)`.
+pub fn node_update(parts: &[&Mat], w: &Mat, b: &[f32]) -> (Mat, NodeUpdateSaved) {
+    let x_cat = Mat::concat_cols(parts);
+    let mut z = x_cat.matmul(w);
+    z.add_bias(b);
+    let mut h = z.clone();
+    h.relu();
+    (h, NodeUpdateSaved { x_cat, z })
+}
+
+/// Stage: root readout — gather the root rows, apply the linear head.
+/// Returns `(logits, root_states)`; the gathered states are the tape
+/// entry for the head's weight gradient.
+pub fn root_readout(h_root: &Mat, roots: &[i32], w: &Mat, b: &[f32]) -> (Mat, Mat) {
+    let root_states = h_root.gather(roots);
+    let mut logits = root_states.matmul(w);
+    logits.add_bias(b);
+    (logits, root_states)
+}
+
 /// Named parameter lookup over a checkpoint/params list.
 pub struct ParamMap<'a>(BTreeMap<&'a str, &'a HostTensor>);
 
@@ -223,64 +359,161 @@ impl<'a> ParamMap<'a> {
     }
 }
 
-/// Model dims read from the manifest config.
-struct RefConfig {
-    hidden: usize,
-    layers: usize,
-    updates: BTreeMap<String, Vec<String>>,
-    edge_endpoints: BTreeMap<String, (String, String)>,
-    node_order: Vec<String>,
-    id_embedding: BTreeMap<String, bool>,
-    features: BTreeMap<String, Vec<String>>,
-    num_classes: usize,
+/// The mpnn architecture read off a config: dims, the per-node-set
+/// update lists, the schema's endpoints and features. Shared between
+/// the AOT reference forward and the native training engine (which
+/// also needs `message`, `feature_dims` and `cardinality` to create
+/// parameters from scratch).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub hidden: usize,
+    /// Message MLP output width (== hidden for the shipped configs).
+    pub message: usize,
+    pub layers: usize,
+    /// node set -> edge sets pooled into its update.
+    pub updates: BTreeMap<String, Vec<String>>,
+    /// edge set -> (source node set, target node set).
+    pub edge_endpoints: BTreeMap<String, (String, String)>,
+    /// All node sets, in deterministic (sorted) order.
+    pub node_order: Vec<String>,
+    /// node set -> uses an id-embedding table as its initial state.
+    pub id_embedding: BTreeMap<String, bool>,
+    /// node set -> dense feature names feeding its encoder (sorted).
+    pub features: BTreeMap<String, Vec<String>>,
+    /// node set -> feature name -> per-item dimension.
+    pub feature_dims: BTreeMap<String, BTreeMap<String, usize>>,
+    /// node set -> embedding-table cardinality (id-embedding sets).
+    pub cardinality: BTreeMap<String, usize>,
+    pub num_classes: usize,
 }
 
-fn ref_config(manifest: &Manifest) -> Result<RefConfig> {
-    let cfg = &manifest.config;
-    let model = cfg.get("model")?;
-    let mut updates = BTreeMap::new();
-    for (k, v) in model.get("updates")?.as_obj()? {
-        updates.insert(
-            k.clone(),
-            v.as_arr()?.iter().map(|s| Ok(s.as_str()?.to_string())).collect::<Result<Vec<_>>>()?,
-        );
-    }
-    let schema = cfg.get("schema")?;
-    let mut edge_endpoints = BTreeMap::new();
-    for (k, v) in schema.get("edge_sets")?.as_obj()? {
-        let arr = v.as_arr()?;
-        edge_endpoints.insert(
-            k.clone(),
-            (arr[0].as_str()?.to_string(), arr[1].as_str()?.to_string()),
-        );
-    }
-    let mut node_order = Vec::new();
-    let mut id_embedding = BTreeMap::new();
-    let mut features = BTreeMap::new();
-    for (k, v) in schema.get("node_sets")?.as_obj()? {
-        node_order.push(k.clone());
-        id_embedding.insert(
-            k.clone(),
-            v.opt("id_embedding").map(|b| b.as_bool().unwrap_or(false)).unwrap_or(false),
-        );
-        let mut fs = Vec::new();
-        if let Some(f) = v.opt("features") {
-            for name in f.as_obj()?.keys() {
-                fs.push(name.clone());
+impl ModelConfig {
+    /// Parse from a run config document (the `config` object of
+    /// `artifacts/manifest.json`, or a raw `configs/*.json` file —
+    /// both carry `model` / `schema` / `train`).
+    pub fn from_config(cfg: &Json) -> Result<ModelConfig> {
+        let model = cfg.get("model")?;
+        let mut updates = BTreeMap::new();
+        for (k, v) in model.get("updates")?.as_obj()? {
+            updates.insert(
+                k.clone(),
+                v.as_arr()?
+                    .iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        let schema = cfg.get("schema")?;
+        let mut edge_endpoints = BTreeMap::new();
+        for (k, v) in schema.get("edge_sets")?.as_obj()? {
+            let arr = v.as_arr()?;
+            if arr.len() != 2 {
+                return Err(Error::Schema(format!("edge set {k:?}: want [source, target]")));
+            }
+            edge_endpoints.insert(
+                k.clone(),
+                (arr[0].as_str()?.to_string(), arr[1].as_str()?.to_string()),
+            );
+        }
+        let mut node_order = Vec::new();
+        let mut id_embedding = BTreeMap::new();
+        let mut features = BTreeMap::new();
+        let mut feature_dims = BTreeMap::new();
+        let mut cardinality = BTreeMap::new();
+        for (k, v) in schema.get("node_sets")?.as_obj()? {
+            node_order.push(k.clone());
+            id_embedding.insert(
+                k.clone(),
+                v.opt("id_embedding").map(|b| b.as_bool().unwrap_or(false)).unwrap_or(false),
+            );
+            let mut fs = Vec::new();
+            let mut dims = BTreeMap::new();
+            if let Some(f) = v.opt("features") {
+                for (name, dim) in f.as_obj()? {
+                    fs.push(name.clone());
+                    dims.insert(name.clone(), dim.as_usize().unwrap_or(0));
+                }
+            }
+            features.insert(k.clone(), fs);
+            feature_dims.insert(k.clone(), dims);
+            if let Some(c) = v.opt("cardinality") {
+                cardinality.insert(k.clone(), c.as_usize()?);
             }
         }
-        features.insert(k.clone(), fs);
+        Ok(ModelConfig {
+            hidden: model.get("hidden_dim")?.as_usize()?,
+            message: model.get("message_dim")?.as_usize()?,
+            layers: model.get("num_layers")?.as_usize()?,
+            updates,
+            edge_endpoints,
+            node_order,
+            id_embedding,
+            features,
+            feature_dims,
+            cardinality,
+            num_classes: cfg.get("train")?.get("num_classes")?.as_usize()?,
+        })
     }
-    Ok(RefConfig {
-        hidden: manifest.model("mpnn")?.hidden_dim,
-        layers: manifest.model("mpnn")?.num_layers,
-        updates,
-        edge_endpoints,
-        node_order,
-        id_embedding,
-        features,
-        num_classes: cfg.get("train")?.get("num_classes")?.as_usize()?,
-    })
+
+    /// Parse from an AOT manifest; the lowered model entry's dims win
+    /// over the raw config when present.
+    pub fn from_manifest(m: &Manifest) -> Result<ModelConfig> {
+        let mut cfg = ModelConfig::from_config(&m.config)?;
+        if let Ok(entry) = m.model("mpnn") {
+            cfg.hidden = entry.hidden_dim;
+            cfg.message = entry.message_dim;
+            cfg.layers = entry.num_layers;
+        }
+        Ok(cfg)
+    }
+
+    /// The synth-MAG architecture (§8 schema) over a generator config —
+    /// lets tests and benches build a model without a manifest.
+    pub fn for_mag(
+        mag: &crate::synth::mag::MagConfig,
+        hidden: usize,
+        message: usize,
+        layers: usize,
+    ) -> ModelConfig {
+        let s = |x: &str| x.to_string();
+        let mut updates = BTreeMap::new();
+        updates.insert(s("paper"), vec![s("cites"), s("written"), s("has_topic")]);
+        updates.insert(s("author"), vec![s("writes"), s("affiliated_with")]);
+        let mut edge_endpoints = BTreeMap::new();
+        edge_endpoints.insert(s("cites"), (s("paper"), s("paper")));
+        edge_endpoints.insert(s("written"), (s("paper"), s("author")));
+        edge_endpoints.insert(s("writes"), (s("author"), s("paper")));
+        edge_endpoints.insert(s("affiliated_with"), (s("author"), s("institution")));
+        edge_endpoints.insert(s("has_topic"), (s("paper"), s("field_of_study")));
+        let node_order =
+            vec![s("author"), s("field_of_study"), s("institution"), s("paper")];
+        let mut id_embedding = BTreeMap::new();
+        let mut features = BTreeMap::new();
+        let mut feature_dims = BTreeMap::new();
+        let mut cardinality = BTreeMap::new();
+        for set in &node_order {
+            id_embedding.insert(set.clone(), set == "institution" || set == "field_of_study");
+            features.insert(set.clone(), Vec::new());
+            feature_dims.insert(set.clone(), BTreeMap::new());
+        }
+        features.insert(s("paper"), vec![s("feat")]);
+        feature_dims.get_mut("paper").unwrap().insert(s("feat"), mag.feature_dim);
+        cardinality.insert(s("institution"), mag.num_institutions);
+        cardinality.insert(s("field_of_study"), mag.num_fields);
+        ModelConfig {
+            hidden,
+            message,
+            layers,
+            updates,
+            edge_endpoints,
+            node_order,
+            id_embedding,
+            features,
+            feature_dims,
+            cardinality,
+            num_classes: mag.num_classes,
+        }
+    }
 }
 
 /// Compute logits `[num_roots, num_classes]` exactly like the AOT
@@ -291,28 +524,40 @@ pub fn mpnn_forward_reference(
     padded: &Padded,
     task: &RootTask,
 ) -> Result<Mat> {
-    let rc = ref_config(manifest)?;
+    let rc = ModelConfig::from_manifest(manifest)?;
+    let num_roots = manifest.pad_spec()?.component_cap - 1;
+    mpnn_forward_with_config(&rc, params, padded, task, num_roots)
+}
+
+/// [`mpnn_forward_reference`] against an explicit [`ModelConfig`] —
+/// usable without a manifest (the native engine's parity tests feed
+/// their from-scratch parameters through this).
+pub fn mpnn_forward_with_config(
+    rc: &ModelConfig,
+    params: &[(String, HostTensor)],
+    padded: &Padded,
+    task: &RootTask,
+    num_roots: usize,
+) -> Result<Mat> {
     let p = ParamMap::new(params);
     let g = &padded.graph;
 
-    // Initial states (MapFeatures).
+    // Initial states (MapFeatures), via the staged encoder.
     let mut h: BTreeMap<String, Mat> = BTreeMap::new();
     for set in &rc.node_order {
         let n = g.num_nodes(set)?;
         let feats = &rc.features[set];
         if !feats.is_empty() {
-            let mut state = Mat::zeros(n, rc.hidden);
+            let mut xs = Vec::with_capacity(feats.len());
+            let mut ws = Vec::with_capacity(feats.len());
             for fname in feats {
                 let (dims, data) = g.node_set(set)?.feature(fname)?.as_f32()?;
-                let x = Mat { rows: n, cols: dims[0], data: data.to_vec() };
-                let xw = x.matmul(&p.mat(&format!("enc.{set}.{fname}.w"))?);
-                for (o, v) in state.data.iter_mut().zip(&xw.data) {
-                    *o += v;
-                }
+                xs.push(Mat { rows: n, cols: dims[0], data: data.to_vec() });
+                ws.push(p.mat(&format!("enc.{set}.{fname}.w"))?);
             }
-            let first = &feats[0];
-            state.add_bias(&p.vec(&format!("enc.{set}.{first}.b"))?);
-            state.relu();
+            let wrefs: Vec<&Mat> = ws.iter().collect();
+            let b = p.vec(&format!("enc.{set}.{}.b", feats[0]))?;
+            let (state, _z) = encode_dense(&xs, &wrefs, &b);
             h.insert(set.clone(), state);
         } else if rc.id_embedding[set] {
             let (_, ids) = g.node_set(set)?.feature("#id")?.as_i64()?;
@@ -352,10 +597,11 @@ pub fn mpnn_forward_reference(
             }
             let mut parts: Vec<&Mat> = vec![&h[node_set]];
             parts.extend(pooled.iter());
-            let x = Mat::concat_cols(&parts);
-            let mut next = x.matmul(&p.mat(&format!("l{layer}.{node_set}.next.w"))?);
-            next.add_bias(&p.vec(&format!("l{layer}.{node_set}.next.b"))?);
-            next.relu();
+            let (mut next, _saved) = node_update(
+                &parts,
+                &p.mat(&format!("l{layer}.{node_set}.next.w"))?,
+                &p.vec(&format!("l{layer}.{node_set}.next.b"))?,
+            );
             // layer norm (the mag config enables it)
             if params.iter().any(|(n, _)| n == &format!("param.l{layer}.{node_set}.ln.scale")) {
                 next.layer_norm(
@@ -369,11 +615,9 @@ pub fn mpnn_forward_reference(
     }
 
     // Root readout.
-    let num_roots = manifest.pad_spec()?.component_cap - 1;
     let roots = root_indices(padded, &task.root_set, num_roots)?;
-    let root_states = h[&task.root_set].gather(&roots);
-    let mut logits = root_states.matmul(&p.mat("head.w")?);
-    logits.add_bias(&p.vec("head.b")?);
+    let (logits, _root_states) =
+        root_readout(&h[&task.root_set], &roots, &p.mat("head.w")?, &p.vec("head.b")?);
     debug_assert_eq!(logits.cols, rc.num_classes);
     Ok(logits)
 }
@@ -399,13 +643,31 @@ mod tests {
         assert_eq!(cc.row(1), &[4.0, 5.0, 6.0, 4.0, 5.0, 6.0]);
     }
 
+    #[test]
+    fn mat_transpose_and_reductions() {
+        let a = Mat { rows: 2, cols: 3, data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
+        let t = a.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.cols, 2);
+        assert_eq!(t.data, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        // (A^T)^T == A
+        assert_eq!(t.transpose().data, a.data);
+        assert_eq!(a.col_sums(), vec![5.0, 7.0, 9.0]);
+        let mut b = a.clone();
+        b.add_assign(&a);
+        assert_eq!(b.data, vec![2.0, 4.0, 6.0, 8.0, 10.0, 12.0]);
+        b.scale(0.5);
+        assert_eq!(b.data, a.data);
+    }
+
     /// The fused edge conv must reproduce the unfused oracle exactly —
     /// this is what keeps `mpnn_forward_reference` a valid bit-level
-    /// reference for the AOT programs after the fusion.
+    /// reference for the AOT programs after the fusion. The tape
+    /// variant must match too (it is the unfused sequence plus saves).
     #[test]
     fn fused_edge_conv_matches_unfused_bitexact() {
         use crate::util::proptest::check;
-        check("edge_conv fused == unfused", 40, |rng| {
+        check("edge_conv fused == unfused == tape", 40, |rng| {
             let n_send = 1 + rng.uniform(12);
             let n_recv = 1 + rng.uniform(12);
             let n_edges = rng.uniform(40);
@@ -434,12 +696,44 @@ mod tests {
             let ridx: Vec<i32> = (0..n_edges).map(|_| rng.uniform(n_recv) as i32).collect();
             let want = edge_conv_unfused(&sender_h, &receiver_h, &sidx, &ridx, &w, &b, n_recv);
             let got = edge_conv_fused(&sender_h, &receiver_h, &sidx, &ridx, &w, &b, n_recv);
+            let (tape, saved) =
+                edge_conv_tape(&sender_h, &receiver_h, &sidx, &ridx, &w, &b, n_recv);
             assert_eq!(want.rows, got.rows);
             assert_eq!(want.cols, got.cols);
+            assert_eq!(saved.x_edge.rows, n_edges);
+            assert_eq!(saved.z_msg.cols, d_out);
             for (i, (x, y)) in want.data.iter().zip(&got.data).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "element {i}: {x} vs {y}");
             }
+            for (i, (x, y)) in want.data.iter().zip(&tape.data).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "tape element {i}: {x} vs {y}");
+            }
         });
+    }
+
+    #[test]
+    fn staged_encode_and_update_match_inline_sequence() {
+        // encode_dense == (Σ x@W) + b then relu; node_update ==
+        // concat→matmul→bias→relu — the exact inline sequence the
+        // reference used before the staging refactor.
+        let x = Mat { rows: 2, cols: 2, data: vec![1.0, -1.0, 0.5, 2.0] };
+        let w = Mat { rows: 2, cols: 2, data: vec![1.0, 0.0, 0.0, 1.0] };
+        let b = vec![0.1, -10.0];
+        let (h, z) = encode_dense(std::slice::from_ref(&x), &[&w], &b);
+        let mut want = x.matmul(&w);
+        want.add_bias(&b);
+        assert_eq!(z.data, want.data, "pre-activation saved");
+        want.relu();
+        assert_eq!(h.data, want.data);
+        assert!(h.data.iter().all(|&v| v >= 0.0));
+
+        let (h2, saved) = node_update(&[&x, &h], &Mat { rows: 4, cols: 1, data: vec![1.0; 4] }, &[-0.5]);
+        assert_eq!(saved.x_cat.cols, 4);
+        assert_eq!(saved.z.cols, 1);
+        let mut want2 = saved.x_cat.matmul(&Mat { rows: 4, cols: 1, data: vec![1.0; 4] });
+        want2.add_bias(&[-0.5]);
+        want2.relu();
+        assert_eq!(h2.data, want2.data);
     }
 
     #[test]
@@ -450,5 +744,55 @@ mod tests {
         assert!(mu.abs() < 1e-6);
         let var: f32 = m.data.iter().map(|x| x * x).sum::<f32>() / 4.0;
         assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn model_config_from_config_json() {
+        let text = r#"{
+          "model": {"hidden_dim": 8, "message_dim": 4, "num_layers": 2,
+                    "updates": {"paper": ["cites"]}},
+          "schema": {
+            "node_sets": {
+              "paper": {"features": {"feat": 16}},
+              "venue": {"id_embedding": true, "cardinality": 5}
+            },
+            "edge_sets": {"cites": ["paper", "paper"]}
+          },
+          "train": {"num_classes": 3}
+        }"#;
+        let cfg = ModelConfig::from_config(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.hidden, 8);
+        assert_eq!(cfg.message, 4);
+        assert_eq!(cfg.layers, 2);
+        assert_eq!(cfg.num_classes, 3);
+        assert_eq!(cfg.node_order, vec!["paper".to_string(), "venue".to_string()]);
+        assert_eq!(cfg.features["paper"], vec!["feat".to_string()]);
+        assert_eq!(cfg.feature_dims["paper"]["feat"], 16);
+        assert!(cfg.id_embedding["venue"]);
+        assert!(!cfg.id_embedding["paper"]);
+        assert_eq!(cfg.cardinality["venue"], 5);
+        assert_eq!(cfg.edge_endpoints["cites"], ("paper".to_string(), "paper".to_string()));
+        assert_eq!(cfg.updates["paper"], vec!["cites".to_string()]);
+    }
+
+    #[test]
+    fn mag_model_config_is_consistent() {
+        let mag = crate::synth::mag::MagConfig::tiny();
+        let cfg = ModelConfig::for_mag(&mag, 8, 8, 2);
+        // Every updated node set must be the SOURCE endpoint of each of
+        // its pooled edge sets (receiver = SOURCE convention).
+        for (node_set, edges) in &cfg.updates {
+            for es in edges {
+                assert_eq!(&cfg.edge_endpoints[es].0, node_set, "{es} receiver");
+            }
+        }
+        // Every node set has features/id_embedding entries.
+        for set in &cfg.node_order {
+            assert!(cfg.features.contains_key(set));
+            assert!(cfg.id_embedding.contains_key(set));
+        }
+        assert_eq!(cfg.feature_dims["paper"]["feat"], mag.feature_dim);
+        assert_eq!(cfg.cardinality["institution"], mag.num_institutions);
+        assert_eq!(cfg.num_classes, mag.num_classes);
     }
 }

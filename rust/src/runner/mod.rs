@@ -3,19 +3,29 @@
 //! [`run`] is the analog of `runner.run(...)`: it wires a dataset
 //! provider (sampling synth-MAG on demand or reading shards), the
 //! padding/batching pipeline, the task
-//! (`RootNodeMulticlassClassification` on papers), the AOT trainer, and
+//! (`RootNodeMulticlassClassification` on papers), a trainer, and
 //! per-epoch validation into one call, returning the run history.
 //! [`sweep`] is the Vizier-study analog (A.6.3): a deterministic search
 //! over the runtime hyper-parameter space reporting the top trials by
 //! validation accuracy.
+//!
+//! Two interchangeable **training engines** ([`TrainEngine`]) sit
+//! behind the same epoch loop:
+//! * `aot` — the compiled HLO/PJRT [`Trainer`] (needs `make artifacts`);
+//! * `native` — the pure-Rust reverse-mode
+//!   [`crate::train::native::NativeTrainer`], which needs no artifacts
+//!   at all: pass `RunConfig::config_path` pointing at a raw
+//!   `configs/*.json` and the whole train loop runs offline,
+//!   data-parallel over `trainer_threads` replicas.
 
 pub mod sweep;
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::graph::pad::{fit_or_skip, PadSpec};
+use crate::graph::pad::{fit_or_skip, PadSpec, Padded};
+use crate::ops::model_ref::ModelConfig;
 use crate::pipeline::{epoch_stream, DatasetProvider, PipelineConfig, SamplingProvider};
 use crate::runtime::batch::RootTask;
 use crate::runtime::manifest::Manifest;
@@ -26,8 +36,68 @@ use crate::sampler::SamplerConfig;
 use crate::store::GraphStore;
 use crate::synth::mag::{generate, MagDataset, Split};
 use crate::train::metrics::EpochMetrics;
-use crate::train::{Hyperparams, Trainer};
+use crate::train::native::{AdamConfig, NativeModel, NativeTrainer};
+use crate::train::{Hyperparams, StepMetrics, Trainer};
 use crate::{Error, Result};
+
+/// Which training engine executes the step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// AOT HLO programs on the PJRT runtime (requires `make artifacts`).
+    #[default]
+    Aot,
+    /// Pure-Rust reverse-mode engine (`train::native`), artifact-free.
+    Native,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s {
+            "aot" => Ok(EngineKind::Aot),
+            "native" => Ok(EngineKind::Native),
+            other => Err(Error::Runtime(format!(
+                "unknown engine {other:?} (want aot|native)"
+            ))),
+        }
+    }
+}
+
+/// A training engine the epoch loop can drive: one train step, one
+/// eval step, one checkpoint write.
+pub trait TrainEngine {
+    fn train_batch(&mut self, padded: &Padded) -> Result<StepMetrics>;
+    fn eval_batch(&mut self, padded: &Padded) -> Result<StepMetrics>;
+    fn write_checkpoint(&self, path: &Path) -> Result<()>;
+}
+
+impl TrainEngine for Trainer {
+    fn train_batch(&mut self, padded: &Padded) -> Result<StepMetrics> {
+        Trainer::train_batch(self, padded)
+    }
+
+    fn eval_batch(&mut self, padded: &Padded) -> Result<StepMetrics> {
+        Trainer::eval_batch(self, padded)
+    }
+
+    fn write_checkpoint(&self, path: &Path) -> Result<()> {
+        let params = self.params_to_host()?;
+        crate::train::checkpoint::save(path, &params)
+    }
+}
+
+impl TrainEngine for NativeTrainer {
+    fn train_batch(&mut self, padded: &Padded) -> Result<StepMetrics> {
+        NativeTrainer::train_batch(self, padded)
+    }
+
+    fn eval_batch(&mut self, padded: &Padded) -> Result<StepMetrics> {
+        NativeTrainer::eval_batch(self, padded)
+    }
+
+    fn write_checkpoint(&self, path: &Path) -> Result<()> {
+        self.save(path)
+    }
+}
 
 /// Orchestrator configuration.
 #[derive(Debug, Clone)]
@@ -47,6 +117,13 @@ pub struct RunConfig {
     pub prep_threads: usize,
     /// Threads for the sampling stage (0/1 = serial).
     pub sampler_threads: usize,
+    /// Which engine runs the train/eval steps.
+    pub engine: EngineKind,
+    /// Replica threads for the native engine (0/1 = serial).
+    pub trainer_threads: usize,
+    /// Raw config JSON for the native engine when no `artifacts/`
+    /// manifest exists (e.g. `configs/mag_small.json`).
+    pub config_path: Option<PathBuf>,
     /// Where to write the final checkpoint (None = skip).
     pub checkpoint: Option<PathBuf>,
     /// Print per-epoch progress lines.
@@ -65,6 +142,9 @@ impl RunConfig {
             shuffle_seed: 0x7f4a,
             prep_threads: 0,
             sampler_threads: 0,
+            engine: EngineKind::Aot,
+            trainer_threads: 0,
+            config_path: None,
             checkpoint: None,
             verbose: false,
         }
@@ -104,7 +184,13 @@ pub struct MagEnv {
 
 impl MagEnv {
     pub fn from_artifacts(dir: &std::path::Path) -> Result<MagEnv> {
-        let manifest = Manifest::load(dir)?;
+        MagEnv::from_manifest(Manifest::load(dir)?)
+    }
+
+    /// Build the environment from an already-parsed manifest — also
+    /// usable with a manifest synthesized from a raw config file (see
+    /// [`manifest_from_config_file`]), which has an empty model table.
+    pub fn from_manifest(manifest: Manifest) -> Result<MagEnv> {
         let mag_cfg = manifest.mag_config()?;
         let dataset = generate(&mag_cfg);
         let store = Arc::new(dataset.store.clone());
@@ -144,36 +230,105 @@ impl MagEnv {
     }
 }
 
-/// Train + validate + test — the `runner.run(...)` entry point.
-pub fn run(cfg: &RunConfig) -> Result<RunReport> {
-    let env = MagEnv::from_artifacts(&cfg.artifacts_dir)?;
-    let entry = env.manifest.model(&cfg.arch)?.clone();
-    let hp = match cfg.hp {
-        Some(hp) => hp,
-        None => Hyperparams::from_manifest(&env.manifest)?,
-    };
-    let rt = Runtime::cpu()?;
-    let mut trainer =
-        Trainer::new(rt, &cfg.artifacts_dir, &entry, RootTask::default(), hp)?;
-    run_in_env(cfg, &env, &mut trainer)
+/// A manifest with no lowered models, synthesized from a raw run
+/// config (`configs/*.json`) — enough for the native engine, which
+/// needs only the config side (dataset, schema, sampling, pad, model
+/// dims, train hyper-parameters).
+pub fn manifest_from_config_file(path: &Path) -> Result<Manifest> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Runtime(format!("{}: {e}", path.display())))?;
+    Ok(Manifest {
+        config: crate::util::json::Json::parse(&text)?,
+        models: std::collections::BTreeMap::new(),
+    })
 }
 
-/// [`run`] against a pre-built environment and trainer — lets the sweep
-/// reuse one compiled trainer across trials (`Trainer::reset` between).
+/// Train + validate + test — the `runner.run(...)` entry point.
+pub fn run(cfg: &RunConfig) -> Result<RunReport> {
+    match cfg.engine {
+        EngineKind::Aot => {
+            let env = MagEnv::from_artifacts(&cfg.artifacts_dir)?;
+            let entry = env.manifest.model(&cfg.arch)?.clone();
+            let hp = match cfg.hp {
+                Some(hp) => hp,
+                None => Hyperparams::from_manifest(&env.manifest)?,
+            };
+            let rt = Runtime::cpu()?;
+            let mut trainer =
+                Trainer::new(rt, &cfg.artifacts_dir, &entry, RootTask::default(), hp)?;
+            run_in_env(cfg, &env, &mut trainer)
+        }
+        EngineKind::Native => run_native(cfg),
+    }
+}
+
+/// The native-engine run path: no AOT artifacts required. Reads the
+/// manifest from `artifacts_dir` when present, else the raw config at
+/// `config_path`.
+pub fn run_native(cfg: &RunConfig) -> Result<RunReport> {
+    let manifest = match &cfg.config_path {
+        Some(p) => manifest_from_config_file(p)?,
+        None => Manifest::load(&cfg.artifacts_dir)?,
+    };
+    let env = MagEnv::from_manifest(manifest)?;
+    let model_cfg = ModelConfig::from_manifest(&env.manifest)?;
+    let init_seed = env
+        .manifest
+        .config
+        .get("train")?
+        .opt("init_seed")
+        .and_then(|v| v.as_i64().ok())
+        .unwrap_or(3) as u64;
+    let mut adam = AdamConfig::from_train_config(&env.manifest.config)?;
+    if let Some(hp) = cfg.hp {
+        adam.lr = hp.learning_rate;
+        adam.weight_decay = hp.weight_decay;
+        // The native engine runs the deterministic (eval-mode) forward:
+        // there is no dropout op to apply, so a requested rate would
+        // otherwise vanish silently — say so once, loudly.
+        if hp.dropout > 0.0 {
+            eprintln!(
+                "warning: native engine ignores dropout={} (deterministic \
+                 forward; only lr/weight_decay apply)",
+                hp.dropout
+            );
+        }
+    }
+    let model = NativeModel::init(model_cfg, init_seed)?;
+    let param_count = model.param_elems();
+    let mut trainer =
+        NativeTrainer::new(model, adam, RootTask::default(), cfg.trainer_threads);
+    run_loop(cfg, &env, &mut trainer, param_count)
+}
+
+/// [`run`] against a pre-built environment and AOT trainer — lets the
+/// sweep reuse one compiled trainer across trials (`Trainer::reset`
+/// between).
 pub fn run_in_env(cfg: &RunConfig, env: &MagEnv, trainer: &mut Trainer) -> Result<RunReport> {
     let entry = env.manifest.model(&cfg.arch)?.clone();
     if let Some(hp) = cfg.hp {
         trainer.hp = hp;
     }
+    run_loop(cfg, env, trainer, entry.param_count)
+}
 
+/// The engine-agnostic epoch loop: pipeline-fed train epochs with
+/// per-epoch validation, a final test pass and an optional checkpoint.
+pub fn run_loop(
+    cfg: &RunConfig,
+    env: &MagEnv,
+    engine: &mut dyn TrainEngine,
+    param_count: usize,
+) -> Result<RunReport> {
     let train_seeds = env.dataset.papers_in_split(Split::Train);
     let val_seeds = env.dataset.papers_in_split(Split::Validation);
     let test_seeds = env.dataset.papers_in_split(Split::Test);
     if cfg.verbose {
         println!(
-            "runner: arch={} params={} train/val/test = {}/{}/{} papers",
+            "runner: arch={} engine={:?} params={} train/val/test = {}/{}/{} papers",
             cfg.arch,
-            entry.param_count,
+            cfg.engine,
+            param_count,
             train_seeds.len(),
             val_seeds.len(),
             test_seeds.len()
@@ -205,7 +360,7 @@ pub fn run_in_env(cfg: &RunConfig, env: &MagEnv, trainer: &mut Trainer) -> Resul
         let mut train_metrics = EpochMetrics::default();
         for padded in stream.iter() {
             let ts = Instant::now();
-            let m = trainer.train_batch(&padded)?;
+            let m = engine.train_batch(&padded)?;
             total_step_secs += ts.elapsed().as_secs_f64();
             total_steps += 1;
             train_metrics.add(m);
@@ -222,7 +377,7 @@ pub fn run_in_env(cfg: &RunConfig, env: &MagEnv, trainer: &mut Trainer) -> Resul
         let mut val_metrics = EpochMetrics::default();
         for padded in env.eval_batches(&val_seeds, cfg.max_eval_batches) {
             if let Some(p) = padded? {
-                val_metrics.add(trainer.eval_batch(&p)?);
+                val_metrics.add(engine.eval_batch(&p)?);
             }
         }
         best_val_acc = best_val_acc.max(val_metrics.accuracy());
@@ -245,7 +400,7 @@ pub fn run_in_env(cfg: &RunConfig, env: &MagEnv, trainer: &mut Trainer) -> Resul
     let mut test = EpochMetrics::default();
     for padded in env.eval_batches(&test_seeds, cfg.max_eval_batches) {
         if let Some(p) = padded? {
-            test.add(trainer.eval_batch(&p)?);
+            test.add(engine.eval_batch(&p)?);
         }
     }
     if cfg.verbose {
@@ -253,8 +408,7 @@ pub fn run_in_env(cfg: &RunConfig, env: &MagEnv, trainer: &mut Trainer) -> Resul
     }
 
     if let Some(path) = &cfg.checkpoint {
-        let params = trainer.params_to_host()?;
-        crate::train::checkpoint::save(path, &params)?;
+        engine.write_checkpoint(path)?;
         if cfg.verbose {
             println!("checkpoint written to {}", path.display());
         }
@@ -265,7 +419,7 @@ pub fn run_in_env(cfg: &RunConfig, env: &MagEnv, trainer: &mut Trainer) -> Resul
     }
     Ok(RunReport {
         arch: cfg.arch.clone(),
-        param_count: entry.param_count,
+        param_count,
         epochs,
         best_val_acc,
         test,
@@ -275,4 +429,101 @@ pub fn run_in_env(cfg: &RunConfig, env: &MagEnv, trainer: &mut Trainer) -> Resul
             0.0
         },
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parses() {
+        assert_eq!(EngineKind::parse("aot").unwrap(), EngineKind::Aot);
+        assert_eq!(EngineKind::parse("native").unwrap(), EngineKind::Native);
+        assert!(EngineKind::parse("tpu").is_err());
+        assert_eq!(EngineKind::default(), EngineKind::Aot);
+    }
+
+    /// The native engine runs the full runner loop — pipeline, epochs,
+    /// validation, test, checkpoint — straight from a raw config file,
+    /// with zero AOT artifacts.
+    #[test]
+    fn native_run_from_config_file_end_to_end() {
+        // A scaled-down config so the test stays fast: the tiny synth
+        // MAG with the mag_small schema/sampling/pad contract.
+        let text = r#"{
+          "batch_size": 4,
+          "dataset": {
+            "num_papers": 120, "num_authors": 150, "num_institutions": 10,
+            "num_fields": 12, "num_classes": 4, "num_communities": 4,
+            "feature_dim": 16, "mean_citations": 4.0,
+            "mean_authors_per_paper": 2.0, "mean_topics": 1.5,
+            "community_coherence": 0.85, "label_coherence": 0.75,
+            "feature_noise": 0.8, "year_min": 2010, "year_max": 2019,
+            "seed": 17
+          },
+          "schema": {
+            "node_sets": {
+              "paper": {"features": {"feat": 16}},
+              "author": {},
+              "institution": {"id_embedding": true, "cardinality": 10},
+              "field_of_study": {"id_embedding": true, "cardinality": 12}
+            },
+            "edge_sets": {
+              "cites": ["paper", "paper"],
+              "written": ["paper", "author"],
+              "writes": ["author", "paper"],
+              "affiliated_with": ["author", "institution"],
+              "has_topic": ["paper", "field_of_study"]
+            }
+          },
+          "sampling": {
+            "plan_seed": 42,
+            "sizes": {"cites": 3, "written": 2, "writes": 2,
+                      "affiliated_with": 2, "has_topic": 2}
+          },
+          "pad": {
+            "node_caps": {"paper": 128, "author": 80, "institution": 48,
+                          "field_of_study": 56},
+            "edge_caps": {"cites": 16, "written": 40, "writes": 80,
+                          "affiliated_with": 80, "has_topic": 192},
+            "component_cap": 5
+          },
+          "model": {
+            "hidden_dim": 8, "message_dim": 8, "num_layers": 1,
+            "updates": {"paper": ["cites", "written", "has_topic"],
+                        "author": ["writes", "affiliated_with"]}
+          },
+          "train": {
+            "num_classes": 4, "init_seed": 3, "learning_rate": 0.01,
+            "weight_decay": 0.0001, "adam_beta1": 0.9,
+            "adam_beta2": 0.999, "adam_eps": 1e-8
+          }
+        }"#;
+        let dir = std::env::temp_dir().join(format!("tfgnn-run-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg_path = dir.join("tiny.json");
+        std::fs::write(&cfg_path, text).unwrap();
+        let ckpt_path = dir.join("native.ckpt");
+
+        let mut cfg = RunConfig::new(&dir, "mpnn");
+        cfg.engine = EngineKind::Native;
+        cfg.config_path = Some(cfg_path);
+        cfg.epochs = 1;
+        cfg.max_steps_per_epoch = Some(4);
+        cfg.max_eval_batches = Some(2);
+        cfg.trainer_threads = 2;
+        cfg.checkpoint = Some(ckpt_path.clone());
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.epochs.len(), 1);
+        assert!(report.param_count > 0);
+        assert!(report.epochs[0].train.steps > 0, "pipeline fed the native engine");
+        assert!(report.epochs[0].train.loss().is_finite());
+        assert!(report.train_steps_per_sec > 0.0);
+        // The checkpoint carries full native state (params + moments +
+        // step), restorable by the codec.
+        let tensors = crate::train::checkpoint::load(&ckpt_path).unwrap();
+        assert!(tensors.iter().any(|(n, _)| n == "step"));
+        assert!(tensors.iter().any(|(n, _)| n.starts_with("adam_m.")));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
 }

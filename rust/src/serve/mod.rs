@@ -3,17 +3,27 @@
 //! The paper's serving story: host the exported model behind a service;
 //! the caller provides GraphTensors "perhaps via the in-memory
 //! sampler". [`InferenceServer`] implements exactly that shape — a
-//! vLLM-router-style dynamic batcher in front of the AOT `forward`
-//! program:
+//! vLLM-router-style dynamic batcher in front of a forward program:
 //!
 //! * clients submit root node ids ([`ServerHandle::submit`]);
 //! * the batcher thread collects up to `max_batch` requests or until
 //!   `max_wait` elapses, samples the whole wave of roots — **in
 //!   parallel** over the server's sampling pool when
-//!   [`ServeConfig::sampler`] asks for threads — merges + pads to the
-//!   static shape, and runs one `forward` execution;
+//!   [`ServeConfig::sampler`] asks for threads — and runs one forward
+//!   execution;
 //! * each request gets back its logits row, predicted class, and
 //!   timing (queue + batch + execute breakdown for the benches).
+//!
+//! The batcher loop is generic over the executor, with two backends:
+//! [`serve`] runs the AOT `forward` program on PJRT (merge + pad to the
+//! static shape first), [`serve_native`] runs the pure-Rust
+//! [`NativeModel`] forward per sampled subgraph — no padding, no
+//! artifacts, fully offline.
+//!
+//! Shutdown contract: dropping the client side stops *accepting*
+//! requests, but the batcher drains every already-submitted request
+//! before exiting — no response is silently dropped (regression-tested
+//! below).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -26,6 +36,7 @@ use crate::runtime::manifest::ModelEntry;
 use crate::runtime::{host_to_literal, literal_to_host, HostTensor, Program, Runtime};
 use crate::sampler::inmem::InMemorySampler;
 use crate::sampler::SamplerConfig;
+use crate::train::native::NativeModel;
 use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
 
@@ -76,7 +87,11 @@ impl Default for ServeConfig {
 pub struct ServeStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
-    pub skipped_oversize: AtomicU64,
+    /// Waves whose executor failed — every request in the wave got an
+    /// error reply. On the AOT backend the usual cause is a wave
+    /// exceeding the pad caps; the native backend never pads, so here
+    /// it means a sampling or forward error.
+    pub failed_batches: AtomicU64,
 }
 
 /// Client handle: submit requests, then `shutdown()`.
@@ -102,7 +117,9 @@ impl ServerHandle {
             .map_err(|_| Error::Runtime("server dropped request".into()))?
     }
 
-    /// Stop accepting requests and join the worker.
+    /// Stop accepting requests and join the worker. Requests submitted
+    /// before the call are still executed and answered (the batcher
+    /// drains its queue before exiting).
     pub fn shutdown(mut self) {
         drop(self.tx.take());
         if let Some(w) = self.worker.take() {
@@ -120,7 +137,78 @@ impl Drop for ServerHandle {
     }
 }
 
-/// Build and start the server.
+/// The dynamic batcher: collect a wave (first request blocks, then fill
+/// until `max_batch` or `max_wait`), execute it, fan the logits rows
+/// back out to the requesters.
+///
+/// `exec` maps an ordered wave of seeds to `(flat logits, classes)` —
+/// the one backend-specific step. Draining guarantee: `rx.recv()`
+/// keeps returning buffered requests after every sender is dropped, so
+/// shutdown only terminates the loop once the queue is empty.
+fn batcher_loop<E>(
+    rx: Receiver<Request>,
+    max_batch: usize,
+    max_wait: Duration,
+    stats: Arc<ServeStats>,
+    mut exec: E,
+) where
+    E: FnMut(&[u32]) -> Result<(Vec<f32>, usize)>,
+{
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders gone AND queue empty: shutdown
+        };
+        let mut wave = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while wave.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => wave.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        stats.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        let batch_size = wave.len();
+        let seeds: Vec<u32> = wave.iter().map(|r| r.seed).collect();
+        match exec(&seeds) {
+            Ok((flat, classes)) => {
+                for (k, req) in wave.into_iter().enumerate() {
+                    let row = flat[k * classes..(k + 1) * classes].to_vec();
+                    let predicted = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    let resp = Response {
+                        seed: req.seed,
+                        predicted,
+                        logits: row,
+                        latency: req.submitted.elapsed(),
+                        batch_size,
+                    };
+                    let _ = req.reply.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                stats.failed_batches.fetch_add(1, Ordering::Relaxed);
+                let msg = e.to_string();
+                for req in wave {
+                    let _ = req.reply.send(Err(Error::Runtime(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+/// Build and start the AOT server.
 ///
 /// PJRT handles are not `Send`, so the worker thread constructs its own
 /// client, compiles `forward`, and uploads the params itself; this
@@ -177,10 +265,24 @@ pub fn serve(
             match setup {
                 Ok((rt, forward, param_bufs)) => {
                     let _ = ready_tx.send(Ok(()));
-                    serve_loop(
-                        rx, rt, forward, param_bufs, sampler, pad, task, max_batch, max_wait,
-                        sampler_cfg, stats_w,
-                    );
+                    // The sampling pool outlives every wave: spawn once.
+                    let pool = if sampler_cfg.parallel() {
+                        Some(ThreadPool::new(sampler_cfg.threads))
+                    } else {
+                        None
+                    };
+                    batcher_loop(rx, max_batch, max_wait, stats_w, move |seeds| {
+                        execute_wave(
+                            &rt,
+                            &forward,
+                            &param_bufs,
+                            &sampler,
+                            pool.as_ref(),
+                            &pad,
+                            &task,
+                            seeds,
+                        )
+                    });
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
@@ -194,83 +296,49 @@ pub fn serve(
     Ok(ServerHandle { tx: Some(tx), worker: Some(worker), stats })
 }
 
-#[allow(clippy::too_many_arguments)]
-fn serve_loop(
-    rx: Receiver<Request>,
-    rt: Runtime,
-    forward: Program,
-    param_bufs: Vec<xla::Literal>,
+/// Start a server over the pure-Rust native model — no AOT artifacts,
+/// no PJRT, no padding: each sampled subgraph runs the fused forward
+/// directly and contributes its root's logits row.
+pub fn serve_native(
+    model: Arc<NativeModel>,
     sampler: Arc<InMemorySampler>,
-    pad: PadSpec,
     task: RootTask,
-    max_batch: usize,
-    max_wait: Duration,
-    sampler_cfg: SamplerConfig,
-    stats: Arc<ServeStats>,
-) {
-    // The sampling pool outlives every wave: spawn once at startup.
-    let pool = if sampler_cfg.parallel() {
-        Some(ThreadPool::new(sampler_cfg.threads))
-    } else {
-        None
-    };
-    loop {
-        // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders gone: shutdown
-        };
-        let mut wave = vec![first];
-        let deadline = Instant::now() + max_wait;
-        while wave.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => wave.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        stats.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        let batch_size = wave.len();
-        let result =
-            execute_wave(&rt, &forward, &param_bufs, &sampler, pool.as_ref(), &pad, &task, &wave);
-        match result {
-            Ok(logits) => {
-                let classes = logits.1;
-                for (k, req) in wave.into_iter().enumerate() {
-                    let row = logits.0[k * classes..(k + 1) * classes].to_vec();
-                    let predicted = row
+    cfg: ServeConfig,
+) -> ServerHandle {
+    let stats = Arc::new(ServeStats::default());
+    let (tx, rx) = channel::<Request>();
+    let stats_w = Arc::clone(&stats);
+    let worker = std::thread::Builder::new()
+        .name("tfgnn-serve-native".into())
+        .spawn(move || {
+            let pool = if cfg.sampler.parallel() {
+                Some(ThreadPool::new(cfg.sampler.threads))
+            } else {
+                None
+            };
+            let num_classes = model.cfg.num_classes;
+            batcher_loop(rx, cfg.max_batch, cfg.max_wait, stats_w, move |seeds| {
+                let graphs = match &pool {
+                    Some(p) => sampler.sample_batch_with_pool(seeds, p)?,
+                    None => seeds
                         .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, _)| i)
-                        .unwrap_or(0);
-                    let resp = Response {
-                        seed: req.seed,
-                        predicted,
-                        logits: row,
-                        latency: req.submitted.elapsed(),
-                        batch_size,
-                    };
-                    let _ = req.reply.send(Ok(resp));
+                        .map(|&s| sampler.sample(s))
+                        .collect::<Result<Vec<_>>>()?,
+                };
+                let mut flat = Vec::with_capacity(seeds.len() * num_classes);
+                for g in &graphs {
+                    let logits = model.forward_logits(g, &task.root_set, &[0])?;
+                    flat.extend_from_slice(&logits.data);
                 }
-            }
-            Err(e) => {
-                stats.skipped_oversize.fetch_add(1, Ordering::Relaxed);
-                let msg = e.to_string();
-                for req in wave {
-                    let _ = req.reply.send(Err(Error::Runtime(msg.clone())));
-                }
-            }
-        }
-    }
+                Ok((flat, num_classes))
+            });
+        })
+        .expect("spawn native server");
+    ServerHandle { tx: Some(tx), worker: Some(worker), stats }
 }
 
-/// Sample, merge, pad, execute one wave; returns (flat logits, classes).
+/// Sample, merge, pad, execute one wave on the AOT program; returns
+/// (flat logits, classes).
 #[allow(clippy::too_many_arguments)]
 fn execute_wave(
     rt: &Runtime,
@@ -280,14 +348,13 @@ fn execute_wave(
     pool: Option<&ThreadPool>,
     pad: &PadSpec,
     task: &RootTask,
-    wave: &[Request],
+    seeds: &[u32],
 ) -> Result<(Vec<f32>, usize)> {
     // The whole wave of roots samples as one batch — fanned out over
     // the sampling pool when configured, serially otherwise; either
     // way the subgraphs are identical, in request order.
-    let seeds: Vec<u32> = wave.iter().map(|r| r.seed).collect();
     let graphs = match pool {
-        Some(p) => sampler.sample_batch_with_pool(&seeds, p)?,
+        Some(p) => sampler.sample_batch_with_pool(seeds, p)?,
         None => seeds
             .iter()
             .map(|&s| sampler.sample(s))
@@ -324,4 +391,68 @@ fn execute_wave(
         return Err(Error::Runtime("logits not f32".into()));
     };
     Ok((data, shape[1]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::model_ref::ModelConfig;
+    use crate::sampler::spec::mag_sampling_spec_scaled;
+    use crate::synth::mag::{generate, MagConfig, Split};
+
+    fn native_server(max_batch: usize, max_wait: Duration) -> (ServerHandle, Vec<u32>, usize) {
+        let mag = MagConfig::tiny();
+        let ds = generate(&mag);
+        let seeds = ds.papers_in_split(Split::Train);
+        let store = Arc::new(ds.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+        let sampler = Arc::new(InMemorySampler::new(store, spec, 3).unwrap());
+        let cfg = ModelConfig::for_mag(&mag, 8, 8, 1);
+        let num_classes = cfg.num_classes;
+        let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
+        let handle = serve_native(
+            model,
+            sampler,
+            RootTask::default(),
+            ServeConfig { max_batch, max_wait, sampler: SamplerConfig::default() },
+        );
+        (handle, seeds, num_classes)
+    }
+
+    #[test]
+    fn native_server_predicts() {
+        let (handle, seeds, classes) = native_server(4, Duration::from_millis(2));
+        for &s in seeds.iter().take(6) {
+            let resp = handle.predict(s).unwrap();
+            assert_eq!(resp.seed, s);
+            assert_eq!(resp.logits.len(), classes);
+            assert!(resp.predicted < classes);
+            assert!(resp.logits.iter().all(|v| v.is_finite()));
+        }
+        assert!(handle.stats.requests.load(Ordering::Relaxed) >= 6);
+        handle.shutdown();
+    }
+
+    /// Regression: shutting the server down must NOT drop requests that
+    /// were already submitted — the batcher drains its queue before the
+    /// worker exits, so every pending reply channel gets a response.
+    #[test]
+    fn shutdown_drains_already_submitted_requests() {
+        // A long max_wait so most requests are still queued (or mid
+        // wave-collection) when shutdown drops the client sender.
+        let (handle, seeds, classes) = native_server(2, Duration::from_millis(50));
+        let n = 16usize;
+        let pending: Vec<_> =
+            (0..n).map(|i| handle.submit(seeds[i % seeds.len()])).collect();
+        // Drop the sender and join the batcher immediately.
+        handle.shutdown();
+        // Every submitted request must still have been answered.
+        for (i, rx) in pending.into_iter().enumerate() {
+            let resp = rx
+                .recv()
+                .unwrap_or_else(|_| panic!("request {i} dropped at shutdown"))
+                .unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+            assert_eq!(resp.logits.len(), classes);
+        }
+    }
 }

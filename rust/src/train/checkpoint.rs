@@ -102,7 +102,11 @@ pub fn load(path: &Path) -> Result<Vec<(String, HostTensor)>> {
         for _ in 0..rank {
             shape.push(read_u64(&mut i)? as usize);
         }
-        let elems = shape.iter().product::<usize>().max(1);
+        // NB: the empty product is 1, so rank-0 scalars come out right
+        // without a `.max(1)` — which would mis-read genuinely empty
+        // tensors (a shape containing 0) by consuming one phantom
+        // element and corrupting every slot after it.
+        let elems = shape.iter().product::<usize>();
         let t = match tag {
             0 => {
                 let raw = take(&mut i, elems * 4)?;
@@ -172,5 +176,118 @@ mod tests {
         std::fs::write(&p, b"hello world junk").unwrap();
         assert!(load(&p).is_err());
         std::fs::remove_file(&p).unwrap();
+    }
+
+    /// A zero-size tensor (a shape containing 0) must round-trip
+    /// without shifting the slots that follow it.
+    #[test]
+    fn zero_size_tensor_roundtrips() {
+        let params = vec![
+            ("empty".to_string(), HostTensor::F32(vec![0, 4], vec![])),
+            ("after".to_string(), HostTensor::F32(vec![2], vec![7.0, 8.0])),
+        ];
+        let p = tmp("empty.ckpt");
+        save(&p, &params).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(params, back);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    /// Bit-exact equality check that — unlike `PartialEq` — treats NaN
+    /// payloads as equal when their bit patterns are.
+    fn assert_bits_eq(a: &[(String, HostTensor)], b: &[(String, HostTensor)]) {
+        assert_eq!(a.len(), b.len());
+        for ((an, at), (bn, bt)) in a.iter().zip(b) {
+            assert_eq!(an, bn);
+            assert_eq!(at.shape(), bt.shape(), "{an}");
+            match (at, bt) {
+                (HostTensor::F32(_, x), HostTensor::F32(_, y)) => {
+                    assert_eq!(x.len(), y.len(), "{an}");
+                    for (v, w) in x.iter().zip(y) {
+                        assert_eq!(v.to_bits(), w.to_bits(), "{an}");
+                    }
+                }
+                (HostTensor::I32(_, x), HostTensor::I32(_, y)) => assert_eq!(x, y, "{an}"),
+                (HostTensor::I64(_, x), HostTensor::I64(_, y)) => assert_eq!(x, y, "{an}"),
+                _ => panic!("{an}: dtype changed in roundtrip"),
+            }
+        }
+    }
+
+    /// Property: full native-trainer state (`param.* ++ adam_m.* ++
+    /// adam_v.* ++ step`) round-trips bit-exactly through the codec —
+    /// including NaN/±inf/-0.0 payloads, which `assert_eq!` on floats
+    /// cannot see past (NaN != NaN) but training state can legitimately
+    /// contain.
+    #[test]
+    fn prop_native_trainer_state_roundtrips_with_nonfinite_payloads() {
+        use crate::ops::model_ref::Mat;
+        use crate::train::native::{state_from_tensors, state_to_tensors, Adam, AdamConfig};
+        use crate::util::proptest::check;
+        check("native state roundtrip incl NaN/±inf", 20, |rng| {
+            let special = [
+                f32::NAN,
+                f32::INFINITY,
+                f32::NEG_INFINITY,
+                -0.0,
+                0.0,
+                f32::MIN_POSITIVE, // subnormal neighborhood
+                3.4e38,
+            ];
+            let n_params = 1 + rng.uniform(4);
+            let mut names = Vec::new();
+            let mut params = Vec::new();
+            for i in 0..n_params {
+                let rows = 1 + rng.uniform(4);
+                let cols = 1 + rng.uniform(5);
+                let data: Vec<f32> = (0..rows * cols)
+                    .map(|_| {
+                        if rng.chance(0.3) {
+                            special[rng.uniform(special.len())]
+                        } else {
+                            rng.range_f32(-5.0, 5.0)
+                        }
+                    })
+                    .collect();
+                names.push(format!("layer{i}.w"));
+                params.push(Mat { rows, cols, data });
+            }
+            let mut adam = Adam::new(AdamConfig::default(), &params);
+            adam.steps = rng.uniform(10_000) as u64;
+            for m in adam.m.iter_mut().chain(adam.v.iter_mut()) {
+                for v in &mut m.data {
+                    *v = if rng.chance(0.2) {
+                        special[rng.uniform(special.len())]
+                    } else {
+                        rng.range_f32(-1.0, 1.0)
+                    };
+                }
+            }
+            let tensors = state_to_tensors(&names, &params, &adam);
+            let path = tmp(&format!("native-prop-{}", rng.uniform(1 << 30)));
+            save(&path, &tensors).unwrap();
+            let back = load(&path).unwrap();
+            std::fs::remove_file(&path).unwrap();
+            assert_bits_eq(&tensors, &back);
+            // And the decoded state reconstructs the trainer tensors.
+            let (p2, m2, v2, steps) =
+                state_from_tensors(&names, &params, &back).unwrap();
+            assert_eq!(steps, adam.steps);
+            for (a, b) in params.iter().zip(&p2) {
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            for (a, b) in adam.m.iter().zip(&m2) {
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            for (a, b) in adam.v.iter().zip(&v2) {
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        });
     }
 }

@@ -14,9 +14,15 @@ pub struct EpochMetrics {
 impl EpochMetrics {
     pub fn add(&mut self, m: StepMetrics) {
         self.steps += 1;
-        self.loss_sum += m.loss as f64 * m.weight as f64;
-        self.correct += m.correct as f64;
-        self.weight += m.weight as f64;
+        // A fully masked step reports weight 0 and its mean loss may be
+        // NaN (0/0 on the device side); folding `NaN * 0` into the sums
+        // would poison the whole epoch, so zero-weight steps count only
+        // as a step.
+        if m.weight > 0.0 {
+            self.loss_sum += m.loss as f64 * m.weight as f64;
+            self.correct += m.correct as f64;
+            self.weight += m.weight as f64;
+        }
     }
 
     /// Example-weighted mean loss.
@@ -76,5 +82,30 @@ mod tests {
         let m = EpochMetrics::default();
         assert_eq!(m.loss(), 0.0);
         assert_eq!(m.accuracy(), 0.0);
+    }
+
+    /// Regression: an empty/all-masked step (weight 0, loss possibly
+    /// NaN from a device-side 0/0) must neither make the aggregates NaN
+    /// nor divide by zero — loss()/accuracy() return 0.0, and later
+    /// real steps still aggregate correctly.
+    #[test]
+    fn zero_weight_step_does_not_poison_epoch() {
+        let mut m = EpochMetrics::default();
+        m.add(StepMetrics { loss: f32::NAN, correct: 0.0, weight: 0.0 });
+        assert_eq!(m.steps, 1);
+        assert_eq!(m.loss(), 0.0, "no NaN, no division by zero");
+        assert_eq!(m.accuracy(), 0.0);
+        assert_eq!(m.examples(), 0);
+        m.add(StepMetrics { loss: 2.0, correct: 3.0, weight: 4.0 });
+        assert!(m.loss().is_finite());
+        assert!((m.loss() - 2.0).abs() < 1e-9);
+        assert!((m.accuracy() - 0.75).abs() < 1e-9);
+        // An all-masked *epoch* (only zero-weight steps) is all zeros.
+        let mut e = EpochMetrics::default();
+        for _ in 0..3 {
+            e.add(StepMetrics { loss: f32::NAN, correct: 0.0, weight: 0.0 });
+        }
+        assert_eq!(e.loss(), 0.0);
+        assert_eq!(e.accuracy(), 0.0);
     }
 }

@@ -13,6 +13,7 @@
 
 pub mod checkpoint;
 pub mod metrics;
+pub mod native;
 
 use std::path::Path;
 

@@ -1,0 +1,600 @@
+//! Reverse-mode gradients for the message-passing kernel vocabulary.
+//!
+//! Hand-written vector-Jacobian products (VJPs) for every op the mpnn
+//! reference forward is built from: matmul, bias add, relu, column
+//! concat, row gather, segment sum/mean/max pooling, node→edge
+//! broadcast, and masked softmax cross-entropy. Each rule is validated
+//! against central finite differences in this module's tests (rel err
+//! ≤ 1e-3 at f32, h = 1e-2 — see DESIGN.md §Native training engine for
+//! how the tolerance was chosen), across multiple shapes including
+//! empty segments, zero-row inputs and masked-out roots.
+//!
+//! Conventions: `d<x>` is ∂L/∂x with the same shape as `x`; all rules
+//! are pure functions so the model backward composes them explicitly
+//! (the "tape" is the set of saved forward activations, not a graph of
+//! closures).
+
+use crate::ops::model_ref::Mat;
+
+/// VJP of `c = a @ w`: returns `(da, dw) = (dc @ wᵀ, aᵀ @ dc)`.
+pub fn matmul_vjp(a: &Mat, w: &Mat, dc: &Mat) -> (Mat, Mat) {
+    assert_eq!(dc.rows, a.rows, "matmul_vjp: dc rows");
+    assert_eq!(dc.cols, w.cols, "matmul_vjp: dc cols");
+    (dc.matmul(&w.transpose()), a.transpose().matmul(dc))
+}
+
+/// VJP of `z = x + b` (bias broadcast over rows): `db` = column sums.
+pub fn bias_vjp(dz: &Mat) -> Vec<f32> {
+    dz.col_sums()
+}
+
+/// VJP of `h = relu(z)`: pass the gradient where the forward passed the
+/// value. The forward (`Mat::relu`) zeroes `v < 0.0` and keeps `v >= 0`
+/// (including ±0), so the subgradient at exactly 0 is 1 — matched here.
+pub fn relu_vjp(z: &Mat, dh: &Mat) -> Mat {
+    assert_eq!(z.rows, dh.rows, "relu_vjp: rows");
+    assert_eq!(z.cols, dh.cols, "relu_vjp: cols");
+    let mut out = dh.clone();
+    for (o, &zv) in out.data.iter_mut().zip(&z.data) {
+        if zv < 0.0 {
+            *o = 0.0;
+        }
+    }
+    out
+}
+
+/// VJP of `c = concat_cols(parts)`: split `dc` back into the parts'
+/// column ranges. `widths` are the parts' column counts, in order.
+pub fn concat_cols_vjp(widths: &[usize], dc: &Mat) -> Vec<Mat> {
+    assert_eq!(widths.iter().sum::<usize>(), dc.cols, "concat_cols_vjp: widths");
+    let mut out: Vec<Mat> = widths.iter().map(|&w| Mat::zeros(dc.rows, w)).collect();
+    for r in 0..dc.rows {
+        let mut at = 0;
+        for (p, &w) in out.iter_mut().zip(widths) {
+            p.data[r * w..(r + 1) * w].copy_from_slice(&dc.row(r)[at..at + w]);
+            at += w;
+        }
+    }
+    out
+}
+
+/// VJP of `y = x.gather(idx)`: scatter-add the output rows back onto
+/// the `n_src` source rows (rows gathered k times receive k gradient
+/// contributions).
+pub fn gather_vjp(idx: &[i32], n_src: usize, dy: &Mat) -> Mat {
+    assert_eq!(idx.len(), dy.rows, "gather_vjp: rows");
+    let mut out = Mat::zeros(n_src, dy.cols);
+    for (r, &i) in idx.iter().enumerate() {
+        let dst = &mut out.data[i as usize * dy.cols..(i as usize + 1) * dy.cols];
+        for (o, &v) in dst.iter_mut().zip(dy.row(r)) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// VJP of `y = x.segment_sum(seg, n)`: every contributing row receives
+/// its segment's gradient row — a gather.
+pub fn segment_sum_vjp(seg: &[i32], dy: &Mat) -> Mat {
+    dy.gather(seg)
+}
+
+/// Forward: mean per segment over Mat rows (empty segments yield 0),
+/// matching [`crate::ops::segment_mean`]'s numerics (sum, then scale by
+/// `1.0 / count`).
+pub fn segment_mean_fwd(x: &Mat, seg: &[i32], n_seg: usize) -> Mat {
+    assert_eq!(x.rows, seg.len(), "segment_mean_fwd: rows");
+    let segs: Vec<u32> = seg.iter().map(|&s| s as u32).collect();
+    let data = crate::ops::segment_mean(&x.data, &segs, n_seg, x.cols);
+    Mat { rows: n_seg, cols: x.cols, data }
+}
+
+/// VJP of [`segment_mean_fwd`]: `dx[r] = dy[seg[r]] / count[seg[r]]`,
+/// using the same `1.0 / count` factor as the forward.
+pub fn segment_mean_vjp(seg: &[i32], n_seg: usize, dy: &Mat) -> Mat {
+    let mut counts = vec![0u32; n_seg];
+    for &s in seg {
+        counts[s as usize] += 1;
+    }
+    let inv: Vec<f32> =
+        counts.iter().map(|&c| if c > 0 { 1.0 / c as f32 } else { 0.0 }).collect();
+    let mut out = Mat::zeros(seg.len(), dy.cols);
+    for (r, &s) in seg.iter().enumerate() {
+        let f = inv[s as usize];
+        let src = dy.row(s as usize);
+        let dst = &mut out.data[r * dy.cols..(r + 1) * dy.cols];
+        for (o, &v) in dst.iter_mut().zip(src) {
+            *o = v * f;
+        }
+    }
+    out
+}
+
+/// Forward: max per segment (empty segments clamped to 0, exactly like
+/// [`crate::ops::segment_max`]), additionally returning the winning row
+/// per `(segment, column)` — `-1` for empty segments — which is the
+/// tape entry [`segment_max_vjp`] routes gradients along.
+pub fn segment_max_fwd(x: &Mat, seg: &[i32], n_seg: usize) -> (Mat, Vec<i32>) {
+    assert_eq!(x.rows, seg.len(), "segment_max_fwd: rows");
+    let d = x.cols;
+    let mut out = Mat { rows: n_seg, cols: d, data: vec![f32::NEG_INFINITY; n_seg * d] };
+    let mut argmax = vec![-1i32; n_seg * d];
+    let mut counts = vec![0u32; n_seg];
+    for (i, &s) in seg.iter().enumerate() {
+        let s = s as usize;
+        counts[s] += 1;
+        for k in 0..d {
+            let v = x.data[i * d + k];
+            let o = &mut out.data[s * d + k];
+            // NaN is sticky, ties keep the first occurrence — the same
+            // update rule as ops::segment_max.
+            if v.is_nan() || (!o.is_nan() && v > *o) {
+                *o = v;
+                argmax[s * d + k] = i as i32;
+            }
+        }
+    }
+    for (s, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            for k in 0..d {
+                out.data[s * d + k] = 0.0;
+            }
+        }
+    }
+    (out, argmax)
+}
+
+/// VJP of [`segment_max_fwd`]: route each `(segment, column)` gradient
+/// to the row that won the max (the standard subgradient; empty
+/// segments contribute nothing).
+pub fn segment_max_vjp(argmax: &[i32], n_rows: usize, dy: &Mat) -> Mat {
+    assert_eq!(argmax.len(), dy.rows * dy.cols, "segment_max_vjp: argmax len");
+    let d = dy.cols;
+    let mut out = Mat::zeros(n_rows, d);
+    for s in 0..dy.rows {
+        for k in 0..d {
+            let i = argmax[s * d + k];
+            if i >= 0 {
+                out.data[i as usize * d + k] += dy.data[s * d + k];
+            }
+        }
+    }
+    out
+}
+
+/// Forward: broadcast per-segment rows onto items (node→edge
+/// broadcast): `y[r] = values[seg[r]]` — a gather by segment id.
+pub fn broadcast_fwd(values: &Mat, seg: &[i32]) -> Mat {
+    values.gather(seg)
+}
+
+/// VJP of [`broadcast_fwd`]: sum item gradients back per segment.
+pub fn broadcast_vjp(seg: &[i32], n_src: usize, dy: &Mat) -> Mat {
+    dy.segment_sum(seg, n_src)
+}
+
+/// Output of [`softmax_xent_masked`].
+#[derive(Debug, Clone)]
+pub struct XentGrad {
+    /// `Σ_i mask_i · ce_i` — the *unnormalized* masked loss. Callers
+    /// that want a mean divide by [`XentGrad::weight`] (and scale
+    /// `dlogits` identically); keeping the sum lets a data-parallel
+    /// trainer all-reduce partial sums before normalizing once.
+    pub total_ce: f32,
+    /// `∂ total_ce / ∂ logits` — rows of masked-out roots are zero.
+    pub dlogits: Mat,
+    /// Per-root `mask_i · ce_i`, in row order (deterministic loss
+    /// summation across thread counts).
+    pub per_root: Vec<f32>,
+    /// `Σ_i mask_i · 1[argmax row i == label_i]`.
+    pub correct: f32,
+    /// `Σ_i mask_i`.
+    pub weight: f32,
+}
+
+/// Masked softmax cross-entropy over `[num_roots, num_classes]` logits
+/// with integer labels — the loss head of the train step, including the
+/// padded-batch root masking (§3.2: padding components get weight 0).
+///
+/// Numerically stable (per-row max subtraction). A fully masked batch
+/// (all weights 0) yields `total_ce == 0` and zero gradients — never
+/// NaN.
+pub fn softmax_xent_masked(logits: &Mat, labels: &[i32], mask: &[f32]) -> XentGrad {
+    assert_eq!(logits.rows, labels.len(), "softmax_xent: labels len");
+    assert_eq!(logits.rows, mask.len(), "softmax_xent: mask len");
+    let c = logits.cols;
+    assert!(c > 0, "softmax_xent: no classes");
+    let mut dlogits = Mat::zeros(logits.rows, c);
+    let mut total_ce = 0.0f32;
+    let mut per_root = Vec::with_capacity(logits.rows);
+    let mut correct = 0.0f32;
+    let mut weight = 0.0f32;
+    for r in 0..logits.rows {
+        let m = mask[r];
+        if m == 0.0 {
+            per_root.push(0.0);
+            continue;
+        }
+        let row = logits.row(r);
+        let label = labels[r] as usize;
+        assert!(label < c, "softmax_xent: label {label} out of range (classes {c})");
+        let mut mx = f32::NEG_INFINITY;
+        let mut pred = 0usize;
+        for (k, &v) in row.iter().enumerate() {
+            if v > mx {
+                mx = v;
+                pred = k;
+            }
+        }
+        let mut sumexp = 0.0f32;
+        for &v in row {
+            sumexp += (v - mx).exp();
+        }
+        let ce = sumexp.ln() - (row[label] - mx);
+        total_ce += m * ce;
+        per_root.push(m * ce);
+        if pred == label {
+            correct += m;
+        }
+        weight += m;
+        let drow = &mut dlogits.data[r * c..(r + 1) * c];
+        for (k, (o, &v)) in drow.iter_mut().zip(row).enumerate() {
+            let p = (v - mx).exp() / sumexp;
+            let onehot = if k == label { 1.0 } else { 0.0 };
+            *o = m * (p - onehot);
+        }
+    }
+    XentGrad { total_ce, dlogits, per_root, correct, weight }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Central finite difference of a scalar loss over a flat f32
+    /// parameter vector.
+    fn fd_grad(x: &[f32], h: f32, eval: &dyn Fn(&[f32]) -> f64) -> Vec<f64> {
+        (0..x.len())
+            .map(|i| {
+                let mut xp = x.to_vec();
+                xp[i] += h;
+                let mut xm = x.to_vec();
+                xm[i] -= h;
+                (eval(&xp) - eval(&xm)) / (2.0 * h as f64)
+            })
+            .collect()
+    }
+
+    /// rel err ≤ 1e-3 at f32 (the acceptance tolerance; DESIGN.md
+    /// documents the derivation: FD truncation O(h²) plus f32 rounding
+    /// noise O(eps·|L|/h) both sit well below 1e-3 at h = 1e-2 for
+    /// O(1) values).
+    fn check_close(name: &str, analytic: &[f32], numeric: &[f64]) {
+        assert_eq!(analytic.len(), numeric.len());
+        for (i, (&a, &nm)) in analytic.iter().zip(numeric).enumerate() {
+            let denom = (a as f64).abs().max(nm.abs()).max(1.0);
+            let e = (a as f64 - nm).abs() / denom;
+            assert!(e <= 1e-3, "{name}: grad[{i}] analytic {a} vs fd {nm} (rel {e:.2e})");
+        }
+    }
+
+    /// Weighted-sum loss `L = Σ w ∘ y` (f64 accumulation) turning any
+    /// matrix output into a scalar whose dY is exactly `w`.
+    fn wsum(y: &Mat, w: &[f32]) -> f64 {
+        y.data.iter().zip(w).map(|(&v, &wv)| v as f64 * wv as f64).sum()
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect()
+    }
+
+    /// Random values bounded away from 0 (the relu kink) so finite
+    /// differences with h = 1e-2 never cross it.
+    fn rand_vec_off_kink(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let v = rng.range_f32(0.05, 2.0);
+                if rng.chance(0.5) {
+                    -v
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    const H: f32 = 1e-2;
+
+    #[test]
+    fn gradcheck_matmul() {
+        for (seed, (n, k, m)) in
+            [(0u64, (3usize, 4usize, 5usize)), (1, (1, 1, 1)), (2, (6, 2, 3))]
+        {
+            let mut rng = Rng::new(100 + seed);
+            let a0 = rand_vec(&mut rng, n * k);
+            let w0 = rand_vec(&mut rng, k * m);
+            let wt = rand_vec(&mut rng, n * m); // loss weights
+            let eval_a = |x: &[f32]| -> f64 {
+                let a = Mat { rows: n, cols: k, data: x.to_vec() };
+                let w = Mat { rows: k, cols: m, data: w0.clone() };
+                wsum(&a.matmul(&w), &wt)
+            };
+            let eval_w = |x: &[f32]| -> f64 {
+                let a = Mat { rows: n, cols: k, data: a0.clone() };
+                let w = Mat { rows: k, cols: m, data: x.to_vec() };
+                wsum(&a.matmul(&w), &wt)
+            };
+            let a = Mat { rows: n, cols: k, data: a0.clone() };
+            let w = Mat { rows: k, cols: m, data: w0.clone() };
+            let dc = Mat { rows: n, cols: m, data: wt.clone() };
+            let (da, dw) = matmul_vjp(&a, &w, &dc);
+            check_close("matmul dA", &da.data, &fd_grad(&a0, H, &eval_a));
+            check_close("matmul dW", &dw.data, &fd_grad(&w0, H, &eval_w));
+        }
+    }
+
+    #[test]
+    fn gradcheck_bias() {
+        for (seed, (n, d)) in [(0u64, (4usize, 3usize)), (1, (1, 5)), (2, (7, 1))] {
+            let mut rng = Rng::new(200 + seed);
+            let x0 = rand_vec(&mut rng, n * d);
+            let b0 = rand_vec(&mut rng, d);
+            let wt = rand_vec(&mut rng, n * d);
+            let eval_b = |bv: &[f32]| -> f64 {
+                let mut x = Mat { rows: n, cols: d, data: x0.clone() };
+                x.add_bias(bv);
+                wsum(&x, &wt)
+            };
+            let dz = Mat { rows: n, cols: d, data: wt.clone() };
+            let db = bias_vjp(&dz);
+            check_close("bias db", &db, &fd_grad(&b0, H, &eval_b));
+        }
+    }
+
+    #[test]
+    fn gradcheck_relu() {
+        for (seed, (n, d)) in [(0u64, (4usize, 3usize)), (1, (1, 8)), (2, (6, 2))] {
+            let mut rng = Rng::new(300 + seed);
+            let z0 = rand_vec_off_kink(&mut rng, n * d);
+            let wt = rand_vec(&mut rng, n * d);
+            let eval = |zv: &[f32]| -> f64 {
+                let mut z = Mat { rows: n, cols: d, data: zv.to_vec() };
+                z.relu();
+                wsum(&z, &wt)
+            };
+            let z = Mat { rows: n, cols: d, data: z0.clone() };
+            let dh = Mat { rows: n, cols: d, data: wt.clone() };
+            let dz = relu_vjp(&z, &dh);
+            check_close("relu dz", &dz.data, &fd_grad(&z0, H, &eval));
+        }
+    }
+
+    #[test]
+    fn gradcheck_concat() {
+        for (seed, widths) in
+            [(0u64, vec![2usize, 3]), (1, vec![1, 1, 1]), (2, vec![4, 2, 3])]
+        {
+            let mut rng = Rng::new(400 + seed);
+            let n = 3usize;
+            let total: usize = widths.iter().sum();
+            let flat0: Vec<f32> = rand_vec(&mut rng, n * total); // all parts, concatenated per part
+            let wt = rand_vec(&mut rng, n * total);
+            let widths_c = widths.clone();
+            let eval = |x: &[f32]| -> f64 {
+                // x holds the parts back to back (part-major).
+                let mut parts = Vec::new();
+                let mut at = 0;
+                for &w in &widths_c {
+                    parts.push(Mat { rows: n, cols: w, data: x[at..at + n * w].to_vec() });
+                    at += n * w;
+                }
+                let refs: Vec<&Mat> = parts.iter().collect();
+                wsum(&Mat::concat_cols(&refs), &wt)
+            };
+            let dc = Mat { rows: n, cols: total, data: wt.clone() };
+            let dparts = concat_cols_vjp(&widths, &dc);
+            let analytic: Vec<f32> =
+                dparts.iter().flat_map(|p| p.data.iter().copied()).collect();
+            check_close("concat dparts", &analytic, &fd_grad(&flat0, H, &eval));
+        }
+    }
+
+    #[test]
+    fn gradcheck_gather() {
+        // Includes rows gathered multiple times and rows never gathered.
+        for (seed, (n_src, d, idx)) in [
+            (0u64, (4usize, 3usize, vec![0i32, 2, 2, 1])),
+            (1, (3, 1, vec![2, 2, 2, 2, 2])),
+            (2, (5, 2, Vec::new())), // empty gather
+        ] {
+            let mut rng = Rng::new(500 + seed);
+            let x0 = rand_vec(&mut rng, n_src * d);
+            let wt = rand_vec(&mut rng, idx.len() * d);
+            let idx_c = idx.clone();
+            let eval = |x: &[f32]| -> f64 {
+                let m = Mat { rows: n_src, cols: d, data: x.to_vec() };
+                wsum(&m.gather(&idx_c), &wt)
+            };
+            let dy = Mat { rows: idx.len(), cols: d, data: wt.clone() };
+            let dx = gather_vjp(&idx, n_src, &dy);
+            check_close("gather dx", &dx.data, &fd_grad(&x0, H, &eval));
+        }
+    }
+
+    #[test]
+    fn gradcheck_segment_sum() {
+        // Segment 3 stays empty in the first case; the last case has no
+        // rows at all.
+        for (seed, (n_seg, d, seg)) in [
+            (0u64, (4usize, 2usize, vec![0i32, 1, 1, 0, 2])),
+            (1, (2, 3, vec![1, 1, 1])),
+            (2, (3, 2, Vec::<i32>::new())),
+        ] {
+            let mut rng = Rng::new(600 + seed);
+            let x0 = rand_vec(&mut rng, seg.len() * d);
+            let wt = rand_vec(&mut rng, n_seg * d);
+            let seg_c = seg.clone();
+            let eval = |x: &[f32]| -> f64 {
+                let m = Mat { rows: seg_c.len(), cols: d, data: x.to_vec() };
+                wsum(&m.segment_sum(&seg_c, n_seg), &wt)
+            };
+            let dy = Mat { rows: n_seg, cols: d, data: wt.clone() };
+            let dx = segment_sum_vjp(&seg, &dy);
+            check_close("segment_sum dx", &dx.data, &fd_grad(&x0, H, &eval));
+        }
+    }
+
+    #[test]
+    fn gradcheck_segment_mean() {
+        for (seed, (n_seg, d, seg)) in [
+            (0u64, (4usize, 2usize, vec![0i32, 1, 1, 0, 2])), // segment 3 empty
+            (1, (2, 1, vec![0, 0, 0, 0])),
+            (2, (3, 3, vec![2])),
+        ] {
+            let mut rng = Rng::new(700 + seed);
+            let x0 = rand_vec(&mut rng, seg.len() * d);
+            let wt = rand_vec(&mut rng, n_seg * d);
+            let seg_c = seg.clone();
+            let eval = |x: &[f32]| -> f64 {
+                let m = Mat { rows: seg_c.len(), cols: d, data: x.to_vec() };
+                wsum(&segment_mean_fwd(&m, &seg_c, n_seg), &wt)
+            };
+            let dy = Mat { rows: n_seg, cols: d, data: wt.clone() };
+            let dx = segment_mean_vjp(&seg, n_seg, &dy);
+            check_close("segment_mean dx", &dx.data, &fd_grad(&x0, H, &eval));
+        }
+    }
+
+    #[test]
+    fn segment_fwd_wrappers_match_ops_layer() {
+        let mut rng = Rng::new(42);
+        for _ in 0..20 {
+            let n = rng.uniform(30);
+            let n_seg = 1 + rng.uniform(6);
+            let d = 1 + rng.uniform(4);
+            let data = rand_vec(&mut rng, n * d);
+            let seg: Vec<i32> = (0..n).map(|_| rng.uniform(n_seg) as i32).collect();
+            let segs_u: Vec<u32> = seg.iter().map(|&s| s as u32).collect();
+            let m = Mat { rows: n, cols: d, data: data.clone() };
+            let mean = segment_mean_fwd(&m, &seg, n_seg);
+            assert_eq!(mean.data, crate::ops::segment_mean(&data, &segs_u, n_seg, d));
+            let (mx, _arg) = segment_max_fwd(&m, &seg, n_seg);
+            assert_eq!(mx.data, crate::ops::segment_max(&data, &segs_u, n_seg, d));
+        }
+    }
+
+    #[test]
+    fn gradcheck_segment_max() {
+        // Values are spaced ≥ 0.6 apart within each (segment, column)
+        // group so the FD step (h = 1e-2) never flips the argmax.
+        for (seed, (n_seg, d, seg)) in [
+            (0u64, (3usize, 2usize, vec![0i32, 1, 1, 0, 1])), // segment 2 empty
+            (1, (2, 1, vec![0, 0, 1, 0])),
+            (2, (4, 3, vec![3, 3])),
+        ] {
+            let mut rng = Rng::new(800 + seed);
+            let n = seg.len();
+            let mut x0 = vec![0.0f32; n * d];
+            for k in 0..d {
+                let flip = if rng.chance(0.5) { -1.0f32 } else { 1.0 };
+                let mut rank_per_seg = vec![0u32; n_seg];
+                for (i, &s) in seg.iter().enumerate() {
+                    let rank = rank_per_seg[s as usize];
+                    rank_per_seg[s as usize] += 1;
+                    x0[i * d + k] = flip * (rank as f32 * 0.7 + rng.range_f32(0.0, 0.1));
+                }
+            }
+            let wt = rand_vec(&mut rng, n_seg * d);
+            let seg_c = seg.clone();
+            let eval = |x: &[f32]| -> f64 {
+                let m = Mat { rows: seg_c.len(), cols: d, data: x.to_vec() };
+                wsum(&segment_max_fwd(&m, &seg_c, n_seg).0, &wt)
+            };
+            let m = Mat { rows: n, cols: d, data: x0.clone() };
+            let (_y, argmax) = segment_max_fwd(&m, &seg, n_seg);
+            let dy = Mat { rows: n_seg, cols: d, data: wt.clone() };
+            let dx = segment_max_vjp(&argmax, n, &dy);
+            check_close("segment_max dx", &dx.data, &fd_grad(&x0, H, &eval));
+        }
+    }
+
+    #[test]
+    fn gradcheck_broadcast() {
+        for (seed, (n_src, d, seg)) in [
+            (0u64, (3usize, 2usize, vec![0i32, 2, 2, 1, 0])),
+            (1, (1, 4, vec![0, 0])),
+            (2, (4, 1, Vec::<i32>::new())),
+        ] {
+            let mut rng = Rng::new(900 + seed);
+            let x0 = rand_vec(&mut rng, n_src * d);
+            let wt = rand_vec(&mut rng, seg.len() * d);
+            let seg_c = seg.clone();
+            let eval = |x: &[f32]| -> f64 {
+                let m = Mat { rows: n_src, cols: d, data: x.to_vec() };
+                wsum(&broadcast_fwd(&m, &seg_c), &wt)
+            };
+            let dy = Mat { rows: seg.len(), cols: d, data: wt.clone() };
+            let dx = broadcast_vjp(&seg, n_src, &dy);
+            check_close("broadcast dx", &dx.data, &fd_grad(&x0, H, &eval));
+        }
+    }
+
+    #[test]
+    fn gradcheck_softmax_xent_with_masked_roots() {
+        // Three shapes; every case masks at least one root out (the
+        // padded-batch case) and uses a fractional weight.
+        for (seed, (r, c)) in [(0u64, (4usize, 5usize)), (1, (1, 3)), (2, (6, 2))] {
+            let mut rng = Rng::new(1000 + seed);
+            let x0 = rand_vec(&mut rng, r * c);
+            let labels: Vec<i32> = (0..r).map(|_| rng.uniform(c) as i32).collect();
+            let mut mask: Vec<f32> =
+                (0..r).map(|_| if rng.chance(0.3) { 0.0 } else { 1.0 }).collect();
+            mask[0] = 0.0; // always at least one masked root
+            if r > 1 {
+                mask[1] = 0.5; // fractional weight
+            }
+            let labels_c = labels.clone();
+            let mask_c = mask.clone();
+            let eval = |x: &[f32]| -> f64 {
+                let m = Mat { rows: r, cols: c, data: x.to_vec() };
+                softmax_xent_masked(&m, &labels_c, &mask_c).total_ce as f64
+            };
+            let m = Mat { rows: r, cols: c, data: x0.clone() };
+            let g = softmax_xent_masked(&m, &labels, &mask);
+            check_close("xent dlogits", &g.dlogits.data, &fd_grad(&x0, H, &eval));
+            // Masked rows contribute exactly zero gradient.
+            for k in 0..c {
+                assert_eq!(g.dlogits.data[k], 0.0, "masked row grad");
+            }
+            assert_eq!(g.per_root[0], 0.0);
+            assert_eq!(g.per_root.len(), r);
+        }
+    }
+
+    #[test]
+    fn xent_all_masked_is_zero_not_nan() {
+        let logits = Mat { rows: 3, cols: 4, data: vec![0.5; 12] };
+        let g = softmax_xent_masked(&logits, &[0, 1, 2], &[0.0, 0.0, 0.0]);
+        assert_eq!(g.total_ce, 0.0);
+        assert_eq!(g.weight, 0.0);
+        assert_eq!(g.correct, 0.0);
+        assert!(g.dlogits.data.iter().all(|&v| v == 0.0));
+        assert!(g.total_ce.is_finite());
+    }
+
+    #[test]
+    fn xent_metrics_count_correct_predictions() {
+        // Row 0 predicts class 1 (correct), row 1 predicts class 0
+        // (wrong, label 1), row 2 masked out.
+        let logits = Mat {
+            rows: 3,
+            cols: 2,
+            data: vec![-1.0, 2.0, 3.0, 0.0, 9.0, -9.0],
+        };
+        let g = softmax_xent_masked(&logits, &[1, 1, 0], &[1.0, 1.0, 0.0]);
+        assert_eq!(g.correct, 1.0);
+        assert_eq!(g.weight, 2.0);
+        assert!(g.total_ce > 0.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! Native training engine: reverse-mode gradients + a data-parallel
+//! Rust trainer for the message-passing kernels.
+//!
+//! The AOT path ([`crate::train::Trainer`]) needs lowered HLO programs
+//! and a PJRT runtime; this subsystem trains the same mpnn architecture
+//! end-to-end in pure Rust, so the whole §6.2 story — sample → pipeline
+//! → train step → checkpoint — runs offline and joins sampling in the
+//! bench-smoke perf trajectory (`benches/training.rs`).
+//!
+//! Three layers (see DESIGN.md §Native training engine):
+//! * [`grad`] — hand-written VJPs for every forward op (matmul, bias,
+//!   relu, concat, gather, segment sum/mean/max, broadcast, masked
+//!   softmax cross-entropy), each finite-difference checked;
+//! * [`optim`] — Adam with decoupled weight decay over flat `Vec<Mat>`
+//!   state, checkpoint-compatible with [`crate::train::checkpoint`];
+//! * [`trainer`] — [`NativeTrainer`], sharding a padded batch's roots
+//!   over [`crate::util::ThreadPool`] replicas with a deterministic
+//!   in-order all-reduce, plus [`train_step_oracle`], the serial
+//!   bit-for-bit reference.
+//!
+//! [`model`] holds the trainable [`NativeModel`] whose forward is
+//! composed from the staged functions of [`crate::ops::model_ref`] —
+//! the per-root logits are bit-for-bit those of the AOT bit-level
+//! reference over the padded batch.
+
+pub mod grad;
+pub mod model;
+pub mod optim;
+pub mod trainer;
+
+pub use model::{NativeModel, Tape};
+pub use optim::{state_from_tensors, state_to_tensors, Adam, AdamConfig};
+pub use trainer::{train_step_oracle, NativeTrainer};

@@ -1,0 +1,302 @@
+//! Adam with decoupled weight decay over flat `Vec<Mat>` state, plus
+//! the checkpoint layout of the native trainer.
+//!
+//! The optimizer state mirrors the AOT trainer's device layout
+//! (`params ++ adam_m ++ adam_v ++ step`) and round-trips through
+//! [`crate::train::checkpoint`]'s binary codec via
+//! [`state_to_tensors`] / [`state_from_tensors`]: every tensor is
+//! saved rank-2 under `param.<name>` / `adam_m.<name>` /
+//! `adam_v.<name>`, with the step counter as a scalar i64 `step` slot.
+
+use crate::ops::model_ref::Mat;
+use crate::runtime::HostTensor;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Adam hyper-parameters (decoupled weight decay, AdamW-style:
+/// `p -= lr · (m̂ / (√v̂ + eps) + wd · p)`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> AdamConfig {
+        AdamConfig { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+impl AdamConfig {
+    /// Read from a run config's `train` object (`learning_rate`,
+    /// `weight_decay`, `adam_beta1/2`, `adam_eps`; missing keys keep
+    /// the defaults).
+    pub fn from_train_config(cfg: &Json) -> Result<AdamConfig> {
+        let t = cfg.get("train")?;
+        let mut a = AdamConfig::default();
+        if let Some(v) = t.opt("learning_rate") {
+            a.lr = v.as_f64()? as f32;
+        }
+        if let Some(v) = t.opt("weight_decay") {
+            a.weight_decay = v.as_f64()? as f32;
+        }
+        if let Some(v) = t.opt("adam_beta1") {
+            a.beta1 = v.as_f64()? as f32;
+        }
+        if let Some(v) = t.opt("adam_beta2") {
+            a.beta2 = v.as_f64()? as f32;
+        }
+        if let Some(v) = t.opt("adam_eps") {
+            a.eps = v.as_f64()? as f32;
+        }
+        Ok(a)
+    }
+}
+
+/// Adam state: first/second moments per parameter, plus the step count.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    pub m: Vec<Mat>,
+    pub v: Vec<Mat>,
+    /// Completed steps (bias correction uses `t = steps + 1`).
+    pub steps: u64,
+}
+
+impl Adam {
+    /// Zero moments shaped like `params`.
+    pub fn new(cfg: AdamConfig, params: &[Mat]) -> Adam {
+        Adam {
+            cfg,
+            m: params.iter().map(Mat::zeros_like).collect(),
+            v: params.iter().map(Mat::zeros_like).collect(),
+            steps: 0,
+        }
+    }
+
+    /// Apply one update in place. `grads` must be parallel to `params`
+    /// (same order and shapes).
+    pub fn step(&mut self, params: &mut [Mat], grads: &[Mat]) {
+        assert_eq!(params.len(), grads.len(), "adam: grads len");
+        assert_eq!(params.len(), self.m.len(), "adam: state len");
+        let t = self.steps + 1;
+        let c = self.cfg;
+        let bc1 = 1.0 - c.beta1.powi(t as i32);
+        let bc2 = 1.0 - c.beta2.powi(t as i32);
+        for ((p, g), (m, v)) in
+            params.iter_mut().zip(grads).zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            assert_eq!(p.rows, g.rows, "adam: shape");
+            assert_eq!(p.cols, g.cols, "adam: shape");
+            for k in 0..p.data.len() {
+                let gk = g.data[k];
+                let mk = c.beta1 * m.data[k] + (1.0 - c.beta1) * gk;
+                let vk = c.beta2 * v.data[k] + (1.0 - c.beta2) * gk * gk;
+                m.data[k] = mk;
+                v.data[k] = vk;
+                let m_hat = mk / bc1;
+                let v_hat = vk / bc2;
+                let pk = p.data[k];
+                p.data[k] = pk - c.lr * (m_hat / (v_hat.sqrt() + c.eps) + c.weight_decay * pk);
+            }
+        }
+        self.steps = t;
+    }
+}
+
+/// Serialize native trainer state as named tensors in the AOT layout:
+/// `param.*` ++ `adam_m.*` ++ `adam_v.*` ++ `step`.
+pub fn state_to_tensors(
+    names: &[String],
+    params: &[Mat],
+    adam: &Adam,
+) -> Vec<(String, HostTensor)> {
+    let mat_t = |m: &Mat| HostTensor::F32(vec![m.rows, m.cols], m.data.clone());
+    let mut out = Vec::with_capacity(3 * names.len() + 1);
+    for (n, p) in names.iter().zip(params) {
+        out.push((format!("param.{n}"), mat_t(p)));
+    }
+    for (n, m) in names.iter().zip(&adam.m) {
+        out.push((format!("adam_m.{n}"), mat_t(m)));
+    }
+    for (n, v) in names.iter().zip(&adam.v) {
+        out.push((format!("adam_v.{n}"), mat_t(v)));
+    }
+    out.push(("step".to_string(), HostTensor::I64(vec![], vec![adam.steps as i64])));
+    out
+}
+
+/// Inverse of [`state_to_tensors`]: validate names/shapes against the
+/// model's canonical order and rebuild `(params, m, v, steps)`.
+pub fn state_from_tensors(
+    names: &[String],
+    shapes: &[Mat],
+    tensors: &[(String, HostTensor)],
+) -> Result<(Vec<Mat>, Vec<Mat>, Vec<Mat>, u64)> {
+    let n = names.len();
+    if tensors.len() != 3 * n + 1 {
+        return Err(Error::Codec(format!(
+            "native checkpoint has {} tensors, model wants {}",
+            tensors.len(),
+            3 * n + 1
+        )));
+    }
+    let read_block = |offset: usize, prefix: &str| -> Result<Vec<Mat>> {
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tname, t) = &tensors[offset + i];
+            let want = format!("{prefix}.{}", names[i]);
+            if tname != &want {
+                return Err(Error::Codec(format!(
+                    "native checkpoint slot {} is {tname:?}, expected {want:?}",
+                    offset + i
+                )));
+            }
+            let (shape, data) = match t {
+                HostTensor::F32(s, d) => (s, d),
+                _ => return Err(Error::Codec(format!("{want}: not f32"))),
+            };
+            let expect = &shapes[i];
+            if shape.as_slice() != &[expect.rows, expect.cols][..] {
+                return Err(Error::Codec(format!(
+                    "{want}: shape {shape:?}, model wants [{}, {}]",
+                    expect.rows, expect.cols
+                )));
+            }
+            out.push(Mat { rows: expect.rows, cols: expect.cols, data: data.clone() });
+        }
+        Ok(out)
+    };
+    let params = read_block(0, "param")?;
+    let m = read_block(n, "adam_m")?;
+    let v = read_block(2 * n, "adam_v")?;
+    let (sname, st) = &tensors[3 * n];
+    if sname != "step" {
+        return Err(Error::Codec(format!("last slot is {sname:?}, expected \"step\"")));
+    }
+    let steps = match st {
+        HostTensor::I64(_, d) if d.len() == 1 => d[0] as u64,
+        _ => return Err(Error::Codec("step slot is not a scalar i64".into())),
+    };
+    Ok((params, m, v, steps))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, f: impl Fn(usize) -> f32) -> Mat {
+        Mat { rows, cols, data: (0..rows * cols).map(f).collect() }
+    }
+
+    #[test]
+    fn adam_first_step_moves_against_gradient() {
+        let cfg = AdamConfig { lr: 0.1, ..AdamConfig::default() };
+        let mut params = vec![mat(1, 3, |_| 1.0)];
+        let grads = vec![mat(1, 3, |i| if i == 0 { 2.0 } else { -2.0 })];
+        let mut adam = Adam::new(cfg, &params);
+        adam.step(&mut params, &grads);
+        // First step: m̂/√v̂ ≈ sign(g), so p moves ≈ lr against g.
+        assert!(params[0].data[0] < 1.0);
+        assert!(params[0].data[1] > 1.0);
+        assert!((params[0].data[0] - 0.9).abs() < 1e-3);
+        assert_eq!(adam.steps, 1);
+    }
+
+    #[test]
+    fn adam_zero_grad_with_weight_decay_shrinks_params() {
+        let cfg = AdamConfig { lr: 0.1, weight_decay: 0.5, ..AdamConfig::default() };
+        let mut params = vec![mat(2, 2, |_| 1.0)];
+        let grads = vec![mat(2, 2, |_| 0.0)];
+        let mut adam = Adam::new(cfg, &params);
+        adam.step(&mut params, &grads);
+        for &v in &params[0].data {
+            assert!((v - 0.95).abs() < 1e-6, "decoupled decay: 1 - lr*wd, got {v}");
+        }
+    }
+
+    #[test]
+    fn adam_is_deterministic() {
+        let cfg = AdamConfig::default();
+        let run = || {
+            let mut params = vec![mat(2, 3, |i| i as f32 * 0.1), mat(1, 2, |_| -0.5)];
+            let mut adam = Adam::new(cfg, &params);
+            for s in 0..5 {
+                let grads = vec![
+                    mat(2, 3, |i| (i + s) as f32 * 0.01 - 0.02),
+                    mat(1, 2, |i| i as f32 - 0.5),
+                ];
+                adam.step(&mut params, &grads);
+            }
+            params
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            for (p, q) in x.data.iter().zip(&y.data) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn state_tensor_roundtrip() {
+        let names = vec!["a.w".to_string(), "a.b".to_string()];
+        let params = vec![mat(2, 2, |i| i as f32), mat(1, 2, |_| 0.5)];
+        let mut adam = Adam::new(AdamConfig::default(), &params);
+        adam.steps = 17;
+        adam.m[0].data[3] = -1.25;
+        adam.v[1].data[0] = 9.0;
+        let tensors = state_to_tensors(&names, &params, &adam);
+        assert_eq!(tensors.len(), 7);
+        assert_eq!(tensors[0].0, "param.a.w");
+        assert_eq!(tensors[2].0, "adam_m.a.w");
+        assert_eq!(tensors[6].0, "step");
+        let (p2, m2, v2, steps) = state_from_tensors(&names, &params, &tensors).unwrap();
+        assert_eq!(steps, 17);
+        assert_eq!(p2[0].data, params[0].data);
+        assert_eq!(m2[0].data[3], -1.25);
+        assert_eq!(v2[1].data[0], 9.0);
+    }
+
+    #[test]
+    fn state_from_tensors_rejects_mismatches() {
+        let names = vec!["w".to_string()];
+        let params = vec![mat(2, 2, |_| 0.0)];
+        let adam = Adam::new(AdamConfig::default(), &params);
+        let good = state_to_tensors(&names, &params, &adam);
+        // Wrong count.
+        assert!(state_from_tensors(&names, &params, &good[..3]).is_err());
+        // Wrong name.
+        let mut bad = good.clone();
+        bad[0].0 = "param.other".to_string();
+        assert!(state_from_tensors(&names, &params, &bad).is_err());
+        // Wrong shape.
+        let mut bad = good.clone();
+        bad[1].1 = HostTensor::F32(vec![1, 4], vec![0.0; 4]);
+        assert!(state_from_tensors(&names, &params, &bad).is_err());
+        // Missing step.
+        let mut bad = good;
+        bad[3] = ("notstep".to_string(), HostTensor::I64(vec![], vec![0]));
+        assert!(state_from_tensors(&names, &params, &bad).is_err());
+    }
+
+    #[test]
+    fn adam_config_from_train_json() {
+        let cfg = Json::parse(
+            r#"{"train": {"learning_rate": 0.01, "weight_decay": 0.1,
+                 "adam_beta1": 0.8, "adam_beta2": 0.9, "adam_eps": 1e-6,
+                 "num_classes": 4}}"#,
+        )
+        .unwrap();
+        let a = AdamConfig::from_train_config(&cfg).unwrap();
+        assert!((a.lr - 0.01).abs() < 1e-9);
+        assert!((a.weight_decay - 0.1).abs() < 1e-9);
+        assert!((a.beta1 - 0.8).abs() < 1e-9);
+        assert!((a.beta2 - 0.9).abs() < 1e-9);
+        assert!((a.eps - 1e-6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,470 @@
+//! Data-parallel native training (paper §6.2 without the AOT runtime).
+//!
+//! [`NativeTrainer::train_batch`] consumes the same [`Padded`] batches
+//! the pipeline emits for the AOT trainer, but runs entirely in Rust:
+//!
+//! 1. the padded batch's **real components are split back out** (one
+//!    rooted subgraph per component — padding contributes nothing and
+//!    is dropped, not masked);
+//! 2. components (≡ roots) are sharded into `threads` contiguous
+//!    **replica chunks**; each replica runs forward-with-tape, masked
+//!    softmax cross-entropy, and the tape backward over its chunk,
+//!    accumulating an *unnormalized* gradient sum in chunk order;
+//! 3. replica gradients are **all-reduced by deterministic in-order
+//!    summation** (replica 0 + replica 1 + …), then scaled by `1/N`;
+//! 4. one [`Adam`] step updates the parameters.
+//!
+//! Determinism contract (asserted in `tests/native_training.rs` and in
+//! `benches/training.rs` before any timing):
+//! * at 1 thread the step is **bit-for-bit** [`train_step_oracle`]
+//!   (the plain serial loop kept as the reference);
+//! * at any thread count the reported loss is the in-root-order sum of
+//!   per-root cross-entropies (replica chunks are contiguous), so a
+//!   single step's loss is bit-stable across thread counts; parameter
+//!   updates differ only by the reduction grouping (≤1e-5 rel drift).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::graph::pad::Padded;
+use crate::graph::GraphTensor;
+use crate::ops::model_ref::Mat;
+use crate::runtime::batch::RootTask;
+use crate::train::native::grad::softmax_xent_masked;
+use crate::train::native::model::NativeModel;
+use crate::train::native::optim::{state_from_tensors, state_to_tensors, Adam, AdamConfig};
+use crate::train::StepMetrics;
+use crate::util::threadpool::ThreadPool;
+use crate::{Error, Result};
+
+/// One replica's contribution: unnormalized gradient sums, per-root
+/// cross-entropies (in chunk order) and the correct-prediction count.
+struct ChunkOut {
+    grads: Vec<Mat>,
+    ces: Vec<f64>,
+    correct: f32,
+}
+
+/// Forward+backward over one contiguous chunk of components. This is
+/// the exact per-replica computation — the serial oracle is this
+/// function applied to the whole batch as one chunk.
+fn chunk_grad(
+    model: &NativeModel,
+    root_set: &str,
+    comps: &[GraphTensor],
+    labels: &[i64],
+) -> Result<ChunkOut> {
+    let mut grads = model.zeros_grads();
+    let mut ces = Vec::with_capacity(comps.len());
+    let mut correct = 0.0f32;
+    for (g, &label) in comps.iter().zip(labels) {
+        let label = check_label(model, label)?;
+        let (logits, tape) = model.forward_tape(g, root_set, &[0])?;
+        let x = softmax_xent_masked(&logits, &[label], &[1.0]);
+        model.backward(g, &tape, &x.dlogits, root_set, &mut grads)?;
+        ces.push(x.total_ce as f64);
+        correct += x.correct;
+    }
+    Ok(ChunkOut { grads, ces, correct })
+}
+
+/// Forward-only counterpart of [`chunk_grad`]: per-root cross-entropies
+/// (in chunk order) and the correct count.
+fn chunk_eval(
+    model: &NativeModel,
+    root_set: &str,
+    comps: &[GraphTensor],
+    labels: &[i64],
+) -> Result<(Vec<f64>, f32)> {
+    let mut ces = Vec::with_capacity(comps.len());
+    let mut correct = 0.0f32;
+    for (g, &label) in comps.iter().zip(labels) {
+        let label = check_label(model, label)?;
+        let logits = model.forward_logits(g, root_set, &[0])?;
+        let x = softmax_xent_masked(&logits, &[label], &[1.0]);
+        ces.push(x.total_ce as f64);
+        correct += x.correct;
+    }
+    Ok((ces, correct))
+}
+
+/// Reject labels outside the model's class range as a structured error
+/// (the loss op asserts on its contract; a bad label here usually means
+/// `train.num_classes` and `dataset.num_classes` disagree in the run
+/// config, which must not abort a replica thread mid-training).
+fn check_label(model: &NativeModel, label: i64) -> Result<i32> {
+    let c = model.cfg.num_classes;
+    if label < 0 || label as usize >= c {
+        return Err(Error::Graph(format!(
+            "root label {label} outside model's {c} classes — do \
+             train.num_classes and dataset.num_classes agree in the config?"
+        )));
+    }
+    Ok(label as i32)
+}
+
+/// Partition components+labels into contiguous chunks of `size` — the
+/// replica sharding used by both train and eval (contiguity is what
+/// keeps per-root CE order, and therefore the reported loss, identical
+/// at every thread count).
+fn split_chunks(
+    size: usize,
+    comps: Vec<GraphTensor>,
+    labels: Vec<i64>,
+) -> Vec<(Vec<GraphTensor>, Vec<i64>)> {
+    let mut items = Vec::new();
+    let mut comps_it = comps.into_iter();
+    let mut labels_it = labels.into_iter();
+    loop {
+        let c: Vec<GraphTensor> = comps_it.by_ref().take(size).collect();
+        if c.is_empty() {
+            break;
+        }
+        let l: Vec<i64> = labels_it.by_ref().take(size).collect();
+        items.push((c, l));
+    }
+    items
+}
+
+/// Split a padded batch into its real components and their root labels
+/// (root = node 0 of the root set per component, the sampler's
+/// "seed first" convention).
+fn real_components(
+    padded: &Padded,
+    task: &RootTask,
+) -> Result<(Vec<GraphTensor>, Vec<i64>)> {
+    let mut comps = crate::graph::batch::split(&padded.graph)?;
+    comps.truncate(padded.num_real_components);
+    let mut labels = Vec::with_capacity(comps.len());
+    for comp in &comps {
+        let ns = comp.node_set(&task.root_set)?;
+        if ns.total() == 0 {
+            return Err(Error::Graph(format!(
+                "component has no {:?} root node",
+                task.root_set
+            )));
+        }
+        let (_, data) = ns.feature(&task.label_feature)?.as_i64()?;
+        labels.push(data[0]);
+    }
+    Ok((comps, labels))
+}
+
+/// The native data-parallel trainer: model + Adam state + replica pool.
+pub struct NativeTrainer {
+    /// Shared with in-flight replica closures during a step; updated
+    /// via copy-on-write after the all-reduce.
+    model: Arc<NativeModel>,
+    pub opt: Adam,
+    pub task: RootTask,
+    threads: usize,
+    pool: Option<ThreadPool>,
+    pub steps_done: u64,
+}
+
+impl NativeTrainer {
+    /// `threads == 0 | 1` trains serially (the oracle path); `threads
+    /// > 1` spawns that many replica workers once, reused every step.
+    pub fn new(
+        model: NativeModel,
+        adam: AdamConfig,
+        task: RootTask,
+        threads: usize,
+    ) -> NativeTrainer {
+        let opt = Adam::new(adam, &model.params);
+        let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
+        NativeTrainer {
+            model: Arc::new(model),
+            opt,
+            task,
+            threads: threads.max(1),
+            pool,
+            steps_done: 0,
+        }
+    }
+
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// One data-parallel training step over a padded batch.
+    pub fn train_batch(&mut self, padded: &Padded) -> Result<StepMetrics> {
+        let (comps, labels) = real_components(padded, &self.task)?;
+        let n = comps.len();
+        if n == 0 {
+            return Ok(StepMetrics { loss: 0.0, correct: 0.0, weight: 0.0 });
+        }
+        let chunks = self.threads.min(n);
+        let outs: Vec<ChunkOut> = if chunks > 1 {
+            let pool = self.pool.as_ref().expect("pool exists when threads > 1");
+            let items = split_chunks(n.div_ceil(chunks), comps, labels);
+            let model = Arc::clone(&self.model);
+            let root_set = self.task.root_set.clone();
+            pool.map(items, move |(c, l)| chunk_grad(&model, &root_set, &c, &l))
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            vec![chunk_grad(&self.model, &self.task.root_set, &comps, &labels)?]
+        };
+
+        // All-reduce: strictly in replica-index order, so the summation
+        // tree depends only on the chunking, never on scheduling.
+        let mut outs_it = outs.into_iter();
+        let first = outs_it.next().expect("at least one chunk");
+        let mut grads = first.grads;
+        let mut ces = first.ces;
+        let mut correct = first.correct;
+        for o in outs_it {
+            for (a, b) in grads.iter_mut().zip(&o.grads) {
+                a.add_assign(b);
+            }
+            ces.extend(o.ces);
+            correct += o.correct;
+        }
+        // Mean over the batch's real roots, applied once after the
+        // reduce (identical in the serial oracle).
+        let inv = 1.0f32 / n as f32;
+        for gm in &mut grads {
+            gm.scale(inv);
+        }
+        // Loss: in-root-order f64 sum — ces is in global component
+        // order because chunks are contiguous.
+        let loss_sum: f64 = ces.iter().sum();
+
+        let model = Arc::make_mut(&mut self.model);
+        self.opt.step(&mut model.params, &grads);
+        self.steps_done += 1;
+        Ok(StepMetrics {
+            loss: (loss_sum / n as f64) as f32,
+            correct,
+            weight: n as f32,
+        })
+    }
+
+    /// Evaluate a padded batch (forward only, no state change),
+    /// replica-parallel like training.
+    pub fn eval_batch(&self, padded: &Padded) -> Result<StepMetrics> {
+        let (comps, labels) = real_components(padded, &self.task)?;
+        let n = comps.len();
+        if n == 0 {
+            return Ok(StepMetrics { loss: 0.0, correct: 0.0, weight: 0.0 });
+        }
+        let chunks = self.threads.min(n);
+        let parts: Vec<(Vec<f64>, f32)> = if chunks > 1 {
+            let pool = self.pool.as_ref().expect("pool exists when threads > 1");
+            let items = split_chunks(n.div_ceil(chunks), comps, labels);
+            let model = Arc::clone(&self.model);
+            let root_set = self.task.root_set.clone();
+            pool.map(items, move |(c, l)| chunk_eval(&model, &root_set, &c, &l))
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            vec![chunk_eval(&self.model, &self.task.root_set, &comps, &labels)?]
+        };
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f32;
+        for (ces, c) in parts {
+            loss_sum += ces.iter().sum::<f64>();
+            correct += c;
+        }
+        Ok(StepMetrics {
+            loss: (loss_sum / n as f64) as f32,
+            correct,
+            weight: n as f32,
+        })
+    }
+
+    /// Save full trainer state (`param.* ++ adam_m.* ++ adam_v.* ++
+    /// step`) through the shared binary checkpoint codec.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tensors = state_to_tensors(&self.model.names, &self.model.params, &self.opt);
+        crate::train::checkpoint::save(path, &tensors)
+    }
+
+    /// Restore state saved by [`Self::save`] (names and shapes must
+    /// match this trainer's model).
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        let tensors = crate::train::checkpoint::load(path)?;
+        let (params, m, v, steps) =
+            state_from_tensors(&self.model.names, &self.model.params, &tensors)?;
+        let model = Arc::make_mut(&mut self.model);
+        model.params = params;
+        self.opt.m = m;
+        self.opt.v = v;
+        self.opt.steps = steps;
+        self.steps_done = steps;
+        Ok(())
+    }
+}
+
+/// The serial oracle: the same step math as a 1-thread
+/// [`NativeTrainer::train_batch`], written as one plain loop with no
+/// pool, no chunking and no copy-on-write — kept as the bit-for-bit
+/// reference the parallel path is tested against.
+pub fn train_step_oracle(
+    model: &mut NativeModel,
+    opt: &mut Adam,
+    padded: &Padded,
+    task: &RootTask,
+) -> Result<StepMetrics> {
+    let (comps, labels) = real_components(padded, task)?;
+    let n = comps.len();
+    if n == 0 {
+        return Ok(StepMetrics { loss: 0.0, correct: 0.0, weight: 0.0 });
+    }
+    let mut grads = model.zeros_grads();
+    let mut ces: Vec<f64> = Vec::with_capacity(n);
+    let mut correct = 0.0f32;
+    for (g, &label) in comps.iter().zip(&labels) {
+        let label = check_label(model, label)?;
+        let (logits, tape) = model.forward_tape(g, &task.root_set, &[0])?;
+        let x = softmax_xent_masked(&logits, &[label], &[1.0]);
+        model.backward(g, &tape, &x.dlogits, &task.root_set, &mut grads)?;
+        ces.push(x.total_ce as f64);
+        correct += x.correct;
+    }
+    let inv = 1.0f32 / n as f32;
+    for gm in &mut grads {
+        gm.scale(inv);
+    }
+    let loss_sum: f64 = ces.iter().sum();
+    opt.step(&mut model.params, &grads);
+    Ok(StepMetrics { loss: (loss_sum / n as f64) as f32, correct, weight: n as f32 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::pad::{fit_or_skip, PadSpec};
+    use crate::ops::model_ref::ModelConfig;
+    use crate::sampler::inmem::InMemorySampler;
+    use crate::sampler::spec::mag_sampling_spec_scaled;
+    use crate::synth::mag::{generate, MagConfig};
+
+    fn tiny_batches(batch: usize, count: usize) -> Vec<Padded> {
+        let ds = generate(&MagConfig::tiny());
+        let store = Arc::new(ds.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+        let sampler = InMemorySampler::new(store, spec, 3).unwrap();
+        let probe: Vec<_> = (0..8u32).map(|s| sampler.sample(s).unwrap()).collect();
+        let pad = PadSpec::fit(&probe.iter().collect::<Vec<_>>(), batch, 2.5);
+        let mut out = Vec::new();
+        let mut seed = 0u32;
+        while out.len() < count {
+            let graphs: Vec<_> =
+                (0..batch).map(|i| sampler.sample(seed + i as u32).unwrap()).collect();
+            seed += batch as u32;
+            let merged = crate::graph::batch::merge(&graphs).unwrap();
+            if let Some(p) = fit_or_skip(&merged, &pad) {
+                out.push(p);
+            }
+        }
+        out
+    }
+
+    fn tiny_model() -> NativeModel {
+        let cfg = ModelConfig::for_mag(&MagConfig::tiny(), 8, 8, 2);
+        NativeModel::init(cfg, 11).unwrap()
+    }
+
+    #[test]
+    fn empty_real_components_is_a_zero_weight_step() {
+        // A batch whose every component is padding (num_real = 0).
+        let batches = tiny_batches(2, 1);
+        let mut padded = batches[0].clone();
+        padded.num_real_components = 0;
+        let mut t = NativeTrainer::new(tiny_model(), AdamConfig::default(), RootTask::default(), 1);
+        let m = t.train_batch(&padded).unwrap();
+        assert_eq!(m.weight, 0.0);
+        assert_eq!(m.loss, 0.0);
+        assert!(m.loss.is_finite());
+        assert_eq!(t.steps_done, 0, "no step applied on an empty batch");
+        let e = t.eval_batch(&padded).unwrap();
+        assert_eq!(e.weight, 0.0);
+    }
+
+    /// A label outside the model's class range (train.num_classes and
+    /// dataset.num_classes disagreeing in a config) must surface as a
+    /// structured error, not a panic inside a replica thread.
+    #[test]
+    fn out_of_range_label_is_an_error_not_a_panic() {
+        let ds = generate(&MagConfig::tiny());
+        // Pick roots whose labels provably exceed the shrunken range.
+        let bad_seeds: Vec<u32> = ds
+            .labels
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l >= 2)
+            .take(2)
+            .map(|(i, _)| i as u32)
+            .collect();
+        assert_eq!(bad_seeds.len(), 2, "tiny MAG should have labels ≥ 2");
+        let store = Arc::new(ds.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+        let sampler = InMemorySampler::new(store, spec, 3).unwrap();
+        let graphs: Vec<_> =
+            bad_seeds.iter().map(|&s| sampler.sample(s).unwrap()).collect();
+        let pad = PadSpec::fit(&graphs.iter().collect::<Vec<_>>(), 2, 2.0);
+        let merged = crate::graph::batch::merge(&graphs).unwrap();
+        let padded = fit_or_skip(&merged, &pad).unwrap();
+
+        let mut cfg = ModelConfig::for_mag(&MagConfig::tiny(), 8, 8, 1);
+        cfg.num_classes = 2; // tiny MAG labels run 0..4
+        let model = NativeModel::init(cfg, 11).unwrap();
+        let mut t = NativeTrainer::new(model, AdamConfig::default(), RootTask::default(), 2);
+        let err = t.train_batch(&padded).expect_err("bad label must error");
+        assert!(err.to_string().contains("num_classes"), "{err}");
+        let err = t.eval_batch(&padded).expect_err("bad label must error in eval");
+        assert!(err.to_string().contains("num_classes"), "{err}");
+    }
+
+    #[test]
+    fn parallel_eval_matches_serial_eval() {
+        let batches = tiny_batches(4, 2);
+        let model = tiny_model();
+        let t1 = NativeTrainer::new(model.clone(), AdamConfig::default(), RootTask::default(), 1);
+        let t4 = NativeTrainer::new(model, AdamConfig::default(), RootTask::default(), 4);
+        for b in &batches {
+            let a = t1.eval_batch(b).unwrap();
+            let p = t4.eval_batch(b).unwrap();
+            assert_eq!(a.loss.to_bits(), p.loss.to_bits(), "in-order ce sum is thread-stable");
+            assert_eq!(a.correct, p.correct);
+            assert_eq!(a.weight, p.weight);
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_restores_training_state() {
+        let batches = tiny_batches(4, 2);
+        let mut t = NativeTrainer::new(tiny_model(), AdamConfig::default(), RootTask::default(), 2);
+        t.train_batch(&batches[0]).unwrap();
+        t.train_batch(&batches[1]).unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("tfgnn-native-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        t.save(&path).unwrap();
+        let after_save = t.train_batch(&batches[0]).unwrap();
+
+        let mut t2 = NativeTrainer::new(tiny_model(), AdamConfig::default(), RootTask::default(), 2);
+        t2.load(&path).unwrap();
+        assert_eq!(t2.steps_done, 2);
+        assert_eq!(t2.opt.steps, 2);
+        let after_load = t2.train_batch(&batches[0]).unwrap();
+        assert_eq!(
+            after_save.loss.to_bits(),
+            after_load.loss.to_bits(),
+            "restored trainer continues identically"
+        );
+        for (a, b) in t.model().params.iter().zip(&t2.model().params) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
