@@ -1,0 +1,134 @@
+//! Bench: the GraphUpdate layer zoo (forward / backward throughput per
+//! model type).
+//!
+//! Times one `NativeTrainer` train step (forward-with-tape, reverse
+//! sweep, all-reduce, Adam) and the forward-only eval path for **all
+//! four model types** — mpnn, gcn, sage, gatv2 — over pipeline-shaped
+//! padded batches of a synth-MAG graph, at 1 and 8 replica threads.
+//! **Parity is asserted before any timing**: for every architecture the
+//! 1-thread step must match the serial oracle bit-for-bit. Every row
+//! lands in `BENCH_models.json` for the perf-tracking CI lane.
+//!
+//! Run: `cargo bench --bench model_layers`
+//! (set `TFGNN_BENCH_SMOKE=1` for the short CI mode).
+
+use std::sync::Arc;
+
+use tfgnn::graph::pad::{fit_or_skip, Padded, PadSpec};
+use tfgnn::ops::model_ref::ModelConfig;
+use tfgnn::runtime::batch::RootTask;
+use tfgnn::sampler::inmem::InMemorySampler;
+use tfgnn::synth::mag::{generate, MagConfig, Split};
+use tfgnn::train::native::{train_step_oracle, Adam, AdamConfig, NativeModel, NativeTrainer};
+use tfgnn::util::stats::{smoke, Bench, BenchReport};
+
+fn main() {
+    let (papers, authors, hidden, layers, n_batches) =
+        if smoke() { (800, 1_200, 8, 1, 1) } else { (2_000, 3_000, 32, 2, 4) };
+    let batch = 8usize;
+    let mag = MagConfig {
+        num_papers: papers,
+        num_authors: authors,
+        num_institutions: 100,
+        num_fields: 60,
+        ..MagConfig::default()
+    };
+    let ds = generate(&mag);
+    let store = Arc::new(ds.store);
+    let spec = tfgnn::sampler::spec::mag_sampling_spec_scaled(&store.schema, 0.25).unwrap();
+    let sampler = InMemorySampler::new(Arc::clone(&store), spec, 42).unwrap();
+    let train_seeds = ds.papers_in_split(Split::Train);
+
+    // Padded batches exactly as the pipeline would emit them.
+    let probe: Vec<_> =
+        train_seeds.iter().take(16).map(|&s| sampler.sample(s).unwrap()).collect();
+    let pad = PadSpec::fit(&probe.iter().collect::<Vec<_>>(), batch, 2.0);
+    let mut batches: Vec<Padded> = Vec::new();
+    let mut at = 0usize;
+    while batches.len() < n_batches && at + batch <= train_seeds.len() {
+        let graphs: Vec<_> = train_seeds[at..at + batch]
+            .iter()
+            .map(|&s| sampler.sample(s).unwrap())
+            .collect();
+        at += batch;
+        let merged = tfgnn::graph::batch::merge(&graphs).unwrap();
+        if let Some(p) = fit_or_skip(&merged, &pad) {
+            batches.push(p);
+        }
+    }
+    assert!(!batches.is_empty(), "no batch fit the pad spec");
+    let roots_per_pass: usize = batches.iter().map(|b| b.num_real_components).sum();
+
+    let task = RootTask::default();
+    let adam = AdamConfig::default();
+    let bench = Bench::from_env(1, 5);
+    let mut report = BenchReport::new("models");
+
+    for arch in ["mpnn", "gcn", "sage", "gatv2"] {
+        let cfg = ModelConfig::for_mag(&mag, hidden, hidden, layers).with_arch(arch);
+        let model0 = NativeModel::init(cfg, 3).unwrap();
+        println!(
+            "\n# {arch}: {} params, batch {batch}, {} prepared batches",
+            model0.param_elems(),
+            batches.len()
+        );
+
+        // ---- parity gate: 1-thread step == serial oracle, bit-for-bit.
+        let mut oracle_model = model0.clone();
+        let mut oracle_opt = Adam::new(adam, &oracle_model.params);
+        let m_oracle =
+            train_step_oracle(&mut oracle_model, &mut oracle_opt, &batches[0], &task).unwrap();
+        let mut t1 = NativeTrainer::new(model0.clone(), adam, task.clone(), 1);
+        let m1 = t1.train_batch(&batches[0]).unwrap();
+        assert_eq!(
+            m1.loss.to_bits(),
+            m_oracle.loss.to_bits(),
+            "{arch}: 1-thread loss == serial oracle, bit-for-bit"
+        );
+        for ((name, a), b) in
+            t1.model().names.iter().zip(&t1.model().params).zip(&oracle_model.params)
+        {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{arch}: param {name} diverged");
+            }
+        }
+        println!("# {arch}: parity gate passed (1t == oracle, bit)");
+
+        // ---- train step (forward + backward + all-reduce + Adam).
+        for threads in [1usize, 8] {
+            let mut tr = NativeTrainer::new(model0.clone(), adam, task.clone(), threads);
+            let s = bench.throughput(roots_per_pass, || {
+                for b in &batches {
+                    tr.train_batch(b).unwrap();
+                }
+            });
+            report.row(
+                "model",
+                &format!("{arch}_step batch={batch} hidden={hidden} layers={layers}"),
+                threads,
+                &s,
+                "items/s",
+            );
+        }
+
+        // ---- forward only (the serving/eval path).
+        for threads in [1usize, 8] {
+            let tr = NativeTrainer::new(model0.clone(), adam, task.clone(), threads);
+            let s = bench.throughput(roots_per_pass, || {
+                for b in &batches {
+                    tr.eval_batch(b).unwrap();
+                }
+            });
+            report.row(
+                "model",
+                &format!("{arch}_forward batch={batch} hidden={hidden} layers={layers}"),
+                threads,
+                &s,
+                "items/s",
+            );
+        }
+    }
+
+    let path = report.write().expect("write bench json");
+    println!("\nwrote {}", path.display());
+}

@@ -161,8 +161,15 @@ pub fn run_sampling(
                 report.stats.adjacency_rpcs += stats.adjacency_rpcs;
                 report.stats.retried_rpcs += stats.retried_rpcs;
                 report.stats.subgraphs += stats.subgraphs;
-                slots[item.index] = Some(graphs);
-                done += 1;
+                // A requeued item can in principle complete twice (the
+                // original worker finishing after the requeue): keep
+                // the first result and do NOT count `done` twice —
+                // otherwise the loop could exit with another slot
+                // still empty.
+                if slots[item.index].is_none() {
+                    slots[item.index] = Some(graphs);
+                    done += 1;
+                }
             }
             Err(e) => {
                 report.worker_crashes += 1;
@@ -188,8 +195,28 @@ pub fn run_sampling(
         let _ = w.join();
     }
     report.items = n_items;
-    let graphs: Vec<GraphTensor> = slots.into_iter().flat_map(|s| s.unwrap()).collect();
+    let graphs = collect_slots(slots)?;
     Ok((graphs, report))
+}
+
+/// Flatten the per-item result slots in seed order. An unfilled slot
+/// means a worker died (or a bookkeeping bug dropped its result)
+/// before the item completed — that is a structured error naming the
+/// slot, never an `unwrap` panic deep in the leader.
+fn collect_slots(slots: Vec<Option<Vec<GraphTensor>>>) -> Result<Vec<GraphTensor>> {
+    let mut out = Vec::new();
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(graphs) => out.extend(graphs),
+            None => {
+                return Err(Error::Graph(format!(
+                    "sampling work item slot {i} was never filled — its worker \
+                     died before returning the item's subgraphs"
+                )))
+            }
+        }
+    }
+    Ok(out)
 }
 
 /// Run sampling and stream results to shard files (the Fig. 4 bridge
@@ -275,6 +302,29 @@ mod tests {
         let err = run_sampling(sharded, &spec, 5, &(0..8).collect::<Vec<_>>(), &cfg);
         assert!(err.is_err());
         assert!(err.err().unwrap().to_string().contains("failed 3 times"));
+    }
+
+    /// Regression: an unfilled result slot (worker died before
+    /// completing its item) must surface as a structured Error::Graph
+    /// naming the slot — the old code `unwrap()`ed each slot and
+    /// panicked the leader instead.
+    #[test]
+    fn missing_slot_is_structured_error_not_panic() {
+        let (sharded, spec, _) = setup();
+        let seeds: Vec<u32> = (0..6).collect();
+        let cfg = CoordinatorConfig { num_workers: 2, batch_size: 3, ..Default::default() };
+        let (graphs, _) =
+            run_sampling(Arc::clone(&sharded), &spec, 11, &seeds, &cfg).unwrap();
+        // Rebuild the leader's slot state with item 1 missing.
+        let slots: Vec<Option<Vec<GraphTensor>>> = vec![Some(graphs), None];
+        let err = collect_slots(slots).expect_err("missing slot must error");
+        let msg = err.to_string();
+        assert!(msg.contains("graph error"), "{msg}");
+        assert!(msg.contains("slot 1"), "{msg}");
+        assert!(msg.contains("worker"), "{msg}");
+        // All-filled slots flatten in order.
+        let a = collect_slots(vec![Some(Vec::new()), Some(Vec::new())]).unwrap();
+        assert!(a.is_empty());
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! `ModelBuilder`: from the `"model"` block of a run config to a
+//! validated convolution stack.
+//!
+//! [`ModelBuilder::from_config`] is the single place the layer
+//! subsystem's structural invariants are enforced — unknown `type`,
+//! zero `num_layers`, zero widths, and updates that pool an edge set
+//! whose SOURCE endpoint is not the updated node set are all
+//! structured [`Error::Schema`]s, never panics (property-tested
+//! below). [`NativeModel::init`](crate::train::native::NativeModel::init)
+//! funnels through it, so every entry point — `tfgnn train --engine
+//! native --config`, serving, tests, benches — gets the same checks.
+
+use crate::ops::model_ref::ModelConfig;
+use crate::{Error, Result};
+
+use super::{ConvKind, Convolution};
+
+/// The validated stack recipe read off a [`ModelConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct ModelBuilder {
+    pub kind: ConvKind,
+}
+
+impl ModelBuilder {
+    /// Validate the model block of `cfg` into a buildable stack.
+    pub fn from_config(cfg: &ModelConfig) -> Result<ModelBuilder> {
+        let kind = ConvKind::parse(&cfg.arch, &cfg.sage_reduce)?;
+        if cfg.layers == 0 {
+            return Err(Error::Schema(
+                "model.num_layers is 0 — a GraphUpdate stack needs at least one round".into(),
+            ));
+        }
+        if cfg.hidden == 0 || cfg.message == 0 {
+            return Err(Error::Schema(format!(
+                "model widths must be positive (hidden_dim {}, message_dim {})",
+                cfg.hidden, cfg.message
+            )));
+        }
+        if kind == ConvKind::Gatv2 && cfg.att_dim == 0 {
+            return Err(Error::Schema(
+                "model.att_dim is 0 — the gatv2 scorer needs a positive width".into(),
+            ));
+        }
+        // Receiver-is-SOURCE convention: every updated node set must be
+        // the SOURCE endpoint of each edge set it pools — exactly once
+        // (a duplicate would create two parameter tensors under one
+        // name, of which only the last is ever trained or restored).
+        for (node_set, edges) in &cfg.updates {
+            let mut seen = std::collections::BTreeSet::new();
+            for es in edges {
+                if !seen.insert(es.as_str()) {
+                    return Err(Error::Schema(format!(
+                        "update for {node_set:?} pools edge set {es:?} twice"
+                    )));
+                }
+                let (src, _tgt) = cfg.edge_endpoints.get(es).ok_or_else(|| {
+                    Error::Schema(format!("update pools unknown edge set {es:?}"))
+                })?;
+                if src != node_set {
+                    return Err(Error::Schema(format!(
+                        "update for {node_set:?} pools {es:?}, whose source is {src:?} \
+                         (receiver must be the SOURCE endpoint)"
+                    )));
+                }
+            }
+        }
+        Ok(ModelBuilder { kind })
+    }
+
+    /// The convolution every edge set of the stack runs.
+    pub fn conv(&self) -> &'static dyn Convolution {
+        self.kind.conv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::mag::MagConfig;
+    use crate::util::json::Json;
+    use crate::util::proptest::check;
+
+    /// A minimal valid config document for one model type.
+    fn config_text(model_block: &str) -> String {
+        format!(
+            r#"{{
+              "model": {model_block},
+              "schema": {{
+                "node_sets": {{
+                  "paper": {{"features": {{"feat": 16}}}},
+                  "venue": {{"id_embedding": true, "cardinality": 5}}
+                }},
+                "edge_sets": {{"cites": ["paper", "paper"],
+                               "at": ["paper", "venue"]}}
+              }},
+              "train": {{"num_classes": 3}}
+            }}"#
+        )
+    }
+
+    fn builder_of(model_block: &str) -> crate::Result<ModelBuilder> {
+        let cfg = ModelConfig::from_config(&Json::parse(&config_text(model_block))?)?;
+        ModelBuilder::from_config(&cfg)
+    }
+
+    /// All four model types round-trip config → builder → conv and
+    /// back to the same kind.
+    #[test]
+    fn all_four_types_round_trip() {
+        for (ty, extra, kind) in [
+            ("mpnn", "", ConvKind::Mpnn),
+            ("gcn", "", ConvKind::Gcn),
+            ("sage", r#", "sage_reduce": "mean""#, ConvKind::SageMean),
+            ("sage", r#", "sage_reduce": "max""#, ConvKind::SageMax),
+            ("gatv2", r#", "att_dim": 4"#, ConvKind::Gatv2),
+        ] {
+            let block = format!(
+                r#"{{"type": "{ty}", "hidden_dim": 8, "message_dim": 8, "num_layers": 2,
+                     "updates": {{"paper": ["cites", "at"]}}{extra}}}"#
+            );
+            let b = builder_of(&block).unwrap();
+            assert_eq!(b.kind, kind, "{ty}{extra}");
+            assert_eq!(b.conv().name(), kind.name());
+            // The parsed kind survives a serialize→reparse of the
+            // document (Json is deterministic).
+            let doc = Json::parse(&config_text(&block)).unwrap();
+            let reparsed = Json::parse(&doc.to_string()).unwrap();
+            let cfg2 = ModelConfig::from_config(&reparsed).unwrap();
+            assert_eq!(ModelBuilder::from_config(&cfg2).unwrap().kind, kind);
+        }
+    }
+
+    /// Property: corrupting the model block — unknown type, a missing
+    /// required field, zero layers/widths, a bad sage_reduce — always
+    /// yields a structured error, never a panic. (`check` fails the
+    /// property on any panic.)
+    #[test]
+    fn prop_corrupt_model_blocks_are_structured_errors() {
+        check("corrupt model block -> Err, no panic", 60, |rng| {
+            let required = ["type", "hidden_dim", "message_dim", "num_layers", "updates"];
+            let corruption = rng.uniform(5);
+            let block = match corruption {
+                // Unknown type string (random identifier).
+                0 => {
+                    let junk: String =
+                        (0..1 + rng.uniform(8)).map(|_| (b'a' + rng.uniform(26) as u8) as char).collect();
+                    format!(
+                        r#"{{"type": "{junk}x", "hidden_dim": 8, "message_dim": 8,
+                             "num_layers": 1, "updates": {{"paper": ["cites"]}}}}"#
+                    )
+                }
+                // A required field deleted.
+                1 => {
+                    let drop = required[1 + rng.uniform(required.len() - 1)];
+                    let fields = [
+                        ("hidden_dim", r#""hidden_dim": 8"#),
+                        ("message_dim", r#""message_dim": 8"#),
+                        ("num_layers", r#""num_layers": 1"#),
+                        ("updates", r#""updates": {"paper": ["cites"]}"#),
+                    ];
+                    let kept: Vec<&str> = fields
+                        .iter()
+                        .filter(|(name, _)| *name != drop)
+                        .map(|(_, text)| *text)
+                        .collect();
+                    format!(r#"{{"type": "mpnn", {}}}"#, kept.join(", "))
+                }
+                // Zero layers.
+                2 => r#"{"type": "gcn", "hidden_dim": 8, "message_dim": 8,
+                         "num_layers": 0, "updates": {"paper": ["cites"]}}"#
+                    .to_string(),
+                // Zero width (hidden, message, or gatv2 att_dim).
+                3 => match rng.uniform(3) {
+                    0 => r#"{"type": "mpnn", "hidden_dim": 0, "message_dim": 8,
+                             "num_layers": 1, "updates": {"paper": ["cites"]}}"#
+                        .to_string(),
+                    1 => r#"{"type": "sage", "hidden_dim": 8, "message_dim": 0,
+                             "num_layers": 1, "updates": {"paper": ["cites"]}}"#
+                        .to_string(),
+                    _ => r#"{"type": "gatv2", "att_dim": 0, "hidden_dim": 8,
+                             "message_dim": 8, "num_layers": 1,
+                             "updates": {"paper": ["cites"]}}"#
+                        .to_string(),
+                },
+                // Bad sage_reduce / update of a non-SOURCE endpoint /
+                // unknown edge set / duplicate edge set.
+                _ => match rng.uniform(4) {
+                    0 => r#"{"type": "sage", "sage_reduce": "median", "hidden_dim": 8,
+                             "message_dim": 8, "num_layers": 1,
+                             "updates": {"paper": ["cites"]}}"#
+                        .to_string(),
+                    1 => r#"{"type": "mpnn", "hidden_dim": 8, "message_dim": 8,
+                             "num_layers": 1, "updates": {"venue": ["at"]}}"#
+                        .to_string(),
+                    2 => r#"{"type": "mpnn", "hidden_dim": 8, "message_dim": 8,
+                             "num_layers": 1, "updates": {"paper": ["ghost"]}}"#
+                        .to_string(),
+                    _ => r#"{"type": "mpnn", "hidden_dim": 8, "message_dim": 8,
+                             "num_layers": 1,
+                             "updates": {"paper": ["cites", "cites"]}}"#
+                        .to_string(),
+                },
+            };
+            let result = builder_of(&block);
+            assert!(result.is_err(), "corruption {corruption} must be rejected: {block}");
+            // And the error is one of ours, with a printable message.
+            let msg = result.err().unwrap().to_string();
+            assert!(!msg.is_empty());
+        });
+    }
+
+    /// A built model's conv kind (validated here) drives the parameter
+    /// naming.
+    #[test]
+    fn build_produces_arch_specific_params() {
+        use crate::train::native::NativeModel;
+        let mag = MagConfig::tiny();
+        let cfg = ModelConfig::for_mag(&mag, 8, 8, 1).with_arch("gatv2");
+        assert_eq!(ModelBuilder::from_config(&cfg).unwrap().kind, ConvKind::Gatv2);
+        let model = NativeModel::init(cfg, 5).unwrap();
+        assert!(model.names.iter().any(|n| n == "l0.paper.cites.att.w"));
+        assert!(model.names.iter().any(|n| n == "l0.paper.cites.att.v"));
+        assert!(model.names.iter().any(|n| n == "l0.paper.cites.val.w"));
+        assert!(model.names.iter().all(|n| !n.contains("msg.w")), "no mpnn params in a gatv2 model");
+        let gcn =
+            NativeModel::init(ModelConfig::for_mag(&mag, 8, 8, 1).with_arch("gcn"), 5).unwrap();
+        assert!(gcn.names.iter().any(|n| n == "l0.author.writes.gcn.w"));
+    }
+}

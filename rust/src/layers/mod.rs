@@ -1,0 +1,313 @@
+//! Composable GraphUpdate layers — the config-driven convolution zoo.
+//!
+//! The paper's centerpiece API is the Keras layer family
+//! `GraphUpdate` / `NodeSetUpdate` / `Convolution` (§5, API Level 3):
+//! interchangeable per-edge-set convolutions composed into per-node-set
+//! updates over a heterogeneous schema. This module is that family for
+//! the native Rust engine, on top of the fused kernels of
+//! [`crate::ops::fused`] and the reverse-mode rules of
+//! [`crate::train::native::grad`]:
+//!
+//! * [`Convolution`] — the layer trait: a fused fast `forward`, a
+//!   bit-identical `forward_tape` saving activations, and a `backward`
+//!   composing op VJPs (each finite-difference checked);
+//! * [`conv`] — the zoo: [`conv::MpnnConv`] (the original architecture,
+//!   bit-for-bit the pre-refactor model), [`conv::GcnConv`] (mean-pool
+//!   then linear), [`conv::SageConv`] (self ‖ pooled neighbors, mean or
+//!   max), [`conv::Gatv2Conv`] (two-layer attention scorer +
+//!   softmax-weighted pooling via
+//!   [`softmax_weighted_pool_fused`](crate::ops::softmax_weighted_pool_fused));
+//! * [`update`] — [`update::GraphUpdate`]: walks every updated node set
+//!   of the schema, runs one convolution per pooled edge set, and
+//!   merges the results through the next-state MLP;
+//! * [`builder`] — [`builder::ModelBuilder`]: validates the `"model"`
+//!   block of a run config (`type`, `num_layers`, dims) into a
+//!   [`ConvKind`] the trainable model is built from.
+//!
+//! **Determinism contract.** Node sets update in sorted
+//! (`BTreeMap`) name order and each update pools its edge sets in
+//! sorted edge-set-name order; within one convolution every float
+//! accumulation folds in ascending edge-id order (the CSR row order —
+//! see `graph::csr`). A model forward is therefore a fixed sequence of
+//! float operations: bit-stable across runs, thread counts and the
+//! fused/taped path split.
+//!
+//! **Direction convention.** The receiver of every convolution is the
+//! edge set's SOURCE endpoint and the sender its TARGET endpoint (the
+//! rooted-subgraph sampling direction), validated at model build time.
+
+pub mod builder;
+pub mod conv;
+pub mod update;
+
+pub use builder::ModelBuilder;
+pub use update::{EdgeTape, GraphUpdate, LayerTape, UpdateTape};
+
+use crate::graph::GraphTensor;
+use crate::ops::model_ref::{EdgeConvSaved, Mat};
+use crate::{Error, Result};
+
+/// Which convolution the stack runs on every edge set — the parsed,
+/// validated form of the config's `model.type`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvKind {
+    /// The original hardwired architecture: per-edge message MLP over
+    /// `[sender ‖ receiver]`, relu, sum-pool.
+    Mpnn,
+    /// GCN-style: mean-pool neighbor states, then a linear + relu.
+    Gcn,
+    /// GraphSAGE: `[self ‖ mean-pooled neighbors]` through linear + relu.
+    SageMean,
+    /// GraphSAGE with max-pool neighbor aggregation.
+    SageMax,
+    /// GATv2-style attention: two-layer scorer on `[sender ‖ receiver]`
+    /// per edge, per-receiver softmax, weighted sum of value-projected
+    /// sender states.
+    Gatv2,
+}
+
+impl ConvKind {
+    /// Parse the config's `model.type` (+ `model.sage_reduce`) pair.
+    pub fn parse(arch: &str, sage_reduce: &str) -> Result<ConvKind> {
+        match arch {
+            "mpnn" => Ok(ConvKind::Mpnn),
+            "gcn" => Ok(ConvKind::Gcn),
+            "sage" => match sage_reduce {
+                "mean" => Ok(ConvKind::SageMean),
+                "max" => Ok(ConvKind::SageMax),
+                other => Err(Error::Schema(format!(
+                    "model.sage_reduce {other:?} unknown (want mean|max)"
+                ))),
+            },
+            "gatv2" => Ok(ConvKind::Gatv2),
+            other => Err(Error::Schema(format!(
+                "model type {other:?} unknown (want mpnn|gcn|sage|gatv2)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvKind::Mpnn => "mpnn",
+            ConvKind::Gcn => "gcn",
+            ConvKind::SageMean | ConvKind::SageMax => "sage",
+            ConvKind::Gatv2 => "gatv2",
+        }
+    }
+
+    /// The convolution implementation (stateless shared values).
+    pub fn conv(&self) -> &'static dyn Convolution {
+        static MPNN: conv::MpnnConv = conv::MpnnConv;
+        static GCN: conv::GcnConv = conv::GcnConv;
+        static SAGE_MEAN: conv::SageConv = conv::SageConv { max: false };
+        static SAGE_MAX: conv::SageConv = conv::SageConv { max: true };
+        static GATV2: conv::Gatv2Conv = conv::Gatv2Conv;
+        match self {
+            ConvKind::Mpnn => &MPNN,
+            ConvKind::Gcn => &GCN,
+            ConvKind::SageMean => &SAGE_MEAN,
+            ConvKind::SageMax => &SAGE_MAX,
+            ConvKind::Gatv2 => &GATV2,
+        }
+    }
+}
+
+/// The width vocabulary a convolution's parameter shapes are drawn
+/// from, read off the [`ModelConfig`](crate::ops::model_ref::ModelConfig).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvDims {
+    /// Node-state width (input of every convolution).
+    pub hidden: usize,
+    /// Convolution output width (what the node update concatenates).
+    pub message: usize,
+    /// GATv2 attention hidden width.
+    pub att: usize,
+}
+
+/// One parameter tensor a convolution owns per `(layer, node set,
+/// edge set)` — named `l{layer}.{node_set}.{edge_set}.{suffix}` in the
+/// model's flat parameter list, created in `param_shapes` order.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamShape {
+    pub suffix: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    /// Biases initialize to zero (no RNG draw); weights are
+    /// Glorot-uniform.
+    pub zero_init: bool,
+}
+
+impl ParamShape {
+    pub fn weight(suffix: &'static str, rows: usize, cols: usize) -> ParamShape {
+        ParamShape { suffix, rows, cols, zero_init: false }
+    }
+
+    pub fn bias(suffix: &'static str, cols: usize) -> ParamShape {
+        ParamShape { suffix, rows: 1, cols, zero_init: true }
+    }
+}
+
+/// The index-side context of one convolution application, saved on the
+/// tape (everything `backward` needs besides the [`ConvSaved`]
+/// activations).
+#[derive(Debug, Clone)]
+pub struct ConvCtx {
+    /// Sender gather indices (the edge set's TARGET endpoint), one per
+    /// edge. Left empty on the tape-free fast path when the conv's
+    /// [`Convolution::fast_path_needs_indices`] is false.
+    pub sidx: Vec<i32>,
+    /// Receiver gather/pool indices (the edge set's SOURCE endpoint);
+    /// same emptiness rule as `sidx`.
+    pub ridx: Vec<i32>,
+    pub n_send: usize,
+    pub n_recv: usize,
+    pub dims: ConvDims,
+}
+
+/// Everything a convolution forward reads: the live graph (for the
+/// fused kernels' CSR views), the endpoint states, and the index
+/// context.
+pub struct ConvInputs<'a> {
+    pub g: &'a GraphTensor,
+    pub es: &'a str,
+    pub sender_h: &'a Mat,
+    pub receiver_h: &'a Mat,
+    pub ctx: &'a ConvCtx,
+}
+
+/// Saved forward activations of one convolution — the per-conv tape
+/// entry, consumed exactly once by the matching `backward`.
+#[derive(Debug, Clone)]
+pub enum ConvSaved {
+    Mpnn(EdgeConvSaved),
+    Gcn {
+        /// `[n_recv, hidden]` mean-pooled neighbor states.
+        x_pool: Mat,
+        /// `[n_recv, message]` pre-relu output.
+        z: Mat,
+    },
+    Sage {
+        /// `[n_recv, 2·hidden]` concatenated `[self ‖ aggregated]`.
+        x_cat: Mat,
+        /// `[n_recv, message]` pre-relu output.
+        z: Mat,
+        /// Winning edge row per `(receiver, column)` for max
+        /// aggregation (`None` for mean).
+        argmax: Option<Vec<i32>>,
+    },
+    Gatv2 {
+        /// `[n_send, hidden]` sender states (input of the value
+        /// projection).
+        sender_h: Mat,
+        /// `[num_edges, 2·hidden]` gathered `[sender ‖ receiver]`.
+        x_edge: Mat,
+        /// `[num_edges, att]` pre-relu scorer hidden layer.
+        s_pre: Mat,
+        /// Per-edge softmax weights.
+        weights: Vec<f32>,
+        /// `[num_edges, message]` gathered value rows.
+        vals_edge: Mat,
+    },
+}
+
+/// One interchangeable per-edge-set convolution.
+///
+/// Contract (asserted by tests in [`conv`]):
+/// * `forward` and `forward_tape` produce **bit-identical** outputs —
+///   the fast path may fuse (no per-edge intermediates) but must fold
+///   floats in the same order as the taped sequence;
+/// * `backward` is the exact VJP of `forward_tape`, composed from the
+///   finite-difference-checked rules of [`crate::train::native::grad`];
+///   it accumulates parameter gradients into `grads[gidx[k]]` (indices
+///   parallel to `param_shapes`) and returns
+///   `(d_sender_h, d_receiver_h)` — `[n_send, hidden]` and
+///   `[n_recv, hidden]` state gradients for the previous layer.
+pub trait Convolution: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Parameter tensors per `(layer, node set, edge set)`, in creation
+    /// order.
+    fn param_shapes(&self, d: ConvDims) -> Vec<ParamShape>;
+
+    /// Output width (all shipped convolutions emit `message`).
+    fn out_dim(&self, d: ConvDims) -> usize {
+        d.message
+    }
+
+    /// Whether the fused fast path reads `ctx.sidx`/`ctx.ridx`. Convs
+    /// that run entirely on the graph's CSR views (gcn, sage) return
+    /// false so the tape-free forward skips materializing O(num_edges)
+    /// index vectors per edge set per layer. `forward_tape` always
+    /// receives real indices (the backward needs them).
+    fn fast_path_needs_indices(&self) -> bool {
+        true
+    }
+
+    /// Fast forward (fused where available): `[n_recv, out_dim]`.
+    /// `p` holds the conv's parameters in `param_shapes` order.
+    fn forward(&self, x: &ConvInputs, p: &[&Mat]) -> Result<Mat>;
+
+    /// Tape forward: same bits as `forward`, plus saved activations.
+    fn forward_tape(&self, x: &ConvInputs, p: &[&Mat]) -> Result<(Mat, ConvSaved)>;
+
+    /// Reverse sweep for one convolution (see trait docs).
+    fn backward(
+        &self,
+        ctx: &ConvCtx,
+        saved: &ConvSaved,
+        d_out: &Mat,
+        p: &[&Mat],
+        grads: &mut [Mat],
+        gidx: &[usize],
+    ) -> Result<(Mat, Mat)>;
+}
+
+/// A 1×n gradient row (bias gradients come back as flat vectors).
+pub(crate) fn row_mat(v: Vec<f32>) -> Mat {
+    Mat { rows: 1, cols: v.len(), data: v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_kind_parses_and_names() {
+        assert_eq!(ConvKind::parse("mpnn", "mean").unwrap(), ConvKind::Mpnn);
+        assert_eq!(ConvKind::parse("gcn", "mean").unwrap(), ConvKind::Gcn);
+        assert_eq!(ConvKind::parse("sage", "mean").unwrap(), ConvKind::SageMean);
+        assert_eq!(ConvKind::parse("sage", "max").unwrap(), ConvKind::SageMax);
+        assert_eq!(ConvKind::parse("gatv2", "mean").unwrap(), ConvKind::Gatv2);
+        assert!(ConvKind::parse("gat", "mean").is_err());
+        assert!(ConvKind::parse("sage", "min").is_err());
+        for k in [ConvKind::Mpnn, ConvKind::Gcn, ConvKind::SageMean, ConvKind::Gatv2] {
+            assert_eq!(k.conv().name(), k.name());
+        }
+        assert_eq!(ConvKind::SageMax.conv().name(), "sage");
+    }
+
+    #[test]
+    fn param_shapes_follow_dims() {
+        let d = ConvDims { hidden: 8, message: 6, att: 4 };
+        for k in
+            [ConvKind::Mpnn, ConvKind::Gcn, ConvKind::SageMean, ConvKind::SageMax, ConvKind::Gatv2]
+        {
+            let shapes = k.conv().param_shapes(d);
+            assert!(!shapes.is_empty(), "{}", k.name());
+            for s in &shapes {
+                assert!(s.rows > 0 && s.cols > 0, "{} {}", k.name(), s.suffix);
+                if s.zero_init {
+                    assert_eq!(s.rows, 1, "biases are rows of width cols");
+                }
+            }
+            assert_eq!(k.conv().out_dim(d), d.message);
+        }
+        // The mpnn shapes are pinned: they name the pre-refactor
+        // checkpoint entries.
+        let mpnn = ConvKind::Mpnn.conv().param_shapes(d);
+        assert_eq!(mpnn.len(), 2);
+        assert_eq!(mpnn[0].suffix, "msg.w");
+        assert_eq!((mpnn[0].rows, mpnn[0].cols), (16, 6));
+        assert_eq!(mpnn[1].suffix, "msg.b");
+    }
+}

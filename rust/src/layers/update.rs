@@ -1,0 +1,273 @@
+//! `NodeSetUpdate` / `GraphUpdate`: composing per-edge-set
+//! convolutions into whole-graph rounds over a heterogeneous schema.
+//!
+//! One [`GraphUpdate`] round mirrors the paper's Keras `GraphUpdate`
+//! layer: every node set named in `ModelConfig::updates` receives a
+//! *node set update* — one [`Convolution`] per pooled edge set, their
+//! outputs merged as `[h_self ‖ pooled…]` through the next-state MLP
+//! (`l{layer}.{node_set}.next.w/b`) — while all other node sets pass
+//! their state through unchanged.
+//!
+//! **Merge order determinism.** Node sets update in sorted name order
+//! (`updates` is a `BTreeMap`) and each update pools its edge sets in
+//! sorted edge-set-name order; the concat therefore has a fixed column
+//! layout and the whole round is a fixed float-op sequence (see the
+//! module docs of [`crate::layers`]). The backward walks the exact
+//! reverse.
+
+use std::collections::BTreeMap;
+
+use crate::graph::GraphTensor;
+use crate::ops::model_ref::{node_update, Mat, ModelConfig, NodeUpdateSaved};
+use crate::train::native::grad;
+use crate::{Error, Result};
+
+use super::{row_mat, ConvCtx, ConvDims, ConvInputs, ConvSaved, Convolution};
+
+/// One convolution application on the tape: index context + saved
+/// activations, plus the names needed to route gradients and look
+/// parameters back up.
+#[derive(Debug, Clone)]
+pub struct EdgeTape {
+    pub es: String,
+    pub send_set: String,
+    pub ctx: ConvCtx,
+    pub saved: ConvSaved,
+}
+
+/// One node set's update on the tape.
+#[derive(Debug, Clone)]
+pub struct UpdateTape {
+    /// Per pooled edge set, in sorted edge-set-name order (the forward
+    /// order).
+    pub edges: Vec<EdgeTape>,
+    pub node: NodeUpdateSaved,
+}
+
+/// One full round: node set → its update's tape.
+pub type LayerTape = BTreeMap<String, UpdateTape>;
+
+/// A borrowed view of the model for one round of updates: the config,
+/// the convolution, and the flat parameter list with its name index.
+pub struct GraphUpdate<'a> {
+    pub cfg: &'a ModelConfig,
+    pub conv: &'a dyn Convolution,
+    pub params: &'a [Mat],
+    pub index: &'a BTreeMap<String, usize>,
+}
+
+impl<'a> GraphUpdate<'a> {
+    pub fn dims(&self) -> ConvDims {
+        ConvDims {
+            hidden: self.cfg.hidden,
+            message: self.cfg.message,
+            att: self.cfg.att_dim,
+        }
+    }
+
+    fn idx(&self, name: &str) -> Result<usize> {
+        self.index
+            .get(name)
+            .copied()
+            .ok_or_else(|| Error::Runtime(format!("graph update: no param {name:?}")))
+    }
+
+    fn param(&self, name: &str) -> Result<&'a Mat> {
+        Ok(&self.params[self.idx(name)?])
+    }
+
+    /// This convolution's parameter refs + flat indices for one
+    /// `(layer, node set, edge set)`, in `param_shapes` order.
+    fn conv_params(
+        &self,
+        layer: usize,
+        node_set: &str,
+        es: &str,
+    ) -> Result<(Vec<&'a Mat>, Vec<usize>)> {
+        let shapes = self.conv.param_shapes(self.dims());
+        let mut mats = Vec::with_capacity(shapes.len());
+        let mut idxs = Vec::with_capacity(shapes.len());
+        for s in &shapes {
+            let i = self.idx(&format!("l{layer}.{node_set}.{es}.{}", s.suffix))?;
+            mats.push(&self.params[i]);
+            idxs.push(i);
+        }
+        Ok((mats, idxs))
+    }
+
+    /// The sorted edge list + per-edge index context of one node set's
+    /// update (shared by both forward paths). With `with_indices`
+    /// false (the fast path of a CSR-only conv) the O(num_edges)
+    /// `sidx`/`ridx` vectors stay empty.
+    #[allow(clippy::type_complexity)]
+    fn edge_ctxs(
+        &self,
+        g: &GraphTensor,
+        node_set: &str,
+        edge_list: &[String],
+        with_indices: bool,
+    ) -> Result<Vec<(String, String, ConvCtx)>> {
+        let n_recv = g.num_nodes(node_set)?;
+        let mut edge_names: Vec<&String> = edge_list.iter().collect();
+        edge_names.sort();
+        let mut out = Vec::with_capacity(edge_names.len());
+        for es in edge_names {
+            let adj = &g.edge_set(es)?.adjacency;
+            let send_set = &self.cfg.edge_endpoints[es.as_str()].1;
+            let (sidx, ridx) = if with_indices {
+                (
+                    adj.target.iter().map(|&v| v as i32).collect(),
+                    adj.source.iter().map(|&v| v as i32).collect(),
+                )
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            out.push((
+                es.clone(),
+                send_set.clone(),
+                ConvCtx {
+                    sidx,
+                    ridx,
+                    n_send: g.num_nodes(send_set)?,
+                    n_recv,
+                    dims: self.dims(),
+                },
+            ))
+        }
+        Ok(out)
+    }
+
+    /// One fused (tape-free) round: returns the next per-node-set
+    /// states. Pass-through sets carry their state forward.
+    pub fn forward(
+        &self,
+        g: &GraphTensor,
+        h: &BTreeMap<String, Mat>,
+        layer: usize,
+    ) -> Result<BTreeMap<String, Mat>> {
+        let mut new_h: BTreeMap<String, Mat> = h
+            .iter()
+            .filter(|(set, _)| !self.cfg.updates.contains_key(*set))
+            .map(|(set, m)| (set.clone(), m.clone()))
+            .collect();
+        let with_indices = self.conv.fast_path_needs_indices();
+        for (node_set, edge_list) in &self.cfg.updates {
+            let mut pooled = Vec::new();
+            for (es, send_set, ctx) in self.edge_ctxs(g, node_set, edge_list, with_indices)? {
+                let (mats, _idxs) = self.conv_params(layer, node_set, &es)?;
+                let x = ConvInputs {
+                    g,
+                    es: &es,
+                    sender_h: &h[send_set.as_str()],
+                    receiver_h: &h[node_set.as_str()],
+                    ctx: &ctx,
+                };
+                pooled.push(self.conv.forward(&x, &mats)?);
+            }
+            let mut parts: Vec<&Mat> = vec![&h[node_set.as_str()]];
+            parts.extend(pooled.iter());
+            let (next, _saved) = node_update(
+                &parts,
+                self.param(&format!("l{layer}.{node_set}.next.w"))?,
+                &self.param(&format!("l{layer}.{node_set}.next.b"))?.data,
+            );
+            new_h.insert(node_set.clone(), next);
+        }
+        Ok(new_h)
+    }
+
+    /// One round recording the tape. Bit-for-bit the same states as
+    /// [`Self::forward`] (each convolution's tape path is bit-equal to
+    /// its fused path — the trait contract).
+    pub fn forward_tape(
+        &self,
+        g: &GraphTensor,
+        h: &BTreeMap<String, Mat>,
+        layer: usize,
+    ) -> Result<(BTreeMap<String, Mat>, LayerTape)> {
+        let mut new_h: BTreeMap<String, Mat> = h
+            .iter()
+            .filter(|(set, _)| !self.cfg.updates.contains_key(*set))
+            .map(|(set, m)| (set.clone(), m.clone()))
+            .collect();
+        let mut tape: LayerTape = BTreeMap::new();
+        for (node_set, edge_list) in &self.cfg.updates {
+            let mut pooled = Vec::new();
+            let mut edges = Vec::new();
+            for (es, send_set, ctx) in self.edge_ctxs(g, node_set, edge_list, true)? {
+                let (mats, _idxs) = self.conv_params(layer, node_set, &es)?;
+                let x = ConvInputs {
+                    g,
+                    es: &es,
+                    sender_h: &h[send_set.as_str()],
+                    receiver_h: &h[node_set.as_str()],
+                    ctx: &ctx,
+                };
+                let (p, saved) = self.conv.forward_tape(&x, &mats)?;
+                pooled.push(p);
+                edges.push(EdgeTape { es, send_set, ctx, saved });
+            }
+            let mut parts: Vec<&Mat> = vec![&h[node_set.as_str()]];
+            parts.extend(pooled.iter());
+            let (next, node_saved) = node_update(
+                &parts,
+                self.param(&format!("l{layer}.{node_set}.next.w"))?,
+                &self.param(&format!("l{layer}.{node_set}.next.b"))?.data,
+            );
+            tape.insert(node_set.clone(), UpdateTape { edges, node: node_saved });
+            new_h.insert(node_set.clone(), next);
+        }
+        Ok((new_h, tape))
+    }
+
+    /// Reverse of one round: given `dh` (state gradients flowing into
+    /// this round's *outputs*), accumulate parameter gradients into
+    /// `grads` and return the state gradients for the previous round's
+    /// outputs. Walks node sets and edge sets in the exact reverse of
+    /// the forward's float-op sequence.
+    pub fn backward(
+        &self,
+        tape: &LayerTape,
+        layer: usize,
+        dh: &BTreeMap<String, Mat>,
+        grads: &mut [Mat],
+    ) -> Result<BTreeMap<String, Mat>> {
+        let cfg = self.cfg;
+        let mut dh_prev: BTreeMap<String, Mat> = BTreeMap::new();
+        for set in &cfg.node_order {
+            if tape.contains_key(set) {
+                dh_prev.insert(set.clone(), dh[set].zeros_like());
+            } else {
+                // Pass-through: new_h[set] was a clone of h[set].
+                dh_prev.insert(set.clone(), dh[set].clone());
+            }
+        }
+        for (node_set, ut) in tape {
+            let d_next = &dh[node_set];
+            // relu → bias → matmul of the next-state MLP.
+            let dz = grad::relu_vjp(&ut.node.z, d_next);
+            let w_next_idx = self.idx(&format!("l{layer}.{node_set}.next.w"))?;
+            let (dx_cat, d_w_next) =
+                grad::matmul_vjp(&ut.node.x_cat, &self.params[w_next_idx], &dz);
+            grads[w_next_idx].add_assign(&d_w_next);
+            grads[self.idx(&format!("l{layer}.{node_set}.next.b"))?]
+                .add_assign(&row_mat(grad::bias_vjp(&dz)));
+            // Split the concat back into [h_self ‖ pooled…].
+            let dims = self.dims();
+            let mut widths = vec![cfg.hidden];
+            widths.extend(std::iter::repeat(self.conv.out_dim(dims)).take(ut.edges.len()));
+            let mut pieces = grad::concat_cols_vjp(&widths, &dx_cat);
+            let d_pooled_list = pieces.split_off(1);
+            dh_prev.get_mut(node_set.as_str()).unwrap().add_assign(&pieces[0]);
+            // Each convolution, in forward (sorted) order.
+            for (et, d_pooled) in ut.edges.iter().zip(&d_pooled_list) {
+                let (mats, idxs) = self.conv_params(layer, node_set, &et.es)?;
+                let (d_sender, d_receiver) =
+                    self.conv.backward(&et.ctx, &et.saved, d_pooled, &mats, grads, &idxs)?;
+                dh_prev.get_mut(et.send_set.as_str()).unwrap().add_assign(&d_sender);
+                dh_prev.get_mut(node_set.as_str()).unwrap().add_assign(&d_receiver);
+            }
+        }
+        Ok(dh_prev)
+    }
+}

@@ -4,7 +4,8 @@
 //! (Ferludin et al., 2022) as a three-layer system:
 //!
 //! * **Layer 3 (this crate)** — the heterogeneous graph data model
-//!   ([`schema`], [`graph`]), data-exchange ops ([`ops`]), the sharded
+//!   ([`schema`], [`graph`]), data-exchange ops ([`ops`]), the
+//!   composable GraphUpdate layer zoo ([`layers`]), the sharded
 //!   graph store ([`store`]), rooted-subgraph sampling ([`sampler`],
 //!   [`coordinator`]), the streaming input pipeline ([`pipeline`]), the
 //!   AOT runtime ([`runtime`]), training ([`train`]), orchestration
@@ -24,6 +25,7 @@
 
 pub mod coordinator;
 pub mod graph;
+pub mod layers;
 pub mod ops;
 pub mod pipeline;
 pub mod runner;

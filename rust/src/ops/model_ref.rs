@@ -366,9 +366,20 @@ impl<'a> ParamMap<'a> {
 /// parameters from scratch).
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
+    /// Convolution architecture applied to every edge set —
+    /// `"mpnn"` | `"gcn"` | `"sage"` | `"gatv2"`; parsed from the
+    /// config's `model.type` (falling back to `model.arch`), validated
+    /// by [`crate::layers::ModelBuilder`].
+    pub arch: String,
     pub hidden: usize,
     /// Message MLP output width (== hidden for the shipped configs).
     pub message: usize,
+    /// GATv2 attention hidden width (`model.att_dim`, default
+    /// `message`).
+    pub att_dim: usize,
+    /// GraphSAGE neighbor reduction (`model.sage_reduce`):
+    /// `"mean"` | `"max"`.
+    pub sage_reduce: String,
     pub layers: usize,
     /// node set -> edge sets pooled into its update.
     pub updates: BTreeMap<String, Vec<String>>,
@@ -440,9 +451,51 @@ impl ModelConfig {
                 cardinality.insert(k.clone(), c.as_usize()?);
             }
         }
+        // `type` is the layer subsystem's key; `arch` the AOT/python
+        // side's. The two vocabularies share only "mpnn" (the AOT
+        // engine's gcn/sage/gatv2 are *different models* — other
+        // normalization, activation and parameter layout), so a legacy
+        // `arch` key alone may select nothing but mpnn: anything else
+        // must opt into the native zoo explicitly via `type`. A config
+        // carrying both keys with different values is a drift bug.
+        let arch = match (model.opt("type"), model.opt("arch")) {
+            (Some(t), Some(a)) if t.as_str()? != a.as_str()? => {
+                return Err(Error::Schema(format!(
+                    "model.type {:?} and model.arch {:?} disagree — remove one",
+                    t.as_str()?,
+                    a.as_str()?
+                )));
+            }
+            (Some(v), _) => v.as_str()?.to_string(),
+            (None, Some(v)) => {
+                let a = v.as_str()?;
+                if a != "mpnn" {
+                    return Err(Error::Schema(format!(
+                        "model.arch {a:?} names an AOT-engine architecture, which is \
+                         not the same model as the native layer zoo's — select the \
+                         native convolution explicitly via model.type \
+                         (mpnn|gcn|sage|gatv2)"
+                    )));
+                }
+                a.to_string()
+            }
+            (None, None) => "mpnn".to_string(),
+        };
+        let message = model.get("message_dim")?.as_usize()?;
+        let att_dim = match model.opt("att_dim") {
+            Some(v) => v.as_usize()?,
+            None => message,
+        };
+        let sage_reduce = match model.opt("sage_reduce") {
+            Some(v) => v.as_str()?.to_string(),
+            None => "mean".to_string(),
+        };
         Ok(ModelConfig {
+            arch,
             hidden: model.get("hidden_dim")?.as_usize()?,
-            message: model.get("message_dim")?.as_usize()?,
+            message,
+            att_dim,
+            sage_reduce,
             layers: model.get("num_layers")?.as_usize()?,
             updates,
             edge_endpoints,
@@ -501,8 +554,11 @@ impl ModelConfig {
         cardinality.insert(s("institution"), mag.num_institutions);
         cardinality.insert(s("field_of_study"), mag.num_fields);
         ModelConfig {
+            arch: s("mpnn"),
             hidden,
             message,
+            att_dim: message,
+            sage_reduce: s("mean"),
             layers,
             updates,
             edge_endpoints,
@@ -513,6 +569,14 @@ impl ModelConfig {
             cardinality,
             num_classes: mag.num_classes,
         }
+    }
+
+    /// The same config with a different convolution architecture — the
+    /// knob tests and benches use to walk the model zoo without
+    /// re-deriving a whole config.
+    pub fn with_arch(mut self, arch: &str) -> ModelConfig {
+        self.arch = arch.to_string();
+        self
     }
 }
 
@@ -761,6 +825,9 @@ mod tests {
           "train": {"num_classes": 3}
         }"#;
         let cfg = ModelConfig::from_config(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.arch, "mpnn", "no type/arch key defaults to mpnn");
+        assert_eq!(cfg.att_dim, cfg.message, "att_dim defaults to message_dim");
+        assert_eq!(cfg.sage_reduce, "mean");
         assert_eq!(cfg.hidden, 8);
         assert_eq!(cfg.message, 4);
         assert_eq!(cfg.layers, 2);
@@ -773,6 +840,43 @@ mod tests {
         assert_eq!(cfg.cardinality["venue"], 5);
         assert_eq!(cfg.edge_endpoints["cites"], ("paper".to_string(), "paper".to_string()));
         assert_eq!(cfg.updates["paper"], vec!["cites".to_string()]);
+    }
+
+    #[test]
+    fn model_config_parses_zoo_keys() {
+        let text = r#"{
+          "model": {"type": "gatv2", "hidden_dim": 8, "message_dim": 4,
+                    "att_dim": 6, "sage_reduce": "max", "num_layers": 1,
+                    "updates": {"paper": ["cites"]}},
+          "schema": {
+            "node_sets": {"paper": {"features": {"feat": 16}}},
+            "edge_sets": {"cites": ["paper", "paper"]}
+          },
+          "train": {"num_classes": 3}
+        }"#;
+        let cfg = ModelConfig::from_config(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.arch, "gatv2");
+        assert_eq!(cfg.att_dim, 6);
+        assert_eq!(cfg.sage_reduce, "max");
+        let sage = cfg.with_arch("sage");
+        assert_eq!(sage.arch, "sage");
+        // type/arch agreement is enforced; equal duplicates are fine.
+        let dup = text.replace(r#""type": "gatv2","#, r#""type": "gatv2", "arch": "gcn","#);
+        let err = ModelConfig::from_config(&Json::parse(&dup).unwrap());
+        assert!(err.is_err(), "conflicting type/arch must be rejected");
+        let same = text.replace(r#""type": "gatv2","#, r#""type": "gatv2", "arch": "gatv2","#);
+        assert!(ModelConfig::from_config(&Json::parse(&same).unwrap()).is_ok());
+        // A legacy `arch` key alone selects only "mpnn": the AOT
+        // engine's gcn/sage/gatv2 are different models, so reusing an
+        // AOT config with the native engine must not silently build a
+        // lookalike — it errors, demanding an explicit model.type.
+        let legacy = text.replace(r#""type": "gatv2","#, r#""arch": "gcn","#);
+        let err = ModelConfig::from_config(&Json::parse(&legacy).unwrap());
+        assert!(err.is_err(), "non-mpnn arch without type must be rejected");
+        assert!(err.err().unwrap().to_string().contains("model.type"));
+        let legacy_mpnn = text.replace(r#""type": "gatv2","#, r#""arch": "mpnn","#);
+        let cfg = ModelConfig::from_config(&Json::parse(&legacy_mpnn).unwrap()).unwrap();
+        assert_eq!(cfg.arch, "mpnn");
     }
 
     #[test]

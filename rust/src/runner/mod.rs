@@ -443,14 +443,13 @@ mod tests {
         assert_eq!(EngineKind::default(), EngineKind::Aot);
     }
 
-    /// The native engine runs the full runner loop — pipeline, epochs,
-    /// validation, test, checkpoint — straight from a raw config file,
-    /// with zero AOT artifacts.
-    #[test]
-    fn native_run_from_config_file_end_to_end() {
-        // A scaled-down config so the test stays fast: the tiny synth
-        // MAG with the mag_small schema/sampling/pad contract.
-        let text = r#"{
+    /// A scaled-down run config so runner tests stay fast: the tiny
+    /// synth MAG with the mag_small schema/sampling/pad contract,
+    /// parameterized over extra model-block keys (`"type"` etc. —
+    /// spliced in front of `hidden_dim`, so pass e.g.
+    /// `r#""type": "gatv2", "att_dim": 4,"#` or `""`).
+    fn tiny_config_text(model_extra: &str) -> String {
+        let base = r#"{
           "batch_size": 4,
           "dataset": {
             "num_papers": 120, "num_authors": 150, "num_institutions": 10,
@@ -499,6 +498,15 @@ mod tests {
             "adam_beta2": 0.999, "adam_eps": 1e-8
           }
         }"#;
+        base.replace("\"hidden_dim\": 8,", &format!("{model_extra} \"hidden_dim\": 8,"))
+    }
+
+    /// The native engine runs the full runner loop — pipeline, epochs,
+    /// validation, test, checkpoint — straight from a raw config file,
+    /// with zero AOT artifacts.
+    #[test]
+    fn native_run_from_config_file_end_to_end() {
+        let text = tiny_config_text("");
         let dir = std::env::temp_dir().join(format!("tfgnn-run-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let cfg_path = dir.join("tiny.json");
@@ -524,6 +532,43 @@ mod tests {
         let tensors = crate::train::checkpoint::load(&ckpt_path).unwrap();
         assert!(tensors.iter().any(|(n, _)| n == "step"));
         assert!(tensors.iter().any(|(n, _)| n.starts_with("adam_m.")));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// `tfgnn train --engine native --config` picks the model from the
+    /// config's `model.type`: every convolution of the zoo trains
+    /// through the same runner loop, and the checkpoint carries the
+    /// architecture's own parameter names.
+    #[test]
+    fn native_run_picks_model_type_from_config() {
+        let dir =
+            std::env::temp_dir().join(format!("tfgnn-run-zoo-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for (arch, extra, marker) in [
+            ("gcn", r#""type": "gcn","#, "param.l0.paper.cites.gcn.w"),
+            ("sage", r#""type": "sage", "sage_reduce": "max","#, "param.l0.paper.cites.sage.w"),
+            ("gatv2", r#""type": "gatv2", "att_dim": 4,"#, "param.l0.paper.cites.att.v"),
+        ] {
+            let cfg_path = dir.join(format!("{arch}.json"));
+            std::fs::write(&cfg_path, tiny_config_text(extra)).unwrap();
+            let ckpt_path = dir.join(format!("{arch}.ckpt"));
+            let mut cfg = RunConfig::new(&dir, arch);
+            cfg.engine = EngineKind::Native;
+            cfg.config_path = Some(cfg_path);
+            cfg.epochs = 1;
+            cfg.max_steps_per_epoch = Some(2);
+            cfg.max_eval_batches = Some(1);
+            cfg.trainer_threads = 2;
+            cfg.checkpoint = Some(ckpt_path.clone());
+            let report = run(&cfg).unwrap_or_else(|e| panic!("{arch}: {e}"));
+            assert!(report.epochs[0].train.steps > 0, "{arch}");
+            assert!(report.epochs[0].train.loss().is_finite(), "{arch}");
+            let tensors = crate::train::checkpoint::load(&ckpt_path).unwrap();
+            assert!(
+                tensors.iter().any(|(n, _)| n == marker),
+                "{arch}: checkpoint missing {marker}"
+            );
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -400,14 +400,18 @@ mod tests {
     use crate::sampler::spec::mag_sampling_spec_scaled;
     use crate::synth::mag::{generate, MagConfig, Split};
 
-    fn native_server(max_batch: usize, max_wait: Duration) -> (ServerHandle, Vec<u32>, usize) {
+    fn native_server_for(
+        arch: &str,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> (ServerHandle, Vec<u32>, usize) {
         let mag = MagConfig::tiny();
         let ds = generate(&mag);
         let seeds = ds.papers_in_split(Split::Train);
         let store = Arc::new(ds.store);
         let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
         let sampler = Arc::new(InMemorySampler::new(store, spec, 3).unwrap());
-        let cfg = ModelConfig::for_mag(&mag, 8, 8, 1);
+        let cfg = ModelConfig::for_mag(&mag, 8, 8, 1).with_arch(arch);
         let num_classes = cfg.num_classes;
         let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
         let handle = serve_native(
@@ -417,6 +421,10 @@ mod tests {
             ServeConfig { max_batch, max_wait, sampler: SamplerConfig::default() },
         );
         (handle, seeds, num_classes)
+    }
+
+    fn native_server(max_batch: usize, max_wait: Duration) -> (ServerHandle, Vec<u32>, usize) {
+        native_server_for("mpnn", max_batch, max_wait)
     }
 
     #[test]
@@ -431,6 +439,24 @@ mod tests {
         }
         assert!(handle.stats.requests.load(Ordering::Relaxed) >= 6);
         handle.shutdown();
+    }
+
+    /// `serve_native` hosts any built model, not just the mpnn: every
+    /// convolution of the zoo serves predictions through the same
+    /// batcher.
+    #[test]
+    fn native_server_hosts_the_whole_zoo() {
+        for arch in ["gcn", "sage", "gatv2"] {
+            let (handle, seeds, classes) =
+                native_server_for(arch, 3, Duration::from_millis(2));
+            for &s in seeds.iter().take(3) {
+                let resp = handle.predict(s).unwrap();
+                assert_eq!(resp.logits.len(), classes, "{arch}");
+                assert!(resp.logits.iter().all(|v| v.is_finite()), "{arch}");
+                assert!(resp.predicted < classes, "{arch}");
+            }
+            handle.shutdown();
+        }
     }
 
     /// Regression: shutting the server down must NOT drop requests that

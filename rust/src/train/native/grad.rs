@@ -173,6 +173,120 @@ pub fn broadcast_vjp(seg: &[i32], n_src: usize, dy: &Mat) -> Mat {
     dy.segment_sum(seg, n_src)
 }
 
+/// Forward: per-segment softmax of one scalar `logit` per row, then a
+/// softmax-weighted sum of `vals` rows into `n_seg` segments — the
+/// attention aggregation of
+/// [`crate::ops::softmax_weighted_pool_fused`], phrased over per-edge
+/// (already gathered) value rows so it can sit on a tape.
+///
+/// Bit-for-bit contract with the fused kernel: rows are grouped by the
+/// same stable counting sort the CSR view uses (edge ids ascending
+/// within each segment), the per-segment max / normalizer / weighted
+/// accumulation all fold in that order, and each weight is computed as
+/// `exp(l - max) / sum` exactly like `softmax_pool_rows`. Asserted by
+/// a property test in [`crate::layers`]. Empty segments yield zero
+/// rows; returns `(out, weights)` with one softmax weight per input
+/// row — the tape entry [`segment_softmax_pool_vjp`] consumes.
+pub fn segment_softmax_pool_fwd(
+    logits: &[f32],
+    vals: &Mat,
+    seg: &[i32],
+    n_seg: usize,
+) -> (Mat, Vec<f32>) {
+    assert_eq!(logits.len(), seg.len(), "segment_softmax_pool_fwd: logits len");
+    assert_eq!(vals.rows, seg.len(), "segment_softmax_pool_fwd: vals rows");
+    let d = vals.cols;
+    // Stable counting sort over row ids — the CSR build's grouping.
+    let mut offsets = vec![0usize; n_seg + 1];
+    for &s in seg {
+        offsets[s as usize + 1] += 1;
+    }
+    for i in 1..offsets.len() {
+        offsets[i] += offsets[i - 1];
+    }
+    let mut cursor = offsets.clone();
+    let mut order = vec![0u32; seg.len()];
+    for (e, &s) in seg.iter().enumerate() {
+        let at = cursor[s as usize];
+        order[at] = e as u32;
+        cursor[s as usize] = at + 1;
+    }
+    let mut out = Mat::zeros(n_seg, d);
+    let mut weights = vec![0.0f32; seg.len()];
+    for r in 0..n_seg {
+        let row = &order[offsets[r]..offsets[r + 1]];
+        if row.is_empty() {
+            continue; // empty segments stay 0 (padded-graph rule)
+        }
+        let mut m = f32::NEG_INFINITY;
+        for &e in row {
+            let l = logits[e as usize];
+            if l > m {
+                m = l;
+            }
+        }
+        let mut sum = 0.0f32;
+        for &e in row {
+            let x = (logits[e as usize] - m).exp();
+            weights[e as usize] = x;
+            sum += x;
+        }
+        let acc = &mut out.data[r * d..(r + 1) * d];
+        for &e in row {
+            let w = weights[e as usize] / sum;
+            weights[e as usize] = w;
+            let src = vals.row(e as usize);
+            for (o, &x) in acc.iter_mut().zip(src) {
+                *o += w * x;
+            }
+        }
+    }
+    (out, weights)
+}
+
+/// VJP of [`segment_softmax_pool_fwd`]: given `dy = ∂L/∂out` and the
+/// saved softmax `weights`, returns `(dlogits, dvals)`.
+///
+/// With `w_e = softmax(l)_e` within segment `r` and
+/// `out_r = Σ_e w_e · v_e`:
+/// * `dv_e = w_e · dy_r`;
+/// * `dl_e = w_e · (g_e - ḡ_r)` where `g_e = ⟨v_e, dy_r⟩` and
+///   `ḡ_r = Σ_e w_e g_e` — the standard softmax Jacobian contracted
+///   with the per-row value gradients.
+pub fn segment_softmax_pool_vjp(
+    weights: &[f32],
+    vals: &Mat,
+    seg: &[i32],
+    dy: &Mat,
+) -> (Vec<f32>, Mat) {
+    assert_eq!(weights.len(), seg.len(), "segment_softmax_pool_vjp: weights len");
+    assert_eq!(vals.rows, seg.len(), "segment_softmax_pool_vjp: vals rows");
+    assert_eq!(vals.cols, dy.cols, "segment_softmax_pool_vjp: cols");
+    let d = vals.cols;
+    let mut dvals = Mat::zeros(vals.rows, d);
+    let mut gs = vec![0.0f32; seg.len()];
+    let mut gbar = vec![0.0f32; dy.rows];
+    for (e, &s) in seg.iter().enumerate() {
+        let r = s as usize;
+        let dyr = dy.row(r);
+        let w = weights[e];
+        let dst = &mut dvals.data[e * d..(e + 1) * d];
+        let mut g = 0.0f32;
+        for ((o, &dv), &v) in dst.iter_mut().zip(dyr).zip(vals.row(e)) {
+            *o = w * dv;
+            g += v * dv;
+        }
+        gs[e] = g;
+        gbar[r] += w * g;
+    }
+    let dlogits = seg
+        .iter()
+        .enumerate()
+        .map(|(e, &s)| weights[e] * (gs[e] - gbar[s as usize]))
+        .collect();
+    (dlogits, dvals)
+}
+
 /// Output of [`softmax_xent_masked`].
 #[derive(Debug, Clone)]
 pub struct XentGrad {
@@ -538,6 +652,64 @@ mod tests {
             let dx = broadcast_vjp(&seg, n_src, &dy);
             check_close("broadcast dx", &dx.data, &fd_grad(&x0, H, &eval));
         }
+    }
+
+    #[test]
+    fn gradcheck_segment_softmax_pool() {
+        // Shapes deliberately include a single-edge segment (the
+        // softmax collapses to weight 1, dlogits must be exactly 0 up
+        // to FD noise) and an empty segment (an all-masked receiver:
+        // its dy row must influence nothing).
+        for (seed, (n_seg, d, seg)) in [
+            (0u64, (4usize, 2usize, vec![0i32, 1, 1, 0, 2])), // seg 2 singleton, seg 3 empty
+            (1, (3, 3, vec![2])),                             // single-edge segment + 2 empty
+            (2, (5, 1, vec![0, 0, 0, 4, 2, 2])),              // mixed, segs 1 & 3 empty
+        ] {
+            let mut rng = Rng::new(1100 + seed);
+            let n = seg.len();
+            let l0 = rand_vec(&mut rng, n);
+            let v0 = rand_vec(&mut rng, n * d);
+            let wt = rand_vec(&mut rng, n_seg * d);
+            let seg_c = seg.clone();
+            let v0_c = v0.clone();
+            let eval_l = |x: &[f32]| -> f64 {
+                let vals = Mat { rows: n, cols: d, data: v0_c.clone() };
+                wsum(&segment_softmax_pool_fwd(x, &vals, &seg_c, n_seg).0, &wt)
+            };
+            let l0_c = l0.clone();
+            let eval_v = |x: &[f32]| -> f64 {
+                let vals = Mat { rows: n, cols: d, data: x.to_vec() };
+                wsum(&segment_softmax_pool_fwd(&l0_c, &vals, &seg_c, n_seg).0, &wt)
+            };
+            let vals = Mat { rows: n, cols: d, data: v0.clone() };
+            let (_y, weights) = segment_softmax_pool_fwd(&l0, &vals, &seg, n_seg);
+            let dy = Mat { rows: n_seg, cols: d, data: wt.clone() };
+            let (dlogits, dvals) = segment_softmax_pool_vjp(&weights, &vals, &seg, &dy);
+            check_close("softmax_pool dlogits", &dlogits, &fd_grad(&l0, H, &eval_l));
+            check_close("softmax_pool dvals", &dvals.data, &fd_grad(&v0, H, &eval_v));
+        }
+    }
+
+    #[test]
+    fn segment_softmax_pool_empty_and_singleton_rows() {
+        // One edge into segment 1, nothing into segments 0 and 2.
+        let vals = Mat { rows: 1, cols: 2, data: vec![3.0, -4.0] };
+        let (y, w) = segment_softmax_pool_fwd(&[0.7], &vals, &[1], 3);
+        assert_eq!(w, vec![1.0], "singleton softmax weight is exactly 1");
+        assert_eq!(y.row(0), &[0.0, 0.0]);
+        assert_eq!(y.row(1), &[3.0, -4.0]);
+        assert_eq!(y.row(2), &[0.0, 0.0]);
+        // Backward: gradients flow only through the real row; a
+        // singleton's logit gradient is exactly zero.
+        let dy = Mat { rows: 3, cols: 2, data: vec![9.0; 6] };
+        let (dl, dv) = segment_softmax_pool_vjp(&w, &vals, &[1], &dy);
+        assert_eq!(dl, vec![0.0]);
+        assert_eq!(dv.row(0), &[9.0, 9.0]);
+        // Fully empty input (every receiver masked out).
+        let empty = Mat::zeros(0, 2);
+        let (y0, w0) = segment_softmax_pool_fwd(&[], &empty, &[], 2);
+        assert!(w0.is_empty());
+        assert!(y0.data.iter().all(|&v| v == 0.0));
     }
 
     #[test]

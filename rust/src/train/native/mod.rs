@@ -18,10 +18,12 @@
 //!   in-order all-reduce, plus [`train_step_oracle`], the serial
 //!   bit-for-bit reference.
 //!
-//! [`model`] holds the trainable [`NativeModel`] whose forward is
-//! composed from the staged functions of [`crate::ops::model_ref`] —
-//! the per-root logits are bit-for-bit those of the AOT bit-level
-//! reference over the padded batch.
+//! [`model`] holds the trainable [`NativeModel`]: a generic
+//! [`crate::layers::GraphUpdate`] stack whose convolution is chosen by
+//! the config's `model.type` (mpnn | gcn | sage | gatv2). For the mpnn
+//! configuration the forward is composed from the staged functions of
+//! [`crate::ops::model_ref`] — the per-root logits are bit-for-bit
+//! those of the AOT bit-level reference over the padded batch.
 
 pub mod grad;
 pub mod model;

@@ -1,18 +1,20 @@
-//! The mpnn model as native, trainable Rust state.
+//! The trainable native model: a generic GraphUpdate stack.
 //!
 //! [`NativeModel`] owns a flat parameter list (name → [`Mat`], in a
 //! deterministic creation order) plus the [`ModelConfig`] describing
-//! the architecture. Its forward pass is composed from the *staged*
-//! functions of [`crate::ops::model_ref`] — the same code the AOT
-//! bit-level reference runs — so `forward_logits` on a component is
-//! bit-for-bit identical to the corresponding row of
-//! [`crate::ops::model_ref::mpnn_forward_with_config`] over the padded
-//! batch (asserted in `tests/native_training.rs`).
+//! the architecture and the validated [`ConvKind`] its edge sets run.
+//! The per-layer work — one [`crate::layers::Convolution`] per edge
+//! set, merged through the next-state MLP — is delegated to
+//! [`crate::layers::GraphUpdate`], so the mpnn that used to be
+//! hardwired here is now just one registered configuration of the
+//! generic stack (and `tests/native_training.rs` still asserts its
+//! per-component logits are **bit-for-bit** the padded AOT bit-level
+//! reference, [`crate::ops::model_ref::mpnn_forward_with_config`]).
 //!
-//! [`NativeModel::forward_tape`] additionally records the [`Tape`]:
-//! every pre-relu activation, gathered edge input, and index array the
-//! reverse sweep needs. [`NativeModel::backward`] then walks the tape
-//! in reverse, composing the VJP rules of [`super::grad`], and
+//! [`NativeModel::forward_tape`] records the [`Tape`]: every pre-relu
+//! activation, gathered edge input, softmax weight and index array the
+//! reverse sweep needs. [`NativeModel::backward`] walks the tape in
+//! reverse, composing the VJP rules of [`super::grad`], and
 //! accumulates parameter gradients into a caller-owned flat buffer —
 //! which is what makes data-parallel replicas cheap: each replica owns
 //! one gradient buffer and the trainer all-reduces them in order.
@@ -20,37 +22,12 @@
 use std::collections::BTreeMap;
 
 use crate::graph::GraphTensor;
-use crate::ops::model_ref::{
-    edge_conv_fused, edge_conv_tape, encode_dense, node_update, root_readout, EdgeConvSaved,
-    Mat, ModelConfig, NodeUpdateSaved,
-};
+use crate::layers::{ConvDims, ConvKind, GraphUpdate, LayerTape, ModelBuilder};
+use crate::ops::model_ref::{encode_dense, root_readout, Mat, ModelConfig};
 use crate::runtime::HostTensor;
 use crate::train::native::grad;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
-
-/// Saved activations of one edge convolution plus the index arrays
-/// needed to route gradients back to the endpoint states.
-#[derive(Debug, Clone)]
-pub struct EdgeTape {
-    pub es: String,
-    pub send_set: String,
-    pub n_send: usize,
-    /// Sender gather indices (the edge set's *target* endpoint).
-    pub sidx: Vec<i32>,
-    /// Receiver gather/pool indices (the edge set's *source* endpoint).
-    pub ridx: Vec<i32>,
-    pub saved: EdgeConvSaved,
-}
-
-/// Saved activations of one node set's update in one layer.
-#[derive(Debug, Clone)]
-pub struct UpdateTape {
-    /// Per pooled edge set, in sorted edge-set-name order (the forward
-    /// order).
-    pub edges: Vec<EdgeTape>,
-    pub node: NodeUpdateSaved,
-}
 
 /// Everything the backward sweep needs from one forward pass.
 #[derive(Debug, Clone)]
@@ -60,16 +37,19 @@ pub struct Tape {
     /// Embedding-gather indices per id-embedding node set.
     pub emb_idx: BTreeMap<String, Vec<i32>>,
     /// Per layer: node set → its update's saved activations.
-    pub layers: Vec<BTreeMap<String, UpdateTape>>,
+    pub layers: Vec<LayerTape>,
     /// Gathered root states (input of the linear head).
     pub root_states: Mat,
     pub roots: Vec<i32>,
 }
 
-/// The trainable model: config + named flat parameters.
+/// The trainable model: config + conv kind + named flat parameters.
 #[derive(Debug, Clone)]
 pub struct NativeModel {
     pub cfg: ModelConfig,
+    /// The convolution every edge set runs (`model.type`), validated
+    /// by [`ModelBuilder`].
+    pub conv: ConvKind,
     /// Parameter names in creation order (encoders, embeddings, layer
     /// updates, head) — the canonical checkpoint/optimizer-state order.
     pub names: Vec<String>,
@@ -85,22 +65,13 @@ fn glorot(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
 impl NativeModel {
     /// Create a model with Glorot-uniform weights and zero biases,
     /// deterministically from `seed` (the config's `train.init_seed`).
+    /// The architecture — which convolution, how many rounds — comes
+    /// straight from the config's `model` block via [`ModelBuilder`].
     pub fn init(cfg: ModelConfig, seed: u64) -> Result<NativeModel> {
-        // Validate the receiver-is-SOURCE convention up front so the
-        // forward never indexes a mismatched endpoint.
-        for (node_set, edges) in &cfg.updates {
-            for es in edges {
-                let (src, _tgt) = cfg.edge_endpoints.get(es).ok_or_else(|| {
-                    Error::Schema(format!("update pools unknown edge set {es:?}"))
-                })?;
-                if src != node_set {
-                    return Err(Error::Schema(format!(
-                        "update for {node_set:?} pools {es:?}, whose source is {src:?} \
-                         (receiver must be the SOURCE endpoint)"
-                    )));
-                }
-            }
-        }
+        let builder = ModelBuilder::from_config(&cfg)?;
+        let conv = builder.conv();
+        let dims =
+            ConvDims { hidden: cfg.hidden, message: cfg.message, att: cfg.att_dim };
         let mut rng = Rng::new(seed);
         let mut names: Vec<String> = Vec::new();
         let mut params: Vec<Mat> = Vec::new();
@@ -140,12 +111,16 @@ impl NativeModel {
                 let mut edge_names: Vec<&String> = edge_list.iter().collect();
                 edge_names.sort();
                 for es in &edge_names {
-                    names.push(format!("l{layer}.{node_set}.{es}.msg.w"));
-                    params.push(glorot(&mut rng, 2 * cfg.hidden, cfg.message));
-                    names.push(format!("l{layer}.{node_set}.{es}.msg.b"));
-                    params.push(Mat::zeros(1, cfg.message));
+                    for shape in conv.param_shapes(dims) {
+                        names.push(format!("l{layer}.{node_set}.{es}.{}", shape.suffix));
+                        params.push(if shape.zero_init {
+                            Mat::zeros(shape.rows, shape.cols)
+                        } else {
+                            glorot(&mut rng, shape.rows, shape.cols)
+                        });
+                    }
                 }
-                let in_dim = cfg.hidden + edge_names.len() * cfg.message;
+                let in_dim = cfg.hidden + edge_names.len() * conv.out_dim(dims);
                 names.push(format!("l{layer}.{node_set}.next.w"));
                 params.push(glorot(&mut rng, in_dim, cfg.hidden));
                 names.push(format!("l{layer}.{node_set}.next.b"));
@@ -157,7 +132,17 @@ impl NativeModel {
         names.push("head.b".to_string());
         params.push(Mat::zeros(1, cfg.num_classes));
         let index = names.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
-        Ok(NativeModel { cfg, names, params, index })
+        Ok(NativeModel { cfg, conv: builder.kind, names, params, index })
+    }
+
+    /// The one-round update view over this model's parameters.
+    fn update_view(&self) -> GraphUpdate<'_> {
+        GraphUpdate {
+            cfg: &self.cfg,
+            conv: self.conv.conv(),
+            params: &self.params,
+            index: &self.index,
+        }
     }
 
     /// Index of a named parameter in the flat list.
@@ -255,54 +240,17 @@ impl NativeModel {
 
     /// Forward pass over one (usually single-component) GraphTensor,
     /// reading out `roots` from `root_set` — **without** a tape, on the
-    /// fused edge-convolution fast path. Used by eval and serving.
+    /// convolutions' fused fast paths. Used by eval and serving.
     pub fn forward_logits(
         &self,
         g: &GraphTensor,
         root_set: &str,
         roots: &[i32],
     ) -> Result<Mat> {
-        let cfg = &self.cfg;
         let (mut h, _enc_z, _emb_idx) = self.initial_states(g)?;
-        for layer in 0..cfg.layers {
-            // Pass-through sets carry their state forward; updated
-            // sets' new states are inserted below (cloning them here
-            // only to overwrite would be pure memcpy waste).
-            let mut new_h: BTreeMap<String, Mat> = h
-                .iter()
-                .filter(|(set, _)| !cfg.updates.contains_key(*set))
-                .map(|(set, m)| (set.clone(), m.clone()))
-                .collect();
-            for (node_set, edge_list) in &cfg.updates {
-                let n_recv = g.num_nodes(node_set)?;
-                let mut pooled = Vec::new();
-                let mut edge_names: Vec<&String> = edge_list.iter().collect();
-                edge_names.sort();
-                for es in edge_names {
-                    let adj = &g.edge_set(es)?.adjacency;
-                    let sidx: Vec<i32> = adj.target.iter().map(|&x| x as i32).collect();
-                    let ridx: Vec<i32> = adj.source.iter().map(|&x| x as i32).collect();
-                    let send_set = &cfg.edge_endpoints[es].1;
-                    pooled.push(edge_conv_fused(
-                        &h[send_set],
-                        &h[node_set],
-                        &sidx,
-                        &ridx,
-                        self.param(&format!("l{layer}.{node_set}.{es}.msg.w"))?,
-                        &self.param(&format!("l{layer}.{node_set}.{es}.msg.b"))?.data,
-                        n_recv,
-                    ));
-                }
-                let mut parts: Vec<&Mat> = vec![&h[node_set]];
-                parts.extend(pooled.iter());
-                let (next, _saved) = node_update(
-                    &parts,
-                    self.param(&format!("l{layer}.{node_set}.next.w"))?,
-                    &self.param(&format!("l{layer}.{node_set}.next.b"))?.data,
-                );
-                new_h.insert(node_set.clone(), next);
-            }
-            h = new_h;
+        let view = self.update_view();
+        for layer in 0..self.cfg.layers {
+            h = view.forward(g, &h, layer)?;
         }
         let h_root = h
             .get(root_set)
@@ -313,67 +261,22 @@ impl NativeModel {
     }
 
     /// Forward pass recording the [`Tape`]. Bit-for-bit the same logits
-    /// as [`Self::forward_logits`] (the tape edge convolution is the
-    /// unfused sequence, which is bit-equal to the fused one).
+    /// as [`Self::forward_logits`] (each convolution's tape path is
+    /// bit-equal to its fused path — the [`crate::layers::Convolution`]
+    /// contract).
     pub fn forward_tape(
         &self,
         g: &GraphTensor,
         root_set: &str,
         roots: &[i32],
     ) -> Result<(Mat, Tape)> {
-        let cfg = &self.cfg;
         let (mut h, enc_z, emb_idx) = self.initial_states(g)?;
-        let mut layers = Vec::with_capacity(cfg.layers);
-        for layer in 0..cfg.layers {
-            // As in forward_logits: clone only pass-through sets.
-            let mut new_h: BTreeMap<String, Mat> = h
-                .iter()
-                .filter(|(set, _)| !cfg.updates.contains_key(*set))
-                .map(|(set, m)| (set.clone(), m.clone()))
-                .collect();
-            let mut layer_tape: BTreeMap<String, UpdateTape> = BTreeMap::new();
-            for (node_set, edge_list) in &cfg.updates {
-                let n_recv = g.num_nodes(node_set)?;
-                let mut pooled = Vec::new();
-                let mut edges = Vec::new();
-                let mut edge_names: Vec<&String> = edge_list.iter().collect();
-                edge_names.sort();
-                for es in edge_names {
-                    let adj = &g.edge_set(es)?.adjacency;
-                    let sidx: Vec<i32> = adj.target.iter().map(|&x| x as i32).collect();
-                    let ridx: Vec<i32> = adj.source.iter().map(|&x| x as i32).collect();
-                    let send_set = &cfg.edge_endpoints[es].1;
-                    let (p, saved) = edge_conv_tape(
-                        &h[send_set],
-                        &h[node_set],
-                        &sidx,
-                        &ridx,
-                        self.param(&format!("l{layer}.{node_set}.{es}.msg.w"))?,
-                        &self.param(&format!("l{layer}.{node_set}.{es}.msg.b"))?.data,
-                        n_recv,
-                    );
-                    pooled.push(p);
-                    edges.push(EdgeTape {
-                        es: es.clone(),
-                        send_set: send_set.clone(),
-                        n_send: g.num_nodes(send_set)?,
-                        sidx,
-                        ridx,
-                        saved,
-                    });
-                }
-                let mut parts: Vec<&Mat> = vec![&h[node_set]];
-                parts.extend(pooled.iter());
-                let (next, node_saved) = node_update(
-                    &parts,
-                    self.param(&format!("l{layer}.{node_set}.next.w"))?,
-                    &self.param(&format!("l{layer}.{node_set}.next.b"))?.data,
-                );
-                layer_tape.insert(node_set.clone(), UpdateTape { edges, node: node_saved });
-                new_h.insert(node_set.clone(), next);
-            }
+        let view = self.update_view();
+        let mut layers = Vec::with_capacity(self.cfg.layers);
+        for layer in 0..self.cfg.layers {
+            let (next, layer_tape) = view.forward_tape(g, &h, layer)?;
             layers.push(layer_tape);
-            h = new_h;
+            h = next;
         }
         let h_root = h
             .get(root_set)
@@ -386,8 +289,9 @@ impl NativeModel {
 
     /// Reverse sweep: accumulate `∂L/∂params` into `grads` given
     /// `dlogits = ∂L/∂logits` and the tape of the matching forward.
-    /// Composes the op VJPs of [`super::grad`] in exact reverse order
-    /// of the forward stages.
+    /// Composes the head/encoder VJPs here with one
+    /// [`GraphUpdate::backward`] per round, in exact reverse order of
+    /// the forward stages.
     pub fn backward(
         &self,
         g: &GraphTensor,
@@ -416,59 +320,10 @@ impl NativeModel {
             .ok_or_else(|| Error::Graph(format!("unknown root set {root_set:?}")))?
             .add_assign(&grad::gather_vjp(&tape.roots, n_root, &d_root_states));
 
-        // Layers, in reverse.
+        // GraphUpdate rounds, in reverse.
+        let view = self.update_view();
         for layer in (0..cfg.layers).rev() {
-            let layer_tape = &tape.layers[layer];
-            let mut dh_prev: BTreeMap<String, Mat> = BTreeMap::new();
-            for set in &cfg.node_order {
-                if layer_tape.contains_key(set) {
-                    dh_prev.insert(set.clone(), dh[set].zeros_like());
-                } else {
-                    // Pass-through: new_h[set] was a clone of h[set].
-                    dh_prev.insert(set.clone(), dh[set].clone());
-                }
-            }
-            for (node_set, ut) in layer_tape {
-                let d_next = &dh[node_set];
-                // relu → bias → matmul of the next-state MLP.
-                let dz = grad::relu_vjp(&ut.node.z, d_next);
-                let w_next_idx = self.idx(&format!("l{layer}.{node_set}.next.w"))?;
-                let (dx_cat, d_w_next) =
-                    grad::matmul_vjp(&ut.node.x_cat, &self.params[w_next_idx], &dz);
-                grads[w_next_idx].add_assign(&d_w_next);
-                grads[self.idx(&format!("l{layer}.{node_set}.next.b"))?]
-                    .add_assign(&row_mat(grad::bias_vjp(&dz)));
-                // Split the concat back into [h_self ‖ pooled…].
-                let mut widths = vec![cfg.hidden];
-                widths.extend(std::iter::repeat(cfg.message).take(ut.edges.len()));
-                let mut pieces = grad::concat_cols_vjp(&widths, &dx_cat);
-                let d_pooled_list = pieces.split_off(1);
-                dh_prev.get_mut(node_set.as_str()).unwrap().add_assign(&pieces[0]);
-                // Edge convolutions, each: pool → relu → bias → matmul
-                // → concat-split → two gathers.
-                for (et, d_pooled) in ut.edges.iter().zip(&d_pooled_list) {
-                    let d_msg = grad::segment_sum_vjp(&et.ridx, d_pooled);
-                    let dz_msg = grad::relu_vjp(&et.saved.z_msg, &d_msg);
-                    let w_idx = self.idx(&format!("l{layer}.{node_set}.{}.msg.w", et.es))?;
-                    let (dx_edge, d_w_msg) =
-                        grad::matmul_vjp(&et.saved.x_edge, &self.params[w_idx], &dz_msg);
-                    grads[w_idx].add_assign(&d_w_msg);
-                    grads[self.idx(&format!("l{layer}.{node_set}.{}.msg.b", et.es))?]
-                        .add_assign(&row_mat(grad::bias_vjp(&dz_msg)));
-                    let endpoint_widths = [cfg.hidden, cfg.hidden];
-                    let endpoint_grads = grad::concat_cols_vjp(&endpoint_widths, &dx_edge);
-                    dh_prev
-                        .get_mut(et.send_set.as_str())
-                        .unwrap()
-                        .add_assign(&grad::gather_vjp(&et.sidx, et.n_send, &endpoint_grads[0]));
-                    let n_recv = dh[node_set].rows;
-                    dh_prev
-                        .get_mut(node_set.as_str())
-                        .unwrap()
-                        .add_assign(&grad::gather_vjp(&et.ridx, n_recv, &endpoint_grads[1]));
-                }
-            }
-            dh = dh_prev;
+            dh = view.backward(&tape.layers[layer], layer, &dh, grads)?;
         }
 
         // Encoders / embeddings.
@@ -525,6 +380,7 @@ mod tests {
     fn init_is_deterministic_and_complete() {
         let a = tiny_model();
         let b = tiny_model();
+        assert_eq!(a.conv, ConvKind::Mpnn);
         assert_eq!(a.names, b.names);
         for (x, y) in a.params.iter().zip(&b.params) {
             assert_eq!(x.data, y.data);
@@ -553,6 +409,17 @@ mod tests {
     }
 
     #[test]
+    fn init_rejects_invalid_stacks() {
+        let mag = crate::synth::mag::MagConfig::tiny();
+        let zero_layers = ModelConfig::for_mag(&mag, 8, 8, 0);
+        let err = NativeModel::init(zero_layers, 7).expect_err("0 layers rejected");
+        assert!(err.to_string().contains("num_layers"), "{err}");
+        let unknown = ModelConfig::for_mag(&mag, 8, 8, 1).with_arch("transformer");
+        let err = NativeModel::init(unknown, 7).expect_err("unknown type rejected");
+        assert!(err.to_string().contains("transformer"), "{err}");
+    }
+
+    #[test]
     fn forward_tape_matches_forward_logits_bitexact() {
         let model = tiny_model();
         for seed in [0u32, 3, 11] {
@@ -566,6 +433,30 @@ mod tests {
             }
             assert_eq!(tape.layers.len(), model.cfg.layers);
             assert_eq!(tape.root_states.rows, 1);
+        }
+    }
+
+    /// The same fast==tape bit contract across the whole zoo, at the
+    /// model level (heterogeneous MAG schema, all parameter roles).
+    #[test]
+    fn zoo_forward_tape_matches_forward_logits_bitexact() {
+        let mag = crate::synth::mag::MagConfig::tiny();
+        for arch in ["gcn", "sage", "gatv2"] {
+            let mut cfg = ModelConfig::for_mag(&mag, 8, 8, 2).with_arch(arch);
+            if arch == "sage" {
+                cfg.sage_reduce = "max".into(); // the trickier reduction
+            }
+            let model = NativeModel::init(cfg, 7).unwrap();
+            assert_eq!(model.conv.name(), arch);
+            for seed in [1u32, 6] {
+                let g = sample_component(seed);
+                let fast = model.forward_logits(&g, "paper", &[0]).unwrap();
+                let (taped, _tape) = model.forward_tape(&g, "paper", &[0]).unwrap();
+                assert_eq!(fast.cols, model.cfg.num_classes);
+                for (a, b) in fast.data.iter().zip(&taped.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{arch} seed {seed}");
+                }
+            }
         }
     }
 

@@ -1,0 +1,311 @@
+//! Layer-subsystem gradient checks (no artifacts needed):
+//!
+//! * the GATv2 attention convolution's VJP against central finite
+//!   differences — over its parameters AND both endpoint states — on
+//!   graphs that include single-edge receivers and receivers with no
+//!   edges at all (the all-masked case);
+//! * a heterogeneous **two-edge-set** `GraphUpdate` (dense-featured
+//!   receivers, id-embedded senders, one isolated receiver per edge
+//!   set) gradchecked end-to-end through `NativeModel::backward` for
+//!   every convolution of the zoo.
+//!
+//! Tolerances: these checks run through whole layers, so a ±h probe
+//! can push downstream pre-activations across the relu kink (the
+//! op-level tests in `train/native/grad.rs` control their inputs to
+//! exclude that; a composed layer cannot). The kink's FD error is
+//! bounded by h·O(per-element gradient) ≈ 1e-2, so the gate is 2e-2 —
+//! still an order of magnitude below any structural mistake (a wrong
+//! transpose, a dropped softmax term, a mis-routed segment are all
+//! ≥ 1e-1).
+
+use std::collections::BTreeMap;
+
+use tfgnn::graph::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};
+use tfgnn::layers::{ConvCtx, ConvDims, ConvInputs, ConvKind};
+use tfgnn::ops::model_ref::{Mat, ModelConfig};
+use tfgnn::train::native::NativeModel;
+use tfgnn::util::rng::Rng;
+
+const H: f32 = 1e-2;
+const TOL: f64 = 2e-2;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat { rows, cols, data: (0..rows * cols).map(|_| rng.range_f32(-1.0, 1.0)).collect() }
+}
+
+/// Weighted-sum loss (f64 accumulation): dY is exactly `w`.
+fn wsum(y: &Mat, w: &[f32]) -> f64 {
+    y.data.iter().zip(w).map(|(&v, &wv)| v as f64 * wv as f64).sum()
+}
+
+fn assert_close(what: &str, analytic: f64, fd: f64) {
+    let denom = analytic.abs().max(fd.abs()).max(1.0);
+    assert!(
+        (analytic - fd).abs() / denom <= TOL,
+        "{what}: analytic {analytic} vs finite difference {fd}"
+    );
+}
+
+/// A bipartite graph for the conv-level checks: receivers "r" (edge
+/// SOURCE endpoint, 5 nodes) and senders "s" (TARGET endpoint, 4
+/// nodes). Receiver 2 has exactly one incident edge; receivers 3 and 4
+/// have none (all-masked).
+fn attention_graph() -> (GraphTensor, ConvCtx) {
+    let source = vec![0u32, 0, 1, 1, 1, 2];
+    let target = vec![1u32, 3, 0, 2, 3, 2];
+    let es = EdgeSet::new(
+        vec![source.len()],
+        Adjacency {
+            source_set: "r".into(),
+            target_set: "s".into(),
+            source: source.clone(),
+            target: target.clone(),
+        },
+    );
+    let g = GraphTensor::from_pieces(
+        Context::default(),
+        [
+            ("r".to_string(), NodeSet::new(vec![5])),
+            ("s".to_string(), NodeSet::new(vec![4])),
+        ]
+        .into(),
+        [("e".to_string(), es)].into(),
+    )
+    .unwrap();
+    let dims = ConvDims { hidden: 3, message: 4, att: 2 };
+    let ctx = ConvCtx {
+        sidx: target.iter().map(|&v| v as i32).collect(),
+        ridx: source.iter().map(|&v| v as i32).collect(),
+        n_send: 4,
+        n_recv: 5,
+        dims,
+    };
+    (g, ctx)
+}
+
+/// Central finite differences through the GATv2 convolution: every
+/// parameter tensor and both endpoint state matrices, against the
+/// analytic backward, on the single-edge / empty-receiver graph.
+#[test]
+fn gradcheck_gatv2_attention_vjp() {
+    let (g, ctx) = attention_graph();
+    let dims = ctx.dims;
+    let conv = ConvKind::Gatv2.conv();
+    let mut rng = Rng::new(2024);
+    let params: Vec<Mat> = conv
+        .param_shapes(dims)
+        .iter()
+        .map(|s| rand_mat(&mut rng, s.rows, s.cols))
+        .collect();
+    let sender_h = rand_mat(&mut rng, ctx.n_send, dims.hidden);
+    let receiver_h = rand_mat(&mut rng, ctx.n_recv, dims.hidden);
+    let w = (0..ctx.n_recv * dims.message)
+        .map(|_| rng.range_f32(-1.0, 1.0))
+        .collect::<Vec<_>>();
+
+    let loss_of = |params: &[Mat], sender: &Mat, receiver: &Mat| -> f64 {
+        let prefs: Vec<&Mat> = params.iter().collect();
+        let x = ConvInputs { g: &g, es: "e", sender_h: sender, receiver_h: receiver, ctx: &ctx };
+        let (out, _saved) = conv.forward_tape(&x, &prefs).unwrap();
+        wsum(&out, &w)
+    };
+
+    // Analytic gradients.
+    let prefs: Vec<&Mat> = params.iter().collect();
+    let x = ConvInputs { g: &g, es: "e", sender_h: &sender_h, receiver_h: &receiver_h, ctx: &ctx };
+    let (out, saved) = conv.forward_tape(&x, &prefs).unwrap();
+    assert_eq!((out.rows, out.cols), (5, dims.message));
+    // Empty receivers pool to exactly zero.
+    for r in [3usize, 4] {
+        assert!(out.row(r).iter().all(|&v| v == 0.0), "receiver {r} has no edges");
+    }
+    let d_out = Mat { rows: out.rows, cols: out.cols, data: w.clone() };
+    let mut grads: Vec<Mat> = params.iter().map(Mat::zeros_like).collect();
+    let gidx: Vec<usize> = (0..params.len()).collect();
+    let (d_sender, d_receiver) =
+        conv.backward(&ctx, &saved, &d_out, &prefs, &mut grads, &gidx).unwrap();
+
+    // FD over every element of every parameter.
+    for (pi, shape) in conv.param_shapes(dims).iter().enumerate() {
+        for ei in 0..params[pi].data.len() {
+            let mut pp = params.clone();
+            pp[pi].data[ei] += H;
+            let mut pm = params.clone();
+            pm[pi].data[ei] -= H;
+            let fd = (loss_of(&pp, &sender_h, &receiver_h)
+                - loss_of(&pm, &sender_h, &receiver_h))
+                / (2.0 * H as f64);
+            assert_close(
+                &format!("gatv2 {}[{ei}]", shape.suffix),
+                grads[pi].data[ei] as f64,
+                fd,
+            );
+        }
+    }
+    // FD over both endpoint states.
+    for ei in 0..sender_h.data.len() {
+        let mut sp = sender_h.clone();
+        sp.data[ei] += H;
+        let mut sm = sender_h.clone();
+        sm.data[ei] -= H;
+        let fd =
+            (loss_of(&params, &sp, &receiver_h) - loss_of(&params, &sm, &receiver_h))
+                / (2.0 * H as f64);
+        assert_close(&format!("gatv2 d_sender[{ei}]"), d_sender.data[ei] as f64, fd);
+    }
+    for ei in 0..receiver_h.data.len() {
+        let mut rp = receiver_h.clone();
+        rp.data[ei] += H;
+        let mut rm = receiver_h.clone();
+        rm.data[ei] -= H;
+        let fd =
+            (loss_of(&params, &sender_h, &rp) - loss_of(&params, &sender_h, &rm))
+                / (2.0 * H as f64);
+        assert_close(&format!("gatv2 d_receiver[{ei}]"), d_receiver.data[ei] as f64, fd);
+    }
+    // All-masked receivers (no incident edges) receive exactly zero
+    // state gradient — nothing in the convolution touches them.
+    assert!(d_receiver.row(3).iter().all(|&v| v == 0.0), "isolated receiver grads");
+    assert!(d_receiver.row(4).iter().all(|&v| v == 0.0), "isolated receiver grads");
+}
+
+/// A heterogeneous two-node-set / two-edge-set schema: "user" nodes
+/// carry a dense feature, "item" nodes an id-embedding; both edge sets
+/// pool into "user". User 3 has no "buys" edges and user 2 exactly
+/// one; "views" leaves users 2 and 3 isolated.
+fn hetero_model_config(arch: &str) -> ModelConfig {
+    let s = |x: &str| x.to_string();
+    let mut updates = BTreeMap::new();
+    updates.insert(s("user"), vec![s("buys"), s("views")]);
+    let mut edge_endpoints = BTreeMap::new();
+    edge_endpoints.insert(s("buys"), (s("user"), s("item")));
+    edge_endpoints.insert(s("views"), (s("user"), s("item")));
+    let node_order = vec![s("item"), s("user")];
+    let mut id_embedding = BTreeMap::new();
+    id_embedding.insert(s("item"), true);
+    id_embedding.insert(s("user"), false);
+    let mut features = BTreeMap::new();
+    features.insert(s("item"), Vec::new());
+    features.insert(s("user"), vec![s("feat")]);
+    let mut feature_dims = BTreeMap::new();
+    feature_dims.insert(s("item"), BTreeMap::new());
+    feature_dims.insert(s("user"), [(s("feat"), 3usize)].into());
+    let mut cardinality = BTreeMap::new();
+    cardinality.insert(s("item"), 6usize);
+    ModelConfig {
+        arch: s(arch),
+        hidden: 4,
+        message: 4,
+        att_dim: 3,
+        sage_reduce: s("mean"),
+        layers: 2,
+        updates,
+        edge_endpoints,
+        node_order,
+        id_embedding,
+        features,
+        feature_dims,
+        cardinality,
+        num_classes: 3,
+    }
+}
+
+fn hetero_graph(rng: &mut Rng) -> GraphTensor {
+    let users = NodeSet::new(vec![4]).with_feature(
+        "feat",
+        Feature::f32_mat(3, (0..4 * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect()),
+    );
+    let items = NodeSet::new(vec![5]).with_feature("#id", Feature::i64_vec(vec![0, 2, 1, 4, 3]));
+    let buys = EdgeSet::new(
+        vec![4],
+        Adjacency {
+            source_set: "user".into(),
+            target_set: "item".into(),
+            source: vec![0, 0, 1, 2], // user 3 isolated, user 2 single-edge
+            target: vec![1, 4, 0, 2],
+        },
+    );
+    let views = EdgeSet::new(
+        vec![4],
+        Adjacency {
+            source_set: "user".into(),
+            target_set: "item".into(),
+            source: vec![1, 1, 1, 0], // users 2 and 3 isolated
+            target: vec![3, 3, 2, 0],
+        },
+    );
+    GraphTensor::from_pieces(
+        Context::default(),
+        [("user".to_string(), users), ("item".to_string(), items)].into(),
+        [("buys".to_string(), buys), ("views".to_string(), views)].into(),
+    )
+    .unwrap()
+}
+
+/// Finite differences through a whole heterogeneous 2-edge-set
+/// GraphUpdate stack (2 rounds, id-embedding + dense encoder, root
+/// readout) for every convolution of the zoo: probes of every
+/// parameter tensor must match `NativeModel::backward`.
+#[test]
+fn gradcheck_heterogeneous_two_edge_set_graph_update() {
+    let mut rng = Rng::new(4242);
+    let g = hetero_graph(&mut rng);
+    let roots = [0i32, 2];
+    for arch in ["mpnn", "gcn", "sage", "gatv2"] {
+        let model = NativeModel::init(hetero_model_config(arch), 17).unwrap();
+        let w: Vec<f32> =
+            (0..roots.len() * model.cfg.num_classes).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let loss_of = |m: &NativeModel| -> f64 {
+            wsum(&m.forward_logits(&g, "user", &roots).unwrap(), &w)
+        };
+        let (logits, tape) = model.forward_tape(&g, "user", &roots).unwrap();
+        assert_eq!((logits.rows, logits.cols), (2, 3), "{arch}");
+        let dlogits = Mat { rows: 2, cols: 3, data: w.clone() };
+        let mut grads = model.zeros_grads();
+        model.backward(&g, &tape, &dlogits, "user", &mut grads).unwrap();
+
+        let mut probed = 0usize;
+        for (pi, name) in model.names.iter().enumerate() {
+            let n = model.params[pi].data.len();
+            // Deterministic probes: first, middle, last element.
+            for ei in [0, n / 2, n - 1] {
+                let mut mp = model.clone();
+                mp.params[pi].data[ei] += H;
+                let mut mm = model.clone();
+                mm.params[pi].data[ei] -= H;
+                let fd = (loss_of(&mp) - loss_of(&mm)) / (2.0 * H as f64);
+                assert_close(
+                    &format!("{arch} {name}[{ei}]"),
+                    grads[pi].data[ei] as f64,
+                    fd,
+                );
+                probed += 1;
+            }
+        }
+        assert!(probed >= 3 * model.names.len(), "{arch}: probed {probed}");
+    }
+}
+
+/// The two edge sets merge in sorted-name order ("buys" before
+/// "views") — the determinism guarantee DESIGN.md documents. Swapping
+/// the declaration order of the update's edge list must not change a
+/// single output bit.
+#[test]
+fn hetero_merge_order_is_sorted_not_declaration_order() {
+    let mut rng = Rng::new(7);
+    let g = hetero_graph(&mut rng);
+    for arch in ["mpnn", "gatv2"] {
+        let a = NativeModel::init(hetero_model_config(arch), 3).unwrap();
+        let mut cfg_swapped = hetero_model_config(arch);
+        cfg_swapped
+            .updates
+            .insert("user".to_string(), vec!["views".to_string(), "buys".to_string()]);
+        let b = NativeModel::init(cfg_swapped, 3).unwrap();
+        assert_eq!(a.names, b.names, "{arch}: param creation order is sorted");
+        let la = a.forward_logits(&g, "user", &[0, 2]).unwrap();
+        let lb = b.forward_logits(&g, "user", &[0, 2]).unwrap();
+        for (x, y) in la.data.iter().zip(&lb.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{arch}");
+        }
+    }
+}
