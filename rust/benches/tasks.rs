@@ -1,0 +1,229 @@
+//! Bench: the task subsystem (per-objective train-step throughput).
+//!
+//! Times `NativeTrainer::train_batch` for each readout head — root
+//! classification, link prediction (Hadamard-MLP + softmax over pair
+//! subgraphs), graph regression (mean-pool + MSE) — over
+//! pipeline-shaped padded batches of a synth-MAG graph, at 1/8 replica
+//! threads. **Parity is asserted before any timing**, per task: the
+//! 1-thread trainer must match the serial oracle bit-for-bit (params
+//! and loss), and the 8-thread loss must match within 1e-5 relative.
+//! Every row lands in `BENCH_tasks.json` for the perf-tracking CI
+//! lane.
+//!
+//! Run: `cargo bench --bench tasks`
+//! (set `TFGNN_BENCH_SMOKE=1` for the short CI mode).
+
+use std::sync::Arc;
+
+use tfgnn::graph::pad::{fit_or_skip, Padded, PadSpec};
+use tfgnn::ops::model_ref::{ModelConfig, TaskConfig};
+use tfgnn::sampler::inmem::InMemorySampler;
+use tfgnn::sampler::spec::mag_sampling_spec_scaled;
+use tfgnn::synth::mag::{edge_holdout, generate, MagConfig, MagDataset, Split};
+use tfgnn::tasks::link_prediction::pair_example;
+use tfgnn::train::native::{
+    train_step_oracle_task, Adam, AdamConfig, NativeModel, NativeTrainer,
+};
+use tfgnn::util::stats::{smoke, Bench, BenchReport};
+
+fn rel_diff(a: f32, b: f32) -> f64 {
+    let (a, b) = (a as f64, b as f64);
+    (a - b).abs() / a.abs().max(b.abs()).max(1e-12)
+}
+
+/// Padded seed-rooted batches (classification / regression examples).
+fn seed_batches(
+    ds: &MagDataset,
+    sampler: &InMemorySampler,
+    batch: usize,
+    count: usize,
+) -> Vec<Padded> {
+    let seeds = ds.papers_in_split(Split::Train);
+    let probe: Vec<_> = seeds.iter().take(16).map(|&s| sampler.sample(s).unwrap()).collect();
+    let pad = PadSpec::fit(&probe.iter().collect::<Vec<_>>(), batch, 2.0);
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    while out.len() < count && at + batch <= seeds.len() {
+        let graphs: Vec<_> =
+            seeds[at..at + batch].iter().map(|&s| sampler.sample(s).unwrap()).collect();
+        at += batch;
+        if let Some(p) = fit_or_skip(&tfgnn::graph::batch::merge(&graphs).unwrap(), &pad) {
+            out.push(p);
+        }
+    }
+    assert!(!out.is_empty(), "no seed batch fit the pad spec");
+    out
+}
+
+/// Padded pair-subgraph batches (link-prediction examples).
+fn pair_batches(
+    pairs: &[(u32, u32)],
+    sampler: &InMemorySampler,
+    num_papers: usize,
+    negatives: usize,
+    neg_seed: u64,
+    batch: usize,
+    count: usize,
+) -> Vec<Padded> {
+    let probe: Vec<_> = pairs
+        .iter()
+        .take(8)
+        .map(|&(u, v)| pair_example(sampler, u, v, num_papers, negatives, neg_seed).unwrap())
+        .collect();
+    let pad = PadSpec::fit(&probe.iter().collect::<Vec<_>>(), batch, 2.0);
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    while out.len() < count && at + batch <= pairs.len() {
+        let graphs: Vec<_> = pairs[at..at + batch]
+            .iter()
+            .map(|&(u, v)| pair_example(sampler, u, v, num_papers, negatives, neg_seed).unwrap())
+            .collect();
+        at += batch;
+        if let Some(p) = fit_or_skip(&tfgnn::graph::batch::merge(&graphs).unwrap(), &pad) {
+            out.push(p);
+        }
+    }
+    assert!(!out.is_empty(), "no pair batch fit the pad spec");
+    out
+}
+
+/// Parity gates for one (model config, batches) pair, then timed rows.
+fn gate_and_time(
+    report: &mut BenchReport,
+    bench: &Bench,
+    row: &str,
+    detail: &str,
+    cfg: &ModelConfig,
+    batches: &[Padded],
+) {
+    let adam = AdamConfig::default();
+    let model0 = NativeModel::init(cfg.clone(), 3).unwrap();
+    let task = tfgnn::tasks::build(cfg).unwrap();
+
+    // ---- parity gates (must pass before any timing) --------------------
+    let mut oracle_model = model0.clone();
+    let mut oracle_opt = Adam::new(adam, &oracle_model.params);
+    let m_oracle =
+        train_step_oracle_task(&mut oracle_model, &mut oracle_opt, &batches[0], task.as_ref())
+            .unwrap();
+    let mut t1 = NativeTrainer::with_task(model0.clone(), adam, Arc::clone(&task), 1);
+    let m1 = t1.train_batch(&batches[0]).unwrap();
+    assert_eq!(
+        m1.loss.to_bits(),
+        m_oracle.loss.to_bits(),
+        "{row}: 1-thread loss == serial oracle, bit-for-bit"
+    );
+    for ((name, a), b) in
+        t1.model().names.iter().zip(&t1.model().params).zip(&oracle_model.params)
+    {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{row}: param {name} diverged from oracle");
+        }
+    }
+    let mut t8 = NativeTrainer::with_task(model0.clone(), adam, Arc::clone(&task), 8);
+    let m8 = t8.train_batch(&batches[0]).unwrap();
+    assert!(
+        rel_diff(m1.loss, m8.loss) <= 1e-5,
+        "{row}: 8-thread loss {} vs serial {} (rel {})",
+        m8.loss,
+        m1.loss,
+        rel_diff(m1.loss, m8.loss)
+    );
+    println!("# {row}: parity gates passed (1t == oracle bit, 8t loss within 1e-5)");
+
+    // ---- timed rows -----------------------------------------------------
+    let examples_per_pass: usize = batches.iter().map(|b| b.num_real_components).sum();
+    for threads in [1usize, 8] {
+        let mut tr = NativeTrainer::with_task(model0.clone(), adam, Arc::clone(&task), threads);
+        let s = bench.throughput(examples_per_pass, || {
+            for b in batches {
+                tr.train_batch(b).unwrap();
+            }
+        });
+        report.row(row, detail, threads, &s, "items/s");
+    }
+}
+
+fn main() {
+    // Workload: smoke mode shrinks the graph, model and batch count so
+    // the CI lane finishes in seconds but still emits every row.
+    let (papers, authors, hidden, layers, n_batches) =
+        if smoke() { (800, 1_200, 16, 1, 2) } else { (4_000, 6_000, 32, 2, 6) };
+    let batch = 4usize;
+    let mag = MagConfig {
+        num_papers: papers,
+        num_authors: authors,
+        num_institutions: 100,
+        num_fields: 60,
+        ..MagConfig::default()
+    };
+    let ds = generate(&mag);
+
+    let bench = Bench::from_env(1, 5);
+    let mut report = BenchReport::new("tasks");
+    let detail = format!("batch={batch} hidden={hidden} layers={layers}");
+
+    // ---- root classification (the extracted historical objective) ------
+    {
+        let store = Arc::new(ds.store.clone());
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.25).unwrap();
+        let sampler = InMemorySampler::new(store, spec, 42).unwrap();
+        let batches = seed_batches(&ds, &sampler, batch, n_batches);
+        let cfg = ModelConfig::for_mag(&mag, hidden, hidden, layers);
+        println!("# task/root_step: {} batches", batches.len());
+        gate_and_time(&mut report, &bench, "task/root_step", &detail, &cfg, &batches);
+    }
+
+    // ---- link prediction (pair subgraphs, hadamard + softmax) ----------
+    {
+        let tcfg = TaskConfig {
+            kind: "link_prediction".into(),
+            edge_set: "cites".into(),
+            readout: "hadamard".into(),
+            mlp_dim: hidden,
+            loss: "softmax".into(),
+            negatives: 3,
+            hits_k: 3,
+            holdout_fraction: 0.1,
+            split_seed: 77,
+            ..TaskConfig::default()
+        };
+        let holdout = edge_holdout(&ds, "cites", tcfg.holdout_fraction, tcfg.split_seed).unwrap();
+        let store = Arc::new(holdout.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.25).unwrap();
+        let sampler = InMemorySampler::new(store, spec, 42).unwrap();
+        let batches = pair_batches(
+            &holdout.train,
+            &sampler,
+            mag.num_papers,
+            tcfg.negatives,
+            tcfg.split_seed,
+            batch,
+            n_batches,
+        );
+        let cfg = ModelConfig::for_mag(&mag, hidden, hidden, layers).with_task(tcfg);
+        println!("# task/linkpred_step: {} batches", batches.len());
+        gate_and_time(&mut report, &bench, "task/linkpred_step", &detail, &cfg, &batches);
+    }
+
+    // ---- graph regression (mean-pool + MSE) ----------------------------
+    {
+        let store = Arc::new(ds.store.clone());
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.25).unwrap();
+        let sampler = InMemorySampler::new(store, spec, 42).unwrap();
+        let batches = seed_batches(&ds, &sampler, batch, n_batches);
+        let tcfg = TaskConfig {
+            kind: "graph_regression".into(),
+            target_feature: "year".into(),
+            target_shift: 2010.0,
+            target_scale: 0.1,
+            ..TaskConfig::default()
+        };
+        let cfg = ModelConfig::for_mag(&mag, hidden, hidden, layers).with_task(tcfg);
+        println!("# task/graphreg_step: {} batches", batches.len());
+        gate_and_time(&mut report, &bench, "task/graphreg_step", &detail, &cfg, &batches);
+    }
+
+    let path = report.write().expect("write bench json");
+    println!("\nwrote {}", path.display());
+}

@@ -327,20 +327,34 @@ impl ShardWriter {
 pub struct ShardReader {
     r: BufReader<std::fs::File>,
     path: PathBuf,
+    /// File size at open and bytes consumed so far — what
+    /// [`ShardReader::next`] validates each record's `payload_len`
+    /// against before allocating (a corrupted or hostile length field
+    /// must not drive `vec![0u8; len]`).
+    file_len: u64,
+    pos: u64,
 }
 
 impl ShardReader {
     pub fn open(path: &Path) -> Result<ShardReader> {
-        let mut r = BufReader::new(std::fs::File::open(path)?);
+        let file = std::fs::File::open(path)?;
+        let file_len = file.metadata()?.len();
+        let mut r = BufReader::new(file);
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)?;
         if &magic != MAGIC {
             return Err(Error::Codec(format!("{}: bad magic", path.display())));
         }
-        Ok(ShardReader { r, path: path.to_path_buf() })
+        Ok(ShardReader { r, path: path.to_path_buf(), file_len, pos: MAGIC.len() as u64 })
     }
 
     /// Read the next record; `Ok(None)` at clean EOF.
+    ///
+    /// The record's `payload_len` is **untrusted**: it is validated
+    /// against the shard's remaining bytes before any allocation, so a
+    /// bit-flipped or hostile length field yields a structured
+    /// [`Error::Codec`] naming the shard instead of a multi-gigabyte
+    /// allocation followed by a confusing short read.
     pub fn next(&mut self) -> Result<Option<GraphTensor>> {
         let mut len_bytes = [0u8; 8];
         match self.r.read_exact(&mut len_bytes) {
@@ -348,16 +362,41 @@ impl ShardReader {
             Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
             Err(e) => return Err(e.into()),
         }
-        let len = u64::from_le_bytes(len_bytes) as usize;
+        self.pos += 8;
+        let len = u64::from_le_bytes(len_bytes);
+        // 4 bytes of checksum still precede the payload.
+        let remaining = self.file_len.saturating_sub(self.pos).saturating_sub(4);
+        if len > remaining {
+            return Err(Error::Codec(format!(
+                "{}: record payload length {len} exceeds the shard's remaining \
+                 {remaining} bytes (truncated file, or corrupt/hostile length field)",
+                self.path.display()
+            )));
+        }
+        let len = len as usize;
         let mut crc_bytes = [0u8; 4];
-        self.r.read_exact(&mut crc_bytes)?;
+        self.r.read_exact(&mut crc_bytes).map_err(|e| self.trunc_err(e))?;
+        self.pos += 4;
         let want_crc = u32::from_le_bytes(crc_bytes);
         let mut payload = vec![0u8; len];
-        self.r.read_exact(&mut payload)?;
+        self.r.read_exact(&mut payload).map_err(|e| self.trunc_err(e))?;
+        self.pos += len as u64;
         if checksum(&payload) != want_crc {
             return Err(Error::Codec(format!("{}: checksum mismatch", self.path.display())));
         }
         Ok(Some(decode_graph(&payload)?))
+    }
+
+    /// A short read mid-record (the length check bounds payloads by the
+    /// file size at open, so this fires only if the file shrank
+    /// underneath us) — still a structured codec error naming the
+    /// shard.
+    fn trunc_err(&self, e: std::io::Error) -> Error {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Error::Codec(format!("{}: truncated mid-record", self.path.display()))
+        } else {
+            Error::Io(e)
+        }
     }
 }
 
@@ -509,6 +548,73 @@ mod tests {
         w.finish().unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        assert!(r.next().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A record truncated in the middle of its payload must surface as
+    /// a structured `Error::Codec` naming the shard — the untrusted
+    /// `payload_len` now exceeds what the file still holds.
+    #[test]
+    fn truncated_mid_payload_is_codec_error_naming_shard() {
+        let dir = tmpdir("trunc-mid");
+        let path = dir.join("x.gts");
+        let mut w = ShardWriter::create(&path).unwrap();
+        w.write(&recsys_example_graph()).unwrap();
+        w.write(&recsys_example_graph()).unwrap();
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Cut into the middle of the *second* record's payload: the
+        // first record must still read cleanly.
+        let first_payload = encode_graph(&recsys_example_graph()).len();
+        let cut = 4 + 12 + first_payload + 12 + first_payload / 2;
+        assert!(cut < bytes.len());
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        assert!(r.next().unwrap().is_some(), "first record intact");
+        let err = match r.next() {
+            Err(e) => e,
+            other => panic!("expected codec error, got {other:?}"),
+        };
+        let msg = err.to_string();
+        assert!(msg.contains("codec"), "{msg}");
+        assert!(msg.contains("x.gts"), "error must name the shard: {msg}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A bit-flipped length field (here: high byte set, claiming an
+    /// exabyte payload) must be rejected *before* allocation, as a
+    /// structured `Error::Codec` naming the shard.
+    #[test]
+    fn bit_flipped_length_is_codec_error_without_allocation() {
+        let dir = tmpdir("bad-len");
+        let path = dir.join("x.gts");
+        let mut w = ShardWriter::create(&path).unwrap();
+        w.write(&recsys_example_graph()).unwrap();
+        w.finish().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // The u64 length field sits right after the 4-byte magic;
+        // flipping its top byte claims a ~2^60-byte payload. If the
+        // reader trusted it, vec![0u8; len] would try to allocate it.
+        bytes[4 + 7] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        let err = match r.next() {
+            Err(e) => e,
+            other => panic!("expected codec error, got {other:?}"),
+        };
+        let msg = err.to_string();
+        assert!(msg.contains("codec"), "{msg}");
+        assert!(msg.contains("x.gts"), "error must name the shard: {msg}");
+        assert!(msg.contains("length"), "{msg}");
+
+        // A small (but wrong) flipped length lands on the checksum
+        // guard instead — also a structured error, not a panic.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4 + 7] ^= 0x10; // restore
+        bytes[4] ^= 0x01; // off-by-one length
+        std::fs::write(&path, &bytes).unwrap();
         let mut r = ShardReader::open(&path).unwrap();
         assert!(r.next().is_err());
         std::fs::remove_dir_all(&dir).unwrap();

@@ -209,6 +209,41 @@ mod tests {
         });
     }
 
+    /// Unknown keys in the `model` block are rejected by name through
+    /// the same funnel the builder validates — a typo like `att_dims`
+    /// must not silently fall back to defaults.
+    #[test]
+    fn unknown_model_and_task_keys_are_rejected() {
+        // Valid baseline.
+        let ok = r#"{"type": "gatv2", "att_dim": 4, "hidden_dim": 8, "message_dim": 8,
+                     "num_layers": 1, "updates": {"paper": ["cites"]}}"#;
+        assert!(builder_of(ok).is_ok());
+        // Typo'd att_dim.
+        let typo = ok.replace("att_dim", "att_dims");
+        let err = builder_of(&typo).expect_err("att_dims must be rejected");
+        let msg = err.to_string();
+        assert!(msg.contains("att_dims"), "error names the key: {msg}");
+        // A task block with a typo'd key is rejected the same way.
+        let cfg_text = config_text(ok).replace(
+            r#""train": {"num_classes": 3}"#,
+            r#""task": {"type": "link_prediction", "negativs": 4},
+               "train": {"num_classes": 3}"#,
+        );
+        let err = ModelConfig::from_config(&Json::parse(&cfg_text).unwrap())
+            .expect_err("task typo must be rejected");
+        assert!(err.to_string().contains("negativs"), "{err}");
+        // And a valid task block flows through to the parsed config.
+        let cfg_text = config_text(ok).replace(
+            r#""train": {"num_classes": 3}"#,
+            r#""task": {"type": "graph_regression", "target_feature": "year"},
+               "train": {"num_classes": 3}"#,
+        );
+        let cfg = ModelConfig::from_config(&Json::parse(&cfg_text).unwrap()).unwrap();
+        assert_eq!(cfg.task.kind, "graph_regression");
+        assert_eq!(cfg.task.target_feature, "year");
+        assert!(ModelBuilder::from_config(&cfg).is_ok(), "builder is task-agnostic");
+    }
+
     /// A built model's conv kind (validated here) drives the parameter
     /// naming.
     #[test]

@@ -5,11 +5,12 @@
 //!
 //! * **Layer 3 (this crate)** — the heterogeneous graph data model
 //!   ([`schema`], [`graph`]), data-exchange ops ([`ops`]), the
-//!   composable GraphUpdate layer zoo ([`layers`]), the sharded
-//!   graph store ([`store`]), rooted-subgraph sampling ([`sampler`],
-//!   [`coordinator`]), the streaming input pipeline ([`pipeline`]), the
-//!   AOT runtime ([`runtime`]), training ([`train`]), orchestration
-//!   ([`runner`]) and inference serving ([`serve`]).
+//!   composable GraphUpdate layer zoo ([`layers`]), the multi-objective
+//!   task heads ([`tasks`]), the sharded graph store ([`store`]),
+//!   rooted-subgraph sampling ([`sampler`], [`coordinator`]), the
+//!   streaming input pipeline ([`pipeline`]), the AOT runtime
+//!   ([`runtime`]), training ([`train`]), orchestration ([`runner`])
+//!   and inference serving ([`serve`]).
 //! * **Layer 2** — the heterogeneous GNN models (MPNN, GCN, R-GCN,
 //!   GraphSAGE, GATv2, MultiHeadAttention, HGT baseline) written in JAX
 //!   under `python/compile/`, lowered once to HLO text.
@@ -35,6 +36,7 @@ pub mod schema;
 pub mod serve;
 pub mod store;
 pub mod synth;
+pub mod tasks;
 pub mod train;
 pub mod util;
 

@@ -359,6 +359,236 @@ impl<'a> ParamMap<'a> {
     }
 }
 
+/// The training objective read off a config's `task` block — which
+/// readout head sits on the shared GNN trunk, with its loss and
+/// negative-sampling knobs. Parsed and validated here (the config
+/// funnel every entry point shares — see
+/// [`crate::layers::ModelBuilder`]); the executable head lives in
+/// [`crate::tasks`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskConfig {
+    /// `task.type`: `"root_classification"` (the default) |
+    /// `"link_prediction"` | `"graph_regression"`.
+    pub kind: String,
+    /// Node set carrying roots / readout states (default `"paper"`).
+    pub root_set: String,
+    /// Root label feature for classification (default `"labels"`).
+    pub label_feature: String,
+    /// Edge set whose held-out edges are the link-prediction positives
+    /// (default `"cites"`; must be homogeneous).
+    pub edge_set: String,
+    /// Pair scorer: `"dot"` (parameter-free) | `"hadamard"` (MLP over
+    /// the element-wise product).
+    pub readout: String,
+    /// Link loss: `"softmax"` (1 positive vs K negatives cross-entropy)
+    /// | `"margin"` (pairwise hinge).
+    pub loss: String,
+    /// Hinge margin for `loss == "margin"`.
+    pub margin: f32,
+    /// Negatives per positive pair (seeded-uniform, co-sampled into the
+    /// pair subgraph so their final states exist).
+    pub negatives: usize,
+    /// The k of hits@k.
+    pub hits_k: usize,
+    /// Fraction of `edge_set` held out of the message-passing graph as
+    /// supervision pairs.
+    pub holdout_fraction: f64,
+    /// Seed for the edge-holdout split and negative sampling.
+    pub split_seed: u64,
+    /// Hadamard-MLP hidden width (0 = `message_dim`).
+    pub mlp_dim: usize,
+    /// Regression target feature on the root node (default `"year"`).
+    pub target_feature: String,
+    /// Regression target normalization: `t_norm = (t - shift) * scale`.
+    pub target_shift: f32,
+    pub target_scale: f32,
+}
+
+impl Default for TaskConfig {
+    fn default() -> TaskConfig {
+        TaskConfig {
+            kind: "root_classification".into(),
+            root_set: "paper".into(),
+            label_feature: "labels".into(),
+            edge_set: "cites".into(),
+            readout: "dot".into(),
+            loss: "softmax".into(),
+            margin: 1.0,
+            negatives: 4,
+            hits_k: 3,
+            holdout_fraction: 0.1,
+            split_seed: 0x11bd,
+            mlp_dim: 0,
+            target_feature: "year".into(),
+            target_shift: 0.0,
+            target_scale: 1.0,
+        }
+    }
+}
+
+/// Keys a config's `model` block may carry. The AOT/python side owns
+/// several of them (`num_heads`, `use_pallas_*`, …); listing them here
+/// keeps one funnel that accepts both engines' configs while rejecting
+/// typos (`att_dims`) as structured errors instead of silently falling
+/// back to defaults.
+const MODEL_KEYS: &[&str] = &[
+    "type",
+    "arch",
+    "hidden_dim",
+    "hidden_dim_override",
+    "message_dim",
+    "num_layers",
+    "att_dim",
+    "sage_reduce",
+    "updates",
+    "num_heads",
+    "dropout",
+    "use_layer_norm",
+    "use_pallas_messages",
+    "use_pallas_segment",
+    "reduce_type",
+];
+
+/// Keys a config's `task` block may carry (see [`TaskConfig`]).
+const TASK_KEYS: &[&str] = &[
+    "type",
+    "root_set",
+    "label_feature",
+    "edge_set",
+    "readout",
+    "loss",
+    "margin",
+    "negatives",
+    "hits_k",
+    "holdout_fraction",
+    "split_seed",
+    "mlp_dim",
+    "target_feature",
+    "target_shift",
+    "target_scale",
+];
+
+/// Reject unknown keys in a config block (typos like `att_dims` must
+/// not silently fall back to defaults).
+fn reject_unknown_keys(block: &Json, allowed: &[&str], name: &str) -> Result<()> {
+    for key in block.as_obj()?.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(Error::Schema(format!(
+                "{name} block has unknown key {key:?} — known keys: {allowed:?}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+impl TaskConfig {
+    /// Parse and validate a config's optional `task` block; absent
+    /// means root classification with the defaults.
+    pub fn from_config(cfg: &Json) -> Result<TaskConfig> {
+        let Some(t) = cfg.opt("task") else {
+            return Ok(TaskConfig::default());
+        };
+        reject_unknown_keys(t, TASK_KEYS, "task")?;
+        let mut out = TaskConfig::default();
+        if let Some(v) = t.opt("type") {
+            out.kind = v.as_str()?.to_string();
+        }
+        match out.kind.as_str() {
+            "root_classification" | "link_prediction" | "graph_regression" => {}
+            other => {
+                return Err(Error::Schema(format!(
+                    "task.type {other:?} unknown (want \
+                     root_classification|link_prediction|graph_regression)"
+                )));
+            }
+        }
+        if let Some(v) = t.opt("root_set") {
+            out.root_set = v.as_str()?.to_string();
+        }
+        if let Some(v) = t.opt("label_feature") {
+            out.label_feature = v.as_str()?.to_string();
+        }
+        if let Some(v) = t.opt("edge_set") {
+            out.edge_set = v.as_str()?.to_string();
+        }
+        if let Some(v) = t.opt("readout") {
+            out.readout = v.as_str()?.to_string();
+        }
+        if !matches!(out.readout.as_str(), "dot" | "hadamard") {
+            return Err(Error::Schema(format!(
+                "task.readout {:?} unknown (want dot|hadamard)",
+                out.readout
+            )));
+        }
+        if let Some(v) = t.opt("loss") {
+            out.loss = v.as_str()?.to_string();
+        }
+        if !matches!(out.loss.as_str(), "softmax" | "margin") {
+            return Err(Error::Schema(format!(
+                "task.loss {:?} unknown (want softmax|margin)",
+                out.loss
+            )));
+        }
+        if let Some(v) = t.opt("margin") {
+            out.margin = v.as_f64()? as f32;
+        }
+        if let Some(v) = t.opt("negatives") {
+            out.negatives = v.as_usize()?;
+        }
+        if let Some(v) = t.opt("hits_k") {
+            out.hits_k = v.as_usize()?;
+        }
+        if let Some(v) = t.opt("holdout_fraction") {
+            out.holdout_fraction = v.as_f64()?;
+        }
+        if let Some(v) = t.opt("split_seed") {
+            out.split_seed = v.as_i64()? as u64;
+        }
+        if let Some(v) = t.opt("mlp_dim") {
+            out.mlp_dim = v.as_usize()?;
+        }
+        if let Some(v) = t.opt("target_feature") {
+            out.target_feature = v.as_str()?.to_string();
+        }
+        if let Some(v) = t.opt("target_shift") {
+            out.target_shift = v.as_f64()? as f32;
+        }
+        if let Some(v) = t.opt("target_scale") {
+            out.target_scale = v.as_f64()? as f32;
+        }
+        if out.kind == "link_prediction" {
+            if out.negatives == 0 {
+                return Err(Error::Schema(
+                    "task.negatives is 0 — link prediction needs at least one \
+                     negative per positive pair"
+                        .into(),
+                ));
+            }
+            if out.hits_k == 0 {
+                return Err(Error::Schema("task.hits_k is 0 (want ≥ 1)".into()));
+            }
+            if !(out.holdout_fraction > 0.0 && out.holdout_fraction < 1.0) {
+                return Err(Error::Schema(format!(
+                    "task.holdout_fraction {} outside (0, 1)",
+                    out.holdout_fraction
+                )));
+            }
+            if out.margin <= 0.0 && out.loss == "margin" {
+                return Err(Error::Schema(format!(
+                    "task.margin {} must be positive for the margin loss",
+                    out.margin
+                )));
+            }
+        }
+        if out.kind == "graph_regression" && out.target_scale == 0.0 {
+            return Err(Error::Schema(
+                "task.target_scale is 0 — the regression target would collapse".into(),
+            ));
+        }
+        Ok(out)
+    }
+}
+
 /// The mpnn architecture read off a config: dims, the per-node-set
 /// update lists, the schema's endpoints and features. Shared between
 /// the AOT reference forward and the native training engine (which
@@ -396,6 +626,10 @@ pub struct ModelConfig {
     /// node set -> embedding-table cardinality (id-embedding sets).
     pub cardinality: BTreeMap<String, usize>,
     pub num_classes: usize,
+    /// The training objective (config `task` block; defaults to root
+    /// classification). Selects the readout head the native model is
+    /// built with — see [`crate::tasks`].
+    pub task: TaskConfig,
 }
 
 impl ModelConfig {
@@ -404,6 +638,8 @@ impl ModelConfig {
     /// both carry `model` / `schema` / `train`).
     pub fn from_config(cfg: &Json) -> Result<ModelConfig> {
         let model = cfg.get("model")?;
+        reject_unknown_keys(model, MODEL_KEYS, "model")?;
+        let task = TaskConfig::from_config(cfg)?;
         let mut updates = BTreeMap::new();
         for (k, v) in model.get("updates")?.as_obj()? {
             updates.insert(
@@ -505,6 +741,7 @@ impl ModelConfig {
             feature_dims,
             cardinality,
             num_classes: cfg.get("train")?.get("num_classes")?.as_usize()?,
+            task,
         })
     }
 
@@ -568,6 +805,7 @@ impl ModelConfig {
             feature_dims,
             cardinality,
             num_classes: mag.num_classes,
+            task: TaskConfig::default(),
         }
     }
 
@@ -576,6 +814,13 @@ impl ModelConfig {
     /// re-deriving a whole config.
     pub fn with_arch(mut self, arch: &str) -> ModelConfig {
         self.arch = arch.to_string();
+        self
+    }
+
+    /// The same config with a different task — the knob tests and
+    /// benches use to walk the task zoo without re-deriving a config.
+    pub fn with_task(mut self, task: TaskConfig) -> ModelConfig {
+        self.task = task;
         self
     }
 }
@@ -877,6 +1122,84 @@ mod tests {
         let legacy_mpnn = text.replace(r#""type": "gatv2","#, r#""arch": "mpnn","#);
         let cfg = ModelConfig::from_config(&Json::parse(&legacy_mpnn).unwrap()).unwrap();
         assert_eq!(cfg.arch, "mpnn");
+    }
+
+    /// Typos in the `model` block (`att_dims`) must be structured
+    /// errors naming the key, never a silent fall-back to defaults.
+    #[test]
+    fn unknown_model_key_is_rejected_by_name() {
+        let text = r#"{
+          "model": {"hidden_dim": 8, "message_dim": 4, "num_layers": 2,
+                    "att_dims": 6, "updates": {"paper": ["cites"]}},
+          "schema": {
+            "node_sets": {"paper": {"features": {"feat": 16}}},
+            "edge_sets": {"cites": ["paper", "paper"]}
+          },
+          "train": {"num_classes": 3}
+        }"#;
+        let err = ModelConfig::from_config(&Json::parse(text).unwrap())
+            .expect_err("att_dims must be rejected");
+        let msg = err.to_string();
+        assert!(msg.contains("att_dims"), "{msg}");
+        assert!(msg.contains("model"), "{msg}");
+    }
+
+    #[test]
+    fn task_block_parses_and_validates() {
+        let base = r#"{
+          "model": {"hidden_dim": 8, "message_dim": 4, "num_layers": 1,
+                    "updates": {"paper": ["cites"]}},
+          "schema": {
+            "node_sets": {"paper": {"features": {"feat": 16}}},
+            "edge_sets": {"cites": ["paper", "paper"]}
+          },
+          "train": {"num_classes": 3}TASK
+        }"#;
+        // No task block → root classification defaults.
+        let cfg =
+            ModelConfig::from_config(&Json::parse(&base.replace("TASK", "")).unwrap()).unwrap();
+        assert_eq!(cfg.task.kind, "root_classification");
+        assert_eq!(cfg.task.root_set, "paper");
+
+        // A full link-prediction block round-trips.
+        let lp = base.replace(
+            "TASK",
+            r#", "task": {"type": "link_prediction", "edge_set": "cites",
+                 "readout": "hadamard", "loss": "margin", "margin": 0.5,
+                 "negatives": 6, "hits_k": 2, "holdout_fraction": 0.2,
+                 "split_seed": 9, "mlp_dim": 12}"#,
+        );
+        let cfg = ModelConfig::from_config(&Json::parse(&lp).unwrap()).unwrap();
+        assert_eq!(cfg.task.kind, "link_prediction");
+        assert_eq!(cfg.task.readout, "hadamard");
+        assert_eq!(cfg.task.loss, "margin");
+        assert_eq!(cfg.task.negatives, 6);
+        assert_eq!(cfg.task.hits_k, 2);
+        assert_eq!(cfg.task.mlp_dim, 12);
+        assert!((cfg.task.holdout_fraction - 0.2).abs() < 1e-12);
+
+        // Unknown task key, unknown kind, bad enum values, bad knobs:
+        // all structured errors naming the offender.
+        for (bad, needle) in [
+            (r#", "task": {"type": "link_prediction", "negativs": 4}"#, "negativs"),
+            (r#", "task": {"type": "edge_classification"}"#, "edge_classification"),
+            (r#", "task": {"type": "link_prediction", "readout": "bilinear"}"#, "bilinear"),
+            (r#", "task": {"type": "link_prediction", "loss": "nce"}"#, "nce"),
+            (r#", "task": {"type": "link_prediction", "negatives": 0}"#, "negatives"),
+            (
+                r#", "task": {"type": "link_prediction", "holdout_fraction": 1.5}"#,
+                "holdout_fraction",
+            ),
+            (r#", "task": {"type": "graph_regression", "target_scale": 0.0}"#, "target_scale"),
+        ] {
+            let text = base.replace("TASK", bad);
+            let err = match ModelConfig::from_config(&Json::parse(&text).unwrap()) {
+                Err(e) => e,
+                Ok(_) => panic!("corrupted task block accepted: {bad}"),
+            };
+            let msg = err.to_string();
+            assert!(msg.contains(needle), "error {msg:?} does not name {needle:?}");
+        }
     }
 
     #[test]

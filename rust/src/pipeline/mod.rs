@@ -680,4 +680,37 @@ mod tests {
         assert_eq!(sorted, items);
         assert_ne!(out, items, "order changed");
     }
+
+    /// Property: for any input length and capacity ∈ {1, n/2, n, ≥n},
+    /// the shuffle buffer emits an **exact permutation** of its input —
+    /// no drops, no duplicates — and a fixed seed reproduces the exact
+    /// output order across runs. Capacity 1 degenerates to a
+    /// pass-through; capacity ≥ n must actually permute (for inputs big
+    /// enough that a fixed-point shuffle is implausible).
+    #[test]
+    fn prop_shuffle_buffer_exact_permutation_and_seeded() {
+        use crate::util::proptest::check;
+        check("shuffle buffer is a seeded exact permutation", 40, |rng| {
+            let n = 1 + rng.uniform(200);
+            let items: Vec<u32> = (0..n as u32).collect();
+            for capacity in [1usize, (n / 2).max(1), n, n + 7] {
+                let seed = rng.next_u64();
+                let out: Vec<u32> =
+                    ShuffleBuffer::new(items.clone().into_iter(), capacity, seed).collect();
+                assert_eq!(out.len(), n, "capacity {capacity}: dropped items");
+                let mut sorted = out.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, items, "capacity {capacity}: not a permutation");
+                let again: Vec<u32> =
+                    ShuffleBuffer::new(items.clone().into_iter(), capacity, seed).collect();
+                assert_eq!(out, again, "capacity {capacity}: seed {seed} not reproducible");
+                if capacity == 1 {
+                    assert_eq!(out, items, "capacity 1 is a pass-through");
+                }
+                if capacity >= n && n >= 32 {
+                    assert_ne!(out, items, "capacity {capacity}: full buffer must shuffle");
+                }
+            }
+        });
+    }
 }

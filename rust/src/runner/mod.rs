@@ -34,7 +34,8 @@ use crate::sampler::inmem::InMemorySampler;
 use crate::sampler::spec::mag_sampling_spec_sized;
 use crate::sampler::SamplerConfig;
 use crate::store::GraphStore;
-use crate::synth::mag::{generate, MagDataset, Split};
+use crate::synth::mag::{edge_holdout, generate, MagDataset, Split};
+use crate::tasks::link_prediction::{pair_eval_batches, PairProvider};
 use crate::train::metrics::EpochMetrics;
 use crate::train::native::{AdamConfig, NativeModel, NativeTrainer};
 use crate::train::{Hyperparams, StepMetrics, Trainer};
@@ -262,24 +263,16 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport> {
     }
 }
 
-/// The native-engine run path: no AOT artifacts required. Reads the
-/// manifest from `artifacts_dir` when present, else the raw config at
-/// `config_path`.
-pub fn run_native(cfg: &RunConfig) -> Result<RunReport> {
-    let manifest = match &cfg.config_path {
-        Some(p) => manifest_from_config_file(p)?,
-        None => Manifest::load(&cfg.artifacts_dir)?,
-    };
-    let env = MagEnv::from_manifest(manifest)?;
-    let model_cfg = ModelConfig::from_manifest(&env.manifest)?;
-    let init_seed = env
-        .manifest
+/// Optimizer hyper-parameters + init seed for the native engine, from
+/// the manifest config plus any CLI override.
+fn native_hyperparams(cfg: &RunConfig, manifest: &Manifest) -> Result<(AdamConfig, u64)> {
+    let init_seed = manifest
         .config
         .get("train")?
         .opt("init_seed")
         .and_then(|v| v.as_i64().ok())
         .unwrap_or(3) as u64;
-    let mut adam = AdamConfig::from_train_config(&env.manifest.config)?;
+    let mut adam = AdamConfig::from_train_config(&manifest.config)?;
     if let Some(hp) = cfg.hp {
         adam.lr = hp.learning_rate;
         adam.weight_decay = hp.weight_decay;
@@ -294,11 +287,112 @@ pub fn run_native(cfg: &RunConfig) -> Result<RunReport> {
             );
         }
     }
+    Ok((adam, init_seed))
+}
+
+/// The native-engine run path: no AOT artifacts required. Reads the
+/// manifest from `artifacts_dir` when present, else the raw config at
+/// `config_path`. The config's `task` block selects the objective:
+/// root classification and graph regression ride the seed-rooted
+/// pipeline; link prediction builds its edge-holdout split and trains
+/// over pair subgraphs.
+pub fn run_native(cfg: &RunConfig) -> Result<RunReport> {
+    let manifest = match &cfg.config_path {
+        Some(p) => manifest_from_config_file(p)?,
+        None => Manifest::load(&cfg.artifacts_dir)?,
+    };
+    let model_cfg = ModelConfig::from_manifest(&manifest)?;
+    if model_cfg.task.kind == "link_prediction" {
+        return run_native_linkpred(cfg, manifest, model_cfg);
+    }
+    let env = MagEnv::from_manifest(manifest)?;
+    let (adam, init_seed) = native_hyperparams(cfg, &env.manifest)?;
     let model = NativeModel::init(model_cfg, init_seed)?;
+    let task = crate::tasks::build(&model.cfg)?;
     let param_count = model.param_elems();
-    let mut trainer =
-        NativeTrainer::new(model, adam, RootTask::default(), cfg.trainer_threads);
+    let mut trainer = NativeTrainer::with_task(model, adam, task, cfg.trainer_threads);
     run_loop(cfg, &env, &mut trainer, param_count)
+}
+
+/// The link-prediction run path: hold a seeded fraction of the task's
+/// edge set out of the message-passing store, train over pair
+/// subgraphs of the held-out train pairs, evaluate MRR/hits@k on the
+/// held-out validation/test pairs.
+fn run_native_linkpred(
+    cfg: &RunConfig,
+    manifest: Manifest,
+    model_cfg: ModelConfig,
+) -> Result<RunReport> {
+    let tcfg = model_cfg.task.clone();
+    let mag_cfg = manifest.mag_config()?;
+    let dataset = generate(&mag_cfg);
+    let holdout =
+        edge_holdout(&dataset, &tcfg.edge_set, tcfg.holdout_fraction, tcfg.split_seed)?;
+    let store = Arc::new(holdout.store);
+    let spec = mag_sampling_spec_sized(&store.schema, &manifest.sampling_sizes()?)?;
+    let sampler =
+        Arc::new(InMemorySampler::new(Arc::clone(&store), spec, manifest.plan_seed()?)?);
+    let pad = manifest.pad_spec()?;
+    let batch_size = manifest.batch_size()?;
+    let node_set = model_cfg
+        .edge_endpoints
+        .get(&tcfg.edge_set)
+        .map(|(s, _)| s.clone())
+        .ok_or_else(|| {
+            Error::Schema(format!("task.edge_set {:?} is not in the schema", tcfg.edge_set))
+        })?;
+    let num_nodes = store.node_count(&node_set)?;
+    let (adam, init_seed) = native_hyperparams(cfg, &manifest)?;
+    let model = NativeModel::init(model_cfg, init_seed)?;
+    let task = crate::tasks::build(&model.cfg)?;
+    let param_count = model.param_elems();
+    let mut trainer = NativeTrainer::with_task(model, adam, task, cfg.trainer_threads);
+
+    let provider = Arc::new(PairProvider {
+        sampler: Arc::clone(&sampler),
+        pairs: holdout.train.clone(),
+        shuffle_seed: cfg.shuffle_seed,
+        negatives: tcfg.negatives,
+        neg_seed: tcfg.split_seed,
+        num_nodes,
+        sampling: SamplerConfig::with_threads(cfg.sampler_threads),
+    });
+    let split_sizes = [holdout.train.len(), holdout.val.len(), holdout.test.len()];
+    let (val_pairs, test_pairs) = (holdout.val, holdout.test);
+    let (s_val, s_test) = (Arc::clone(&sampler), Arc::clone(&sampler));
+    let (pad_val, pad_test) = (pad.clone(), pad.clone());
+    let (negatives, neg_seed) = (tcfg.negatives, tcfg.split_seed);
+    let data = RunData {
+        provider,
+        batch_size,
+        pad,
+        split_sizes,
+        val: Box::new(move |limit| {
+            Box::new(pair_eval_batches(
+                Arc::clone(&s_val),
+                val_pairs.clone(),
+                batch_size,
+                pad_val.clone(),
+                negatives,
+                neg_seed,
+                num_nodes,
+                limit,
+            ))
+        }),
+        test: Box::new(move |limit| {
+            Box::new(pair_eval_batches(
+                Arc::clone(&s_test),
+                test_pairs.clone(),
+                batch_size,
+                pad_test.clone(),
+                negatives,
+                neg_seed,
+                num_nodes,
+                limit,
+            ))
+        }),
+    };
+    run_data_loop(cfg, data, &mut trainer, param_count)
 }
 
 /// [`run`] against a pre-built environment and AOT trainer — lets the
@@ -312,8 +406,26 @@ pub fn run_in_env(cfg: &RunConfig, env: &MagEnv, trainer: &mut Trainer) -> Resul
     run_loop(cfg, env, trainer, entry.param_count)
 }
 
-/// The engine-agnostic epoch loop: pipeline-fed train epochs with
-/// per-epoch validation, a final test pass and an optional checkpoint.
+/// Lazily-built eval batch stream for one split (bounded by the
+/// optional batch limit).
+pub type EvalBatches<'a> =
+    Box<dyn Fn(Option<usize>) -> Box<dyn Iterator<Item = Result<Option<Padded>>> + 'a> + 'a>;
+
+/// The data side of one run — a train provider plus eval streams —
+/// letting one epoch loop serve seed-rooted tasks (classification,
+/// regression) and pair-rooted link prediction alike.
+pub struct RunData<'a> {
+    pub provider: Arc<dyn DatasetProvider>,
+    pub batch_size: usize,
+    pub pad: PadSpec,
+    /// Examples per train/val/test split, for the verbose banner.
+    pub split_sizes: [usize; 3],
+    pub val: EvalBatches<'a>,
+    pub test: EvalBatches<'a>,
+}
+
+/// [`run_data_loop`] over the standard seed-rooted MAG environment —
+/// the epoch loop both the AOT path and the native root tasks share.
 pub fn run_loop(
     cfg: &RunConfig,
     env: &MagEnv,
@@ -323,26 +435,46 @@ pub fn run_loop(
     let train_seeds = env.dataset.papers_in_split(Split::Train);
     let val_seeds = env.dataset.papers_in_split(Split::Validation);
     let test_seeds = env.dataset.papers_in_split(Split::Test);
-    if cfg.verbose {
-        println!(
-            "runner: arch={} engine={:?} params={} train/val/test = {}/{}/{} papers",
-            cfg.arch,
-            cfg.engine,
-            param_count,
-            train_seeds.len(),
-            val_seeds.len(),
-            test_seeds.len()
-        );
-    }
-
     let provider = Arc::new(SamplingProvider {
         sampler: Arc::clone(&env.sampler),
-        seeds: train_seeds,
+        seeds: train_seeds.clone(),
         shuffle_seed: cfg.shuffle_seed,
         sampling: SamplerConfig::with_threads(cfg.sampler_threads),
     });
-    let mut pipe_cfg = PipelineConfig::new(env.batch_size, env.pad.clone());
-    pipe_cfg.shuffle_buffer = 4 * env.batch_size;
+    let data = RunData {
+        provider,
+        batch_size: env.batch_size,
+        pad: env.pad.clone(),
+        split_sizes: [train_seeds.len(), val_seeds.len(), test_seeds.len()],
+        val: Box::new(move |limit| Box::new(env.eval_batches(&val_seeds, limit))),
+        test: Box::new(move |limit| Box::new(env.eval_batches(&test_seeds, limit))),
+    };
+    run_data_loop(cfg, data, engine, param_count)
+}
+
+/// The engine- and task-agnostic epoch loop: pipeline-fed train epochs
+/// with per-epoch validation, a final test pass and an optional
+/// checkpoint.
+pub fn run_data_loop(
+    cfg: &RunConfig,
+    data: RunData<'_>,
+    engine: &mut dyn TrainEngine,
+    param_count: usize,
+) -> Result<RunReport> {
+    if cfg.verbose {
+        println!(
+            "runner: arch={} engine={:?} params={} train/val/test = {}/{}/{} examples",
+            cfg.arch,
+            cfg.engine,
+            param_count,
+            data.split_sizes[0],
+            data.split_sizes[1],
+            data.split_sizes[2]
+        );
+    }
+
+    let mut pipe_cfg = PipelineConfig::new(data.batch_size, data.pad.clone());
+    pipe_cfg.shuffle_buffer = 4 * data.batch_size;
     pipe_cfg.shuffle_seed = cfg.shuffle_seed;
     pipe_cfg.prep_threads = cfg.prep_threads;
 
@@ -352,11 +484,7 @@ pub fn run_loop(
     let mut total_step_secs = 0.0f64;
     for epoch in 0..cfg.epochs {
         let t0 = Instant::now();
-        let stream = epoch_stream(
-            Arc::clone(&provider) as Arc<dyn DatasetProvider>,
-            pipe_cfg.clone(),
-            epoch as u64,
-        )?;
+        let stream = epoch_stream(Arc::clone(&data.provider), pipe_cfg.clone(), epoch as u64)?;
         let mut train_metrics = EpochMetrics::default();
         for padded in stream.iter() {
             let ts = Instant::now();
@@ -375,7 +503,7 @@ pub fn run_loop(
         drop(stream);
 
         let mut val_metrics = EpochMetrics::default();
-        for padded in env.eval_batches(&val_seeds, cfg.max_eval_batches) {
+        for padded in (data.val)(cfg.max_eval_batches) {
             if let Some(p) = padded? {
                 val_metrics.add(engine.eval_batch(&p)?);
             }
@@ -398,7 +526,7 @@ pub fn run_loop(
     }
 
     let mut test = EpochMetrics::default();
-    for padded in env.eval_batches(&test_seeds, cfg.max_eval_batches) {
+    for padded in (data.test)(cfg.max_eval_batches) {
         if let Some(p) = padded? {
             test.add(engine.eval_batch(&p)?);
         }
@@ -532,6 +660,103 @@ mod tests {
         let tensors = crate::train::checkpoint::load(&ckpt_path).unwrap();
         assert!(tensors.iter().any(|(n, _)| n == "step"));
         assert!(tensors.iter().any(|(n, _)| n.starts_with("adam_m.")));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A `task` block selects graph regression through the same runner
+    /// loop: the epoch metrics report MSE/MAE and the checkpoint
+    /// carries the regression head instead of the classifier.
+    #[test]
+    fn native_run_graph_regression_from_config() {
+        let text = tiny_config_text("").replace(
+            "\"train\": {",
+            r#""task": {"type": "graph_regression", "target_feature": "year",
+                        "target_shift": 2010.0, "target_scale": 0.1},
+               "train": {"#,
+        );
+        let dir =
+            std::env::temp_dir().join(format!("tfgnn-run-reg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg_path = dir.join("reg.json");
+        std::fs::write(&cfg_path, text).unwrap();
+        let ckpt_path = dir.join("reg.ckpt");
+        let mut cfg = RunConfig::new(&dir, "mpnn");
+        cfg.engine = EngineKind::Native;
+        cfg.config_path = Some(cfg_path);
+        cfg.epochs = 1;
+        cfg.max_steps_per_epoch = Some(3);
+        cfg.max_eval_batches = Some(2);
+        cfg.trainer_threads = 2;
+        cfg.checkpoint = Some(ckpt_path.clone());
+        let report = run(&cfg).unwrap();
+        assert!(report.epochs[0].train.steps > 0);
+        assert!(report.epochs[0].train.loss().is_finite());
+        assert!(report.epochs[0].train.mse() > 0.0, "regression reported MSE");
+        assert!(report.test.mae().is_finite());
+        let tensors = crate::train::checkpoint::load(&ckpt_path).unwrap();
+        assert!(tensors.iter().any(|(n, _)| n == "param.reg.w"));
+        assert!(tensors.iter().all(|(n, _)| n != "param.head.w"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A link-prediction `task` block reroutes the whole run: edge
+    /// holdout, pair subgraph pipeline, MRR/hits@k eval, and a
+    /// checkpoint carrying the Hadamard-MLP head.
+    #[test]
+    fn native_run_link_prediction_from_config() {
+        // Pair examples merge 1 + 1 + negatives rooted expansions, so
+        // the caps scale up and the batch shrinks vs the seed-rooted
+        // config.
+        let text = tiny_config_text("")
+            .replace("\"batch_size\": 4,", "\"batch_size\": 2,")
+            .replace(
+                r#""node_caps": {"paper": 128, "author": 80, "institution": 48,"#,
+                r#""node_caps": {"paper": 256, "author": 160, "institution": 96,"#,
+            )
+            .replace(r#""field_of_study": 56},"#, r#""field_of_study": 112},"#)
+            .replace(
+                r#""edge_caps": {"cites": 16, "written": 40, "writes": 80,"#,
+                r#""edge_caps": {"cites": 48, "written": 96, "writes": 192,"#,
+            )
+            .replace(
+                r#""affiliated_with": 80, "has_topic": 192},"#,
+                r#""affiliated_with": 192, "has_topic": 448},"#,
+            )
+            .replace("\"component_cap\": 5", "\"component_cap\": 3")
+            .replace(
+                "\"train\": {",
+                r#""task": {"type": "link_prediction", "edge_set": "cites",
+                            "readout": "hadamard", "mlp_dim": 8,
+                            "negatives": 2, "hits_k": 2,
+                            "holdout_fraction": 0.3, "split_seed": 9},
+                   "train": {"#,
+            );
+        let dir =
+            std::env::temp_dir().join(format!("tfgnn-run-lp-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg_path = dir.join("lp.json");
+        std::fs::write(&cfg_path, text).unwrap();
+        let ckpt_path = dir.join("lp.ckpt");
+        let mut cfg = RunConfig::new(&dir, "mpnn");
+        cfg.engine = EngineKind::Native;
+        cfg.config_path = Some(cfg_path);
+        cfg.epochs = 1;
+        cfg.max_steps_per_epoch = Some(4);
+        cfg.max_eval_batches = Some(3);
+        cfg.trainer_threads = 2;
+        cfg.checkpoint = Some(ckpt_path.clone());
+        let report = run(&cfg).unwrap();
+        assert!(report.epochs[0].train.steps > 0, "pair pipeline fed the trainer");
+        assert!(report.epochs[0].train.loss().is_finite());
+        assert!(report.epochs[0].train.mrr() > 0.0, "MRR reported on train");
+        let val = &report.epochs[0].val;
+        if val.task.scored > 0.0 {
+            assert!(val.mrr() > 0.0 && val.mrr() <= 1.0, "val MRR in (0,1]: {}", val.mrr());
+            assert!(val.hits_at_k() <= 1.0);
+        }
+        let tensors = crate::train::checkpoint::load(&ckpt_path).unwrap();
+        assert!(tensors.iter().any(|(n, _)| n == "param.lp.w"), "Hadamard head saved");
+        assert!(tensors.iter().all(|(n, _)| n != "param.head.w"), "no classifier head");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

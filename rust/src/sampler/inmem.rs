@@ -201,6 +201,49 @@ impl InMemorySampler {
         edges
     }
 
+    /// Sample one *multi-rooted* subgraph: the plan's expansion of
+    /// every seed in `seeds`, merged into a single GraphTensor whose
+    /// seed node set pins the seeds first, **in list order** (seed `k`
+    /// = node index `k`). This is the pair form link prediction scores
+    /// — `sample_seeds(&[u, v, negatives…])` puts the source at row 0
+    /// and every candidate's *message-passed* state in the same
+    /// component.
+    ///
+    /// Determinism: per-seed expansion uses the same
+    /// `(plan_seed, seed, op, node)` RNG keying as [`Self::sample`], so
+    /// each seed's edges are bit-identical to its single-seed expansion
+    /// and `sample_seeds(&[s])` equals `sample(s)` exactly (pinned by a
+    /// test below). Overlapping expansions dedup edges at assembly, the
+    /// same rule the single-seed path applies to overlapping ops.
+    pub fn sample_seeds(&self, seeds: &[u32]) -> Result<GraphTensor> {
+        // Seed ids are caller input (serving requests name them
+        // directly): validate against the store before expansion, so a
+        // hostile or stale id is a structured error instead of an
+        // out-of-bounds panic inside a CSR row lookup.
+        let n = self.store.node_count(&self.spec.seed_node_set)?;
+        for &s in seeds {
+            if s as usize >= n {
+                return Err(crate::Error::Sampler(format!(
+                    "seed {s} outside node set {:?} (cardinality {n})",
+                    self.spec.seed_node_set
+                )));
+            }
+        }
+        let mut edges = EdgeAcc::new();
+        for &s in seeds {
+            for (es, pairs) in self.expand_fast(s) {
+                edges.entry(es).or_default().extend(pairs);
+            }
+        }
+        crate::sampler::assemble_subgraph_seeds(
+            &self.store.schema,
+            &self.spec.seed_node_set,
+            seeds,
+            &edges,
+            |set, ids| Ok(self.store.node_column(set)?.gather(ids)),
+        )
+    }
+
     /// Sample many seeds (an iterator adapter for the pipeline).
     pub fn sample_many<'a>(
         &'a self,
@@ -345,6 +388,83 @@ mod tests {
             .unwrap();
             assert_eq!(s.sample(seed).unwrap(), want, "seed {seed}");
         }
+    }
+
+    /// The multi-seed path degenerates to the single-seed sampler for a
+    /// one-element list — bit-for-bit, across many seeds.
+    #[test]
+    fn sample_seeds_singleton_matches_sample_bitexact() {
+        let (store, spec) = setup();
+        let s = InMemorySampler::new(store, spec, 42).unwrap();
+        for seed in 0..30u32 {
+            assert_eq!(s.sample_seeds(&[seed]).unwrap(), s.sample(seed).unwrap(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn sample_seeds_pins_seeds_first_in_order() {
+        let (store, spec) = setup();
+        let s = InMemorySampler::new(store, spec, 42).unwrap();
+        let seeds = [7u32, 3, 55, 21];
+        let g = s.sample_seeds(&seeds).unwrap();
+        g.validate().unwrap();
+        let (_, ids) = g.node_set("paper").unwrap().feature("#id").unwrap().as_i64().unwrap();
+        for (k, &want) in seeds.iter().enumerate() {
+            assert_eq!(ids[k], want as i64, "seed {k} pinned at row {k}");
+        }
+        // Context seed records the first of the list.
+        let (_, ctx) = g.context.feature("seed").unwrap().as_i64().unwrap();
+        assert_eq!(ctx, &[7]);
+        // Deterministic.
+        assert_eq!(g, s.sample_seeds(&seeds).unwrap());
+        // Every single-seed expansion's edges are contained in the
+        // union (per edge set, as (src_id, tgt_id) pairs).
+        fn pair_ids(g: &GraphTensor, name: &str) -> std::collections::HashSet<(i64, i64)> {
+            let es = g.edge_set(name).unwrap();
+            let (_, sid) = g
+                .node_set(&es.adjacency.source_set)
+                .unwrap()
+                .feature("#id")
+                .unwrap()
+                .as_i64()
+                .unwrap();
+            let (_, tid) = g
+                .node_set(&es.adjacency.target_set)
+                .unwrap()
+                .feature("#id")
+                .unwrap()
+                .as_i64()
+                .unwrap();
+            es.adjacency
+                .source
+                .iter()
+                .zip(&es.adjacency.target)
+                .map(|(&a, &b)| (sid[a as usize], tid[b as usize]))
+                .collect()
+        }
+        for &seed in &seeds {
+            let single = s.sample(seed).unwrap();
+            for name in single.edge_sets.keys() {
+                assert!(
+                    pair_ids(&single, name).is_subset(&pair_ids(&g, name)),
+                    "seed {seed} edge set {name}: multi-seed union lost edges"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sample_seeds_rejects_duplicates_empty_and_out_of_range() {
+        let (store, spec) = setup();
+        let s = InMemorySampler::new(store, spec, 42).unwrap();
+        assert!(s.sample_seeds(&[]).is_err());
+        let err = s.sample_seeds(&[4, 9, 4]).expect_err("duplicate seeds");
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        // An out-of-range id (tiny MAG has 120 papers) is a structured
+        // error, not a CSR slice panic — serving feeds raw client ids
+        // through here.
+        let err = s.sample_seeds(&[4, 9999]).expect_err("out-of-range seed");
+        assert!(err.to_string().contains("9999"), "{err}");
     }
 
     #[test]

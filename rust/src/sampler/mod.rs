@@ -82,18 +82,48 @@ pub fn assemble_subgraph<F>(
     seed_set: &str,
     seed: u32,
     edges: &EdgeAcc,
+    lookup: F,
+) -> Result<GraphTensor>
+where
+    F: FnMut(&str, &[u32]) -> Result<BTreeMap<String, Feature>>,
+{
+    assemble_subgraph_seeds(schema, seed_set, &[seed], edges, lookup)
+}
+
+/// [`assemble_subgraph`] generalized to a *seed list* — the pair/multi
+/// rooted form link prediction samples (`[source, target,
+/// negatives…]`). The seeds are interned first, **in list order**, so
+/// seed `k` is node index `k` of the seed node set (the "seed first"
+/// convention extended to "seeds first"); the context `"seed"` feature
+/// records the first seed. Duplicate seeds are rejected (they would
+/// silently break the positional convention).
+pub fn assemble_subgraph_seeds<F>(
+    schema: &crate::schema::GraphSchema,
+    seed_set: &str,
+    seeds: &[u32],
+    edges: &EdgeAcc,
     mut lookup: F,
 ) -> Result<GraphTensor>
 where
     F: FnMut(&str, &[u32]) -> Result<BTreeMap<String, Feature>>,
 {
-    // Dedup nodes per set, seed first.
+    let Some(&first_seed) = seeds.first() else {
+        return Err(Error::Sampler("assemble_subgraph_seeds: empty seed list".into()));
+    };
+    // Dedup nodes per set, seeds first (in order).
     let mut node_ids: BTreeMap<String, Vec<u32>> = BTreeMap::new();
     let mut node_index: BTreeMap<String, BTreeMap<u32, u32>> = BTreeMap::new();
     {
         let ids = node_ids.entry(seed_set.to_string()).or_default();
-        ids.push(seed);
-        node_index.entry(seed_set.to_string()).or_default().insert(seed, 0);
+        let index = node_index.entry(seed_set.to_string()).or_default();
+        for (k, &s) in seeds.iter().enumerate() {
+            if index.insert(s, k as u32).is_some() {
+                return Err(Error::Sampler(format!(
+                    "assemble_subgraph_seeds: duplicate seed {s} in the seed list"
+                )));
+            }
+            ids.push(s);
+        }
     }
     let intern = |set: &str, id: u32, ids: &mut BTreeMap<String, Vec<u32>>, idx: &mut BTreeMap<String, BTreeMap<u32, u32>>| -> u32 {
         let index = idx.entry(set.to_string()).or_default();
@@ -151,7 +181,8 @@ where
             ),
         );
     }
-    let context = Context::default().with_feature("seed", Feature::i64_vec(vec![seed as i64]));
+    let context =
+        Context::default().with_feature("seed", Feature::i64_vec(vec![first_seed as i64]));
     let g = GraphTensor::from_pieces(context, node_sets, edge_sets)?;
     Ok(g)
 }

@@ -18,7 +18,11 @@
 //! [`serve`] runs the AOT `forward` program on PJRT (merge + pad to the
 //! static shape first), [`serve_native`] runs the pure-Rust
 //! [`NativeModel`] forward per sampled subgraph — no padding, no
-//! artifacts, fully offline.
+//! artifacts, fully offline. [`serve_task`] generalizes the native
+//! backend across the task subsystem: requests are *seed lists*
+//! (`[root]` for root tasks, `[source, target]` for link prediction)
+//! and responses are task-shaped ([`crate::tasks::TaskOutput`] —
+//! logits, a pair's link score, or a regression value).
 //!
 //! Shutdown contract: dropping the client side stops *accepting*
 //! requests, but the batcher drains every already-submitted request
@@ -337,6 +341,150 @@ pub fn serve_native(
     ServerHandle { tx: Some(tx), worker: Some(worker), stats }
 }
 
+/// A completed task-shaped prediction (see [`serve_task`]).
+#[derive(Debug, Clone)]
+pub struct TaskResponse {
+    /// The request's seed list (`[root]` for root tasks, `[source,
+    /// target]` for link prediction).
+    pub seeds: Vec<u32>,
+    pub output: crate::tasks::TaskOutput,
+    /// Time from submit to response.
+    pub latency: Duration,
+    /// Requests in the same executed batch.
+    pub batch_size: usize,
+}
+
+struct TaskRequest {
+    seeds: Vec<u32>,
+    submitted: Instant,
+    reply: Sender<Result<TaskResponse>>,
+}
+
+/// Client handle for a task server: submit seed lists, then
+/// `shutdown()`. Same draining contract as [`ServerHandle`].
+pub struct TaskServerHandle {
+    tx: Option<Sender<TaskRequest>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    pub stats: Arc<ServeStats>,
+}
+
+impl TaskServerHandle {
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, seeds: Vec<u32>) -> Receiver<Result<TaskResponse>> {
+        let (reply_tx, reply_rx) = channel();
+        let req = TaskRequest { seeds, submitted: Instant::now(), reply: reply_tx };
+        self.tx.as_ref().expect("server running").send(req).expect("server alive");
+        reply_rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn predict(&self, seeds: &[u32]) -> Result<TaskResponse> {
+        self.submit(seeds.to_vec())
+            .recv()
+            .map_err(|_| Error::Runtime("server dropped request".into()))?
+    }
+
+    /// Stop accepting requests and join the worker; already-submitted
+    /// requests are still answered.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for TaskServerHandle {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Start a task-shaped native server: each request names a seed list,
+/// the batcher samples the wave's subgraphs (in parallel over the
+/// sampling pool when configured) and the [`Task`](crate::tasks::Task)
+/// maps each to its response — classification logits, a pair's link
+/// score, or a regression value. Errors are per-request: one bad pair
+/// does not fail its wave-mates (a wave with any error still counts
+/// one `failed_batches`).
+pub fn serve_task(
+    model: Arc<NativeModel>,
+    sampler: Arc<InMemorySampler>,
+    task: Arc<dyn crate::tasks::Task>,
+    cfg: ServeConfig,
+) -> TaskServerHandle {
+    let stats = Arc::new(ServeStats::default());
+    let (tx, rx) = channel::<TaskRequest>();
+    let stats_w = Arc::clone(&stats);
+    let worker = std::thread::Builder::new()
+        .name("tfgnn-serve-task".into())
+        .spawn(move || {
+            let pool = if cfg.sampler.parallel() {
+                Some(ThreadPool::new(cfg.sampler.threads))
+            } else {
+                None
+            };
+            loop {
+                // Block for the first request of a wave.
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => return, // all senders gone AND queue empty
+                };
+                let mut wave = vec![first];
+                let deadline = Instant::now() + cfg.max_wait;
+                while wave.len() < cfg.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => wave.push(r),
+                        Err(_) => break,
+                    }
+                }
+                stats_w.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
+                stats_w.batches.fetch_add(1, Ordering::Relaxed);
+                let batch_size = wave.len();
+                // Sample every request's subgraph — fanned out over the
+                // pool when configured — then run the task's readout.
+                let seed_lists: Vec<Vec<u32>> = wave.iter().map(|r| r.seeds.clone()).collect();
+                let graphs: Vec<Result<crate::graph::GraphTensor>> = match &pool {
+                    Some(p) => {
+                        let s = Arc::clone(&sampler);
+                        p.map(seed_lists, move |seeds| s.sample_seeds(&seeds))
+                    }
+                    None => seed_lists.iter().map(|s| sampler.sample_seeds(s)).collect(),
+                };
+                let mut any_failed = false;
+                for (req, g) in wave.into_iter().zip(graphs) {
+                    let out = g.and_then(|g| task.infer(&model, &g));
+                    match out {
+                        Ok(output) => {
+                            let _ = req.reply.send(Ok(TaskResponse {
+                                seeds: req.seeds,
+                                output,
+                                latency: req.submitted.elapsed(),
+                                batch_size,
+                            }));
+                        }
+                        Err(e) => {
+                            any_failed = true;
+                            let _ = req.reply.send(Err(Error::Runtime(e.to_string())));
+                        }
+                    }
+                }
+                if any_failed {
+                    stats_w.failed_batches.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        })
+        .expect("spawn task server");
+    TaskServerHandle { tx: Some(tx), worker: Some(worker), stats }
+}
+
 /// Sample, merge, pad, execute one wave on the AOT program; returns
 /// (flat logits, classes).
 #[allow(clippy::too_many_arguments)]
@@ -457,6 +605,87 @@ mod tests {
             }
             handle.shutdown();
         }
+    }
+
+    /// `serve_task` answers with task-shaped responses for all three
+    /// objectives — classification logits, pair link scores, regression
+    /// values — over the same batcher/sampler machinery.
+    #[test]
+    fn task_server_serves_all_three_tasks() {
+        use crate::ops::model_ref::TaskConfig;
+        use crate::synth::mag::edge_holdout;
+        use crate::tasks::{self, TaskOutput};
+
+        let mag = MagConfig::tiny();
+        let ds = generate(&mag);
+        let seeds = ds.papers_in_split(Split::Train);
+        let holdout = edge_holdout(&ds, "cites", 0.2, 9).unwrap();
+        let store = Arc::new(ds.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+        let sampler = Arc::new(InMemorySampler::new(store, spec, 3).unwrap());
+        let serve_cfg = || ServeConfig {
+            max_batch: 3,
+            max_wait: Duration::from_millis(2),
+            sampler: SamplerConfig::default(),
+        };
+
+        // Root classification.
+        let cfg = ModelConfig::for_mag(&mag, 8, 8, 1);
+        let task = tasks::build(&cfg).unwrap();
+        let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
+        let handle = serve_task(model, Arc::clone(&sampler), task, serve_cfg());
+        let resp = handle.predict(&[seeds[0]]).unwrap();
+        let TaskOutput::Classification { logits, predicted } = resp.output else {
+            panic!("want classification output");
+        };
+        assert_eq!(logits.len(), mag.num_classes);
+        assert!(predicted < mag.num_classes);
+        handle.shutdown();
+
+        // Link prediction (pair requests; sampler over the holdout
+        // store so held-out edges stay unseen).
+        let lp_store = Arc::new(holdout.store);
+        let lp_spec = mag_sampling_spec_scaled(&lp_store.schema, 0.2).unwrap();
+        let lp_sampler = Arc::new(InMemorySampler::new(lp_store, lp_spec, 3).unwrap());
+        let cfg = ModelConfig::for_mag(&mag, 8, 8, 1).with_task(TaskConfig {
+            kind: "link_prediction".into(),
+            readout: "dot".into(),
+            ..TaskConfig::default()
+        });
+        let task = tasks::build(&cfg).unwrap();
+        let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
+        let handle = serve_task(model, lp_sampler, task, serve_cfg());
+        let (u, v) = holdout.test[0];
+        let resp = handle.predict(&[u, v]).unwrap();
+        let TaskOutput::LinkScore { score } = resp.output else {
+            panic!("want link score output");
+        };
+        assert!(score.is_finite());
+        assert_eq!(resp.seeds, vec![u, v]);
+        // A degenerate pair fails its request, not the server.
+        assert!(handle.predict(&[u, u]).is_err());
+        let again = handle.predict(&[u, v]).unwrap();
+        let TaskOutput::LinkScore { score: s2 } = again.output else { panic!() };
+        assert_eq!(s2.to_bits(), score.to_bits(), "deterministic rescoring");
+        assert!(handle.stats.failed_batches.load(Ordering::Relaxed) >= 1);
+        handle.shutdown();
+
+        // Graph regression.
+        let cfg = ModelConfig::for_mag(&mag, 8, 8, 1).with_task(TaskConfig {
+            kind: "graph_regression".into(),
+            target_shift: 2010.0,
+            target_scale: 0.1,
+            ..TaskConfig::default()
+        });
+        let task = tasks::build(&cfg).unwrap();
+        let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
+        let handle = serve_task(model, sampler, task, serve_cfg());
+        let resp = handle.predict(&[seeds[1]]).unwrap();
+        let TaskOutput::Regression { value } = resp.output else {
+            panic!("want regression output");
+        };
+        assert!(value.is_finite());
+        handle.shutdown();
     }
 
     /// Regression: shutting the server down must NOT drop requests that

@@ -347,6 +347,79 @@ pub fn generate(cfg: &MagConfig) -> MagDataset {
     MagDataset { store, config: cfg.clone(), labels, years, communities }
 }
 
+/// An edge-holdout split for link prediction: a seeded fraction of one
+/// edge set removed from the message-passing store entirely (the
+/// standard no-leakage protocol — held-out edges are never visible to
+/// the GNN) and partitioned into train/validation/test supervision
+/// pairs.
+#[derive(Debug, Clone)]
+pub struct EdgeHoldout {
+    /// The dataset's store with the held-out edges removed from
+    /// `edge_set` (all other edge sets untouched).
+    pub store: GraphStore,
+    /// Supervision pairs `(source, target)`, ~80/10/10 of the holdout.
+    pub train: Vec<(u32, u32)>,
+    pub val: Vec<(u32, u32)>,
+    pub test: Vec<(u32, u32)>,
+}
+
+/// Build an [`EdgeHoldout`] over `edge_set`, deterministically in
+/// `seed`. Note: only the named edge set is filtered — if the schema
+/// carries its reverse as a separate edge set (like `writes`/`written`)
+/// the caller must hold out both or leak; the shipped link-prediction
+/// configs use `cites`, which has no reverse.
+pub fn edge_holdout(
+    ds: &MagDataset,
+    edge_set: &str,
+    fraction: f64,
+    seed: u64,
+) -> crate::Result<EdgeHoldout> {
+    if !(fraction > 0.0 && fraction < 1.0) {
+        return Err(crate::Error::Schema(format!(
+            "edge_holdout: fraction {fraction} outside (0, 1)"
+        )));
+    }
+    let col = ds.store.edge_column(edge_set)?;
+    let n_src = col.offsets.len() - 1;
+    let mut kept: Vec<(u32, u32)> = Vec::with_capacity(col.num_edges());
+    let mut held: Vec<(u32, u32)> = Vec::new();
+    let mut rng = Rng::new(mix64(seed, col.num_edges() as u64));
+    for s in 0..n_src as u32 {
+        for &t in col.neighbors(s) {
+            if s != t && rng.chance(fraction) {
+                held.push((s, t));
+            } else {
+                kept.push((s, t));
+            }
+        }
+    }
+    if held.len() < 3 {
+        return Err(crate::Error::Schema(format!(
+            "edge_holdout: only {} edges held out of {edge_set:?} — raise the \
+             fraction or the graph size",
+            held.len()
+        )));
+    }
+    // ~80/10/10, each split non-empty, shuffled deterministically.
+    rng.shuffle(&mut held);
+    let n = held.len();
+    let n_val = (n / 10).max(1);
+    let n_test = (n / 10).max(1);
+    let test = held.split_off(n - n_test);
+    let val = held.split_off(held.len() - n_val);
+    let train = held;
+
+    let mut store = ds.store.clone();
+    store.edges.insert(
+        edge_set.to_string(),
+        EdgeColumn::from_edge_list(&col.source_set, &col.target_set, n_src, &kept),
+    );
+    store.validate().map_err(|e| {
+        crate::Error::Schema(format!("edge_holdout: filtered store invalid: {e}"))
+    })?;
+    Ok(EdgeHoldout { store, train, val, test })
+}
+
 /// Poisson-ish count with the given mean (geometric mixture — cheap and
 /// adequate for degree distributions).
 fn sample_count(rng: &mut Rng, mean: f64) -> usize {
@@ -450,6 +523,48 @@ mod tests {
         }
         let frac = agree as f64 / ds.config.num_papers as f64;
         assert!(frac > 0.6, "label-community coherence {frac}");
+    }
+
+    #[test]
+    fn edge_holdout_is_deterministic_and_leak_free() {
+        let ds = generate(&MagConfig::tiny());
+        let a = edge_holdout(&ds, "cites", 0.2, 9).unwrap();
+        let b = edge_holdout(&ds, "cites", 0.2, 9).unwrap();
+        assert_eq!(a.train, b.train, "same seed, same split");
+        assert_eq!(a.val, b.val);
+        assert_eq!(a.test, b.test);
+        let c = edge_holdout(&ds, "cites", 0.2, 10).unwrap();
+        assert_ne!(a.train, c.train, "different seed, different split");
+
+        // Counts: kept + held == original; splits non-empty + disjoint.
+        let orig = ds.store.edge_column("cites").unwrap().num_edges();
+        let kept = a.store.edge_column("cites").unwrap().num_edges();
+        let held = a.train.len() + a.val.len() + a.test.len();
+        assert_eq!(kept + held, orig);
+        assert!(!a.train.is_empty() && !a.val.is_empty() && !a.test.is_empty());
+        let all: std::collections::HashSet<(u32, u32)> =
+            a.train.iter().chain(&a.val).chain(&a.test).copied().collect();
+        assert_eq!(all.len(), held, "splits are disjoint");
+
+        // No leakage: every held-out edge is gone from the train store.
+        let col = a.store.edge_column("cites").unwrap();
+        for &(s, t) in &all {
+            assert!(!col.neighbors(s).contains(&t), "held-out edge ({s},{t}) still in store");
+        }
+        // Other edge sets untouched.
+        assert_eq!(
+            a.store.edge_column("writes").unwrap().num_edges(),
+            ds.store.edge_column("writes").unwrap().num_edges()
+        );
+        a.store.validate().unwrap();
+    }
+
+    #[test]
+    fn edge_holdout_rejects_bad_fractions() {
+        let ds = generate(&MagConfig::tiny());
+        assert!(edge_holdout(&ds, "cites", 0.0, 9).is_err());
+        assert!(edge_holdout(&ds, "cites", 1.0, 9).is_err());
+        assert!(edge_holdout(&ds, "no_such_set", 0.2, 9).is_err());
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! Graph-level regression: context-style mean-pool readout with MSE
+//! loss over per-component scalar targets.
+//!
+//! Per component: mean-pool the final states of the configured node
+//! set (the whole component — a context readout, not a root gather),
+//! apply the scalar linear head `reg.w`/`reg.b`, and regress onto the
+//! root node's target feature (e.g. the paper's publication `year`),
+//! normalized as `(t − shift) · scale` so raw-unit targets (years)
+//! don't blow up the loss scale. Backward composes the FD-checked
+//! [`grad::segment_mean_vjp`] / [`grad::matmul_vjp`] / [`grad::mse`]
+//! rules and seeds the trunk's reverse sweep.
+
+use crate::graph::{Feature, GraphTensor};
+use crate::ops::model_ref::Mat;
+use crate::train::metrics::TaskMetrics;
+use crate::train::native::{grad, NativeModel};
+use crate::{Error, Result};
+
+use super::{Task, TaskOutput, TaskStep};
+
+/// The graph-regression task binding.
+#[derive(Debug, Clone)]
+pub struct GraphRegression {
+    /// Node set whose states are mean-pooled (also carries the target).
+    pub node_set: String,
+    /// Scalar target feature on the root node (node 0).
+    pub target_feature: String,
+    /// Target normalization: `t_norm = (t − shift) · scale`.
+    pub shift: f32,
+    pub scale: f32,
+}
+
+impl GraphRegression {
+    /// The component's normalized scalar target, read off the root
+    /// node's feature (i64 or f32).
+    fn read_target(&self, g: &GraphTensor) -> Result<f32> {
+        let ns = g.node_set(&self.node_set)?;
+        if ns.total() == 0 {
+            return Err(Error::Graph(format!(
+                "component has no {:?} root node",
+                self.node_set
+            )));
+        }
+        let raw = match ns.feature(&self.target_feature)? {
+            Feature::I64 { dims, data } if dims.is_empty() => data[0] as f32,
+            Feature::F32 { dims, data } if dims.is_empty() => data[0],
+            other => {
+                return Err(Error::Feature(format!(
+                    "regression target {}/{} is not a scalar-per-node feature \
+                     (dtype {:?}, {} dims) — want scalar i64 or f32",
+                    self.node_set,
+                    self.target_feature,
+                    other.dtype(),
+                    match other {
+                        Feature::I64 { dims, .. } | Feature::F32 { dims, .. } => dims.len(),
+                        _ => 0,
+                    }
+                )));
+            }
+        };
+        Ok((raw - self.shift) * self.scale)
+    }
+
+    /// Mean-pool + scalar head over final states; returns the
+    /// prediction and the pooled row (the head's backward input).
+    fn predict(
+        &self,
+        model: &NativeModel,
+        h: &std::collections::BTreeMap<String, Mat>,
+        n: usize,
+    ) -> Result<(f32, Mat)> {
+        let h_ns = h.get(&self.node_set).ok_or_else(|| {
+            Error::Graph(format!("unknown regression node set {:?}", self.node_set))
+        })?;
+        let seg = vec![0i32; n];
+        let pooled = grad::segment_mean_fwd(h_ns, &seg, 1);
+        let w = model.param("reg.w")?;
+        let b = model.param("reg.b")?;
+        let mut z = pooled.matmul(w);
+        z.add_bias(&b.data);
+        Ok((z.data[0], pooled))
+    }
+
+    fn metrics_of(pred: f32, target: f32) -> TaskMetrics {
+        // The squared error is computed in f32 like the loss (so a
+        // single example's se_sum equals its loss bit-for-bit) and
+        // *accumulated* in f64.
+        let e = pred - target;
+        TaskMetrics {
+            se_sum: (e * e) as f64,
+            ae_sum: e.abs() as f64,
+            scored: 1.0,
+            ..TaskMetrics::default()
+        }
+    }
+}
+
+impl Task for GraphRegression {
+    fn name(&self) -> &'static str {
+        "graph_regression"
+    }
+
+    fn step_grad(
+        &self,
+        model: &NativeModel,
+        g: &GraphTensor,
+        grads: &mut [Mat],
+    ) -> Result<TaskStep> {
+        let target = self.read_target(g)?;
+        let n = g.node_set(&self.node_set)?.total();
+        let (h, trunk) = model.forward_states_tape(g)?;
+        let (pred, pooled) = self.predict(model, &h, n)?;
+        let (loss, dpred) = grad::mse(pred, target);
+        let dz = Mat { rows: 1, cols: 1, data: vec![dpred] };
+        let w = model.param("reg.w")?;
+        let (dpooled, dw) = grad::matmul_vjp(&pooled, w, &dz);
+        grads[model.idx("reg.w")?].add_assign(&dw);
+        grads[model.idx("reg.b")?]
+            .add_assign(&Mat { rows: 1, cols: 1, data: grad::bias_vjp(&dz) });
+        let seg = vec![0i32; n];
+        let d_ns = grad::segment_mean_vjp(&seg, 1, &dpooled);
+        let mut dh = model.zero_state_grads(g)?;
+        dh.get_mut(&self.node_set)
+            .expect("zero_state_grads covers every node set")
+            .add_assign(&d_ns);
+        model.backward_states(g, &trunk, dh, grads)?;
+        Ok(TaskStep { loss: loss as f64, metrics: Self::metrics_of(pred, target) })
+    }
+
+    fn step_eval(&self, model: &NativeModel, g: &GraphTensor) -> Result<TaskStep> {
+        let target = self.read_target(g)?;
+        let n = g.node_set(&self.node_set)?.total();
+        let h = model.forward_states(g)?;
+        let (pred, _pooled) = self.predict(model, &h, n)?;
+        let (loss, _dpred) = grad::mse(pred, target);
+        Ok(TaskStep { loss: loss as f64, metrics: Self::metrics_of(pred, target) })
+    }
+
+    /// Predict the target in its *unnormalized* scale.
+    fn infer(&self, model: &NativeModel, g: &GraphTensor) -> Result<TaskOutput> {
+        let n = g.node_set(&self.node_set)?.total();
+        if n == 0 {
+            return Err(Error::Graph(format!(
+                "regression request subgraph has no {:?} nodes",
+                self.node_set
+            )));
+        }
+        let h = model.forward_states(g)?;
+        let (pred, _pooled) = self.predict(model, &h, n)?;
+        Ok(TaskOutput::Regression { value: pred / self.scale + self.shift })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::model_ref::{ModelConfig, TaskConfig};
+    use crate::sampler::inmem::InMemorySampler;
+    use crate::sampler::spec::mag_sampling_spec_scaled;
+    use crate::synth::mag::{generate, MagConfig};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn setup() -> (NativeModel, GraphRegression, GraphTensor) {
+        let ds = generate(&MagConfig::tiny());
+        let store = Arc::new(ds.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+        let sampler = InMemorySampler::new(store, spec, 3).unwrap();
+        let g = sampler.sample(1).unwrap();
+        let t = TaskConfig {
+            kind: "graph_regression".into(),
+            target_feature: "year".into(),
+            target_shift: 2010.0,
+            target_scale: 0.1,
+            ..TaskConfig::default()
+        };
+        let cfg = ModelConfig::for_mag(&MagConfig::tiny(), 8, 8, 1).with_task(t);
+        let model = NativeModel::init(cfg, 5).unwrap();
+        let task = GraphRegression {
+            node_set: "paper".into(),
+            target_feature: "year".into(),
+            shift: 2010.0,
+            scale: 0.1,
+        };
+        (model, task, g)
+    }
+
+    #[test]
+    fn eval_and_grad_losses_agree_bitexact() {
+        let (model, task, g) = setup();
+        let eval = task.step_eval(&model, &g).unwrap();
+        let mut grads = model.zeros_grads();
+        let step = task.step_grad(&model, &g, &mut grads).unwrap();
+        assert_eq!((eval.loss as f32).to_bits(), (step.loss as f32).to_bits());
+        assert_eq!(eval.metrics, step.metrics);
+        assert!(step.loss.is_finite());
+        assert!(grads.iter().any(|m| m.data.iter().any(|&v| v != 0.0)));
+        // MSE identity: loss == se_sum for a single example.
+        assert!((step.loss - step.metrics.se_sum).abs() < 1e-12);
+    }
+
+    /// End-to-end gradcheck through trunk + mean-pool + scalar head.
+    #[test]
+    fn gradcheck_graph_regression_end_to_end() {
+        let (model, task, g) = setup();
+        let loss_of = |m: &NativeModel| -> f64 { task.step_eval(m, &g).unwrap().loss };
+        let mut grads = model.zeros_grads();
+        task.step_grad(&model, &g, &mut grads).unwrap();
+        let mut rng = Rng::new(31);
+        let h = 1e-2f32;
+        let mut checked = 0usize;
+        for (pi, name) in model.names.iter().enumerate() {
+            let n_elems = model.params[pi].data.len();
+            if n_elems == 0 {
+                continue;
+            }
+            for _ in 0..2.min(n_elems) {
+                let ei = rng.uniform(n_elems);
+                let mut mp = model.clone();
+                mp.params[pi].data[ei] += h;
+                let mut mm = model.clone();
+                mm.params[pi].data[ei] -= h;
+                let fd = (loss_of(&mp) - loss_of(&mm)) / (2.0 * h as f64);
+                let an = grads[pi].data[ei] as f64;
+                let denom = an.abs().max(fd.abs()).max(1.0);
+                assert!(
+                    (an - fd).abs() / denom <= 1e-2,
+                    "{name}[{ei}]: analytic {an} vs fd {fd}"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 10, "probed {checked} elements");
+    }
+
+    #[test]
+    fn infer_unnormalizes_the_prediction() {
+        let (model, task, g) = setup();
+        let TaskOutput::Regression { value } = task.infer(&model, &g).unwrap() else {
+            panic!("wrong output shape");
+        };
+        assert!(value.is_finite());
+        let h = model.forward_states(&g).unwrap();
+        let n = g.node_set("paper").unwrap().total();
+        let (pred, _) = task.predict(&model, &h, n).unwrap();
+        assert!((value - (pred / 0.1 + 2010.0)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bad_targets_are_structured_errors() {
+        let (model, task, g) = setup();
+        // A scalar i64 feature (#id) is a valid target.
+        let ids = GraphRegression { target_feature: "#id".into(), ..task.clone() };
+        assert!(ids.step_eval(&model, &g).is_ok());
+        // A *non-scalar* feature must be rejected by name, not silently
+        // regressed onto its first flattened element ("feat" is [n, 16]).
+        let vector = GraphRegression { target_feature: "feat".into(), ..task.clone() };
+        let err = vector.step_eval(&model, &g).expect_err("vector target");
+        assert!(err.to_string().contains("scalar"), "{err}");
+        // A missing feature errors too.
+        let missing = GraphRegression { target_feature: "no_such".into(), ..task };
+        assert!(missing.step_eval(&model, &g).is_err());
+    }
+}

@@ -1,0 +1,695 @@
+//! Link prediction over a held-out edge split — the sampled-subgraph
+//! production workload of "Scalable GNN Training: The Case for
+//! Sampling" (Serafini & Guan, 2021).
+//!
+//! **Example shape.** One training example is a *pair subgraph*: the
+//! rooted expansions of the positive pair `(u, v)` **and** of K
+//! deterministic negatives, merged into one GraphTensor by
+//! [`InMemorySampler::sample_seeds`] with the seed list pinned first in
+//! the seed node set — node 0 is `u`, node 1 the positive `v`, nodes
+//! `2..2+K` the negatives. Co-sampling the negatives is what makes
+//! their *final* (message-passed) states exist in the same component,
+//! so scoring stays a pure per-component function and every engine
+//! invariant (1-thread == serial oracle bit parity, deterministic
+//! all-reduce) carries over unchanged.
+//!
+//! **Negative-sampling determinism.** Negatives are seeded-uniform
+//! draws keyed by `(split_seed, u, v)` — fixed at sampling time, never
+//! at step time, so an example's loss is a pure function of the pair
+//! and the parameters. The candidate count rides in the context
+//! feature [`CANDS_FEATURE`] (per component, survives merge/pad).
+//!
+//! **Readout.** `dot` scores `⟨h_u, h_c⟩` (parameter-free);
+//! `hadamard` scores `relu((h_u ∘ h_c)·W + b)·v + c` (an MLP over the
+//! element-wise product). Loss is softmax cross-entropy with the
+//! positive at index 0, or a pairwise margin hinge. Metrics: MRR and
+//! hits@k over the candidate list (rank ties count against the
+//! positive only on strict score superiority).
+//!
+//! The supervision pairs come from [`crate::synth::mag::edge_holdout`]:
+//! a seeded fraction of an edge set is removed from the
+//! message-passing store entirely (no leakage) and partitioned into
+//! train/validation/test pairs.
+
+use std::sync::Arc;
+
+use crate::graph::pad::{fit_or_skip, PadSpec, Padded};
+use crate::graph::{Feature, GraphTensor};
+use crate::layers::row_mat;
+use crate::ops::model_ref::{Mat, TaskConfig};
+use crate::pipeline::DatasetProvider;
+use crate::sampler::inmem::InMemorySampler;
+use crate::train::metrics::TaskMetrics;
+use crate::train::native::{grad, NativeModel};
+use crate::util::rng::{mix64, Rng};
+use crate::{Error, Result};
+
+use super::{Task, TaskOutput, TaskStep};
+
+/// Context feature carrying the per-component candidate count
+/// (1 positive + K negatives), written by [`pair_example`].
+pub const CANDS_FEATURE: &str = "lp_cands";
+
+/// Pair scorer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Readout {
+    /// `s = ⟨h_u, h_c⟩` — parameter-free.
+    Dot,
+    /// `s = relu((h_u ∘ h_c)·W + b)·v + c` — the Hadamard MLP
+    /// (`lp.w`/`lp.b`/`lp.v`/`lp.c`).
+    Hadamard,
+}
+
+/// Candidate loss.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LinkLoss {
+    /// Softmax cross-entropy, positive at index 0 — reuses the
+    /// FD-checked [`grad::softmax_xent_masked`].
+    Softmax,
+    /// Pairwise hinge `Σ max(0, margin − s_pos + s_neg)` — the
+    /// FD-checked [`grad::margin_rank`].
+    Margin(f32),
+}
+
+/// The link-prediction task binding.
+#[derive(Debug, Clone)]
+pub struct LinkPrediction {
+    /// The (homogeneous) node set pairs are scored within.
+    pub node_set: String,
+    pub readout: Readout,
+    pub loss: LinkLoss,
+    pub hits_k: usize,
+}
+
+/// Saved readout activations for the backward pass.
+struct ReadoutSaved {
+    /// `[cands, hidden]` gathered source rows (h_u repeated).
+    a: Mat,
+    /// `[cands, hidden]` gathered candidate rows.
+    b: Mat,
+    /// Hadamard-MLP intermediates (None for dot).
+    mlp: Option<MlpSaved>,
+}
+
+struct MlpSaved {
+    /// `[cands, hidden]` element-wise product.
+    x: Mat,
+    /// `[cands, m]` pre-relu hidden layer.
+    z1: Mat,
+    /// `[cands, m]` post-relu hidden layer.
+    hmid: Mat,
+}
+
+impl LinkPrediction {
+    /// Build from a validated config (`node_set` is the edge set's
+    /// homogeneous endpoint, resolved by [`super::build`]).
+    pub fn from_config(node_set: String, t: &TaskConfig) -> Result<LinkPrediction> {
+        let readout = match t.readout.as_str() {
+            "dot" => Readout::Dot,
+            "hadamard" => Readout::Hadamard,
+            other => {
+                return Err(Error::Schema(format!(
+                    "task.readout {other:?} unknown (want dot|hadamard)"
+                )));
+            }
+        };
+        let loss = match t.loss.as_str() {
+            "softmax" => LinkLoss::Softmax,
+            "margin" => LinkLoss::Margin(t.margin),
+            other => {
+                return Err(Error::Schema(format!(
+                    "task.loss {other:?} unknown (want softmax|margin)"
+                )));
+            }
+        };
+        Ok(LinkPrediction { node_set, readout, loss, hits_k: t.hits_k })
+    }
+
+    /// Node count + candidate count of one example component.
+    fn shape_of(&self, g: &GraphTensor) -> Result<(usize, usize)> {
+        let n = g.node_set(&self.node_set)?.total();
+        let (_, c) = g.context.feature(CANDS_FEATURE)?.as_i64()?;
+        let cands = c[0] as usize;
+        if cands < 2 {
+            return Err(Error::Graph(format!(
+                "link-prediction example has {cands} candidates — needs the \
+                 positive plus at least one negative (is the store too small \
+                 for task.negatives?)"
+            )));
+        }
+        if n < 1 + cands {
+            return Err(Error::Graph(format!(
+                "link-prediction example has {n} {:?} nodes for 1 source + \
+                 {cands} candidates — pair seeds were not pinned first",
+                self.node_set
+            )));
+        }
+        Ok((n, cands))
+    }
+
+    /// Score source row 0 against candidate rows `cand_idx`, saving the
+    /// backward intermediates. The float sequence is identical on the
+    /// fused (eval) and taped (train) trunk paths.
+    fn readout_fwd(
+        &self,
+        model: &NativeModel,
+        h_ns: &Mat,
+        src_idx: &[i32],
+        cand_idx: &[i32],
+    ) -> Result<(Vec<f32>, ReadoutSaved)> {
+        let a = h_ns.gather(src_idx);
+        let b = h_ns.gather(cand_idx);
+        match self.readout {
+            Readout::Dot => {
+                let scores = grad::row_dot_fwd(&a, &b);
+                Ok((scores, ReadoutSaved { a, b, mlp: None }))
+            }
+            Readout::Hadamard => {
+                let x = grad::hadamard_fwd(&a, &b);
+                let w = model.param("lp.w")?;
+                let bb = model.param("lp.b")?;
+                let mut z1 = x.matmul(w);
+                z1.add_bias(&bb.data);
+                let mut hmid = z1.clone();
+                hmid.relu();
+                let v = model.param("lp.v")?;
+                let c = model.param("lp.c")?;
+                let mut s = hmid.matmul(v);
+                s.add_bias(&c.data);
+                let scores = s.data;
+                Ok((scores, ReadoutSaved { a, b, mlp: Some(MlpSaved { x, z1, hmid }) }))
+            }
+        }
+    }
+
+    /// VJP of [`Self::readout_fwd`]: accumulates `lp.*` gradients (for
+    /// the Hadamard MLP) and returns `(da, db)` — gradients on the
+    /// gathered source/candidate rows.
+    fn readout_vjp(
+        &self,
+        model: &NativeModel,
+        saved: &ReadoutSaved,
+        dscores: &[f32],
+        grads: &mut [Mat],
+    ) -> Result<(Mat, Mat)> {
+        match (&self.readout, &saved.mlp) {
+            (Readout::Dot, _) => Ok(grad::row_dot_vjp(&saved.a, &saved.b, dscores)),
+            (Readout::Hadamard, Some(mlp)) => {
+                let ds = Mat { rows: dscores.len(), cols: 1, data: dscores.to_vec() };
+                let v = model.param("lp.v")?;
+                let (dhmid, dv) = grad::matmul_vjp(&mlp.hmid, v, &ds);
+                grads[model.idx("lp.v")?].add_assign(&dv);
+                grads[model.idx("lp.c")?].add_assign(&row_mat(grad::bias_vjp(&ds)));
+                let dz1 = grad::relu_vjp(&mlp.z1, &dhmid);
+                let w = model.param("lp.w")?;
+                let (dx, dw) = grad::matmul_vjp(&mlp.x, w, &dz1);
+                grads[model.idx("lp.w")?].add_assign(&dw);
+                grads[model.idx("lp.b")?].add_assign(&row_mat(grad::bias_vjp(&dz1)));
+                Ok(grad::hadamard_vjp(&saved.a, &saved.b, &dx))
+            }
+            (Readout::Hadamard, None) => {
+                Err(Error::Runtime("hadamard backward without saved MLP tape".into()))
+            }
+        }
+    }
+
+    /// Loss and `∂L/∂scores` over the candidate list (positive first).
+    fn loss_grad(&self, scores: &[f32]) -> (f64, Vec<f32>) {
+        match self.loss {
+            LinkLoss::Softmax => {
+                let logits = Mat { rows: 1, cols: scores.len(), data: scores.to_vec() };
+                let x = grad::softmax_xent_masked(&logits, &[0], &[1.0]);
+                (x.total_ce as f64, x.dlogits.data)
+            }
+            LinkLoss::Margin(m) => {
+                let (l, d) = grad::margin_rank(scores, m);
+                (l as f64, d)
+            }
+        }
+    }
+
+    /// Rank of the positive among the candidates (1-based; a negative
+    /// outranks only on a strictly greater score) and the derived
+    /// metric sums.
+    fn rank_metrics(&self, scores: &[f32]) -> TaskMetrics {
+        let rank = 1 + scores[1..].iter().filter(|&&s| s > scores[0]).count();
+        TaskMetrics {
+            correct: if rank == 1 { 1.0 } else { 0.0 },
+            rr_sum: 1.0 / rank as f64,
+            hits_sum: if rank <= self.hits_k { 1.0 } else { 0.0 },
+            scored: 1.0,
+            ..TaskMetrics::default()
+        }
+    }
+
+    fn states_of<'h>(
+        &self,
+        h: &'h std::collections::BTreeMap<String, Mat>,
+    ) -> Result<&'h Mat> {
+        h.get(&self.node_set).ok_or_else(|| {
+            Error::Graph(format!("unknown link-prediction node set {:?}", self.node_set))
+        })
+    }
+}
+
+impl Task for LinkPrediction {
+    fn name(&self) -> &'static str {
+        "link_prediction"
+    }
+
+    fn step_grad(
+        &self,
+        model: &NativeModel,
+        g: &GraphTensor,
+        grads: &mut [Mat],
+    ) -> Result<TaskStep> {
+        let (n, cands) = self.shape_of(g)?;
+        let (h, trunk) = model.forward_states_tape(g)?;
+        let h_ns = self.states_of(&h)?;
+        let src_idx = vec![0i32; cands];
+        let cand_idx: Vec<i32> = (1..=cands as i32).collect();
+        let (scores, saved) = self.readout_fwd(model, h_ns, &src_idx, &cand_idx)?;
+        let (loss, dscores) = self.loss_grad(&scores);
+        let metrics = self.rank_metrics(&scores);
+        let (da, db) = self.readout_vjp(model, &saved, &dscores, grads)?;
+        let mut d_ns = grad::gather_vjp(&src_idx, n, &da);
+        d_ns.add_assign(&grad::gather_vjp(&cand_idx, n, &db));
+        let mut dh = model.zero_state_grads(g)?;
+        dh.get_mut(&self.node_set)
+            .expect("zero_state_grads covers every node set")
+            .add_assign(&d_ns);
+        model.backward_states(g, &trunk, dh, grads)?;
+        Ok(TaskStep { loss, metrics })
+    }
+
+    fn step_eval(&self, model: &NativeModel, g: &GraphTensor) -> Result<TaskStep> {
+        let (_n, cands) = self.shape_of(g)?;
+        let h = model.forward_states(g)?;
+        let h_ns = self.states_of(&h)?;
+        let src_idx = vec![0i32; cands];
+        let cand_idx: Vec<i32> = (1..=cands as i32).collect();
+        let (scores, _saved) = self.readout_fwd(model, h_ns, &src_idx, &cand_idx)?;
+        let (loss, _dscores) = self.loss_grad(&scores);
+        Ok(TaskStep { loss, metrics: self.rank_metrics(&scores) })
+    }
+
+    /// Score the requested pair: the subgraph was sampled from seeds
+    /// `[source, target]`, so the pair sits at rows 0 and 1.
+    fn infer(&self, model: &NativeModel, g: &GraphTensor) -> Result<TaskOutput> {
+        let n = g.node_set(&self.node_set)?.total();
+        if n < 2 {
+            return Err(Error::Graph(format!(
+                "link-prediction request subgraph has {n} {:?} nodes — want the \
+                 (source, target) pair pinned at rows 0 and 1",
+                self.node_set
+            )));
+        }
+        let h = model.forward_states(g)?;
+        let h_ns = self.states_of(&h)?;
+        let (scores, _saved) = self.readout_fwd(model, h_ns, &[0], &[1])?;
+        Ok(TaskOutput::LinkScore { score: scores[0] })
+    }
+}
+
+/// Deterministic seeded-uniform negatives for the pair `(u, v)`:
+/// `min(k, n-2)` distinct node ids excluding both endpoints, keyed by
+/// `(seed, u, v)` — the same pair always draws the same negatives.
+pub fn pair_negatives(u: u32, v: u32, num_nodes: usize, k: usize, seed: u64) -> Vec<u32> {
+    let want = k.min(num_nodes.saturating_sub(2));
+    let mut rng = Rng::new(mix64(seed, mix64(u as u64, v as u64)));
+    let mut out = Vec::with_capacity(want);
+    let mut seen = std::collections::HashSet::with_capacity(want + 2);
+    seen.insert(u);
+    seen.insert(v);
+    while out.len() < want {
+        let cand = rng.uniform(num_nodes) as u32;
+        if seen.insert(cand) {
+            out.push(cand);
+        }
+    }
+    out
+}
+
+/// Sample one link-prediction example: the pair subgraph of
+/// `[u, v, negatives…]` with the candidate count recorded in the
+/// [`CANDS_FEATURE`] context feature.
+pub fn pair_example(
+    sampler: &InMemorySampler,
+    u: u32,
+    v: u32,
+    num_nodes: usize,
+    negatives: usize,
+    neg_seed: u64,
+) -> Result<GraphTensor> {
+    if u == v {
+        return Err(Error::Sampler(format!("degenerate link-prediction pair ({u}, {u})")));
+    }
+    let mut seeds = vec![u, v];
+    seeds.extend(pair_negatives(u, v, num_nodes, negatives, neg_seed));
+    let mut g = sampler.sample_seeds(&seeds)?;
+    g.context
+        .features
+        .insert(CANDS_FEATURE.into(), Feature::i64_vec(vec![(seeds.len() - 1) as i64]));
+    Ok(g)
+}
+
+/// A [`DatasetProvider`] over supervision pairs: reshuffles the pair
+/// list per epoch (like the seed provider) and yields one pair
+/// subgraph per example. With `sampling.threads > 1` the stage fans
+/// out in waves of `sampling.chunk_size` pairs over a pool the
+/// epoch iterator owns — examples are independent and negatives are
+/// RNG-keyed per pair, so the stream is bit-for-bit the serial one.
+pub struct PairProvider {
+    pub sampler: Arc<InMemorySampler>,
+    pub pairs: Vec<(u32, u32)>,
+    pub shuffle_seed: u64,
+    /// Negatives per positive (co-sampled into the example).
+    pub negatives: usize,
+    /// Negative-sampling key (the task's `split_seed`).
+    pub neg_seed: u64,
+    /// Cardinality of the scored node set.
+    pub num_nodes: usize,
+    /// Sampling-stage execution knobs (threads, wave size) — the same
+    /// role `SamplingProvider::sampling` plays for seed streams.
+    pub sampling: crate::sampler::SamplerConfig,
+}
+
+/// Wave-parallel pair-sampling iterator (the pair analog of the
+/// pipeline's `ParallelSampleIter`). Owns its pool; dropping the epoch
+/// stream drops the pool and joins the workers.
+struct ParallelPairIter {
+    sampler: Arc<InMemorySampler>,
+    pool: crate::util::threadpool::ThreadPool,
+    pairs: std::vec::IntoIter<(u32, u32)>,
+    chunk: usize,
+    negatives: usize,
+    neg_seed: u64,
+    num_nodes: usize,
+    buf: std::collections::VecDeque<Result<GraphTensor>>,
+}
+
+impl Iterator for ParallelPairIter {
+    type Item = Result<GraphTensor>;
+
+    fn next(&mut self) -> Option<Result<GraphTensor>> {
+        if self.buf.is_empty() {
+            let wave: Vec<(u32, u32)> = self.pairs.by_ref().take(self.chunk).collect();
+            if wave.is_empty() {
+                return None;
+            }
+            let sampler = Arc::clone(&self.sampler);
+            let (negatives, neg_seed, num_nodes) =
+                (self.negatives, self.neg_seed, self.num_nodes);
+            self.buf = self
+                .pool
+                .map(wave, move |(u, v)| {
+                    pair_example(&sampler, u, v, num_nodes, negatives, neg_seed)
+                })
+                .into();
+        }
+        self.buf.pop_front()
+    }
+}
+
+impl DatasetProvider for PairProvider {
+    fn get_dataset(
+        &self,
+        epoch: u64,
+    ) -> Result<Box<dyn Iterator<Item = Result<GraphTensor>> + Send>> {
+        let mut pairs = self.pairs.clone();
+        let mut rng = Rng::new(self.shuffle_seed ^ epoch.wrapping_mul(0x9E3779B97F4A7C15));
+        rng.shuffle(&mut pairs);
+        let (negatives, neg_seed, num_nodes) = (self.negatives, self.neg_seed, self.num_nodes);
+        if self.sampling.parallel() {
+            return Ok(Box::new(ParallelPairIter {
+                sampler: Arc::clone(&self.sampler),
+                pool: crate::util::threadpool::ThreadPool::new(self.sampling.threads),
+                pairs: pairs.into_iter(),
+                chunk: self.sampling.chunk_size.max(1),
+                negatives,
+                neg_seed,
+                num_nodes,
+                buf: std::collections::VecDeque::new(),
+            }));
+        }
+        let sampler = Arc::clone(&self.sampler);
+        Ok(Box::new(pairs.into_iter().map(move |(u, v)| {
+            pair_example(&sampler, u, v, num_nodes, negatives, neg_seed)
+        })))
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.pairs.len())
+    }
+}
+
+/// Batch up a pair list for evaluation (merge + fit-or-skip), mirroring
+/// `MagEnv::eval_batches` for seed lists. Trailing partial batches are
+/// dropped, like the training pipeline's `drop_remainder`.
+#[allow(clippy::too_many_arguments)]
+pub fn pair_eval_batches(
+    sampler: Arc<InMemorySampler>,
+    pairs: Vec<(u32, u32)>,
+    batch: usize,
+    pad: PadSpec,
+    negatives: usize,
+    neg_seed: u64,
+    num_nodes: usize,
+    limit: Option<usize>,
+) -> impl Iterator<Item = Result<Option<Padded>>> {
+    let n = limit.map(|l| l * batch).unwrap_or(usize::MAX);
+    let chunks: Vec<Vec<(u32, u32)>> = pairs
+        .into_iter()
+        .take(n)
+        .collect::<Vec<_>>()
+        .chunks(batch)
+        .filter(|c| c.len() == batch)
+        .map(|c| c.to_vec())
+        .collect();
+    chunks.into_iter().map(move |chunk| {
+        let graphs = chunk
+            .iter()
+            .map(|&(u, v)| pair_example(&sampler, u, v, num_nodes, negatives, neg_seed))
+            .collect::<Result<Vec<_>>>()?;
+        let merged = crate::graph::batch::merge(&graphs)?;
+        Ok(fit_or_skip(&merged, &pad))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::model_ref::ModelConfig;
+    use crate::sampler::spec::mag_sampling_spec_scaled;
+    use crate::synth::mag::{edge_holdout, generate, MagConfig};
+    use crate::util::rng::Rng as TestRng;
+
+    fn linkpred_cfg(readout: &str, loss: &str) -> ModelConfig {
+        let t = TaskConfig {
+            kind: "link_prediction".into(),
+            readout: readout.into(),
+            loss: loss.into(),
+            margin: 1.0,
+            negatives: 3,
+            hits_k: 2,
+            mlp_dim: 6,
+            ..TaskConfig::default()
+        };
+        ModelConfig::for_mag(&MagConfig::tiny(), 8, 8, 1).with_task(t)
+    }
+
+    fn setup(readout: &str, loss: &str) -> (NativeModel, LinkPrediction, GraphTensor) {
+        let ds = generate(&MagConfig::tiny());
+        let num_papers = ds.config.num_papers;
+        let holdout = edge_holdout(&ds, "cites", 0.2, 9).unwrap();
+        let store = Arc::new(holdout.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+        let sampler = InMemorySampler::new(store, spec, 3).unwrap();
+        let (u, v) = holdout.train[0];
+        let g = pair_example(&sampler, u, v, num_papers, 3, 9).unwrap();
+        let cfg = linkpred_cfg(readout, loss);
+        let model = NativeModel::init(cfg.clone(), 11).unwrap();
+        let task = LinkPrediction::from_config("paper".into(), &cfg.task).unwrap();
+        (model, task, g)
+    }
+
+    #[test]
+    fn pair_negatives_are_deterministic_and_exclusive() {
+        let a = pair_negatives(3, 17, 100, 8, 42);
+        let b = pair_negatives(3, 17, 100, 8, 42);
+        assert_eq!(a, b, "same (seed, u, v) draws the same negatives");
+        assert_eq!(a.len(), 8);
+        let set: std::collections::HashSet<_> = a.iter().collect();
+        assert_eq!(set.len(), 8, "distinct");
+        assert!(!a.contains(&3) && !a.contains(&17), "endpoints excluded");
+        let c = pair_negatives(3, 18, 100, 8, 42);
+        assert_ne!(a, c, "different pair, different draws");
+        // Clamped when the universe is tiny.
+        assert_eq!(pair_negatives(0, 1, 2, 5, 7).len(), 0);
+        assert_eq!(pair_negatives(0, 1, 3, 5, 7), vec![2]);
+    }
+
+    #[test]
+    fn pair_example_pins_seeds_first() {
+        let (_model, _task, g) = setup("dot", "softmax");
+        let (_, ids) =
+            g.node_set("paper").unwrap().feature("#id").unwrap().as_i64().unwrap();
+        let (_, cands) = g.context.feature(CANDS_FEATURE).unwrap().as_i64().unwrap();
+        assert_eq!(cands[0], 4, "positive + 3 negatives");
+        assert!(ids.len() >= 5, "source + candidates all present");
+        let head: std::collections::HashSet<_> = ids[..5].iter().collect();
+        assert_eq!(head.len(), 5, "seed ids distinct and pinned first");
+    }
+
+    #[test]
+    fn eval_and_grad_losses_agree_bitexact() {
+        for (readout, loss) in [("dot", "softmax"), ("dot", "margin"), ("hadamard", "softmax")] {
+            let (model, task, g) = setup(readout, loss);
+            let eval = task.step_eval(&model, &g).unwrap();
+            let mut grads = model.zeros_grads();
+            let step = task.step_grad(&model, &g, &mut grads).unwrap();
+            assert_eq!(
+                (eval.loss as f32).to_bits(),
+                (step.loss as f32).to_bits(),
+                "{readout}/{loss}: fused eval loss == taped train loss"
+            );
+            assert_eq!(eval.metrics, step.metrics);
+            assert!(step.loss.is_finite());
+            assert!(
+                grads.iter().any(|m| m.data.iter().any(|&v| v != 0.0)),
+                "{readout}/{loss}: gradients flowed"
+            );
+        }
+    }
+
+    /// End-to-end gradcheck through trunk + readout: finite differences
+    /// on a scattering of parameters across every role must match
+    /// step_grad, for both readouts and both losses.
+    #[test]
+    fn gradcheck_link_prediction_end_to_end() {
+        for (readout, loss) in [("dot", "softmax"), ("hadamard", "margin")] {
+            let (model, task, g) = setup(readout, loss);
+            let loss_of = |m: &NativeModel| -> f64 { task.step_eval(m, &g).unwrap().loss };
+            let mut grads = model.zeros_grads();
+            task.step_grad(&model, &g, &mut grads).unwrap();
+            let mut rng = TestRng::new(77);
+            let h = 1e-2f32;
+            let mut checked = 0usize;
+            for (pi, name) in model.names.iter().enumerate() {
+                let n_elems = model.params[pi].data.len();
+                if n_elems == 0 {
+                    continue;
+                }
+                for _ in 0..2.min(n_elems) {
+                    let ei = rng.uniform(n_elems);
+                    let mut mp = model.clone();
+                    mp.params[pi].data[ei] += h;
+                    let mut mm = model.clone();
+                    mm.params[pi].data[ei] -= h;
+                    let fd = (loss_of(&mp) - loss_of(&mm)) / (2.0 * h as f64);
+                    let an = grads[pi].data[ei] as f64;
+                    let denom = an.abs().max(fd.abs()).max(1.0);
+                    // Same whole-model tolerance rationale as
+                    // gradcheck_full_model_backward: parameter
+                    // perturbations can cross relu/hinge kinks the
+                    // op-level tests exclude by construction.
+                    assert!(
+                        (an - fd).abs() / denom <= 1e-2,
+                        "{readout}/{loss} {name}[{ei}]: analytic {an} vs fd {fd}"
+                    );
+                    checked += 1;
+                }
+            }
+            assert!(checked >= 10, "{readout}/{loss}: probed {checked} elements");
+        }
+    }
+
+    #[test]
+    fn rank_metrics_count_strict_superiority() {
+        let task = LinkPrediction {
+            node_set: "paper".into(),
+            readout: Readout::Dot,
+            loss: LinkLoss::Softmax,
+            hits_k: 2,
+        };
+        // Positive wins outright.
+        let m = task.rank_metrics(&[2.0, 1.0, 0.0]);
+        assert_eq!(m.correct, 1.0);
+        assert_eq!(m.rr_sum, 1.0);
+        assert_eq!(m.hits_sum, 1.0);
+        // One strictly better negative, one tie: rank 2 (ties don't
+        // outrank).
+        let m = task.rank_metrics(&[1.0, 3.0, 1.0]);
+        assert_eq!(m.correct, 0.0);
+        assert_eq!(m.rr_sum, 0.5);
+        assert_eq!(m.hits_sum, 1.0, "rank 2 ≤ k 2");
+        // Dead last among 4 candidates.
+        let m = task.rank_metrics(&[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(m.rr_sum, 0.25);
+        assert_eq!(m.hits_sum, 0.0);
+        assert_eq!(m.scored, 1.0);
+    }
+
+    /// The wave-parallel pair-sampling stage must feed the pipeline the
+    /// exact same example stream (order and bits) as serial — the same
+    /// contract the seed provider's parallel stage honors.
+    #[test]
+    fn parallel_pair_stream_matches_serial() {
+        let ds = generate(&MagConfig::tiny());
+        let num_papers = ds.config.num_papers;
+        let holdout = edge_holdout(&ds, "cites", 0.25, 9).unwrap();
+        let store = Arc::new(holdout.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+        let sampler = Arc::new(InMemorySampler::new(store, spec, 3).unwrap());
+        let provider = |threads: usize| PairProvider {
+            sampler: Arc::clone(&sampler),
+            pairs: holdout.train.clone(),
+            shuffle_seed: 5,
+            negatives: 2,
+            neg_seed: 9,
+            num_nodes: num_papers,
+            sampling: crate::sampler::SamplerConfig {
+                threads,
+                chunk_size: 7,
+                ..crate::sampler::SamplerConfig::default()
+            },
+        };
+        let serial: Vec<GraphTensor> = provider(1)
+            .get_dataset(0)
+            .unwrap()
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        assert_eq!(serial.len(), holdout.train.len());
+        for threads in [2usize, 4] {
+            let par: Vec<GraphTensor> = provider(threads)
+                .get_dataset(0)
+                .unwrap()
+                .collect::<Result<Vec<_>>>()
+                .unwrap();
+            assert_eq!(par, serial, "threads={threads}: order and bits preserved");
+        }
+        // Epochs reshuffle the pair order.
+        let e1: Vec<GraphTensor> = provider(2)
+            .get_dataset(1)
+            .unwrap()
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        assert_ne!(e1, serial, "different epochs reshuffled");
+    }
+
+    #[test]
+    fn infer_scores_a_bare_pair() {
+        let (model, task, _g) = setup("dot", "softmax");
+        let ds = generate(&MagConfig::tiny());
+        let holdout = edge_holdout(&ds, "cites", 0.2, 9).unwrap();
+        let store = Arc::new(holdout.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+        let sampler = InMemorySampler::new(store, spec, 3).unwrap();
+        let (u, v) = holdout.val[0];
+        let g = sampler.sample_seeds(&[u, v]).unwrap();
+        let TaskOutput::LinkScore { score } = task.infer(&model, &g).unwrap() else {
+            panic!("wrong output shape");
+        };
+        assert!(score.is_finite());
+    }
+}

@@ -1,0 +1,307 @@
+//! Task subsystem: interchangeable readout heads over the shared GNN
+//! trunk (the paper's orchestration-layer *tasks*, §5 / A.5).
+//!
+//! The TF-GNN Runner composes a model from a trunk (the GraphUpdate
+//! stack) and a **task** — a readout head with its own loss and
+//! metrics: node classification, link prediction, graph-level
+//! prediction. This module is that family for the native engine:
+//!
+//! * [`Task`] — the trait: per-component forward + loss + tape-seeding
+//!   backward ([`Task::step_grad`]), the forward-only twin
+//!   ([`Task::step_eval`]), and the serve-time response
+//!   ([`Task::infer`]);
+//! * [`RootClassification`] — the original objective, extracted from
+//!   the trainer verbatim: masked softmax cross-entropy over the root
+//!   node's logits (bit-for-bit the pre-subsystem path — pinned by
+//!   `tests/native_training.rs`);
+//! * [`LinkPrediction`] — scores (source, target) node pairs of a
+//!   held-out edge split via a dot or Hadamard-MLP readout over the
+//!   pair subgraph's final states, with deterministic seeded-uniform
+//!   negatives co-sampled into the subgraph, softmax or margin loss,
+//!   and MRR / hits@k metrics;
+//! * [`GraphRegression`] — context-level mean-pool readout with MSE
+//!   loss over per-component scalar targets.
+//!
+//! **Engine invariants.** A task's step is a pure function of one
+//! component's GraphTensor and the model parameters: no cross-component
+//! state, no RNG at step time (link-prediction negatives are fixed at
+//! sampling time, keyed by the pair). That is what keeps every task
+//! inside the trainer's determinism contract — 1-thread == serial
+//! oracle bit-for-bit, in-order loss summation bit-stable across
+//! thread counts, ≤1e-5 rel multi-thread parameter drift.
+//!
+//! Task selection flows from the config `task` block
+//! ([`crate::ops::model_ref::TaskConfig`], validated in the same
+//! funnel as the `model` block): [`head_params`] tells
+//! [`NativeModel::init`](crate::train::native::NativeModel::init)
+//! which readout parameters to create (the default task reproduces the
+//! historical `head.w`/`head.b` draws on the same RNG stream), and
+//! [`build`] turns the config into the executable [`Task`].
+
+pub mod graph_regression;
+pub mod link_prediction;
+pub mod root_classification;
+
+pub use graph_regression::GraphRegression;
+pub use link_prediction::{LinkPrediction, PairProvider};
+pub use root_classification::RootClassification;
+
+use std::sync::Arc;
+
+pub use crate::train::metrics::TaskMetrics;
+
+use crate::graph::GraphTensor;
+use crate::ops::model_ref::{Mat, ModelConfig};
+use crate::train::native::NativeModel;
+use crate::{Error, Result};
+
+/// One scored example's contribution to a training/eval step.
+#[derive(Debug, Clone)]
+pub struct TaskStep {
+    /// Unnormalized per-example loss (summed in component order by the
+    /// trainer, as f64 — the thread-count-stable loss contract).
+    pub loss: f64,
+    /// Per-example metric sums (see [`TaskMetrics`]).
+    pub metrics: TaskMetrics,
+}
+
+/// A task-shaped serving response.
+#[derive(Debug, Clone)]
+pub enum TaskOutput {
+    /// Root classification: the root's logits row and argmax class.
+    Classification { logits: Vec<f32>, predicted: usize },
+    /// Link prediction: the score of the requested (source, target)
+    /// pair (higher = more likely an edge).
+    LinkScore { score: f32 },
+    /// Graph regression: the predicted target in the *unnormalized*
+    /// scale of the configured target feature.
+    Regression { value: f32 },
+}
+
+/// One readout-head parameter tensor, created by
+/// [`NativeModel::init`](crate::train::native::NativeModel::init)
+/// after the trunk's parameters (creation order defines the RNG
+/// stream, so the list order is part of the checkpoint contract).
+#[derive(Debug, Clone, Copy)]
+pub struct HeadParam {
+    pub name: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    /// Biases initialize to zero (no RNG draw); weights Glorot-uniform.
+    pub zero_init: bool,
+}
+
+/// One interchangeable training objective: readout from final hidden
+/// states → loss + output-grad for the tape → per-batch metrics →
+/// serve-time response.
+///
+/// Contract (asserted by `tests/tasks.rs` and `benches/tasks.rs`):
+/// * `step_grad` and `step_eval` compute the **same loss bits** for the
+///   same component and parameters (the trunk's fused/taped paths are
+///   bit-equal; the readout runs the identical float sequence);
+/// * `step_grad`'s parameter gradients are the exact VJP of the loss,
+///   composed from the finite-difference-checked rules of
+///   [`crate::train::native::grad`];
+/// * a step never draws randomness and never looks outside its
+///   component — the replica sharding of
+///   [`crate::train::native::NativeTrainer`] stays deterministic.
+pub trait Task: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Forward + loss + backward over one component, accumulating
+    /// parameter gradients into `grads` (parallel to `model.params`).
+    fn step_grad(
+        &self,
+        model: &NativeModel,
+        g: &GraphTensor,
+        grads: &mut [Mat],
+    ) -> Result<TaskStep>;
+
+    /// Forward-only loss + metrics over one component (fused trunk
+    /// path).
+    fn step_eval(&self, model: &NativeModel, g: &GraphTensor) -> Result<TaskStep>;
+
+    /// Serve-time response for one request subgraph (sampled from the
+    /// request's seed list — `[root]` for root tasks, `[source,
+    /// target]` for link prediction).
+    fn infer(&self, model: &NativeModel, g: &GraphTensor) -> Result<TaskOutput>;
+}
+
+/// The readout-head parameters a config's task owns, in creation
+/// order. Root classification reproduces the historical
+/// `head.w`/`head.b` pair (same shapes, same Glorot/zero split), so
+/// existing mpnn checkpoints and the init RNG stream are preserved
+/// bit-for-bit.
+pub fn head_params(cfg: &ModelConfig) -> Result<Vec<HeadParam>> {
+    let t = &cfg.task;
+    Ok(match t.kind.as_str() {
+        "root_classification" => vec![
+            HeadParam { name: "head.w", rows: cfg.hidden, cols: cfg.num_classes, zero_init: false },
+            HeadParam { name: "head.b", rows: 1, cols: cfg.num_classes, zero_init: true },
+        ],
+        "link_prediction" => match t.readout.as_str() {
+            "dot" => Vec::new(),
+            "hadamard" => {
+                let m = if t.mlp_dim == 0 { cfg.message } else { t.mlp_dim };
+                vec![
+                    HeadParam { name: "lp.w", rows: cfg.hidden, cols: m, zero_init: false },
+                    HeadParam { name: "lp.b", rows: 1, cols: m, zero_init: true },
+                    HeadParam { name: "lp.v", rows: m, cols: 1, zero_init: false },
+                    HeadParam { name: "lp.c", rows: 1, cols: 1, zero_init: true },
+                ]
+            }
+            other => {
+                return Err(Error::Schema(format!(
+                    "task.readout {other:?} unknown (want dot|hadamard)"
+                )));
+            }
+        },
+        "graph_regression" => vec![
+            HeadParam { name: "reg.w", rows: cfg.hidden, cols: 1, zero_init: false },
+            HeadParam { name: "reg.b", rows: 1, cols: 1, zero_init: true },
+        ],
+        other => {
+            return Err(Error::Schema(format!(
+                "task.type {other:?} unknown (want \
+                 root_classification|link_prediction|graph_regression)"
+            )));
+        }
+    })
+}
+
+/// Build the executable task from a validated config.
+pub fn build(cfg: &ModelConfig) -> Result<Arc<dyn Task>> {
+    let t = &cfg.task;
+    match t.kind.as_str() {
+        "root_classification" => {
+            if !cfg.node_order.iter().any(|s| s == &t.root_set) {
+                return Err(Error::Schema(format!(
+                    "task.root_set {:?} is not a node set of the schema",
+                    t.root_set
+                )));
+            }
+            Ok(Arc::new(RootClassification {
+                root_set: t.root_set.clone(),
+                label_feature: t.label_feature.clone(),
+            }))
+        }
+        "link_prediction" => {
+            let (src, tgt) = cfg.edge_endpoints.get(&t.edge_set).ok_or_else(|| {
+                Error::Schema(format!(
+                    "task.edge_set {:?} is not an edge set of the schema",
+                    t.edge_set
+                ))
+            })?;
+            if src != tgt {
+                return Err(Error::Schema(format!(
+                    "task.edge_set {:?} connects {src:?}→{tgt:?} — link prediction \
+                     currently scores pairs within one node set (homogeneous edge sets)",
+                    t.edge_set
+                )));
+            }
+            Ok(Arc::new(LinkPrediction::from_config(src.clone(), t)?))
+        }
+        "graph_regression" => {
+            if !cfg.node_order.iter().any(|s| s == &t.root_set) {
+                return Err(Error::Schema(format!(
+                    "task.root_set {:?} is not a node set of the schema",
+                    t.root_set
+                )));
+            }
+            Ok(Arc::new(GraphRegression {
+                node_set: t.root_set.clone(),
+                target_feature: t.target_feature.clone(),
+                shift: t.target_shift,
+                scale: t.target_scale,
+            }))
+        }
+        other => Err(Error::Schema(format!(
+            "task.type {other:?} unknown (want \
+             root_classification|link_prediction|graph_regression)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::model_ref::TaskConfig;
+    use crate::synth::mag::MagConfig;
+
+    fn mag_cfg() -> ModelConfig {
+        ModelConfig::for_mag(&MagConfig::tiny(), 8, 8, 1)
+    }
+
+    #[test]
+    fn default_task_head_matches_historical_layout() {
+        let cfg = mag_cfg();
+        let head = head_params(&cfg).unwrap();
+        assert_eq!(head.len(), 2);
+        assert_eq!(head[0].name, "head.w");
+        assert_eq!((head[0].rows, head[0].cols), (8, cfg.num_classes));
+        assert!(!head[0].zero_init);
+        assert_eq!(head[1].name, "head.b");
+        assert!(head[1].zero_init);
+        assert_eq!(build(&cfg).unwrap().name(), "root_classification");
+    }
+
+    #[test]
+    fn link_prediction_heads_depend_on_readout() {
+        let t = TaskConfig {
+            kind: "link_prediction".into(),
+            readout: "dot".into(),
+            ..TaskConfig::default()
+        };
+        let cfg = mag_cfg().with_task(t.clone());
+        assert!(head_params(&cfg).unwrap().is_empty(), "dot readout is parameter-free");
+        assert_eq!(build(&cfg).unwrap().name(), "link_prediction");
+
+        let t = TaskConfig { readout: "hadamard".into(), mlp_dim: 6, ..t };
+        let cfg = mag_cfg().with_task(t);
+        let head = head_params(&cfg).unwrap();
+        assert_eq!(
+            head.iter().map(|h| h.name).collect::<Vec<_>>(),
+            vec!["lp.w", "lp.b", "lp.v", "lp.c"]
+        );
+        assert_eq!((head[0].rows, head[0].cols), (8, 6));
+        assert_eq!((head[2].rows, head[2].cols), (6, 1));
+    }
+
+    #[test]
+    fn build_rejects_bad_bindings() {
+        // Unknown edge set.
+        let t = TaskConfig {
+            kind: "link_prediction".into(),
+            edge_set: "ghost".into(),
+            ..TaskConfig::default()
+        };
+        let err = build(&mag_cfg().with_task(t)).expect_err("unknown edge set");
+        assert!(err.to_string().contains("ghost"), "{err}");
+        // Heterogeneous edge set (paper → author).
+        let t = TaskConfig {
+            kind: "link_prediction".into(),
+            edge_set: "written".into(),
+            ..TaskConfig::default()
+        };
+        let err = build(&mag_cfg().with_task(t)).expect_err("heterogeneous edge set");
+        assert!(err.to_string().contains("homogeneous"), "{err}");
+        // Unknown root set.
+        let t = TaskConfig { root_set: "venue".into(), ..TaskConfig::default() };
+        let err = build(&mag_cfg().with_task(t)).expect_err("unknown root set");
+        assert!(err.to_string().contains("venue"), "{err}");
+        // Unknown kind (defense in depth behind the parser).
+        let t = TaskConfig { kind: "frobnicate".into(), ..TaskConfig::default() };
+        assert!(build(&mag_cfg().with_task(t.clone())).is_err());
+        assert!(head_params(&mag_cfg().with_task(t)).is_err());
+    }
+
+    #[test]
+    fn regression_head_is_a_scalar_readout() {
+        let t = TaskConfig { kind: "graph_regression".into(), ..TaskConfig::default() };
+        let cfg = mag_cfg().with_task(t);
+        let head = head_params(&cfg).unwrap();
+        assert_eq!(head.iter().map(|h| h.name).collect::<Vec<_>>(), vec!["reg.w", "reg.b"]);
+        assert_eq!((head[0].rows, head[0].cols), (8, 1));
+        assert_eq!(build(&cfg).unwrap().name(), "graph_regression");
+    }
+}

@@ -2,13 +2,57 @@
 
 use super::StepMetrics;
 
-/// Accumulates weighted loss and accuracy across steps.
+/// Per-task metric accumulators, folded across steps alongside the
+/// loss. Every field is a *sum*; divide by [`TaskMetrics::scored`] for
+/// the mean. Which fields a task fills depends on its objective:
+///
+/// * root classification — `correct` (also mirrored into
+///   [`StepMetrics::correct`] for the legacy accuracy path);
+/// * link prediction — `correct` (rank-1 hits), `rr_sum` (reciprocal
+///   ranks → MRR), `hits_sum` (hits@k);
+/// * graph regression — `se_sum` (squared error → MSE), `ae_sum`
+///   (absolute error → MAE).
+/// All sums are f64, like [`EpochMetrics`]'s — f32 accumulators stop
+/// advancing near 2^24 added examples, which a large link-prediction
+/// holdout can reach within one epoch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TaskMetrics {
+    /// Σ correct predictions (classification / rank-1 link hits).
+    pub correct: f64,
+    /// Σ reciprocal rank of the positive candidate (link prediction).
+    pub rr_sum: f64,
+    /// Σ 1[rank ≤ k] (link prediction hits@k).
+    pub hits_sum: f64,
+    /// Σ squared error (regression).
+    pub se_sum: f64,
+    /// Σ absolute error (regression).
+    pub ae_sum: f64,
+    /// Number of scored examples the sums run over.
+    pub scored: f64,
+}
+
+impl TaskMetrics {
+    /// Fold another accumulator in (replica-order summation in the
+    /// trainer's all-reduce).
+    pub fn merge(&mut self, o: &TaskMetrics) {
+        self.correct += o.correct;
+        self.rr_sum += o.rr_sum;
+        self.hits_sum += o.hits_sum;
+        self.se_sum += o.se_sum;
+        self.ae_sum += o.ae_sum;
+        self.scored += o.scored;
+    }
+}
+
+/// Accumulates weighted loss and per-task metrics across steps.
 #[derive(Debug, Default, Clone)]
 pub struct EpochMetrics {
     pub steps: usize,
     pub loss_sum: f64,
     pub correct: f64,
     pub weight: f64,
+    /// Per-task metric sums (see [`TaskMetrics`]).
+    pub task: TaskMetrics,
 }
 
 impl EpochMetrics {
@@ -22,6 +66,7 @@ impl EpochMetrics {
             self.loss_sum += m.loss as f64 * m.weight as f64;
             self.correct += m.correct as f64;
             self.weight += m.weight as f64;
+            self.task.merge(&m.task);
         }
     }
 
@@ -43,6 +88,42 @@ impl EpochMetrics {
         }
     }
 
+    /// Mean reciprocal rank over scored link-prediction examples.
+    pub fn mrr(&self) -> f64 {
+        if self.task.scored > 0.0 {
+            self.task.rr_sum / self.task.scored
+        } else {
+            0.0
+        }
+    }
+
+    /// Hits@k over scored link-prediction examples.
+    pub fn hits_at_k(&self) -> f64 {
+        if self.task.scored > 0.0 {
+            self.task.hits_sum / self.task.scored
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean squared error over scored regression examples.
+    pub fn mse(&self) -> f64 {
+        if self.task.scored > 0.0 {
+            self.task.se_sum / self.task.scored
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean absolute error over scored regression examples.
+    pub fn mae(&self) -> f64 {
+        if self.task.scored > 0.0 {
+            self.task.ae_sum / self.task.scored
+        } else {
+            0.0
+        }
+    }
+
     /// Number of real examples seen.
     pub fn examples(&self) -> usize {
         self.weight as usize
@@ -58,7 +139,17 @@ impl std::fmt::Display for EpochMetrics {
             self.accuracy(),
             self.examples(),
             self.steps
-        )
+        )?;
+        // Task-specific tails: only print metric families a task
+        // actually accumulated (rank metrics for link prediction,
+        // error metrics for regression).
+        if self.task.rr_sum > 0.0 {
+            write!(f, " mrr {:.4} hits@k {:.4}", self.mrr(), self.hits_at_k())?;
+        }
+        if self.task.se_sum > 0.0 {
+            write!(f, " mse {:.4} mae {:.4}", self.mse(), self.mae())?;
+        }
+        Ok(())
     }
 }
 
@@ -66,11 +157,15 @@ impl std::fmt::Display for EpochMetrics {
 mod tests {
     use super::*;
 
+    fn step(loss: f32, correct: f32, weight: f32) -> StepMetrics {
+        StepMetrics { loss, correct, weight, task: TaskMetrics::default() }
+    }
+
     #[test]
     fn weighted_accumulation() {
         let mut m = EpochMetrics::default();
-        m.add(StepMetrics { loss: 1.0, correct: 4.0, weight: 8.0 });
-        m.add(StepMetrics { loss: 3.0, correct: 2.0, weight: 4.0 });
+        m.add(step(1.0, 4.0, 8.0));
+        m.add(step(3.0, 2.0, 4.0));
         assert_eq!(m.steps, 2);
         assert!((m.loss() - (1.0 * 8.0 + 3.0 * 4.0) / 12.0).abs() < 1e-9);
         assert!((m.accuracy() - 0.5).abs() < 1e-9);
@@ -82,6 +177,8 @@ mod tests {
         let m = EpochMetrics::default();
         assert_eq!(m.loss(), 0.0);
         assert_eq!(m.accuracy(), 0.0);
+        assert_eq!(m.mrr(), 0.0);
+        assert_eq!(m.mse(), 0.0);
     }
 
     /// Regression: an empty/all-masked step (weight 0, loss possibly
@@ -91,21 +188,83 @@ mod tests {
     #[test]
     fn zero_weight_step_does_not_poison_epoch() {
         let mut m = EpochMetrics::default();
-        m.add(StepMetrics { loss: f32::NAN, correct: 0.0, weight: 0.0 });
+        m.add(step(f32::NAN, 0.0, 0.0));
         assert_eq!(m.steps, 1);
         assert_eq!(m.loss(), 0.0, "no NaN, no division by zero");
         assert_eq!(m.accuracy(), 0.0);
         assert_eq!(m.examples(), 0);
-        m.add(StepMetrics { loss: 2.0, correct: 3.0, weight: 4.0 });
+        m.add(step(2.0, 3.0, 4.0));
         assert!(m.loss().is_finite());
         assert!((m.loss() - 2.0).abs() < 1e-9);
         assert!((m.accuracy() - 0.75).abs() < 1e-9);
         // An all-masked *epoch* (only zero-weight steps) is all zeros.
         let mut e = EpochMetrics::default();
         for _ in 0..3 {
-            e.add(StepMetrics { loss: f32::NAN, correct: 0.0, weight: 0.0 });
+            e.add(step(f32::NAN, 0.0, 0.0));
         }
         assert_eq!(e.loss(), 0.0);
         assert_eq!(e.accuracy(), 0.0);
+    }
+
+    /// Task metric sums fold across steps and surface as means; the
+    /// Display tail appears only for the metric families in use.
+    #[test]
+    fn task_metrics_accumulate_and_format() {
+        let mut m = EpochMetrics::default();
+        m.add(StepMetrics {
+            loss: 1.0,
+            correct: 1.0,
+            weight: 2.0,
+            task: TaskMetrics {
+                correct: 1.0,
+                rr_sum: 1.5,
+                hits_sum: 2.0,
+                scored: 2.0,
+                ..TaskMetrics::default()
+            },
+        });
+        m.add(StepMetrics {
+            loss: 1.0,
+            correct: 0.0,
+            weight: 2.0,
+            task: TaskMetrics {
+                rr_sum: 0.5,
+                hits_sum: 0.0,
+                scored: 2.0,
+                ..TaskMetrics::default()
+            },
+        });
+        assert!((m.mrr() - 0.5).abs() < 1e-9);
+        assert!((m.hits_at_k() - 0.5).abs() < 1e-9);
+        let text = m.to_string();
+        assert!(text.contains("mrr"), "{text}");
+        assert!(!text.contains("mse"), "{text}");
+
+        let mut r = EpochMetrics::default();
+        r.add(StepMetrics {
+            loss: 0.25,
+            correct: 0.0,
+            weight: 1.0,
+            task: TaskMetrics { se_sum: 0.25, ae_sum: 0.5, scored: 1.0, ..TaskMetrics::default() },
+        });
+        assert!((r.mse() - 0.25).abs() < 1e-9);
+        assert!((r.mae() - 0.5).abs() < 1e-9);
+        let text = r.to_string();
+        assert!(text.contains("mse"), "{text}");
+        assert!(!text.contains("mrr"), "{text}");
+    }
+
+    /// A zero-weight step must not fold its task sums either.
+    #[test]
+    fn zero_weight_step_skips_task_sums() {
+        let mut m = EpochMetrics::default();
+        m.add(StepMetrics {
+            loss: f32::NAN,
+            correct: 0.0,
+            weight: 0.0,
+            task: TaskMetrics { rr_sum: 9.0, scored: 9.0, ..TaskMetrics::default() },
+        });
+        assert_eq!(m.task.scored, 0.0);
+        assert_eq!(m.mrr(), 0.0);
     }
 }

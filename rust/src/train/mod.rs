@@ -43,11 +43,15 @@ impl Hyperparams {
 }
 
 /// Scalar metrics from one train/eval step.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct StepMetrics {
     pub loss: f32,
     pub correct: f32,
     pub weight: f32,
+    /// Per-task metric sums for this step (MRR/hits for link
+    /// prediction, squared error for regression, correct count for
+    /// classification) — see [`metrics::TaskMetrics`].
+    pub task: metrics::TaskMetrics,
 }
 
 /// The trainer: compiled programs + model/optimizer state.
@@ -220,7 +224,16 @@ impl Trainer {
         outputs.truncate(n_state);
         self.state = outputs;
         self.steps_done += 1;
-        Ok(StepMetrics { loss, correct, weight })
+        Ok(StepMetrics {
+            loss,
+            correct,
+            weight,
+            task: metrics::TaskMetrics {
+                correct: correct as f64,
+                scored: weight as f64,
+                ..Default::default()
+            },
+        })
     }
 
     /// Evaluate one padded batch (no state change).
@@ -253,10 +266,17 @@ impl Trainer {
             }
         }
         let outputs = self.eval_prog.execute_literals(&args)?;
+        let correct = scalar_f32(&outputs[1])?;
+        let weight = scalar_f32(&outputs[2])?;
         Ok(StepMetrics {
             loss: scalar_f32(&outputs[0])?,
-            correct: scalar_f32(&outputs[1])?,
-            weight: scalar_f32(&outputs[2])?,
+            correct,
+            weight,
+            task: metrics::TaskMetrics {
+                correct: correct as f64,
+                scored: weight as f64,
+                ..Default::default()
+            },
         })
     }
 

@@ -287,6 +287,91 @@ pub fn segment_softmax_pool_vjp(
     (dlogits, dvals)
 }
 
+/// Forward: per-row dot product of two `[n, d]` matrices —
+/// `s_i = ⟨a_i, b_i⟩`. The parameter-free pair scorer of the
+/// link-prediction readout (one row per candidate pair).
+pub fn row_dot_fwd(a: &Mat, b: &Mat) -> Vec<f32> {
+    assert_eq!(a.rows, b.rows, "row_dot_fwd: rows");
+    assert_eq!(a.cols, b.cols, "row_dot_fwd: cols");
+    (0..a.rows)
+        .map(|r| a.row(r).iter().zip(b.row(r)).map(|(&x, &y)| x * y).sum())
+        .collect()
+}
+
+/// VJP of [`row_dot_fwd`]: `da_i = ds_i · b_i`, `db_i = ds_i · a_i`.
+pub fn row_dot_vjp(a: &Mat, b: &Mat, ds: &[f32]) -> (Mat, Mat) {
+    assert_eq!(ds.len(), a.rows, "row_dot_vjp: ds len");
+    let mut da = Mat::zeros(a.rows, a.cols);
+    let mut db = Mat::zeros(b.rows, b.cols);
+    for (r, &d) in ds.iter().enumerate() {
+        let (ar, br) = (a.row(r), b.row(r));
+        let dst_a = &mut da.data[r * a.cols..(r + 1) * a.cols];
+        for (o, &y) in dst_a.iter_mut().zip(br) {
+            *o = d * y;
+        }
+        let dst_b = &mut db.data[r * b.cols..(r + 1) * b.cols];
+        for (o, &x) in dst_b.iter_mut().zip(ar) {
+            *o = d * x;
+        }
+    }
+    (da, db)
+}
+
+/// Forward: element-wise (Hadamard) product `y = a ∘ b` — the input of
+/// the link-prediction MLP scorer.
+pub fn hadamard_fwd(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "hadamard_fwd: rows");
+    assert_eq!(a.cols, b.cols, "hadamard_fwd: cols");
+    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| x * y).collect();
+    Mat { rows: a.rows, cols: a.cols, data }
+}
+
+/// VJP of [`hadamard_fwd`]: `da = dy ∘ b`, `db = dy ∘ a`.
+pub fn hadamard_vjp(a: &Mat, b: &Mat, dy: &Mat) -> (Mat, Mat) {
+    assert_eq!(dy.rows, a.rows, "hadamard_vjp: rows");
+    assert_eq!(dy.cols, a.cols, "hadamard_vjp: cols");
+    let da = Mat {
+        rows: a.rows,
+        cols: a.cols,
+        data: dy.data.iter().zip(&b.data).map(|(&d, &y)| d * y).collect(),
+    };
+    let db = Mat {
+        rows: a.rows,
+        cols: a.cols,
+        data: dy.data.iter().zip(&a.data).map(|(&d, &x)| d * x).collect(),
+    };
+    (da, db)
+}
+
+/// Margin ranking loss over candidate scores: `scores[0]` is the
+/// positive, the rest negatives;
+/// `L = Σ_{i≥1} max(0, margin − s_0 + s_i)`. Returns `(L, ∂L/∂s)` —
+/// the subgradient at an exactly-active hinge counts as active,
+/// matching relu's `v >= 0` convention. A candidate list with no
+/// negatives yields zero loss and gradients.
+pub fn margin_rank(scores: &[f32], margin: f32) -> (f32, Vec<f32>) {
+    assert!(!scores.is_empty(), "margin_rank: no scores");
+    let s0 = scores[0];
+    let mut loss = 0.0f32;
+    let mut d = vec![0.0f32; scores.len()];
+    for (i, &s) in scores.iter().enumerate().skip(1) {
+        let viol = margin - s0 + s;
+        if viol >= 0.0 {
+            loss += viol;
+            d[i] += 1.0;
+            d[0] -= 1.0;
+        }
+    }
+    (loss, d)
+}
+
+/// Squared-error loss for one scalar prediction:
+/// `L = (p − t)²`, `∂L/∂p = 2(p − t)`.
+pub fn mse(pred: f32, target: f32) -> (f32, f32) {
+    let e = pred - target;
+    (e * e, 2.0 * e)
+}
+
 /// Output of [`softmax_xent_masked`].
 #[derive(Debug, Clone)]
 pub struct XentGrad {
@@ -710,6 +795,118 @@ mod tests {
         let (y0, w0) = segment_softmax_pool_fwd(&[], &empty, &[], 2);
         assert!(w0.is_empty());
         assert!(y0.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gradcheck_row_dot() {
+        for (seed, (n, d)) in [(0u64, (4usize, 3usize)), (1, (1, 6)), (2, (5, 1))] {
+            let mut rng = Rng::new(1200 + seed);
+            let a0 = rand_vec(&mut rng, n * d);
+            let b0 = rand_vec(&mut rng, n * d);
+            let wt = rand_vec(&mut rng, n); // per-score loss weights
+            let b0_c = b0.clone();
+            let eval_a = |x: &[f32]| -> f64 {
+                let a = Mat { rows: n, cols: d, data: x.to_vec() };
+                let b = Mat { rows: n, cols: d, data: b0_c.clone() };
+                row_dot_fwd(&a, &b)
+                    .iter()
+                    .zip(&wt)
+                    .map(|(&s, &w)| s as f64 * w as f64)
+                    .sum()
+            };
+            let a0_c = a0.clone();
+            let eval_b = |x: &[f32]| -> f64 {
+                let a = Mat { rows: n, cols: d, data: a0_c.clone() };
+                let b = Mat { rows: n, cols: d, data: x.to_vec() };
+                row_dot_fwd(&a, &b)
+                    .iter()
+                    .zip(&wt)
+                    .map(|(&s, &w)| s as f64 * w as f64)
+                    .sum()
+            };
+            let a = Mat { rows: n, cols: d, data: a0.clone() };
+            let b = Mat { rows: n, cols: d, data: b0.clone() };
+            let (da, db) = row_dot_vjp(&a, &b, &wt);
+            check_close("row_dot dA", &da.data, &fd_grad(&a0, H, &eval_a));
+            check_close("row_dot dB", &db.data, &fd_grad(&b0, H, &eval_b));
+        }
+    }
+
+    #[test]
+    fn gradcheck_hadamard() {
+        for (seed, (n, d)) in [(0u64, (3usize, 4usize)), (1, (1, 1)), (2, (6, 2))] {
+            let mut rng = Rng::new(1300 + seed);
+            let a0 = rand_vec(&mut rng, n * d);
+            let b0 = rand_vec(&mut rng, n * d);
+            let wt = rand_vec(&mut rng, n * d);
+            let b0_c = b0.clone();
+            let eval_a = |x: &[f32]| -> f64 {
+                let a = Mat { rows: n, cols: d, data: x.to_vec() };
+                let b = Mat { rows: n, cols: d, data: b0_c.clone() };
+                wsum(&hadamard_fwd(&a, &b), &wt)
+            };
+            let a0_c = a0.clone();
+            let eval_b = |x: &[f32]| -> f64 {
+                let a = Mat { rows: n, cols: d, data: a0_c.clone() };
+                let b = Mat { rows: n, cols: d, data: x.to_vec() };
+                wsum(&hadamard_fwd(&a, &b), &wt)
+            };
+            let a = Mat { rows: n, cols: d, data: a0.clone() };
+            let b = Mat { rows: n, cols: d, data: b0.clone() };
+            let dy = Mat { rows: n, cols: d, data: wt.clone() };
+            let (da, db) = hadamard_vjp(&a, &b, &dy);
+            check_close("hadamard dA", &da.data, &fd_grad(&a0, H, &eval_a));
+            check_close("hadamard dB", &db.data, &fd_grad(&b0, H, &eval_b));
+        }
+    }
+
+    #[test]
+    fn gradcheck_margin_rank_away_from_hinge() {
+        // Scores spaced so no hinge term sits within ±h of its kink —
+        // the FD probe must not flip any max(0, ·).
+        for (seed, n) in [(0u64, 5usize), (1, 2), (2, 9)] {
+            let mut rng = Rng::new(1400 + seed);
+            let margin = 1.0f32;
+            let s0: Vec<f32> = (0..n)
+                .map(|_| {
+                    // margin - s0 + si in (-∞, -0.1] ∪ [0.1, ∞)
+                    let gap = 0.1 + rng.range_f32(0.0, 1.5);
+                    if rng.chance(0.5) {
+                        gap
+                    } else {
+                        -gap
+                    }
+                })
+                .enumerate()
+                .map(|(i, v)| if i == 0 { 2.0 } else { 2.0 - margin + v })
+                .collect();
+            let eval = |x: &[f32]| -> f64 { margin_rank(x, margin).0 as f64 };
+            let (_, d) = margin_rank(&s0, margin);
+            check_close("margin_rank ds", &d, &fd_grad(&s0, H, &eval));
+        }
+        // Degenerate cases: a lone positive has zero loss and gradient.
+        let (l, d) = margin_rank(&[0.3], 1.0);
+        assert_eq!(l, 0.0);
+        assert_eq!(d, vec![0.0]);
+        // A clearly-violating negative contributes (+1, -1).
+        let (l, d) = margin_rank(&[0.0, 2.0], 1.0);
+        assert_eq!(l, 3.0);
+        assert_eq!(d, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn gradcheck_mse() {
+        let mut rng = Rng::new(1500);
+        for _ in 0..10 {
+            let p0 = rng.range_f32(-3.0, 3.0);
+            let t = rng.range_f32(-3.0, 3.0);
+            let eval = |x: &[f32]| -> f64 { mse(x[0], t).0 as f64 };
+            let (_, dp) = mse(p0, t);
+            check_close("mse dp", &[dp], &fd_grad(&[p0], H, &eval));
+        }
+        let (l, d) = mse(1.5, 1.5);
+        assert_eq!(l, 0.0);
+        assert_eq!(d, 0.0);
     }
 
     #[test]

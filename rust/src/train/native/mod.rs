@@ -13,10 +13,12 @@
 //!   softmax cross-entropy), each finite-difference checked;
 //! * [`optim`] — Adam with decoupled weight decay over flat `Vec<Mat>`
 //!   state, checkpoint-compatible with [`crate::train::checkpoint`];
-//! * [`trainer`] — [`NativeTrainer`], sharding a padded batch's roots
-//!   over [`crate::util::ThreadPool`] replicas with a deterministic
-//!   in-order all-reduce, plus [`train_step_oracle`], the serial
-//!   bit-for-bit reference.
+//! * [`trainer`] — [`NativeTrainer`], sharding a padded batch's
+//!   examples over [`crate::util::ThreadPool`] replicas with a
+//!   deterministic in-order all-reduce; the per-example objective is a
+//!   [`crate::tasks::Task`] (root classification, link prediction,
+//!   graph regression), and [`train_step_oracle_task`] /
+//!   [`train_step_oracle`] are the serial bit-for-bit references.
 //!
 //! [`model`] holds the trainable [`NativeModel`]: a generic
 //! [`crate::layers::GraphUpdate`] stack whose convolution is chosen by
@@ -30,6 +32,6 @@ pub mod model;
 pub mod optim;
 pub mod trainer;
 
-pub use model::{NativeModel, Tape};
+pub use model::{NativeModel, Tape, TrunkTape};
 pub use optim::{state_from_tensors, state_to_tensors, Adam, AdamConfig};
-pub use trainer::{train_step_oracle, NativeTrainer};
+pub use trainer::{train_step_oracle, train_step_oracle_task, NativeTrainer};

@@ -29,15 +29,26 @@ use crate::train::native::grad;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 
-/// Everything the backward sweep needs from one forward pass.
+/// Everything the backward sweep needs from the *trunk* of one forward
+/// pass — encoders, embeddings and GraphUpdate rounds, but no readout
+/// head. Tasks ([`crate::tasks`]) run their own readout on top of the
+/// final states and seed [`NativeModel::backward_states`] with state
+/// gradients.
 #[derive(Debug, Clone)]
-pub struct Tape {
+pub struct TrunkTape {
     /// Pre-relu encoder activations per dense-featured node set.
     pub enc_z: BTreeMap<String, Mat>,
     /// Embedding-gather indices per id-embedding node set.
     pub emb_idx: BTreeMap<String, Vec<i32>>,
     /// Per layer: node set → its update's saved activations.
     pub layers: Vec<LayerTape>,
+}
+
+/// Everything the backward sweep needs from one forward pass through
+/// the root-classification head (trunk + root readout).
+#[derive(Debug, Clone)]
+pub struct Tape {
+    pub trunk: TrunkTape,
     /// Gathered root states (input of the linear head).
     pub root_states: Mat,
     pub roots: Vec<i32>,
@@ -127,10 +138,19 @@ impl NativeModel {
                 params.push(Mat::zeros(1, cfg.hidden));
             }
         }
-        names.push("head.w".to_string());
-        params.push(glorot(&mut rng, cfg.hidden, cfg.num_classes));
-        names.push("head.b".to_string());
-        params.push(Mat::zeros(1, cfg.num_classes));
+        // Readout-head parameters come from the task (config `task`
+        // block). The default root-classification head appends
+        // `head.w` (Glorot) and `head.b` (zero) exactly as the
+        // pre-task-subsystem model did — same draws, same RNG stream,
+        // so mpnn parameters stay bit-for-bit reproducible.
+        for hp in crate::tasks::head_params(&cfg)? {
+            names.push(hp.name.to_string());
+            params.push(if hp.zero_init {
+                Mat::zeros(hp.rows, hp.cols)
+            } else {
+                glorot(&mut rng, hp.rows, hp.cols)
+            });
+        }
         let index = names.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
         Ok(NativeModel { cfg, conv: builder.kind, names, params, index })
     }
@@ -238,20 +258,58 @@ impl NativeModel {
         Ok((h, enc_z, emb_idx))
     }
 
+    /// Final per-node-set hidden states — the trunk forward without a
+    /// tape, on the convolutions' fused fast paths. Tasks run their
+    /// readout heads over these (eval and serving paths).
+    pub fn forward_states(&self, g: &GraphTensor) -> Result<BTreeMap<String, Mat>> {
+        let (mut h, _enc_z, _emb_idx) = self.initial_states(g)?;
+        let view = self.update_view();
+        for layer in 0..self.cfg.layers {
+            h = view.forward(g, &h, layer)?;
+        }
+        Ok(h)
+    }
+
+    /// Trunk forward recording the [`TrunkTape`]. Bit-for-bit the same
+    /// states as [`Self::forward_states`] (each convolution's tape path
+    /// is bit-equal to its fused path — the
+    /// [`crate::layers::Convolution`] contract).
+    pub fn forward_states_tape(
+        &self,
+        g: &GraphTensor,
+    ) -> Result<(BTreeMap<String, Mat>, TrunkTape)> {
+        let (mut h, enc_z, emb_idx) = self.initial_states(g)?;
+        let view = self.update_view();
+        let mut layers = Vec::with_capacity(self.cfg.layers);
+        for layer in 0..self.cfg.layers {
+            let (next, layer_tape) = view.forward_tape(g, &h, layer)?;
+            layers.push(layer_tape);
+            h = next;
+        }
+        Ok((h, TrunkTape { enc_z, emb_idx, layers }))
+    }
+
+    /// Zeroed `[n, hidden]` state-gradient buffers per node set — what a
+    /// task seeds with its readout's state gradients before calling
+    /// [`Self::backward_states`].
+    pub fn zero_state_grads(&self, g: &GraphTensor) -> Result<BTreeMap<String, Mat>> {
+        let mut dh = BTreeMap::new();
+        for set in &self.cfg.node_order {
+            dh.insert(set.clone(), Mat::zeros(g.num_nodes(set)?, self.cfg.hidden));
+        }
+        Ok(dh)
+    }
+
     /// Forward pass over one (usually single-component) GraphTensor,
-    /// reading out `roots` from `root_set` — **without** a tape, on the
-    /// convolutions' fused fast paths. Used by eval and serving.
+    /// reading out `roots` from `root_set` through the classification
+    /// head — **without** a tape. Used by eval and serving.
     pub fn forward_logits(
         &self,
         g: &GraphTensor,
         root_set: &str,
         roots: &[i32],
     ) -> Result<Mat> {
-        let (mut h, _enc_z, _emb_idx) = self.initial_states(g)?;
-        let view = self.update_view();
-        for layer in 0..self.cfg.layers {
-            h = view.forward(g, &h, layer)?;
-        }
+        let h = self.forward_states(g)?;
         let h_root = h
             .get(root_set)
             .ok_or_else(|| Error::Graph(format!("unknown root set {root_set:?}")))?;
@@ -261,75 +319,47 @@ impl NativeModel {
     }
 
     /// Forward pass recording the [`Tape`]. Bit-for-bit the same logits
-    /// as [`Self::forward_logits`] (each convolution's tape path is
-    /// bit-equal to its fused path — the [`crate::layers::Convolution`]
-    /// contract).
+    /// as [`Self::forward_logits`].
     pub fn forward_tape(
         &self,
         g: &GraphTensor,
         root_set: &str,
         roots: &[i32],
     ) -> Result<(Mat, Tape)> {
-        let (mut h, enc_z, emb_idx) = self.initial_states(g)?;
-        let view = self.update_view();
-        let mut layers = Vec::with_capacity(self.cfg.layers);
-        for layer in 0..self.cfg.layers {
-            let (next, layer_tape) = view.forward_tape(g, &h, layer)?;
-            layers.push(layer_tape);
-            h = next;
-        }
+        let (h, trunk) = self.forward_states_tape(g)?;
         let h_root = h
             .get(root_set)
             .ok_or_else(|| Error::Graph(format!("unknown root set {root_set:?}")))?;
         let (logits, root_states) =
             root_readout(h_root, roots, self.param("head.w")?, &self.param("head.b")?.data);
-        let tape = Tape { enc_z, emb_idx, layers, root_states, roots: roots.to_vec() };
-        Ok((logits, tape))
+        Ok((logits, Tape { trunk, root_states, roots: roots.to_vec() }))
     }
 
-    /// Reverse sweep: accumulate `∂L/∂params` into `grads` given
-    /// `dlogits = ∂L/∂logits` and the tape of the matching forward.
-    /// Composes the head/encoder VJPs here with one
-    /// [`GraphUpdate::backward`] per round, in exact reverse order of
-    /// the forward stages.
-    pub fn backward(
+    /// Reverse sweep of the trunk: given `dh` (state gradients flowing
+    /// into the final hidden states, as seeded by a task's readout
+    /// backward), accumulate `∂L/∂params` for encoders, embeddings and
+    /// every GraphUpdate round into `grads` — the exact reverse of
+    /// [`Self::forward_states_tape`]'s stage order.
+    pub fn backward_states(
         &self,
         g: &GraphTensor,
-        tape: &Tape,
-        dlogits: &Mat,
-        root_set: &str,
+        trunk: &TrunkTape,
+        mut dh: BTreeMap<String, Mat>,
         grads: &mut [Mat],
     ) -> Result<()> {
         let cfg = &self.cfg;
-        assert_eq!(grads.len(), self.params.len(), "backward: grads buffer size");
-
-        // State gradients per node set, flowing backwards through the
-        // layers. All states are [n, hidden].
-        let mut dh: BTreeMap<String, Mat> = BTreeMap::new();
-        for set in &cfg.node_order {
-            dh.insert(set.clone(), Mat::zeros(g.num_nodes(set)?, cfg.hidden));
-        }
-
-        // Head / readout.
-        let head_w = self.param("head.w")?;
-        let (d_root_states, d_head_w) = grad::matmul_vjp(&tape.root_states, head_w, dlogits);
-        grads[self.idx("head.w")?].add_assign(&d_head_w);
-        grads[self.idx("head.b")?].add_assign(&row_mat(grad::bias_vjp(dlogits)));
-        let n_root = g.num_nodes(root_set)?;
-        dh.get_mut(root_set)
-            .ok_or_else(|| Error::Graph(format!("unknown root set {root_set:?}")))?
-            .add_assign(&grad::gather_vjp(&tape.roots, n_root, &d_root_states));
+        assert_eq!(grads.len(), self.params.len(), "backward_states: grads buffer size");
 
         // GraphUpdate rounds, in reverse.
         let view = self.update_view();
         for layer in (0..cfg.layers).rev() {
-            dh = view.backward(&tape.layers[layer], layer, &dh, grads)?;
+            dh = view.backward(&trunk.layers[layer], layer, &dh, grads)?;
         }
 
         // Encoders / embeddings.
         for set in &cfg.node_order {
             let d = &dh[set];
-            if let Some(z) = tape.enc_z.get(set) {
+            if let Some(z) = trunk.enc_z.get(set) {
                 let dz = grad::relu_vjp(z, d);
                 let feats = &cfg.features[set];
                 for fname in feats {
@@ -341,13 +371,45 @@ impl NativeModel {
                 }
                 grads[self.idx(&format!("enc.{set}.{}.b", feats[0]))?]
                     .add_assign(&row_mat(grad::bias_vjp(&dz)));
-            } else if let Some(idx) = tape.emb_idx.get(set) {
+            } else if let Some(idx) = trunk.emb_idx.get(set) {
                 let g_idx = self.idx(&format!("emb.{set}"))?;
                 let card = self.params[g_idx].rows;
                 grads[g_idx].add_assign(&grad::gather_vjp(idx, card, d));
             }
         }
         Ok(())
+    }
+
+    /// Reverse sweep through the classification head: accumulate
+    /// `∂L/∂params` into `grads` given `dlogits = ∂L/∂logits` and the
+    /// tape of the matching forward. Composes the head VJPs here with
+    /// [`Self::backward_states`] — the same float-op order as before the
+    /// trunk/head split.
+    pub fn backward(
+        &self,
+        g: &GraphTensor,
+        tape: &Tape,
+        dlogits: &Mat,
+        root_set: &str,
+        grads: &mut [Mat],
+    ) -> Result<()> {
+        assert_eq!(grads.len(), self.params.len(), "backward: grads buffer size");
+
+        // State gradients per node set, flowing backwards through the
+        // layers. All states are [n, hidden].
+        let mut dh = self.zero_state_grads(g)?;
+
+        // Head / readout.
+        let head_w = self.param("head.w")?;
+        let (d_root_states, d_head_w) = grad::matmul_vjp(&tape.root_states, head_w, dlogits);
+        grads[self.idx("head.w")?].add_assign(&d_head_w);
+        grads[self.idx("head.b")?].add_assign(&row_mat(grad::bias_vjp(dlogits)));
+        let n_root = g.num_nodes(root_set)?;
+        dh.get_mut(root_set)
+            .ok_or_else(|| Error::Graph(format!("unknown root set {root_set:?}")))?
+            .add_assign(&grad::gather_vjp(&tape.roots, n_root, &d_root_states));
+
+        self.backward_states(g, &tape.trunk, dh, grads)
     }
 }
 
@@ -431,7 +493,7 @@ mod tests {
             for (a, b) in fast.data.iter().zip(&taped.data) {
                 assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
             }
-            assert_eq!(tape.layers.len(), model.cfg.layers);
+            assert_eq!(tape.trunk.layers.len(), model.cfg.layers);
             assert_eq!(tape.root_states.rows, 1);
         }
     }

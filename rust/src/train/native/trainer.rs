@@ -6,20 +6,29 @@
 //! 1. the padded batch's **real components are split back out** (one
 //!    rooted subgraph per component — padding contributes nothing and
 //!    is dropped, not masked);
-//! 2. components (≡ roots) are sharded into `threads` contiguous
-//!    **replica chunks**; each replica runs forward-with-tape, masked
-//!    softmax cross-entropy, and the tape backward over its chunk,
-//!    accumulating an *unnormalized* gradient sum in chunk order;
+//! 2. components (≡ examples) are sharded into `threads` contiguous
+//!    **replica chunks**; each replica runs the [`Task`]'s per-example
+//!    step — forward-with-tape, the task's readout + loss, and the
+//!    tape backward — over its chunk, accumulating an *unnormalized*
+//!    gradient sum in chunk order;
 //! 3. replica gradients are **all-reduced by deterministic in-order
 //!    summation** (replica 0 + replica 1 + …), then scaled by `1/N`;
 //! 4. one [`Adam`] step updates the parameters.
 //!
-//! Determinism contract (asserted in `tests/native_training.rs` and in
-//! `benches/training.rs` before any timing):
-//! * at 1 thread the step is **bit-for-bit** [`train_step_oracle`]
+//! The objective is supplied by the [`Task`] (root classification,
+//! link prediction, graph regression — see [`crate::tasks`]); the
+//! historical constructor [`NativeTrainer::new`] still takes a
+//! [`RootTask`] and builds the classification task from it, so the
+//! pre-subsystem call sites (and their bit-parity guarantees) are
+//! untouched.
+//!
+//! Determinism contract (asserted in `tests/native_training.rs`,
+//! `tests/tasks.rs` and `benches/{training,tasks}.rs` before any
+//! timing):
+//! * at 1 thread the step is **bit-for-bit** [`train_step_oracle_task`]
 //!   (the plain serial loop kept as the reference);
-//! * at any thread count the reported loss is the in-root-order sum of
-//!   per-root cross-entropies (replica chunks are contiguous), so a
+//! * at any thread count the reported loss is the in-example-order sum
+//!   of per-example losses (replica chunks are contiguous), so a
 //!   single step's loss is bit-stable across thread counts; parameter
 //!   updates differ only by the reduction grouping (≤1e-5 rel drift).
 
@@ -30,145 +39,158 @@ use crate::graph::pad::Padded;
 use crate::graph::GraphTensor;
 use crate::ops::model_ref::Mat;
 use crate::runtime::batch::RootTask;
-use crate::train::native::grad::softmax_xent_masked;
+use crate::tasks::{RootClassification, Task};
+use crate::train::metrics::TaskMetrics;
 use crate::train::native::model::NativeModel;
 use crate::train::native::optim::{state_from_tensors, state_to_tensors, Adam, AdamConfig};
 use crate::train::StepMetrics;
 use crate::util::threadpool::ThreadPool;
-use crate::{Error, Result};
+use crate::Result;
 
-/// One replica's contribution: unnormalized gradient sums, per-root
-/// cross-entropies (in chunk order) and the correct-prediction count.
+/// One replica's contribution: unnormalized gradient sums, per-example
+/// losses (in chunk order) and the chunk's metric sums.
 struct ChunkOut {
     grads: Vec<Mat>,
-    ces: Vec<f64>,
-    correct: f32,
+    losses: Vec<f64>,
+    metrics: TaskMetrics,
 }
 
-/// Forward+backward over one contiguous chunk of components. This is
-/// the exact per-replica computation — the serial oracle is this
+/// Task step + backward over one contiguous chunk of components. This
+/// is the exact per-replica computation — the serial oracle is this
 /// function applied to the whole batch as one chunk.
 fn chunk_grad(
     model: &NativeModel,
-    root_set: &str,
+    task: &dyn Task,
     comps: &[GraphTensor],
-    labels: &[i64],
 ) -> Result<ChunkOut> {
     let mut grads = model.zeros_grads();
-    let mut ces = Vec::with_capacity(comps.len());
-    let mut correct = 0.0f32;
-    for (g, &label) in comps.iter().zip(labels) {
-        let label = check_label(model, label)?;
-        let (logits, tape) = model.forward_tape(g, root_set, &[0])?;
-        let x = softmax_xent_masked(&logits, &[label], &[1.0]);
-        model.backward(g, &tape, &x.dlogits, root_set, &mut grads)?;
-        ces.push(x.total_ce as f64);
-        correct += x.correct;
+    let mut losses = Vec::with_capacity(comps.len());
+    let mut metrics = TaskMetrics::default();
+    for g in comps {
+        let s = task.step_grad(model, g, &mut grads)?;
+        losses.push(s.loss);
+        metrics.merge(&s.metrics);
     }
-    Ok(ChunkOut { grads, ces, correct })
+    Ok(ChunkOut { grads, losses, metrics })
 }
 
-/// Forward-only counterpart of [`chunk_grad`]: per-root cross-entropies
-/// (in chunk order) and the correct count.
+/// Forward-only counterpart of [`chunk_grad`]: per-example losses (in
+/// chunk order) and the chunk's metric sums.
 fn chunk_eval(
     model: &NativeModel,
-    root_set: &str,
+    task: &dyn Task,
     comps: &[GraphTensor],
-    labels: &[i64],
-) -> Result<(Vec<f64>, f32)> {
-    let mut ces = Vec::with_capacity(comps.len());
-    let mut correct = 0.0f32;
-    for (g, &label) in comps.iter().zip(labels) {
-        let label = check_label(model, label)?;
-        let logits = model.forward_logits(g, root_set, &[0])?;
-        let x = softmax_xent_masked(&logits, &[label], &[1.0]);
-        ces.push(x.total_ce as f64);
-        correct += x.correct;
+) -> Result<(Vec<f64>, TaskMetrics)> {
+    let mut losses = Vec::with_capacity(comps.len());
+    let mut metrics = TaskMetrics::default();
+    for g in comps {
+        let s = task.step_eval(model, g)?;
+        losses.push(s.loss);
+        metrics.merge(&s.metrics);
     }
-    Ok((ces, correct))
+    Ok((losses, metrics))
 }
 
-/// Reject labels outside the model's class range as a structured error
-/// (the loss op asserts on its contract; a bad label here usually means
-/// `train.num_classes` and `dataset.num_classes` disagree in the run
-/// config, which must not abort a replica thread mid-training).
-fn check_label(model: &NativeModel, label: i64) -> Result<i32> {
-    let c = model.cfg.num_classes;
-    if label < 0 || label as usize >= c {
-        return Err(Error::Graph(format!(
-            "root label {label} outside model's {c} classes — do \
-             train.num_classes and dataset.num_classes agree in the config?"
-        )));
-    }
-    Ok(label as i32)
-}
-
-/// Partition components+labels into contiguous chunks of `size` — the
-/// replica sharding used by both train and eval (contiguity is what
-/// keeps per-root CE order, and therefore the reported loss, identical
+/// Partition components into contiguous chunks of `size` — the replica
+/// sharding used by both train and eval (contiguity is what keeps
+/// per-example loss order, and therefore the reported loss, identical
 /// at every thread count).
-fn split_chunks(
-    size: usize,
-    comps: Vec<GraphTensor>,
-    labels: Vec<i64>,
-) -> Vec<(Vec<GraphTensor>, Vec<i64>)> {
+fn split_chunks(size: usize, comps: Vec<GraphTensor>) -> Vec<Vec<GraphTensor>> {
     let mut items = Vec::new();
-    let mut comps_it = comps.into_iter();
-    let mut labels_it = labels.into_iter();
+    let mut it = comps.into_iter();
     loop {
-        let c: Vec<GraphTensor> = comps_it.by_ref().take(size).collect();
+        let c: Vec<GraphTensor> = it.by_ref().take(size).collect();
         if c.is_empty() {
             break;
         }
-        let l: Vec<i64> = labels_it.by_ref().take(size).collect();
-        items.push((c, l));
+        items.push(c);
     }
     items
 }
 
-/// Split a padded batch into its real components and their root labels
-/// (root = node 0 of the root set per component, the sampler's
-/// "seed first" convention).
-fn real_components(
-    padded: &Padded,
-    task: &RootTask,
-) -> Result<(Vec<GraphTensor>, Vec<i64>)> {
+/// Split a padded batch into its real components (one example each;
+/// label/target reading is the task's concern).
+fn real_components(padded: &Padded) -> Result<Vec<GraphTensor>> {
     let mut comps = crate::graph::batch::split(&padded.graph)?;
     comps.truncate(padded.num_real_components);
-    let mut labels = Vec::with_capacity(comps.len());
-    for comp in &comps {
-        let ns = comp.node_set(&task.root_set)?;
-        if ns.total() == 0 {
-            return Err(Error::Graph(format!(
-                "component has no {:?} root node",
-                task.root_set
-            )));
-        }
-        let (_, data) = ns.feature(&task.label_feature)?.as_i64()?;
-        labels.push(data[0]);
-    }
-    Ok((comps, labels))
+    Ok(comps)
 }
 
-/// The native data-parallel trainer: model + Adam state + replica pool.
+/// Fold replica outputs in strict replica-index order and assemble the
+/// step metrics (mean loss over `n` examples, in-order f64 loss sum).
+fn reduce_outs(outs: Vec<ChunkOut>, n: usize) -> (Vec<Mat>, StepMetrics) {
+    let mut outs_it = outs.into_iter();
+    let first = outs_it.next().expect("at least one chunk");
+    let mut grads = first.grads;
+    let mut losses = first.losses;
+    let mut metrics = first.metrics;
+    for o in outs_it {
+        for (a, b) in grads.iter_mut().zip(&o.grads) {
+            a.add_assign(b);
+        }
+        losses.extend(o.losses);
+        metrics.merge(&o.metrics);
+    }
+    // Mean over the batch's real examples, applied once after the
+    // reduce (identical in the serial oracle).
+    let inv = 1.0f32 / n as f32;
+    for gm in &mut grads {
+        gm.scale(inv);
+    }
+    // Loss: in-example-order f64 sum — losses is in global component
+    // order because chunks are contiguous.
+    let loss_sum: f64 = losses.iter().sum();
+    let step = StepMetrics {
+        loss: (loss_sum / n as f64) as f32,
+        correct: metrics.correct as f32,
+        weight: n as f32,
+        task: metrics,
+    };
+    (grads, step)
+}
+
+/// The native data-parallel trainer: model + task + Adam state +
+/// replica pool.
 pub struct NativeTrainer {
     /// Shared with in-flight replica closures during a step; updated
     /// via copy-on-write after the all-reduce.
     model: Arc<NativeModel>,
     pub opt: Adam,
-    pub task: RootTask,
+    /// The training objective (readout head + loss + metrics).
+    pub task: Arc<dyn Task>,
     threads: usize,
     pool: Option<ThreadPool>,
     pub steps_done: u64,
 }
 
 impl NativeTrainer {
-    /// `threads == 0 | 1` trains serially (the oracle path); `threads
-    /// > 1` spawns that many replica workers once, reused every step.
+    /// The historical constructor: root classification bound by a
+    /// [`RootTask`]. `threads == 0 | 1` trains serially (the oracle
+    /// path); `threads > 1` spawns that many replica workers once,
+    /// reused every step.
     pub fn new(
         model: NativeModel,
         adam: AdamConfig,
         task: RootTask,
+        threads: usize,
+    ) -> NativeTrainer {
+        NativeTrainer::with_task(
+            model,
+            adam,
+            Arc::new(RootClassification {
+                root_set: task.root_set,
+                label_feature: task.label_feature,
+            }),
+            threads,
+        )
+    }
+
+    /// Construct with an explicit task (link prediction, regression, or
+    /// a custom head).
+    pub fn with_task(
+        model: NativeModel,
+        adam: AdamConfig,
+        task: Arc<dyn Task>,
         threads: usize,
     ) -> NativeTrainer {
         let opt = Adam::new(adam, &model.params);
@@ -193,88 +215,65 @@ impl NativeTrainer {
 
     /// One data-parallel training step over a padded batch.
     pub fn train_batch(&mut self, padded: &Padded) -> Result<StepMetrics> {
-        let (comps, labels) = real_components(padded, &self.task)?;
+        let comps = real_components(padded)?;
         let n = comps.len();
         if n == 0 {
-            return Ok(StepMetrics { loss: 0.0, correct: 0.0, weight: 0.0 });
+            return Ok(StepMetrics { loss: 0.0, correct: 0.0, weight: 0.0, ..Default::default() });
         }
         let chunks = self.threads.min(n);
         let outs: Vec<ChunkOut> = if chunks > 1 {
             let pool = self.pool.as_ref().expect("pool exists when threads > 1");
-            let items = split_chunks(n.div_ceil(chunks), comps, labels);
+            let items = split_chunks(n.div_ceil(chunks), comps);
             let model = Arc::clone(&self.model);
-            let root_set = self.task.root_set.clone();
-            pool.map(items, move |(c, l)| chunk_grad(&model, &root_set, &c, &l))
+            let task = Arc::clone(&self.task);
+            pool.map(items, move |c| chunk_grad(&model, task.as_ref(), &c))
                 .into_iter()
                 .collect::<Result<Vec<_>>>()?
         } else {
-            vec![chunk_grad(&self.model, &self.task.root_set, &comps, &labels)?]
+            vec![chunk_grad(&self.model, self.task.as_ref(), &comps)?]
         };
 
         // All-reduce: strictly in replica-index order, so the summation
         // tree depends only on the chunking, never on scheduling.
-        let mut outs_it = outs.into_iter();
-        let first = outs_it.next().expect("at least one chunk");
-        let mut grads = first.grads;
-        let mut ces = first.ces;
-        let mut correct = first.correct;
-        for o in outs_it {
-            for (a, b) in grads.iter_mut().zip(&o.grads) {
-                a.add_assign(b);
-            }
-            ces.extend(o.ces);
-            correct += o.correct;
-        }
-        // Mean over the batch's real roots, applied once after the
-        // reduce (identical in the serial oracle).
-        let inv = 1.0f32 / n as f32;
-        for gm in &mut grads {
-            gm.scale(inv);
-        }
-        // Loss: in-root-order f64 sum — ces is in global component
-        // order because chunks are contiguous.
-        let loss_sum: f64 = ces.iter().sum();
+        let (grads, step) = reduce_outs(outs, n);
 
         let model = Arc::make_mut(&mut self.model);
         self.opt.step(&mut model.params, &grads);
         self.steps_done += 1;
-        Ok(StepMetrics {
-            loss: (loss_sum / n as f64) as f32,
-            correct,
-            weight: n as f32,
-        })
+        Ok(step)
     }
 
     /// Evaluate a padded batch (forward only, no state change),
     /// replica-parallel like training.
     pub fn eval_batch(&self, padded: &Padded) -> Result<StepMetrics> {
-        let (comps, labels) = real_components(padded, &self.task)?;
+        let comps = real_components(padded)?;
         let n = comps.len();
         if n == 0 {
-            return Ok(StepMetrics { loss: 0.0, correct: 0.0, weight: 0.0 });
+            return Ok(StepMetrics { loss: 0.0, correct: 0.0, weight: 0.0, ..Default::default() });
         }
         let chunks = self.threads.min(n);
-        let parts: Vec<(Vec<f64>, f32)> = if chunks > 1 {
+        let parts: Vec<(Vec<f64>, TaskMetrics)> = if chunks > 1 {
             let pool = self.pool.as_ref().expect("pool exists when threads > 1");
-            let items = split_chunks(n.div_ceil(chunks), comps, labels);
+            let items = split_chunks(n.div_ceil(chunks), comps);
             let model = Arc::clone(&self.model);
-            let root_set = self.task.root_set.clone();
-            pool.map(items, move |(c, l)| chunk_eval(&model, &root_set, &c, &l))
+            let task = Arc::clone(&self.task);
+            pool.map(items, move |c| chunk_eval(&model, task.as_ref(), &c))
                 .into_iter()
                 .collect::<Result<Vec<_>>>()?
         } else {
-            vec![chunk_eval(&self.model, &self.task.root_set, &comps, &labels)?]
+            vec![chunk_eval(&self.model, self.task.as_ref(), &comps)?]
         };
         let mut loss_sum = 0.0f64;
-        let mut correct = 0.0f32;
-        for (ces, c) in parts {
-            loss_sum += ces.iter().sum::<f64>();
-            correct += c;
+        let mut metrics = TaskMetrics::default();
+        for (losses, m) in parts {
+            loss_sum += losses.iter().sum::<f64>();
+            metrics.merge(&m);
         }
         Ok(StepMetrics {
             loss: (loss_sum / n as f64) as f32,
-            correct,
+            correct: metrics.correct as f32,
             weight: n as f32,
+            task: metrics,
         })
     }
 
@@ -301,39 +300,56 @@ impl NativeTrainer {
     }
 }
 
-/// The serial oracle: the same step math as a 1-thread
+/// The serial oracle for any task: the same step math as a 1-thread
 /// [`NativeTrainer::train_batch`], written as one plain loop with no
 /// pool, no chunking and no copy-on-write — kept as the bit-for-bit
 /// reference the parallel path is tested against.
+pub fn train_step_oracle_task(
+    model: &mut NativeModel,
+    opt: &mut Adam,
+    padded: &Padded,
+    task: &dyn Task,
+) -> Result<StepMetrics> {
+    let comps = real_components(padded)?;
+    let n = comps.len();
+    if n == 0 {
+        return Ok(StepMetrics { loss: 0.0, correct: 0.0, weight: 0.0, ..Default::default() });
+    }
+    let mut grads = model.zeros_grads();
+    let mut losses: Vec<f64> = Vec::with_capacity(n);
+    let mut metrics = TaskMetrics::default();
+    for g in &comps {
+        let s = task.step_grad(model, g, &mut grads)?;
+        losses.push(s.loss);
+        metrics.merge(&s.metrics);
+    }
+    let inv = 1.0f32 / n as f32;
+    for gm in &mut grads {
+        gm.scale(inv);
+    }
+    let loss_sum: f64 = losses.iter().sum();
+    opt.step(&mut model.params, &grads);
+    Ok(StepMetrics {
+        loss: (loss_sum / n as f64) as f32,
+        correct: metrics.correct as f32,
+        weight: n as f32,
+        task: metrics,
+    })
+}
+
+/// [`train_step_oracle_task`] bound to root classification — the
+/// historical signature the pre-subsystem tests and benches drive.
 pub fn train_step_oracle(
     model: &mut NativeModel,
     opt: &mut Adam,
     padded: &Padded,
     task: &RootTask,
 ) -> Result<StepMetrics> {
-    let (comps, labels) = real_components(padded, task)?;
-    let n = comps.len();
-    if n == 0 {
-        return Ok(StepMetrics { loss: 0.0, correct: 0.0, weight: 0.0 });
-    }
-    let mut grads = model.zeros_grads();
-    let mut ces: Vec<f64> = Vec::with_capacity(n);
-    let mut correct = 0.0f32;
-    for (g, &label) in comps.iter().zip(&labels) {
-        let label = check_label(model, label)?;
-        let (logits, tape) = model.forward_tape(g, &task.root_set, &[0])?;
-        let x = softmax_xent_masked(&logits, &[label], &[1.0]);
-        model.backward(g, &tape, &x.dlogits, &task.root_set, &mut grads)?;
-        ces.push(x.total_ce as f64);
-        correct += x.correct;
-    }
-    let inv = 1.0f32 / n as f32;
-    for gm in &mut grads {
-        gm.scale(inv);
-    }
-    let loss_sum: f64 = ces.iter().sum();
-    opt.step(&mut model.params, &grads);
-    Ok(StepMetrics { loss: (loss_sum / n as f64) as f32, correct, weight: n as f32 })
+    let rc = RootClassification {
+        root_set: task.root_set.clone(),
+        label_feature: task.label_feature.clone(),
+    };
+    train_step_oracle_task(model, opt, padded, &rc)
 }
 
 #[cfg(test)]
@@ -431,7 +447,7 @@ mod tests {
         for b in &batches {
             let a = t1.eval_batch(b).unwrap();
             let p = t4.eval_batch(b).unwrap();
-            assert_eq!(a.loss.to_bits(), p.loss.to_bits(), "in-order ce sum is thread-stable");
+            assert_eq!(a.loss.to_bits(), p.loss.to_bits(), "in-order loss sum is thread-stable");
             assert_eq!(a.correct, p.correct);
             assert_eq!(a.weight, p.weight);
         }

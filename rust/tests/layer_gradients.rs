@@ -207,6 +207,7 @@ fn hetero_model_config(arch: &str) -> ModelConfig {
         feature_dims,
         cardinality,
         num_classes: 3,
+        task: Default::default(),
     }
 }
 
