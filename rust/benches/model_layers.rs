@@ -66,6 +66,10 @@ fn main() {
 
     for arch in ["mpnn", "gcn", "sage", "gatv2"] {
         let cfg = ModelConfig::for_mag(&mag, hidden, hidden, layers).with_arch(arch);
+        // Analyzer gate: every benched arch must be one `tfgnn check`
+        // would accept — a rejected config times garbage.
+        let diags = tfgnn::analysis::check_model(&cfg);
+        assert!(diags.is_clean(), "{arch}: analyzer rejected the bench model:\n{diags}");
         let model0 = NativeModel::init(cfg, 3).unwrap();
         println!(
             "\n# {arch}: {} params, batch {batch}, {} prepared batches",

@@ -97,6 +97,10 @@ fn gate_and_time(
     batches: &[Padded],
 ) {
     let adam = AdamConfig::default();
+    // Analyzer gate: every benched task head must be one `tfgnn check`
+    // would accept — a rejected config times garbage.
+    let diags = tfgnn::analysis::check_model(cfg);
+    assert!(diags.is_clean(), "{row}: analyzer rejected the bench model:\n{diags}");
     let model0 = NativeModel::init(cfg.clone(), 3).unwrap();
     let task = tfgnn::tasks::build(cfg).unwrap();
 

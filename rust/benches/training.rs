@@ -69,6 +69,10 @@ fn main() {
     let roots_per_pass: usize = batches.iter().map(|b| b.num_real_components).sum();
 
     let model_cfg = ModelConfig::for_mag(&mag, hidden, hidden, layers);
+    // Analyzer gate: the benched architecture must be one `tfgnn check`
+    // would accept — a rejected config times garbage.
+    let diags = tfgnn::analysis::check_model(&model_cfg);
+    assert!(diags.is_clean(), "analyzer rejected the bench model:\n{diags}");
     let task = RootTask::default();
     let adam = AdamConfig::default();
     let model0 = NativeModel::init(model_cfg, 3).unwrap();

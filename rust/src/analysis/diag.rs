@@ -1,0 +1,523 @@
+//! Structured diagnostics: stable codes, severity, JSON path, fix hint.
+//!
+//! Every config defect the static analyzer (or any config-parsing
+//! funnel) can report carries a stable `TFGNN0xx` code from the
+//! [`CODES`] table — the single source of truth `docs/diagnostics.md`
+//! is generated from (see [`render_markdown`]; pinned by
+//! `tests/analyzer.rs`). A [`Diagnostic`] names the code, a severity,
+//! the JSON path of the offending config value (`$.model.att_dim`
+//! style) and a human message.
+//!
+//! The config funnels in `ops::model_ref` / `layers::builder` / `tasks`
+//! keep their `Result<_, crate::Error>` signatures: a diagnostic
+//! converts to an error with [`Diagnostic::into_error`], which appends
+//! a machine-readable ` [TFGNN0xx @ path]` suffix to the message, and
+//! [`Diagnostic::from_error`] recovers the structure — so the CLI
+//! `tfgnn check`, `run_native` and `serve_native` all emit identical
+//! diagnostics without duplicating a single check.
+
+use crate::{Error, Result};
+
+/// Diagnostic severity. Errors fail `tfgnn check` (and the entry-point
+/// gates); warnings are reported but do not fail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Stable diagnostic codes. Codes are append-only: a released code
+/// never changes meaning (tooling and CI grep for them).
+pub mod codes {
+    /// Malformed config document: missing required key/block, wrong
+    /// JSON type, bad edge-set endpoint list.
+    pub const CONFIG: &str = "TFGNN001";
+    /// Unknown key in a `model`/`task` block (typo defense).
+    pub const UNKNOWN_KEY: &str = "TFGNN002";
+    /// `model.type` vs `model.arch` conflict, or an AOT-only `arch`
+    /// used without an explicit native `type`.
+    pub const ARCH_CONFLICT: &str = "TFGNN003";
+    /// Unknown enum value (`model.type`, `sage_reduce`, `task.type`,
+    /// `task.readout`, `task.loss`, …).
+    pub const UNKNOWN_ENUM: &str = "TFGNN004";
+    /// Zero or invalid dimension (widths, layer count, feature dims,
+    /// embedding cardinality, class count).
+    pub const BAD_DIM: &str = "TFGNN005";
+    /// Invalid task knob (negatives, hits_k, holdout fraction, margin,
+    /// target scale, heterogeneous link-prediction edge set).
+    pub const BAD_TASK_KNOB: &str = "TFGNN006";
+    /// Reference to an edge set the schema does not declare.
+    pub const UNKNOWN_EDGE_SET: &str = "TFGNN007";
+    /// Reference to a node set the schema does not declare.
+    pub const UNKNOWN_NODE_SET: &str = "TFGNN008";
+    /// An update pools an edge set whose SOURCE endpoint is not the
+    /// updated node set (the rooted-subgraph direction convention).
+    pub const RECEIVER_NOT_SOURCE: &str = "TFGNN009";
+    /// An update pools the same edge set twice.
+    pub const DUPLICATE_POOL: &str = "TFGNN010";
+    /// Forward shape inference found a dimension mismatch (schema
+    /// feature dims vs dataset, class counts, embedding tables).
+    pub const SHAPE_MISMATCH: &str = "TFGNN011";
+    /// Pad spec problem: missing caps, or a component cap too small
+    /// for the batch size.
+    pub const PAD_SPEC: &str = "TFGNN012";
+    /// Dead set: an edge set the sampler fetches but no GraphUpdate
+    /// reads (warning), or one the model reads but the sampling plan
+    /// never provides (error — every step would pool zero messages).
+    pub const DEAD_SET: &str = "TFGNN013";
+    /// The task's readout set is unreachable from the sampling seeds.
+    pub const UNREACHABLE_READOUT: &str = "TFGNN014";
+    /// Two parameters would be created under the same name.
+    pub const PARAM_COLLISION: &str = "TFGNN015";
+    /// Checkpoint incompatibility: missing/extra/mis-shaped parameter
+    /// vs what this config's model would create.
+    pub const CHECKPOINT_MISMATCH: &str = "TFGNN016";
+    /// Sampling spec problem: missing/zero fan-out sizes, or a plan
+    /// that does not compose over the schema.
+    pub const SAMPLING_SPEC: &str = "TFGNN017";
+}
+
+/// One row of the code reference (drives `docs/diagnostics.md`).
+pub struct CodeInfo {
+    pub code: &'static str,
+    pub title: &'static str,
+    pub summary: &'static str,
+    pub hint: &'static str,
+}
+
+/// The full stable code table, in code order.
+pub const CODES: &[CodeInfo] = &[
+    CodeInfo {
+        code: codes::CONFIG,
+        title: "malformed config",
+        summary: "A required key or block is missing, has the wrong JSON type, \
+                  or an edge set's endpoint list is not `[source, target]`.",
+        hint: "Compare against a shipped `configs/*.json`; every run config needs \
+               `schema`, `model`, `train`, `sampling`, `pad` and `batch_size`.",
+    },
+    CodeInfo {
+        code: codes::UNKNOWN_KEY,
+        title: "unknown key",
+        summary: "A `model` or `task` block carries a key the engine does not \
+                  know — typos must not silently fall back to defaults.",
+        hint: "Check the spelling against the known-key list in the message.",
+    },
+    CodeInfo {
+        code: codes::ARCH_CONFLICT,
+        title: "architecture conflict",
+        summary: "`model.type` and `model.arch` disagree, or a non-mpnn `arch` \
+                  was given without an explicit native `model.type`.",
+        hint: "Keep one key: `model.type` selects the native convolution zoo \
+               (mpnn|gcn|sage|gatv2).",
+    },
+    CodeInfo {
+        code: codes::UNKNOWN_ENUM,
+        title: "unknown enum value",
+        summary: "An enumerated config value is outside its vocabulary \
+                  (`model.type`, `model.sage_reduce`, `task.type`, \
+                  `task.readout`, `task.loss`).",
+        hint: "The message lists the accepted values.",
+    },
+    CodeInfo {
+        code: codes::BAD_DIM,
+        title: "bad dimension",
+        summary: "A width, layer count, feature dimension, embedding \
+                  cardinality or class count is zero or unusable.",
+        hint: "All model widths and schema dims must be positive integers.",
+    },
+    CodeInfo {
+        code: codes::BAD_TASK_KNOB,
+        title: "bad task knob",
+        summary: "A task hyper-knob is out of range (negatives, hits_k, \
+                  holdout_fraction, margin, target_scale), or the \
+                  link-prediction edge set is heterogeneous.",
+        hint: "See the `task` block reference in DESIGN.md for valid ranges.",
+    },
+    CodeInfo {
+        code: codes::UNKNOWN_EDGE_SET,
+        title: "unknown edge set",
+        summary: "The config references an edge set the schema does not \
+                  declare (in `model.updates`, `task.edge_set`, or \
+                  `sampling.sizes`).",
+        hint: "Declare the edge set under `schema.edge_sets`, or fix the name.",
+    },
+    CodeInfo {
+        code: codes::UNKNOWN_NODE_SET,
+        title: "unknown node set",
+        summary: "The config references a node set the schema does not \
+                  declare (e.g. `task.root_set`).",
+        hint: "Declare the node set under `schema.node_sets`, or fix the name.",
+    },
+    CodeInfo {
+        code: codes::RECEIVER_NOT_SOURCE,
+        title: "receiver is not the source endpoint",
+        summary: "An update pools an edge set whose SOURCE endpoint is not \
+                  the updated node set — the engine's convolutions receive at \
+                  the source (the rooted-subgraph sampling direction).",
+        hint: "Pool the reverse edge set instead, or swap the endpoints in \
+               `schema.edge_sets`.",
+    },
+    CodeInfo {
+        code: codes::DUPLICATE_POOL,
+        title: "duplicate pool",
+        summary: "An update pools the same edge set twice, which would create \
+                  two parameter tensors under one name.",
+        hint: "List each edge set at most once per `model.updates` entry.",
+    },
+    CodeInfo {
+        code: codes::SHAPE_MISMATCH,
+        title: "shape mismatch",
+        summary: "Forward shape inference found a dimension conflict: a schema \
+                  feature width disagrees with the dataset, `train.num_classes` \
+                  disagrees with the dataset's label space, or an embedding \
+                  table is smaller than the entity count it must index.",
+        hint: "The message names both sides of the mismatch; make them agree.",
+    },
+    CodeInfo {
+        code: codes::PAD_SPEC,
+        title: "pad spec problem",
+        summary: "`pad.node_caps`/`pad.edge_caps` do not cover every schema \
+                  set, or `pad.component_cap` cannot hold a full batch plus \
+                  the padding component.",
+        hint: "Every schema set needs a cap; `component_cap` must be at least \
+               `batch_size + 1`.",
+    },
+    CodeInfo {
+        code: codes::DEAD_SET,
+        title: "dead set",
+        summary: "An edge set is sampled but never read by any GraphUpdate \
+                  (wasted fan-out — warning), or read by an update but never \
+                  provided by the sampling plan (every step would silently \
+                  pool zero messages — error).",
+        hint: "Align `sampling.sizes` with the union of `model.updates` lists.",
+    },
+    CodeInfo {
+        code: codes::UNREACHABLE_READOUT,
+        title: "unreachable readout",
+        summary: "The task reads out from a node set the sampling plan cannot \
+                  reach from its seeds (root readouts must target the seed \
+                  node set; link-prediction pairs must live on it).",
+        hint: "Point `task.root_set`/`task.edge_set` at the sampling seed \
+               node set, or extend the sampling plan.",
+    },
+    CodeInfo {
+        code: codes::PARAM_COLLISION,
+        title: "parameter name collision",
+        summary: "Two parameter tensors would be created under the same \
+                  `l{L}.{node_set}.{edge_set}.{suffix}` name.",
+        hint: "Usually a duplicate-pool or naming-scheme bug; the message \
+               names the colliding parameter.",
+    },
+    CodeInfo {
+        code: codes::CHECKPOINT_MISMATCH,
+        title: "checkpoint mismatch",
+        summary: "The checkpoint's parameter inventory disagrees with what \
+                  this config's model would create: a missing name, a stale \
+                  extra name, or a shape conflict.",
+        hint: "Retrain, or fix the config so its architecture matches the \
+               checkpoint's (`tfgnn check --against-checkpoint` lists every \
+               difference).",
+    },
+    CodeInfo {
+        code: codes::SAMPLING_SPEC,
+        title: "sampling spec problem",
+        summary: "`sampling.sizes` is missing an edge set the plan needs, a \
+                  fan-out is zero, or the plan does not compose over the \
+                  schema's endpoints.",
+        hint: "Give every edge set of the plan a positive fan-out size.",
+    },
+];
+
+/// Look up a code's table row.
+pub fn code_info(code: &str) -> Option<&'static CodeInfo> {
+    CODES.iter().find(|c| c.code == code)
+}
+
+/// One reported defect.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable `TFGNN0xx` code (see [`CODES`]).
+    pub code: &'static str,
+    pub severity: Severity,
+    /// JSON path of the offending value, `$.model.att_dim` style.
+    pub path: String,
+    pub message: String,
+    /// Optional fix hint (defaults to the code table's hint).
+    pub hint: Option<String>,
+}
+
+impl Diagnostic {
+    pub fn error(
+        code: &'static str,
+        path: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: Severity::Error,
+            path: path.into(),
+            message: message.into(),
+            hint: None,
+        }
+    }
+
+    pub fn warning(
+        code: &'static str,
+        path: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: Severity::Warning,
+            path: path.into(),
+            message: message.into(),
+            hint: None,
+        }
+    }
+
+    pub fn with_hint(mut self, hint: impl Into<String>) -> Diagnostic {
+        self.hint = Some(hint.into());
+        self
+    }
+
+    /// The fix hint: this diagnostic's own, else the code table's.
+    pub fn hint(&self) -> &str {
+        match &self.hint {
+            Some(h) => h,
+            None => code_info(self.code).map(|c| c.hint).unwrap_or(""),
+        }
+    }
+
+    /// Convert to the crate error type, keeping the structure
+    /// recoverable: the message gains a ` [TFGNN0xx @ path]` suffix
+    /// that [`Diagnostic::from_error`] parses back.
+    pub fn into_error(self) -> Error {
+        Error::Schema(format!("{} [{} @ {}]", self.message, self.code, self.path))
+    }
+
+    /// Recover a diagnostic from an error produced by
+    /// [`Diagnostic::into_error`]; any other error becomes a
+    /// [`codes::CONFIG`] diagnostic at `$`.
+    pub fn from_error(e: &Error) -> Diagnostic {
+        let m = match e {
+            Error::Schema(m)
+            | Error::Graph(m)
+            | Error::Feature(m)
+            | Error::Sampler(m)
+            | Error::Pipeline(m)
+            | Error::Runtime(m)
+            | Error::Codec(m)
+            | Error::Xla(m) => m.clone(),
+            Error::Io(e) => e.to_string(),
+        };
+        if let Some(open) = m.rfind(" [TFGNN") {
+            if let Some(stripped) = m[open..].strip_prefix(" [") {
+                if let Some(body) = stripped.strip_suffix(']') {
+                    if let Some((code, path)) = body.split_once(" @ ") {
+                        if let Some(info) = code_info(code) {
+                            return Diagnostic::error(info.code, path, m[..open].to_string());
+                        }
+                    }
+                }
+            }
+        }
+        Diagnostic::error(codes::CONFIG, "$", m)
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} [{}] at {}: {}",
+            self.severity.name(),
+            self.code,
+            self.path,
+            self.message
+        )?;
+        let hint = self.hint();
+        if !hint.is_empty() {
+            write!(f, "\n  hint: {hint}")?;
+        }
+        Ok(())
+    }
+}
+
+/// An ordered collection of diagnostics from one analysis run.
+#[derive(Debug, Default)]
+pub struct Diagnostics {
+    diags: Vec<Diagnostic>,
+}
+
+impl Diagnostics {
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diags.push(d);
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diags.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.diags.len()
+    }
+
+    /// No diagnostics at all (not even warnings).
+    pub fn is_empty(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// No errors (warnings allowed) — the gate `run_native`/serving use.
+    pub fn is_clean(&self) -> bool {
+        !self.has_errors()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.diags.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    /// First diagnostic carrying `code`, if any.
+    pub fn find(&self, code: &str) -> Option<&Diagnostic> {
+        self.diags.iter().find(|d| d.code == code)
+    }
+
+    /// `Ok(())` if error-free, else the first error as a
+    /// [`crate::Error`] whose message carries every error line —
+    /// this is what makes the entry-point gates print the same content
+    /// as `tfgnn check`.
+    pub fn into_result(self) -> Result<()> {
+        if self.is_clean() {
+            return Ok(());
+        }
+        let lines: Vec<String> = self
+            .diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| d.to_string())
+            .collect();
+        Err(Error::Schema(format!(
+            "config check failed with {} error(s):\n{}",
+            lines.len(),
+            lines.join("\n")
+        )))
+    }
+}
+
+impl std::fmt::Display for Diagnostics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for d in &self.diags {
+            writeln!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Generate `docs/diagnostics.md` from the code table (pinned to the
+/// checked-in file by `tests/analyzer.rs`).
+pub fn render_markdown() -> String {
+    let mut out = String::new();
+    out.push_str("# `tfgnn check` diagnostic codes\n\n");
+    out.push_str(
+        "Generated from the single source-of-truth table in \
+         `rust/src/analysis/diag.rs` — edit that table, not this file \
+         (`tests/analyzer.rs` pins the two together).\n\n",
+    );
+    out.push_str(
+        "Every code is stable: once released its meaning never changes. \
+         Diagnostics carry a severity (errors fail `tfgnn check`, \
+         `run_native` and `serve_native`; warnings are report-only), the \
+         JSON path of the offending config value, and a fix hint.\n\n",
+    );
+    for c in CODES {
+        out.push_str(&format!("## {} — {}\n\n", c.code, c.title));
+        out.push_str(&format!("{}\n\n", collapse_ws(c.summary)));
+        out.push_str(&format!("**Fix:** {}\n\n", collapse_ws(c.hint)));
+    }
+    out
+}
+
+/// Collapse the multi-line string-literal indentation of the table's
+/// text into single-space prose.
+fn collapse_ws(s: &str) -> String {
+    s.split_whitespace().collect::<Vec<_>>().join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_unique_sorted_and_well_formed() {
+        for w in CODES.windows(2) {
+            assert!(w[0].code < w[1].code, "{} vs {}", w[0].code, w[1].code);
+        }
+        for c in CODES {
+            assert!(c.code.starts_with("TFGNN"), "{}", c.code);
+            assert_eq!(c.code.len(), 8, "{}", c.code);
+            assert!(!c.title.is_empty() && !c.summary.is_empty() && !c.hint.is_empty());
+        }
+        assert_eq!(CODES.len(), 17);
+    }
+
+    #[test]
+    fn error_roundtrip_preserves_structure() {
+        let d = Diagnostic::error(codes::BAD_DIM, "$.model.hidden_dim", "hidden_dim is 0");
+        let e = d.clone().into_error();
+        let msg = e.to_string();
+        assert!(msg.contains("hidden_dim is 0"), "{msg}");
+        assert!(msg.contains("TFGNN005"), "{msg}");
+        let back = Diagnostic::from_error(&e);
+        assert_eq!(back.code, codes::BAD_DIM);
+        assert_eq!(back.path, "$.model.hidden_dim");
+        assert_eq!(back.message, "hidden_dim is 0");
+    }
+
+    #[test]
+    fn foreign_errors_become_config_diagnostics() {
+        let e = Error::Runtime("no manifest".into());
+        let d = Diagnostic::from_error(&e);
+        assert_eq!(d.code, codes::CONFIG);
+        assert_eq!(d.path, "$");
+        assert!(d.message.contains("no manifest"));
+    }
+
+    #[test]
+    fn diagnostics_gate_on_errors_only() {
+        let mut ds = Diagnostics::default();
+        ds.push(Diagnostic::warning(codes::DEAD_SET, "$.sampling.sizes.x", "unused"));
+        assert!(ds.is_clean());
+        assert!(!ds.is_empty());
+        assert!(ds.into_result().is_ok());
+        let mut ds = Diagnostics::default();
+        ds.push(Diagnostic::error(codes::BAD_DIM, "$.model.hidden_dim", "zero"));
+        ds.push(Diagnostic::warning(codes::DEAD_SET, "$.x", "unused"));
+        assert_eq!(ds.error_count(), 1);
+        assert!(ds.find(codes::BAD_DIM).is_some());
+        let err = ds.into_result().err().map(|e| e.to_string()).unwrap_or_default();
+        assert!(err.contains("1 error"), "{err}");
+        assert!(err.contains("TFGNN005"), "{err}");
+        assert!(!err.contains("TFGNN013"), "warnings stay out of the gate: {err}");
+    }
+
+    #[test]
+    fn markdown_covers_every_code() {
+        let md = render_markdown();
+        for c in CODES {
+            assert!(md.contains(c.code), "{} missing", c.code);
+        }
+        assert!(md.starts_with("# `tfgnn check` diagnostic codes"));
+    }
+}

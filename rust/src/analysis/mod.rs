@@ -1,0 +1,118 @@
+//! Static model-plan analysis — `tfgnn check`.
+//!
+//! Compiles (schema × sampling spec × model config × task block) into
+//! the typed plan IR of [`plan`] and runs the passes of [`passes`]
+//! over it, **without touching any graph data**: shape inference,
+//! dead-set detection, seed→readout reachability, and
+//! parameter-namespace/checkpoint compatibility. Defects come back as
+//! structured [`Diagnostic`]s — stable `TFGNN0xx` code, severity, JSON
+//! path, fix hint (the full code reference lives in
+//! [`diag::CODES`] / `docs/diagnostics.md`).
+//!
+//! Entry points:
+//! * [`analyze`] / [`analyze_against_checkpoint`] — full analysis of a
+//!   run-config document (what the `tfgnn check` CLI runs);
+//! * [`check_config`] — the fail-fast gate `run_native` calls before
+//!   building anything, so the runner rejects a bad config with the
+//!   *same* diagnostics the CLI prints;
+//! * [`check_model`] — the model-level subset over an already-parsed
+//!   [`ModelConfig`], for serving paths where the raw document is gone.
+
+pub mod diag;
+pub mod passes;
+pub mod plan;
+
+pub use diag::{Diagnostic, Diagnostics, Severity};
+pub use plan::ModelPlan;
+
+use crate::ops::model_ref::ModelConfig;
+use crate::runtime::HostTensor;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Run the full pass suite over a run-config document.
+pub fn analyze(cfg: &Json) -> Diagnostics {
+    analyze_impl(cfg, None)
+}
+
+/// [`analyze`], plus checkpoint compatibility against `checkpoint`
+/// (the `train::checkpoint` codec's named tensors).
+pub fn analyze_against_checkpoint(
+    cfg: &Json,
+    checkpoint: &[(String, HostTensor)],
+) -> Diagnostics {
+    analyze_impl(cfg, Some(checkpoint))
+}
+
+fn analyze_impl(cfg: &Json, checkpoint: Option<&[(String, HostTensor)]>) -> Diagnostics {
+    let mut d = Diagnostics::default();
+    if let Some(plan) = ModelPlan::compile(cfg, &mut d) {
+        passes::shape_pass(&plan, &mut d);
+        passes::dead_set_pass(&plan, &mut d);
+        passes::reachability_pass(&plan, &mut d);
+        passes::param_pass(&plan, checkpoint, &mut d);
+    }
+    d
+}
+
+/// The model-level subset over an already-parsed config — what the
+/// serving entry points gate on (no sampling/pad/dataset document
+/// available there).
+pub fn check_model(cfg: &ModelConfig) -> Diagnostics {
+    let mut d = Diagnostics::default();
+    if let Some(plan) = ModelPlan::compile_model_only(cfg, &mut d) {
+        passes::shape_pass(&plan, &mut d);
+        passes::dead_set_pass(&plan, &mut d);
+        passes::reachability_pass(&plan, &mut d);
+        passes::param_pass(&plan, None, &mut d);
+    }
+    d
+}
+
+/// Fail-fast gate for run entry points: `Ok(())` on an error-free
+/// config, else an error listing every diagnostic line the CLI would
+/// print.
+pub fn check_config(cfg: &Json) -> Result<()> {
+    analyze(cfg).into_result()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::model_ref::TaskConfig;
+    use crate::synth::mag::MagConfig;
+
+    #[test]
+    fn check_model_passes_the_mag_zoo() {
+        let base = ModelConfig::for_mag(&MagConfig::tiny(), 8, 8, 1);
+        for arch in ["mpnn", "gcn", "sage", "gatv2"] {
+            let d = check_model(&base.clone().with_arch(arch));
+            assert!(d.is_clean(), "{arch}:\n{d}");
+        }
+        for task in [
+            TaskConfig::default(),
+            TaskConfig { kind: "link_prediction".into(), ..TaskConfig::default() },
+            TaskConfig { kind: "graph_regression".into(), ..TaskConfig::default() },
+        ] {
+            let d = check_model(&base.clone().with_task(task.clone()));
+            assert!(d.is_clean(), "{}:\n{d}", task.kind);
+        }
+    }
+
+    #[test]
+    fn check_model_rejects_bad_arch() {
+        let cfg = ModelConfig::for_mag(&MagConfig::tiny(), 8, 8, 1).with_arch("transformer");
+        let d = check_model(&cfg);
+        assert!(d.has_errors());
+        assert!(d.find(diag::codes::UNKNOWN_ENUM).is_some(), "{d}");
+    }
+
+    #[test]
+    fn check_config_message_carries_code_and_path() {
+        let cfg = crate::util::json::Json::parse("{}").expect("json");
+        let err = check_config(&cfg).expect_err("empty config");
+        let msg = err.to_string();
+        assert!(msg.contains("TFGNN001"), "{msg}");
+        assert!(msg.contains("$.model"), "{msg}");
+    }
+}

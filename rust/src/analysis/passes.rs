@@ -1,0 +1,637 @@
+//! Analysis passes over the compiled [`ModelPlan`].
+//!
+//! Each pass is a pure function `(&ModelPlan, &mut Diagnostics)` (plus
+//! an optional checkpoint for the parameter pass). They check the plan
+//! IR only — no graph data, no tensors — so the whole suite runs in
+//! microseconds at every entry point:
+//!
+//! * [`shape_pass`] — forward shape inference cross-checks: feature
+//!   widths vs the dataset, class counts, embedding cardinalities vs
+//!   entity counts, pad caps vs batch size;
+//! * [`dead_set_pass`] — edge sets the model reads but the sampling
+//!   plan never provides (error: every update would pool zero
+//!   messages, silently), and sets sampled but never read (warning:
+//!   wasted fan-out);
+//! * [`reachability_pass`] — the task's readout must live on the
+//!   sampling seed node set (roots are interned seeds-first, so a
+//!   non-seed readout reads an arbitrary node, silently);
+//! * [`param_pass`] — parameter-namespace collisions, and the full
+//!   name/shape inventory against an optional checkpoint.
+
+use std::collections::BTreeSet;
+
+use super::diag::{codes, Diagnostic, Diagnostics};
+use super::plan::ModelPlan;
+use crate::runtime::HostTensor;
+
+/// Shape inference cross-checks (see module docs).
+pub fn shape_pass(plan: &ModelPlan, d: &mut Diagnostics) {
+    for node in &plan.nodes {
+        for (fname, dim) in &node.features {
+            if *dim == 0 {
+                d.push(Diagnostic::error(
+                    codes::BAD_DIM,
+                    format!("$.schema.node_sets.{}.features.{fname}", node.name),
+                    format!("feature {}/{fname} has no dimension", node.name),
+                ));
+            }
+        }
+        if node.id_embedding && node.features.is_empty() {
+            match node.cardinality {
+                None => d.push(Diagnostic::error(
+                    codes::BAD_DIM,
+                    format!("$.schema.node_sets.{}.cardinality", node.name),
+                    format!("id-embedding set {:?} has no cardinality", node.name),
+                )),
+                Some(0) => d.push(Diagnostic::error(
+                    codes::BAD_DIM,
+                    format!("$.schema.node_sets.{}.cardinality", node.name),
+                    format!("id-embedding set {:?} has cardinality 0", node.name),
+                )),
+                Some(_) => {}
+            }
+        }
+    }
+    if plan.cfg.task.kind == "root_classification" && plan.cfg.num_classes == 0 {
+        d.push(Diagnostic::error(
+            codes::BAD_DIM,
+            "$.train.num_classes",
+            "train.num_classes is 0 — the classification head would be empty",
+        ));
+    }
+    if let Some(ds) = &plan.dataset {
+        if let Some(fd) = ds.feature_dim {
+            if let Some(node) = plan.nodes.iter().find(|n| n.name == "paper") {
+                if let Some((_, dim)) = node.features.iter().find(|(f, _)| f == "feat") {
+                    if *dim != fd && *dim != 0 {
+                        d.push(Diagnostic::error(
+                            codes::SHAPE_MISMATCH,
+                            "$.dataset.feature_dim",
+                            format!(
+                                "dataset generates paper.feat with dim {fd}, but the \
+                                 schema declares {dim} — the encoder would reject \
+                                 every batch"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        if let Some(nc) = ds.num_classes {
+            if nc != plan.cfg.num_classes && plan.cfg.task.kind == "root_classification" {
+                d.push(Diagnostic::error(
+                    codes::SHAPE_MISMATCH,
+                    "$.train.num_classes",
+                    format!(
+                        "train.num_classes is {} but the dataset labels {nc} classes",
+                        plan.cfg.num_classes
+                    ),
+                ));
+            }
+        }
+        for (set, count) in
+            [("institution", ds.num_institutions), ("field_of_study", ds.num_fields)]
+        {
+            let (Some(count), Some(node)) =
+                (count, plan.nodes.iter().find(|n| n.name == set))
+            else {
+                continue;
+            };
+            let Some(card) = node.cardinality else { continue };
+            let path = format!("$.schema.node_sets.{set}.cardinality");
+            if card < count {
+                d.push(Diagnostic::error(
+                    codes::SHAPE_MISMATCH,
+                    path,
+                    format!(
+                        "embedding table for {set:?} has {card} rows but the dataset \
+                         generates {count} entities — ids past the table would fault"
+                    ),
+                ));
+            } else if card > count {
+                d.push(Diagnostic::warning(
+                    codes::SHAPE_MISMATCH,
+                    path,
+                    format!(
+                        "embedding table for {set:?} has {card} rows for only \
+                         {count} entities ({} rows never trained)",
+                        card - count
+                    ),
+                ));
+            }
+        }
+    }
+    if let Some(pad) = &plan.pad {
+        if let Some(batch) = plan.batch_size {
+            if pad.component_cap < batch + 1 {
+                d.push(Diagnostic::error(
+                    codes::PAD_SPEC,
+                    "$.pad.component_cap",
+                    format!(
+                        "pad.component_cap {} cannot hold a batch of {batch} plus \
+                         the padding component (need ≥ {})",
+                        pad.component_cap,
+                        batch + 1
+                    ),
+                ));
+            }
+        }
+        for node in &plan.nodes {
+            if !pad.node_caps.contains_key(&node.name) {
+                d.push(Diagnostic::error(
+                    codes::PAD_SPEC,
+                    "$.pad.node_caps",
+                    format!("pad.node_caps has no cap for node set {:?}", node.name),
+                ));
+            }
+        }
+        for edge in &plan.edges {
+            if !pad.edge_caps.contains_key(&edge.name) {
+                d.push(Diagnostic::error(
+                    codes::PAD_SPEC,
+                    "$.pad.edge_caps",
+                    format!("pad.edge_caps has no cap for edge set {:?}", edge.name),
+                ));
+            }
+        }
+        let node_names: BTreeSet<&str> = plan.nodes.iter().map(|n| n.name.as_str()).collect();
+        let edge_names: BTreeSet<&str> = plan.edges.iter().map(|e| e.name.as_str()).collect();
+        for set in pad.node_caps.keys().filter(|s| !node_names.contains(s.as_str())) {
+            d.push(Diagnostic::warning(
+                codes::PAD_SPEC,
+                format!("$.pad.node_caps.{set}"),
+                format!("pad cap for unknown node set {set:?}"),
+            ));
+        }
+        for set in pad.edge_caps.keys().filter(|s| !edge_names.contains(s.as_str())) {
+            d.push(Diagnostic::warning(
+                codes::PAD_SPEC,
+                format!("$.pad.edge_caps.{set}"),
+                format!("pad cap for unknown edge set {set:?}"),
+            ));
+        }
+    }
+}
+
+/// Dead-set detection (see module docs).
+pub fn dead_set_pass(plan: &ModelPlan, d: &mut Diagnostics) {
+    let Some(sample) = &plan.sample else { return };
+    let sampled: BTreeSet<&str> = sample.sampled_edge_sets().into_iter().collect();
+    let mut read: BTreeSet<&str> = BTreeSet::new();
+    for (node_set, edge_list) in &plan.cfg.updates {
+        for es in edge_list {
+            read.insert(es.as_str());
+            if !sampled.contains(es.as_str()) {
+                d.push(Diagnostic::error(
+                    codes::DEAD_SET,
+                    format!("$.model.updates.{node_set}"),
+                    format!(
+                        "update of {node_set:?} pools edge set {es:?}, which the \
+                         sampling plan never fetches — every step would pool zero \
+                         messages, silently"
+                    ),
+                ));
+            }
+        }
+    }
+    for es in sampled.difference(&read) {
+        d.push(Diagnostic::warning(
+            codes::DEAD_SET,
+            format!("$.sampling.sizes.{es}"),
+            format!(
+                "edge set {es:?} is sampled but no GraphUpdate reads it \
+                 (wasted fan-out)"
+            ),
+        ));
+    }
+    // Node sets that contribute nothing: no initial state, no update,
+    // not an endpoint of any pooled edge set.
+    let read_endpoints: BTreeSet<&str> = plan
+        .edges
+        .iter()
+        .filter(|e| read.contains(e.name.as_str()))
+        .flat_map(|e| [e.source.as_str(), e.target.as_str()])
+        .collect();
+    for node in &plan.nodes {
+        if node.features.is_empty()
+            && !node.id_embedding
+            && !plan.cfg.updates.contains_key(&node.name)
+            && !read_endpoints.contains(node.name.as_str())
+        {
+            d.push(Diagnostic::warning(
+                codes::DEAD_SET,
+                format!("$.schema.node_sets.{}", node.name),
+                format!(
+                    "node set {:?} carries no features or embedding, receives no \
+                     update, and borders no pooled edge set",
+                    node.name
+                ),
+            ));
+        }
+    }
+}
+
+/// Seed → readout reachability (see module docs).
+pub fn reachability_pass(plan: &ModelPlan, d: &mut Diagnostics) {
+    let t = &plan.cfg.task;
+    let node_names: BTreeSet<&str> = plan.nodes.iter().map(|n| n.name.as_str()).collect();
+    match t.kind.as_str() {
+        "root_classification" | "graph_regression" => {
+            if !node_names.contains(t.root_set.as_str()) {
+                d.push(Diagnostic::error(
+                    codes::UNKNOWN_NODE_SET,
+                    "$.task.root_set",
+                    format!("task.root_set {:?} is not a node set of the schema", t.root_set),
+                ));
+                return;
+            }
+            if let Some(sample) = &plan.sample {
+                if t.root_set != sample.seed_node_set {
+                    d.push(Diagnostic::error(
+                        codes::UNREACHABLE_READOUT,
+                        "$.task.root_set",
+                        format!(
+                            "task reads out from {:?} but the sampling plan seeds \
+                             {:?} — roots are interned seeds-first, so the readout \
+                             would pick up an arbitrary node",
+                            t.root_set, sample.seed_node_set
+                        ),
+                    ));
+                }
+            }
+        }
+        "link_prediction" => {
+            let Some(edge) = plan.edges.iter().find(|e| e.name == t.edge_set) else {
+                d.push(Diagnostic::error(
+                    codes::UNKNOWN_EDGE_SET,
+                    "$.task.edge_set",
+                    format!("task.edge_set {:?} is not an edge set of the schema", t.edge_set),
+                ));
+                return;
+            };
+            if edge.source != edge.target {
+                d.push(Diagnostic::error(
+                    codes::BAD_TASK_KNOB,
+                    "$.task.edge_set",
+                    format!(
+                        "task.edge_set {:?} connects {:?}→{:?} — link prediction \
+                         currently scores pairs within one node set (homogeneous \
+                         edge sets)",
+                        t.edge_set, edge.source, edge.target
+                    ),
+                ));
+                return;
+            }
+            if let Some(sample) = &plan.sample {
+                if edge.source != sample.seed_node_set {
+                    d.push(Diagnostic::error(
+                        codes::UNREACHABLE_READOUT,
+                        "$.task.edge_set",
+                        format!(
+                            "link-prediction pairs live on {:?} but the sampling \
+                             plan seeds {:?} — the pair endpoints would never be \
+                             the interned seeds",
+                            edge.source, sample.seed_node_set
+                        ),
+                    ));
+                }
+            }
+        }
+        // Unknown kinds are the config funnel's diagnostic.
+        _ => {}
+    }
+}
+
+/// Parameter-namespace checks (see module docs). `checkpoint` entries
+/// are the `train::checkpoint` codec's: model parameters under a
+/// `param.` prefix, optimizer state under `adam_m.`/`adam_v.`/`step`.
+pub fn param_pass(
+    plan: &ModelPlan,
+    checkpoint: Option<&[(String, HostTensor)]>,
+    d: &mut Diagnostics,
+) {
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    for p in &plan.params {
+        if !seen.insert(p.name.as_str()) {
+            d.push(Diagnostic::error(
+                codes::PARAM_COLLISION,
+                "$.model",
+                format!("parameter {:?} would be created twice", p.name),
+            ));
+        }
+    }
+    let Some(ckpt) = checkpoint else { return };
+    let prefixed = ckpt.iter().any(|(n, _)| n.starts_with("param."));
+    let mut stored: std::collections::BTreeMap<&str, &[usize]> =
+        std::collections::BTreeMap::new();
+    for (name, t) in ckpt {
+        if let Some(p) = name.strip_prefix("param.") {
+            stored.insert(p, t.shape());
+        } else if !prefixed
+            && !name.starts_with("adam_m.")
+            && !name.starts_with("adam_v.")
+            && name != "step"
+        {
+            // Bare parameter lists (e.g. `params_as_tensors` dumps).
+            stored.insert(name.as_str(), t.shape());
+        }
+    }
+    for p in &plan.params {
+        match stored.remove(p.name.as_str()) {
+            None => d.push(Diagnostic::error(
+                codes::CHECKPOINT_MISMATCH,
+                "$.model",
+                format!(
+                    "checkpoint is missing parameter {:?} (expected [{}, {}])",
+                    p.name, p.rows, p.cols
+                ),
+            )),
+            Some(shape) => {
+                if shape != [p.rows, p.cols] {
+                    d.push(Diagnostic::error(
+                        codes::CHECKPOINT_MISMATCH,
+                        "$.model",
+                        format!(
+                            "parameter {:?} has shape {shape:?} in the checkpoint \
+                             but this config would create [{}, {}]",
+                            p.name, p.rows, p.cols
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    for (name, shape) in stored {
+        d.push(Diagnostic::error(
+            codes::CHECKPOINT_MISMATCH,
+            "$.model",
+            format!(
+                "checkpoint carries stale parameter {name:?} {shape:?}, which this \
+                 config would not create"
+            ),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    /// The plan.rs test fixture with a text-level mutation applied.
+    fn plan_from(mutate: impl Fn(String) -> String) -> (Option<ModelPlan>, Diagnostics) {
+        let base = r#"{
+            "name": "pass_test", "batch_size": 4,
+            "dataset": {
+                "num_papers": 80, "num_authors": 60, "num_institutions": 10,
+                "num_fields": 12, "num_classes": 4, "num_communities": 4,
+                "feature_dim": 16, "mean_citations": 3.0,
+                "mean_authors_per_paper": 2.0, "mean_topics": 2.0,
+                "community_coherence": 0.9, "label_coherence": 0.9,
+                "feature_noise": 0.5, "year_min": 2010, "year_max": 2014,
+                "seed": 7
+            },
+            "schema": {
+                "node_sets": {
+                    "paper": {"features": {"feat": 16}},
+                    "author": {},
+                    "institution": {"id_embedding": true, "cardinality": 10},
+                    "field_of_study": {"id_embedding": true, "cardinality": 12}
+                },
+                "edge_sets": {
+                    "cites": ["paper", "paper"],
+                    "written": ["paper", "author"],
+                    "writes": ["author", "paper"],
+                    "affiliated_with": ["author", "institution"],
+                    "has_topic": ["paper", "field_of_study"]
+                }
+            },
+            "sampling": {
+                "plan_seed": 42,
+                "sizes": {"cites": 3, "written": 2, "writes": 2,
+                          "affiliated_with": 2, "has_topic": 2}
+            },
+            "pad": {
+                "node_caps": {"paper": 64, "author": 48, "institution": 16,
+                              "field_of_study": 32},
+                "edge_caps": {"cites": 48, "written": 48, "writes": 48,
+                              "affiliated_with": 48, "has_topic": 64},
+                "component_cap": 5
+            },
+            "model": {
+                "type": "mpnn", "hidden_dim": 8, "message_dim": 8,
+                "num_layers": 1,
+                "updates": {
+                    "paper": ["cites", "written", "has_topic"],
+                    "author": ["writes", "affiliated_with"]
+                }
+            },
+            "train": {"num_classes": 4, "init_seed": 3, "learning_rate": 0.001,
+                      "weight_decay": 0.0, "adam_beta1": 0.9, "adam_beta2": 0.999,
+                      "adam_eps": 1e-8, "epochs": 1}
+        }"#;
+        let cfg = Json::parse(&mutate(base.to_string())).expect("mutated config parses");
+        let mut d = Diagnostics::default();
+        let plan = ModelPlan::compile(&cfg, &mut d);
+        if let Some(p) = &plan {
+            shape_pass(p, &mut d);
+            dead_set_pass(p, &mut d);
+            reachability_pass(p, &mut d);
+            param_pass(p, None, &mut d);
+        }
+        (plan, d)
+    }
+
+    #[test]
+    fn clean_fixture_is_clean() {
+        let (plan, d) = plan_from(|s| s);
+        assert!(plan.is_some());
+        assert!(d.is_empty(), "{d}");
+    }
+
+    #[test]
+    fn zero_feature_dim_flagged() {
+        let (_, d) = plan_from(|s| s.replace("\"feat\": 16", "\"feat\": 0"));
+        let diag = d.find(codes::BAD_DIM).expect("TFGNN005");
+        assert_eq!(diag.path, "$.schema.node_sets.paper.features.feat");
+    }
+
+    #[test]
+    fn zero_cardinality_flagged() {
+        let (_, d) = plan_from(|s| s.replace("\"cardinality\": 10", "\"cardinality\": 0"));
+        let diag = d.find(codes::BAD_DIM).expect("TFGNN005");
+        assert_eq!(diag.path, "$.schema.node_sets.institution.cardinality");
+    }
+
+    #[test]
+    fn dataset_feature_dim_mismatch_flagged() {
+        let (_, d) = plan_from(|s| s.replace("\"feature_dim\": 16", "\"feature_dim\": 32"));
+        let diag = d.find(codes::SHAPE_MISMATCH).expect("TFGNN011");
+        assert_eq!(diag.path, "$.dataset.feature_dim");
+    }
+
+    #[test]
+    fn num_classes_mismatch_flagged() {
+        let (_, d) = plan_from(|s| {
+            s.replace("\"num_classes\": 4, \"init_seed\"", "\"num_classes\": 7, \"init_seed\"")
+        });
+        let diag = d.find(codes::SHAPE_MISMATCH).expect("TFGNN011");
+        assert_eq!(diag.path, "$.train.num_classes");
+    }
+
+    #[test]
+    fn small_embedding_table_is_an_error_large_a_warning() {
+        let (_, d) = plan_from(|s| s.replace("\"cardinality\": 10", "\"cardinality\": 6"));
+        let diag = d.find(codes::SHAPE_MISMATCH).expect("TFGNN011");
+        assert_eq!(diag.severity, super::super::diag::Severity::Error);
+        assert!(diag.message.contains("6 rows"), "{}", diag.message);
+
+        let (_, d) = plan_from(|s| s.replace("\"cardinality\": 10", "\"cardinality\": 30"));
+        let diag = d.find(codes::SHAPE_MISMATCH).expect("TFGNN011");
+        assert_eq!(diag.severity, super::super::diag::Severity::Warning);
+        assert!(d.is_clean(), "oversized tables must not fail the gate:\n{d}");
+    }
+
+    #[test]
+    fn component_cap_must_hold_the_batch() {
+        let (_, d) = plan_from(|s| s.replace("\"component_cap\": 5", "\"component_cap\": 4"));
+        let diag = d.find(codes::PAD_SPEC).expect("TFGNN012");
+        assert_eq!(diag.path, "$.pad.component_cap");
+    }
+
+    #[test]
+    fn missing_pad_cap_flagged() {
+        let (_, d) = plan_from(|s| s.replace("\"institution\": 16,", ""));
+        let diag = d.find(codes::PAD_SPEC).expect("TFGNN012");
+        assert_eq!(diag.path, "$.pad.node_caps");
+        assert!(diag.message.contains("institution"), "{}", diag.message);
+    }
+
+    #[test]
+    fn read_but_unsampled_edge_set_is_an_error() {
+        // Add a schema edge set the model pools but the Figure-6
+        // sampling program never expands.
+        let (_, d) = plan_from(|s| {
+            s.replace(
+                "\"cites\": [\"paper\", \"paper\"],",
+                "\"cites\": [\"paper\", \"paper\"],\n\"cocites\": [\"paper\", \"paper\"],",
+            )
+            .replace(
+                "[\"cites\", \"written\", \"has_topic\"]",
+                "[\"cites\", \"cocites\", \"written\", \"has_topic\"]",
+            )
+            .replace(
+                "\"edge_caps\": {\"cites\": 48,",
+                "\"edge_caps\": {\"cocites\": 8, \"cites\": 48,",
+            )
+        });
+        let diag = d.find(codes::DEAD_SET).expect("TFGNN013");
+        assert_eq!(diag.severity, super::super::diag::Severity::Error);
+        assert_eq!(diag.path, "$.model.updates.paper");
+        assert!(diag.message.contains("cocites"), "{}", diag.message);
+    }
+
+    #[test]
+    fn sampled_but_unread_edge_set_is_a_warning() {
+        let (_, d) = plan_from(|s| {
+            s.replace("[\"cites\", \"written\", \"has_topic\"]", "[\"cites\", \"written\"]")
+        });
+        let diag = d.find(codes::DEAD_SET).expect("TFGNN013");
+        assert_eq!(diag.severity, super::super::diag::Severity::Warning);
+        assert_eq!(diag.path, "$.sampling.sizes.has_topic");
+        assert!(d.is_clean(), "wasted fan-out must not fail the gate:\n{d}");
+    }
+
+    #[test]
+    fn non_seed_root_set_is_unreachable_readout() {
+        let (_, d) = plan_from(|s| {
+            s.replace(
+                "\"train\":",
+                "\"task\": {\"type\": \"root_classification\", \"root_set\": \"institution\"},\n\"train\":",
+            )
+        });
+        let diag = d.find(codes::UNREACHABLE_READOUT).expect("TFGNN014");
+        assert_eq!(diag.path, "$.task.root_set");
+    }
+
+    #[test]
+    fn unknown_root_set_flagged() {
+        let (_, d) = plan_from(|s| {
+            s.replace(
+                "\"train\":",
+                "\"task\": {\"type\": \"root_classification\", \"root_set\": \"venue\"},\n\"train\":",
+            )
+        });
+        let diag = d.find(codes::UNKNOWN_NODE_SET).expect("TFGNN008");
+        assert_eq!(diag.path, "$.task.root_set");
+    }
+
+    #[test]
+    fn heterogeneous_link_prediction_edge_set_flagged() {
+        let (_, d) = plan_from(|s| {
+            s.replace(
+                "\"train\":",
+                "\"task\": {\"type\": \"link_prediction\", \"edge_set\": \"written\"},\n\"train\":",
+            )
+        });
+        let diag = d.find(codes::BAD_TASK_KNOB).expect("TFGNN006");
+        assert_eq!(diag.path, "$.task.edge_set");
+        assert!(diag.message.contains("homogeneous"), "{}", diag.message);
+    }
+
+    #[test]
+    fn checkpoint_mismatches_flagged() {
+        let (plan, mut d) = plan_from(|s| s);
+        let plan = plan.expect("plan");
+        assert!(d.is_empty(), "{d}");
+        // A faithful inventory with one dropped, one renamed, and one
+        // reshaped parameter.
+        let mut ckpt: Vec<(String, HostTensor)> = plan
+            .params
+            .iter()
+            .map(|p| {
+                (
+                    format!("param.{}", p.name),
+                    HostTensor::F32(vec![p.rows, p.cols], vec![0.0; p.rows * p.cols]),
+                )
+            })
+            .collect();
+        ckpt.retain(|(n, _)| n != "param.head.b"); // missing
+        ckpt.push(("param.l9.ghost.msg.w".into(), HostTensor::F32(vec![1, 1], vec![0.0]))); // stale
+        for (n, t) in ckpt.iter_mut() {
+            if n == "param.head.w" {
+                *t = HostTensor::F32(vec![8, 9], vec![0.0; 72]); // reshaped
+            }
+        }
+        ckpt.push(("step".into(), HostTensor::I64(vec![1], vec![5]))); // ignored
+        ckpt.push(("adam_m.head.w".into(), HostTensor::F32(vec![8, 4], vec![0.0; 32]))); // ignored
+        param_pass(&plan, Some(&ckpt), &mut d);
+        let msgs: Vec<&str> = d
+            .iter()
+            .filter(|x| x.code == codes::CHECKPOINT_MISMATCH)
+            .map(|x| x.message.as_str())
+            .collect();
+        assert_eq!(msgs.len(), 3, "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("missing parameter \"head.b\"")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("stale parameter \"l9.ghost.msg.w\"")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("\"head.w\" has shape [8, 9]")), "{msgs:?}");
+    }
+
+    #[test]
+    fn matching_checkpoint_is_clean() {
+        let (plan, mut d) = plan_from(|s| s);
+        let plan = plan.expect("plan");
+        let ckpt: Vec<(String, HostTensor)> = plan
+            .params
+            .iter()
+            .map(|p| {
+                (
+                    format!("param.{}", p.name),
+                    HostTensor::F32(vec![p.rows, p.cols], vec![0.0; p.rows * p.cols]),
+                )
+            })
+            .collect();
+        param_pass(&plan, Some(&ckpt), &mut d);
+        assert!(d.is_empty(), "{d}");
+    }
+}

@@ -1,0 +1,834 @@
+//! The typed plan IR: what a config *would* build, without building it.
+//!
+//! [`ModelPlan::compile`] runs the same funnels the engine itself runs
+//! — [`ModelConfig::from_config`], [`ModelBuilder::from_config`],
+//! [`head_params`], [`mag_sampling_spec_sized`] — but instead of
+//! tensors it produces a symbolic description: per-node-set feature
+//! widths, per-edge-set endpoints, the per-layer convolution
+//! applications with their inferred input/output widths, the full
+//! expected parameter table (name → shape, exactly the names
+//! [`NativeModel::init`](crate::train::native::NativeModel::init)
+//! would create, in the same order), and the sampling plan's
+//! edge-set/node-set coverage. The passes in [`super::passes`] then
+//! check this IR without ever touching graph data.
+
+use std::collections::BTreeMap;
+
+use super::diag::{codes, Diagnostic, Diagnostics};
+use crate::layers::{ConvDims, ModelBuilder};
+use crate::ops::model_ref::ModelConfig;
+use crate::sampler::spec::mag_sampling_spec_sized;
+use crate::schema::{EdgeSetSpec, GraphSchema, Metadata, NodeSetSpec};
+use crate::util::json::Json;
+
+/// One node set's symbolic shape: its dense feature widths and/or its
+/// id-embedding cardinality.
+#[derive(Debug, Clone)]
+pub struct NodePlan {
+    pub name: String,
+    /// (feature name, per-item dim), in encoder order.
+    pub features: Vec<(String, usize)>,
+    pub id_embedding: bool,
+    pub cardinality: Option<usize>,
+}
+
+/// One edge set's endpoints (source = receiver under the
+/// rooted-subgraph convention).
+#[derive(Debug, Clone)]
+pub struct EdgePlan {
+    pub name: String,
+    pub source: String,
+    pub target: String,
+}
+
+/// One convolution application of the unrolled layer stack, with its
+/// inferred widths — the forward shape-inference record.
+#[derive(Debug, Clone)]
+pub struct ConvPlan {
+    pub layer: usize,
+    /// The updated (receiving) node set.
+    pub node_set: String,
+    pub edge_set: String,
+    /// Node-state width entering the convolution.
+    pub in_dim: usize,
+    /// Convolution output width (what the next-state MLP concatenates).
+    pub out_dim: usize,
+}
+
+/// One expected parameter tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamPlan {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// One sampling op of the derived plan.
+#[derive(Debug, Clone)]
+pub struct SampleStep {
+    pub edge_set: String,
+    pub size: usize,
+    /// Node set the op produces (the edge set's target endpoint).
+    pub produced: String,
+}
+
+/// The derived sampling plan's coverage.
+#[derive(Debug, Clone)]
+pub struct SamplePlan {
+    pub seed_node_set: String,
+    pub steps: Vec<SampleStep>,
+}
+
+impl SamplePlan {
+    /// Edge sets the plan expands through.
+    pub fn sampled_edge_sets(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.steps.iter().map(|s| s.edge_set.as_str()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Node sets reachable from the seeds under the plan.
+    pub fn reachable_node_sets(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = vec![self.seed_node_set.as_str()];
+        for s in &self.steps {
+            v.push(s.produced.as_str());
+        }
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// The padding contract of the config.
+#[derive(Debug, Clone)]
+pub struct PadPlan {
+    pub node_caps: BTreeMap<String, usize>,
+    pub edge_caps: BTreeMap<String, usize>,
+    pub component_cap: usize,
+}
+
+/// What the synthetic dataset block promises (the cross-check targets
+/// for the schema's widths).
+#[derive(Debug, Clone, Default)]
+pub struct DatasetPlan {
+    pub feature_dim: Option<usize>,
+    pub num_classes: Option<usize>,
+    pub num_institutions: Option<usize>,
+    pub num_fields: Option<usize>,
+}
+
+/// Keys every `dataset` block must carry (the synth generator's full
+/// parameter vocabulary — `Manifest::mag_config` requires all of them
+/// at run time, so their absence is a config error now, not later).
+const DATASET_KEYS: &[&str] = &[
+    "num_papers",
+    "num_authors",
+    "num_institutions",
+    "num_fields",
+    "num_classes",
+    "num_communities",
+    "feature_dim",
+    "mean_citations",
+    "mean_authors_per_paper",
+    "mean_topics",
+    "community_coherence",
+    "label_coherence",
+    "feature_noise",
+    "year_min",
+    "year_max",
+    "seed",
+];
+
+/// The compiled plan.
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    pub cfg: ModelConfig,
+    pub nodes: Vec<NodePlan>,
+    pub edges: Vec<EdgePlan>,
+    pub convs: Vec<ConvPlan>,
+    /// The full expected parameter table, in creation order — name for
+    /// name and shape for shape what `NativeModel::init` would build.
+    pub params: Vec<ParamPlan>,
+    pub sample: Option<SamplePlan>,
+    pub pad: Option<PadPlan>,
+    pub dataset: Option<DatasetPlan>,
+    pub batch_size: Option<usize>,
+}
+
+impl ModelPlan {
+    /// Compile a raw run-config document into the plan IR, collecting
+    /// diagnostics along the way. Returns `None` when the config is too
+    /// broken to plan at all (the collected diagnostics say why).
+    pub fn compile(cfg: &Json, d: &mut Diagnostics) -> Option<ModelPlan> {
+        ModelPlan::compile_inner(cfg, d, true)
+    }
+
+    /// `require_pipeline` demands the run-pipeline blocks (`sampling`,
+    /// `pad`, `dataset`, `batch_size`) on top of the model-level ones —
+    /// true for run configs, false for serve-time model checks.
+    fn compile_inner(cfg: &Json, d: &mut Diagnostics, require_pipeline: bool) -> Option<ModelPlan> {
+        if cfg.as_obj().is_err() {
+            d.push(Diagnostic::error(codes::CONFIG, "$", "config document is not a JSON object"));
+            return None;
+        }
+        let mut missing = false;
+        for key in ["schema", "model", "train"] {
+            if cfg.opt(key).is_none() {
+                d.push(Diagnostic::error(
+                    codes::CONFIG,
+                    format!("$.{key}"),
+                    format!("config is missing its {key:?} block"),
+                ));
+                missing = true;
+            }
+        }
+        if missing {
+            return None;
+        }
+        let mc = match ModelConfig::from_config(cfg) {
+            Ok(mc) => mc,
+            Err(e) => {
+                d.push(Diagnostic::from_error(&e));
+                return None;
+            }
+        };
+        let builder = match ModelBuilder::from_config(&mc) {
+            Ok(b) => b,
+            Err(e) => {
+                d.push(Diagnostic::from_error(&e));
+                return None;
+            }
+        };
+        let conv = builder.conv();
+        let dims = ConvDims { hidden: mc.hidden, message: mc.message, att: mc.att_dim };
+
+        let nodes: Vec<NodePlan> = mc
+            .node_order
+            .iter()
+            .map(|set| NodePlan {
+                name: set.clone(),
+                features: mc.features[set]
+                    .iter()
+                    .map(|f| {
+                        (f.clone(), mc.feature_dims[set].get(f).copied().unwrap_or(0))
+                    })
+                    .collect(),
+                id_embedding: mc.id_embedding.get(set).copied().unwrap_or(false),
+                cardinality: mc.cardinality.get(set).copied(),
+            })
+            .collect();
+        let edges: Vec<EdgePlan> = mc
+            .edge_endpoints
+            .iter()
+            .map(|(name, (source, target))| EdgePlan {
+                name: name.clone(),
+                source: source.clone(),
+                target: target.clone(),
+            })
+            .collect();
+        let mut endpoints_ok = true;
+        for e in &edges {
+            for (role, set) in [("source", &e.source), ("target", &e.target)] {
+                if !mc.node_order.contains(set) {
+                    d.push(Diagnostic::error(
+                        codes::UNKNOWN_NODE_SET,
+                        format!("$.schema.edge_sets.{}", e.name),
+                        format!(
+                            "edge set {:?} {role} references unknown node set {set:?}",
+                            e.name
+                        ),
+                    ));
+                    endpoints_ok = false;
+                }
+            }
+        }
+
+        // Per-layer shape inference: every convolution reads `hidden`
+        // and emits `out_dim`; the next-state MLP consumes
+        // `hidden + Σ out_dim` back down to `hidden` — exactly the
+        // width chain `NativeModel::init` bakes into its shapes.
+        let mut convs = Vec::new();
+        let mut params = Vec::new();
+        for node in &nodes {
+            if !node.features.is_empty() {
+                for (fname, dim) in &node.features {
+                    params.push(ParamPlan {
+                        name: format!("enc.{}.{fname}.w", node.name),
+                        rows: *dim,
+                        cols: mc.hidden,
+                    });
+                }
+                params.push(ParamPlan {
+                    name: format!("enc.{}.{}.b", node.name, node.features[0].0),
+                    rows: 1,
+                    cols: mc.hidden,
+                });
+            } else if node.id_embedding {
+                if let Some(card) = node.cardinality {
+                    params.push(ParamPlan {
+                        name: format!("emb.{}", node.name),
+                        rows: card,
+                        cols: mc.hidden,
+                    });
+                }
+                // A missing cardinality is the shape pass's diagnostic.
+            }
+        }
+        for layer in 0..mc.layers {
+            for (node_set, edge_list) in &mc.updates {
+                let mut edge_names: Vec<&String> = edge_list.iter().collect();
+                edge_names.sort();
+                for es in &edge_names {
+                    convs.push(ConvPlan {
+                        layer,
+                        node_set: node_set.clone(),
+                        edge_set: (*es).clone(),
+                        in_dim: mc.hidden,
+                        out_dim: conv.out_dim(dims),
+                    });
+                    for shape in conv.param_shapes(dims) {
+                        params.push(ParamPlan {
+                            name: format!("l{layer}.{node_set}.{es}.{}", shape.suffix),
+                            rows: shape.rows,
+                            cols: shape.cols,
+                        });
+                    }
+                }
+                let in_dim = mc.hidden + edge_names.len() * conv.out_dim(dims);
+                params.push(ParamPlan {
+                    name: format!("l{layer}.{node_set}.next.w"),
+                    rows: in_dim,
+                    cols: mc.hidden,
+                });
+                params.push(ParamPlan {
+                    name: format!("l{layer}.{node_set}.next.b"),
+                    rows: 1,
+                    cols: mc.hidden,
+                });
+            }
+        }
+        match crate::tasks::head_params(&mc) {
+            Ok(head) => {
+                for hp in head {
+                    params.push(ParamPlan {
+                        name: hp.name.to_string(),
+                        rows: hp.rows,
+                        cols: hp.cols,
+                    });
+                }
+            }
+            Err(e) => d.push(Diagnostic::from_error(&e)),
+        }
+
+        if !require_pipeline {
+            return Some(ModelPlan {
+                cfg: mc,
+                nodes,
+                edges,
+                convs,
+                params,
+                sample: None,
+                pad: None,
+                dataset: None,
+                batch_size: None,
+            });
+        }
+        let sample = if endpoints_ok {
+            derive_sample_plan(cfg, &mc, d)
+        } else {
+            None
+        };
+        let pad = compile_pad(cfg, d);
+        let dataset = compile_dataset(cfg, d);
+        let batch_size = match cfg.opt("batch_size") {
+            Some(v) => match v.as_usize() {
+                Ok(0) => {
+                    d.push(Diagnostic::error(
+                        codes::BAD_DIM,
+                        "$.batch_size",
+                        "batch_size is 0",
+                    ));
+                    None
+                }
+                Ok(b) => Some(b),
+                Err(_) => {
+                    d.push(Diagnostic::error(
+                        codes::CONFIG,
+                        "$.batch_size",
+                        "batch_size must be a positive integer",
+                    ));
+                    None
+                }
+            },
+            None => {
+                d.push(Diagnostic::error(
+                    codes::CONFIG,
+                    "$.batch_size",
+                    "config is missing batch_size",
+                ));
+                None
+            }
+        };
+
+        Some(ModelPlan { cfg: mc, nodes, edges, convs, params, sample, pad, dataset, batch_size })
+    }
+
+    /// Plan IR for an already-parsed [`ModelConfig`] — the raw document
+    /// is gone by serve time, so this compiles the model-level subset
+    /// (no sampling/pad/dataset cross-checks).
+    pub fn compile_model_only(mc: &ModelConfig, d: &mut Diagnostics) -> Option<ModelPlan> {
+        let doc = model_config_as_json(mc);
+        ModelPlan::compile_inner(&doc, d, false)
+    }
+}
+
+/// Re-render a parsed [`ModelConfig`] as a minimal config document so
+/// the one compile path serves both entry points. Sampling, pad and
+/// dataset blocks are absent on purpose: serve-time checks are
+/// model-level only.
+fn model_config_as_json(mc: &ModelConfig) -> Json {
+    use crate::util::json::obj;
+    let mut node_sets = BTreeMap::new();
+    for set in &mc.node_order {
+        let mut m = BTreeMap::new();
+        let dims = &mc.feature_dims[set];
+        if !dims.is_empty() {
+            m.insert(
+                "features".to_string(),
+                Json::Obj(
+                    dims.iter().map(|(k, v)| (k.clone(), Json::Int(*v as i64))).collect(),
+                ),
+            );
+        }
+        if mc.id_embedding.get(set).copied().unwrap_or(false) {
+            m.insert("id_embedding".to_string(), Json::Bool(true));
+        }
+        if let Some(c) = mc.cardinality.get(set) {
+            m.insert("cardinality".to_string(), Json::Int(*c as i64));
+        }
+        node_sets.insert(set.clone(), Json::Obj(m));
+    }
+    let edge_sets: BTreeMap<String, Json> = mc
+        .edge_endpoints
+        .iter()
+        .map(|(k, (s, t))| {
+            (k.clone(), Json::Arr(vec![Json::Str(s.clone()), Json::Str(t.clone())]))
+        })
+        .collect();
+    let updates: BTreeMap<String, Json> = mc
+        .updates
+        .iter()
+        .map(|(k, v)| {
+            (k.clone(), Json::Arr(v.iter().map(|e| Json::Str(e.clone())).collect()))
+        })
+        .collect();
+    let t = &mc.task;
+    obj(vec![
+        (
+            "schema",
+            obj(vec![
+                ("node_sets", Json::Obj(node_sets)),
+                ("edge_sets", Json::Obj(edge_sets)),
+            ]),
+        ),
+        (
+            "model",
+            obj(vec![
+                ("type", Json::Str(mc.arch.clone())),
+                ("hidden_dim", Json::Int(mc.hidden as i64)),
+                ("message_dim", Json::Int(mc.message as i64)),
+                ("att_dim", Json::Int(mc.att_dim as i64)),
+                ("sage_reduce", Json::Str(mc.sage_reduce.clone())),
+                ("num_layers", Json::Int(mc.layers as i64)),
+                ("updates", Json::Obj(updates)),
+            ]),
+        ),
+        ("train", obj(vec![("num_classes", Json::Int(mc.num_classes as i64))])),
+        (
+            "task",
+            obj(vec![
+                ("type", Json::Str(t.kind.clone())),
+                ("root_set", Json::Str(t.root_set.clone())),
+                ("label_feature", Json::Str(t.label_feature.clone())),
+                ("edge_set", Json::Str(t.edge_set.clone())),
+                ("readout", Json::Str(t.readout.clone())),
+                ("loss", Json::Str(t.loss.clone())),
+                ("margin", Json::Num(t.margin as f64)),
+                ("negatives", Json::Int(t.negatives as i64)),
+                ("hits_k", Json::Int(t.hits_k as i64)),
+                ("holdout_fraction", Json::Num(t.holdout_fraction)),
+                ("split_seed", Json::Int(t.split_seed as i64)),
+                ("mlp_dim", Json::Int(t.mlp_dim as i64)),
+                ("target_feature", Json::Str(t.target_feature.clone())),
+                ("target_shift", Json::Num(t.target_shift as f64)),
+                ("target_scale", Json::Num(t.target_scale as f64)),
+            ]),
+        ),
+        ("batch_size", Json::Int(1)),
+    ])
+}
+
+/// Derive the sampling plan the runner would build: the Figure-6
+/// program over a minimal schema, sized by `$.sampling.sizes` — the
+/// exact derivation `run_native` performs, so a failure here is a
+/// failure there.
+fn derive_sample_plan(cfg: &Json, mc: &ModelConfig, d: &mut Diagnostics) -> Option<SamplePlan> {
+    let Some(sampling) = cfg.opt("sampling") else {
+        d.push(Diagnostic::error(
+            codes::CONFIG,
+            "$.sampling",
+            "config is missing its \"sampling\" block",
+        ));
+        return None;
+    };
+    let Some(sizes_json) = sampling.opt("sizes") else {
+        d.push(Diagnostic::error(
+            codes::CONFIG,
+            "$.sampling.sizes",
+            "sampling block is missing its \"sizes\" map",
+        ));
+        return None;
+    };
+    let Ok(sizes_obj) = sizes_json.as_obj() else {
+        d.push(Diagnostic::error(
+            codes::CONFIG,
+            "$.sampling.sizes",
+            "sampling.sizes must be an object of per-edge-set fan-outs",
+        ));
+        return None;
+    };
+    let mut sizes: BTreeMap<String, usize> = BTreeMap::new();
+    let mut bad = false;
+    for (es, v) in sizes_obj {
+        let path = format!("$.sampling.sizes.{es}");
+        match v.as_usize() {
+            Ok(0) => {
+                d.push(Diagnostic::error(
+                    codes::SAMPLING_SPEC,
+                    path,
+                    format!("sampling size for edge set {es:?} is 0"),
+                ));
+                bad = true;
+            }
+            Ok(k) => {
+                if !mc.edge_endpoints.contains_key(es) {
+                    d.push(Diagnostic::warning(
+                        codes::SAMPLING_SPEC,
+                        path,
+                        format!("sampling size for edge set {es:?} not in the schema"),
+                    ));
+                }
+                sizes.insert(es.clone(), k);
+            }
+            Err(_) => {
+                d.push(Diagnostic::error(
+                    codes::SAMPLING_SPEC,
+                    path,
+                    format!("sampling size for edge set {es:?} must be a positive integer"),
+                ));
+                bad = true;
+            }
+        }
+    }
+    if bad {
+        return None;
+    }
+    // A minimal schema: just enough structure for spec derivation.
+    let mut schema = GraphSchema::default();
+    for set in &mc.node_order {
+        schema = schema.with_node_set(set, NodeSetSpec::default());
+    }
+    for (name, (source, target)) in &mc.edge_endpoints {
+        schema = schema.with_edge_set(
+            name,
+            EdgeSetSpec {
+                source: source.clone(),
+                target: target.clone(),
+                features: BTreeMap::new(),
+                metadata: Metadata::default(),
+            },
+        );
+    }
+    match mag_sampling_spec_sized(&schema, &sizes) {
+        Ok(spec) => {
+            let steps = spec
+                .ops
+                .iter()
+                .map(|op| {
+                    let produced = schema
+                        .edge_sets
+                        .get(&op.edge_set)
+                        .map(|e| e.target.clone())
+                        .unwrap_or_default();
+                    SampleStep { edge_set: op.edge_set.clone(), size: op.sample_size, produced }
+                })
+                .collect();
+            Some(SamplePlan { seed_node_set: spec.seed_node_set, steps })
+        }
+        Err(e) => {
+            d.push(
+                Diagnostic::error(
+                    codes::SAMPLING_SPEC,
+                    "$.sampling.sizes",
+                    format!("sampling plan does not compose over this schema: {e}"),
+                )
+                .with_hint(
+                    "the runner derives the paper's Figure-6 program (seed paper, \
+                     expand cites/written/writes/affiliated_with/has_topic); every \
+                     edge set it expands needs a fan-out size and matching endpoints",
+                ),
+            );
+            None
+        }
+    }
+}
+
+fn compile_pad(cfg: &Json, d: &mut Diagnostics) -> Option<PadPlan> {
+    let Some(pad) = cfg.opt("pad") else {
+        d.push(Diagnostic::error(
+            codes::CONFIG,
+            "$.pad",
+            "config is missing its \"pad\" block",
+        ));
+        return None;
+    };
+    let caps = |key: &str, d: &mut Diagnostics| -> Option<BTreeMap<String, usize>> {
+        let path = format!("$.pad.{key}");
+        match pad.opt(key) {
+            None => {
+                d.push(Diagnostic::error(
+                    codes::PAD_SPEC,
+                    path,
+                    format!("pad block is missing {key:?}"),
+                ));
+                None
+            }
+            Some(v) => match v.as_obj() {
+                Ok(m) => {
+                    let mut out = BTreeMap::new();
+                    for (set, cap) in m {
+                        match cap.as_usize() {
+                            Ok(c) => {
+                                out.insert(set.clone(), c);
+                            }
+                            Err(_) => d.push(Diagnostic::error(
+                                codes::PAD_SPEC,
+                                format!("{path}.{set}"),
+                                format!("pad cap for {set:?} must be a non-negative integer"),
+                            )),
+                        }
+                    }
+                    Some(out)
+                }
+                Err(_) => {
+                    d.push(Diagnostic::error(
+                        codes::PAD_SPEC,
+                        path,
+                        format!("pad.{key} must be an object of per-set caps"),
+                    ));
+                    None
+                }
+            },
+        }
+    };
+    let node_caps = caps("node_caps", d);
+    let edge_caps = caps("edge_caps", d);
+    let component_cap = match pad.opt("component_cap").map(|v| v.as_usize()) {
+        Some(Ok(c)) => Some(c),
+        Some(Err(_)) => {
+            d.push(Diagnostic::error(
+                codes::PAD_SPEC,
+                "$.pad.component_cap",
+                "pad.component_cap must be a positive integer",
+            ));
+            None
+        }
+        None => {
+            d.push(Diagnostic::error(
+                codes::PAD_SPEC,
+                "$.pad.component_cap",
+                "pad block is missing \"component_cap\"",
+            ));
+            None
+        }
+    };
+    Some(PadPlan {
+        node_caps: node_caps?,
+        edge_caps: edge_caps?,
+        component_cap: component_cap?,
+    })
+}
+
+fn compile_dataset(cfg: &Json, d: &mut Diagnostics) -> Option<DatasetPlan> {
+    let Some(ds) = cfg.opt("dataset") else {
+        d.push(Diagnostic::error(
+            codes::CONFIG,
+            "$.dataset",
+            "config is missing its \"dataset\" block",
+        ));
+        return None;
+    };
+    for key in DATASET_KEYS {
+        if ds.opt(key).is_none() {
+            d.push(Diagnostic::error(
+                codes::CONFIG,
+                format!("$.dataset.{key}"),
+                format!("dataset block is missing {key:?}"),
+            ));
+        }
+    }
+    let u = |key: &str| ds.opt(key).and_then(|v| v.as_usize().ok());
+    Some(DatasetPlan {
+        feature_dim: u("feature_dim"),
+        num_classes: u("num_classes"),
+        num_institutions: u("num_institutions"),
+        num_fields: u("num_fields"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::native::NativeModel;
+
+    fn shipped_like_config() -> Json {
+        // Structurally identical to configs/mag_small.json, tiny dims.
+        Json::parse(
+            r#"{
+            "name": "plan_test", "batch_size": 4,
+            "dataset": {
+                "num_papers": 80, "num_authors": 60, "num_institutions": 10,
+                "num_fields": 12, "num_classes": 4, "num_communities": 4,
+                "feature_dim": 16, "mean_citations": 3.0,
+                "mean_authors_per_paper": 2.0, "mean_topics": 2.0,
+                "community_coherence": 0.9, "label_coherence": 0.9,
+                "feature_noise": 0.5, "year_min": 2010, "year_max": 2014,
+                "seed": 7
+            },
+            "schema": {
+                "node_sets": {
+                    "paper": {"features": {"feat": 16}},
+                    "author": {},
+                    "institution": {"id_embedding": true, "cardinality": 10},
+                    "field_of_study": {"id_embedding": true, "cardinality": 12}
+                },
+                "edge_sets": {
+                    "cites": ["paper", "paper"],
+                    "written": ["paper", "author"],
+                    "writes": ["author", "paper"],
+                    "affiliated_with": ["author", "institution"],
+                    "has_topic": ["paper", "field_of_study"]
+                }
+            },
+            "sampling": {
+                "plan_seed": 42,
+                "sizes": {"cites": 3, "written": 2, "writes": 2,
+                          "affiliated_with": 2, "has_topic": 2}
+            },
+            "pad": {
+                "node_caps": {"paper": 64, "author": 48, "institution": 16,
+                              "field_of_study": 32},
+                "edge_caps": {"cites": 48, "written": 48, "writes": 48,
+                              "affiliated_with": 48, "has_topic": 64},
+                "component_cap": 5
+            },
+            "model": {
+                "type": "mpnn", "hidden_dim": 8, "message_dim": 8,
+                "num_layers": 2,
+                "updates": {
+                    "paper": ["cites", "written", "has_topic"],
+                    "author": ["writes", "affiliated_with"]
+                }
+            },
+            "train": {"num_classes": 4, "init_seed": 3, "learning_rate": 0.001,
+                      "weight_decay": 0.0, "adam_beta1": 0.9, "adam_beta2": 0.999,
+                      "adam_eps": 1e-8, "epochs": 1}
+        }"#,
+        )
+        .expect("test config parses")
+    }
+
+    #[test]
+    fn clean_config_compiles_without_diagnostics() {
+        let mut d = Diagnostics::default();
+        let plan = ModelPlan::compile(&shipped_like_config(), &mut d);
+        assert!(d.is_empty(), "unexpected diagnostics:\n{d}");
+        let plan = plan.expect("plan");
+        assert_eq!(plan.batch_size, Some(4));
+        assert_eq!(plan.pad.as_ref().map(|p| p.component_cap), Some(5));
+        let sample = plan.sample.as_ref().expect("sample plan");
+        assert_eq!(sample.seed_node_set, "paper");
+        assert_eq!(
+            sample.sampled_edge_sets(),
+            vec!["affiliated_with", "cites", "has_topic", "writes", "written"]
+        );
+        assert_eq!(
+            sample.reachable_node_sets(),
+            vec!["author", "field_of_study", "institution", "paper"]
+        );
+        // 2 layers × (paper: 3 convs + author: 2 convs) applications.
+        assert_eq!(plan.convs.len(), 10);
+        assert!(plan.convs.iter().all(|c| c.in_dim == 8 && c.out_dim == 8));
+    }
+
+    #[test]
+    fn param_table_matches_native_model_init_exactly() {
+        let cfg = shipped_like_config();
+        let mut d = Diagnostics::default();
+        let plan = ModelPlan::compile(&cfg, &mut d).expect("plan");
+        assert!(d.is_empty(), "{d}");
+        let model = NativeModel::init(ModelConfig::from_config(&cfg).expect("cfg"), 3)
+            .expect("model");
+        let expected: Vec<ParamPlan> = model
+            .names
+            .iter()
+            .zip(&model.params)
+            .map(|(n, p)| ParamPlan { name: n.clone(), rows: p.rows, cols: p.cols })
+            .collect();
+        assert_eq!(plan.params, expected);
+    }
+
+    #[test]
+    fn model_only_compile_covers_the_zoo() {
+        let mc = ModelConfig::for_mag(&crate::synth::mag::MagConfig::tiny(), 8, 8, 1);
+        for arch in ["mpnn", "gcn", "sage", "gatv2"] {
+            let mc = mc.clone().with_arch(arch);
+            let mut d = Diagnostics::default();
+            let plan = ModelPlan::compile_model_only(&mc, &mut d);
+            assert!(d.is_empty(), "{arch}:\n{d}");
+            let plan = plan.expect("plan");
+            let model = NativeModel::init(mc, 3).expect("model");
+            assert_eq!(
+                plan.params.iter().map(|p| p.name.as_str()).collect::<Vec<_>>(),
+                model.names.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+                "{arch}"
+            );
+        }
+    }
+
+    #[test]
+    fn missing_blocks_are_config_errors() {
+        let mut d = Diagnostics::default();
+        assert!(ModelPlan::compile(&Json::parse("{}").expect("json"), &mut d).is_none());
+        assert!(d.find(codes::CONFIG).is_some());
+        assert!(d.has_errors());
+        let paths: Vec<&str> = d.iter().map(|x| x.path.as_str()).collect();
+        assert!(paths.contains(&"$.schema"), "{paths:?}");
+        assert!(paths.contains(&"$.model"), "{paths:?}");
+        assert!(paths.contains(&"$.train"), "{paths:?}");
+    }
+
+    #[test]
+    fn dangling_endpoint_is_unknown_node_set() {
+        let text = shipped_like_config()
+            .to_string()
+            .replace("\"written\":[\"paper\",\"author\"]", "\"written\":[\"paper\",\"reviewer\"]");
+        let cfg = Json::parse(&text).expect("json");
+        let mut d = Diagnostics::default();
+        let _ = ModelPlan::compile(&cfg, &mut d);
+        let diag = d.find(codes::UNKNOWN_NODE_SET).expect("TFGNN008");
+        assert_eq!(diag.path, "$.schema.edge_sets.written");
+        assert!(diag.message.contains("reviewer"), "{}", diag.message);
+    }
+}

@@ -93,7 +93,9 @@ pub fn run_sampling(
     let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
     let (res_tx, res_rx) = channel::<(WorkItem, Result<(Vec<GraphTensor>, SampleStats)>)>();
     for item in items {
-        work_tx.send(item).expect("queue open");
+        work_tx
+            .send(item)
+            .map_err(|_| Error::Sampler("work queue closed before the job started".into()))?;
     }
 
     let crash_counter = Arc::new(AtomicU64::new(0));
@@ -106,43 +108,42 @@ pub fn run_sampling(
         let spec = Arc::clone(&spec);
         let crash_counter = Arc::clone(&crash_counter);
         let cfg = cfg.clone();
-        workers.push(
-            std::thread::Builder::new()
-                .name(format!("tfgnn-sampler-{w}"))
-                .spawn(move || loop {
-                    let item = {
-                        let rx = work_rx.lock().unwrap();
-                        rx.recv()
-                    };
-                    let Ok(item) = item else { break };
-                    // Simulated crash: the worker abandons the item.
-                    if cfg.worker_crash_rate > 0.0 {
-                        let n = crash_counter.fetch_add(1, Ordering::Relaxed);
-                        let r = mix64(cfg.crash_seed, n) as f64 / u64::MAX as f64;
-                        if r < cfg.worker_crash_rate {
-                            let idx = item.index;
-                            if res_tx
-                                .send((
-                                    item,
-                                    Err(Error::Sampler(format!(
-                                        "worker {w} crashed on item {idx} (injected)"
-                                    ))),
-                                ))
-                                .is_err()
-                            {
-                                break;
-                            }
-                            continue;
+        let worker = std::thread::Builder::new()
+            .name(format!("tfgnn-sampler-{w}"))
+            .spawn(move || loop {
+                let item = {
+                    let rx =
+                        work_rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                    rx.recv()
+                };
+                let Ok(item) = item else { break };
+                // Simulated crash: the worker abandons the item.
+                if cfg.worker_crash_rate > 0.0 {
+                    let n = crash_counter.fetch_add(1, Ordering::Relaxed);
+                    let r = mix64(cfg.crash_seed, n) as f64 / u64::MAX as f64;
+                    if r < cfg.worker_crash_rate {
+                        let idx = item.index;
+                        if res_tx
+                            .send((
+                                item,
+                                Err(Error::Sampler(format!(
+                                    "worker {w} crashed on item {idx} (injected)"
+                                ))),
+                            ))
+                            .is_err()
+                        {
+                            break;
                         }
+                        continue;
                     }
-                    let result =
-                        sample_batch(&store, &spec, plan_seed, &item.seeds, &cfg.rpc_retry);
-                    if res_tx.send((item, result)).is_err() {
-                        break;
-                    }
-                })
-                .expect("spawn sampler worker"),
-        );
+                }
+                let result =
+                    sample_batch(&store, &spec, plan_seed, &item.seeds, &cfg.rpc_retry);
+                if res_tx.send((item, result)).is_err() {
+                    break;
+                }
+            })?;
+        workers.push(worker);
     }
     drop(res_tx);
 
@@ -186,7 +187,9 @@ pub fn run_sampling(
                     )));
                 }
                 report.requeues += 1;
-                work_tx.send(item).expect("queue open");
+                work_tx.send(item).map_err(|_| {
+                    Error::Sampler("work queue closed while requeueing a failed item".into())
+                })?;
             }
         }
     }

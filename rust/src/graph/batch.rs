@@ -275,7 +275,7 @@ mod tests {
 
     #[test]
     fn merge_two_recsys_graphs() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let merged = merge(&[g.clone(), g.clone()]).unwrap();
         assert_eq!(merged.num_components, 2);
         assert_eq!(merged.num_nodes("items").unwrap(), 12);
@@ -294,7 +294,7 @@ mod tests {
 
     #[test]
     fn merge_then_split_roundtrips() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let merged = merge(&[g.clone(), g.clone(), g.clone()]).unwrap();
         let parts = split(&merged).unwrap();
         assert_eq!(parts.len(), 3);
@@ -305,7 +305,7 @@ mod tests {
 
     #[test]
     fn merge_single_is_identity_modulo_components() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let merged = merge(&[g.clone()]).unwrap();
         assert_eq!(merged, g);
     }
@@ -398,7 +398,7 @@ mod tests {
 
     #[test]
     fn ragged_features_merge() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let merged = merge(&[g.clone(), g]).unwrap();
         let price = merged.node_set("items").unwrap().feature("price").unwrap();
         assert_eq!(price.len(), 12);

@@ -107,7 +107,7 @@ impl<'a> Dec<'a> {
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(arr(self.take(8)?)))
     }
 
     fn len(&mut self) -> Result<usize> {
@@ -128,19 +128,19 @@ impl<'a> Dec<'a> {
     fn u32_vec(&mut self) -> Result<Vec<u32>> {
         let n = self.len()?;
         let bytes = self.take(n * 4)?;
-        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(arr(c))).collect())
     }
 
     fn f32_vec(&mut self) -> Result<Vec<f32>> {
         let n = self.len()?;
         let bytes = self.take(n * 4)?;
-        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(arr(c))).collect())
     }
 
     fn i64_vec(&mut self) -> Result<Vec<i64>> {
         let n = self.len()?;
         let bytes = self.take(n * 8)?;
-        Ok(bytes.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(bytes.chunks_exact(8).map(|c| i64::from_le_bytes(arr(c))).collect())
     }
 
     fn str(&mut self) -> Result<String> {
@@ -148,6 +148,14 @@ impl<'a> Dec<'a> {
         let bytes = self.take(n)?;
         String::from_utf8(bytes.to_vec()).map_err(|_| self.err("invalid UTF-8"))
     }
+}
+
+/// Fixed-size copy of an exact-length chunk. `take`/`chunks_exact`
+/// guarantee the length, so no fallible `try_into` is needed.
+fn arr<const N: usize>(c: &[u8]) -> [u8; N] {
+    let mut a = [0u8; N];
+    a.copy_from_slice(c);
+    a
 }
 
 fn checksum(payload: &[u8]) -> u32 {
@@ -490,7 +498,7 @@ mod tests {
 
     #[test]
     fn encode_decode_recsys() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let bytes = encode_graph(&g);
         let g2 = decode_graph(&bytes).unwrap();
         assert_eq!(g, g2);
@@ -508,7 +516,7 @@ mod tests {
     #[test]
     fn shard_write_read_roundtrip() {
         let dir = tmpdir("rw");
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let path = dir.join("x.gts");
         let mut w = ShardWriter::create(&path).unwrap();
         for _ in 0..5 {
@@ -527,7 +535,7 @@ mod tests {
         let dir = tmpdir("corrupt");
         let path = dir.join("x.gts");
         let mut w = ShardWriter::create(&path).unwrap();
-        w.write(&recsys_example_graph()).unwrap();
+        w.write(&recsys_example_graph().unwrap()).unwrap();
         w.finish().unwrap();
         // Flip a byte in the payload area.
         let mut bytes = std::fs::read(&path).unwrap();
@@ -544,7 +552,7 @@ mod tests {
         let dir = tmpdir("trunc");
         let path = dir.join("x.gts");
         let mut w = ShardWriter::create(&path).unwrap();
-        w.write(&recsys_example_graph()).unwrap();
+        w.write(&recsys_example_graph().unwrap()).unwrap();
         w.finish().unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
@@ -561,13 +569,13 @@ mod tests {
         let dir = tmpdir("trunc-mid");
         let path = dir.join("x.gts");
         let mut w = ShardWriter::create(&path).unwrap();
-        w.write(&recsys_example_graph()).unwrap();
-        w.write(&recsys_example_graph()).unwrap();
+        w.write(&recsys_example_graph().unwrap()).unwrap();
+        w.write(&recsys_example_graph().unwrap()).unwrap();
         w.finish().unwrap();
         let bytes = std::fs::read(&path).unwrap();
         // Cut into the middle of the *second* record's payload: the
         // first record must still read cleanly.
-        let first_payload = encode_graph(&recsys_example_graph()).len();
+        let first_payload = encode_graph(&recsys_example_graph().unwrap()).len();
         let cut = 4 + 12 + first_payload + 12 + first_payload / 2;
         assert!(cut < bytes.len());
         std::fs::write(&path, &bytes[..cut]).unwrap();
@@ -591,7 +599,7 @@ mod tests {
         let dir = tmpdir("bad-len");
         let path = dir.join("x.gts");
         let mut w = ShardWriter::create(&path).unwrap();
-        w.write(&recsys_example_graph()).unwrap();
+        w.write(&recsys_example_graph().unwrap()).unwrap();
         w.finish().unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         // The u64 length field sits right after the 4-byte magic;
@@ -632,7 +640,7 @@ mod tests {
     #[test]
     fn shardset_roundrobin_and_discover() {
         let dir = tmpdir("set");
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let graphs = (0..10).map(|_| g.clone());
         let set = ShardSet::write_all(&dir, "train", 3, graphs).unwrap();
         assert_eq!(set.paths.len(), 3);

@@ -176,7 +176,9 @@ pub fn pad(graph: &GraphTensor, spec: &PadSpec) -> Result<Padded> {
 /// caps. Callers count skips (a training-quality metric in the Runner).
 pub fn fit_or_skip(graph: &GraphTensor, spec: &PadSpec) -> Option<Padded> {
     if fits(graph, spec) {
-        Some(pad(graph, spec).expect("fits() implies pad() succeeds"))
+        // fits() implies pad() succeeds; a failure (impossible by
+        // construction) degrades to a counted skip, never a panic.
+        pad(graph, spec).ok()
     } else {
         None
     }
@@ -204,11 +206,11 @@ fn pad_feature(f: &mut Feature, extra: usize) -> Result<()> {
             data.extend(std::iter::repeat(String::new()).take(extra));
         }
         Feature::RaggedF32 { row_splits, .. } => {
-            let last = *row_splits.last().unwrap();
+            let last = row_splits.last().copied().unwrap_or(0);
             row_splits.extend(std::iter::repeat(last).take(extra));
         }
         Feature::RaggedI64 { row_splits, .. } => {
-            let last = *row_splits.last().unwrap();
+            let last = row_splits.last().copied().unwrap_or(0);
             row_splits.extend(std::iter::repeat(last).take(extra));
         }
     }
@@ -232,7 +234,7 @@ mod tests {
 
     #[test]
     fn pad_reaches_exact_caps() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let p = pad(&g, &recsys_spec()).unwrap();
         assert_eq!(p.graph.num_nodes("items").unwrap(), 10);
         assert_eq!(p.graph.num_nodes("users").unwrap(), 8);
@@ -244,7 +246,7 @@ mod tests {
 
     #[test]
     fn masks_mark_real_items() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let p = pad(&g, &recsys_spec()).unwrap();
         let m = &p.node_mask["items"];
         assert_eq!(m.len(), 10);
@@ -257,7 +259,7 @@ mod tests {
 
     #[test]
     fn padding_edges_stay_in_padding_component() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let p = pad(&g, &recsys_spec()).unwrap();
         // validate() enforces the component invariant; also check sink.
         p.graph.validate().unwrap();
@@ -270,7 +272,7 @@ mod tests {
 
     #[test]
     fn unpad_is_lossless() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let p = pad(&g, &recsys_spec()).unwrap();
         let back = unpad(&p).unwrap();
         assert_eq!(back, g);
@@ -278,7 +280,7 @@ mod tests {
 
     #[test]
     fn oversized_graph_skipped() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let tight = PadSpec {
             node_caps: [("items".to_string(), 6), ("users".to_string(), 8)].into(),
             edge_caps: [("purchased".to_string(), 12), ("is-friend".to_string(), 6)].into(),
@@ -291,7 +293,7 @@ mod tests {
 
     #[test]
     fn missing_cap_fails() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let mut spec = recsys_spec();
         spec.node_caps.remove("users");
         assert!(!fits(&g, &spec));
@@ -299,7 +301,7 @@ mod tests {
 
     #[test]
     fn context_padded_per_component() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let p = pad(&g, &recsys_spec()).unwrap();
         let scores = p.graph.context.feature("scores").unwrap();
         let (_, data) = scores.as_f32().unwrap();

@@ -594,7 +594,7 @@ mod tests {
 
     #[test]
     fn recsys_graph_validates_and_matches_schema() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         assert_eq!(g.num_components, 1);
         assert_eq!(g.num_nodes("items").unwrap(), 6);
         assert_eq!(g.num_nodes("users").unwrap(), 4);
@@ -606,7 +606,7 @@ mod tests {
     fn a1_worked_example_indices() {
         // "the fifth values of purchased/#source and #target are [4, 2]
         //  which link together 'flight' and 'Yumiko'" (A.1).
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let es = g.edge_set("purchased").unwrap();
         assert_eq!(es.adjacency.source[4], 4);
         assert_eq!(es.adjacency.target[4], 2);
@@ -618,7 +618,7 @@ mod tests {
 
     #[test]
     fn ragged_feature_rows() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let price = g.node_set("items").unwrap().feature("price").unwrap();
         assert_eq!(price.len(), 6);
         assert_eq!(price.ragged_row_f32(0).unwrap(), &[22.34, 23.42, 12.99]);
@@ -628,7 +628,7 @@ mod tests {
 
     #[test]
     fn out_of_range_edge_index_rejected() {
-        let mut g = recsys_example_graph();
+        let mut g = recsys_example_graph().unwrap();
         g.edge_sets.get_mut("purchased").unwrap().adjacency.target[0] = 99;
         assert!(g.validate().is_err());
     }
@@ -688,7 +688,7 @@ mod tests {
 
     #[test]
     fn replace_features_keeps_validation() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         // A.3: materialize "latest_price" = first price entry per item.
         let price = g.node_set("items").unwrap().feature("price").unwrap().clone();
         let latest: Vec<f32> = (0..6).map(|i| price.ragged_row_f32(i).unwrap()[0]).collect();
@@ -714,7 +714,7 @@ mod tests {
 
     #[test]
     fn approx_bytes_positive() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         assert!(g.approx_bytes() > 100);
     }
 }

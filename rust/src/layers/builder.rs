@@ -5,13 +5,16 @@
 //! subsystem's structural invariants are enforced — unknown `type`,
 //! zero `num_layers`, zero widths, and updates that pool an edge set
 //! whose SOURCE endpoint is not the updated node set are all
-//! structured [`Error::Schema`]s, never panics (property-tested
+//! structured [`crate::Error::Schema`]s — each tagged with a stable
+//! `TFGNN0xx` code and JSON path via
+//! [`crate::analysis::diag::Diagnostic`] — never panics (property-tested
 //! below). [`NativeModel::init`](crate::train::native::NativeModel::init)
 //! funnels through it, so every entry point — `tfgnn train --engine
 //! native --config`, serving, tests, benches — gets the same checks.
 
+use crate::analysis::diag::{codes, Diagnostic};
 use crate::ops::model_ref::ModelConfig;
-use crate::{Error, Result};
+use crate::Result;
 
 use super::{ConvKind, Convolution};
 
@@ -26,20 +29,31 @@ impl ModelBuilder {
     pub fn from_config(cfg: &ModelConfig) -> Result<ModelBuilder> {
         let kind = ConvKind::parse(&cfg.arch, &cfg.sage_reduce)?;
         if cfg.layers == 0 {
-            return Err(Error::Schema(
-                "model.num_layers is 0 — a GraphUpdate stack needs at least one round".into(),
-            ));
+            return Err(Diagnostic::error(
+                codes::BAD_DIM,
+                "$.model.num_layers",
+                "model.num_layers is 0 — a GraphUpdate stack needs at least one round",
+            )
+            .into_error());
         }
         if cfg.hidden == 0 || cfg.message == 0 {
-            return Err(Error::Schema(format!(
-                "model widths must be positive (hidden_dim {}, message_dim {})",
-                cfg.hidden, cfg.message
-            )));
+            return Err(Diagnostic::error(
+                codes::BAD_DIM,
+                "$.model.hidden_dim",
+                format!(
+                    "model widths must be positive (hidden_dim {}, message_dim {})",
+                    cfg.hidden, cfg.message
+                ),
+            )
+            .into_error());
         }
         if kind == ConvKind::Gatv2 && cfg.att_dim == 0 {
-            return Err(Error::Schema(
-                "model.att_dim is 0 — the gatv2 scorer needs a positive width".into(),
-            ));
+            return Err(Diagnostic::error(
+                codes::BAD_DIM,
+                "$.model.att_dim",
+                "model.att_dim is 0 — the gatv2 scorer needs a positive width",
+            )
+            .into_error());
         }
         // Receiver-is-SOURCE convention: every updated node set must be
         // the SOURCE endpoint of each edge set it pools — exactly once
@@ -49,18 +63,31 @@ impl ModelBuilder {
             let mut seen = std::collections::BTreeSet::new();
             for es in edges {
                 if !seen.insert(es.as_str()) {
-                    return Err(Error::Schema(format!(
-                        "update for {node_set:?} pools edge set {es:?} twice"
-                    )));
+                    return Err(Diagnostic::error(
+                        codes::DUPLICATE_POOL,
+                        format!("$.model.updates.{node_set}"),
+                        format!("update for {node_set:?} pools edge set {es:?} twice"),
+                    )
+                    .into_error());
                 }
                 let (src, _tgt) = cfg.edge_endpoints.get(es).ok_or_else(|| {
-                    Error::Schema(format!("update pools unknown edge set {es:?}"))
+                    Diagnostic::error(
+                        codes::UNKNOWN_EDGE_SET,
+                        format!("$.model.updates.{node_set}"),
+                        format!("update pools unknown edge set {es:?}"),
+                    )
+                    .into_error()
                 })?;
                 if src != node_set {
-                    return Err(Error::Schema(format!(
-                        "update for {node_set:?} pools {es:?}, whose source is {src:?} \
-                         (receiver must be the SOURCE endpoint)"
-                    )));
+                    return Err(Diagnostic::error(
+                        codes::RECEIVER_NOT_SOURCE,
+                        format!("$.model.updates.{node_set}"),
+                        format!(
+                            "update for {node_set:?} pools {es:?}, whose source is {src:?} \
+                             (receiver must be the SOURCE endpoint)"
+                        ),
+                    )
+                    .into_error());
                 }
             }
         }

@@ -36,6 +36,15 @@ fn saved_mismatch(conv: &str) -> Error {
     Error::Runtime(format!("{conv} backward fed another convolution's tape entry"))
 }
 
+/// Split a two-part `concat_cols_vjp` result without panicking.
+fn two_parts(parts: Vec<Mat>) -> Result<(Mat, Mat)> {
+    let mut it = parts.into_iter();
+    match (it.next(), it.next()) {
+        (Some(a), Some(b)) => Ok((a, b)),
+        _ => Err(Error::Runtime("concat VJP did not produce two parts".into())),
+    }
+}
+
 /// The original architecture as a registered convolution: per-edge
 /// message MLP `relu(W·[sender ‖ receiver] + b)`, sum-pooled to the
 /// receiver. Parameter names (`msg.w` / `msg.b`) and both forward
@@ -99,9 +108,7 @@ impl Convolution for MpnnConv {
         grads[gidx[0]].add_assign(&dw);
         grads[gidx[1]].add_assign(&row_mat(grad::bias_vjp(&dz)));
         let h = ctx.dims.hidden;
-        let mut parts = grad::concat_cols_vjp(&[h, h], &dx_edge).into_iter();
-        let d_sender_g = parts.next().expect("two concat parts");
-        let d_receiver_g = parts.next().expect("two concat parts");
+        let (d_sender_g, d_receiver_g) = two_parts(grad::concat_cols_vjp(&[h, h], &dx_edge))?;
         Ok((
             grad::gather_vjp(&ctx.sidx, ctx.n_send, &d_sender_g),
             grad::gather_vjp(&ctx.ridx, ctx.n_recv, &d_receiver_g),
@@ -254,9 +261,7 @@ impl Convolution for SageConv {
         grads[gidx[0]].add_assign(&dw);
         grads[gidx[1]].add_assign(&row_mat(grad::bias_vjp(&dz)));
         let h = ctx.dims.hidden;
-        let mut parts = grad::concat_cols_vjp(&[h, h], &dx_cat).into_iter();
-        let d_receiver = parts.next().expect("two concat parts");
-        let d_agg = parts.next().expect("two concat parts");
+        let (d_receiver, d_agg) = two_parts(grad::concat_cols_vjp(&[h, h], &dx_cat))?;
         let d_x_edge = match argmax {
             Some(am) => grad::segment_max_vjp(am, ctx.sidx.len(), &d_agg),
             None => grad::segment_mean_vjp(&ctx.ridx, ctx.n_recv, &d_agg),
@@ -372,9 +377,7 @@ impl Convolution for Gatv2Conv {
         grads[gidx[1]].add_assign(&row_mat(grad::bias_vjp(&d_s_pre)));
         // Endpoint gathers, plus the value-path sender contribution.
         let h = ctx.dims.hidden;
-        let mut parts = grad::concat_cols_vjp(&[h, h], &d_x_edge).into_iter();
-        let d_sender_g = parts.next().expect("two concat parts");
-        let d_receiver_g = parts.next().expect("two concat parts");
+        let (d_sender_g, d_receiver_g) = two_parts(grad::concat_cols_vjp(&[h, h], &d_x_edge))?;
         let mut d_sender = grad::gather_vjp(&ctx.sidx, ctx.n_send, &d_sender_g);
         d_sender.add_assign(&d_sender_vals);
         let d_receiver = grad::gather_vjp(&ctx.ridx, ctx.n_recv, &d_receiver_g);

@@ -43,9 +43,10 @@ pub mod update;
 pub use builder::ModelBuilder;
 pub use update::{EdgeTape, GraphUpdate, LayerTape, UpdateTape};
 
+use crate::analysis::diag::{codes, Diagnostic};
 use crate::graph::GraphTensor;
 use crate::ops::model_ref::{EdgeConvSaved, Mat};
-use crate::{Error, Result};
+use crate::Result;
 
 /// Which convolution the stack runs on every edge set — the parsed,
 /// validated form of the config's `model.type`.
@@ -75,14 +76,20 @@ impl ConvKind {
             "sage" => match sage_reduce {
                 "mean" => Ok(ConvKind::SageMean),
                 "max" => Ok(ConvKind::SageMax),
-                other => Err(Error::Schema(format!(
-                    "model.sage_reduce {other:?} unknown (want mean|max)"
-                ))),
+                other => Err(Diagnostic::error(
+                    codes::UNKNOWN_ENUM,
+                    "$.model.sage_reduce",
+                    format!("model.sage_reduce {other:?} unknown (want mean|max)"),
+                )
+                .into_error()),
             },
             "gatv2" => Ok(ConvKind::Gatv2),
-            other => Err(Error::Schema(format!(
-                "model type {other:?} unknown (want mpnn|gcn|sage|gatv2)"
-            ))),
+            other => Err(Diagnostic::error(
+                codes::UNKNOWN_ENUM,
+                "$.model.type",
+                format!("model type {other:?} unknown (want mpnn|gcn|sage|gatv2)"),
+            )
+            .into_error()),
         }
     }
 

@@ -24,6 +24,15 @@ use crate::{Error, Result};
 
 use super::{row_mat, ConvCtx, ConvDims, ConvInputs, ConvSaved, Convolution};
 
+/// Mutable gradient accumulator for one node set. `dh_prev` is seeded
+/// for every set in `node_order`, so a miss means the tape and config
+/// disagree — a structured error, never a panic.
+fn state_grad<'m>(dh_prev: &'m mut BTreeMap<String, Mat>, set: &str) -> Result<&'m mut Mat> {
+    dh_prev
+        .get_mut(set)
+        .ok_or_else(|| Error::Graph(format!("state grads missing node set {set:?}")))
+}
+
 /// One convolution application on the tape: index context + saved
 /// activations, plus the names needed to route gradients and look
 /// parameters back up.
@@ -258,14 +267,14 @@ impl<'a> GraphUpdate<'a> {
             widths.extend(std::iter::repeat(self.conv.out_dim(dims)).take(ut.edges.len()));
             let mut pieces = grad::concat_cols_vjp(&widths, &dx_cat);
             let d_pooled_list = pieces.split_off(1);
-            dh_prev.get_mut(node_set.as_str()).unwrap().add_assign(&pieces[0]);
+            state_grad(&mut dh_prev, node_set)?.add_assign(&pieces[0]);
             // Each convolution, in forward (sorted) order.
             for (et, d_pooled) in ut.edges.iter().zip(&d_pooled_list) {
                 let (mats, idxs) = self.conv_params(layer, node_set, &et.es)?;
                 let (d_sender, d_receiver) =
                     self.conv.backward(&et.ctx, &et.saved, d_pooled, &mats, grads, &idxs)?;
-                dh_prev.get_mut(et.send_set.as_str()).unwrap().add_assign(&d_sender);
-                dh_prev.get_mut(node_set.as_str()).unwrap().add_assign(&d_receiver);
+                state_grad(&mut dh_prev, &et.send_set)?.add_assign(&d_sender);
+                state_grad(&mut dh_prev, node_set)?.add_assign(&d_receiver);
             }
         }
         Ok(dh_prev)

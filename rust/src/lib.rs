@@ -9,8 +9,9 @@
 //!   task heads ([`tasks`]), the sharded graph store ([`store`]),
 //!   rooted-subgraph sampling ([`sampler`], [`coordinator`]), the
 //!   streaming input pipeline ([`pipeline`]), the AOT runtime
-//!   ([`runtime`]), training ([`train`]), orchestration ([`runner`])
-//!   and inference serving ([`serve`]).
+//!   ([`runtime`]), training ([`train`]), orchestration ([`runner`]),
+//!   inference serving ([`serve`]) and the static model-plan analyzer
+//!   ([`analysis`], the `tfgnn check` subcommand).
 //! * **Layer 2** — the heterogeneous GNN models (MPNN, GCN, R-GCN,
 //!   GraphSAGE, GATv2, MultiHeadAttention, HGT baseline) written in JAX
 //!   under `python/compile/`, lowered once to HLO text.
@@ -24,6 +25,7 @@
 //! See `DESIGN.md` for the paper → module inventory and the experiment
 //! index, and `EXPERIMENTS.md` for reproduced results.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod graph;
 pub mod layers;

@@ -2,6 +2,9 @@
 //!
 //! ```text
 //! tfgnn info                          # inspect artifacts + manifest
+//! tfgnn check    CONFIG...            # static analysis: shapes, dead
+//!                [--against-checkpoint PATH]   # sets, reachability,
+//!                                              # params (TFGNN0xx codes)
 //! tfgnn generate --out DIR            # synth-MAG -> stats + schema file
 //! tfgnn sample   --out DIR [--workers N] [--shards K] [--crash-rate P]
 //! tfgnn train    [--arch mpnn] [--epochs N] [--ckpt PATH]
@@ -50,6 +53,7 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("info") => info(args),
+        Some("check") => check(args),
         Some("generate") => generate(args),
         Some("sample") => sample(args),
         Some("train") => train(args),
@@ -58,11 +62,53 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve-bench") => serve_bench(args),
         _ => {
             eprintln!(
-                "usage: tfgnn <info|generate|sample|train|eval|sweep|serve-bench> [--help]"
+                "usage: tfgnn <info|check|generate|sample|train|eval|sweep|serve-bench> [--help]"
             );
             Ok(())
         }
     }
+}
+
+/// `tfgnn check CONFIG... [--against-checkpoint PATH]`: run the static
+/// model-plan analyzer over each config and print every diagnostic —
+/// stable `TFGNN0xx` code, severity, JSON path, fix hint. Exits
+/// non-zero iff any config has errors (warnings are report-only), so
+/// the command doubles as the CI gate over `configs/*.json`.
+fn check(args: &Args) -> Result<()> {
+    let paths = args.rest();
+    if paths.is_empty() {
+        return Err(tfgnn::Error::Pipeline(
+            "usage: tfgnn check <config.json>... [--against-checkpoint PATH]".into(),
+        ));
+    }
+    let ckpt = match args.get("against-checkpoint") {
+        Some(p) => Some(tfgnn::train::checkpoint::load(&PathBuf::from(p))?),
+        None => None,
+    };
+    let mut failed = 0usize;
+    for path in paths {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| tfgnn::Error::Pipeline(format!("{path}: {e}")))?;
+        let cfg = tfgnn::util::json::Json::parse(&text)?;
+        let d = match &ckpt {
+            Some(t) => tfgnn::analysis::analyze_against_checkpoint(&cfg, t),
+            None => tfgnn::analysis::analyze(&cfg),
+        };
+        for diag in d.iter() {
+            println!("{path}: {diag}");
+        }
+        if d.has_errors() {
+            failed += 1;
+        } else if d.is_empty() {
+            println!("{path}: ok");
+        } else {
+            println!("{path}: ok ({} warning(s))", d.len());
+        }
+    }
+    if failed > 0 {
+        return Err(tfgnn::Error::Schema(format!("{failed} config(s) failed check")));
+    }
+    Ok(())
 }
 
 fn info(args: &Args) -> Result<()> {

@@ -508,7 +508,7 @@ mod tests {
     #[test]
     fn fused_on_recsys_example() {
         // The A.3 spending computation through the fused path.
-        let g = crate::synth::recsys::recsys_example_graph();
+        let g = crate::synth::recsys::recsys_example_graph().unwrap();
         let price = g.node_set("items").unwrap().feature("price").unwrap().clone();
         let latest: Vec<f32> = (0..6).map(|i| price.ragged_row_f32(i).unwrap()[0]).collect();
         let latest = Feature::f32_vec(latest);
@@ -524,7 +524,7 @@ mod tests {
 
     #[test]
     fn fused_uses_memoized_csr() {
-        let g = crate::synth::recsys::recsys_example_graph();
+        let g = crate::synth::recsys::recsys_example_graph().unwrap();
         let es = g.edge_set("purchased").unwrap();
         assert!(!es.csr.is_built(crate::graph::Incidence::ByTarget));
         let v = Feature::f32_vec(vec![1.0; 6]);
@@ -539,7 +539,7 @@ mod tests {
 
     #[test]
     fn fused_rejects_bad_shapes() {
-        let g = crate::synth::recsys::recsys_example_graph();
+        let g = crate::synth::recsys::recsys_example_graph().unwrap();
         let wrong = Feature::f32_vec(vec![1.0; 5]);
         assert!(broadcast_pool_fused(&g, "purchased", Tag::Source, Tag::Target, Reduce::Sum, &wrong)
             .is_err());

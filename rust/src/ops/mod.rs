@@ -340,7 +340,7 @@ mod tests {
     /// broadcast + sum-pool, then fraction of max via context ops.
     #[test]
     fn a3_user_spending() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         // latest_price = price[:, :1] per item.
         let price = g.node_set("items").unwrap().feature("price").unwrap().clone();
         let latest: Vec<f32> = (0..6).map(|i| price.ragged_row_f32(i).unwrap()[0]).collect();
@@ -373,7 +373,7 @@ mod tests {
 
     #[test]
     fn mean_max_min_pooling() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let ones = Feature::f32_vec(vec![1.0; 7]);
         let mean = pool_edges_to_node(&g, "purchased", Tag::Target, Reduce::Mean, &ones).unwrap();
         let (_, m) = mean.as_f32().unwrap();
@@ -390,7 +390,7 @@ mod tests {
 
     #[test]
     fn empty_segments_are_zero() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         // "items" as SOURCE of purchased: item 4 appears once, all items
         // appear; instead pool over is-friend TARGET: only user 0
         // receives, users 1-3 get zeros.
@@ -407,7 +407,7 @@ mod tests {
 
     #[test]
     fn vector_valued_broadcast_pool() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         // 2-d vectors on users, broadcast to is-friend source then pool back.
         let v = Feature::f32_mat(2, (0..8).map(|x| x as f32).collect());
         let on_edges = broadcast_node_to_edges(&g, "is-friend", Tag::Source, &v).unwrap();
@@ -423,7 +423,7 @@ mod tests {
 
     #[test]
     fn softmax_normalizes_per_receiver() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let logits = Feature::f32_vec(vec![0.0, 0.0, 1.0, 2.0, 0.5, 0.5, 3.0]);
         let w = segment_softmax(&g, "purchased", Tag::Target, &logits).unwrap();
         let (_, w) = w.as_f32().unwrap();
@@ -439,7 +439,7 @@ mod tests {
 
     #[test]
     fn shape_mismatches_rejected() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let wrong = Feature::f32_vec(vec![1.0; 5]);
         assert!(broadcast_node_to_edges(&g, "purchased", Tag::Source, &wrong).is_err());
         assert!(pool_edges_to_node(&g, "purchased", Tag::Target, Reduce::Sum, &wrong).is_err());
@@ -454,7 +454,7 @@ mod tests {
     /// through `GraphTensor::validate`).
     #[test]
     fn corrupt_adjacency_is_an_error_not_a_panic() {
-        let mut g = recsys_example_graph();
+        let mut g = recsys_example_graph().unwrap();
         g.edge_sets.get_mut("purchased").unwrap().adjacency.target[3] = 99;
         let vals = Feature::f32_vec(vec![1.0; 7]);
         let err = pool_edges_to_node(&g, "purchased", Tag::Target, Reduce::Sum, &vals)
@@ -480,7 +480,7 @@ mod tests {
 
     #[test]
     fn component_ids() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let merged = crate::graph::batch::merge(&[g.clone(), g]).unwrap();
         let ids = node_component_ids(&merged, "users").unwrap();
         assert_eq!(ids, vec![0, 0, 0, 0, 1, 1, 1, 1]);
@@ -490,7 +490,7 @@ mod tests {
 
     #[test]
     fn context_ops_multi_component() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         let merged = crate::graph::batch::merge(&[g.clone(), g]).unwrap();
         let vals = Feature::f32_vec((0..8).map(|x| x as f32).collect());
         let pooled = pool_nodes_to_context(&merged, "users", Reduce::Sum, &vals).unwrap();

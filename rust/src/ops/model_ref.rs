@@ -21,6 +21,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::analysis::diag::{codes, Diagnostic};
 use crate::graph::pad::Padded;
 use crate::runtime::batch::{root_indices, RootTask};
 use crate::runtime::manifest::Manifest;
@@ -473,9 +474,12 @@ const TASK_KEYS: &[&str] = &[
 fn reject_unknown_keys(block: &Json, allowed: &[&str], name: &str) -> Result<()> {
     for key in block.as_obj()?.keys() {
         if !allowed.contains(&key.as_str()) {
-            return Err(Error::Schema(format!(
-                "{name} block has unknown key {key:?} — known keys: {allowed:?}"
-            )));
+            return Err(Diagnostic::error(
+                codes::UNKNOWN_KEY,
+                format!("$.{name}.{key}"),
+                format!("{name} block has unknown key {key:?} — known keys: {allowed:?}"),
+            )
+            .into_error());
         }
     }
     Ok(())
@@ -496,10 +500,15 @@ impl TaskConfig {
         match out.kind.as_str() {
             "root_classification" | "link_prediction" | "graph_regression" => {}
             other => {
-                return Err(Error::Schema(format!(
-                    "task.type {other:?} unknown (want \
-                     root_classification|link_prediction|graph_regression)"
-                )));
+                return Err(Diagnostic::error(
+                    codes::UNKNOWN_ENUM,
+                    "$.task.type",
+                    format!(
+                        "task.type {other:?} unknown (want \
+                         root_classification|link_prediction|graph_regression)"
+                    ),
+                )
+                .into_error());
             }
         }
         if let Some(v) = t.opt("root_set") {
@@ -515,19 +524,23 @@ impl TaskConfig {
             out.readout = v.as_str()?.to_string();
         }
         if !matches!(out.readout.as_str(), "dot" | "hadamard") {
-            return Err(Error::Schema(format!(
-                "task.readout {:?} unknown (want dot|hadamard)",
-                out.readout
-            )));
+            return Err(Diagnostic::error(
+                codes::UNKNOWN_ENUM,
+                "$.task.readout",
+                format!("task.readout {:?} unknown (want dot|hadamard)", out.readout),
+            )
+            .into_error());
         }
         if let Some(v) = t.opt("loss") {
             out.loss = v.as_str()?.to_string();
         }
         if !matches!(out.loss.as_str(), "softmax" | "margin") {
-            return Err(Error::Schema(format!(
-                "task.loss {:?} unknown (want softmax|margin)",
-                out.loss
-            )));
+            return Err(Diagnostic::error(
+                codes::UNKNOWN_ENUM,
+                "$.task.loss",
+                format!("task.loss {:?} unknown (want softmax|margin)", out.loss),
+            )
+            .into_error());
         }
         if let Some(v) = t.opt("margin") {
             out.margin = v.as_f64()? as f32;
@@ -558,32 +571,49 @@ impl TaskConfig {
         }
         if out.kind == "link_prediction" {
             if out.negatives == 0 {
-                return Err(Error::Schema(
+                return Err(Diagnostic::error(
+                    codes::BAD_TASK_KNOB,
+                    "$.task.negatives",
                     "task.negatives is 0 — link prediction needs at least one \
-                     negative per positive pair"
-                        .into(),
-                ));
+                     negative per positive pair",
+                )
+                .into_error());
             }
             if out.hits_k == 0 {
-                return Err(Error::Schema("task.hits_k is 0 (want ≥ 1)".into()));
+                return Err(Diagnostic::error(
+                    codes::BAD_TASK_KNOB,
+                    "$.task.hits_k",
+                    "task.hits_k is 0 (want ≥ 1)",
+                )
+                .into_error());
             }
             if !(out.holdout_fraction > 0.0 && out.holdout_fraction < 1.0) {
-                return Err(Error::Schema(format!(
-                    "task.holdout_fraction {} outside (0, 1)",
-                    out.holdout_fraction
-                )));
+                return Err(Diagnostic::error(
+                    codes::BAD_TASK_KNOB,
+                    "$.task.holdout_fraction",
+                    format!(
+                        "task.holdout_fraction {} outside (0, 1)",
+                        out.holdout_fraction
+                    ),
+                )
+                .into_error());
             }
             if out.margin <= 0.0 && out.loss == "margin" {
-                return Err(Error::Schema(format!(
-                    "task.margin {} must be positive for the margin loss",
-                    out.margin
-                )));
+                return Err(Diagnostic::error(
+                    codes::BAD_TASK_KNOB,
+                    "$.task.margin",
+                    format!("task.margin {} must be positive for the margin loss", out.margin),
+                )
+                .into_error());
             }
         }
         if out.kind == "graph_regression" && out.target_scale == 0.0 {
-            return Err(Error::Schema(
-                "task.target_scale is 0 — the regression target would collapse".into(),
-            ));
+            return Err(Diagnostic::error(
+                codes::BAD_TASK_KNOB,
+                "$.task.target_scale",
+                "task.target_scale is 0 — the regression target would collapse",
+            )
+            .into_error());
         }
         Ok(out)
     }
@@ -655,7 +685,12 @@ impl ModelConfig {
         for (k, v) in schema.get("edge_sets")?.as_obj()? {
             let arr = v.as_arr()?;
             if arr.len() != 2 {
-                return Err(Error::Schema(format!("edge set {k:?}: want [source, target]")));
+                return Err(Diagnostic::error(
+                    codes::CONFIG,
+                    format!("$.schema.edge_sets.{k}"),
+                    format!("edge set {k:?}: want [source, target]"),
+                )
+                .into_error());
             }
             edge_endpoints.insert(
                 k.clone(),
@@ -696,22 +731,32 @@ impl ModelConfig {
         // carrying both keys with different values is a drift bug.
         let arch = match (model.opt("type"), model.opt("arch")) {
             (Some(t), Some(a)) if t.as_str()? != a.as_str()? => {
-                return Err(Error::Schema(format!(
-                    "model.type {:?} and model.arch {:?} disagree — remove one",
-                    t.as_str()?,
-                    a.as_str()?
-                )));
+                return Err(Diagnostic::error(
+                    codes::ARCH_CONFLICT,
+                    "$.model.type",
+                    format!(
+                        "model.type {:?} and model.arch {:?} disagree — remove one",
+                        t.as_str()?,
+                        a.as_str()?
+                    ),
+                )
+                .into_error());
             }
             (Some(v), _) => v.as_str()?.to_string(),
             (None, Some(v)) => {
                 let a = v.as_str()?;
                 if a != "mpnn" {
-                    return Err(Error::Schema(format!(
-                        "model.arch {a:?} names an AOT-engine architecture, which is \
-                         not the same model as the native layer zoo's — select the \
-                         native convolution explicitly via model.type \
-                         (mpnn|gcn|sage|gatv2)"
-                    )));
+                    return Err(Diagnostic::error(
+                        codes::ARCH_CONFLICT,
+                        "$.model.arch",
+                        format!(
+                            "model.arch {a:?} names an AOT-engine architecture, which is \
+                             not the same model as the native layer zoo's — select the \
+                             native convolution explicitly via model.type \
+                             (mpnn|gcn|sage|gatv2)"
+                        ),
+                    )
+                    .into_error());
                 }
                 a.to_string()
             }
@@ -787,7 +832,10 @@ impl ModelConfig {
             feature_dims.insert(set.clone(), BTreeMap::new());
         }
         features.insert(s("paper"), vec![s("feat")]);
-        feature_dims.get_mut("paper").unwrap().insert(s("feat"), mag.feature_dim);
+        feature_dims
+            .entry(s("paper"))
+            .or_default()
+            .insert(s("feat"), mag.feature_dim);
         cardinality.insert(s("institution"), mag.num_institutions);
         cardinality.insert(s("field_of_study"), mag.num_fields);
         ModelConfig {

@@ -447,8 +447,7 @@ pub fn epoch_stream(
                     emit(batch);
                 }
             }
-        })
-        .expect("spawn pipeline producer");
+        })?;
     Ok(EpochStream { rx, stats, producer: Some(producer) })
 }
 

@@ -301,6 +301,10 @@ pub fn run_native(cfg: &RunConfig) -> Result<RunReport> {
         Some(p) => manifest_from_config_file(p)?,
         None => Manifest::load(&cfg.artifacts_dir)?,
     };
+    // Fail fast with the same structured diagnostics `tfgnn check`
+    // prints — nothing (dataset, store, model) is built past a bad
+    // config.
+    crate::analysis::check_config(&manifest.config)?;
     let model_cfg = ModelConfig::from_manifest(&manifest)?;
     if model_cfg.task.kind == "link_prediction" {
         return run_native_linkpred(cfg, manifest, model_cfg);

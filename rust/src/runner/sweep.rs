@@ -90,7 +90,7 @@ pub fn sweep(cfg: &SweepConfig) -> Result<Vec<Trial>> {
             }
         }
     }
-    trials.sort_by(|a, b| b.best_val_acc.partial_cmp(&a.best_val_acc).unwrap());
+    trials.sort_by(|a, b| b.best_val_acc.total_cmp(&a.best_val_acc));
     Ok(trials)
 }
 

@@ -92,11 +92,14 @@ impl RetryPolicy {
                 Err(e) => last = Some(e),
             }
         }
+        let last = match last {
+            Some(e) => e.to_string(),
+            None => "none recorded".to_string(),
+        };
         Err(Error::Graph(format!(
-            "{} failed after {} attempts: last error: {}",
+            "{} failed after {} attempts: last error: {last}",
             what(),
-            self.max_attempts,
-            last.unwrap()
+            self.max_attempts
         )))
     }
 }
@@ -319,7 +322,10 @@ pub fn sample_batch_parallel(
             acc.entry(op.edge_set.clone()).or_default();
         }
         for (idx, &(k, node)) in entries.iter().enumerate() {
-            let acc = edges[k].get_mut(&op.edge_set).unwrap();
+            // Seeded for every sample by the or_default pass above.
+            let acc = edges[k].get_mut(&op.edge_set).ok_or_else(|| {
+                Error::Sampler(format!("edge accumulator missing {:?}", op.edge_set))
+            })?;
             for &t in &selected[idx] {
                 acc.push((node, t));
                 if out_seen[k].insert(t) {

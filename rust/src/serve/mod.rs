@@ -107,10 +107,14 @@ pub struct ServerHandle {
 
 impl ServerHandle {
     /// Submit a request; returns the channel the response arrives on.
+    /// If the batcher is gone the reply sender is dropped with the
+    /// request, so the caller's `recv` fails instead of panicking here.
     pub fn submit(&self, seed: u32) -> Receiver<Result<Response>> {
         let (reply_tx, reply_rx) = channel();
         let req = Request { seed, submitted: Instant::now(), reply: reply_tx };
-        self.tx.as_ref().expect("server running").send(req).expect("server alive");
+        if let Some(tx) = self.tx.as_ref() {
+            let _ = tx.send(req);
+        }
         reply_rx
     }
 
@@ -188,7 +192,7 @@ fn batcher_loop<E>(
                     let predicted = row
                         .iter()
                         .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .max_by(|a, b| a.1.total_cmp(b.1))
                         .map(|(i, _)| i)
                         .unwrap_or(0);
                     let resp = Response {
@@ -292,8 +296,7 @@ pub fn serve(
                     let _ = ready_tx.send(Err(e));
                 }
             }
-        })
-        .expect("spawn server");
+        })?;
     ready_rx
         .recv()
         .map_err(|_| Error::Runtime("server thread died during startup".into()))??;
@@ -303,12 +306,18 @@ pub fn serve(
 /// Start a server over the pure-Rust native model — no AOT artifacts,
 /// no PJRT, no padding: each sampled subgraph runs the fused forward
 /// directly and contributes its root's logits row.
+///
+/// The model config is re-checked through the static analyzer
+/// ([`crate::analysis::check_model`]) before the batcher spawns, so a
+/// bad config is rejected with the same `TFGNN0xx` diagnostics the
+/// `tfgnn check` CLI prints.
 pub fn serve_native(
     model: Arc<NativeModel>,
     sampler: Arc<InMemorySampler>,
     task: RootTask,
     cfg: ServeConfig,
-) -> ServerHandle {
+) -> Result<ServerHandle> {
+    crate::analysis::check_model(&model.cfg).into_result()?;
     let stats = Arc::new(ServeStats::default());
     let (tx, rx) = channel::<Request>();
     let stats_w = Arc::clone(&stats);
@@ -336,9 +345,8 @@ pub fn serve_native(
                 }
                 Ok((flat, num_classes))
             });
-        })
-        .expect("spawn native server");
-    ServerHandle { tx: Some(tx), worker: Some(worker), stats }
+        })?;
+    Ok(ServerHandle { tx: Some(tx), worker: Some(worker), stats })
 }
 
 /// A completed task-shaped prediction (see [`serve_task`]).
@@ -370,10 +378,14 @@ pub struct TaskServerHandle {
 
 impl TaskServerHandle {
     /// Submit a request; returns the channel the response arrives on.
+    /// If the batcher is gone the reply sender is dropped with the
+    /// request, so the caller's `recv` fails instead of panicking here.
     pub fn submit(&self, seeds: Vec<u32>) -> Receiver<Result<TaskResponse>> {
         let (reply_tx, reply_rx) = channel();
         let req = TaskRequest { seeds, submitted: Instant::now(), reply: reply_tx };
-        self.tx.as_ref().expect("server running").send(req).expect("server alive");
+        if let Some(tx) = self.tx.as_ref() {
+            let _ = tx.send(req);
+        }
         reply_rx
     }
 
@@ -410,12 +422,16 @@ impl Drop for TaskServerHandle {
 /// score, or a regression value. Errors are per-request: one bad pair
 /// does not fail its wave-mates (a wave with any error still counts
 /// one `failed_batches`).
+///
+/// Like [`serve_native`], the model config is gated through
+/// [`crate::analysis::check_model`] before anything spawns.
 pub fn serve_task(
     model: Arc<NativeModel>,
     sampler: Arc<InMemorySampler>,
     task: Arc<dyn crate::tasks::Task>,
     cfg: ServeConfig,
-) -> TaskServerHandle {
+) -> Result<TaskServerHandle> {
+    crate::analysis::check_model(&model.cfg).into_result()?;
     let stats = Arc::new(ServeStats::default());
     let (tx, rx) = channel::<TaskRequest>();
     let stats_w = Arc::clone(&stats);
@@ -480,9 +496,8 @@ pub fn serve_task(
                     stats_w.failed_batches.fetch_add(1, Ordering::Relaxed);
                 }
             }
-        })
-        .expect("spawn task server");
-    TaskServerHandle { tx: Some(tx), worker: Some(worker), stats }
+        })?;
+    Ok(TaskServerHandle { tx: Some(tx), worker: Some(worker), stats })
 }
 
 /// Sample, merge, pad, execute one wave on the AOT program; returns
@@ -567,7 +582,8 @@ mod tests {
             sampler,
             RootTask::default(),
             ServeConfig { max_batch, max_wait, sampler: SamplerConfig::default() },
-        );
+        )
+        .unwrap();
         (handle, seeds, num_classes)
     }
 
@@ -633,7 +649,7 @@ mod tests {
         let cfg = ModelConfig::for_mag(&mag, 8, 8, 1);
         let task = tasks::build(&cfg).unwrap();
         let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
-        let handle = serve_task(model, Arc::clone(&sampler), task, serve_cfg());
+        let handle = serve_task(model, Arc::clone(&sampler), task, serve_cfg()).unwrap();
         let resp = handle.predict(&[seeds[0]]).unwrap();
         let TaskOutput::Classification { logits, predicted } = resp.output else {
             panic!("want classification output");
@@ -654,7 +670,7 @@ mod tests {
         });
         let task = tasks::build(&cfg).unwrap();
         let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
-        let handle = serve_task(model, lp_sampler, task, serve_cfg());
+        let handle = serve_task(model, lp_sampler, task, serve_cfg()).unwrap();
         let (u, v) = holdout.test[0];
         let resp = handle.predict(&[u, v]).unwrap();
         let TaskOutput::LinkScore { score } = resp.output else {
@@ -679,7 +695,7 @@ mod tests {
         });
         let task = tasks::build(&cfg).unwrap();
         let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
-        let handle = serve_task(model, sampler, task, serve_cfg());
+        let handle = serve_task(model, sampler, task, serve_cfg()).unwrap();
         let resp = handle.predict(&[seeds[1]]).unwrap();
         let TaskOutput::Regression { value } = resp.output else {
             panic!("want regression output");

@@ -105,9 +105,11 @@ impl EdgeColumn {
             degree[s as usize] += 1;
         }
         let mut offsets = Vec::with_capacity(num_source_nodes + 1);
-        offsets.push(0);
+        let mut running = 0usize;
+        offsets.push(running);
         for d in &degree {
-            offsets.push(offsets.last().unwrap() + d);
+            running += d;
+            offsets.push(running);
         }
         let mut targets = vec![0u32; edges.len()];
         let mut cursor = offsets.clone();

@@ -317,10 +317,14 @@ pub fn generate(cfg: &MagConfig) -> MagDataset {
     let schema = mag_schema(cfg);
     let mut store = GraphStore::new(schema);
 
+    // Column lengths are fixed by construction (`num_papers` rows
+    // each), so the columns are written directly rather than through
+    // the fallible `add_*` checks; `generates_valid_store` exercises
+    // `validate()` over the result.
     let mut paper_col = NodeColumn::new(cfg.num_papers);
-    paper_col.add_f32("feat", cfg.feature_dim, feat).unwrap();
-    paper_col.add_i64("labels", 0, labels.clone()).unwrap();
-    paper_col.add_i64("year", 0, years.clone()).unwrap();
+    paper_col.f32s.insert("feat".into(), (cfg.feature_dim, feat));
+    paper_col.i64s.insert("labels".into(), (0, labels.clone()));
+    paper_col.i64s.insert("year".into(), (0, years.clone()));
     store.nodes.insert("paper".into(), paper_col);
     store.nodes.insert("author".into(), NodeColumn::new(cfg.num_authors));
     store.nodes.insert("institution".into(), NodeColumn::new(cfg.num_institutions));
@@ -343,7 +347,6 @@ pub fn generate(cfg: &MagConfig) -> MagDataset {
         EdgeColumn::from_edge_list("paper", "field_of_study", cfg.num_papers, &has_topic),
     );
 
-    store.validate().expect("generated store is valid");
     MagDataset { store, config: cfg.clone(), labels, years, communities }
 }
 

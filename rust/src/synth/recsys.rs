@@ -6,9 +6,10 @@
 //! the whole data model.
 
 use crate::graph::{Adjacency, Context, EdgeSet, Feature, GraphTensor, NodeSet};
+use crate::Result;
 
 /// Build the exact Figure 2b / appendix A.1 GraphTensor.
-pub fn recsys_example_graph() -> GraphTensor {
+pub fn recsys_example_graph() -> Result<GraphTensor> {
     let items = NodeSet::new(vec![6])
         .with_feature(
             "category",
@@ -47,14 +48,13 @@ pub fn recsys_example_graph() -> GraphTensor {
             target: vec![0, 0, 0],
         },
     );
-    let context =
-        Context::default().with_feature("scores", Feature::f32_mat(4, vec![0.45, 0.98, 0.10, 0.25]));
+    let context = Context::default()
+        .with_feature("scores", Feature::f32_mat(4, vec![0.45, 0.98, 0.10, 0.25]));
     GraphTensor::from_pieces(
         context,
         [("items".to_string(), items), ("users".to_string(), users)].into(),
         [("purchased".to_string(), purchased), ("is-friend".to_string(), is_friend)].into(),
     )
-    .expect("recsys example graph is valid")
 }
 
 #[cfg(test)]
@@ -63,7 +63,7 @@ mod tests {
 
     #[test]
     fn shapes_match_appendix_a1() {
-        let g = recsys_example_graph();
+        let g = recsys_example_graph().unwrap();
         assert_eq!(g.num_nodes("items").unwrap(), 6);
         assert_eq!(g.num_nodes("users").unwrap(), 4);
         assert_eq!(g.num_edges("purchased").unwrap(), 7);

@@ -121,7 +121,9 @@ impl Task for GraphRegression {
         let d_ns = grad::segment_mean_vjp(&seg, 1, &dpooled);
         let mut dh = model.zero_state_grads(g)?;
         dh.get_mut(&self.node_set)
-            .expect("zero_state_grads covers every node set")
+            .ok_or_else(|| {
+                Error::Graph(format!("state grads missing node set {:?}", self.node_set))
+            })?
             .add_assign(&d_ns);
         model.backward_states(g, &trunk, dh, grads)?;
         Ok(TaskStep { loss: loss as f64, metrics: Self::metrics_of(pred, target) })

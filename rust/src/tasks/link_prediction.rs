@@ -276,7 +276,9 @@ impl Task for LinkPrediction {
         d_ns.add_assign(&grad::gather_vjp(&cand_idx, n, &db));
         let mut dh = model.zero_state_grads(g)?;
         dh.get_mut(&self.node_set)
-            .expect("zero_state_grads covers every node set")
+            .ok_or_else(|| {
+                Error::Graph(format!("state grads missing node set {:?}", self.node_set))
+            })?
             .add_assign(&d_ns);
         model.backward_states(g, &trunk, dh, grads)?;
         Ok(TaskStep { loss, metrics })

@@ -50,10 +50,11 @@ use std::sync::Arc;
 
 pub use crate::train::metrics::TaskMetrics;
 
+use crate::analysis::diag::{codes, Diagnostic};
 use crate::graph::GraphTensor;
 use crate::ops::model_ref::{Mat, ModelConfig};
 use crate::train::native::NativeModel;
-use crate::{Error, Result};
+use crate::Result;
 
 /// One scored example's contribution to a training/eval step.
 #[derive(Debug, Clone)]
@@ -151,9 +152,12 @@ pub fn head_params(cfg: &ModelConfig) -> Result<Vec<HeadParam>> {
                 ]
             }
             other => {
-                return Err(Error::Schema(format!(
-                    "task.readout {other:?} unknown (want dot|hadamard)"
-                )));
+                return Err(Diagnostic::error(
+                    codes::UNKNOWN_ENUM,
+                    "$.task.readout",
+                    format!("task.readout {other:?} unknown (want dot|hadamard)"),
+                )
+                .into_error());
             }
         },
         "graph_regression" => vec![
@@ -161,10 +165,15 @@ pub fn head_params(cfg: &ModelConfig) -> Result<Vec<HeadParam>> {
             HeadParam { name: "reg.b", rows: 1, cols: 1, zero_init: true },
         ],
         other => {
-            return Err(Error::Schema(format!(
-                "task.type {other:?} unknown (want \
-                 root_classification|link_prediction|graph_regression)"
-            )));
+            return Err(Diagnostic::error(
+                codes::UNKNOWN_ENUM,
+                "$.task.type",
+                format!(
+                    "task.type {other:?} unknown (want \
+                     root_classification|link_prediction|graph_regression)"
+                ),
+            )
+            .into_error());
         }
     })
 }
@@ -175,10 +184,12 @@ pub fn build(cfg: &ModelConfig) -> Result<Arc<dyn Task>> {
     match t.kind.as_str() {
         "root_classification" => {
             if !cfg.node_order.iter().any(|s| s == &t.root_set) {
-                return Err(Error::Schema(format!(
-                    "task.root_set {:?} is not a node set of the schema",
-                    t.root_set
-                )));
+                return Err(Diagnostic::error(
+                    codes::UNKNOWN_NODE_SET,
+                    "$.task.root_set",
+                    format!("task.root_set {:?} is not a node set of the schema", t.root_set),
+                )
+                .into_error());
             }
             Ok(Arc::new(RootClassification {
                 root_set: t.root_set.clone(),
@@ -187,26 +198,35 @@ pub fn build(cfg: &ModelConfig) -> Result<Arc<dyn Task>> {
         }
         "link_prediction" => {
             let (src, tgt) = cfg.edge_endpoints.get(&t.edge_set).ok_or_else(|| {
-                Error::Schema(format!(
-                    "task.edge_set {:?} is not an edge set of the schema",
-                    t.edge_set
-                ))
+                Diagnostic::error(
+                    codes::UNKNOWN_EDGE_SET,
+                    "$.task.edge_set",
+                    format!("task.edge_set {:?} is not an edge set of the schema", t.edge_set),
+                )
+                .into_error()
             })?;
             if src != tgt {
-                return Err(Error::Schema(format!(
-                    "task.edge_set {:?} connects {src:?}→{tgt:?} — link prediction \
-                     currently scores pairs within one node set (homogeneous edge sets)",
-                    t.edge_set
-                )));
+                return Err(Diagnostic::error(
+                    codes::BAD_TASK_KNOB,
+                    "$.task.edge_set",
+                    format!(
+                        "task.edge_set {:?} connects {src:?}→{tgt:?} — link prediction \
+                         currently scores pairs within one node set (homogeneous edge sets)",
+                        t.edge_set
+                    ),
+                )
+                .into_error());
             }
             Ok(Arc::new(LinkPrediction::from_config(src.clone(), t)?))
         }
         "graph_regression" => {
             if !cfg.node_order.iter().any(|s| s == &t.root_set) {
-                return Err(Error::Schema(format!(
-                    "task.root_set {:?} is not a node set of the schema",
-                    t.root_set
-                )));
+                return Err(Diagnostic::error(
+                    codes::UNKNOWN_NODE_SET,
+                    "$.task.root_set",
+                    format!("task.root_set {:?} is not a node set of the schema", t.root_set),
+                )
+                .into_error());
             }
             Ok(Arc::new(GraphRegression {
                 node_set: t.root_set.clone(),
@@ -215,10 +235,15 @@ pub fn build(cfg: &ModelConfig) -> Result<Arc<dyn Task>> {
                 scale: t.target_scale,
             }))
         }
-        other => Err(Error::Schema(format!(
-            "task.type {other:?} unknown (want \
-             root_classification|link_prediction|graph_regression)"
-        ))),
+        other => Err(Diagnostic::error(
+            codes::UNKNOWN_ENUM,
+            "$.task.type",
+            format!(
+                "task.type {other:?} unknown (want \
+                 root_classification|link_prediction|graph_regression)"
+            ),
+        )
+        .into_error()),
     }
 }
 

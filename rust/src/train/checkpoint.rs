@@ -13,6 +13,15 @@ use crate::{Error, Result};
 
 const MAGIC: &[u8; 4] = b"TFGC";
 
+/// Fixed-size copy of an exact-length chunk. Callers slice exactly `N`
+/// bytes (`take` / `chunks_exact`), so no fallible `try_into` is
+/// needed.
+fn arr<const N: usize>(c: &[u8]) -> [u8; N] {
+    let mut a = [0u8; N];
+    a.copy_from_slice(c);
+    a
+}
+
 fn fnv(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for &b in bytes {
@@ -75,7 +84,7 @@ pub fn load(path: &Path) -> Result<Vec<(String, HostTensor)>> {
         return Err(Error::Codec(format!("{}: not a checkpoint", path.display())));
     }
     let payload = &bytes[4..bytes.len() - 8];
-    let want = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let want = u64::from_le_bytes(arr(&bytes[bytes.len() - 8..]));
     if fnv(payload) != want {
         return Err(Error::Codec(format!("{}: checksum mismatch", path.display())));
     }
@@ -88,8 +97,7 @@ pub fn load(path: &Path) -> Result<Vec<(String, HostTensor)>> {
         *i += n;
         Ok(s)
     };
-    let read_u64 =
-        |i: &mut usize| -> Result<u64> { Ok(u64::from_le_bytes(take(i, 8)?.try_into().unwrap())) };
+    let read_u64 = |i: &mut usize| -> Result<u64> { Ok(u64::from_le_bytes(arr(take(i, 8)?))) };
     let count = read_u64(&mut i)? as usize;
     let mut out = Vec::with_capacity(count);
     for _ in 0..count {
@@ -112,21 +120,21 @@ pub fn load(path: &Path) -> Result<Vec<(String, HostTensor)>> {
                 let raw = take(&mut i, elems * 4)?;
                 HostTensor::F32(
                     shape,
-                    raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                    raw.chunks_exact(4).map(|c| f32::from_le_bytes(arr(c))).collect(),
                 )
             }
             1 => {
                 let raw = take(&mut i, elems * 4)?;
                 HostTensor::I32(
                     shape,
-                    raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                    raw.chunks_exact(4).map(|c| i32::from_le_bytes(arr(c))).collect(),
                 )
             }
             2 => {
                 let raw = take(&mut i, elems * 8)?;
                 HostTensor::I64(
                     shape,
-                    raw.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect(),
+                    raw.chunks_exact(8).map(|c| i64::from_le_bytes(arr(c))).collect(),
                 )
             }
             t => return Err(Error::Codec(format!("bad dtype tag {t}"))),
@@ -147,7 +155,10 @@ mod tests {
     #[test]
     fn roundtrip() {
         let params = vec![
-            ("param.w".to_string(), HostTensor::F32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-7, 9.9])),
+            (
+                "param.w".to_string(),
+                HostTensor::F32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-7, 9.9]),
+            ),
             ("param.ids".to_string(), HostTensor::I32(vec![4], vec![1, -2, 3, 4])),
             ("param.big".to_string(), HostTensor::I64(vec![], vec![i64::MAX])),
         ];

@@ -120,7 +120,11 @@ fn real_components(padded: &Padded) -> Result<Vec<GraphTensor>> {
 /// step metrics (mean loss over `n` examples, in-order f64 loss sum).
 fn reduce_outs(outs: Vec<ChunkOut>, n: usize) -> (Vec<Mat>, StepMetrics) {
     let mut outs_it = outs.into_iter();
-    let first = outs_it.next().expect("at least one chunk");
+    // Callers only reduce non-empty batches; an empty fold degrades to
+    // an all-zero step rather than panicking.
+    let Some(first) = outs_it.next() else {
+        return (Vec::new(), StepMetrics::default());
+    };
     let mut grads = first.grads;
     let mut losses = first.losses;
     let mut metrics = first.metrics;
@@ -221,16 +225,18 @@ impl NativeTrainer {
             return Ok(StepMetrics { loss: 0.0, correct: 0.0, weight: 0.0, ..Default::default() });
         }
         let chunks = self.threads.min(n);
-        let outs: Vec<ChunkOut> = if chunks > 1 {
-            let pool = self.pool.as_ref().expect("pool exists when threads > 1");
-            let items = split_chunks(n.div_ceil(chunks), comps);
-            let model = Arc::clone(&self.model);
-            let task = Arc::clone(&self.task);
-            pool.map(items, move |c| chunk_grad(&model, task.as_ref(), &c))
-                .into_iter()
-                .collect::<Result<Vec<_>>>()?
-        } else {
-            vec![chunk_grad(&self.model, self.task.as_ref(), &comps)?]
+        // `pool` is Some iff threads > 1; a missing pool degrades to
+        // the serial oracle path rather than panicking.
+        let outs: Vec<ChunkOut> = match self.pool.as_ref().filter(|_| chunks > 1) {
+            Some(pool) => {
+                let items = split_chunks(n.div_ceil(chunks), comps);
+                let model = Arc::clone(&self.model);
+                let task = Arc::clone(&self.task);
+                pool.map(items, move |c| chunk_grad(&model, task.as_ref(), &c))
+                    .into_iter()
+                    .collect::<Result<Vec<_>>>()?
+            }
+            None => vec![chunk_grad(&self.model, self.task.as_ref(), &comps)?],
         };
 
         // All-reduce: strictly in replica-index order, so the summation
@@ -252,16 +258,16 @@ impl NativeTrainer {
             return Ok(StepMetrics { loss: 0.0, correct: 0.0, weight: 0.0, ..Default::default() });
         }
         let chunks = self.threads.min(n);
-        let parts: Vec<(Vec<f64>, TaskMetrics)> = if chunks > 1 {
-            let pool = self.pool.as_ref().expect("pool exists when threads > 1");
-            let items = split_chunks(n.div_ceil(chunks), comps);
-            let model = Arc::clone(&self.model);
-            let task = Arc::clone(&self.task);
-            pool.map(items, move |c| chunk_eval(&model, task.as_ref(), &c))
-                .into_iter()
-                .collect::<Result<Vec<_>>>()?
-        } else {
-            vec![chunk_eval(&self.model, self.task.as_ref(), &comps)?]
+        let parts: Vec<(Vec<f64>, TaskMetrics)> = match self.pool.as_ref().filter(|_| chunks > 1) {
+            Some(pool) => {
+                let items = split_chunks(n.div_ceil(chunks), comps);
+                let model = Arc::clone(&self.model);
+                let task = Arc::clone(&self.task);
+                pool.map(items, move |c| chunk_eval(&model, task.as_ref(), &c))
+                    .into_iter()
+                    .collect::<Result<Vec<_>>>()?
+            }
+            None => vec![chunk_eval(&self.model, self.task.as_ref(), &comps)?],
         };
         let mut loss_sum = 0.0f64;
         let mut metrics = TaskMetrics::default();
@@ -466,7 +472,8 @@ mod tests {
         t.save(&path).unwrap();
         let after_save = t.train_batch(&batches[0]).unwrap();
 
-        let mut t2 = NativeTrainer::new(tiny_model(), AdamConfig::default(), RootTask::default(), 2);
+        let mut t2 =
+            NativeTrainer::new(tiny_model(), AdamConfig::default(), RootTask::default(), 2);
         t2.load(&path).unwrap();
         assert_eq!(t2.steps_done, 2);
         assert_eq!(t2.opt.steps, 2);

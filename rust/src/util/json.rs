@@ -377,7 +377,9 @@ impl<'a> Parser<'a> {
                     self.i -= 1;
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid UTF-8"))?;
-                    let ch = rest.chars().next().unwrap();
+                    let Some(ch) = rest.chars().next() else {
+                        return Err(self.err("truncated string"));
+                    };
                     if (ch as u32) < 0x20 {
                         return Err(self.err("control character in string"));
                     }
@@ -414,7 +416,9 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        // The scanned span is ASCII digits/sign/dot/exponent only.
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("bad number"))?;
         if !is_float {
             if let Ok(i) = text.parse::<i64>() {
                 return Ok(Json::Int(i));

@@ -44,9 +44,11 @@ pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: usi
         });
         if let Err(payload) = result {
             let msg = panic_message(&payload);
-            panic!(
+            // Re-raise with the replay context attached; resume_unwind
+            // keeps this harness free of `panic!` in library code.
+            std::panic::resume_unwind(Box::new(format!(
                 "property {name:?} failed on case {case} (replay seed {seed:#x}): {msg}"
-            );
+            )));
         }
     }
 }

@@ -17,8 +17,8 @@
 //! that entirely).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::mpsc::{channel, Receiver, SendError, Sender};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -35,7 +35,10 @@ struct InFlightGuard(Arc<Shared>);
 
 impl Drop for InFlightGuard {
     fn drop(&mut self) {
-        let mut n = self.0.in_flight.lock().unwrap();
+        // The count is plain arithmetic, so a poisoned lock's data is
+        // still coherent — take it rather than double-panicking inside
+        // a drop during unwind.
+        let mut n = self.0.in_flight.lock().unwrap_or_else(PoisonError::into_inner);
         *n -= 1;
         if *n == 0 {
             self.0.idle.notify_all();
@@ -58,14 +61,18 @@ impl ThreadPool {
         let rx = Arc::new(Mutex::new(rx));
         let shared = Arc::new(Shared { in_flight: Mutex::new(0), idle: Condvar::new() });
         let workers = (0..n)
-            .map(|i| {
+            .filter_map(|i| {
                 let rx = Arc::clone(&rx);
                 let shared = Arc::clone(&shared);
+                // A failed spawn (resource exhaustion) just shrinks the
+                // pool; `execute` falls back to running inline if every
+                // spawn failed, so jobs still complete.
                 std::thread::Builder::new()
                     .name(format!("tfgnn-pool-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().unwrap();
+                            let guard =
+                                rx.lock().unwrap_or_else(PoisonError::into_inner);
                             guard.recv()
                         };
                         match job {
@@ -79,7 +86,7 @@ impl ThreadPool {
                             Err(_) => break, // sender dropped: shutdown
                         }
                     })
-                    .expect("spawn pool worker")
+                    .ok()
             })
             .collect();
         ThreadPool { tx: Some(tx), workers, shared }
@@ -91,22 +98,28 @@ impl ThreadPool {
     }
 
     /// Enqueue a job. A panic inside the job is caught on the worker
-    /// (fire-and-forget jobs have nowhere to surface it).
+    /// (fire-and-forget jobs have nowhere to surface it). If no worker
+    /// can take the job (all spawns failed), it runs inline here — the
+    /// job and its in-flight accounting still happen.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        *self.shared.in_flight.lock().unwrap() += 1;
-        self.tx
-            .as_ref()
-            .expect("pool already shut down")
-            .send(Box::new(f))
-            .expect("pool workers gone");
+        *self.shared.in_flight.lock().unwrap_or_else(PoisonError::into_inner) += 1;
+        let job: Job = Box::new(f);
+        let rejected = match self.tx.as_ref() {
+            Some(tx) => tx.send(job).err().map(|SendError(job)| job),
+            None => Some(job),
+        };
+        if let Some(job) = rejected {
+            let _guard = InFlightGuard(Arc::clone(&self.shared));
+            let _ = catch_unwind(AssertUnwindSafe(job));
+        }
     }
 
     /// Block until all submitted jobs have completed (including jobs
     /// that panicked).
     pub fn wait_idle(&self) {
-        let mut n = self.shared.in_flight.lock().unwrap();
+        let mut n = self.shared.in_flight.lock().unwrap_or_else(PoisonError::into_inner);
         while *n > 0 {
-            n = self.shared.idle.wait(n).unwrap();
+            n = self.shared.idle.wait(n).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
@@ -138,18 +151,19 @@ impl ThreadPool {
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
         let mut panic_payload = None;
         for _ in 0..n {
-            // Workers survive job panics, so every job sends exactly one
-            // result; a dead channel would mean the pool itself is gone.
-            let (i, r) = rrx.recv().expect("pool worker disappeared");
-            match r {
-                Ok(r) => out[i] = Some(r),
-                Err(payload) => panic_payload = Some(payload),
+            // Every job sends exactly one result (workers survive job
+            // panics, and jobs the queue rejects run inline), so a dead
+            // channel just means the results are exhausted.
+            match rrx.recv() {
+                Ok((i, Ok(r))) => out[i] = Some(r),
+                Ok((_, Err(payload))) => panic_payload = Some(payload),
+                Err(_) => break,
             }
         }
         if let Some(payload) = panic_payload {
             std::panic::resume_unwind(payload);
         }
-        out.into_iter().map(|o| o.unwrap()).collect()
+        out.into_iter().flatten().collect()
     }
 }
 

@@ -1,0 +1,308 @@
+//! Mutation corpus for the static analyzer (`tfgnn check`).
+//!
+//! Every shipped `configs/*.json` must pass the analyzer with zero
+//! diagnostics, and every seeded text-level mutation must come back
+//! with its expected stable `TFGNN0xx` code at its expected JSON path
+//! — no false negatives on defects, no noise on clean configs. The
+//! corpus also pins `docs/diagnostics.md` to the source-of-truth code
+//! table in `analysis::diag`.
+
+use std::collections::BTreeSet;
+
+use tfgnn::analysis::diag::{codes, render_markdown, CODES};
+use tfgnn::analysis::{analyze, analyze_against_checkpoint, Diagnostics, ModelPlan, Severity};
+use tfgnn::runtime::HostTensor;
+use tfgnn::util::json::Json;
+
+const SHIPPED: &[&str] = &["mag_small.json", "mag_small_gatv2.json", "mag_small_linkpred.json"];
+
+fn read(name: &str) -> String {
+    let path = format!("../configs/{name}");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"))
+}
+
+fn analyze_text(text: &str) -> Diagnostics {
+    analyze(&Json::parse(text).expect("mutated config still parses"))
+}
+
+/// Apply a text-level mutation, insisting it actually applies — a
+/// silently-no-op mutation would turn a corpus case into a vacuous
+/// clean-config check.
+fn mutate(base: &str, from: &str, to: &str) -> String {
+    assert!(base.contains(from), "mutation source {from:?} not found in config text");
+    base.replace(from, to)
+}
+
+#[test]
+fn every_shipped_config_passes_clean() {
+    for name in SHIPPED {
+        let d = analyze_text(&read(name));
+        assert!(d.is_empty(), "{name} should produce no diagnostics at all:\n{d}");
+    }
+}
+
+/// One seeded defect: a text replacement on a shipped config and the
+/// error code + JSON path the analyzer must report for it.
+struct Case {
+    name: &'static str,
+    file: &'static str,
+    from: &'static str,
+    to: &'static str,
+    code: &'static str,
+    path: &'static str,
+}
+
+const S: &str = "mag_small.json";
+const L: &str = "mag_small_linkpred.json";
+
+#[rustfmt::skip]
+const CASES: &[Case] = &[
+    Case { name: "zero hidden width", file: S,
+           from: r#""hidden_dim": 64"#, to: r#""hidden_dim": 0"#,
+           code: codes::BAD_DIM, path: "$.model.hidden_dim" },
+    Case { name: "zero layer count", file: S,
+           from: r#""num_layers": 2"#, to: r#""num_layers": 0"#,
+           code: codes::BAD_DIM, path: "$.model.num_layers" },
+    Case { name: "zero message width", file: S,
+           from: r#""message_dim": 64"#, to: r#""message_dim": 0"#,
+           code: codes::BAD_DIM, path: "$.model.hidden_dim" },
+    Case { name: "model key typo", file: S,
+           from: r#""dropout""#, to: r#""dropoutt""#,
+           code: codes::UNKNOWN_KEY, path: "$.model.dropoutt" },
+    Case { name: "type and arch disagree", file: S,
+           from: r#""arch": "mpnn""#, to: r#""arch": "gcn""#,
+           code: codes::ARCH_CONFLICT, path: "$.model.type" },
+    Case { name: "AOT arch without native type", file: S,
+           from: "\"arch\": \"mpnn\",\n    \"type\": \"mpnn\",",
+           to: "\"arch\": \"gatv2\",",
+           code: codes::ARCH_CONFLICT, path: "$.model.arch" },
+    Case { name: "unknown model type", file: L,
+           from: r#""type": "mpnn","#, to: r#""type": "transformer","#,
+           code: codes::UNKNOWN_ENUM, path: "$.model.type" },
+    Case { name: "unknown sage reduction", file: L,
+           from: r#""type": "mpnn","#, to: r#""type": "sage", "sage_reduce": "median","#,
+           code: codes::UNKNOWN_ENUM, path: "$.model.sage_reduce" },
+    Case { name: "update pools dangling edge set", file: S,
+           from: r#"["cites", "written", "has_topic"]"#,
+           to: r#"["cites", "written", "has_topic", "cities"]"#,
+           code: codes::UNKNOWN_EDGE_SET, path: "$.model.updates.paper" },
+    Case { name: "update pools an edge set twice", file: S,
+           from: r#"["cites", "written", "has_topic"]"#,
+           to: r#"["cites", "cites", "written", "has_topic"]"#,
+           code: codes::DUPLICATE_POOL, path: "$.model.updates.paper" },
+    Case { name: "receiver is the target endpoint", file: S,
+           from: r#"["writes", "affiliated_with"]"#,
+           to: r#"["written", "affiliated_with"]"#,
+           code: codes::RECEIVER_NOT_SOURCE, path: "$.model.updates.author" },
+    Case { name: "swapped schema endpoints", file: S,
+           from: r#""writes": ["author", "paper"],"#,
+           to: r#""writes": ["paper", "author"],"#,
+           code: codes::RECEIVER_NOT_SOURCE, path: "$.model.updates.author" },
+    Case { name: "edge set references unknown node set", file: S,
+           from: r#""written": ["paper", "author"],"#,
+           to: r#""written": ["paper", "reviewer"],"#,
+           code: codes::UNKNOWN_NODE_SET, path: "$.schema.edge_sets.written" },
+    Case { name: "unknown pair readout", file: L,
+           from: r#""readout": "hadamard","#, to: r#""readout": "bilinear","#,
+           code: codes::UNKNOWN_ENUM, path: "$.task.readout" },
+    Case { name: "zero negatives", file: L,
+           from: r#""negatives": 4,"#, to: r#""negatives": 0,"#,
+           code: codes::BAD_TASK_KNOB, path: "$.task.negatives" },
+    Case { name: "holdout fraction out of range", file: L,
+           from: r#""holdout_fraction": 0.1,"#, to: r#""holdout_fraction": 1.5,"#,
+           code: codes::BAD_TASK_KNOB, path: "$.task.holdout_fraction" },
+    Case { name: "task key typo", file: L,
+           from: r#""negatives""#, to: r#""negativs""#,
+           code: codes::UNKNOWN_KEY, path: "$.task.negativs" },
+    Case { name: "heterogeneous link-prediction edge set", file: L,
+           from: r#""edge_set": "cites","#, to: r#""edge_set": "written","#,
+           code: codes::BAD_TASK_KNOB, path: "$.task.edge_set" },
+    Case { name: "unknown link-prediction edge set", file: L,
+           from: r#""edge_set": "cites","#, to: r#""edge_set": "collabs","#,
+           code: codes::UNKNOWN_EDGE_SET, path: "$.task.edge_set" },
+    Case { name: "dataset feature width disagrees with schema", file: S,
+           from: r#""feature_dim": 128,"#, to: r#""feature_dim": 64,"#,
+           code: codes::SHAPE_MISMATCH, path: "$.dataset.feature_dim" },
+    Case { name: "class count disagrees with dataset labels", file: S,
+           from: "\"num_classes\": 20,\n    \"init_seed\"",
+           to: "\"num_classes\": 7,\n    \"init_seed\"",
+           code: codes::SHAPE_MISMATCH, path: "$.train.num_classes" },
+    Case { name: "embedding table smaller than entity count", file: S,
+           from: r#""cardinality": 200"#, to: r#""cardinality": 100"#,
+           code: codes::SHAPE_MISMATCH,
+           path: "$.schema.node_sets.institution.cardinality" },
+    Case { name: "zero-width schema feature", file: S,
+           from: r#""feat": 128"#, to: r#""feat": 0"#,
+           code: codes::BAD_DIM, path: "$.schema.node_sets.paper.features.feat" },
+    Case { name: "component cap cannot hold the batch", file: S,
+           from: r#""component_cap": 9"#, to: r#""component_cap": 5"#,
+           code: codes::PAD_SPEC, path: "$.pad.component_cap" },
+    Case { name: "pad cap dropped for one edge set", file: S,
+           from: "\"cites\": 80,\n      ", to: "",
+           code: codes::PAD_SPEC, path: "$.pad.edge_caps" },
+    Case { name: "zero sampling fan-out", file: S,
+           from: r#""cites": 8,"#, to: r#""cites": 0,"#,
+           code: codes::SAMPLING_SPEC, path: "$.sampling.sizes.cites" },
+    Case { name: "sampling size dropped for a planned edge set", file: S,
+           from: "\"affiliated_with\": 4,\n      \"has_topic\": 4",
+           to: "\"affiliated_with\": 4",
+           code: codes::SAMPLING_SPEC, path: "$.sampling.sizes" },
+    Case { name: "dataset block missing a generator knob", file: S,
+           from: r#""seed": 17"#, to: r#""seedling": 17"#,
+           code: codes::CONFIG, path: "$.dataset.seed" },
+    Case { name: "zero batch size", file: S,
+           from: r#""batch_size": 8,"#, to: r#""batch_size": 0,"#,
+           code: codes::BAD_DIM, path: "$.batch_size" },
+    Case { name: "readout from a non-seed node set", file: S,
+           from: "\"train\": {",
+           to: "\"task\": {\"type\": \"root_classification\", \
+                \"root_set\": \"institution\"},\n  \"train\": {",
+           code: codes::UNREACHABLE_READOUT, path: "$.task.root_set" },
+    Case { name: "readout from an undeclared node set", file: S,
+           from: "\"train\": {",
+           to: "\"task\": {\"type\": \"root_classification\", \
+                \"root_set\": \"venue\"},\n  \"train\": {",
+           code: codes::UNKNOWN_NODE_SET, path: "$.task.root_set" },
+];
+
+#[test]
+fn mutation_corpus_each_defect_gets_its_code_and_path() {
+    for c in CASES {
+        let d = analyze_text(&mutate(&read(c.file), c.from, c.to));
+        assert!(d.has_errors(), "{}: expected errors, got:\n{d}", c.name);
+        let diag = d
+            .find(c.code)
+            .unwrap_or_else(|| panic!("{}: no {} diagnostic in:\n{d}", c.name, c.code));
+        assert_eq!(diag.severity, Severity::Error, "{}", c.name);
+        assert_eq!(diag.path, c.path, "{}: wrong path for {}", c.name, c.code);
+    }
+}
+
+/// An edge set the model pools but the derived Figure-6 sampling plan
+/// never expands: needs three coordinated edits (schema + updates +
+/// pad cap), so it lives outside the single-replacement table.
+#[test]
+fn read_but_unsampled_edge_set_is_a_dead_set_error() {
+    let text = mutate(
+        &read(S),
+        r#""cites": ["paper", "paper"],"#,
+        "\"cites\": [\"paper\", \"paper\"],\n      \"cocites\": [\"paper\", \"paper\"],",
+    );
+    let text = mutate(
+        &text,
+        r#"["cites", "written", "has_topic"]"#,
+        r#"["cites", "cocites", "written", "has_topic"]"#,
+    );
+    let text = mutate(&text, r#""cites": 80,"#, "\"cites\": 80,\n      \"cocites\": 8,");
+    let d = analyze_text(&text);
+    let diag = d.find(codes::DEAD_SET).unwrap_or_else(|| panic!("no TFGNN013 in:\n{d}"));
+    assert_eq!(diag.severity, Severity::Error);
+    assert_eq!(diag.path, "$.model.updates.paper");
+    assert!(diag.message.contains("cocites"), "{}", diag.message);
+}
+
+/// Warnings report but never fail the gate: wasted fan-out, oversized
+/// embedding tables, pad caps for unknown sets.
+#[test]
+fn warning_class_mutations_stay_clean() {
+    let warning_cases: &[(&str, &str, &str, &str, &str)] = &[
+        (
+            "sampled but unread edge set",
+            r#"["cites", "written", "has_topic"]"#,
+            r#"["cites", "written"]"#,
+            codes::DEAD_SET,
+            "$.sampling.sizes.has_topic",
+        ),
+        (
+            "oversized embedding table",
+            r#""cardinality": 120"#,
+            r#""cardinality": 500"#,
+            codes::SHAPE_MISMATCH,
+            "$.schema.node_sets.field_of_study.cardinality",
+        ),
+        (
+            "pad cap for unknown node set",
+            r#""paper": 512,"#,
+            "\"paper\": 512,\n      \"venue\": 4,",
+            codes::PAD_SPEC,
+            "$.pad.node_caps.venue",
+        ),
+    ];
+    for (name, from, to, code, path) in warning_cases {
+        let d = analyze_text(&mutate(&read(S), from, to));
+        let diag = d.find(code).unwrap_or_else(|| panic!("{name}: no {code} in:\n{d}"));
+        assert_eq!(diag.severity, Severity::Warning, "{name}");
+        assert_eq!(&diag.path, path, "{name}");
+        assert!(d.is_clean(), "{name}: warnings must not fail the gate:\n{d}");
+    }
+}
+
+#[test]
+fn checkpoint_drift_is_flagged_and_a_faithful_one_is_clean() {
+    let cfg = Json::parse(&read(S)).expect("config parses");
+    let mut d = Diagnostics::default();
+    let plan = ModelPlan::compile(&cfg, &mut d).expect("plan compiles");
+    assert!(d.is_empty(), "{d}");
+    let ckpt: Vec<(String, HostTensor)> = plan
+        .params
+        .iter()
+        .map(|p| {
+            (
+                format!("param.{}", p.name),
+                HostTensor::F32(vec![p.rows, p.cols], vec![0.0; p.rows * p.cols]),
+            )
+        })
+        .collect();
+    assert!(analyze_against_checkpoint(&cfg, &ckpt).is_empty(), "faithful checkpoint");
+    let mut stale = ckpt.clone();
+    stale.push(("param.l9.ghost.msg.w".into(), HostTensor::F32(vec![1, 1], vec![0.0])));
+    let d = analyze_against_checkpoint(&cfg, &stale);
+    let diag =
+        d.find(codes::CHECKPOINT_MISMATCH).unwrap_or_else(|| panic!("no TFGNN016 in:\n{d}"));
+    assert_eq!(diag.severity, Severity::Error);
+    assert_eq!(diag.path, "$.model");
+    assert!(diag.message.contains("l9.ghost.msg.w"), "{}", diag.message);
+}
+
+/// Builder validation catches duplicate pools before a plan ever
+/// compiles, so the parameter-collision pass is exercised directly as
+/// the defense-in-depth layer it is.
+#[test]
+fn param_collision_pass_flags_duplicate_names() {
+    let cfg = Json::parse(&read(S)).expect("config parses");
+    let mut d = Diagnostics::default();
+    let mut plan = ModelPlan::compile(&cfg, &mut d).expect("plan compiles");
+    assert!(d.is_empty(), "{d}");
+    let first = plan.params[0].clone();
+    plan.params.push(first);
+    tfgnn::analysis::passes::param_pass(&plan, None, &mut d);
+    let diag = d.find(codes::PARAM_COLLISION).unwrap_or_else(|| panic!("no TFGNN015 in:\n{d}"));
+    assert_eq!(diag.path, "$.model");
+}
+
+/// Every released code appears somewhere in this corpus — a new code
+/// without a corpus case is a hole in the no-false-negative story.
+#[test]
+fn corpus_covers_every_released_code() {
+    let mut covered: BTreeSet<&str> = CASES.iter().map(|c| c.code).collect();
+    covered.insert(codes::DEAD_SET); // read_but_unsampled_edge_set...
+    covered.insert(codes::CHECKPOINT_MISMATCH); // checkpoint_drift...
+    covered.insert(codes::PARAM_COLLISION); // param_collision_pass...
+    for info in CODES {
+        assert!(covered.contains(info.code), "{} has no corpus case", info.code);
+    }
+}
+
+/// `docs/diagnostics.md` is generated from the code table — the two
+/// must never drift.
+#[test]
+fn diagnostics_doc_matches_the_code_table() {
+    let want = render_markdown();
+    let got = std::fs::read_to_string("../docs/diagnostics.md")
+        .expect("docs/diagnostics.md exists (generated from analysis::diag)");
+    assert_eq!(
+        got, want,
+        "docs/diagnostics.md is stale — regenerate it from the table in \
+         rust/src/analysis/diag.rs (render_markdown)"
+    );
+}
