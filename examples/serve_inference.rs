@@ -50,6 +50,7 @@ fn main() -> tfgnn::Result<()> {
                 max_batch,
                 max_wait: Duration::from_millis(max_wait_ms),
                 sampler: SamplerConfig::with_threads(threads),
+                ..ServeConfig::default()
             },
         )?;
         // Closed-loop clients: 4 threads × 16 requests each.

@@ -1,0 +1,124 @@
+//! Bench: the production serving path under closed-loop load.
+//!
+//! Hosts a root-classification task server over a synth-MAG graph at
+//! 1/2/8 batcher lanes and drives it with the closed-loop load
+//! generator at stepped client concurrency (1/4/16). **Parity is
+//! asserted before any timing**, per lane count: every probe request
+//! must be answered bit-identically to a single-lane, single-request
+//! oracle server — a fast wrong server never produces a row. Each
+//! (lanes, concurrency) level lands a p50/p95/p99 latency row and each
+//! lane count a saturation-throughput row in `BENCH_serving.json` for
+//! the perf-tracking CI lane.
+//!
+//! Run: `cargo bench --bench serving`
+//! (set `TFGNN_BENCH_SMOKE=1` for the short CI mode).
+
+use std::sync::Arc;
+
+use tfgnn::ops::model_ref::ModelConfig;
+use tfgnn::sampler::inmem::InMemorySampler;
+use tfgnn::sampler::spec::mag_sampling_spec_scaled;
+use tfgnn::serve::loadgen::{self, LoadGenConfig};
+use tfgnn::serve::{serve_task, ServeConfig, TaskServerHandle};
+use tfgnn::synth::mag::{generate, MagConfig, Split};
+use tfgnn::train::native::NativeModel;
+use tfgnn::util::stats::{smoke, Bench, BenchReport, Summary};
+
+fn main() {
+    // Workload: smoke mode shrinks the graph and model so the CI lane
+    // finishes in seconds but still emits every row.
+    let (papers, authors, hidden, layers) =
+        if smoke() { (800, 1_200, 8, 1) } else { (4_000, 6_000, 32, 2) };
+    let (probe_count, requests_per_client) = if smoke() { (16, 4) } else { (48, 16) };
+    let mag = MagConfig {
+        num_papers: papers,
+        num_authors: authors,
+        num_institutions: 100,
+        num_fields: 60,
+        ..MagConfig::default()
+    };
+    let ds = generate(&mag);
+    let seeds = ds.papers_in_split(Split::Train);
+    let store = Arc::new(ds.store.clone());
+    let spec = mag_sampling_spec_scaled(&store.schema, 0.25).unwrap();
+    let sampler = Arc::new(InMemorySampler::new(store, spec, 42).unwrap());
+
+    let cfg = ModelConfig::for_mag(&mag, hidden, hidden, layers);
+    // Analyzer gate: the benched model must be one `tfgnn check` would
+    // accept — a rejected config times garbage.
+    let diags = tfgnn::analysis::check_model(&cfg);
+    assert!(diags.is_clean(), "analyzer rejected the bench model:\n{diags}");
+    let task = tfgnn::tasks::build(&cfg).unwrap();
+    let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
+
+    let probe: Vec<Vec<u32>> =
+        seeds.iter().take(probe_count.min(seeds.len())).map(|&s| vec![s]).collect();
+    assert!(!probe.is_empty(), "no probe seeds");
+
+    let bench = Bench::from_env(1, 3);
+    let mut report = BenchReport::new("serving");
+    let lg = LoadGenConfig { concurrency: vec![1, 4, 16], requests_per_client };
+
+    let make_server = |lanes: usize| -> TaskServerHandle {
+        serve_task(
+            Arc::clone(&model),
+            Arc::clone(&sampler),
+            Arc::clone(&task),
+            ServeConfig { lanes, ..ServeConfig::default() },
+        )
+        .unwrap()
+    };
+
+    for lanes in [1usize, 2, 8] {
+        let server = make_server(lanes);
+
+        // ---- parity gate (must pass before any timing) -----------------
+        // The oracle runs one lane with one-request waves: the simplest
+        // possible execution order. Any batching/lane-count effect on
+        // response bits would fail here.
+        let oracle = serve_task(
+            Arc::clone(&model),
+            Arc::clone(&sampler),
+            Arc::clone(&task),
+            ServeConfig { lanes: 1, max_batch: 1, ..ServeConfig::default() },
+        )
+        .unwrap();
+        loadgen::parity_gate(&server, &oracle, &probe).unwrap();
+        oracle.shutdown();
+        println!("# serve lanes={lanes}: parity gate passed ({} probes)", probe.len());
+
+        // ---- timed levels ---------------------------------------------
+        for _ in 0..bench.warmup {
+            loadgen::run(&server, &probe, &lg).unwrap();
+        }
+        let mut saturations = Vec::new();
+        let mut last = None;
+        for _ in 0..bench.iters.max(1) {
+            let r = loadgen::run(&server, &probe, &lg).unwrap();
+            saturations.push(r.saturation_throughput());
+            last = Some(r);
+        }
+        let r = last.unwrap();
+        for level in &r.levels {
+            assert_eq!(level.failed, 0, "lanes={lanes}: unexpected request failures");
+            report.row(
+                "serve/latency",
+                &format!("lanes={lanes} conc={}", level.concurrency),
+                lanes,
+                &level.latency,
+                "s",
+            );
+        }
+        report.row(
+            "serve/saturation",
+            &format!("lanes={lanes}"),
+            lanes,
+            &Summary::of(&saturations),
+            "items/s",
+        );
+        server.shutdown();
+    }
+
+    let path = report.write().expect("write bench json");
+    println!("\nwrote {}", path.display());
+}

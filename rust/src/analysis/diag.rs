@@ -316,7 +316,8 @@ impl Diagnostic {
             | Error::Pipeline(m)
             | Error::Runtime(m)
             | Error::Codec(m)
-            | Error::Xla(m) => m.clone(),
+            | Error::Xla(m)
+            | Error::Overloaded(m) => m.clone(),
             Error::Io(e) => e.to_string(),
         };
         if let Some(open) = m.rfind(" [TFGNN") {

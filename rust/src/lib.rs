@@ -64,6 +64,10 @@ pub enum Error {
     Io(std::io::Error),
     /// XLA/PJRT failure.
     Xla(String),
+    /// Admission control: the serving queue is full and the request
+    /// was rejected instead of queued (see `serve::batcher`). Clients
+    /// should back off and retry.
+    Overloaded(String),
 }
 
 impl std::fmt::Display for Error {
@@ -78,6 +82,7 @@ impl std::fmt::Display for Error {
             Error::Codec(m) => write!(f, "codec error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
         }
     }
 }

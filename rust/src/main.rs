@@ -12,6 +12,9 @@
 //! tfgnn eval     --ckpt PATH [--arch mpnn]
 //! tfgnn sweep    [--arch mpnn] [--epochs N] [--top K]
 //! tfgnn serve-bench [--requests N] [--max-batch B]
+//! tfgnn loadgen  [--lanes N] [--queue N] [--cache N] [--arch mpnn]
+//!                [--concurrency 1,4,16] [--requests N] [--swap]
+//!                [--json PATH]         # closed-loop serving load test
 //! ```
 //!
 //! All subcommands read `artifacts/manifest.json` (written by
@@ -60,9 +63,10 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("eval") => eval(args),
         Some("sweep") => run_sweep(args),
         Some("serve-bench") => serve_bench(args),
+        Some("loadgen") => loadgen(args),
         _ => {
             eprintln!(
-                "usage: tfgnn <info|check|generate|sample|train|eval|sweep|serve-bench> [--help]"
+                "usage: tfgnn <info|check|generate|sample|train|eval|sweep|serve-bench|loadgen> [--help]"
             );
             Ok(())
         }
@@ -324,6 +328,7 @@ fn serve_bench(args: &Args) -> Result<()> {
             sampler: tfgnn::sampler::SamplerConfig::with_threads(
                 args.get_or("sampler-threads", 1usize)?,
             ),
+            ..Default::default()
         },
     )?;
     let seeds = env.dataset.papers_in_split(tfgnn::synth::mag::Split::Test);
@@ -344,5 +349,153 @@ fn serve_bench(args: &Args) -> Result<()> {
         s.p95 * 1e3
     );
     handle.shutdown();
+    Ok(())
+}
+
+/// `tfgnn loadgen`: closed-loop load generation against an in-process
+/// multi-lane native task server on a synthetic MAG graph — no
+/// artifacts needed. Response parity against a single-lane cache-off
+/// oracle is gated *before* any timing; then client concurrency steps
+/// through `--concurrency` and each level reports p50/p95/p99 latency,
+/// throughput, and admission-control rejections. `--swap` hot-swaps to
+/// freshly initialized weights between the parity gate and the load
+/// phase to exercise the zero-downtime swap path under traffic.
+fn loadgen(args: &Args) -> Result<()> {
+    use tfgnn::sampler::inmem::InMemorySampler;
+    use tfgnn::sampler::spec::mag_sampling_spec_scaled;
+    use tfgnn::serve::loadgen::{parity_gate, LoadGenConfig};
+    use tfgnn::serve::{serve_task, ServeConfig};
+    use tfgnn::synth::mag::{generate, MagConfig, Split};
+    use tfgnn::train::native::NativeModel;
+
+    let papers: usize = args.get_or("papers", 800)?;
+    let authors: usize = args.get_or("authors", 1_200)?;
+    let hidden: usize = args.get_or("hidden", 8)?;
+    let layers: usize = args.get_or("layers", 1)?;
+    let arch = args.get("arch").unwrap_or("mpnn");
+    let lanes: usize = args.get_or("lanes", 2)?;
+    let queue: usize = args.get_or("queue", 1024)?;
+    let cache: usize = args.get_or("cache", 0)?;
+    let max_batch: usize = args.get_or("max-batch", 8)?;
+    let requests: usize = args.get_or("requests", 32)?;
+    let concurrency = args
+        .get("concurrency")
+        .unwrap_or("1,4,16")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim().parse::<usize>().map_err(|e| {
+                tfgnn::Error::Pipeline(format!("bad --concurrency entry {s:?}: {e}"))
+            })
+        })
+        .collect::<Result<Vec<usize>>>()?;
+
+    let mag = MagConfig {
+        num_papers: papers,
+        num_authors: authors,
+        num_institutions: 100,
+        num_fields: 60,
+        ..MagConfig::default()
+    };
+    let ds = generate(&mag);
+    let seeds = ds.papers_in_split(Split::Train);
+    let store = Arc::new(ds.store);
+    let spec = mag_sampling_spec_scaled(&store.schema, 0.25)?;
+    let sampler = Arc::new(InMemorySampler::new(store, spec, 42)?);
+    let cfg = tfgnn::ops::model_ref::ModelConfig::for_mag(&mag, hidden, hidden, layers)
+        .with_arch(arch);
+    let swap_cfg = cfg.clone();
+    let task = tfgnn::tasks::build(&cfg)?;
+    let model = Arc::new(NativeModel::init(cfg, 7)?);
+
+    let server = serve_task(
+        Arc::clone(&model),
+        Arc::clone(&sampler),
+        Arc::clone(&task),
+        ServeConfig {
+            lanes,
+            queue_capacity: queue,
+            cache_capacity: cache,
+            max_batch,
+            ..ServeConfig::default()
+        },
+    )?;
+    let oracle = serve_task(
+        model,
+        sampler,
+        task,
+        ServeConfig { lanes: 1, max_batch: 1, ..ServeConfig::default() },
+    )?;
+    let probe: Vec<Vec<u32>> =
+        seeds.iter().take(64.min(seeds.len())).map(|&s| vec![s]).collect();
+    parity_gate(&server, &oracle, &probe)?;
+    oracle.shutdown();
+    println!(
+        "parity: {} probes bit-identical to the single-lane oracle (lanes={lanes} cache={cache})",
+        probe.len()
+    );
+
+    if args.flag("swap") {
+        let next = Arc::new(NativeModel::init(swap_cfg, 8)?);
+        let generation = server.swap_model(next)?;
+        println!("hot-swap: serving generation {generation}");
+    }
+
+    let lg = LoadGenConfig { concurrency, requests_per_client: requests };
+    let report = tfgnn::serve::loadgen::run(&server, &probe, &lg)?;
+    for level in &report.levels {
+        println!(
+            "conc {:>4}: {:>8.1} req/s | p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms | \
+             ok {} rejected {} failed {}",
+            level.concurrency,
+            level.throughput,
+            level.latency.p50 * 1e3,
+            level.latency.p95 * 1e3,
+            level.latency.p99 * 1e3,
+            level.ok,
+            level.rejected,
+            level.failed,
+        );
+    }
+    println!("saturation: {:.1} req/s", report.saturation_throughput());
+    let relaxed = std::sync::atomic::Ordering::Relaxed;
+    println!(
+        "server: {} admitted, {} batches, {} rejected, cache {} hit / {} miss / {} evicted, generation {}",
+        server.stats.requests.load(relaxed),
+        server.stats.batches.load(relaxed),
+        server.stats.rejected.load(relaxed),
+        server.stats.cache_hits.load(relaxed),
+        server.stats.cache_misses.load(relaxed),
+        server.stats.cache_evictions.load(relaxed),
+        server.generation(),
+    );
+
+    if let Some(path) = args.get("json") {
+        use tfgnn::util::json::{obj, Json};
+        let levels: Vec<Json> = report
+            .levels
+            .iter()
+            .map(|l| {
+                obj(vec![
+                    ("concurrency", Json::Int(l.concurrency as i64)),
+                    ("throughput", Json::Num(l.throughput)),
+                    ("p50", Json::Num(l.latency.p50)),
+                    ("p95", Json::Num(l.latency.p95)),
+                    ("p99", Json::Num(l.latency.p99)),
+                    ("ok", Json::Int(l.ok as i64)),
+                    ("rejected", Json::Int(l.rejected as i64)),
+                    ("failed", Json::Int(l.failed as i64)),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("saturation_throughput", Json::Num(report.saturation_throughput())),
+            ("generation", Json::Int(server.generation() as i64)),
+            ("levels", Json::Arr(levels)),
+        ]);
+        std::fs::write(path, doc.to_pretty())?;
+        println!("wrote {path}");
+    }
+    server.shutdown();
     Ok(())
 }

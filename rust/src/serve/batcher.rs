@@ -1,0 +1,332 @@
+//! Bounded MPMC request queue + the multi-lane batcher loop.
+//!
+//! The serving path decouples *admission* from *execution*:
+//!
+//! * [`BoundedQueue`] is the admission point. `push` never blocks — a
+//!   full queue rejects the item immediately ([`PushError::Full`], which
+//!   the server surfaces as [`crate::Error::Overloaded`]) so heavy
+//!   traffic produces fast structured rejections instead of an unbounded
+//!   backlog with unbounded latency.
+//! * N batcher *lanes* (one OS thread each) pop from the shared queue,
+//!   gather requests into a wave (up to `max_batch`, waiting at most
+//!   `max_wait` for stragglers) and hand the wave to the caller's
+//!   executor. Lanes drain the queue after close: `close()` stops new
+//!   admissions, but every already-admitted request is still answered —
+//!   the drain-on-shutdown contract.
+//!
+//! The queue is a plain `Mutex<VecDeque>` + `Condvar` — std-only, no
+//! lock-free cleverness, which keeps it obviously correct under TSan.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a non-blocking [`BoundedQueue::push`] did not enqueue. The
+/// rejected item is handed back so the caller can reply to it.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue is at capacity — admission control rejects the item.
+    Full(T),
+    /// Queue was closed by shutdown — no new admissions.
+    Closed(T),
+}
+
+/// Outcome of a timed pop (used by lanes to gather a wave).
+pub enum PopTimeout<T> {
+    /// An item arrived within the deadline.
+    Item(T),
+    /// Deadline elapsed with the queue open but empty.
+    Timeout,
+    /// Queue closed and fully drained — the lane should exit.
+    Drained,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer queue with non-blocking
+/// admission and drain-after-close pops.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// `capacity` is clamped to at least 1 — a zero-capacity queue
+    /// would reject everything.
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Non-blocking admission: enqueue or hand the item straight back.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut inner = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop. Returns `None` only when the queue is closed AND
+    /// empty — items admitted before `close()` are always delivered.
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut inner = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = match self.not_empty.wait(inner) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    /// Pop with a deadline, used to gather batch stragglers.
+    pub fn pop_timeout(&self, timeout: Duration) -> PopTimeout<T> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                return PopTimeout::Item(item);
+            }
+            if inner.closed {
+                return PopTimeout::Drained;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopTimeout::Timeout;
+            }
+            let (g, res) = match self.not_empty.wait_timeout(inner, deadline - now) {
+                Ok(ok) => ok,
+                Err(p) => p.into_inner(),
+            };
+            inner = g;
+            if res.timed_out() && inner.items.is_empty() {
+                if inner.closed {
+                    return PopTimeout::Drained;
+                }
+                return PopTimeout::Timeout;
+            }
+        }
+    }
+
+    /// Close admissions and wake every waiting lane. Idempotent.
+    pub fn close(&self) {
+        let mut inner = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        inner.closed = true;
+        drop(inner);
+        self.not_empty.notify_all();
+    }
+
+    /// True once `close()` has been called (new pushes are rejected).
+    pub fn is_closed(&self) -> bool {
+        match self.inner.lock() {
+            Ok(g) => g.closed,
+            Err(p) => p.into_inner().closed,
+        }
+    }
+
+    /// Current backlog length (for stats / tests).
+    pub fn len(&self) -> usize {
+        match self.inner.lock() {
+            Ok(g) => g.items.len(),
+            Err(p) => p.into_inner().items.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One batcher lane: block for the first request, gather up to
+/// `max_batch` requests waiting at most `max_wait` for stragglers, hand
+/// the wave to `handle_wave`, repeat. Returns when the queue is closed
+/// and drained. Every popped request is passed to `handle_wave` exactly
+/// once — the executor owns replying to each request (success or
+/// structured error), preserving the drain-on-shutdown contract.
+pub fn lane_loop<T, F>(queue: &BoundedQueue<T>, max_batch: usize, max_wait: Duration, mut handle_wave: F)
+where
+    F: FnMut(Vec<T>),
+{
+    let max_batch = max_batch.max(1);
+    loop {
+        let first = match queue.pop_wait() {
+            Some(item) => item,
+            None => return, // closed + drained
+        };
+        let mut wave = Vec::with_capacity(max_batch);
+        wave.push(first);
+        let deadline = Instant::now() + max_wait;
+        while wave.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match queue.pop_timeout(deadline - now) {
+                PopTimeout::Item(item) => wave.push(item),
+                PopTimeout::Timeout => break,
+                PopTimeout::Drained => break, // flush what we have
+            }
+        }
+        handle_wave(wave);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_fifo() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop_wait(), Some(1));
+        assert_eq!(q.pop_wait(), Some(2));
+    }
+
+    #[test]
+    fn full_queue_rejects_without_blocking() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        match q.push(3) {
+            Err(PushError::Full(item)) => assert_eq!(item, 3),
+            other => panic!("expected Full rejection, got {other:?}"),
+        }
+        // Pop one slot free and admission resumes.
+        assert_eq!(q.pop_wait(), Some(1));
+        q.push(3).unwrap();
+    }
+
+    #[test]
+    fn closed_queue_rejects_new_but_drains_old() {
+        let q = BoundedQueue::new(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        match q.push(3) {
+            Err(PushError::Closed(item)) => assert_eq!(item, 3),
+            other => panic!("expected Closed rejection, got {other:?}"),
+        }
+        assert_eq!(q.pop_wait(), Some(1));
+        assert_eq!(q.pop_wait(), Some(2));
+        assert_eq!(q.pop_wait(), None);
+    }
+
+    #[test]
+    fn pop_timeout_times_out_when_open_and_empty() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        match q.pop_timeout(Duration::from_millis(5)) {
+            PopTimeout::Timeout => {}
+            PopTimeout::Item(_) => panic!("unexpected item"),
+            PopTimeout::Drained => panic!("queue is open"),
+        }
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_wait());
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn lane_loop_batches_up_to_max() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(64));
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let q2 = Arc::clone(&q);
+        let waves: Vec<Vec<u32>> = {
+            let mut collected = Vec::new();
+            lane_loop(&q2, 4, Duration::from_millis(1), |wave| collected.push(wave));
+            collected
+        };
+        let total: usize = waves.iter().map(|w| w.len()).sum();
+        assert_eq!(total, 10, "every request handled exactly once");
+        assert!(waves.iter().all(|w| w.len() <= 4), "wave exceeded max_batch: {waves:?}");
+        let mut flat: Vec<u32> = waves.into_iter().flatten().collect();
+        flat.sort_unstable();
+        assert_eq!(flat, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_producers_and_lanes_conserve_items() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(1024));
+        let handled = Arc::new(Mutex::new(Vec::new()));
+        let mut lanes = Vec::new();
+        for _ in 0..3 {
+            let q = Arc::clone(&q);
+            let handled = Arc::clone(&handled);
+            lanes.push(std::thread::spawn(move || {
+                lane_loop(&q, 8, Duration::from_micros(200), |wave| {
+                    let mut g = handled.lock().unwrap();
+                    g.extend(wave);
+                });
+            }));
+        }
+        let mut producers = Vec::new();
+        for p in 0..4u32 {
+            let q = Arc::clone(&q);
+            producers.push(std::thread::spawn(move || {
+                for i in 0..50u32 {
+                    // Capacity is ample, so push never rejects here.
+                    q.push(p * 1000 + i).unwrap();
+                }
+            }));
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+        q.close();
+        for h in lanes {
+            h.join().unwrap();
+        }
+        let mut got = handled.lock().unwrap().clone();
+        got.sort_unstable();
+        let mut want: Vec<u32> =
+            (0..4u32).flat_map(|p| (0..50u32).map(move |i| p * 1000 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "items lost or duplicated across lanes");
+    }
+}

@@ -1,0 +1,253 @@
+//! Closed-loop load generator for the serving benches.
+//!
+//! Drives a running [`TaskServerHandle`] at stepped client
+//! concurrency: each client is a closed loop (it waits for its
+//! response before issuing the next request), so offered load tracks
+//! the server's actual capacity instead of running away from it — the
+//! classic way to find the latency/throughput knee without open-loop
+//! coordinated omission. [`Error::Overloaded`] rejections count
+//! separately from real failures, so admission control shows up as a
+//! rejection rate, not as an error.
+//!
+//! [`parity_gate`] is the correctness precondition: before any timing,
+//! the server under test must answer a probe set bit-identically to a
+//! single-lane cache-off oracle server. A fast wrong server never
+//! produces a bench row.
+
+use std::time::{Duration, Instant};
+
+use crate::tasks::TaskOutput;
+use crate::util::stats::Summary;
+use crate::{Error, Result};
+
+use super::TaskServerHandle;
+
+/// Load-generation schedule.
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// Stepped client counts, driven in order (e.g. `[1, 4, 16]`).
+    pub concurrency: Vec<usize>,
+    /// Requests each client issues per level.
+    pub requests_per_client: usize,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> LoadGenConfig {
+        LoadGenConfig { concurrency: vec![1, 4, 16], requests_per_client: 32 }
+    }
+}
+
+/// Measured outcome of one concurrency level.
+#[derive(Debug, Clone)]
+pub struct LoadGenLevel {
+    pub concurrency: usize,
+    /// Successfully answered requests.
+    pub ok: usize,
+    /// Requests rejected by admission control ([`Error::Overloaded`]).
+    pub rejected: usize,
+    /// Requests that failed for any other reason.
+    pub failed: usize,
+    /// Wall-clock time for the whole level.
+    pub elapsed: Duration,
+    /// Successful responses per second of wall clock.
+    pub throughput: f64,
+    /// Per-request latency summary in seconds (successful responses
+    /// only — p50/p95/p99 are the bench's headline rows).
+    pub latency: Summary,
+}
+
+/// All levels of one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadGenReport {
+    pub levels: Vec<LoadGenLevel>,
+}
+
+impl LoadGenReport {
+    /// Saturation throughput: the best successful-responses/sec
+    /// observed across the stepped levels.
+    pub fn saturation_throughput(&self) -> f64 {
+        self.levels.iter().map(|l| l.throughput).fold(0.0, f64::max)
+    }
+}
+
+/// Drive the server through every concurrency level of `cfg`. Client
+/// `c` of a level walks `seed_lists` round-robin starting at a
+/// client-specific offset, so levels re-use the same request
+/// population while clients spread across it.
+pub fn run(
+    handle: &TaskServerHandle,
+    seed_lists: &[Vec<u32>],
+    cfg: &LoadGenConfig,
+) -> Result<LoadGenReport> {
+    if seed_lists.is_empty() {
+        return Err(Error::Runtime("loadgen: empty seed-list population".into()));
+    }
+    let mut levels = Vec::new();
+    for &clients in &cfg.concurrency {
+        let clients = clients.max(1);
+        let n = cfg.requests_per_client.max(1);
+        let mut results: Vec<(Vec<f64>, usize, usize)> = Vec::new();
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            let mut workers = Vec::new();
+            for c in 0..clients {
+                workers.push(s.spawn(move || {
+                    let mut lat = Vec::with_capacity(n);
+                    let (mut rejected, mut failed) = (0usize, 0usize);
+                    for i in 0..n {
+                        let seeds = &seed_lists[(c * n + i) % seed_lists.len()];
+                        match handle.predict(seeds) {
+                            Ok(r) => lat.push(r.latency.as_secs_f64()),
+                            Err(Error::Overloaded(_)) => rejected += 1,
+                            Err(_) => failed += 1,
+                        }
+                    }
+                    (lat, rejected, failed)
+                }));
+            }
+            for w in workers {
+                match w.join() {
+                    Ok(r) => results.push(r),
+                    // A panicked client counts its whole quota failed.
+                    Err(_) => results.push((Vec::new(), 0, n)),
+                }
+            }
+        });
+        let elapsed = t0.elapsed();
+        let mut lat: Vec<f64> = Vec::new();
+        let (mut rejected, mut failed) = (0usize, 0usize);
+        for (l, r, f) in results {
+            lat.extend(l);
+            rejected += r;
+            failed += f;
+        }
+        let ok = lat.len();
+        if ok == 0 {
+            return Err(Error::Runtime(format!(
+                "loadgen: no successful responses at concurrency {clients} \
+                 ({rejected} rejected, {failed} failed)"
+            )));
+        }
+        levels.push(LoadGenLevel {
+            concurrency: clients,
+            ok,
+            rejected,
+            failed,
+            elapsed,
+            throughput: ok as f64 / elapsed.as_secs_f64().max(1e-9),
+            latency: Summary::of(&lat),
+        });
+    }
+    Ok(LoadGenReport { levels })
+}
+
+/// Assert that `server` answers every probe bit-identically to
+/// `oracle` (a single-lane, cache-off reference). Run this before
+/// timing: a fast wrong server must never produce a bench row.
+pub fn parity_gate(
+    server: &TaskServerHandle,
+    oracle: &TaskServerHandle,
+    seed_lists: &[Vec<u32>],
+) -> Result<()> {
+    for seeds in seed_lists {
+        let got = server.predict(seeds)?;
+        let want = oracle.predict(seeds)?;
+        if !outputs_bit_identical(&got.output, &want.output) {
+            return Err(Error::Runtime(format!(
+                "parity violation for seeds {seeds:?}: {:?} != oracle {:?}",
+                got.output, want.output
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Bit-level equality of task outputs (f32 compared via `to_bits`),
+/// the determinism contract the serving tests and benches pin.
+pub fn outputs_bit_identical(a: &TaskOutput, b: &TaskOutput) -> bool {
+    match (a, b) {
+        (
+            TaskOutput::Classification { logits: la, predicted: pa },
+            TaskOutput::Classification { logits: lb, predicted: pb },
+        ) => {
+            pa == pb
+                && la.len() == lb.len()
+                && la.iter().zip(lb).all(|(x, y)| x.to_bits() == y.to_bits())
+        }
+        (TaskOutput::LinkScore { score: a }, TaskOutput::LinkScore { score: b }) => {
+            a.to_bits() == b.to_bits()
+        }
+        (TaskOutput::Regression { value: a }, TaskOutput::Regression { value: b }) => {
+            a.to_bits() == b.to_bits()
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::model_ref::ModelConfig;
+    use crate::sampler::inmem::InMemorySampler;
+    use crate::sampler::spec::mag_sampling_spec_scaled;
+    use crate::serve::{serve_task, ServeConfig};
+    use crate::synth::mag::{generate, MagConfig, Split};
+    use crate::train::native::NativeModel;
+    use std::sync::Arc;
+
+    fn tiny_task_server(lanes: usize) -> (TaskServerHandle, Vec<Vec<u32>>) {
+        let mag = MagConfig::tiny();
+        let ds = generate(&mag);
+        let seeds = ds.papers_in_split(Split::Train);
+        let store = Arc::new(ds.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+        let sampler = Arc::new(InMemorySampler::new(store, spec, 3).unwrap());
+        let cfg = ModelConfig::for_mag(&mag, 8, 8, 1);
+        let task = crate::tasks::build(&cfg).unwrap();
+        let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
+        let handle = serve_task(
+            model,
+            sampler,
+            task,
+            ServeConfig { lanes, ..ServeConfig::default() },
+        )
+        .unwrap();
+        let lists: Vec<Vec<u32>> = seeds.iter().take(6).map(|&s| vec![s]).collect();
+        (handle, lists)
+    }
+
+    #[test]
+    fn closed_loop_counts_and_latency() {
+        let (handle, lists) = tiny_task_server(2);
+        let cfg = LoadGenConfig { concurrency: vec![1, 2], requests_per_client: 4 };
+        let report = run(&handle, &lists, &cfg).unwrap();
+        assert_eq!(report.levels.len(), 2);
+        for level in &report.levels {
+            assert_eq!(level.ok + level.rejected + level.failed, level.concurrency * 4);
+            assert!(level.throughput > 0.0);
+            assert!(level.latency.p50 > 0.0);
+            assert!(level.latency.p99 >= level.latency.p50);
+        }
+        assert!(report.saturation_throughput() > 0.0);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn parity_gate_passes_against_an_identical_oracle() {
+        let (server, lists) = tiny_task_server(2);
+        let (oracle, _) = tiny_task_server(1);
+        parity_gate(&server, &oracle, &lists).unwrap();
+        server.shutdown();
+        oracle.shutdown();
+    }
+
+    #[test]
+    fn outputs_bit_identical_discriminates() {
+        let a = TaskOutput::LinkScore { score: 1.25 };
+        let b = TaskOutput::LinkScore { score: 1.25 };
+        let c = TaskOutput::LinkScore { score: 1.250001 };
+        assert!(outputs_bit_identical(&a, &b));
+        assert!(!outputs_bit_identical(&a, &c));
+        assert!(!outputs_bit_identical(&a, &TaskOutput::Regression { value: 1.25 }));
+    }
+}

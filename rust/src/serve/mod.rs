@@ -1,40 +1,62 @@
-//! Online inference (paper §6.3).
+//! Online inference (paper §6.3) — the production serving subsystem.
 //!
-//! The paper's serving story: host the exported model behind a service;
-//! the caller provides GraphTensors "perhaps via the in-memory
-//! sampler". [`InferenceServer`] implements exactly that shape — a
-//! vLLM-router-style dynamic batcher in front of a forward program:
+//! The paper's serving story is models in front of heavy traffic; this
+//! module implements the full request path as four cooperating pieces:
 //!
-//! * clients submit root node ids ([`ServerHandle::submit`]);
-//! * the batcher thread collects up to `max_batch` requests or until
-//!   `max_wait` elapses, samples the whole wave of roots — **in
-//!   parallel** over the server's sampling pool when
-//!   [`ServeConfig::sampler`] asks for threads — and runs one forward
-//!   execution;
-//! * each request gets back its logits row, predicted class, and
-//!   timing (queue + batch + execute breakdown for the benches).
+//! * **Admission + lanes** ([`batcher`]) — clients submit into a
+//!   *bounded* MPMC queue; a full queue rejects the request immediately
+//!   with [`Error::Overloaded`] (admission control, not an unbounded
+//!   backlog). [`ServeConfig::lanes`] batcher threads pull from the
+//!   shared queue, each gathering up to `max_batch` requests (waiting
+//!   at most `max_wait` for stragglers) and executing the wave.
+//! * **Subgraph cache** ([`cache`]) — the task server can memoize
+//!   sampled subgraphs keyed by the request's seed list
+//!   ([`ServeConfig::cache_capacity`]). The sampler is a pure function
+//!   of `(store, spec, plan_seed, seeds)`, so a hit is bit-identical to
+//!   a re-sample; hit/miss/eviction counters land in [`ServeStats`].
+//! * **Hot-swap** ([`swap`]) — the native model lives behind an
+//!   atomically swappable [`swap::ModelSlot`]. Each lane snapshots the
+//!   model `Arc` once per wave, so a batch never mixes parameters from
+//!   two models; responses carry the snapshot's `generation` so
+//!   clients (and the concurrency tests) can tell which weights
+//!   answered.
+//! * **Load generator** ([`loadgen`]) — a closed-loop driver that
+//!   steps client concurrency against a running server and summarizes
+//!   p50/p95/p99 latency, saturation throughput and rejection counts
+//!   (the `benches/serving.rs` + `tfgnn loadgen` entry points).
 //!
-//! The batcher loop is generic over the executor, with two backends:
-//! [`serve`] runs the AOT `forward` program on PJRT (merge + pad to the
-//! static shape first), [`serve_native`] runs the pure-Rust
-//! [`NativeModel`] forward per sampled subgraph — no padding, no
-//! artifacts, fully offline. [`serve_task`] generalizes the native
-//! backend across the task subsystem: requests are *seed lists*
-//! (`[root]` for root tasks, `[source, target]` for link prediction)
-//! and responses are task-shaped ([`crate::tasks::TaskOutput`] —
-//! logits, a pair's link score, or a regression value).
+//! Three server constructors share the machinery: [`serve`] runs the
+//! AOT `forward` program on PJRT (single execution lane — PJRT handles
+//! are not `Send` — but the same bounded-admission front door),
+//! [`serve_native`] runs the pure-Rust [`NativeModel`] forward per
+//! sampled subgraph across N lanes, and [`serve_task`] generalizes the
+//! native backend across the task subsystem (requests are *seed
+//! lists*, responses are [`crate::tasks::TaskOutput`]).
 //!
-//! Shutdown contract: dropping the client side stops *accepting*
-//! requests, but the batcher drains every already-submitted request
-//! before exiting — no response is silently dropped (regression-tested
-//! below).
+//! Contracts, pinned by `tests/serve_concurrency.rs` at 1/2/8 lanes
+//! (and under the nightly TSan lane):
+//!
+//! * per-request structured errors — one bad request never fails its
+//!   wave-mates on the task server, and an executor error replies to
+//!   every request in the wave;
+//! * drain-on-shutdown — [`ServerHandle::shutdown`] stops *admissions*
+//!   but every already-admitted request is still answered; submitting
+//!   after shutdown returns a structured error instead of hanging;
+//! * determinism — each individual response is bit-identical at any
+//!   lane count, with caching on or off.
+
+pub mod batcher;
+pub mod cache;
+pub mod loadgen;
+pub mod swap;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::graph::pad::{fit_or_skip, PadSpec};
+use crate::graph::GraphTensor;
 use crate::runtime::batch::{build_batch, is_batch_slot, RootTask};
 use crate::runtime::manifest::ModelEntry;
 use crate::runtime::{host_to_literal, literal_to_host, HostTensor, Program, Runtime};
@@ -43,6 +65,10 @@ use crate::sampler::SamplerConfig;
 use crate::train::native::NativeModel;
 use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
+
+use batcher::{lane_loop, BoundedQueue, PushError};
+use cache::LruCache;
+use swap::ModelSlot;
 
 /// A completed prediction.
 #[derive(Debug, Clone)]
@@ -54,6 +80,9 @@ pub struct Response {
     pub latency: Duration,
     /// Requests in the same executed batch.
     pub batch_size: usize,
+    /// Which model answered: the serving slot's swap generation
+    /// (1 until the first hot-swap; always 1 on the AOT backend).
+    pub generation: u64,
 }
 
 struct Request {
@@ -67,12 +96,26 @@ struct Request {
 pub struct ServeConfig {
     /// Max roots per forward execution (≤ the model's component cap - 1).
     pub max_batch: usize,
-    /// Max time the batcher waits to fill a batch.
+    /// Max time a lane waits to fill a batch.
     pub max_wait: Duration,
-    /// Sampling-stage knobs: with `threads > 1` the batcher samples a
-    /// whole wave of roots concurrently on a pool it owns (spawned once
-    /// at startup), before padding. Results are bit-for-bit those of
-    /// serial sampling.
+    /// Concurrent batcher lanes pulling from the shared queue. The AOT
+    /// backend always runs one execution lane (PJRT handles are not
+    /// `Send`); native backends spawn exactly this many.
+    pub lanes: usize,
+    /// Admission-control bound: requests beyond this backlog are
+    /// rejected with [`Error::Overloaded`] instead of queued.
+    pub queue_capacity: usize,
+    /// Seed-keyed LRU subgraph cache entries on the task server
+    /// (0 disables caching). Hits skip re-sampling; responses are
+    /// bit-identical either way because sampling is deterministic.
+    pub cache_capacity: usize,
+    /// Synthetic extra latency added to every executed wave. Zero in
+    /// production; the overload tests and backpressure experiments use
+    /// it to make saturation deterministic.
+    pub wave_delay: Duration,
+    /// Sampling-stage knobs: with `threads > 1` each lane samples its
+    /// wave concurrently on a pool it owns (spawned once at startup).
+    /// Results are bit-for-bit those of serial sampling.
     pub sampler: SamplerConfig,
 }
 
@@ -81,6 +124,10 @@ impl Default for ServeConfig {
         ServeConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
+            lanes: 1,
+            queue_capacity: 1024,
+            cache_capacity: 0,
+            wave_delay: Duration::ZERO,
             sampler: SamplerConfig::default(),
         }
     }
@@ -89,6 +136,7 @@ impl Default for ServeConfig {
 /// Aggregate server counters.
 #[derive(Debug, Default)]
 pub struct ServeStats {
+    /// Requests admitted into the queue (rejections not included).
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     /// Waves whose executor failed — every request in the wave got an
@@ -96,24 +144,55 @@ pub struct ServeStats {
     /// exceeding the pad caps; the native backend never pads, so here
     /// it means a sampling or forward error.
     pub failed_batches: AtomicU64,
+    /// Requests rejected by admission control ([`Error::Overloaded`]).
+    pub rejected: AtomicU64,
+    /// Task-server subgraph cache hits (0 when the cache is disabled).
+    pub cache_hits: AtomicU64,
+    /// Task-server subgraph cache misses (0 when the cache is disabled).
+    pub cache_misses: AtomicU64,
+    /// Entries evicted from the subgraph cache by capacity pressure.
+    pub cache_evictions: AtomicU64,
+    /// Successful model hot-swaps.
+    pub swaps: AtomicU64,
 }
 
-/// Client handle: submit requests, then `shutdown()`.
+/// Client handle: submit requests, then [`shutdown`](Self::shutdown).
+///
+/// The handle is `Sync` — closed-loop clients share one handle across
+/// threads (`std::thread::scope`) — and dropping it shuts the server
+/// down with the same draining contract as an explicit `shutdown()`.
 pub struct ServerHandle {
-    tx: Option<Sender<Request>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    queue: Arc<BoundedQueue<Request>>,
+    lanes: Mutex<Vec<std::thread::JoinHandle<()>>>,
     pub stats: Arc<ServeStats>,
+    /// The swappable model slot (`None` on the AOT backend, whose
+    /// params are uploaded to the device once at startup).
+    slot: Option<Arc<ModelSlot>>,
 }
 
 impl ServerHandle {
     /// Submit a request; returns the channel the response arrives on.
-    /// If the batcher is gone the reply sender is dropped with the
-    /// request, so the caller's `recv` fails instead of panicking here.
+    /// Admission control replies immediately with
+    /// [`Error::Overloaded`] when the queue is full, and with a
+    /// structured runtime error after shutdown — the caller's `recv`
+    /// always gets an answer, it never hangs on a dead channel.
     pub fn submit(&self, seed: u32) -> Receiver<Result<Response>> {
         let (reply_tx, reply_rx) = channel();
         let req = Request { seed, submitted: Instant::now(), reply: reply_tx };
-        if let Some(tx) = self.tx.as_ref() {
-            let _ = tx.send(req);
+        match self.queue.push(req) {
+            Ok(()) => {}
+            Err(PushError::Full(req)) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Err(Error::Overloaded(format!(
+                    "serving queue full ({} pending); retry with backoff",
+                    self.queue.capacity()
+                ))));
+            }
+            Err(PushError::Closed(req)) => {
+                let _ = req
+                    .reply
+                    .send(Err(Error::Runtime("server is shut down".into())));
+            }
         }
         reply_rx
     }
@@ -125,92 +204,107 @@ impl ServerHandle {
             .map_err(|_| Error::Runtime("server dropped request".into()))?
     }
 
-    /// Stop accepting requests and join the worker. Requests submitted
-    /// before the call are still executed and answered (the batcher
-    /// drains its queue before exiting).
-    pub fn shutdown(mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+    /// Stop accepting requests and join the lanes. Requests admitted
+    /// before the call are still executed and answered (lanes drain
+    /// the queue before exiting). Idempotent; later `submit`s get a
+    /// structured error.
+    pub fn shutdown(&self) {
+        close_and_join(&self.queue, &self.lanes);
+    }
+
+    /// Hot-swap the served model (native backends only). In-flight
+    /// waves finish on the old weights; later waves pick up the new
+    /// ones — no batch ever mixes the two. Returns the new generation.
+    pub fn swap_model(&self, model: Arc<NativeModel>) -> Result<u64> {
+        let slot = self.require_slot()?;
+        let generation = slot.swap_model(model)?;
+        self.stats.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(generation)
+    }
+
+    /// Hot-swap to the weights in a checkpoint file (native only).
+    pub fn swap_checkpoint(&self, path: &std::path::Path) -> Result<u64> {
+        let slot = self.require_slot()?;
+        let generation = slot.swap_checkpoint(path)?;
+        self.stats.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(generation)
+    }
+
+    /// Current model generation (1 until the first swap; the AOT
+    /// backend is pinned at 1).
+    pub fn generation(&self) -> u64 {
+        self.slot.as_ref().map(|s| s.generation()).unwrap_or(1)
+    }
+
+    fn require_slot(&self) -> Result<&Arc<ModelSlot>> {
+        self.slot.as_ref().ok_or_else(|| {
+            Error::Runtime(
+                "hot-swap is only supported on native servers (AOT params \
+                 are uploaded to the device at startup)"
+                    .into(),
+            )
+        })
     }
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        close_and_join(&self.queue, &self.lanes);
     }
 }
 
-/// The dynamic batcher: collect a wave (first request blocks, then fill
-/// until `max_batch` or `max_wait`), execute it, fan the logits rows
-/// back out to the requesters.
-///
-/// `exec` maps an ordered wave of seeds to `(flat logits, classes)` —
-/// the one backend-specific step. Draining guarantee: `rx.recv()`
-/// keeps returning buffered requests after every sender is dropped, so
-/// shutdown only terminates the loop once the queue is empty.
-fn batcher_loop<E>(
-    rx: Receiver<Request>,
-    max_batch: usize,
-    max_wait: Duration,
-    stats: Arc<ServeStats>,
-    mut exec: E,
-) where
-    E: FnMut(&[u32]) -> Result<(Vec<f32>, usize)>,
-{
-    loop {
-        // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders gone AND queue empty: shutdown
-        };
-        let mut wave = vec![first];
-        let deadline = Instant::now() + max_wait;
-        while wave.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => wave.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+/// Shared shutdown path: close admissions, then join every lane
+/// exactly once (the vec is drained under its lock, so concurrent
+/// `shutdown()` + `Drop` cannot double-join).
+fn close_and_join<T>(
+    queue: &BoundedQueue<T>,
+    lanes: &Mutex<Vec<std::thread::JoinHandle<()>>>,
+) {
+    queue.close();
+    let mut joined = match lanes.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    for h in joined.drain(..) {
+        let _ = h.join();
+    }
+}
+
+/// Fan one executed logits wave back out to its requesters (or fan the
+/// wave's error to every request), updating failure counters.
+fn reply_logits_wave(
+    wave: Vec<Request>,
+    result: Result<(Vec<f32>, usize)>,
+    generation: u64,
+    stats: &ServeStats,
+) {
+    let batch_size = wave.len();
+    match result {
+        Ok((flat, classes)) => {
+            for (k, req) in wave.into_iter().enumerate() {
+                let row = flat[k * classes..(k + 1) * classes].to_vec();
+                let predicted = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                let resp = Response {
+                    seed: req.seed,
+                    predicted,
+                    logits: row,
+                    latency: req.submitted.elapsed(),
+                    batch_size,
+                    generation,
+                };
+                let _ = req.reply.send(Ok(resp));
             }
         }
-        stats.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        let batch_size = wave.len();
-        let seeds: Vec<u32> = wave.iter().map(|r| r.seed).collect();
-        match exec(&seeds) {
-            Ok((flat, classes)) => {
-                for (k, req) in wave.into_iter().enumerate() {
-                    let row = flat[k * classes..(k + 1) * classes].to_vec();
-                    let predicted = row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(i, _)| i)
-                        .unwrap_or(0);
-                    let resp = Response {
-                        seed: req.seed,
-                        predicted,
-                        logits: row,
-                        latency: req.submitted.elapsed(),
-                        batch_size,
-                    };
-                    let _ = req.reply.send(Ok(resp));
-                }
-            }
-            Err(e) => {
-                stats.failed_batches.fetch_add(1, Ordering::Relaxed);
-                let msg = e.to_string();
-                for req in wave {
-                    let _ = req.reply.send(Err(Error::Runtime(msg.clone())));
-                }
+        Err(e) => {
+            stats.failed_batches.fetch_add(1, Ordering::Relaxed);
+            let msg = e.to_string();
+            for req in wave {
+                let _ = req.reply.send(Err(Error::Runtime(msg.clone())));
             }
         }
     }
@@ -218,10 +312,12 @@ fn batcher_loop<E>(
 
 /// Build and start the AOT server.
 ///
-/// PJRT handles are not `Send`, so the worker thread constructs its own
-/// client, compiles `forward`, and uploads the params itself; this
-/// function only passes plain data (paths, specs, host tensors) across
-/// the thread boundary and waits for the worker's startup report.
+/// PJRT handles are not `Send`, so the single execution lane constructs
+/// its own client, compiles `forward`, and uploads the params itself;
+/// this function only passes plain data (paths, specs, host tensors)
+/// across the thread boundary and waits for the lane's startup report.
+/// Admission control (bounded queue, `Error::Overloaded`) applies the
+/// same as on the native backends; `cfg.lanes` is ignored.
 pub fn serve(
     artifacts_dir: &std::path::Path,
     entry: &ModelEntry,
@@ -234,11 +330,13 @@ pub fn serve(
     let forward_spec = entry.program("forward")?.clone();
     let dir = artifacts_dir.to_path_buf();
     let stats = Arc::new(ServeStats::default());
-    let (tx, rx) = channel::<Request>();
+    let queue: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(cfg.queue_capacity));
     let (ready_tx, ready_rx) = channel::<Result<()>>();
     let stats_w = Arc::clone(&stats);
+    let queue_w = Arc::clone(&queue);
     let max_batch = cfg.max_batch;
     let max_wait = cfg.max_wait;
+    let wave_delay = cfg.wave_delay;
     let sampler_cfg = cfg.sampler.clone();
     let worker = std::thread::Builder::new()
         .name("tfgnn-serve".into())
@@ -279,8 +377,14 @@ pub fn serve(
                     } else {
                         None
                     };
-                    batcher_loop(rx, max_batch, max_wait, stats_w, move |seeds| {
-                        execute_wave(
+                    lane_loop(&queue_w, max_batch, max_wait, |wave| {
+                        stats_w.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
+                        stats_w.batches.fetch_add(1, Ordering::Relaxed);
+                        if !wave_delay.is_zero() {
+                            std::thread::sleep(wave_delay);
+                        }
+                        let seeds: Vec<u32> = wave.iter().map(|r| r.seed).collect();
+                        let result = execute_wave(
                             &rt,
                             &forward,
                             &param_bufs,
@@ -288,8 +392,9 @@ pub fn serve(
                             pool.as_ref(),
                             &pad,
                             &task,
-                            seeds,
-                        )
+                            &seeds,
+                        );
+                        reply_logits_wave(wave, result, 1, &stats_w);
                     });
                 }
                 Err(e) => {
@@ -300,15 +405,17 @@ pub fn serve(
     ready_rx
         .recv()
         .map_err(|_| Error::Runtime("server thread died during startup".into()))??;
-    Ok(ServerHandle { tx: Some(tx), worker: Some(worker), stats })
+    Ok(ServerHandle { queue, lanes: Mutex::new(vec![worker]), stats, slot: None })
 }
 
 /// Start a server over the pure-Rust native model — no AOT artifacts,
 /// no PJRT, no padding: each sampled subgraph runs the fused forward
-/// directly and contributes its root's logits row.
+/// directly and contributes its root's logits row. `cfg.lanes` batcher
+/// threads pull from the shared bounded queue; each lane snapshots the
+/// hot-swappable model once per wave.
 ///
 /// The model config is re-checked through the static analyzer
-/// ([`crate::analysis::check_model`]) before the batcher spawns, so a
+/// ([`crate::analysis::check_model`]) before the lanes spawn, so a
 /// bad config is rejected with the same `TFGNN0xx` diagnostics the
 /// `tfgnn check` CLI prints.
 pub fn serve_native(
@@ -318,35 +425,60 @@ pub fn serve_native(
     cfg: ServeConfig,
 ) -> Result<ServerHandle> {
     crate::analysis::check_model(&model.cfg).into_result()?;
+    let num_classes = model.cfg.num_classes;
     let stats = Arc::new(ServeStats::default());
-    let (tx, rx) = channel::<Request>();
-    let stats_w = Arc::clone(&stats);
-    let worker = std::thread::Builder::new()
-        .name("tfgnn-serve-native".into())
-        .spawn(move || {
-            let pool = if cfg.sampler.parallel() {
-                Some(ThreadPool::new(cfg.sampler.threads))
-            } else {
-                None
-            };
-            let num_classes = model.cfg.num_classes;
-            batcher_loop(rx, cfg.max_batch, cfg.max_wait, stats_w, move |seeds| {
-                let graphs = match &pool {
-                    Some(p) => sampler.sample_batch_with_pool(seeds, p)?,
-                    None => seeds
-                        .iter()
-                        .map(|&s| sampler.sample(s))
-                        .collect::<Result<Vec<_>>>()?,
-                };
-                let mut flat = Vec::with_capacity(seeds.len() * num_classes);
-                for g in &graphs {
-                    let logits = model.forward_logits(g, &task.root_set, &[0])?;
-                    flat.extend_from_slice(&logits.data);
-                }
-                Ok((flat, num_classes))
-            });
-        })?;
-    Ok(ServerHandle { tx: Some(tx), worker: Some(worker), stats })
+    let queue: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+    let slot = Arc::new(ModelSlot::new(model));
+    let mut lanes = Vec::new();
+    for lane in 0..cfg.lanes.max(1) {
+        let queue = Arc::clone(&queue);
+        let stats = Arc::clone(&stats);
+        let slot = Arc::clone(&slot);
+        let sampler = Arc::clone(&sampler);
+        let task = task.clone();
+        let sampler_cfg = cfg.sampler.clone();
+        let (max_batch, max_wait, wave_delay) = (cfg.max_batch, cfg.max_wait, cfg.wave_delay);
+        lanes.push(
+            std::thread::Builder::new()
+                .name(format!("tfgnn-serve-native-{lane}"))
+                .spawn(move || {
+                    let pool = if sampler_cfg.parallel() {
+                        Some(ThreadPool::new(sampler_cfg.threads))
+                    } else {
+                        None
+                    };
+                    lane_loop(&queue, max_batch, max_wait, |wave| {
+                        stats.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
+                        stats.batches.fetch_add(1, Ordering::Relaxed);
+                        if !wave_delay.is_zero() {
+                            std::thread::sleep(wave_delay);
+                        }
+                        // One model snapshot for the whole wave: a batch
+                        // never mixes params from two generations.
+                        let vm = slot.load();
+                        let seeds: Vec<u32> = wave.iter().map(|r| r.seed).collect();
+                        let result = (|| -> Result<(Vec<f32>, usize)> {
+                            let graphs = match &pool {
+                                Some(p) => sampler.sample_batch_with_pool(&seeds, p)?,
+                                None => seeds
+                                    .iter()
+                                    .map(|&s| sampler.sample(s))
+                                    .collect::<Result<Vec<_>>>()?,
+                            };
+                            let mut flat = Vec::with_capacity(seeds.len() * num_classes);
+                            for g in &graphs {
+                                let logits =
+                                    vm.model.forward_logits(g, &task.root_set, &[0])?;
+                                flat.extend_from_slice(&logits.data);
+                            }
+                            Ok((flat, num_classes))
+                        })();
+                        reply_logits_wave(wave, result, vm.generation, &stats);
+                    });
+                })?,
+        );
+    }
+    Ok(ServerHandle { queue, lanes: Mutex::new(lanes), stats, slot: Some(slot) })
 }
 
 /// A completed task-shaped prediction (see [`serve_task`]).
@@ -360,6 +492,9 @@ pub struct TaskResponse {
     pub latency: Duration,
     /// Requests in the same executed batch.
     pub batch_size: usize,
+    /// Which model answered: the serving slot's swap generation
+    /// (1 until the first hot-swap).
+    pub generation: u64,
 }
 
 struct TaskRequest {
@@ -369,22 +504,37 @@ struct TaskRequest {
 }
 
 /// Client handle for a task server: submit seed lists, then
-/// `shutdown()`. Same draining contract as [`ServerHandle`].
+/// [`shutdown`](Self::shutdown). Same admission, draining and hot-swap
+/// contracts as [`ServerHandle`].
 pub struct TaskServerHandle {
-    tx: Option<Sender<TaskRequest>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    queue: Arc<BoundedQueue<TaskRequest>>,
+    lanes: Mutex<Vec<std::thread::JoinHandle<()>>>,
     pub stats: Arc<ServeStats>,
+    slot: Arc<ModelSlot>,
 }
 
 impl TaskServerHandle {
     /// Submit a request; returns the channel the response arrives on.
-    /// If the batcher is gone the reply sender is dropped with the
-    /// request, so the caller's `recv` fails instead of panicking here.
+    /// A full queue replies [`Error::Overloaded`] immediately; a
+    /// shut-down server replies a structured runtime error — `recv`
+    /// never hangs on a dead channel.
     pub fn submit(&self, seeds: Vec<u32>) -> Receiver<Result<TaskResponse>> {
         let (reply_tx, reply_rx) = channel();
         let req = TaskRequest { seeds, submitted: Instant::now(), reply: reply_tx };
-        if let Some(tx) = self.tx.as_ref() {
-            let _ = tx.send(req);
+        match self.queue.push(req) {
+            Ok(()) => {}
+            Err(PushError::Full(req)) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Err(Error::Overloaded(format!(
+                    "serving queue full ({} pending); retry with backoff",
+                    self.queue.capacity()
+                ))));
+            }
+            Err(PushError::Closed(req)) => {
+                let _ = req
+                    .reply
+                    .send(Err(Error::Runtime("server is shut down".into())));
+            }
         }
         reply_rx
     }
@@ -396,27 +546,41 @@ impl TaskServerHandle {
             .map_err(|_| Error::Runtime("server dropped request".into()))?
     }
 
-    /// Stop accepting requests and join the worker; already-submitted
-    /// requests are still answered.
-    pub fn shutdown(mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+    /// Stop accepting requests and join the lanes; already-admitted
+    /// requests are still answered. Idempotent.
+    pub fn shutdown(&self) {
+        close_and_join(&self.queue, &self.lanes);
+    }
+
+    /// Hot-swap the served model; see [`ServerHandle::swap_model`].
+    pub fn swap_model(&self, model: Arc<NativeModel>) -> Result<u64> {
+        let generation = self.slot.swap_model(model)?;
+        self.stats.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(generation)
+    }
+
+    /// Hot-swap to the weights in a checkpoint file.
+    pub fn swap_checkpoint(&self, path: &std::path::Path) -> Result<u64> {
+        let generation = self.slot.swap_checkpoint(path)?;
+        self.stats.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(generation)
+    }
+
+    /// Current model generation (1 until the first swap).
+    pub fn generation(&self) -> u64 {
+        self.slot.generation()
     }
 }
 
 impl Drop for TaskServerHandle {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        close_and_join(&self.queue, &self.lanes);
     }
 }
 
 /// Start a task-shaped native server: each request names a seed list,
-/// the batcher samples the wave's subgraphs (in parallel over the
+/// a lane samples the wave's subgraphs (through the seed-keyed LRU
+/// cache when `cfg.cache_capacity > 0`, fanned over the lane's
 /// sampling pool when configured) and the [`Task`](crate::tasks::Task)
 /// maps each to its response — classification logits, a pair's link
 /// score, or a regression value. Errors are per-request: one bad pair
@@ -433,71 +597,139 @@ pub fn serve_task(
 ) -> Result<TaskServerHandle> {
     crate::analysis::check_model(&model.cfg).into_result()?;
     let stats = Arc::new(ServeStats::default());
-    let (tx, rx) = channel::<TaskRequest>();
-    let stats_w = Arc::clone(&stats);
-    let worker = std::thread::Builder::new()
-        .name("tfgnn-serve-task".into())
-        .spawn(move || {
-            let pool = if cfg.sampler.parallel() {
-                Some(ThreadPool::new(cfg.sampler.threads))
-            } else {
-                None
-            };
-            loop {
-                // Block for the first request of a wave.
-                let first = match rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => return, // all senders gone AND queue empty
-                };
-                let mut wave = vec![first];
-                let deadline = Instant::now() + cfg.max_wait;
-                while wave.len() < cfg.max_batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(r) => wave.push(r),
-                        Err(_) => break,
-                    }
-                }
-                stats_w.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
-                stats_w.batches.fetch_add(1, Ordering::Relaxed);
-                let batch_size = wave.len();
-                // Sample every request's subgraph — fanned out over the
-                // pool when configured — then run the task's readout.
-                let seed_lists: Vec<Vec<u32>> = wave.iter().map(|r| r.seeds.clone()).collect();
-                let graphs: Vec<Result<crate::graph::GraphTensor>> = match &pool {
-                    Some(p) => {
-                        let s = Arc::clone(&sampler);
-                        p.map(seed_lists, move |seeds| s.sample_seeds(&seeds))
-                    }
-                    None => seed_lists.iter().map(|s| sampler.sample_seeds(s)).collect(),
-                };
-                let mut any_failed = false;
-                for (req, g) in wave.into_iter().zip(graphs) {
-                    let out = g.and_then(|g| task.infer(&model, &g));
-                    match out {
-                        Ok(output) => {
-                            let _ = req.reply.send(Ok(TaskResponse {
-                                seeds: req.seeds,
-                                output,
-                                latency: req.submitted.elapsed(),
-                                batch_size,
-                            }));
-                        }
-                        Err(e) => {
-                            any_failed = true;
-                            let _ = req.reply.send(Err(Error::Runtime(e.to_string())));
-                        }
-                    }
-                }
-                if any_failed {
-                    stats_w.failed_batches.fetch_add(1, Ordering::Relaxed);
-                }
+    let queue: Arc<BoundedQueue<TaskRequest>> = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+    let slot = Arc::new(ModelSlot::new(model));
+    // The subgraph cache is shared by all lanes (it is seed-keyed and
+    // model-independent, so it survives hot-swaps too).
+    let cache: Arc<LruCache<Vec<u32>, Arc<GraphTensor>>> =
+        Arc::new(LruCache::new(cfg.cache_capacity));
+    let mut lanes = Vec::new();
+    for lane in 0..cfg.lanes.max(1) {
+        let queue = Arc::clone(&queue);
+        let stats = Arc::clone(&stats);
+        let slot = Arc::clone(&slot);
+        let sampler = Arc::clone(&sampler);
+        let task = Arc::clone(&task);
+        let cache = Arc::clone(&cache);
+        let sampler_cfg = cfg.sampler.clone();
+        let (max_batch, max_wait, wave_delay) = (cfg.max_batch, cfg.max_wait, cfg.wave_delay);
+        lanes.push(
+            std::thread::Builder::new()
+                .name(format!("tfgnn-serve-task-{lane}"))
+                .spawn(move || {
+                    let pool = if sampler_cfg.parallel() {
+                        Some(ThreadPool::new(sampler_cfg.threads))
+                    } else {
+                        None
+                    };
+                    lane_loop(&queue, max_batch, max_wait, |wave| {
+                        run_task_wave(
+                            wave,
+                            &slot,
+                            &sampler,
+                            task.as_ref(),
+                            &cache,
+                            pool.as_ref(),
+                            wave_delay,
+                            &stats,
+                        );
+                    });
+                })?,
+        );
+    }
+    Ok(TaskServerHandle { queue, lanes: Mutex::new(lanes), stats, slot })
+}
+
+/// Execute one task-server wave: cache-checked sampling, one model
+/// snapshot for the whole wave, per-request structured errors.
+#[allow(clippy::too_many_arguments)]
+fn run_task_wave(
+    wave: Vec<TaskRequest>,
+    slot: &ModelSlot,
+    sampler: &Arc<InMemorySampler>,
+    task: &dyn crate::tasks::Task,
+    cache: &LruCache<Vec<u32>, Arc<GraphTensor>>,
+    pool: Option<&ThreadPool>,
+    wave_delay: Duration,
+    stats: &ServeStats,
+) {
+    stats.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    if !wave_delay.is_zero() {
+        std::thread::sleep(wave_delay);
+    }
+    // One model snapshot for the whole wave: a batch never mixes
+    // params from two generations.
+    let vm = slot.load();
+    let batch_size = wave.len();
+
+    // Resolve each request's subgraph: cache hit, or queued for a
+    // (possibly pooled) sampling fan-out. Slots start as placeholder
+    // errors and every index is overwritten below.
+    let mut graphs: Vec<Result<Arc<GraphTensor>>> = wave
+        .iter()
+        .map(|_| Err(Error::Runtime("internal: subgraph slot unfilled".into())))
+        .collect();
+    let mut miss_idx: Vec<usize> = Vec::new();
+    let mut miss_lists: Vec<Vec<u32>> = Vec::new();
+    let cache_enabled = cache.is_enabled();
+    for (i, req) in wave.iter().enumerate() {
+        if let Some(g) = cache.get(&req.seeds) {
+            stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            graphs[i] = Ok(g);
+        } else {
+            if cache_enabled {
+                stats.cache_misses.fetch_add(1, Ordering::Relaxed);
             }
-        })?;
-    Ok(TaskServerHandle { tx: Some(tx), worker: Some(worker), stats })
+            miss_idx.push(i);
+            miss_lists.push(req.seeds.clone());
+        }
+    }
+    let sampled: Vec<Result<GraphTensor>> = match pool {
+        Some(p) => {
+            let s = Arc::clone(sampler);
+            p.map(miss_lists.clone(), move |seeds| s.sample_seeds(&seeds))
+        }
+        None => miss_lists.iter().map(|s| sampler.sample_seeds(s)).collect(),
+    };
+    for (k, res) in sampled.into_iter().enumerate() {
+        let i = miss_idx[k];
+        match res {
+            Ok(g) => {
+                let g = Arc::new(g);
+                if cache_enabled {
+                    let evicted = cache.put(miss_lists[k].clone(), Arc::clone(&g));
+                    stats.cache_evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+                }
+                graphs[i] = Ok(g);
+            }
+            Err(e) => graphs[i] = Err(e),
+        }
+    }
+
+    // Readout + per-request replies.
+    let mut any_failed = false;
+    for (req, g) in wave.into_iter().zip(graphs) {
+        let out = g.and_then(|g| task.infer(&vm.model, &g));
+        match out {
+            Ok(output) => {
+                let _ = req.reply.send(Ok(TaskResponse {
+                    seeds: req.seeds,
+                    output,
+                    latency: req.submitted.elapsed(),
+                    batch_size,
+                    generation: vm.generation,
+                }));
+            }
+            Err(e) => {
+                any_failed = true;
+                let _ = req.reply.send(Err(Error::Runtime(e.to_string())));
+            }
+        }
+    }
+    if any_failed {
+        stats.failed_batches.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// Sample, merge, pad, execute one wave on the AOT program; returns
@@ -581,7 +813,7 @@ mod tests {
             model,
             sampler,
             RootTask::default(),
-            ServeConfig { max_batch, max_wait, sampler: SamplerConfig::default() },
+            ServeConfig { max_batch, max_wait, ..ServeConfig::default() },
         )
         .unwrap();
         (handle, seeds, num_classes)
@@ -600,6 +832,7 @@ mod tests {
             assert_eq!(resp.logits.len(), classes);
             assert!(resp.predicted < classes);
             assert!(resp.logits.iter().all(|v| v.is_finite()));
+            assert_eq!(resp.generation, 1, "no swap happened");
         }
         assert!(handle.stats.requests.load(Ordering::Relaxed) >= 6);
         handle.shutdown();
@@ -642,7 +875,7 @@ mod tests {
         let serve_cfg = || ServeConfig {
             max_batch: 3,
             max_wait: Duration::from_millis(2),
-            sampler: SamplerConfig::default(),
+            ..ServeConfig::default()
         };
 
         // Root classification.
@@ -705,17 +938,17 @@ mod tests {
     }
 
     /// Regression: shutting the server down must NOT drop requests that
-    /// were already submitted — the batcher drains its queue before the
-    /// worker exits, so every pending reply channel gets a response.
+    /// were already admitted — the lanes drain the queue before the
+    /// workers exit, so every pending reply channel gets a response.
     #[test]
     fn shutdown_drains_already_submitted_requests() {
         // A long max_wait so most requests are still queued (or mid
-        // wave-collection) when shutdown drops the client sender.
+        // wave-collection) when shutdown closes the queue.
         let (handle, seeds, classes) = native_server(2, Duration::from_millis(50));
         let n = 16usize;
         let pending: Vec<_> =
             (0..n).map(|i| handle.submit(seeds[i % seeds.len()])).collect();
-        // Drop the sender and join the batcher immediately.
+        // Close admissions and join the lanes immediately.
         handle.shutdown();
         // Every submitted request must still have been answered.
         for (i, rx) in pending.into_iter().enumerate() {
@@ -725,5 +958,19 @@ mod tests {
                 .unwrap_or_else(|e| panic!("request {i} failed: {e}"));
             assert_eq!(resp.logits.len(), classes);
         }
+    }
+
+    /// Submitting after shutdown returns a structured error instead of
+    /// hanging on a dead channel — on both handle types.
+    #[test]
+    fn submit_after_shutdown_is_a_structured_error() {
+        let (handle, seeds, _) = native_server(4, Duration::from_millis(2));
+        handle.predict(seeds[0]).unwrap();
+        handle.shutdown();
+        let err = handle.predict(seeds[0]).unwrap_err();
+        assert!(
+            err.to_string().contains("shut down"),
+            "want a shutdown error, got: {err}"
+        );
     }
 }

@@ -201,6 +201,48 @@ impl NativeModel {
             .collect()
     }
 
+    /// A copy of this model with every parameter replaced from
+    /// checkpoint tensors — the serving hot-swap codec path. Accepts
+    /// bare names or the AOT runtime's `param.`-prefixed names; extra
+    /// tensors (e.g. `adam_m.*` / `adam_v.*` optimizer state saved by
+    /// the trainer) are ignored. Every model parameter must be present
+    /// with the exact f32 shape, or the whole swap is rejected with a
+    /// structured error: a hot-swap is all-or-nothing, never a model
+    /// with half its weights replaced.
+    pub fn with_tensors(&self, tensors: &[(String, HostTensor)]) -> Result<NativeModel> {
+        let mut by_name: BTreeMap<&str, &HostTensor> = BTreeMap::new();
+        for (name, t) in tensors {
+            let key = name.strip_prefix("param.").unwrap_or(name.as_str());
+            by_name.insert(key, t);
+        }
+        let mut out = self.clone();
+        for (name, p) in out.names.iter().zip(out.params.iter_mut()) {
+            let t = *by_name.get(name.as_str()).ok_or_else(|| {
+                Error::Runtime(format!("checkpoint is missing parameter {name:?}"))
+            })?;
+            match t {
+                HostTensor::F32(shape, data)
+                    if shape.as_slice() == [p.rows, p.cols].as_slice() =>
+                {
+                    p.data.clone_from(data);
+                }
+                HostTensor::F32(shape, _) => {
+                    return Err(Error::Runtime(format!(
+                        "checkpoint parameter {name:?} has shape {shape:?}, \
+                         model expects [{}, {}]",
+                        p.rows, p.cols
+                    )));
+                }
+                _ => {
+                    return Err(Error::Runtime(format!(
+                        "checkpoint parameter {name:?} is not f32"
+                    )));
+                }
+            }
+        }
+        Ok(out)
+    }
+
     /// Initial per-node-set states (the MapFeatures stage), returning
     /// the encoder pre-activations and embedding indices for the tape.
     #[allow(clippy::type_complexity)]

@@ -25,6 +25,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -47,6 +48,7 @@ impl Summary {
             min: sorted[0],
             p50: percentile(&sorted, 0.50),
             p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
             max: sorted[n - 1],
         }
     }
@@ -140,6 +142,7 @@ impl Bench {
             min: items as f64 / time.max,
             p50: items as f64 / time.p50,
             p95: items as f64 / time.min,
+            p99: items as f64 / time.min,
             max: items as f64 / time.min,
         }
     }
@@ -177,6 +180,7 @@ pub struct BenchRow {
     pub mean: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub unit: String,
 }
 
@@ -209,6 +213,7 @@ impl BenchReport {
             mean: s.mean,
             p50: s.p50,
             p95: s.p95,
+            p99: s.p99,
             unit: unit.to_string(),
         });
     }
@@ -226,6 +231,7 @@ impl BenchReport {
                     ("mean", Json::Num(r.mean)),
                     ("p50", Json::Num(r.p50)),
                     ("p95", Json::Num(r.p95)),
+                    ("p99", Json::Num(r.p99)),
                     ("unit", Json::Str(r.unit.clone())),
                 ])
             })
@@ -331,10 +337,28 @@ mod tests {
     fn bench_report_rows_and_ns_per_op() {
         let mut r = BenchReport::new("unit");
         // 1e6 items/s mean -> 1000 ns per item.
-        let s = Summary { n: 3, mean: 1e6, std: 0.0, min: 1e6, p50: 1e6, p95: 1e6, max: 1e6 };
+        let s = Summary {
+            n: 3,
+            mean: 1e6,
+            std: 0.0,
+            min: 1e6,
+            p50: 1e6,
+            p95: 1e6,
+            p99: 1e6,
+            max: 1e6,
+        };
         r.row("g", "items", 4, &s, "items/s");
         // 2 ms per iteration -> 2e6 ns.
-        let t = Summary { n: 3, mean: 2e-3, std: 0.0, min: 2e-3, p50: 2e-3, p95: 2e-3, max: 2e-3 };
+        let t = Summary {
+            n: 3,
+            mean: 2e-3,
+            std: 0.0,
+            min: 2e-3,
+            p50: 2e-3,
+            p95: 2e-3,
+            p99: 2e-3,
+            max: 2e-3,
+        };
         r.row("g", "time", 1, &t, "s");
         assert_eq!(r.rows.len(), 2);
         assert_eq!(r.rows[0].name, "g/items");
@@ -346,8 +370,16 @@ mod tests {
     #[test]
     fn bench_report_json_roundtrip() {
         let mut r = BenchReport::new("unit");
-        let s =
-            Summary { n: 1, mean: 500.0, std: 0.0, min: 500.0, p50: 500.0, p95: 500.0, max: 500.0 };
+        let s = Summary {
+            n: 1,
+            mean: 500.0,
+            std: 0.0,
+            min: 500.0,
+            p50: 500.0,
+            p95: 500.0,
+            p99: 500.0,
+            max: 500.0,
+        };
         r.row("sample", "seeds=8", 8, &s, "items/s");
         let dir = std::env::temp_dir().join(format!("tfgnn-bench-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();

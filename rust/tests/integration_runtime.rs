@@ -168,6 +168,7 @@ fn serving_returns_consistent_predictions() {
             max_wait: std::time::Duration::from_millis(2),
             // Exercise the parallel wave-sampling path end to end.
             sampler: tfgnn::sampler::SamplerConfig::with_threads(4),
+            ..Default::default()
         },
     )
     .unwrap();

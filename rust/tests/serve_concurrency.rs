@@ -1,0 +1,378 @@
+//! Concurrency contracts of the production serving path, pinned at
+//! 1/2/8 batcher lanes (and exercised under the nightly TSan lane —
+//! every test name is prefixed `serve_concurrency_` so the TSan filter
+//! picks the whole file up).
+//!
+//! The contracts:
+//! * admission control — a full queue rejects with a structured
+//!   `Error::Overloaded`, never an unbounded backlog or a hang;
+//! * drain-on-shutdown — every admitted request is answered, and
+//!   submitting after shutdown gets a structured error on both handle
+//!   types;
+//! * determinism — responses are bit-identical at any lane count, and
+//!   with the subgraph cache on or off, across hit/miss interleavings;
+//! * hot-swap — a response always reflects exactly one model
+//!   generation, even when the swap lands mid-load.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tfgnn::ops::model_ref::ModelConfig;
+use tfgnn::sampler::inmem::InMemorySampler;
+use tfgnn::sampler::spec::mag_sampling_spec_scaled;
+use tfgnn::serve::loadgen::outputs_bit_identical;
+use tfgnn::serve::{serve_native, serve_task, ServeConfig, TaskServerHandle};
+use tfgnn::synth::mag::{generate, MagConfig, Split};
+use tfgnn::tasks::TaskOutput;
+use tfgnn::train::native::NativeModel;
+use tfgnn::Error;
+
+struct Env {
+    sampler: Arc<InMemorySampler>,
+    cfg: ModelConfig,
+    seeds: Vec<u32>,
+}
+
+fn env() -> Env {
+    let mag = MagConfig::tiny();
+    let ds = generate(&mag);
+    let seeds = ds.papers_in_split(Split::Train);
+    let store = Arc::new(ds.store);
+    let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+    let sampler = Arc::new(InMemorySampler::new(store, spec, 3).unwrap());
+    let cfg = ModelConfig::for_mag(&mag, 8, 8, 1);
+    Env { sampler, cfg, seeds }
+}
+
+fn task_server(env: &Env, model_seed: u64, serve_cfg: ServeConfig) -> TaskServerHandle {
+    let task = tfgnn::tasks::build(&env.cfg).unwrap();
+    let model = Arc::new(NativeModel::init(env.cfg.clone(), model_seed).unwrap());
+    serve_task(model, Arc::clone(&env.sampler), task, serve_cfg).unwrap()
+}
+
+/// Admission control: saturate a tiny queue behind slow lanes and
+/// check that overflow is rejected with `Error::Overloaded` while
+/// every admitted request is still answered.
+#[test]
+fn serve_concurrency_overload_rejects_structurally() {
+    let env = env();
+    for lanes in [1usize, 2, 8] {
+        let handle = task_server(
+            &env,
+            7,
+            ServeConfig {
+                lanes,
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                queue_capacity: 2,
+                // Slow waves make saturation deterministic: the submit
+                // burst below finishes long before any lane frees a slot.
+                wave_delay: Duration::from_millis(25),
+                ..ServeConfig::default()
+            },
+        );
+        let total = lanes + 2 + 6;
+        let pending: Vec<_> = (0..total).map(|_| handle.submit(vec![env.seeds[0]])).collect();
+        let (mut ok, mut rejected) = (0usize, 0usize);
+        for rx in pending {
+            match rx.recv().unwrap() {
+                Ok(resp) => {
+                    assert!(matches!(resp.output, TaskOutput::Classification { .. }));
+                    ok += 1;
+                }
+                Err(Error::Overloaded(msg)) => {
+                    assert!(msg.contains("queue full"), "lanes={lanes}: {msg}");
+                    rejected += 1;
+                }
+                Err(e) => panic!("lanes={lanes}: unexpected error kind: {e}"),
+            }
+        }
+        assert_eq!(ok + rejected, total, "lanes={lanes}: every request answered");
+        assert!(rejected >= 1, "lanes={lanes}: expected at least one rejection");
+        // The first push into the empty queue is always admitted, and
+        // admitted requests must still be served.
+        assert!(ok >= 1, "lanes={lanes}: admitted requests must still be served (ok={ok})");
+        assert_eq!(
+            handle.stats.rejected.load(Ordering::Relaxed),
+            rejected as u64,
+            "lanes={lanes}: stats.rejected matches observed rejections"
+        );
+        handle.shutdown();
+    }
+}
+
+/// Drain-on-shutdown + submit-after-shutdown on the task handle, at
+/// every lane count. (The root `ServerHandle` twin of this test lives
+/// in the serve module's unit tests.)
+#[test]
+fn serve_concurrency_shutdown_drains_then_rejects() {
+    let env = env();
+    for lanes in [1usize, 2, 8] {
+        let handle = task_server(
+            &env,
+            7,
+            ServeConfig {
+                lanes,
+                max_batch: 2,
+                max_wait: Duration::from_millis(50),
+                ..ServeConfig::default()
+            },
+        );
+        let pending: Vec<_> =
+            (0..12).map(|i| handle.submit(vec![env.seeds[i % env.seeds.len()]])).collect();
+        handle.shutdown();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let resp = rx
+                .recv()
+                .unwrap_or_else(|_| panic!("lanes={lanes}: request {i} dropped"))
+                .unwrap_or_else(|e| panic!("lanes={lanes}: request {i} failed: {e}"));
+            assert!(matches!(resp.output, TaskOutput::Classification { .. }));
+        }
+        // Post-shutdown submissions get a structured error, not a hang.
+        let err = handle.predict(&[env.seeds[0]]).unwrap_err();
+        assert!(
+            err.to_string().contains("shut down"),
+            "lanes={lanes}: want shutdown error, got {err}"
+        );
+    }
+}
+
+/// Per-response determinism across lane counts: 2- and 8-lane servers
+/// answer bit-identically to the single-lane oracle, and out-of-range
+/// seed ids stay per-request structured errors.
+#[test]
+fn serve_concurrency_lane_parity_bit_identical() {
+    let env = env();
+    let oracle =
+        task_server(&env, 7, ServeConfig { lanes: 1, max_batch: 1, ..ServeConfig::default() });
+    let probe: Vec<Vec<u32>> = env.seeds.iter().take(8).map(|&s| vec![s]).collect();
+    let mut want: HashMap<Vec<u32>, TaskOutput> = HashMap::new();
+    for seeds in &probe {
+        want.insert(seeds.clone(), oracle.predict(seeds).unwrap().output);
+    }
+    for lanes in [2usize, 8] {
+        let server = task_server(&env, 7, ServeConfig { lanes, ..ServeConfig::default() });
+        // Hammer from several client threads so waves really overlap.
+        std::thread::scope(|s| {
+            for c in 0..4 {
+                let server = &server;
+                let probe = &probe;
+                let want = &want;
+                s.spawn(move || {
+                    for round in 0..3 {
+                        for seeds in probe.iter().skip((c + round) % probe.len()) {
+                            let resp = server.predict(seeds).unwrap();
+                            assert!(
+                                outputs_bit_identical(&resp.output, &want[seeds]),
+                                "lanes={lanes}: {seeds:?} diverged from oracle"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+        // Seed-id bounds check stays a per-request error at any lane count.
+        assert!(server.predict(&[u32::MAX]).is_err(), "lanes={lanes}");
+        assert!(server.predict(&[env.seeds[0]]).is_ok(), "lanes={lanes}: server survives");
+        server.shutdown();
+    }
+    oracle.shutdown();
+}
+
+/// Property: cache-on and cache-off responses are bit-identical across
+/// hit/miss/eviction interleavings. A tiny capacity over a wider key
+/// population forces all three cache events while concurrent clients
+/// shuffle the access order.
+#[test]
+fn serve_concurrency_cache_on_off_bit_identical() {
+    let env = env();
+    let cache_off =
+        task_server(&env, 7, ServeConfig { lanes: 1, max_batch: 1, ..ServeConfig::default() });
+    let keys: Vec<Vec<u32>> = env.seeds.iter().take(12).map(|&s| vec![s]).collect();
+    let mut want: HashMap<Vec<u32>, TaskOutput> = HashMap::new();
+    for seeds in &keys {
+        want.insert(seeds.clone(), cache_off.predict(seeds).unwrap().output);
+    }
+    for lanes in [1usize, 2, 8] {
+        let cached = task_server(
+            &env,
+            7,
+            ServeConfig { lanes, cache_capacity: 4, ..ServeConfig::default() },
+        );
+        std::thread::scope(|s| {
+            for c in 0..4usize {
+                let cached = &cached;
+                let keys = &keys;
+                let want = &want;
+                s.spawn(move || {
+                    // Deterministic per-client LCG walk: lots of repeats
+                    // (hits) interleaved with fresh keys (misses) that
+                    // overflow capacity 4 (evictions).
+                    let mut x = (c as u64) * 2654435761 + 12345;
+                    for _ in 0..40 {
+                        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                        let seeds = &keys[(x >> 33) as usize % keys.len()];
+                        let resp = cached.predict(seeds).unwrap();
+                        assert!(
+                            outputs_bit_identical(&resp.output, &want[seeds]),
+                            "lanes={lanes}: cached response for {seeds:?} diverged"
+                        );
+                    }
+                });
+            }
+        });
+        // A sequential tail makes every counter deterministic: walking
+        // all 12 keys forces ≥ 8 evictions past capacity 4 no matter
+        // what the concurrent phase left resident, and a back-to-back
+        // repeat of one key with nothing else in flight must hit.
+        for seeds in &keys {
+            let resp = cached.predict(seeds).unwrap();
+            assert!(outputs_bit_identical(&resp.output, &want[seeds]), "lanes={lanes}");
+        }
+        cached.predict(&keys[0]).unwrap();
+        cached.predict(&keys[0]).unwrap();
+        let hits = cached.stats.cache_hits.load(Ordering::Relaxed);
+        let misses = cached.stats.cache_misses.load(Ordering::Relaxed);
+        let evictions = cached.stats.cache_evictions.load(Ordering::Relaxed);
+        assert!(hits > 0, "lanes={lanes}: no cache hits (misses={misses})");
+        assert!(misses > 0, "lanes={lanes}: no cache misses");
+        assert!(evictions > 0, "lanes={lanes}: no evictions despite 12 keys over capacity 4");
+        cached.shutdown();
+    }
+    // The cache-off server counted nothing.
+    assert_eq!(cache_off.stats.cache_hits.load(Ordering::Relaxed), 0);
+    assert_eq!(cache_off.stats.cache_misses.load(Ordering::Relaxed), 0);
+    cache_off.shutdown();
+}
+
+/// Hot-swap mid-load: every response reflects exactly one model
+/// generation — bit-identical to the old model's oracle if tagged
+/// generation 1, to the new model's oracle if tagged generation 2 —
+/// never a mix.
+#[test]
+fn serve_concurrency_hot_swap_never_mixes_generations() {
+    let env = env();
+    let probe: Vec<Vec<u32>> = env.seeds.iter().take(6).map(|&s| vec![s]).collect();
+    // Oracles for both weight sets.
+    let oracle_a =
+        task_server(&env, 7, ServeConfig { lanes: 1, max_batch: 1, ..ServeConfig::default() });
+    let oracle_b =
+        task_server(&env, 8, ServeConfig { lanes: 1, max_batch: 1, ..ServeConfig::default() });
+    let mut want: HashMap<Vec<u32>, (TaskOutput, TaskOutput)> = HashMap::new();
+    for seeds in &probe {
+        want.insert(
+            seeds.clone(),
+            (oracle_a.predict(seeds).unwrap().output, oracle_b.predict(seeds).unwrap().output),
+        );
+    }
+    // The two weight sets must actually differ, or the test is vacuous.
+    let (a0, b0) = &want[&probe[0]];
+    assert!(!outputs_bit_identical(a0, b0), "seeds 7 and 8 initialized identical models?");
+    oracle_a.shutdown();
+    oracle_b.shutdown();
+
+    for lanes in [2usize, 8] {
+        let server = task_server(&env, 7, ServeConfig { lanes, ..ServeConfig::default() });
+        std::thread::scope(|s| {
+            for c in 0..4usize {
+                let server = &server;
+                let probe = &probe;
+                let want = &want;
+                s.spawn(move || {
+                    for i in 0..30 {
+                        let seeds = &probe[(c + i) % probe.len()];
+                        let resp = server.predict(seeds).unwrap();
+                        let (a, b) = &want[seeds];
+                        match resp.generation {
+                            1 => assert!(
+                                outputs_bit_identical(&resp.output, a),
+                                "lanes={lanes}: gen-1 response diverged from model A"
+                            ),
+                            2 => assert!(
+                                outputs_bit_identical(&resp.output, b),
+                                "lanes={lanes}: gen-2 response diverged from model B"
+                            ),
+                            g => panic!("lanes={lanes}: unexpected generation {g}"),
+                        }
+                    }
+                });
+            }
+            // Swap mid-load from the scope's own thread (the scope
+            // joins it, so a failed swap panics the test).
+            let server = &server;
+            let env = &env;
+            s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(5));
+                let next = Arc::new(NativeModel::init(env.cfg.clone(), 8).unwrap());
+                let generation = server.swap_model(next).unwrap();
+                assert_eq!(generation, 2);
+            });
+        });
+        assert_eq!(server.generation(), 2, "lanes={lanes}");
+        assert_eq!(server.stats.swaps.load(Ordering::Relaxed), 1, "lanes={lanes}");
+        // Post-swap requests serve generation 2 exclusively.
+        let resp = server.predict(&probe[0]).unwrap();
+        assert_eq!(resp.generation, 2, "lanes={lanes}");
+        assert!(outputs_bit_identical(&resp.output, &want[&probe[0]].1), "lanes={lanes}");
+        server.shutdown();
+    }
+}
+
+/// The checkpoint codec path of hot-swap: `param.`-prefixed tensor
+/// names round-trip through `swap_checkpoint`, and a shape-mismatched
+/// replacement is rejected whole without touching the served model.
+#[test]
+fn serve_concurrency_swap_checkpoint_codec_and_validation() {
+    let env = env();
+    let server = task_server(&env, 7, ServeConfig { lanes: 2, ..ServeConfig::default() });
+    let probe: Vec<Vec<u32>> = env.seeds.iter().take(4).map(|&s| vec![s]).collect();
+
+    // Write model B's weights as a checkpoint with the AOT runtime's
+    // `param.` name prefix, then swap the server onto it.
+    let model_b = NativeModel::init(env.cfg.clone(), 8).unwrap();
+    let tensors: Vec<_> =
+        model_b.params_as_tensors().into_iter().map(|(n, t)| (format!("param.{n}"), t)).collect();
+    let dir = std::env::temp_dir().join(format!("tfgnn-swap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("model_b.tfgc");
+    tfgnn::train::checkpoint::save(&ckpt, &tensors).unwrap();
+    let generation = server.swap_checkpoint(&ckpt).unwrap();
+    assert_eq!(generation, 2);
+
+    // Served outputs now match a from-scratch model-B oracle.
+    let oracle_b =
+        task_server(&env, 8, ServeConfig { lanes: 1, max_batch: 1, ..ServeConfig::default() });
+    for seeds in &probe {
+        let got = server.predict(seeds).unwrap();
+        assert_eq!(got.generation, 2);
+        assert!(outputs_bit_identical(&got.output, &oracle_b.predict(seeds).unwrap().output));
+    }
+    oracle_b.shutdown();
+
+    // A wrong-architecture replacement is rejected all-or-nothing.
+    let mag = MagConfig::tiny();
+    let wide = ModelConfig::for_mag(&mag, 16, 16, 1);
+    let wrong = Arc::new(NativeModel::init(wide, 9).unwrap());
+    assert!(server.swap_model(wrong).is_err());
+    assert_eq!(server.generation(), 2, "failed swap must not bump the generation");
+    let still = server.predict(&probe[0]).unwrap();
+    assert_eq!(still.generation, 2);
+
+    // AOT handles have no swappable slot: `serve_native` does, so use
+    // the root handle only for the shutdown-error twin check here.
+    let root = serve_native(
+        Arc::new(NativeModel::init(env.cfg.clone(), 7).unwrap()),
+        Arc::clone(&env.sampler),
+        tfgnn::runtime::batch::RootTask::default(),
+        ServeConfig::default(),
+    )
+    .unwrap();
+    root.shutdown();
+    let err = root.predict(env.seeds[0]).unwrap_err();
+    assert!(err.to_string().contains("shut down"), "{err}");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,190 @@
+#!/usr/bin/env python3
+"""Compare per-PR bench artifacts against the checked-in baseline.
+
+The bench-smoke CI job runs every `cargo bench` target in smoke mode,
+each writing a `BENCH_<bench>.json` artifact (schema: `{"bench": str,
+"smoke": bool, "rows": [{"name", "threads", "ns_per_op", "mean",
+"p50", "p95", "p99", "unit"}]}`). This script diffs those artifacts
+against the snapshot under `rust/benches/baseline/`:
+
+* a baseline file with no current counterpart, a malformed schema on
+  either side, or a baseline row (name, threads) missing from the
+  current run is an ERROR (exit 1) — a renamed or dropped row must be
+  an explicit baseline refresh in the same PR;
+* timing movement is a WARNING only (smoke-mode numbers on shared CI
+  runners are too noisy to gate merges on): ns_per_op ratios outside
+  [1/1.5, 1.5x] are flagged for a human to look at;
+* rows present in the current run but not in the baseline are reported
+  as informational — they become baseline rows at the next refresh.
+
+Stdlib only; no third-party imports.
+
+Usage:
+    python3 tools/bench_compare.py --baseline rust/benches/baseline --current rust
+"""
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+# Timing-ratio band (current/baseline ns_per_op) outside which a row is
+# flagged. Deliberately wide: smoke iterations on shared runners jitter.
+SLOWDOWN = 1.5
+SPEEDUP = 1.0 / 1.5
+
+_MISSING = object()
+
+ROW_FIELDS = {
+    "name": str,
+    "threads": int,
+    "ns_per_op": (int, float, type(None)),
+    "mean": (int, float),
+    "p50": (int, float),
+    "p95": (int, float),
+    "p99": (int, float),
+    "unit": str,
+}
+
+
+class Report:
+    def __init__(self):
+        self.errors = []
+        self.warnings = []
+
+    def error(self, msg):
+        self.errors.append(msg)
+        print(f"ERROR: {msg}")
+
+    def warn(self, msg):
+        self.warnings.append(msg)
+        print(f"WARN:  {msg}")
+
+
+def load_doc(path, report):
+    """Parse and schema-check one BENCH_*.json; None on any defect."""
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        report.error(f"{path}: unreadable or invalid JSON: {e}")
+        return None
+    if not isinstance(doc, dict):
+        report.error(f"{path}: top level must be an object")
+        return None
+    ok = True
+    if not isinstance(doc.get("bench"), str):
+        report.error(f"{path}: missing or non-string 'bench'")
+        ok = False
+    if not isinstance(doc.get("smoke"), bool):
+        report.error(f"{path}: missing or non-bool 'smoke'")
+        ok = False
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        report.error(f"{path}: missing or non-array 'rows'")
+        return None
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            report.error(f"{path}: rows[{i}] is not an object")
+            ok = False
+            continue
+        for field, want in ROW_FIELDS.items():
+            value = row.get(field, _MISSING)
+            if value is _MISSING:
+                report.error(f"{path}: rows[{i}] missing field '{field}'")
+                ok = False
+            elif not isinstance(value, want) or isinstance(value, bool):
+                report.error(
+                    f"{path}: rows[{i}].{field} has wrong type "
+                    f"({type(value).__name__})"
+                )
+                ok = False
+    return doc if ok else None
+
+
+def row_key(row):
+    return (row["name"], row["threads"])
+
+
+def compare_file(base_path, cur_path, report):
+    base = load_doc(base_path, report)
+    cur = load_doc(cur_path, report)
+    if base is None or cur is None:
+        return
+    cur_rows = {}
+    for row in cur["rows"]:
+        key = row_key(row)
+        if key in cur_rows:
+            report.error(f"{cur_path}: duplicate row {key}")
+        cur_rows[key] = row
+
+    missing = [row_key(r) for r in base["rows"] if row_key(r) not in cur_rows]
+    for name, threads in missing:
+        report.error(
+            f"{cur_path.name}: baseline row ({name!r}, threads={threads}) "
+            "missing from current run — refresh the baseline if this rename"
+            "/removal is intentional"
+        )
+
+    extra = set(cur_rows) - {row_key(r) for r in base["rows"]}
+    for name, threads in sorted(extra):
+        print(f"note:  {cur_path.name}: new row ({name!r}, threads={threads}) "
+              "not in baseline")
+
+    if base["smoke"] != cur["smoke"]:
+        report.warn(
+            f"{cur_path.name}: smoke mode differs (baseline={base['smoke']}, "
+            f"current={cur['smoke']}); skipping timing comparison"
+        )
+        return
+
+    for row in base["rows"]:
+        key = row_key(row)
+        if key not in cur_rows:
+            continue
+        b, c = row["ns_per_op"], cur_rows[key]["ns_per_op"]
+        if b is None or c is None or b <= 0 or c <= 0:
+            continue
+        if not (math.isfinite(b) and math.isfinite(c)):
+            continue
+        ratio = c / b
+        if ratio > SLOWDOWN or ratio < SPEEDUP:
+            direction = "slower" if ratio > 1 else "faster"
+            report.warn(
+                f"{cur_path.name}: {key[0]} (threads={key[1]}) is "
+                f"{ratio:.2f}x {direction} than baseline "
+                f"({b:.0f} -> {c:.0f} ns/op)"
+            )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, type=Path,
+                    help="directory of checked-in BENCH_*.json snapshots")
+    ap.add_argument("--current", required=True, type=Path,
+                    help="directory of freshly produced BENCH_*.json files")
+    args = ap.parse_args()
+
+    report = Report()
+    baselines = sorted(args.baseline.glob("BENCH_*.json"))
+    if not baselines:
+        report.error(f"no BENCH_*.json baselines under {args.baseline}")
+    for base_path in baselines:
+        cur_path = args.current / base_path.name
+        if not cur_path.is_file():
+            report.error(
+                f"{base_path.name}: baseline exists but the current run "
+                f"produced no {cur_path} — did a bench target disappear?"
+            )
+            continue
+        compare_file(base_path, cur_path, report)
+
+    print(
+        f"bench-compare: {len(baselines)} file(s), "
+        f"{len(report.errors)} error(s), {len(report.warnings)} warning(s)"
+    )
+    return 1 if report.errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
