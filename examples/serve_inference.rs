@@ -77,8 +77,8 @@ fn main() -> tfgnn::Result<()> {
         });
         let wall = t0.elapsed().as_secs_f64();
         let s = Summary::of(&latencies);
-        let batches = handle.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
-        let reqs = handle.stats.requests.load(std::sync::atomic::Ordering::Relaxed);
+        let snap = handle.stats.snapshot();
+        let (batches, reqs) = (snap.batches, snap.requests);
         println!(
             "max_batch={max_batch:<2} wait={max_wait_ms}ms threads={threads} | {reqs} reqs in {wall:.2}s \
              ({:.1} req/s) | latency p50 {:.1}ms p95 {:.1}ms | avg batch {:.2}",

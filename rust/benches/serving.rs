@@ -6,9 +6,13 @@
 //! asserted before any timing**, per lane count: every probe request
 //! must be answered bit-identically to a single-lane, single-request
 //! oracle server — a fast wrong server never produces a row. Each
-//! (lanes, concurrency) level lands a p50/p95/p99 latency row and each
-//! lane count a saturation-throughput row in `BENCH_serving.json` for
-//! the perf-tracking CI lane.
+//! (lanes, concurrency) level lands a p50/p95/p99/p99.9 latency row and
+//! each lane count a saturation-throughput row (with the metrics-
+//! registry delta its load moved) in `BENCH_serving.json` for the
+//! perf-tracking CI lane. The whole run records with observability on —
+//! the parity gate therefore doubles as a live obs-on/off bit-parity
+//! check — and exports `METRICS_serving.json` plus a Chrome-loadable
+//! `TRACE_serving.json` on exit.
 //!
 //! Run: `cargo bench --bench serving`
 //! (set `TFGNN_BENCH_SMOKE=1` for the short CI mode).
@@ -25,6 +29,8 @@ use tfgnn::train::native::NativeModel;
 use tfgnn::util::stats::{smoke, Bench, BenchReport, Summary};
 
 fn main() {
+    // Record metrics + spans for the whole run; exported at the end.
+    tfgnn::obs::report::enable(Some("METRICS_serving.json"), Some("TRACE_serving.json"));
     // Workload: smoke mode shrinks the graph and model so the CI lane
     // finishes in seconds but still emits every row.
     let (papers, authors, hidden, layers) =
@@ -91,6 +97,10 @@ fn main() {
         for _ in 0..bench.warmup {
             loadgen::run(&server, &probe, &lg).unwrap();
         }
+        // Registry delta across this lane count's timed iterations: the
+        // compact snapshot rides on the saturation row so the perf lane
+        // can cross-check counters (waves, cache traffic) per PR.
+        let before = tfgnn::obs::metrics().snapshot();
         let mut saturations = Vec::new();
         let mut last = None;
         for _ in 0..bench.iters.max(1) {
@@ -98,6 +108,7 @@ fn main() {
             saturations.push(r.saturation_throughput());
             last = Some(r);
         }
+        let delta = tfgnn::obs::metrics().snapshot().delta_since(&before);
         let r = last.unwrap();
         for level in &r.levels {
             assert_eq!(level.failed, 0, "lanes={lanes}: unexpected request failures");
@@ -109,16 +120,20 @@ fn main() {
                 "s",
             );
         }
-        report.row(
+        report.row_with_metrics(
             "serve/saturation",
             &format!("lanes={lanes}"),
             lanes,
             &Summary::of(&saturations),
             "items/s",
+            Some(delta.to_compact_json()),
         );
         server.shutdown();
     }
 
     let path = report.write().expect("write bench json");
     println!("\nwrote {}", path.display());
+    tfgnn::obs::report::finish(Some("METRICS_serving.json"), Some("TRACE_serving.json"))
+        .expect("write obs exports");
+    println!("wrote METRICS_serving.json and TRACE_serving.json");
 }

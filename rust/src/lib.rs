@@ -10,8 +10,10 @@
 //!   rooted-subgraph sampling ([`sampler`], [`coordinator`]), the
 //!   streaming input pipeline ([`pipeline`]), the AOT runtime
 //!   ([`runtime`]), training ([`train`]), orchestration ([`runner`]),
-//!   inference serving ([`serve`]) and the static model-plan analyzer
-//!   ([`analysis`], the `tfgnn check` subcommand).
+//!   inference serving ([`serve`]), the static model-plan analyzer
+//!   ([`analysis`], the `tfgnn check` subcommand) and the unified
+//!   observability layer ([`obs`]: metrics registry, tracing spans,
+//!   `tfgnn stats`).
 //! * **Layer 2** — the heterogeneous GNN models (MPNN, GCN, R-GCN,
 //!   GraphSAGE, GATv2, MultiHeadAttention, HGT baseline) written in JAX
 //!   under `python/compile/`, lowered once to HLO text.
@@ -29,6 +31,7 @@ pub mod analysis;
 pub mod coordinator;
 pub mod graph;
 pub mod layers;
+pub mod obs;
 pub mod ops;
 pub mod pipeline;
 pub mod runner;

@@ -15,7 +15,16 @@
 //! tfgnn loadgen  [--lanes N] [--queue N] [--cache N] [--arch mpnn]
 //!                [--concurrency 1,4,16] [--requests N] [--swap]
 //!                [--json PATH]         # closed-loop serving load test
+//! tfgnn stats    METRICS.json [--prometheus]   # pretty-print a
+//!                                              # metrics snapshot
 //! ```
+//!
+//! `train`, `serve-bench` and `loadgen` also accept
+//! `--metrics-out PATH` (write a `tfgnn_metrics_v1` JSON snapshot on
+//! exit) and `--trace-out PATH` (write a Chrome `trace_event` JSON —
+//! load it at `chrome://tracing` or <https://ui.perfetto.dev>). Either
+//! flag turns on histogram recording; `--trace-out` additionally turns
+//! on span capture. With neither flag the observability layer is inert.
 //!
 //! All subcommands read `artifacts/manifest.json` (written by
 //! `make artifacts`), so the Rust binary is self-contained after the
@@ -64,13 +73,53 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("sweep") => run_sweep(args),
         Some("serve-bench") => serve_bench(args),
         Some("loadgen") => loadgen(args),
+        Some("stats") => stats(args),
         _ => {
             eprintln!(
-                "usage: tfgnn <info|check|generate|sample|train|eval|sweep|serve-bench|loadgen> [--help]"
+                "usage: tfgnn <info|check|generate|sample|train|eval|sweep|serve-bench|loadgen|stats> [--help]"
             );
             Ok(())
         }
     }
+}
+
+/// Shared `--metrics-out` / `--trace-out` handling: arm the
+/// observability layer before the workload, export after it. Both
+/// steps are no-ops when neither flag is given.
+fn obs_enable(args: &Args) {
+    tfgnn::obs::report::enable(args.get("metrics-out"), args.get("trace-out"));
+}
+
+fn obs_finish(args: &Args) -> Result<()> {
+    tfgnn::obs::report::finish(args.get("metrics-out"), args.get("trace-out"))?;
+    if let Some(p) = args.get("metrics-out") {
+        println!("metrics written to {p}");
+    }
+    if let Some(p) = args.get("trace-out") {
+        println!("trace written to {p} (load in chrome://tracing or ui.perfetto.dev)");
+    }
+    Ok(())
+}
+
+/// `tfgnn stats METRICS.json [--prometheus]`: pretty-print a metrics
+/// snapshot exported by `--metrics-out` (or dump it in Prometheus text
+/// exposition format).
+fn stats(args: &Args) -> Result<()> {
+    let [path] = args.rest() else {
+        return Err(tfgnn::Error::Pipeline(
+            "usage: tfgnn stats <METRICS.json> [--prometheus]".into(),
+        ));
+    };
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| tfgnn::Error::Pipeline(format!("{path}: {e}")))?;
+    let snap =
+        tfgnn::obs::metrics::MetricsSnapshot::from_json(&tfgnn::util::json::Json::parse(&text)?)?;
+    if args.flag("prometheus") {
+        print!("{}", snap.to_prometheus());
+    } else {
+        print!("{}", tfgnn::obs::report::render_stats(&snap));
+    }
+    Ok(())
 }
 
 /// `tfgnn check CONFIG... [--against-checkpoint PATH]`: run the static
@@ -249,12 +298,13 @@ fn train(args: &Args) -> Result<()> {
         hp.weight_decay = args.get_or("wd", hp.weight_decay)?;
         cfg.hp = Some(hp);
     }
+    obs_enable(args);
     let report = run(&cfg)?;
     println!(
         "done: best val acc {:.4}, test {}, {:.1} steps/s",
         report.best_val_acc, report.test, report.train_steps_per_sec
     );
-    Ok(())
+    obs_finish(args)
 }
 
 fn eval(args: &Args) -> Result<()> {
@@ -315,6 +365,7 @@ fn serve_bench(args: &Args) -> Result<()> {
     };
     let max_batch: usize = args.get_or("max-batch", env.batch_size)?;
     let n_requests: usize = args.get_or("requests", 64)?;
+    obs_enable(args);
     let handle = tfgnn::serve::serve(
         &dir,
         &entry,
@@ -343,13 +394,15 @@ fn serve_bench(args: &Args) -> Result<()> {
     let total = t0.elapsed().as_secs_f64();
     let s = Summary::of(&latencies);
     println!(
-        "served {n_requests} requests in {total:.2}s ({:.1} req/s), latency p50 {:.1}ms p95 {:.1}ms",
+        "served {n_requests} requests in {total:.2}s ({:.1} req/s), \
+         latency p50 {:.1}ms p95 {:.1}ms p99.9 {:.1}ms",
         n_requests as f64 / total,
         s.p50 * 1e3,
-        s.p95 * 1e3
+        s.p95 * 1e3,
+        s.p999 * 1e3
     );
     handle.shutdown();
-    Ok(())
+    obs_finish(args)
 }
 
 /// `tfgnn loadgen`: closed-loop load generation against an in-process
@@ -390,6 +443,7 @@ fn loadgen(args: &Args) -> Result<()> {
         })
         .collect::<Result<Vec<usize>>>()?;
 
+    obs_enable(args);
     let mag = MagConfig {
         num_papers: papers,
         num_authors: authors,
@@ -445,28 +499,29 @@ fn loadgen(args: &Args) -> Result<()> {
     let report = tfgnn::serve::loadgen::run(&server, &probe, &lg)?;
     for level in &report.levels {
         println!(
-            "conc {:>4}: {:>8.1} req/s | p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms | \
+            "conc {:>4}: {:>8.1} req/s | p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms p99.9 {:.2}ms | \
              ok {} rejected {} failed {}",
             level.concurrency,
             level.throughput,
             level.latency.p50 * 1e3,
             level.latency.p95 * 1e3,
             level.latency.p99 * 1e3,
+            level.latency.p999 * 1e3,
             level.ok,
             level.rejected,
             level.failed,
         );
     }
     println!("saturation: {:.1} req/s", report.saturation_throughput());
-    let relaxed = std::sync::atomic::Ordering::Relaxed;
+    let snap = server.stats.snapshot();
     println!(
         "server: {} admitted, {} batches, {} rejected, cache {} hit / {} miss / {} evicted, generation {}",
-        server.stats.requests.load(relaxed),
-        server.stats.batches.load(relaxed),
-        server.stats.rejected.load(relaxed),
-        server.stats.cache_hits.load(relaxed),
-        server.stats.cache_misses.load(relaxed),
-        server.stats.cache_evictions.load(relaxed),
+        snap.requests,
+        snap.batches,
+        snap.rejected,
+        snap.cache_hits,
+        snap.cache_misses,
+        snap.cache_evictions,
         server.generation(),
     );
 
@@ -482,6 +537,7 @@ fn loadgen(args: &Args) -> Result<()> {
                     ("p50", Json::Num(l.latency.p50)),
                     ("p95", Json::Num(l.latency.p95)),
                     ("p99", Json::Num(l.latency.p99)),
+                    ("p999", Json::Num(l.latency.p999)),
                     ("ok", Json::Int(l.ok as i64)),
                     ("rejected", Json::Int(l.rejected as i64)),
                     ("failed", Json::Int(l.failed as i64)),
@@ -497,5 +553,5 @@ fn loadgen(args: &Args) -> Result<()> {
         println!("wrote {path}");
     }
     server.shutdown();
-    Ok(())
+    obs_finish(args)
 }

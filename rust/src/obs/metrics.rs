@@ -1,0 +1,932 @@
+//! Process-global metrics registry: counters, gauges, histograms.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc`
+//! clones of shared atomic cells; the registry only holds the
+//! name→handle map behind a mutex, so the hot path never touches a
+//! lock. Counters are sharded over cache-line-padded cells so
+//! concurrent increments from worker threads do not bounce one cache
+//! line; a snapshot sums the shards.
+//!
+//! Histograms use a fixed log₂ bucket layout (no allocation, no
+//! locks): bucket 0 is the underflow bucket (zero, negatives,
+//! subnormals and anything ≤ 2⁻²¹ ≈ 0.48 µs), buckets 1..=42 each
+//! cover one power of two, and the last bucket is overflow (anything
+//! > 2²¹ s ≈ 24 days, including `+inf`). `NaN` is rejected into a
+//! dedicated `nan_rejected` counter rather than poisoning the sum.
+//! The running sum is kept in integer microseconds (`u64` fetch_add)
+//! so concurrent recording stays associative — a float accumulator
+//! would make snapshots order-dependent.
+//!
+//! Every well-known metric is declared in [`METRICS`], the single
+//! source of truth behind the `docs/metrics.md` table
+//! ([`render_markdown`], byte-pinned by `tests/obs.rs`) and the
+//! pre-registration done by [`global`]. Exporters:
+//! [`MetricsSnapshot::to_json`] (stable JSON, `METRICS_*.json`) and
+//! [`MetricsSnapshot::to_prometheus`] (text exposition format).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Number of sharded cells per counter. Eight covers the pool sizes
+/// the benches run (1/2/8 threads) without making snapshots costly.
+const COUNTER_SHARDS: usize = 8;
+
+/// Histogram bucket count: underflow + 42 powers of two + overflow.
+pub const NUM_BUCKETS: usize = 44;
+
+/// Exponent of the underflow boundary: bucket 0 holds v ≤ 2^MIN_EXP.
+const MIN_EXP: i32 = -21;
+
+/// 2⁻²¹ exactly — the upper bound of the underflow bucket (~0.48 µs).
+const UNDERFLOW_UPPER: f64 = 4.76837158203125e-7;
+
+#[repr(align(64))]
+struct PaddedU64(AtomicU64);
+
+std::thread_local! {
+    /// This thread's counter shard, assigned round-robin on first use.
+    static SHARD: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+}
+
+fn shard_index() -> usize {
+    SHARD.with(|c| {
+        let v = c.get();
+        if v != usize::MAX {
+            return v;
+        }
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        let v = NEXT.fetch_add(1, Ordering::Relaxed) % COUNTER_SHARDS;
+        c.set(v);
+        v
+    })
+}
+
+/// Monotonic counter, sharded over padded atomics. An increment is a
+/// single relaxed `fetch_add` on this thread's shard.
+#[derive(Clone)]
+pub struct Counter {
+    cells: Arc<[PaddedU64; COUNTER_SHARDS]>,
+}
+
+impl Counter {
+    /// A counter not registered anywhere (unit tests, kind clashes).
+    pub fn detached() -> Self {
+        Counter { cells: Arc::new(std::array::from_fn(|_| PaddedU64(AtomicU64::new(0)))) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if let Some(cell) = self.cells.get(shard_index()) {
+            cell.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Sum over shards. Concurrent increments may or may not be seen;
+    /// all increments that happened-before the call are.
+    pub fn get(&self) -> u64 {
+        self.cells.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Instantaneous signed value (queue depth, generation).
+#[derive(Clone)]
+pub struct Gauge {
+    cell: Arc<AtomicI64>,
+}
+
+impl Gauge {
+    pub fn detached() -> Self {
+        Gauge { cell: Arc::new(AtomicI64::new(0)) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.cell.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: i64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, n: i64) {
+        self.cell.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+struct HistInner {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    /// Running sum in integer microseconds (micro-units for unitless
+    /// histograms like wave size): u64 `fetch_add` keeps concurrent
+    /// recording associative where a float accumulator would not be.
+    sum_micros: AtomicU64,
+    nan_rejected: AtomicU64,
+}
+
+/// Fixed log₂-bucket histogram; see the module docs for the layout.
+#[derive(Clone)]
+pub struct Histogram {
+    inner: Arc<HistInner>,
+}
+
+impl Histogram {
+    pub fn detached() -> Self {
+        Histogram {
+            inner: Arc::new(HistInner {
+                buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+                count: AtomicU64::new(0),
+                sum_micros: AtomicU64::new(0),
+                nan_rejected: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Record one observation (seconds for `_seconds` metrics). NaN
+    /// is rejected into the `nan_rejected` counter; everything else
+    /// lands in exactly one bucket.
+    pub fn record(&self, v: f64) {
+        let Some(i) = bucket_index(v) else {
+            self.inner.nan_rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        if let Some(b) = self.inner.buckets.get(i) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+        self.inner.count.fetch_add(1, Ordering::Relaxed);
+        let micros = v * 1e6;
+        if micros > 0.0 {
+            let m = if micros >= u64::MAX as f64 { u64::MAX } else { micros.round() as u64 };
+            self.inner.sum_micros.fetch_add(m, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.inner.count.load(Ordering::Relaxed),
+            sum_micros: self.inner.sum_micros.load(Ordering::Relaxed),
+            nan_rejected: self.inner.nan_rejected.load(Ordering::Relaxed),
+            buckets: self.inner.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// Map a value to its bucket; `None` means NaN (rejected).
+fn bucket_index(v: f64) -> Option<usize> {
+    if v.is_nan() {
+        return None;
+    }
+    if v <= UNDERFLOW_UPPER {
+        // Zero, negatives, subnormals and sub-half-microsecond values.
+        return Some(0);
+    }
+    if v == f64::INFINITY {
+        return Some(NUM_BUCKETS - 1);
+    }
+    let bits = v.to_bits();
+    let exp = (((bits >> 52) & 0x7ff) as i32) - 1023;
+    let mantissa = bits & ((1u64 << 52) - 1);
+    // v lies in [2^exp, 2^(exp+1)); bucket i covers (2^(MIN_EXP+i-1),
+    // 2^(MIN_EXP+i)], so exact powers of two stay one bucket lower.
+    let ub_exp = if mantissa == 0 { exp } else { exp + 1 };
+    let i = (ub_exp - MIN_EXP).max(1) as usize;
+    Some(i.min(NUM_BUCKETS - 1))
+}
+
+/// Inclusive upper bound of bucket `i` (`+inf` for the overflow
+/// bucket). Export-path only.
+pub fn bucket_upper(i: usize) -> f64 {
+    if i == 0 {
+        UNDERFLOW_UPPER
+    } else if i >= NUM_BUCKETS - 1 {
+        f64::INFINITY
+    } else {
+        2f64.powi(MIN_EXP + i as i32)
+    }
+}
+
+// ---- registry --------------------------------------------------------------
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// Name→handle map. Lookup takes the mutex; the handles it returns
+/// are lock-free, so call sites cache them (see `obs_counter!`).
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The counter registered under `name`, creating it on first use.
+    /// A name already registered as another kind yields a detached
+    /// handle (recorded values go nowhere) — never a panic.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(c) = g.counters.get(name) {
+            return c.clone();
+        }
+        if g.gauges.contains_key(name) || g.histograms.contains_key(name) {
+            return Counter::detached();
+        }
+        let c = Counter::detached();
+        g.counters.insert(name.to_string(), c.clone());
+        c
+    }
+
+    /// See [`MetricsRegistry::counter`].
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(v) = g.gauges.get(name) {
+            return v.clone();
+        }
+        if g.counters.contains_key(name) || g.histograms.contains_key(name) {
+            return Gauge::detached();
+        }
+        let v = Gauge::detached();
+        g.gauges.insert(name.to_string(), v.clone());
+        v
+    }
+
+    /// See [`MetricsRegistry::counter`].
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(h) = g.histograms.get(name) {
+            return h.clone();
+        }
+        if g.counters.contains_key(name) || g.gauges.contains_key(name) {
+            return Histogram::detached();
+        }
+        let h = Histogram::detached();
+        g.histograms.insert(name.to_string(), h.clone());
+        h
+    }
+
+    /// Read every registered metric once into a coherent-per-metric
+    /// snapshot (counters sum their shards at read time).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        MetricsSnapshot {
+            counters: g.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect(),
+            gauges: g.gauges.iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            histograms: g.histograms.iter().map(|(k, h)| (k.clone(), h.snapshot())).collect(),
+        }
+    }
+}
+
+static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// The process-global registry, with every [`METRICS`] entry
+/// pre-registered so snapshots have a stable shape from the start.
+pub fn global() -> &'static MetricsRegistry {
+    GLOBAL.get_or_init(|| {
+        let r = MetricsRegistry::new();
+        for def in METRICS {
+            match def.kind {
+                MetricKind::Counter => {
+                    r.counter(def.name);
+                }
+                MetricKind::Gauge => {
+                    r.gauge(def.name);
+                }
+                MetricKind::Histogram => {
+                    r.histogram(def.name);
+                }
+            }
+        }
+        r
+    })
+}
+
+// ---- snapshots -------------------------------------------------------------
+
+/// Point-in-time copy of one histogram.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum_micros: u64,
+    pub nan_rejected: u64,
+    /// `NUM_BUCKETS` per-bucket counts (not cumulative).
+    pub buckets: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    pub fn sum_seconds(&self) -> f64 {
+        self.sum_micros as f64 / 1e6
+    }
+
+    pub fn mean_seconds(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_seconds() / self.count as f64
+        }
+    }
+}
+
+/// Point-in-time copy of the whole registry; the unit of export,
+/// diffing (`delta_since`) and the `tfgnn stats` renderer.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+fn int(v: u64) -> Json {
+    Json::Int(i64::try_from(v).unwrap_or(i64::MAX))
+}
+
+impl MetricsSnapshot {
+    /// Stable JSON document (the `METRICS_*.json` schema): three
+    /// sorted maps under `counters` / `gauges` / `histograms`.
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(self.counters.iter().map(|(k, v)| (k.clone(), int(*v))).collect());
+        let gauges =
+            Json::Obj(self.gauges.iter().map(|(k, v)| (k.clone(), Json::Int(*v))).collect());
+        let histograms = Json::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    let mut m = BTreeMap::new();
+                    m.insert("count".to_string(), int(h.count));
+                    m.insert("sum_micros".to_string(), int(h.sum_micros));
+                    m.insert("nan_rejected".to_string(), int(h.nan_rejected));
+                    m.insert(
+                        "bucket_counts".to_string(),
+                        Json::Arr(h.buckets.iter().map(|&b| int(b)).collect()),
+                    );
+                    (k.clone(), Json::Obj(m))
+                })
+                .collect(),
+        );
+        let mut top = BTreeMap::new();
+        top.insert("schema".to_string(), Json::Str("tfgnn_metrics_v1".to_string()));
+        top.insert("counters".to_string(), counters);
+        top.insert("gauges".to_string(), gauges);
+        top.insert("histograms".to_string(), histograms);
+        Json::Obj(top)
+    }
+
+    /// Parse a document produced by [`MetricsSnapshot::to_json`].
+    pub fn from_json(doc: &Json) -> Result<MetricsSnapshot> {
+        let mut snap = MetricsSnapshot::default();
+        for (k, v) in doc.get("counters")?.as_obj()? {
+            snap.counters.insert(k.clone(), u64::try_from(v.as_i64()?).unwrap_or(0));
+        }
+        for (k, v) in doc.get("gauges")?.as_obj()? {
+            snap.gauges.insert(k.clone(), v.as_i64()?);
+        }
+        for (k, v) in doc.get("histograms")?.as_obj()? {
+            let mut h = HistogramSnapshot {
+                count: u64::try_from(v.get("count")?.as_i64()?).unwrap_or(0),
+                sum_micros: u64::try_from(v.get("sum_micros")?.as_i64()?).unwrap_or(0),
+                nan_rejected: u64::try_from(v.get("nan_rejected")?.as_i64()?).unwrap_or(0),
+                buckets: Vec::with_capacity(NUM_BUCKETS),
+            };
+            for b in v.get("bucket_counts")?.as_arr()? {
+                h.buckets.push(u64::try_from(b.as_i64()?).unwrap_or(0));
+            }
+            if h.buckets.len() != NUM_BUCKETS {
+                return Err(Error::Codec(format!(
+                    "histogram {k:?} has {} buckets, expected {NUM_BUCKETS}",
+                    h.buckets.len()
+                )));
+            }
+            snap.histograms.insert(k.clone(), h);
+        }
+        Ok(snap)
+    }
+
+    /// What happened between `earlier` and `self`: counters and
+    /// histogram tallies subtract (saturating); gauges keep their
+    /// current value (a delta of an instantaneous reading is
+    /// meaningless).
+    pub fn delta_since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| {
+                (k.clone(), v.saturating_sub(earlier.counters.get(k).copied().unwrap_or(0)))
+            })
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                let e = earlier.histograms.get(k);
+                let zero = HistogramSnapshot::default();
+                let e = e.unwrap_or(&zero);
+                let buckets = h
+                    .buckets
+                    .iter()
+                    .enumerate()
+                    .map(|(i, b)| b.saturating_sub(e.buckets.get(i).copied().unwrap_or(0)))
+                    .collect();
+                (
+                    k.clone(),
+                    HistogramSnapshot {
+                        count: h.count.saturating_sub(e.count),
+                        sum_micros: h.sum_micros.saturating_sub(e.sum_micros),
+                        nan_rejected: h.nan_rejected.saturating_sub(e.nan_rejected),
+                        buckets,
+                    },
+                )
+            })
+            .collect();
+        MetricsSnapshot { counters, gauges: self.gauges.clone(), histograms }
+    }
+
+    /// Compact JSON for embedding in bench rows: nonzero counters,
+    /// nonzero gauges, and `{count, sum_micros}` per touched
+    /// histogram — small enough to diff by eye in `BENCH_*.json`.
+    pub fn to_compact_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        for (k, v) in &self.counters {
+            if *v != 0 {
+                m.insert(k.clone(), int(*v));
+            }
+        }
+        for (k, v) in &self.gauges {
+            if *v != 0 {
+                m.insert(k.clone(), Json::Int(*v));
+            }
+        }
+        for (k, h) in &self.histograms {
+            if h.count != 0 {
+                let mut hm = BTreeMap::new();
+                hm.insert("count".to_string(), int(h.count));
+                hm.insert("sum_micros".to_string(), int(h.sum_micros));
+                m.insert(k.clone(), Json::Obj(hm));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// Prometheus text exposition format (counters, gauges, then
+    /// histograms with cumulative `le` buckets).
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            if let Some(def) = lookup(name) {
+                let _ = writeln!(out, "# HELP {name} {}", def.help);
+            }
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            if let Some(def) = lookup(name) {
+                let _ = writeln!(out, "# HELP {name} {}", def.help);
+            }
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, h) in &self.histograms {
+            if let Some(def) = lookup(name) {
+                let _ = writeln!(out, "# HELP {name} {}", def.help);
+            }
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let mut cum: u64 = 0;
+            for (i, b) in h.buckets.iter().enumerate() {
+                cum = cum.saturating_add(*b);
+                if i == NUM_BUCKETS - 1 {
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+                } else {
+                    let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", bucket_upper(i));
+                }
+            }
+            let _ = writeln!(out, "{name}_sum {}", h.sum_seconds());
+            let _ = writeln!(out, "{name}_count {}", h.count);
+        }
+        out
+    }
+}
+
+// ---- the well-known metric table -------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One row of the metric table: the contract between the wiring, the
+/// exporters and `docs/metrics.md`.
+pub struct MetricDef {
+    pub name: &'static str,
+    pub kind: MetricKind,
+    pub stage: &'static str,
+    pub help: &'static str,
+}
+
+/// Well-known metric names, so wiring sites cannot typo a string.
+pub mod names {
+    pub const SAMPLER_RETRY_ATTEMPTS: &str = "sampler_retry_attempts_total";
+    pub const SAMPLER_RETRY_EXHAUSTED: &str = "sampler_retry_exhausted_total";
+    pub const SAMPLER_SHARD_FANOUT_SECONDS: &str = "sampler_shard_fanout_seconds";
+    pub const SAMPLER_SUBGRAPHS: &str = "sampler_subgraphs_total";
+    pub const SERVE_BATCHES: &str = "serve_batches_total";
+    pub const SERVE_CACHE_EVICTIONS: &str = "serve_cache_evictions_total";
+    pub const SERVE_CACHE_HITS: &str = "serve_cache_hits_total";
+    pub const SERVE_CACHE_MISSES: &str = "serve_cache_misses_total";
+    pub const SERVE_FAILED_BATCHES: &str = "serve_failed_batches_total";
+    pub const SERVE_GENERATION: &str = "serve_generation";
+    pub const SERVE_QUEUE_DEPTH: &str = "serve_queue_depth";
+    pub const SERVE_REJECTED: &str = "serve_rejected_total";
+    pub const SERVE_REQUESTS: &str = "serve_requests_total";
+    pub const SERVE_SWAPS: &str = "serve_swaps_total";
+    pub const SERVE_WAVE_SECONDS: &str = "serve_wave_seconds";
+    pub const SERVE_WAVE_SIZE: &str = "serve_wave_size";
+    pub const THREADPOOL_EXECUTE_SECONDS: &str = "threadpool_execute_seconds";
+    pub const THREADPOOL_JOBS: &str = "threadpool_jobs_total";
+    pub const THREADPOOL_QUEUE_WAIT_SECONDS: &str = "threadpool_queue_wait_seconds";
+    pub const TRAINER_ALLREDUCE_SECONDS: &str = "trainer_allreduce_seconds";
+    pub const TRAINER_BACKWARD_SECONDS: &str = "trainer_backward_seconds";
+    pub const TRAINER_FORWARD_SECONDS: &str = "trainer_forward_seconds";
+    pub const TRAINER_OPTIMIZER_SECONDS: &str = "trainer_optimizer_seconds";
+    pub const TRAINER_STEPS: &str = "trainer_steps_total";
+}
+
+/// Every well-known metric, sorted by name. `docs/metrics.md` is
+/// generated from this table; `tests/obs.rs` pins the two together.
+pub const METRICS: &[MetricDef] = &[
+    MetricDef {
+        name: names::SAMPLER_RETRY_ATTEMPTS,
+        kind: MetricKind::Counter,
+        stage: "sampler",
+        help: "RPC attempts made under RetryPolicy::run_lazy, including each first try.",
+    },
+    MetricDef {
+        name: names::SAMPLER_RETRY_EXHAUSTED,
+        kind: MetricKind::Counter,
+        stage: "sampler",
+        help: "run_lazy calls that exhausted max_attempts and returned the tallied error.",
+    },
+    MetricDef {
+        name: names::SAMPLER_SHARD_FANOUT_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "sampler",
+        help: "Per-shard fanout latency of sample_batch_parallel, one observation per shard task.",
+    },
+    MetricDef {
+        name: names::SAMPLER_SUBGRAPHS,
+        kind: MetricKind::Counter,
+        stage: "sampler",
+        help: "Rooted subgraphs assembled; the serial and parallel paths share this tail.",
+    },
+    MetricDef {
+        name: names::SERVE_BATCHES,
+        kind: MetricKind::Counter,
+        stage: "serve",
+        help: "Waves executed by batcher lanes.",
+    },
+    MetricDef {
+        name: names::SERVE_CACHE_EVICTIONS,
+        kind: MetricKind::Counter,
+        stage: "serve",
+        help: "LRU subgraph cache evictions.",
+    },
+    MetricDef {
+        name: names::SERVE_CACHE_HITS,
+        kind: MetricKind::Counter,
+        stage: "serve",
+        help: "Subgraph cache hits.",
+    },
+    MetricDef {
+        name: names::SERVE_CACHE_MISSES,
+        kind: MetricKind::Counter,
+        stage: "serve",
+        help: "Subgraph cache misses.",
+    },
+    MetricDef {
+        name: names::SERVE_FAILED_BATCHES,
+        kind: MetricKind::Counter,
+        stage: "serve",
+        help: "Waves that failed as a unit and rejected their requests.",
+    },
+    MetricDef {
+        name: names::SERVE_GENERATION,
+        kind: MetricKind::Gauge,
+        stage: "serve",
+        help: "Model generation currently serving; bumped by each hot swap.",
+    },
+    MetricDef {
+        name: names::SERVE_QUEUE_DEPTH,
+        kind: MetricKind::Gauge,
+        stage: "serve",
+        help: "Requests admitted but not yet replied to, across all lanes.",
+    },
+    MetricDef {
+        name: names::SERVE_REJECTED,
+        kind: MetricKind::Counter,
+        stage: "serve",
+        help: "Requests rejected by admission control with Overloaded.",
+    },
+    MetricDef {
+        name: names::SERVE_REQUESTS,
+        kind: MetricKind::Counter,
+        stage: "serve",
+        help: "Requests pulled into an executed wave (rejections excluded).",
+    },
+    MetricDef {
+        name: names::SERVE_SWAPS,
+        kind: MetricKind::Counter,
+        stage: "serve",
+        help: "Hot swaps applied to the model slot.",
+    },
+    MetricDef {
+        name: names::SERVE_WAVE_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "serve",
+        help: "Wall time of one batcher wave: collect, execute and reply.",
+    },
+    MetricDef {
+        name: names::SERVE_WAVE_SIZE,
+        kind: MetricKind::Histogram,
+        stage: "serve",
+        help: "Requests per batcher wave (unitless; sum_micros is size times 1e6).",
+    },
+    MetricDef {
+        name: names::THREADPOOL_EXECUTE_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "threadpool",
+        help: "Job body execution time on a worker thread.",
+    },
+    MetricDef {
+        name: names::THREADPOOL_JOBS,
+        kind: MetricKind::Counter,
+        stage: "threadpool",
+        help: "Jobs submitted through ThreadPool::execute.",
+    },
+    MetricDef {
+        name: names::THREADPOOL_QUEUE_WAIT_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "threadpool",
+        help: "Time a job waited in the queue before a worker picked it up.",
+    },
+    MetricDef {
+        name: names::TRAINER_ALLREDUCE_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "trainer",
+        help: "Deterministic in-order gradient all-reduce time per step.",
+    },
+    MetricDef {
+        name: names::TRAINER_BACKWARD_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "trainer",
+        help: "Backward (VJP) time per trunk backward call.",
+    },
+    MetricDef {
+        name: names::TRAINER_FORWARD_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "trainer",
+        help: "Forward (tape-recording) time per trunk forward call.",
+    },
+    MetricDef {
+        name: names::TRAINER_OPTIMIZER_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "trainer",
+        help: "Optimizer (Adam) update time per step.",
+    },
+    MetricDef {
+        name: names::TRAINER_STEPS,
+        kind: MetricKind::Counter,
+        stage: "trainer",
+        help: "Training steps completed by NativeTrainer::train_batch.",
+    },
+];
+
+/// The [`METRICS`] row for `name`, if it is a well-known metric.
+pub fn lookup(name: &str) -> Option<&'static MetricDef> {
+    METRICS.iter().find(|d| d.name == name)
+}
+
+/// Generate `docs/metrics.md` from [`METRICS`] (pinned to the
+/// checked-in file by `tests/obs.rs`).
+pub fn render_markdown() -> String {
+    let mut out = String::new();
+    out.push_str("# Metrics reference\n\n");
+    out.push_str(
+        "Generated from the single source-of-truth table in \
+         `rust/src/obs/metrics.rs` — edit `METRICS`, not this file \
+         (`tests/obs.rs` pins the two together).\n\n",
+    );
+    out.push_str(
+        "All metrics are process-global and live in the `obs::metrics` \
+         registry. Counters and gauges are always on; histograms only \
+         record while recording is enabled (`--metrics-out`, a bench, or \
+         `obs::set_recording`). Histograms use 44 fixed log2 buckets \
+         spanning ~0.5us to ~24 days with underflow and overflow buckets \
+         at the ends; NaN observations are rejected into a nan_rejected \
+         counter. Export formats: stable JSON (`METRICS_*.json`) and \
+         Prometheus text, rendered by `tfgnn stats`.\n\n",
+    );
+    out.push_str("| Name | Kind | Stage | Description |\n");
+    out.push_str("|---|---|---|---|\n");
+    for m in METRICS {
+        out.push_str(&format!("| `{}` | {} | {} | {} |\n", m.name, m.kind.name(), m.stage, m.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sums_across_threads() {
+        let c = Counter::detached();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn gauge_add_sub_set() {
+        let g = Gauge::detached();
+        g.add(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+        g.set(-7);
+        assert_eq!(g.get(), -7);
+    }
+
+    #[test]
+    fn bucket_boundaries() {
+        // Underflow: zero, negatives, subnormals, the boundary itself.
+        assert_eq!(bucket_index(0.0), Some(0));
+        assert_eq!(bucket_index(-1.0), Some(0));
+        assert_eq!(bucket_index(f64::MIN_POSITIVE / 2.0), Some(0), "subnormal");
+        assert_eq!(bucket_index(UNDERFLOW_UPPER), Some(0));
+        // Just above the boundary lands in bucket 1.
+        assert_eq!(bucket_index(UNDERFLOW_UPPER * 1.0001), Some(1));
+        // Exact powers of two are inclusive upper bounds.
+        assert_eq!(bucket_index(UNDERFLOW_UPPER * 2.0), Some(1));
+        assert_eq!(bucket_index(UNDERFLOW_UPPER * 2.0001), Some(2));
+        // 1.0s: (2^-1, 2^0] is bucket 21 - MIN_EXP offset.
+        assert_eq!(bucket_index(1.0), Some((-MIN_EXP) as usize));
+        assert_eq!(bucket_index(0.75), Some((-MIN_EXP) as usize));
+        // Overflow: max, infinity.
+        assert_eq!(bucket_index(f64::MAX), Some(NUM_BUCKETS - 1));
+        assert_eq!(bucket_index(f64::INFINITY), Some(NUM_BUCKETS - 1));
+        // NaN is rejected, not bucketed.
+        assert_eq!(bucket_index(f64::NAN), None);
+    }
+
+    #[test]
+    fn histogram_rejects_nan_and_sums() {
+        let h = Histogram::detached();
+        h.record(1.0);
+        h.record(0.5);
+        h.record(f64::NAN);
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.nan_rejected, 1);
+        assert_eq!(s.sum_micros, 1_500_000);
+        assert!((s.sum_seconds() - 1.5).abs() < 1e-9);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn bucket_uppers_are_monotonic() {
+        for i in 1..NUM_BUCKETS {
+            assert!(bucket_upper(i) > bucket_upper(i - 1), "bucket {i}");
+        }
+        assert_eq!(bucket_upper(NUM_BUCKETS - 1), f64::INFINITY);
+    }
+
+    #[test]
+    fn registry_same_name_same_handle_kind_clash_detached() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("x_total");
+        let b = r.counter("x_total");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "same name must share cells");
+        // Registering the same name as a different kind never panics
+        // and never aliases: the clashing handle is detached.
+        let h = r.histogram("x_total");
+        h.record(1.0);
+        assert_eq!(r.snapshot().counters.get("x_total"), Some(&2));
+        assert!(!r.snapshot().histograms.contains_key("x_total"));
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip_and_delta() {
+        let r = MetricsRegistry::new();
+        r.counter("a_total").add(3);
+        r.gauge("depth").set(-2);
+        r.histogram("lat_seconds").record(0.25);
+        let s1 = r.snapshot();
+        let parsed = MetricsSnapshot::from_json(&s1.to_json()).expect("roundtrip");
+        assert_eq!(parsed, s1);
+        r.counter("a_total").add(4);
+        r.histogram("lat_seconds").record(0.5);
+        let d = r.snapshot().delta_since(&s1);
+        assert_eq!(d.counters.get("a_total"), Some(&4));
+        let h = d.histograms.get("lat_seconds").expect("hist");
+        assert_eq!(h.count, 1);
+        assert_eq!(h.buckets.iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn prometheus_render_shape() {
+        let r = MetricsRegistry::new();
+        r.counter(names::SERVE_REQUESTS).add(7);
+        r.histogram(names::SERVE_WAVE_SECONDS).record(0.001);
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE serve_requests_total counter"));
+        assert!(text.contains("serve_requests_total 7"));
+        assert!(text.contains("# HELP serve_requests_total"));
+        assert!(text.contains("# TYPE serve_wave_seconds histogram"));
+        assert!(text.contains("serve_wave_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("serve_wave_seconds_count 1"));
+    }
+
+    #[test]
+    fn metric_table_is_sorted_and_named_consistently() {
+        for w in METRICS.windows(2) {
+            assert!(w[0].name < w[1].name, "METRICS must stay sorted: {}", w[1].name);
+        }
+        for m in METRICS {
+            match m.kind {
+                MetricKind::Counter => {
+                    assert!(m.name.ends_with("_total"), "{}", m.name);
+                }
+                MetricKind::Histogram => {
+                    assert!(
+                        m.name.ends_with("_seconds") || m.name == names::SERVE_WAVE_SIZE,
+                        "{}",
+                        m.name
+                    );
+                }
+                MetricKind::Gauge => {}
+            }
+            assert!(!m.help.contains('|'), "help must stay table-safe: {}", m.name);
+        }
+    }
+
+    #[test]
+    fn markdown_covers_every_metric() {
+        let md = render_markdown();
+        assert!(md.starts_with("# Metrics reference"));
+        for m in METRICS {
+            assert!(md.contains(m.name), "{} missing from markdown", m.name);
+        }
+    }
+
+    #[test]
+    fn global_registry_preregisters_the_table() {
+        let snap = global().snapshot();
+        for m in METRICS {
+            let present = match m.kind {
+                MetricKind::Counter => snap.counters.contains_key(m.name),
+                MetricKind::Gauge => snap.gauges.contains_key(m.name),
+                MetricKind::Histogram => snap.histograms.contains_key(m.name),
+            };
+            assert!(present, "{} not pre-registered", m.name);
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Export and rendering: `--metrics-out` / `--trace-out` plumbing and
+//! the `tfgnn stats` renderer.
+//!
+//! The CLI entry points call [`enable`] before the workload (turning
+//! on timed recording and, if a trace path was given, span recording)
+//! and [`finish`] after it (writing the metrics snapshot and the
+//! Chrome trace to the requested paths). `tfgnn stats FILE` reads a
+//! written `METRICS_*.json` back and renders it with [`render_stats`].
+
+use std::collections::BTreeMap;
+
+use super::metrics::{self, HistogramSnapshot, MetricsSnapshot};
+use super::trace;
+use crate::Result;
+
+/// Turn on recording for the requested outputs: any output enables
+/// timed metrics; a trace output additionally enables span recording.
+/// With both `None` this is a no-op and everything stays inert.
+pub fn enable(metrics_out: Option<&str>, trace_out: Option<&str>) {
+    if metrics_out.is_some() || trace_out.is_some() {
+        super::set_recording(true);
+    }
+    if trace_out.is_some() {
+        trace::set_enabled(true);
+    }
+}
+
+/// Write the requested outputs after the workload. Recording stays on
+/// (the process is about to exit; repeated calls just re-snapshot).
+pub fn finish(metrics_out: Option<&str>, trace_out: Option<&str>) -> Result<()> {
+    if let Some(path) = metrics_out {
+        write_metrics(path)?;
+    }
+    if let Some(path) = trace_out {
+        write_trace(path)?;
+    }
+    Ok(())
+}
+
+/// Write the global registry snapshot as pretty JSON to `path`.
+pub fn write_metrics(path: &str) -> Result<()> {
+    let doc = metrics::global().snapshot().to_json();
+    std::fs::write(path, doc.to_pretty() + "\n")?;
+    Ok(())
+}
+
+/// Drain all trace rings and write the Chrome trace document to `path`.
+pub fn write_trace(path: &str) -> Result<()> {
+    let doc = trace::export_chrome();
+    std::fs::write(path, doc.to_string() + "\n")?;
+    Ok(())
+}
+
+/// Upper bound of the bucket holding the `q`-quantile observation —
+/// a conservative estimate (the true value is at most this), which is
+/// what a log-bucket histogram can honestly report.
+pub fn approx_percentile(h: &HistogramSnapshot, q: f64) -> f64 {
+    if h.count == 0 {
+        return 0.0;
+    }
+    let rank = (q.clamp(0.0, 1.0) * h.count as f64).ceil().max(1.0) as u64;
+    let mut cum = 0u64;
+    for (i, b) in h.buckets.iter().enumerate() {
+        cum += b;
+        if cum >= rank {
+            return metrics::bucket_upper(i);
+        }
+    }
+    f64::INFINITY
+}
+
+fn fmt_seconds(v: f64) -> String {
+    if v == f64::INFINITY {
+        "inf".to_string()
+    } else if v >= 1.0 {
+        format!("{v:.3}s")
+    } else if v >= 1e-3 {
+        format!("{:.3}ms", v * 1e3)
+    } else {
+        format!("{:.3}us", v * 1e6)
+    }
+}
+
+/// Render a snapshot as grouped human-readable text (the body of
+/// `tfgnn stats`). Zero-valued counters are elided; histograms show
+/// count, mean and conservative p50/p95/p99/p99.9 bucket bounds.
+pub fn render_stats(snap: &MetricsSnapshot) -> String {
+    // Group by stage prefix (the part before the first '_').
+    let mut groups: BTreeMap<&str, Vec<String>> = BTreeMap::new();
+    let stage_of = |name: &str| {
+        metrics::lookup(name).map(|d| d.stage).unwrap_or("other")
+    };
+    for (name, v) in &snap.counters {
+        if *v != 0 {
+            groups.entry(stage_of(name)).or_default().push(format!("  {name:<34} {v}"));
+        }
+    }
+    for (name, v) in &snap.gauges {
+        groups.entry(stage_of(name)).or_default().push(format!("  {name:<34} {v}"));
+    }
+    for (name, h) in &snap.histograms {
+        if h.count == 0 {
+            continue;
+        }
+        let mut line = format!(
+            "  {name:<34} count={} mean={} p50<={} p95<={} p99<={} p99.9<={}",
+            h.count,
+            fmt_seconds(h.mean_seconds()),
+            fmt_seconds(approx_percentile(h, 0.50)),
+            fmt_seconds(approx_percentile(h, 0.95)),
+            fmt_seconds(approx_percentile(h, 0.99)),
+            fmt_seconds(approx_percentile(h, 0.999)),
+        );
+        if h.nan_rejected > 0 {
+            line.push_str(&format!(" nan_rejected={}", h.nan_rejected));
+        }
+        groups.entry(stage_of(name)).or_default().push(line);
+    }
+    let mut out = String::new();
+    for (stage, lines) in &groups {
+        out.push_str(&format!("{stage}:\n"));
+        for line in lines {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    if out.is_empty() {
+        out.push_str("(no nonzero metrics)\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_of_empty_is_zero() {
+        let h = HistogramSnapshot::default();
+        assert_eq!(approx_percentile(&h, 0.99), 0.0);
+    }
+
+    #[test]
+    fn percentile_walks_buckets() {
+        let h = metrics::Histogram::detached();
+        for _ in 0..99 {
+            h.record(1e-3);
+        }
+        h.record(1.0);
+        let s = h.snapshot();
+        let p50 = approx_percentile(&s, 0.50);
+        let p999 = approx_percentile(&s, 0.999);
+        assert!(p50 >= 1e-3 && p50 < 0.5, "p50 bound {p50}");
+        assert!(p999 >= 1.0, "p99.9 bound {p999} must cover the slow outlier");
+        assert!(p999 < f64::INFINITY);
+    }
+
+    #[test]
+    fn render_groups_by_stage() {
+        let mut snap = MetricsSnapshot::default();
+        snap.counters.insert(metrics::names::SERVE_REQUESTS.to_string(), 5);
+        snap.counters.insert(metrics::names::TRAINER_STEPS.to_string(), 2);
+        snap.counters.insert("zero_total".to_string(), 0);
+        let text = render_stats(&snap);
+        assert!(text.contains("serve:\n"));
+        assert!(text.contains("trainer:\n"));
+        assert!(text.contains("serve_requests_total"));
+        assert!(!text.contains("zero_total"), "zero counters are elided");
+    }
+
+    #[test]
+    fn write_and_reread_metrics_file() {
+        metrics::global().counter("report_unit_total").inc();
+        let path = std::env::temp_dir().join("tfgnn_report_unit_metrics.json");
+        let path = path.to_string_lossy().to_string();
+        write_metrics(&path).expect("write");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let doc = crate::util::json::Json::parse(&text).expect("valid json");
+        let snap = MetricsSnapshot::from_json(&doc).expect("schema");
+        assert!(snap.counters.get("report_unit_total").copied().unwrap_or(0) >= 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

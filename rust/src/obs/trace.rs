@@ -1,0 +1,320 @@
+//! Scoped tracing spans recorded into per-thread ring buffers.
+//!
+//! A span is opened with the [`crate::span!`] macro (or [`span`] /
+//! [`span_arg`]) and records itself when the guard drops. Recording is
+//! gated on a single relaxed load of the global enable flag: with
+//! tracing off a span is a `None` — no clock read, no allocation, no
+//! shared-state traffic — which is what keeps instrumented hot paths
+//! bit-identical to the uninstrumented oracles.
+//!
+//! Each thread writes into its own fixed-capacity ring (oldest events
+//! overwritten past [`RING_CAP`]; the drop tally is reported in the
+//! export), registered globally on first use so [`drain`] can collect
+//! everything. The export format is the Chrome `trace_event` JSON
+//! ([`to_chrome_json`]): complete events (`"ph":"X"`) with
+//! microsecond `ts`/`dur` relative to a process-wide epoch, loadable
+//! in `about:tracing` / Perfetto / `chrome://tracing`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Per-thread ring capacity. At ~64 bytes an event this bounds a
+/// thread's trace memory to ~4 MiB.
+pub const RING_CAP: usize = 65536;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Enable or disable span recording. Enabling also pins the process
+/// epoch that all `ts` values are relative to.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// True when spans are being recorded (one relaxed load).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// One completed span, ready for export.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    pub name: &'static str,
+    /// Small per-thread integer (assigned on first span), not an OS id.
+    pub tid: u64,
+    /// Start offset from the process epoch, microseconds.
+    pub ts_micros: u64,
+    /// Duration, microseconds.
+    pub dur_micros: u64,
+    /// Optional single integer argument (`span!(name, key = v)`).
+    pub arg: Option<(&'static str, i64)>,
+}
+
+struct Ring {
+    slots: Vec<Event>,
+    /// Next write position (wraps at RING_CAP).
+    head: usize,
+    /// Total events ever pushed; `total - slots.len()` were dropped.
+    total: u64,
+}
+
+impl Ring {
+    fn new() -> Self {
+        Ring { slots: Vec::new(), head: 0, total: 0 }
+    }
+
+    fn push(&mut self, ev: Event) {
+        self.total += 1;
+        if self.slots.len() < RING_CAP {
+            self.slots.push(ev);
+            self.head = self.slots.len() % RING_CAP;
+        } else if let Some(slot) = self.slots.get_mut(self.head) {
+            *slot = ev;
+            self.head = (self.head + 1) % RING_CAP;
+        }
+    }
+
+    fn drain(&mut self) -> (Vec<Event>, u64) {
+        let dropped = self.total.saturating_sub(self.slots.len() as u64);
+        self.head = 0;
+        self.total = 0;
+        (std::mem::take(&mut self.slots), dropped)
+    }
+}
+
+/// All live thread rings, so `drain` can reach every thread's events
+/// (including threads that have since exited — the Arc keeps them).
+static RINGS: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+std::thread_local! {
+    static LOCAL: std::cell::OnceCell<(u64, Arc<Mutex<Ring>>)> =
+        const { std::cell::OnceCell::new() };
+}
+
+fn with_local_ring(f: impl FnOnce(u64, &Mutex<Ring>)) {
+    LOCAL.with(|cell| {
+        let (tid, ring) = cell.get_or_init(|| {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let ring = Arc::new(Mutex::new(Ring::new()));
+            let rings = RINGS.get_or_init(|| Mutex::new(Vec::new()));
+            rings.lock().unwrap_or_else(PoisonError::into_inner).push(ring.clone());
+            (tid, ring)
+        });
+        f(*tid, ring);
+    });
+}
+
+/// RAII span guard; records on drop if tracing was enabled when it
+/// was opened. Inert (`None` inside) otherwise.
+pub struct Span {
+    live: Option<SpanStart>,
+}
+
+struct SpanStart {
+    name: &'static str,
+    arg: Option<(&'static str, i64)>,
+    t0: Instant,
+}
+
+/// Open a span; prefer the [`crate::span!`] macro.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span { live: None };
+    }
+    Span { live: Some(SpanStart { name, arg: None, t0: Instant::now() }) }
+}
+
+/// Open a span carrying one integer argument.
+#[inline]
+pub fn span_arg(name: &'static str, key: &'static str, val: i64) -> Span {
+    if !enabled() {
+        return Span { live: None };
+    }
+    Span { live: Some(SpanStart { name, arg: Some((key, val)), t0: Instant::now() }) }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.live.take() else {
+            return;
+        };
+        let dur = start.t0.elapsed();
+        let ts = start.t0.saturating_duration_since(epoch());
+        with_local_ring(move |tid, ring| {
+            let mut g = ring.lock().unwrap_or_else(PoisonError::into_inner);
+            g.push(Event {
+                name: start.name,
+                tid,
+                ts_micros: ts.as_micros().min(u64::MAX as u128) as u64,
+                dur_micros: dur.as_micros().min(u64::MAX as u128) as u64,
+                arg: start.arg,
+            });
+        });
+    }
+}
+
+/// Collect (and clear) every thread's events plus the total dropped
+/// count. Events are sorted by `(ts, tid)` for a stable export.
+pub fn drain() -> (Vec<Event>, u64) {
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    if let Some(rings) = RINGS.get() {
+        let g = rings.lock().unwrap_or_else(PoisonError::into_inner);
+        for ring in g.iter() {
+            let (mut evs, d) = ring.lock().unwrap_or_else(PoisonError::into_inner).drain();
+            events.append(&mut evs);
+            dropped += d;
+        }
+    }
+    events.sort_by_key(|e| (e.ts_micros, e.tid));
+    (events, dropped)
+}
+
+/// Render events as a Chrome `trace_event` JSON object document.
+pub fn to_chrome_json(events: &[Event], dropped: u64) -> Json {
+    let trace_events: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(e.name.to_string()));
+            m.insert("cat".to_string(), Json::Str("tfgnn".to_string()));
+            m.insert("ph".to_string(), Json::Str("X".to_string()));
+            m.insert("ts".to_string(), Json::Int(i64::try_from(e.ts_micros).unwrap_or(i64::MAX)));
+            m.insert("dur".to_string(), Json::Int(i64::try_from(e.dur_micros).unwrap_or(i64::MAX)));
+            m.insert("pid".to_string(), Json::Int(1));
+            m.insert("tid".to_string(), Json::Int(i64::try_from(e.tid).unwrap_or(i64::MAX)));
+            let args = match e.arg {
+                Some((k, v)) => {
+                    let mut a = BTreeMap::new();
+                    a.insert(k.to_string(), Json::Int(v));
+                    Json::Obj(a)
+                }
+                None => Json::Obj(BTreeMap::new()),
+            };
+            m.insert("args".to_string(), args);
+            Json::Obj(m)
+        })
+        .collect();
+    let mut other = BTreeMap::new();
+    other.insert("dropped_events".to_string(), Json::Int(i64::try_from(dropped).unwrap_or(i64::MAX)));
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(trace_events));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    top.insert("otherData".to_string(), Json::Obj(other));
+    Json::Obj(top)
+}
+
+/// Drain all rings and render the Chrome trace document in one step.
+pub fn export_chrome() -> Json {
+    let (events, dropped) = drain();
+    to_chrome_json(&events, dropped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        set_enabled(false);
+        {
+            let _s = span("trace_unit/disabled");
+        }
+        let (events, _) = drain();
+        assert!(
+            !events.iter().any(|e| e.name == "trace_unit/disabled"),
+            "disabled span must not record"
+        );
+    }
+
+    #[test]
+    fn enabled_spans_are_drained_with_args() {
+        set_enabled(true);
+        {
+            let _s = span_arg("trace_unit/enabled", "shard", 3);
+        }
+        set_enabled(false);
+        let (events, _) = drain();
+        let ev = events
+            .iter()
+            .find(|e| e.name == "trace_unit/enabled")
+            .expect("span recorded while enabled");
+        assert_eq!(ev.arg, Some(("shard", 3)));
+        assert!(ev.tid >= 1);
+        // Drain clears: a second drain must not see it again.
+        let (events, _) = drain();
+        assert!(!events.iter().any(|e| e.name == "trace_unit/enabled"));
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut ring = Ring::new();
+        for i in 0..(RING_CAP as u64 + 10) {
+            ring.push(Event {
+                name: "x",
+                tid: 1,
+                ts_micros: i,
+                dur_micros: 0,
+                arg: None,
+            });
+        }
+        let (events, dropped) = ring.drain();
+        assert_eq!(events.len(), RING_CAP);
+        assert_eq!(dropped, 10);
+        // The oldest 10 were overwritten.
+        assert!(!events.iter().any(|e| e.ts_micros < 10));
+    }
+
+    #[test]
+    fn chrome_json_schema() {
+        let events = vec![Event {
+            name: "sampler/expand",
+            tid: 2,
+            ts_micros: 10,
+            dur_micros: 5,
+            arg: Some(("shard", 1)),
+        }];
+        let doc = to_chrome_json(&events, 7);
+        let evs = doc.get("traceEvents").expect("traceEvents").as_arr().expect("array");
+        assert_eq!(evs.len(), 1);
+        let e = &evs[0];
+        assert_eq!(e.get("ph").expect("ph").as_str().expect("str"), "X");
+        assert_eq!(e.get("name").expect("name").as_str().expect("str"), "sampler/expand");
+        assert_eq!(e.get("ts").expect("ts").as_i64().expect("int"), 10);
+        assert_eq!(e.get("dur").expect("dur").as_i64().expect("int"), 5);
+        assert_eq!(e.get("pid").expect("pid").as_i64().expect("int"), 1);
+        assert_eq!(e.get("tid").expect("tid").as_i64().expect("int"), 2);
+        assert_eq!(
+            e.get("args").expect("args").get("shard").expect("shard").as_i64().expect("int"),
+            1
+        );
+        assert_eq!(
+            doc.get("otherData")
+                .expect("otherData")
+                .get("dropped_events")
+                .expect("dropped")
+                .as_i64()
+                .expect("int"),
+            7
+        );
+        // Round-trips through the serializer.
+        let text = doc.to_string();
+        assert_eq!(Json::parse(&text).expect("parse"), doc);
+    }
+}

@@ -487,6 +487,7 @@ pub fn run_data_loop(
     let mut total_steps = 0u64;
     let mut total_step_secs = 0.0f64;
     for epoch in 0..cfg.epochs {
+        let _span = crate::span!("runner/epoch", epoch = epoch);
         let t0 = Instant::now();
         let stream = epoch_stream(Arc::clone(&data.provider), pipe_cfg.clone(), epoch as u64)?;
         let mut train_metrics = EpochMetrics::default();

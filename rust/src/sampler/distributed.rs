@@ -85,19 +85,36 @@ impl RetryPolicy {
                 what()
             )));
         }
-        let mut last = None;
+        let attempts = crate::obs_counter!(crate::obs::metrics::names::SAMPLER_RETRY_ATTEMPTS);
+        // Error text is only collected on the failure path; the happy
+        // path stays a counter increment away from the old code.
+        let mut errors: Vec<String> = Vec::new();
         for _ in 0..self.max_attempts {
+            attempts.inc();
             match f() {
                 Ok(v) => return Ok(v),
-                Err(e) => last = Some(e),
+                Err(e) => errors.push(e.to_string()),
             }
         }
-        let last = match last {
-            Some(e) => e.to_string(),
+        crate::obs_counter!(crate::obs::metrics::names::SAMPLER_RETRY_EXHAUSTED).inc();
+        let last = match errors.last() {
+            Some(e) => e.clone(),
             None => "none recorded".to_string(),
         };
+        // Tally distinct errors across the attempts so a flapping
+        // shard (two alternating failure modes) is visible — the last
+        // error alone used to hide everything before it.
+        let mut tally: Vec<(&String, usize)> = Vec::new();
+        for e in &errors {
+            match tally.iter_mut().find(|(m, _)| *m == e) {
+                Some(entry) => entry.1 += 1,
+                None => tally.push((e, 1)),
+            }
+        }
+        let tally_text =
+            tally.iter().map(|(m, n)| format!("{n}x {m}")).collect::<Vec<_>>().join("; ");
         Err(Error::Graph(format!(
-            "{} failed after {} attempts: last error: {last}",
+            "{} failed after {} attempts: last error: {last} (error tally: {tally_text})",
             what(),
             self.max_attempts
         )))
@@ -153,6 +170,7 @@ pub fn sample_batch(
     seeds: &[u32],
     retry: &RetryPolicy,
 ) -> Result<(Vec<GraphTensor>, SampleStats)> {
+    let _span = crate::span!("sampler/sample_batch", seeds = seeds.len());
     let schema = &store.store().schema;
     validate_spec(schema, spec)?;
     let mut stats = SampleStats { seeds: seeds.len(), ..Default::default() };
@@ -243,6 +261,7 @@ pub fn sample_batch_parallel(
     if cfg.threads <= 1 {
         return sample_batch(store, spec, plan_seed, seeds, &cfg.retry);
     }
+    let _span = crate::span!("sampler/sample_batch_parallel", seeds = seeds.len());
     let owned_pool;
     let pool = match pool {
         Some(p) => p,
@@ -288,6 +307,10 @@ pub fn sample_batch_parallel(
         let strategy = op.strategy;
         let retry = cfg.retry.clone();
         let results = pool.map(tasks, move |(shard, items): (usize, Vec<ShardItem>)| {
+            let _fanout = crate::obs::timed(crate::obs_histogram!(
+                crate::obs::metrics::names::SAMPLER_SHARD_FANOUT_SECONDS
+            ));
+            let _span = crate::span!("sampler/shard_fanout", shard = shard);
             let ctx = format!("shard {shard}");
             let mut rows = Vec::with_capacity(items.len());
             let mut retried = 0usize;
@@ -465,6 +488,41 @@ mod tests {
         assert!(err.contains("shard 2"), "{err}");
         assert!(err.contains("after 4 attempts"), "{err}");
         assert!(err.contains("transient"), "{err}");
+    }
+
+    #[test]
+    fn exhaustion_error_tallies_distinct_errors() {
+        let policy = RetryPolicy { max_attempts: 3 };
+        let mut i = 0;
+        let err = policy
+            .run_ctx("shard 1", || {
+                i += 1;
+                Err::<(), _>(if i == 1 {
+                    Error::Sampler("transient".into())
+                } else {
+                    Error::Sampler("shard down".into())
+                })
+            })
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("after 3 attempts"), "{err}");
+        assert!(err.contains("error tally"), "{err}");
+        assert!(err.contains("1x sampler error: transient"), "{err}");
+        assert!(err.contains("2x sampler error: shard down"), "{err}");
+    }
+
+    #[test]
+    fn retry_metrics_count_attempts_and_exhaustions() {
+        let reg = crate::obs::metrics::global();
+        let attempts = reg.counter(crate::obs::metrics::names::SAMPLER_RETRY_ATTEMPTS);
+        let exhausted = reg.counter(crate::obs::metrics::names::SAMPLER_RETRY_EXHAUSTED);
+        let (a0, x0) = (attempts.get(), exhausted.get());
+        let policy = RetryPolicy { max_attempts: 3 };
+        let _ = policy.run_ctx("shard 9", || Err::<(), _>(Error::Sampler("transient".into())));
+        // `>=`: other tests in this binary may be retrying concurrently.
+        assert!(attempts.get() >= a0 + 3, "3 attempts counted");
+        assert!(exhausted.get() >= x0 + 1, "1 exhaustion counted");
     }
 
     #[test]

@@ -155,6 +155,7 @@ impl InMemorySampler {
 
     /// Sample the rooted subgraph for one seed node.
     pub fn sample(&self, seed: u32) -> Result<GraphTensor> {
+        let _span = crate::span!("sampler/sample", seed = seed);
         let edges = self.expand_fast(seed);
         assemble_subgraph(&self.store.schema, &self.spec.seed_node_set, seed, &edges, |set, ids| {
             Ok(self.store.node_column(set)?.gather(ids))
@@ -216,6 +217,7 @@ impl InMemorySampler {
     /// test below). Overlapping expansions dedup edges at assembly, the
     /// same rule the single-seed path applies to overlapping ops.
     pub fn sample_seeds(&self, seeds: &[u32]) -> Result<GraphTensor> {
+        let _span = crate::span!("sampler/sample_seeds", seeds = seeds.len());
         // Seed ids are caller input (serving requests name them
         // directly): validate against the store before expansion, so a
         // hostile or stale id is a structured error instead of an

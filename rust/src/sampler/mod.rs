@@ -184,6 +184,9 @@ where
     let context =
         Context::default().with_feature("seed", Feature::i64_vec(vec![first_seed as i64]));
     let g = GraphTensor::from_pieces(context, node_sets, edge_sets)?;
+    // Shared tail of every sampler path (serial, parallel, in-memory),
+    // so each assembled subgraph is counted exactly once.
+    crate::obs_counter!(crate::obs::metrics::names::SAMPLER_SUBGRAPHS).inc();
     Ok(g)
 }
 

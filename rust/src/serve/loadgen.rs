@@ -52,7 +52,7 @@ pub struct LoadGenLevel {
     /// Successful responses per second of wall clock.
     pub throughput: f64,
     /// Per-request latency summary in seconds (successful responses
-    /// only — p50/p95/p99 are the bench's headline rows).
+    /// only — p50/p95/p99/p99.9 are the bench's headline rows).
     pub latency: Summary,
 }
 
@@ -85,6 +85,7 @@ pub fn run(
     let mut levels = Vec::new();
     for &clients in &cfg.concurrency {
         let clients = clients.max(1);
+        let _span = crate::span!("loadgen/level", clients = clients);
         let n = cfg.requests_per_client.max(1);
         let mut results: Vec<(Vec<f64>, usize, usize)> = Vec::new();
         let t0 = Instant::now();
@@ -227,6 +228,8 @@ mod tests {
             assert!(level.throughput > 0.0);
             assert!(level.latency.p50 > 0.0);
             assert!(level.latency.p99 >= level.latency.p50);
+            assert!(level.latency.p999 >= level.latency.p99);
+            assert!(level.latency.max >= level.latency.p999);
         }
         assert!(report.saturation_throughput() > 0.0);
         handle.shutdown();

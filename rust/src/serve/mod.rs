@@ -134,26 +134,125 @@ impl Default for ServeConfig {
 }
 
 /// Aggregate server counters.
+///
+/// The fields are private atomics; readers take a coherent-enough
+/// [`snapshot`](Self::snapshot) (each field is an independent relaxed
+/// load — fine for monitoring, and the tests only assert after
+/// quiescence). Every mutation also mirrors into the process-global
+/// [`crate::obs::metrics`] registry under the `serve_*` names, so
+/// `tfgnn stats` and the Prometheus exporter see the same counts
+/// without a second bookkeeping path in the hot loop.
 #[derive(Debug, Default)]
 pub struct ServeStats {
-    /// Requests admitted into the queue (rejections not included).
-    pub requests: AtomicU64,
-    pub batches: AtomicU64,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    failed_batches: AtomicU64,
+    rejected: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
+    swaps: AtomicU64,
+}
+
+/// Plain-data view of [`ServeStats`] at one point in time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStatsSnapshot {
+    /// Requests pulled into an executed wave (rejections not included).
+    pub requests: u64,
+    /// Waves executed by batcher lanes.
+    pub batches: u64,
     /// Waves whose executor failed — every request in the wave got an
     /// error reply. On the AOT backend the usual cause is a wave
     /// exceeding the pad caps; the native backend never pads, so here
     /// it means a sampling or forward error.
-    pub failed_batches: AtomicU64,
+    pub failed_batches: u64,
     /// Requests rejected by admission control ([`Error::Overloaded`]).
-    pub rejected: AtomicU64,
+    pub rejected: u64,
     /// Task-server subgraph cache hits (0 when the cache is disabled).
-    pub cache_hits: AtomicU64,
+    pub cache_hits: u64,
     /// Task-server subgraph cache misses (0 when the cache is disabled).
-    pub cache_misses: AtomicU64,
+    pub cache_misses: u64,
     /// Entries evicted from the subgraph cache by capacity pressure.
-    pub cache_evictions: AtomicU64,
+    pub cache_evictions: u64,
     /// Successful model hot-swaps.
-    pub swaps: AtomicU64,
+    pub swaps: u64,
+}
+
+impl ServeStatsSnapshot {
+    /// Total subgraph-cache lookups; by construction every lookup is
+    /// exactly one hit or one miss, so `hits + misses` is an identity,
+    /// not an approximation.
+    pub fn cache_lookups(&self) -> u64 {
+        self.cache_hits + self.cache_misses
+    }
+}
+
+impl ServeStats {
+    /// Read every counter (relaxed loads).
+    pub fn snapshot(&self) -> ServeStatsSnapshot {
+        ServeStatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            failed_batches: self.failed_batches.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            swaps: self.swaps.load(Ordering::Relaxed),
+        }
+    }
+
+    fn wave_start(&self, size: u64) {
+        self.requests.fetch_add(size, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!(crate::obs::metrics::names::SERVE_REQUESTS).add(size);
+        crate::obs_counter!(crate::obs::metrics::names::SERVE_BATCHES).inc();
+        if crate::obs::recording() {
+            crate::obs_histogram!(crate::obs::metrics::names::SERVE_WAVE_SIZE)
+                .record(size as f64);
+        }
+    }
+
+    fn wave_failed(&self) {
+        self.failed_batches.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!(crate::obs::metrics::names::SERVE_FAILED_BATCHES).inc();
+    }
+
+    fn rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!(crate::obs::metrics::names::SERVE_REJECTED).inc();
+    }
+
+    fn cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!(crate::obs::metrics::names::SERVE_CACHE_HITS).inc();
+    }
+
+    fn cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!(crate::obs::metrics::names::SERVE_CACHE_MISSES).inc();
+    }
+
+    fn cache_evicted(&self, n: u64) {
+        if n > 0 {
+            self.cache_evictions.fetch_add(n, Ordering::Relaxed);
+            crate::obs_counter!(crate::obs::metrics::names::SERVE_CACHE_EVICTIONS).add(n);
+        }
+    }
+
+    fn swapped(&self, generation: u64) {
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!(crate::obs::metrics::names::SERVE_SWAPS).inc();
+        crate::obs_gauge!(crate::obs::metrics::names::SERVE_GENERATION)
+            .set(i64::try_from(generation).unwrap_or(i64::MAX));
+    }
+}
+
+/// Queue-depth gauge: +1 per admitted request, -1 per reply. The lanes
+/// drain the queue on shutdown, so the gauge returns to zero for every
+/// request that was ever admitted.
+fn queue_depth() -> &'static crate::obs::metrics::Gauge {
+    crate::obs_gauge!(crate::obs::metrics::names::SERVE_QUEUE_DEPTH)
 }
 
 /// Client handle: submit requests, then [`shutdown`](Self::shutdown).
@@ -180,9 +279,9 @@ impl ServerHandle {
         let (reply_tx, reply_rx) = channel();
         let req = Request { seed, submitted: Instant::now(), reply: reply_tx };
         match self.queue.push(req) {
-            Ok(()) => {}
+            Ok(()) => queue_depth().add(1),
             Err(PushError::Full(req)) => {
-                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                self.stats.rejected();
                 let _ = req.reply.send(Err(Error::Overloaded(format!(
                     "serving queue full ({} pending); retry with backoff",
                     self.queue.capacity()
@@ -218,7 +317,7 @@ impl ServerHandle {
     pub fn swap_model(&self, model: Arc<NativeModel>) -> Result<u64> {
         let slot = self.require_slot()?;
         let generation = slot.swap_model(model)?;
-        self.stats.swaps.fetch_add(1, Ordering::Relaxed);
+        self.stats.swapped(generation);
         Ok(generation)
     }
 
@@ -226,7 +325,7 @@ impl ServerHandle {
     pub fn swap_checkpoint(&self, path: &std::path::Path) -> Result<u64> {
         let slot = self.require_slot()?;
         let generation = slot.swap_checkpoint(path)?;
-        self.stats.swaps.fetch_add(1, Ordering::Relaxed);
+        self.stats.swapped(generation);
         Ok(generation)
     }
 
@@ -281,6 +380,19 @@ fn reply_logits_wave(
     let batch_size = wave.len();
     match result {
         Ok((flat, classes)) => {
+            let has_all_rows = flat.len() >= batch_size * classes && classes > 0;
+            if !has_all_rows {
+                queue_depth().sub(batch_size as i64);
+                stats.wave_failed();
+                let msg = format!(
+                    "executor returned {} logits for {batch_size} requests x {classes} classes",
+                    flat.len()
+                );
+                for req in wave {
+                    let _ = req.reply.send(Err(Error::Runtime(msg.clone())));
+                }
+                return;
+            }
             for (k, req) in wave.into_iter().enumerate() {
                 let row = flat[k * classes..(k + 1) * classes].to_vec();
                 let predicted = row
@@ -301,13 +413,14 @@ fn reply_logits_wave(
             }
         }
         Err(e) => {
-            stats.failed_batches.fetch_add(1, Ordering::Relaxed);
+            stats.wave_failed();
             let msg = e.to_string();
             for req in wave {
                 let _ = req.reply.send(Err(Error::Runtime(msg.clone())));
             }
         }
     }
+    queue_depth().sub(batch_size as i64);
 }
 
 /// Build and start the AOT server.
@@ -378,8 +491,11 @@ pub fn serve(
                         None
                     };
                     lane_loop(&queue_w, max_batch, max_wait, |wave| {
-                        stats_w.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
-                        stats_w.batches.fetch_add(1, Ordering::Relaxed);
+                        let _wave_span = crate::span!("serve/wave", size = wave.len());
+                        let _wave_timer = crate::obs::timed(crate::obs_histogram!(
+                            crate::obs::metrics::names::SERVE_WAVE_SECONDS
+                        ));
+                        stats_w.wave_start(wave.len() as u64);
                         if !wave_delay.is_zero() {
                             std::thread::sleep(wave_delay);
                         }
@@ -448,8 +564,11 @@ pub fn serve_native(
                         None
                     };
                     lane_loop(&queue, max_batch, max_wait, |wave| {
-                        stats.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
-                        stats.batches.fetch_add(1, Ordering::Relaxed);
+                        let _wave_span = crate::span!("serve/wave", size = wave.len());
+                        let _wave_timer = crate::obs::timed(crate::obs_histogram!(
+                            crate::obs::metrics::names::SERVE_WAVE_SECONDS
+                        ));
+                        stats.wave_start(wave.len() as u64);
                         if !wave_delay.is_zero() {
                             std::thread::sleep(wave_delay);
                         }
@@ -522,9 +641,9 @@ impl TaskServerHandle {
         let (reply_tx, reply_rx) = channel();
         let req = TaskRequest { seeds, submitted: Instant::now(), reply: reply_tx };
         match self.queue.push(req) {
-            Ok(()) => {}
+            Ok(()) => queue_depth().add(1),
             Err(PushError::Full(req)) => {
-                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                self.stats.rejected();
                 let _ = req.reply.send(Err(Error::Overloaded(format!(
                     "serving queue full ({} pending); retry with backoff",
                     self.queue.capacity()
@@ -555,14 +674,14 @@ impl TaskServerHandle {
     /// Hot-swap the served model; see [`ServerHandle::swap_model`].
     pub fn swap_model(&self, model: Arc<NativeModel>) -> Result<u64> {
         let generation = self.slot.swap_model(model)?;
-        self.stats.swaps.fetch_add(1, Ordering::Relaxed);
+        self.stats.swapped(generation);
         Ok(generation)
     }
 
     /// Hot-swap to the weights in a checkpoint file.
     pub fn swap_checkpoint(&self, path: &std::path::Path) -> Result<u64> {
         let generation = self.slot.swap_checkpoint(path)?;
-        self.stats.swaps.fetch_add(1, Ordering::Relaxed);
+        self.stats.swapped(generation);
         Ok(generation)
     }
 
@@ -653,8 +772,10 @@ fn run_task_wave(
     wave_delay: Duration,
     stats: &ServeStats,
 ) {
-    stats.requests.fetch_add(wave.len() as u64, Ordering::Relaxed);
-    stats.batches.fetch_add(1, Ordering::Relaxed);
+    let _wave_span = crate::span!("serve/wave", size = wave.len());
+    let _wave_timer =
+        crate::obs::timed(crate::obs_histogram!(crate::obs::metrics::names::SERVE_WAVE_SECONDS));
+    stats.wave_start(wave.len() as u64);
     if !wave_delay.is_zero() {
         std::thread::sleep(wave_delay);
     }
@@ -675,11 +796,11 @@ fn run_task_wave(
     let cache_enabled = cache.is_enabled();
     for (i, req) in wave.iter().enumerate() {
         if let Some(g) = cache.get(&req.seeds) {
-            stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            stats.cache_hit();
             graphs[i] = Ok(g);
         } else {
             if cache_enabled {
-                stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+                stats.cache_miss();
             }
             miss_idx.push(i);
             miss_lists.push(req.seeds.clone());
@@ -699,7 +820,7 @@ fn run_task_wave(
                 let g = Arc::new(g);
                 if cache_enabled {
                     let evicted = cache.put(miss_lists[k].clone(), Arc::clone(&g));
-                    stats.cache_evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+                    stats.cache_evicted(evicted as u64);
                 }
                 graphs[i] = Ok(g);
             }
@@ -727,8 +848,9 @@ fn run_task_wave(
             }
         }
     }
+    queue_depth().sub(batch_size as i64);
     if any_failed {
-        stats.failed_batches.fetch_add(1, Ordering::Relaxed);
+        stats.wave_failed();
     }
 }
 
@@ -834,7 +956,14 @@ mod tests {
             assert!(resp.logits.iter().all(|v| v.is_finite()));
             assert_eq!(resp.generation, 1, "no swap happened");
         }
-        assert!(handle.stats.requests.load(Ordering::Relaxed) >= 6);
+        let snap = handle.stats.snapshot();
+        assert!(snap.requests >= 6);
+        assert_eq!(snap.rejected, 0);
+        assert_eq!(
+            snap.cache_lookups(),
+            snap.cache_hits + snap.cache_misses,
+            "lookup identity"
+        );
         handle.shutdown();
     }
 
@@ -916,7 +1045,7 @@ mod tests {
         let again = handle.predict(&[u, v]).unwrap();
         let TaskOutput::LinkScore { score: s2 } = again.output else { panic!() };
         assert_eq!(s2.to_bits(), score.to_bits(), "deterministic rescoring");
-        assert!(handle.stats.failed_batches.load(Ordering::Relaxed) >= 1);
+        assert!(handle.stats.snapshot().failed_batches >= 1);
         handle.shutdown();
 
         // Graph regression.

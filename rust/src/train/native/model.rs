@@ -304,6 +304,10 @@ impl NativeModel {
     /// tape, on the convolutions' fused fast paths. Tasks run their
     /// readout heads over these (eval and serving paths).
     pub fn forward_states(&self, g: &GraphTensor) -> Result<BTreeMap<String, Mat>> {
+        let _t = crate::obs::timed(crate::obs_histogram!(
+            crate::obs::metrics::names::TRAINER_FORWARD_SECONDS
+        ));
+        let _span = crate::span!("trainer/forward");
         let (mut h, _enc_z, _emb_idx) = self.initial_states(g)?;
         let view = self.update_view();
         for layer in 0..self.cfg.layers {
@@ -320,6 +324,10 @@ impl NativeModel {
         &self,
         g: &GraphTensor,
     ) -> Result<(BTreeMap<String, Mat>, TrunkTape)> {
+        let _t = crate::obs::timed(crate::obs_histogram!(
+            crate::obs::metrics::names::TRAINER_FORWARD_SECONDS
+        ));
+        let _span = crate::span!("trainer/forward_tape");
         let (mut h, enc_z, emb_idx) = self.initial_states(g)?;
         let view = self.update_view();
         let mut layers = Vec::with_capacity(self.cfg.layers);
@@ -389,6 +397,10 @@ impl NativeModel {
         mut dh: BTreeMap<String, Mat>,
         grads: &mut [Mat],
     ) -> Result<()> {
+        let _t = crate::obs::timed(crate::obs_histogram!(
+            crate::obs::metrics::names::TRAINER_BACKWARD_SECONDS
+        ));
+        let _span = crate::span!("trainer/backward");
         let cfg = &self.cfg;
         assert_eq!(grads.len(), self.params.len(), "backward_states: grads buffer size");
 

@@ -219,6 +219,7 @@ impl NativeTrainer {
 
     /// One data-parallel training step over a padded batch.
     pub fn train_batch(&mut self, padded: &Padded) -> Result<StepMetrics> {
+        let _span = crate::span!("trainer/step", threads = self.threads);
         let comps = real_components(padded)?;
         let n = comps.len();
         if n == 0 {
@@ -241,11 +242,24 @@ impl NativeTrainer {
 
         // All-reduce: strictly in replica-index order, so the summation
         // tree depends only on the chunking, never on scheduling.
-        let (grads, step) = reduce_outs(outs, n);
+        let (grads, step) = {
+            let _t = crate::obs::timed(crate::obs_histogram!(
+                crate::obs::metrics::names::TRAINER_ALLREDUCE_SECONDS
+            ));
+            let _span = crate::span!("trainer/allreduce", replicas = n);
+            reduce_outs(outs, n)
+        };
 
-        let model = Arc::make_mut(&mut self.model);
-        self.opt.step(&mut model.params, &grads);
+        {
+            let _t = crate::obs::timed(crate::obs_histogram!(
+                crate::obs::metrics::names::TRAINER_OPTIMIZER_SECONDS
+            ));
+            let _span = crate::span!("trainer/optimizer");
+            let model = Arc::make_mut(&mut self.model);
+            self.opt.step(&mut model.params, &grads);
+        }
         self.steps_done += 1;
+        crate::obs_counter!(crate::obs::metrics::names::TRAINER_STEPS).inc();
         Ok(step)
     }
 

@@ -26,6 +26,9 @@ pub struct Summary {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    /// 99.9th percentile — the serving-tail figure of merit; with
+    /// fewer than ~1000 samples it interpolates toward `max`.
+    pub p999: f64,
     pub max: f64,
 }
 
@@ -49,6 +52,7 @@ impl Summary {
             p50: percentile(&sorted, 0.50),
             p95: percentile(&sorted, 0.95),
             p99: percentile(&sorted, 0.99),
+            p999: percentile(&sorted, 0.999),
             max: sorted[n - 1],
         }
     }
@@ -143,6 +147,7 @@ impl Bench {
             p50: items as f64 / time.p50,
             p95: items as f64 / time.min,
             p99: items as f64 / time.min,
+            p999: items as f64 / time.min,
             max: items as f64 / time.min,
         }
     }
@@ -181,7 +186,14 @@ pub struct BenchRow {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    pub p999: f64,
     pub unit: String,
+    /// Optional per-row observability delta: the compact form of the
+    /// metrics-registry counters this row's workload moved (see
+    /// [`crate::obs::metrics::MetricsSnapshot::to_compact_json`]).
+    /// `None` keeps the field out of the JSON, so old baselines and
+    /// new rows stay comparable.
+    pub metrics: Option<Json>,
 }
 
 /// Collects bench rows, echoing each through [`print_row`], and writes
@@ -200,6 +212,20 @@ impl BenchReport {
     /// Record and print one row. `threads` is the configuration's
     /// parallelism (1 for serial rows).
     pub fn row(&mut self, group: &str, name: &str, threads: usize, s: &Summary, unit: &str) {
+        self.row_with_metrics(group, name, threads, s, unit, None);
+    }
+
+    /// [`row`](Self::row), attaching a per-row metrics delta (the
+    /// compact snapshot of what the workload moved in the registry).
+    pub fn row_with_metrics(
+        &mut self,
+        group: &str,
+        name: &str,
+        threads: usize,
+        s: &Summary,
+        unit: &str,
+        metrics: Option<Json>,
+    ) {
         print_row(group, name, s, unit);
         let ns_per_op = match unit {
             "items/s" if s.mean > 0.0 => 1e9 / s.mean,
@@ -214,7 +240,9 @@ impl BenchReport {
             p50: s.p50,
             p95: s.p95,
             p99: s.p99,
+            p999: s.p999,
             unit: unit.to_string(),
+            metrics,
         });
     }
 
@@ -224,7 +252,7 @@ impl BenchReport {
             .rows
             .iter()
             .map(|r| {
-                obj(vec![
+                let mut fields = vec![
                     ("name", Json::Str(r.name.clone())),
                     ("threads", Json::Int(r.threads as i64)),
                     ("ns_per_op", Json::Num(r.ns_per_op)),
@@ -232,8 +260,13 @@ impl BenchReport {
                     ("p50", Json::Num(r.p50)),
                     ("p95", Json::Num(r.p95)),
                     ("p99", Json::Num(r.p99)),
+                    ("p999", Json::Num(r.p999)),
                     ("unit", Json::Str(r.unit.clone())),
-                ])
+                ];
+                if let Some(m) = &r.metrics {
+                    fields.push(("metrics", m.clone()));
+                }
+                obj(fields)
             })
             .collect();
         obj(vec![
@@ -345,6 +378,7 @@ mod tests {
             p50: 1e6,
             p95: 1e6,
             p99: 1e6,
+            p999: 1e6,
             max: 1e6,
         };
         r.row("g", "items", 4, &s, "items/s");
@@ -357,6 +391,7 @@ mod tests {
             p50: 2e-3,
             p95: 2e-3,
             p99: 2e-3,
+            p999: 2e-3,
             max: 2e-3,
         };
         r.row("g", "time", 1, &t, "s");
@@ -378,6 +413,7 @@ mod tests {
             p50: 500.0,
             p95: 500.0,
             p99: 500.0,
+            p999: 500.0,
             max: 500.0,
         };
         r.row("sample", "seeds=8", 8, &s, "items/s");
@@ -392,6 +428,44 @@ mod tests {
         assert_eq!(rows[0].get("name").unwrap().as_str().unwrap(), "sample/seeds=8");
         assert_eq!(rows[0].get("threads").unwrap().as_i64().unwrap(), 8);
         assert!(rows[0].get("ns_per_op").unwrap().as_f64().unwrap() > 0.0);
+        assert!((rows[0].get("p999").unwrap().as_f64().unwrap() - 500.0).abs() < 1e-9);
+        assert!(rows[0].opt("metrics").is_none(), "no metrics attached -> no field");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn summary_p999_tracks_the_tail() {
+        // 1000 samples: one large outlier must show in p99.9 but not p50.
+        let mut v: Vec<f64> = (0..999).map(|i| 1.0 + i as f64 * 1e-6).collect();
+        v.push(100.0);
+        let s = Summary::of(&v);
+        assert!(s.p50 < 2.0, "p50 {}", s.p50);
+        assert!(s.p999 > 50.0, "p999 {}", s.p999);
+        assert!(s.p999 <= s.max);
+    }
+
+    #[test]
+    fn bench_row_metrics_delta_lands_in_json() {
+        let mut r = BenchReport::new("unit");
+        let s = Summary {
+            n: 1,
+            mean: 1.0,
+            std: 0.0,
+            min: 1.0,
+            p50: 1.0,
+            p95: 1.0,
+            p99: 1.0,
+            p999: 1.0,
+            max: 1.0,
+        };
+        let delta = obj(vec![("counters", obj(vec![("serve_requests_total", Json::Int(9))]))]);
+        r.row_with_metrics("g", "with-metrics", 1, &s, "s", Some(delta));
+        let doc = r.to_json();
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        let m = rows[0].get("metrics").unwrap();
+        assert_eq!(
+            m.get("counters").unwrap().get("serve_requests_total").unwrap().as_i64().unwrap(),
+            9
+        );
     }
 }

@@ -102,8 +102,27 @@ impl ThreadPool {
     /// can take the job (all spawns failed), it runs inline here — the
     /// job and its in-flight accounting still happen.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        crate::obs_counter!(crate::obs::metrics::names::THREADPOOL_JOBS).inc();
         *self.shared.in_flight.lock().unwrap_or_else(PoisonError::into_inner) += 1;
-        let job: Job = Box::new(f);
+        // Only while recording does the job get wrapped with queue-wait
+        // and execute timing (plus a span) — the disabled path stays
+        // exactly one boxed closure with no clock reads.
+        let job: Job = if crate::obs::recording() {
+            let queued_at = std::time::Instant::now();
+            Box::new(move || {
+                crate::obs_histogram!(
+                    crate::obs::metrics::names::THREADPOOL_QUEUE_WAIT_SECONDS
+                )
+                .record(queued_at.elapsed().as_secs_f64());
+                let _span = crate::span!("pool/job");
+                let _exec = crate::obs::timed(crate::obs_histogram!(
+                    crate::obs::metrics::names::THREADPOOL_EXECUTE_SECONDS
+                ));
+                f();
+            })
+        } else {
+            Box::new(f)
+        };
         let rejected = match self.tx.as_ref() {
             Some(tx) => tx.send(job).err().map(|SendError(job)| job),
             None => Some(job),
@@ -260,6 +279,22 @@ mod tests {
         // All workers survived; the pool is still fully usable.
         let out = pool.map(vec![1usize, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    /// The observability wrap (jobs counter always; timing while
+    /// recording) must never change what `map` returns.
+    #[test]
+    fn instrumentation_is_inert_for_map_results() {
+        let jobs = crate::obs::metrics::global()
+            .counter(crate::obs::metrics::names::THREADPOOL_JOBS);
+        let before = jobs.get();
+        let pool = ThreadPool::new(2);
+        crate::obs::set_recording(true);
+        let on = pool.map((0..16).collect::<Vec<u64>>(), |x| x.wrapping_mul(3));
+        crate::obs::set_recording(false);
+        let off = pool.map((0..16).collect::<Vec<u64>>(), |x| x.wrapping_mul(3));
+        assert_eq!(on, off, "recording must not change results");
+        assert!(jobs.get() >= before + 32, "every job counts");
     }
 
     /// Regression: `map` used to die with "worker died before sending

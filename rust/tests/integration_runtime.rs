@@ -185,7 +185,7 @@ fn serving_returns_consistent_predictions() {
         let resp = rx.recv().unwrap().unwrap();
         assert!(resp.latency.as_secs_f64() < 60.0);
     }
-    let served = handle.stats.requests.load(std::sync::atomic::Ordering::Relaxed);
+    let served = handle.stats.snapshot().requests;
     assert!(served >= 14);
     handle.shutdown();
 }

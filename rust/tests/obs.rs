@@ -1,0 +1,251 @@
+//! Integration pins for the observability layer.
+//!
+//! Three contracts:
+//!
+//! * `docs/metrics.md` is byte-generated from the `METRICS` table in
+//!   `obs::metrics` — the checked-in file and the code must agree.
+//! * Enabling recording and tracing changes no observable bits:
+//!   sampled subgraphs, trainer loss/params at 1/2/8 threads and
+//!   served task outputs at 1/2/8 lanes are identical with
+//!   observability off and on (the "inertness contract").
+//! * The exported `METRICS_*.json` / `TRACE_*.json` artifacts match
+//!   the schemas `tools/bench_compare.py` checks in CI.
+//!
+//! The recording/tracing switches are process-global, so every check
+//! that toggles them lives in ONE `#[test]` — spreading them over
+//! tests that the harness runs concurrently would race.
+
+use std::sync::Arc;
+
+use tfgnn::graph::pad::{fit_or_skip, PadSpec};
+use tfgnn::graph::GraphTensor;
+use tfgnn::obs::metrics::{names, MetricKind, MetricsSnapshot, METRICS, NUM_BUCKETS};
+use tfgnn::ops::model_ref::ModelConfig;
+use tfgnn::runtime::batch::RootTask;
+use tfgnn::sampler::inmem::InMemorySampler;
+use tfgnn::sampler::spec::mag_sampling_spec_scaled;
+use tfgnn::serve::loadgen::{self, outputs_bit_identical, LoadGenConfig};
+use tfgnn::serve::{serve_task, ServeConfig};
+use tfgnn::synth::mag::{generate, MagConfig, Split};
+use tfgnn::tasks::TaskOutput;
+use tfgnn::train::native::{AdamConfig, NativeModel, NativeTrainer};
+use tfgnn::util::json::Json;
+
+#[test]
+fn metrics_doc_matches_the_code_table() {
+    let on_disk = std::fs::read_to_string("../docs/metrics.md")
+        .expect("docs/metrics.md must exist (generated from the METRICS table)");
+    assert_eq!(
+        on_disk,
+        tfgnn::obs::metrics::render_markdown(),
+        "docs/metrics.md drifted from obs::metrics::METRICS; \
+         regenerate it from render_markdown()"
+    );
+}
+
+/// Six deterministic subgraphs off a fresh tiny-MAG sampler.
+fn sampled_subgraphs() -> Vec<GraphTensor> {
+    let mag = MagConfig::tiny();
+    let ds = generate(&mag);
+    let seeds = ds.papers_in_split(Split::Train);
+    let store = Arc::new(ds.store);
+    let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+    let sampler = InMemorySampler::new(store, spec, 3).unwrap();
+    seeds.iter().take(6).map(|&s| sampler.sample(s).unwrap()).collect()
+}
+
+/// One train step on a fresh world; returns (loss bits, all param bits).
+fn train_step_bits(threads: usize) -> (u32, Vec<u32>) {
+    let mag = MagConfig::tiny();
+    let ds = generate(&mag);
+    let seeds = ds.papers_in_split(Split::Train);
+    let store = Arc::new(ds.store);
+    let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+    let sampler = InMemorySampler::new(store, spec, 3).unwrap();
+    let batch = 4usize;
+    let probe: Vec<_> = seeds.iter().take(8).map(|&s| sampler.sample(s).unwrap()).collect();
+    let pad = PadSpec::fit(&probe.iter().collect::<Vec<_>>(), batch, 2.0);
+    let graphs: Vec<_> = probe.iter().take(batch).cloned().collect();
+    let merged = tfgnn::graph::batch::merge(&graphs).unwrap();
+    let padded = fit_or_skip(&merged, &pad).expect("batch must fit its own pad spec");
+    let cfg = ModelConfig::for_mag(&mag, 8, 8, 1);
+    let model = NativeModel::init(cfg, 7).unwrap();
+    let mut tr = NativeTrainer::new(model, AdamConfig::default(), RootTask::default(), threads);
+    let m = tr.train_batch(&padded).unwrap();
+    let bits =
+        tr.model().params.iter().flat_map(|p| p.data.iter().map(|x| x.to_bits())).collect();
+    (m.loss.to_bits(), bits)
+}
+
+/// Six served outputs off a fresh task server with `lanes` lanes.
+fn served_outputs(lanes: usize) -> Vec<TaskOutput> {
+    let mag = MagConfig::tiny();
+    let ds = generate(&mag);
+    let seeds = ds.papers_in_split(Split::Train);
+    let store = Arc::new(ds.store);
+    let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+    let sampler = Arc::new(InMemorySampler::new(store, spec, 3).unwrap());
+    let cfg = ModelConfig::for_mag(&mag, 8, 8, 1);
+    let task = tfgnn::tasks::build(&cfg).unwrap();
+    let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
+    let handle =
+        serve_task(model, sampler, task, ServeConfig { lanes, ..ServeConfig::default() })
+            .unwrap();
+    let outputs: Vec<TaskOutput> =
+        seeds.iter().take(6).map(|&s| handle.predict(&[s]).unwrap().output).collect();
+    handle.shutdown();
+    outputs
+}
+
+#[test]
+fn obs_on_changes_no_bits_and_exports_validate() {
+    // ---- baseline: observability fully off -----------------------------
+    tfgnn::obs::set_recording(false);
+    tfgnn::obs::trace::set_enabled(false);
+
+    let graphs_off = sampled_subgraphs();
+    assert!(!graphs_off.is_empty());
+    let train_off: Vec<_> = [1usize, 2, 8].iter().map(|&t| train_step_bits(t)).collect();
+    let served_off: Vec<_> = [1usize, 2, 8].iter().map(|&l| served_outputs(l)).collect();
+
+    // ---- same workloads with recording + tracing on --------------------
+    tfgnn::obs::set_recording(true);
+    tfgnn::obs::trace::set_enabled(true);
+    let before = tfgnn::obs::metrics().snapshot();
+
+    let graphs_on = sampled_subgraphs();
+    let train_on: Vec<_> = [1usize, 2, 8].iter().map(|&t| train_step_bits(t)).collect();
+    let served_on: Vec<_> = [1usize, 2, 8].iter().map(|&l| served_outputs(l)).collect();
+
+    // A short concurrent closed loop so waves, queue depth and the
+    // loadgen/level span all land in the export below.
+    {
+        let mag = MagConfig::tiny();
+        let ds = generate(&mag);
+        let seeds = ds.papers_in_split(Split::Train);
+        let store = Arc::new(ds.store);
+        let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+        let sampler = Arc::new(InMemorySampler::new(store, spec, 3).unwrap());
+        let cfg = ModelConfig::for_mag(&mag, 8, 8, 1);
+        let task = tfgnn::tasks::build(&cfg).unwrap();
+        let model = Arc::new(NativeModel::init(cfg, 7).unwrap());
+        let handle =
+            serve_task(model, sampler, task, ServeConfig { lanes: 2, ..ServeConfig::default() })
+                .unwrap();
+        let lists: Vec<Vec<u32>> = seeds.iter().take(4).map(|&s| vec![s]).collect();
+        let lg = LoadGenConfig { concurrency: vec![2], requests_per_client: 2 };
+        loadgen::run(&handle, &lists, &lg).unwrap();
+        handle.shutdown();
+    }
+
+    // ---- inertness: bit parity off vs on -------------------------------
+    assert!(
+        graphs_off == graphs_on,
+        "sampled subgraphs changed with observability on"
+    );
+    for (&threads, ((loss_off, bits_off), (loss_on, bits_on))) in
+        [1usize, 2, 8].iter().zip(train_off.iter().zip(&train_on))
+    {
+        assert_eq!(
+            loss_off, loss_on,
+            "trainer loss bits changed with observability on (threads={threads})"
+        );
+        assert!(
+            bits_off == bits_on,
+            "trainer param bits changed with observability on (threads={threads})"
+        );
+    }
+    for (&lanes, (outs_off, outs_on)) in
+        [1usize, 2, 8].iter().zip(served_off.iter().zip(&served_on))
+    {
+        assert_eq!(outs_off.len(), outs_on.len());
+        for (a, b) in outs_off.iter().zip(outs_on) {
+            assert!(
+                outputs_bit_identical(a, b),
+                "served output changed with observability on (lanes={lanes}): {a:?} != {b:?}"
+            );
+        }
+    }
+
+    // ---- the instrumentation actually moved ----------------------------
+    // `>=` deltas only: other tests in this binary may run concurrently
+    // and share the process-global registry.
+    let delta = tfgnn::obs::metrics().snapshot().delta_since(&before);
+    let counter = |n: &str| delta.counters.get(n).copied().unwrap_or(0);
+    let hist_count =
+        |n: &str| delta.histograms.get(n).map(|h| h.count).unwrap_or(0);
+    assert!(counter(names::SAMPLER_SUBGRAPHS) >= 6, "sampler counter did not move");
+    assert!(counter(names::TRAINER_STEPS) >= 3, "trainer counter did not move");
+    assert!(counter(names::SERVE_REQUESTS) >= 18, "serve counter did not move");
+    assert!(counter(names::SERVE_BATCHES) >= 1, "no waves counted");
+    assert!(hist_count(names::TRAINER_FORWARD_SECONDS) >= 3, "forward timer silent");
+    assert!(hist_count(names::SERVE_WAVE_SECONDS) >= 1, "wave timer silent");
+    assert!(hist_count(names::SERVE_WAVE_SIZE) >= 1, "wave-size histogram silent");
+
+    // ---- export and validate both artifact schemas ---------------------
+    let dir = std::env::temp_dir();
+    let mpath = dir.join(format!("tfgnn_obs_it_metrics_{}.json", std::process::id()));
+    let tpath = dir.join(format!("tfgnn_obs_it_trace_{}.json", std::process::id()));
+    let (m, t) =
+        (mpath.to_string_lossy().to_string(), tpath.to_string_lossy().to_string());
+    tfgnn::obs::report::finish(Some(m.as_str()), Some(t.as_str()))
+        .expect("export obs artifacts");
+
+    // Metrics: schema tag, round-trip, full table coverage, bucket shape.
+    let mdoc = Json::parse(&std::fs::read_to_string(&m).expect("read metrics"))
+        .expect("metrics export is valid JSON");
+    assert_eq!(
+        mdoc.get("schema").expect("schema").as_str().expect("str"),
+        "tfgnn_metrics_v1"
+    );
+    let snap = MetricsSnapshot::from_json(&mdoc).expect("metrics schema");
+    for def in METRICS {
+        let present = match def.kind {
+            MetricKind::Counter => snap.counters.contains_key(def.name),
+            MetricKind::Gauge => snap.gauges.contains_key(def.name),
+            MetricKind::Histogram => snap.histograms.contains_key(def.name),
+        };
+        assert!(present, "{} missing from the export", def.name);
+    }
+    for (name, h) in &snap.histograms {
+        assert_eq!(h.buckets.len(), NUM_BUCKETS, "{name} bucket count");
+    }
+    assert!(snap.counters.get(names::TRAINER_STEPS).copied().unwrap_or(0) >= 3);
+    // The renderer accepts what the exporter wrote.
+    let text = tfgnn::obs::report::render_stats(&snap);
+    assert!(text.contains(names::TRAINER_STEPS), "stats renderer dropped a hot counter");
+
+    // Trace: Chrome trace_event complete events, per-thread tids, and
+    // the spans this test just exercised.
+    let tdoc = Json::parse(&std::fs::read_to_string(&t).expect("read trace"))
+        .expect("trace export is valid JSON");
+    let events = tdoc.get("traceEvents").expect("traceEvents").as_arr().expect("array");
+    assert!(!events.is_empty(), "tracing was on: expected at least one span");
+    let mut seen = std::collections::BTreeSet::new();
+    for e in events {
+        assert_eq!(e.get("ph").expect("ph").as_str().expect("str"), "X");
+        assert_eq!(e.get("cat").expect("cat").as_str().expect("str"), "tfgnn");
+        assert_eq!(e.get("pid").expect("pid").as_i64().expect("int"), 1);
+        assert!(e.get("ts").expect("ts").as_i64().expect("int") >= 0);
+        assert!(e.get("dur").expect("dur").as_i64().expect("int") >= 0);
+        assert!(e.get("tid").expect("tid").as_i64().expect("int") >= 1);
+        seen.insert(e.get("name").expect("name").as_str().expect("str").to_string());
+    }
+    assert!(seen.contains("serve/wave"), "no serve/wave span in trace; saw {seen:?}");
+    assert!(
+        tdoc.get("otherData")
+            .expect("otherData")
+            .get("dropped_events")
+            .expect("dropped")
+            .as_i64()
+            .expect("int")
+            >= 0
+    );
+
+    let _ = std::fs::remove_file(&mpath);
+    let _ = std::fs::remove_file(&tpath);
+
+    // Leave the process how we found it for any later test.
+    tfgnn::obs::set_recording(false);
+    tfgnn::obs::trace::set_enabled(false);
+}

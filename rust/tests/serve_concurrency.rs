@@ -15,7 +15,6 @@
 //!   generation, even when the swap lands mid-load.
 
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -95,7 +94,7 @@ fn serve_concurrency_overload_rejects_structurally() {
         // admitted requests must still be served.
         assert!(ok >= 1, "lanes={lanes}: admitted requests must still be served (ok={ok})");
         assert_eq!(
-            handle.stats.rejected.load(Ordering::Relaxed),
+            handle.stats.snapshot().rejected,
             rejected as u64,
             "lanes={lanes}: stats.rejected matches observed rejections"
         );
@@ -233,17 +232,22 @@ fn serve_concurrency_cache_on_off_bit_identical() {
         }
         cached.predict(&keys[0]).unwrap();
         cached.predict(&keys[0]).unwrap();
-        let hits = cached.stats.cache_hits.load(Ordering::Relaxed);
-        let misses = cached.stats.cache_misses.load(Ordering::Relaxed);
-        let evictions = cached.stats.cache_evictions.load(Ordering::Relaxed);
+        let snap = cached.stats.snapshot();
+        let (hits, misses) = (snap.cache_hits, snap.cache_misses);
         assert!(hits > 0, "lanes={lanes}: no cache hits (misses={misses})");
         assert!(misses > 0, "lanes={lanes}: no cache misses");
-        assert!(evictions > 0, "lanes={lanes}: no evictions despite 12 keys over capacity 4");
+        assert!(
+            snap.cache_evictions > 0,
+            "lanes={lanes}: no evictions despite 12 keys over capacity 4"
+        );
+        assert_eq!(snap.cache_lookups(), hits + misses, "lanes={lanes}: lookup identity");
         cached.shutdown();
     }
     // The cache-off server counted nothing.
-    assert_eq!(cache_off.stats.cache_hits.load(Ordering::Relaxed), 0);
-    assert_eq!(cache_off.stats.cache_misses.load(Ordering::Relaxed), 0);
+    let off = cache_off.stats.snapshot();
+    assert_eq!(off.cache_hits, 0);
+    assert_eq!(off.cache_misses, 0);
+    assert_eq!(off.cache_lookups(), 0);
     cache_off.shutdown();
 }
 
@@ -311,7 +315,7 @@ fn serve_concurrency_hot_swap_never_mixes_generations() {
             });
         });
         assert_eq!(server.generation(), 2, "lanes={lanes}");
-        assert_eq!(server.stats.swaps.load(Ordering::Relaxed), 1, "lanes={lanes}");
+        assert_eq!(server.stats.snapshot().swaps, 1, "lanes={lanes}");
         // Post-swap requests serve generation 2 exclusively.
         let resp = server.predict(&probe[0]).unwrap();
         assert_eq!(resp.generation, 2, "lanes={lanes}");

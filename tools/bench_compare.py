@@ -4,8 +4,10 @@
 The bench-smoke CI job runs every `cargo bench` target in smoke mode,
 each writing a `BENCH_<bench>.json` artifact (schema: `{"bench": str,
 "smoke": bool, "rows": [{"name", "threads", "ns_per_op", "mean",
-"p50", "p95", "p99", "unit"}]}`). This script diffs those artifacts
-against the snapshot under `rust/benches/baseline/`:
+"p50", "p95", "p99", "unit"}]}`; newer rows may additionally carry
+"p999" and a "metrics" object — both optional so old baselines keep
+validating). This script diffs those artifacts against the snapshot
+under `rust/benches/baseline/`:
 
 * a baseline file with no current counterpart, a malformed schema on
   either side, or a baseline row (name, threads) missing from the
@@ -15,7 +17,12 @@ against the snapshot under `rust/benches/baseline/`:
   runners are too noisy to gate merges on): ns_per_op ratios outside
   [1/1.5, 1.5x] are flagged for a human to look at;
 * rows present in the current run but not in the baseline are reported
-  as informational — they become baseline rows at the next refresh.
+  as informational — they become baseline rows at the next refresh;
+* observability exports in the current run (`METRICS_*.json` metrics
+  snapshots and `TRACE_*.json` Chrome traces, written by the serving
+  bench) are schema-checked when present; they need no baseline
+  counterpart and their absence is not an error here (the CI `ls`
+  gate pins which ones must exist).
 
 Stdlib only; no third-party imports.
 
@@ -45,6 +52,13 @@ ROW_FIELDS = {
     "p95": (int, float),
     "p99": (int, float),
     "unit": str,
+}
+
+# Fields newer rows may carry; type-checked only when present so
+# baselines predating them stay valid.
+OPTIONAL_ROW_FIELDS = {
+    "p999": (int, float),
+    "metrics": dict,
 }
 
 
@@ -99,7 +113,95 @@ def load_doc(path, report):
                     f"({type(value).__name__})"
                 )
                 ok = False
+        for field, want in OPTIONAL_ROW_FIELDS.items():
+            value = row.get(field, _MISSING)
+            if value is _MISSING:
+                continue
+            if not isinstance(value, want) or isinstance(value, bool):
+                report.error(
+                    f"{path}: rows[{i}].{field} has wrong type "
+                    f"({type(value).__name__})"
+                )
+                ok = False
     return doc if ok else None
+
+
+def check_metrics_file(path, report):
+    """Schema-check one METRICS_*.json (tfgnn_metrics_v1)."""
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        report.error(f"{path}: unreadable or invalid JSON: {e}")
+        return
+    if not isinstance(doc, dict):
+        report.error(f"{path}: top level must be an object")
+        return
+    if doc.get("schema") != "tfgnn_metrics_v1":
+        report.error(f"{path}: 'schema' is not 'tfgnn_metrics_v1'")
+    for section in ("counters", "gauges", "histograms"):
+        if not isinstance(doc.get(section), dict):
+            report.error(f"{path}: missing or non-object '{section}'")
+            return
+    for name, value in doc["counters"].items():
+        if not isinstance(value, int) or isinstance(value, bool):
+            report.error(f"{path}: counters[{name!r}] is not an integer")
+    for name, value in doc["gauges"].items():
+        if not isinstance(value, int) or isinstance(value, bool):
+            report.error(f"{path}: gauges[{name!r}] is not an integer")
+    for name, h in doc["histograms"].items():
+        if not isinstance(h, dict):
+            report.error(f"{path}: histograms[{name!r}] is not an object")
+            continue
+        for field in ("count", "sum_micros", "nan_rejected"):
+            v = h.get(field)
+            if not isinstance(v, int) or isinstance(v, bool):
+                report.error(
+                    f"{path}: histograms[{name!r}].{field} is not an integer"
+                )
+        buckets = h.get("bucket_counts")
+        if not isinstance(buckets, list) or not all(
+            isinstance(b, int) and not isinstance(b, bool) for b in buckets
+        ):
+            report.error(
+                f"{path}: histograms[{name!r}].bucket_counts is not an "
+                "integer array"
+            )
+
+
+def check_trace_file(path, report):
+    """Schema-check one TRACE_*.json (Chrome trace_event format)."""
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        report.error(f"{path}: unreadable or invalid JSON: {e}")
+        return
+    if not isinstance(doc, dict):
+        report.error(f"{path}: top level must be an object")
+        return
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        report.error(f"{path}: missing or non-array 'traceEvents'")
+        return
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            report.error(f"{path}: traceEvents[{i}] is not an object")
+            return
+        for field, want in (
+            ("name", str), ("ph", str), ("ts", int), ("dur", int),
+            ("pid", int), ("tid", int),
+        ):
+            value = ev.get(field)
+            if not isinstance(value, want) or isinstance(value, bool):
+                report.error(
+                    f"{path}: traceEvents[{i}].{field} missing or wrong type"
+                )
+                return
+        if ev["ph"] != "X":
+            report.error(
+                f"{path}: traceEvents[{i}].ph is {ev['ph']!r}, want 'X' "
+                "(complete events)"
+            )
+            return
 
 
 def row_key(row):
@@ -178,6 +280,18 @@ def main():
             )
             continue
         compare_file(base_path, cur_path, report)
+
+    # Observability exports: schema-checked when present, never
+    # required here (the CI artifact `ls` pins existence).
+    obs_checked = 0
+    for path in sorted(args.current.glob("METRICS_*.json")):
+        check_metrics_file(path, report)
+        obs_checked += 1
+    for path in sorted(args.current.glob("TRACE_*.json")):
+        check_trace_file(path, report)
+        obs_checked += 1
+    if obs_checked:
+        print(f"bench-compare: schema-checked {obs_checked} observability export(s)")
 
     print(
         f"bench-compare: {len(baselines)} file(s), "
