@@ -317,7 +317,8 @@ impl Diagnostic {
             | Error::Runtime(m)
             | Error::Codec(m)
             | Error::Xla(m)
-            | Error::Overloaded(m) => m.clone(),
+            | Error::Overloaded(m)
+            | Error::DeadlineExceeded(m) => m.clone(),
             Error::Io(e) => e.to_string(),
         };
         if let Some(open) = m.rfind(" [TFGNN") {

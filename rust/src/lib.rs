@@ -71,6 +71,10 @@ pub enum Error {
     /// was rejected instead of queued (see `serve::batcher`). Clients
     /// should back off and retry.
     Overloaded(String),
+    /// The request's deadline passed before a lane executed it; the
+    /// request was answered without ever reaching the model (see
+    /// `serve::ServeConfig::default_deadline_ms`).
+    DeadlineExceeded(String),
 }
 
 impl std::fmt::Display for Error {
@@ -86,6 +90,7 @@ impl std::fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Overloaded(m) => write!(f, "overloaded: {m}"),
+            Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
         }
     }
 }

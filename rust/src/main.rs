@@ -17,6 +17,7 @@
 //!                [--json PATH]         # closed-loop serving load test
 //! tfgnn stats    METRICS.json [--prometheus]   # pretty-print a
 //!                                              # metrics snapshot
+//! tfgnn stats    --diff OLD.json NEW.json      # run-over-run delta
 //! ```
 //!
 //! `train`, `serve-bench` and `loadgen` also accept
@@ -25,6 +26,17 @@
 //! load it at `chrome://tracing` or <https://ui.perfetto.dev>). Either
 //! flag turns on histogram recording; `--trace-out` additionally turns
 //! on span capture. With neither flag the observability layer is inert.
+//!
+//! `serve-bench` and `loadgen` additionally accept the live
+//! introspection flags (see `docs/observability.md`):
+//! `--admin-addr HOST:PORT` (serve `/metrics`, `/metrics.json`,
+//! `/healthz`, `/tracez`, `/statusz` while running),
+//! `--deadline-ms N` (default request deadline; expired requests are
+//! answered `DeadlineExceeded` without reaching the model) and
+//! `--incident-dir DIR` (flight-recorder dumps on watchdog trips,
+//! overload bursts and failed batches). `loadgen --linger-ms N` keeps
+//! the server (and its admin endpoint) alive after the load phase so
+//! external scrapers can be pointed at it.
 //!
 //! All subcommands read `artifacts/manifest.json` (written by
 //! `make artifacts`), so the Rust binary is self-contained after the
@@ -101,19 +113,52 @@ fn obs_finish(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `tfgnn stats METRICS.json [--prometheus]`: pretty-print a metrics
-/// snapshot exported by `--metrics-out` (or dump it in Prometheus text
-/// exposition format).
-fn stats(args: &Args) -> Result<()> {
-    let [path] = args.rest() else {
-        return Err(tfgnn::Error::Pipeline(
-            "usage: tfgnn stats <METRICS.json> [--prometheus]".into(),
-        ));
-    };
+/// Read a `tfgnn_metrics_v1` export back from disk.
+fn load_snapshot(path: &str) -> Result<tfgnn::obs::metrics::MetricsSnapshot> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| tfgnn::Error::Pipeline(format!("{path}: {e}")))?;
-    let snap =
-        tfgnn::obs::metrics::MetricsSnapshot::from_json(&tfgnn::util::json::Json::parse(&text)?)?;
+    tfgnn::obs::metrics::MetricsSnapshot::from_json(&tfgnn::util::json::Json::parse(&text)?)
+}
+
+/// A nonzero trace-drop tally means the per-thread rings wrapped
+/// before export — warn so nobody debugs from a silently truncated
+/// trace.
+fn warn_on_trace_drops(snap: &tfgnn::obs::metrics::MetricsSnapshot) {
+    let dropped = snap.counters.get("obs_trace_dropped_total").copied().unwrap_or(0);
+    if dropped > 0 {
+        eprintln!(
+            "WARNING: obs_trace_dropped_total = {dropped}: the trace ring overwrote \
+             events before export; the Chrome trace is incomplete"
+        );
+    }
+}
+
+/// `tfgnn stats METRICS.json [--prometheus]`: pretty-print a metrics
+/// snapshot exported by `--metrics-out` (or dump it in Prometheus text
+/// exposition format). `tfgnn stats --diff OLD.json NEW.json` renders
+/// the run-over-run movement between two exports instead.
+fn stats(args: &Args) -> Result<()> {
+    if let Some(old_path) = args.get("diff") {
+        let [new_path] = args.rest() else {
+            return Err(tfgnn::Error::Pipeline(
+                "usage: tfgnn stats --diff <OLD.json> <NEW.json>".into(),
+            ));
+        };
+        let old = load_snapshot(old_path)?;
+        let new = load_snapshot(new_path)?;
+        warn_on_trace_drops(&new);
+        print!("{}", tfgnn::obs::report::render_diff(&old, &new));
+        return Ok(());
+    }
+    let [path] = args.rest() else {
+        return Err(tfgnn::Error::Pipeline(
+            "usage: tfgnn stats <METRICS.json> [--prometheus] | \
+             tfgnn stats --diff <OLD.json> <NEW.json>"
+                .into(),
+        ));
+    };
+    let snap = load_snapshot(path)?;
+    warn_on_trace_drops(&snap);
     if args.flag("prometheus") {
         print!("{}", snap.to_prometheus());
     } else {
@@ -348,6 +393,20 @@ fn run_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Apply the shared live-introspection flags (`--admin-addr`,
+/// `--deadline-ms`, `--incident-dir`) to a serving config.
+fn introspection_cfg(
+    args: &Args,
+    mut cfg: tfgnn::serve::ServeConfig,
+    label: String,
+) -> Result<tfgnn::serve::ServeConfig> {
+    cfg.admin_addr = args.get("admin-addr").map(str::to_string);
+    cfg.default_deadline_ms = args.get_or("deadline-ms", 0u64)?;
+    cfg.incident_dir = args.get("incident-dir").map(PathBuf::from);
+    cfg.config_label = Some(label);
+    Ok(cfg)
+}
+
 fn serve_bench(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let env = MagEnv::from_artifacts(&dir)?;
@@ -366,13 +425,8 @@ fn serve_bench(args: &Args) -> Result<()> {
     let max_batch: usize = args.get_or("max-batch", env.batch_size)?;
     let n_requests: usize = args.get_or("requests", 64)?;
     obs_enable(args);
-    let handle = tfgnn::serve::serve(
-        &dir,
-        &entry,
-        params,
-        Arc::clone(&env.sampler),
-        env.pad.clone(),
-        RootTask::default(),
+    let serve_cfg = introspection_cfg(
+        args,
         tfgnn::serve::ServeConfig {
             max_batch,
             max_wait: std::time::Duration::from_millis(args.get_or("max-wait-ms", 5u64)?),
@@ -381,7 +435,20 @@ fn serve_bench(args: &Args) -> Result<()> {
             ),
             ..Default::default()
         },
+        format!("serve-bench arch={arch} max_batch={max_batch}"),
     )?;
+    let handle = tfgnn::serve::serve(
+        &dir,
+        &entry,
+        params,
+        Arc::clone(&env.sampler),
+        env.pad.clone(),
+        RootTask::default(),
+        serve_cfg,
+    )?;
+    if let Some(addr) = handle.admin_addr() {
+        println!("admin endpoint: http://{addr}/");
+    }
     let seeds = env.dataset.papers_in_split(tfgnn::synth::mag::Split::Test);
     let t0 = std::time::Instant::now();
     let pending: Vec<_> =
@@ -462,10 +529,8 @@ fn loadgen(args: &Args) -> Result<()> {
     let task = tfgnn::tasks::build(&cfg)?;
     let model = Arc::new(NativeModel::init(cfg, 7)?);
 
-    let server = serve_task(
-        Arc::clone(&model),
-        Arc::clone(&sampler),
-        Arc::clone(&task),
+    let serve_cfg = introspection_cfg(
+        args,
         ServeConfig {
             lanes,
             queue_capacity: queue,
@@ -473,7 +538,17 @@ fn loadgen(args: &Args) -> Result<()> {
             max_batch,
             ..ServeConfig::default()
         },
+        format!("loadgen arch={arch} lanes={lanes} queue={queue} cache={cache}"),
     )?;
+    let server = serve_task(
+        Arc::clone(&model),
+        Arc::clone(&sampler),
+        Arc::clone(&task),
+        serve_cfg,
+    )?;
+    if let Some(addr) = server.admin_addr() {
+        println!("admin endpoint: http://{addr}/");
+    }
     let oracle = serve_task(
         model,
         sampler,
@@ -500,7 +575,7 @@ fn loadgen(args: &Args) -> Result<()> {
     for level in &report.levels {
         println!(
             "conc {:>4}: {:>8.1} req/s | p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms p99.9 {:.2}ms | \
-             ok {} rejected {} failed {}",
+             ok {} rejected {} deadline {} failed {}",
             level.concurrency,
             level.throughput,
             level.latency.p50 * 1e3,
@@ -509,16 +584,19 @@ fn loadgen(args: &Args) -> Result<()> {
             level.latency.p999 * 1e3,
             level.ok,
             level.rejected,
+            level.deadline,
             level.failed,
         );
     }
     println!("saturation: {:.1} req/s", report.saturation_throughput());
     let snap = server.stats.snapshot();
     println!(
-        "server: {} admitted, {} batches, {} rejected, cache {} hit / {} miss / {} evicted, generation {}",
+        "server: {} executed, {} batches, {} rejected, {} deadline-expired, \
+         cache {} hit / {} miss / {} evicted, generation {}",
         snap.requests,
         snap.batches,
         snap.rejected,
+        snap.deadline_expired,
         snap.cache_hits,
         snap.cache_misses,
         snap.cache_evictions,
@@ -540,6 +618,7 @@ fn loadgen(args: &Args) -> Result<()> {
                     ("p999", Json::Num(l.latency.p999)),
                     ("ok", Json::Int(l.ok as i64)),
                     ("rejected", Json::Int(l.rejected as i64)),
+                    ("deadline", Json::Int(l.deadline as i64)),
                     ("failed", Json::Int(l.failed as i64)),
                 ])
             })
@@ -551,6 +630,13 @@ fn loadgen(args: &Args) -> Result<()> {
         ]);
         std::fs::write(path, doc.to_pretty())?;
         println!("wrote {path}");
+    }
+    // Keep the server (and its admin endpoint) alive so an external
+    // scraper — CI curls /healthz and /metrics here — can observe it.
+    let linger_ms: u64 = args.get_or("linger-ms", 0u64)?;
+    if linger_ms > 0 {
+        println!("lingering {linger_ms}ms before shutdown");
+        std::thread::sleep(std::time::Duration::from_millis(linger_ms));
     }
     server.shutdown();
     obs_finish(args)

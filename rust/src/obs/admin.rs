@@ -1,0 +1,300 @@
+//! Opt-in TCP admin endpoint: live `/metrics`, `/healthz`, `/tracez`,
+//! `/statusz` over hand-rolled HTTP/1.0.
+//!
+//! The image is offline, so there is no HTTP crate to lean on — and
+//! none is needed: the endpoint answers `GET` requests one connection
+//! at a time with `Connection: close`, which every scraper
+//! (Prometheus, curl, a browser) speaks. Off by default; a server
+//! starts one only when `ServeConfig::admin_addr` (the `--admin-addr`
+//! flag) is set. Binding `127.0.0.1:0` picks an ephemeral port —
+//! [`AdminServer::local_addr`] reports the real one, which is how the
+//! tests avoid port collisions.
+//!
+//! | Path | Content | Source |
+//! |---|---|---|
+//! | `/metrics` | Prometheus text | registry snapshot |
+//! | `/metrics.json` | `tfgnn_metrics_v1` JSON | registry snapshot |
+//! | `/healthz` | `200 ok` / `503` + report | [`super::health::Watchdog`] |
+//! | `/tracez` | Chrome trace JSON | [`super::trace::snapshot`] |
+//! | `/statusz` | uptime/config/generation/occupancy JSON | server closure |
+//!
+//! Every handler only *reads* snapshots — `/tracez` uses the
+//! non-destructive [`super::trace::snapshot`], never [`super::trace::drain`]
+//! — so a concurrent scraper cannot change served bits or steal
+//! events from a later `--trace-out` export (the inertness contract;
+//! pinned by `tests/admin_live.rs`).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use super::health::HealthReport;
+use super::metrics::names;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Most recent events returned by `/tracez` (keeps responses bounded;
+/// the rings hold [`super::trace::RING_CAP`] per thread).
+pub const TRACEZ_EVENT_CAP: usize = 4096;
+
+/// Cap on request bytes read before responding (headers only; GET has
+/// no body we care about).
+const MAX_REQUEST_BYTES: usize = 8192;
+
+/// The closures an admin server consults per request; they keep `obs`
+/// decoupled from `serve` (the server wires them up at startup).
+pub struct AdminState {
+    /// Fresh health verdict for `/healthz`.
+    pub healthz: Arc<dyn Fn() -> HealthReport + Send + Sync>,
+    /// Fresh status document for `/statusz`.
+    pub statusz: Arc<dyn Fn() -> Json + Send + Sync>,
+}
+
+/// A running admin endpoint; `stop` (or drop) shuts it down.
+pub struct AdminServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl AdminServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`, or port 0 for ephemeral)
+    /// and start the accept loop on its own thread.
+    pub fn start(addr: &str, state: AdminState) -> Result<AdminServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Runtime(format!("admin: cannot bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Runtime(format!("admin: no local addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("tfgnn-admin".to_string())
+            .spawn(move || accept_loop(&listener, &state, &stop2))
+            .map_err(|e| Error::Runtime(format!("admin: cannot spawn thread: {e}")))?;
+        Ok(AdminServer { addr: local, stop, thread: Mutex::new(Some(thread)) })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the thread. Idempotent.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // The accept loop blocks in `accept`; poke it awake with a
+        // throwaway connection so it sees the flag.
+        let _ = TcpStream::connect(self.addr);
+        let mut g = self.thread.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(h) = g.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for AdminServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, state: &AdminState, stop: &AtomicBool) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(mut stream) = conn else { continue };
+        // A stuck client must not wedge the admin thread.
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(2000)));
+        let _ = handle_connection(&mut stream, state);
+    }
+}
+
+/// Read the request head, route it, write an HTTP/1.0 response. The
+/// full header block is consumed before replying so closing the
+/// socket cannot RST an in-flight response off the wire.
+fn handle_connection(stream: &mut TcpStream, state: &AdminState) -> std::io::Result<()> {
+    let mut buf = vec![0u8; MAX_REQUEST_BYTES];
+    let mut filled = 0usize;
+    loop {
+        if filled == buf.len() {
+            break;
+        }
+        let n = stream.read(&mut buf[filled..])?;
+        if n == 0 {
+            break;
+        }
+        filled += n;
+        let head = &buf[..filled];
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.windows(2).any(|w| w == b"\n\n") {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&buf[..filled]);
+    let line = text.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("/");
+    crate::obs_counter!(names::ADMIN_REQUESTS).inc();
+    let (status, content_type, body) = route(method, path, state);
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let header = format!(
+        "HTTP/1.0 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+const INDEX: &str = "tfgnn admin endpoint\n\
+    /metrics       Prometheus text\n\
+    /metrics.json  tfgnn_metrics_v1 JSON\n\
+    /healthz       200 ok / 503 + watchdog report\n\
+    /tracez        Chrome trace JSON (recent spans)\n\
+    /statusz       uptime, config, generation, occupancy\n";
+
+fn route(method: &str, path: &str, state: &AdminState) -> (u16, &'static str, String) {
+    if method != "GET" {
+        return (405, "text/plain", "only GET is supported\n".to_string());
+    }
+    let path = path.split('?').next().unwrap_or(path);
+    match path {
+        "/" => (200, "text/plain", INDEX.to_string()),
+        "/metrics" => {
+            (200, "text/plain; version=0.0.4", super::metrics::global().snapshot().to_prometheus())
+        }
+        "/metrics.json" => {
+            let mut body = super::metrics::global().snapshot().to_json().to_pretty();
+            body.push('\n');
+            (200, "application/json", body)
+        }
+        "/healthz" => {
+            let report = (state.healthz)();
+            if report.healthy {
+                (200, "text/plain", report.to_text())
+            } else {
+                (503, "text/plain", report.to_text())
+            }
+        }
+        "/tracez" => {
+            let (events, dropped) = super::trace::snapshot(TRACEZ_EVENT_CAP);
+            let mut body = super::trace::to_chrome_json(&events, dropped).to_string();
+            body.push('\n');
+            (200, "application/json", body)
+        }
+        "/statusz" => {
+            let mut body = (state.statusz)().to_pretty();
+            body.push('\n');
+            (200, "application/json", body)
+        }
+        _ => (
+            404,
+            "text/plain",
+            "not found; try / /metrics /metrics.json /healthz /tracez /statusz\n".to_string(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+
+    fn healthy_state() -> AdminState {
+        AdminState {
+            healthz: Arc::new(|| HealthReport {
+                healthy: true,
+                reasons: Vec::new(),
+                lanes: Vec::new(),
+                backlog: 0,
+                deadline_misses: 0,
+                trips: 0,
+            }),
+            statusz: Arc::new(|| obj(vec![("schema", Json::Str("tfgnn_statusz_v1".into()))])),
+        }
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.0\r\nHost: admin\r\n\r\n").unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).unwrap();
+        let status = text.split_whitespace().nth(1).unwrap_or("0").parse().unwrap_or(0);
+        let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    #[test]
+    fn serves_metrics_and_statusz() {
+        let server = AdminServer::start("127.0.0.1:0", healthy_state()).unwrap();
+        let addr = server.local_addr();
+        let (status, body) = get(addr, "/metrics");
+        assert_eq!(status, 200);
+        assert!(body.contains("serve_requests_total"), "prometheus body: {body}");
+        let (status, body) = get(addr, "/metrics.json");
+        assert_eq!(status, 200);
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "tfgnn_metrics_v1");
+        let (status, body) = get(addr, "/statusz");
+        assert_eq!(status, 200);
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "tfgnn_statusz_v1");
+        let (status, body) = get(addr, "/tracez");
+        assert_eq!(status, 200);
+        assert!(Json::parse(&body).unwrap().get("traceEvents").is_ok());
+        server.stop();
+    }
+
+    #[test]
+    fn healthz_follows_the_closure() {
+        let server = AdminServer::start("127.0.0.1:0", healthy_state()).unwrap();
+        let (status, body) = get(server.local_addr(), "/healthz");
+        assert_eq!(status, 200);
+        assert!(body.starts_with("ok"));
+        server.stop();
+
+        let sick = AdminState {
+            healthz: Arc::new(|| HealthReport {
+                healthy: false,
+                reasons: vec!["lane 0 wedged mid-wave for 999ms".to_string()],
+                lanes: Vec::new(),
+                backlog: 3,
+                deadline_misses: 1,
+                trips: 1,
+            }),
+            statusz: Arc::new(|| Json::Null),
+        };
+        let server = AdminServer::start("127.0.0.1:0", sick).unwrap();
+        let (status, body) = get(server.local_addr(), "/healthz");
+        assert_eq!(status, 503);
+        assert!(body.contains("wedged"), "{body}");
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_path_and_method_are_structured_errors() {
+        let server = AdminServer::start("127.0.0.1:0", healthy_state()).unwrap();
+        let addr = server.local_addr();
+        let (status, _) = get(addr, "/nope");
+        assert_eq!(status, 404);
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.0 405"), "{text}");
+        // Stop is idempotent (drop will call it again).
+        server.stop();
+        server.stop();
+    }
+}

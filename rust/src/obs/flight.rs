@@ -1,0 +1,167 @@
+//! Incident flight recorder: dump metrics + trace snapshots when the
+//! server misbehaves.
+//!
+//! Post-mortems usually start *after* the interesting window: nobody
+//! had `--trace-out` on when the lane wedged at 3am. The flight
+//! recorder closes that gap — when a server with `--incident-dir` set
+//! hits a watchdog trip, an overload burst, or a failed batch, it
+//! writes a self-contained JSON snapshot (full metrics registry plus
+//! the most recent trace events) so the evidence survives without any
+//! export flags having been on.
+//!
+//! Dumps are **rate-limited** (one per [`DEFAULT_MIN_INTERVAL`] by
+//! default; suppressed triggers are tallied in
+//! `flight_rate_limited_total`) so a misbehaving server cannot flood
+//! the disk, and **atomic** (written to a dotted temp file, then
+//! renamed) so a crash mid-dump never leaves a torn JSON document.
+//! The trace snapshot uses the non-destructive
+//! [`super::trace::snapshot`], so recording an incident never steals
+//! events from a later `--trace-out` export.
+//!
+//! Dump layout (`incident-<seq>-<trigger>.json`, schema
+//! `tfgnn_incident_v1`): `trigger`, `detail`, `seq`,
+//! `unix_time_secs`, `metrics` (a `tfgnn_metrics_v1` document) and
+//! `trace` (a Chrome `trace_event` document).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use super::metrics::names;
+use crate::util::json::{obj, Json};
+use crate::{Error, Result};
+
+/// Default minimum spacing between dumps.
+pub const DEFAULT_MIN_INTERVAL: Duration = Duration::from_secs(5);
+
+/// Most recent trace events captured per dump.
+const TRACE_EVENT_CAP: usize = 2048;
+
+/// Writes rate-limited incident snapshots into one directory.
+pub struct FlightRecorder {
+    dir: PathBuf,
+    min_interval: Duration,
+    last_dump: Mutex<Option<Instant>>,
+    seq: AtomicU64,
+}
+
+impl FlightRecorder {
+    /// A recorder dumping into `dir` (created if missing), at most one
+    /// dump per [`DEFAULT_MIN_INTERVAL`].
+    pub fn new(dir: &Path) -> Result<FlightRecorder> {
+        FlightRecorder::with_min_interval(dir, DEFAULT_MIN_INTERVAL)
+    }
+
+    /// A recorder with an explicit rate limit (tests use short ones).
+    pub fn with_min_interval(dir: &Path, min_interval: Duration) -> Result<FlightRecorder> {
+        std::fs::create_dir_all(dir).map_err(|e| {
+            Error::Runtime(format!("flight: cannot create {}: {e}", dir.display()))
+        })?;
+        Ok(FlightRecorder {
+            dir: dir.to_path_buf(),
+            min_interval,
+            last_dump: Mutex::new(None),
+            seq: AtomicU64::new(0),
+        })
+    }
+
+    /// Record an incident: dump a metrics + trace snapshot unless the
+    /// rate limiter suppresses it. Returns the dump path on success;
+    /// `None` when rate-limited or when the write failed (recording an
+    /// incident must never take the serving path down with it).
+    pub fn record(&self, trigger: &str, detail: &str) -> Option<PathBuf> {
+        {
+            let mut g = self.last_dump.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(last) = *g {
+                if last.elapsed() < self.min_interval {
+                    crate::obs_counter!(names::FLIGHT_RATE_LIMITED).inc();
+                    return None;
+                }
+            }
+            *g = Some(Instant::now());
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let unix_secs = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let (events, dropped) = super::trace::snapshot(TRACE_EVENT_CAP);
+        let doc = obj(vec![
+            ("schema", Json::Str("tfgnn_incident_v1".to_string())),
+            ("seq", Json::Int(i64::try_from(seq).unwrap_or(i64::MAX))),
+            ("trigger", Json::Str(trigger.to_string())),
+            ("detail", Json::Str(detail.to_string())),
+            ("unix_time_secs", Json::Int(i64::try_from(unix_secs).unwrap_or(i64::MAX))),
+            ("metrics", super::metrics::global().snapshot().to_json()),
+            ("trace", super::trace::to_chrome_json(&events, dropped)),
+        ]);
+        let name = format!("incident-{seq:04}-{}.json", sanitize(trigger));
+        let tmp = self.dir.join(format!(".{name}.tmp"));
+        let dest = self.dir.join(&name);
+        let mut body = doc.to_pretty();
+        body.push('\n');
+        match std::fs::write(&tmp, body).and_then(|()| std::fs::rename(&tmp, &dest)) {
+            Ok(()) => {
+                crate::obs_counter!(names::FLIGHT_DUMPS).inc();
+                Some(dest)
+            }
+            Err(_) => {
+                let _ = std::fs::remove_file(&tmp);
+                None
+            }
+        }
+    }
+}
+
+/// Keep trigger names filesystem-safe.
+fn sanitize(s: &str) -> String {
+    s.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '-' }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tfgnn_flight_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn dump_is_parseable_and_rate_limited() {
+        let dir = temp_dir("basic");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rec = FlightRecorder::with_min_interval(&dir, Duration::from_secs(60)).unwrap();
+        let path = rec.record("watchdog trip", "lane 0 wedged").expect("first dump");
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "tfgnn_incident_v1");
+        assert_eq!(doc.get("trigger").unwrap().as_str().unwrap(), "watchdog trip");
+        assert_eq!(
+            doc.get("metrics").unwrap().get("schema").unwrap().as_str().unwrap(),
+            "tfgnn_metrics_v1"
+        );
+        assert!(doc.get("trace").unwrap().get("traceEvents").is_ok());
+        assert!(path.file_name().is_some_and(|n| n == "incident-0000-watchdog-trip.json"));
+        // Within the interval: suppressed.
+        assert!(rec.record("overload", "burst").is_none());
+        // No temp droppings.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_interval_allows_consecutive_dumps() {
+        let dir = temp_dir("seq");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rec = FlightRecorder::with_min_interval(&dir, Duration::ZERO).unwrap();
+        let a = rec.record("failed-batch", "a").expect("dump a");
+        let b = rec.record("failed-batch", "b").expect("dump b");
+        assert_ne!(a, b, "sequence number keeps dumps distinct");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

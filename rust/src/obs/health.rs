@@ -1,0 +1,310 @@
+//! Health watchdog: lane heartbeats, wedge/stall detection, deadline
+//! misses.
+//!
+//! A serving process is *unhealthy* when it is holding work it cannot
+//! make progress on. The [`Watchdog`] detects the two shapes of that:
+//!
+//! * **Wedged lane** — a lane began a wave ([`LaneBeat::begin`]) and
+//!   has not finished it ([`LaneBeat::end`]) within the threshold. The
+//!   lane thread is stuck inside an executor (or an injected test
+//!   stall) while its requests age.
+//! * **Stalled queue** — the backlog is non-empty but no lane has made
+//!   any begin/end progress within the threshold: every lane is either
+//!   dead or wedged, so admitted requests will never be served.
+//!
+//! [`Watchdog::check`] computes a point-in-time [`HealthReport`] (what
+//! the admin `/healthz` endpoint serves — 200 when healthy, 503
+//! otherwise); [`Watchdog::evaluate`] additionally does the
+//! transition bookkeeping: a healthy→unhealthy edge increments the
+//! `health_watchdog_trips_total` counter and raises the
+//! `health_unhealthy` gauge (which is what the flight recorder keys
+//! its "watchdog trip" dumps on).
+//!
+//! Heartbeats are relaxed atomic stores of a microsecond clock offset
+//! — no locks on the wave path — so the watchdog obeys the module's
+//! inertness contract: lanes beat identically whether or not anything
+//! is watching.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use super::metrics::names;
+
+/// Per-lane heartbeat state shared between the lane's [`LaneBeat`] and
+/// the watchdog's checker.
+struct LaneState {
+    lane: usize,
+    /// Microseconds since the watchdog epoch, plus 1, at the current
+    /// wave's begin; 0 while idle.
+    busy_since: AtomicU64,
+    /// Waves this lane has begun.
+    waves: AtomicU64,
+}
+
+/// A lane's handle for heartbeating: call [`LaneBeat::begin`] when a
+/// wave is picked up and [`LaneBeat::end`] when it is fully replied.
+pub struct LaneBeat {
+    state: Arc<LaneState>,
+    progress: Arc<AtomicU64>,
+    epoch: Instant,
+}
+
+impl LaneBeat {
+    /// Mark this lane busy on a new wave.
+    pub fn begin(&self) {
+        let now = micros_since(self.epoch) + 1;
+        self.state.busy_since.store(now, Ordering::Relaxed);
+        self.state.waves.fetch_add(1, Ordering::Relaxed);
+        self.progress.store(now, Ordering::Relaxed);
+        crate::obs_counter!(names::HEALTH_HEARTBEATS).inc();
+    }
+
+    /// Mark this lane idle again; the wave was fully replied.
+    pub fn end(&self) {
+        let now = micros_since(self.epoch) + 1;
+        self.state.busy_since.store(0, Ordering::Relaxed);
+        self.progress.store(now, Ordering::Relaxed);
+    }
+}
+
+/// One lane's line in a [`HealthReport`].
+#[derive(Debug, Clone)]
+pub struct LaneHealth {
+    pub lane: usize,
+    /// Currently mid-wave?
+    pub busy: bool,
+    /// How long the current wave has been running (zero when idle).
+    pub busy_for: Duration,
+    /// Waves begun so far.
+    pub waves: u64,
+}
+
+/// Point-in-time health verdict; `reasons` is empty iff `healthy`.
+#[derive(Debug, Clone)]
+pub struct HealthReport {
+    pub healthy: bool,
+    pub reasons: Vec<String>,
+    pub lanes: Vec<LaneHealth>,
+    /// Backlog (queue depth) the caller passed in.
+    pub backlog: i64,
+    /// Requests whose deadline expired before execution, so far.
+    pub deadline_misses: u64,
+    /// Healthy→unhealthy transitions recorded so far.
+    pub trips: u64,
+}
+
+impl HealthReport {
+    /// Plain-text rendering for the `/healthz` body.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        if self.healthy {
+            out.push_str("ok\n");
+        } else {
+            out.push_str("unhealthy\n");
+            for r in &self.reasons {
+                out.push_str("- ");
+                out.push_str(r);
+                out.push('\n');
+            }
+        }
+        for l in &self.lanes {
+            let state = if l.busy {
+                format!("busy {}ms", l.busy_for.as_millis())
+            } else {
+                "idle".to_string()
+            };
+            out.push_str(&format!("lane {}: {} ({} waves)\n", l.lane, state, l.waves));
+        }
+        out.push_str(&format!(
+            "backlog {} | deadline misses {} | trips {}\n",
+            self.backlog, self.deadline_misses, self.trips
+        ));
+        out
+    }
+}
+
+/// Watchdog over a set of heartbeating lanes. One per server.
+pub struct Watchdog {
+    epoch: Instant,
+    threshold: Duration,
+    lanes: Mutex<Vec<Arc<LaneState>>>,
+    /// Latest begin/end heartbeat across all lanes (micros + 1;
+    /// initialized to 1 = "progress at startup" so an idle new server
+    /// is healthy).
+    progress: Arc<AtomicU64>,
+    deadline_misses: AtomicU64,
+    trips: AtomicU64,
+    healthy: AtomicBool,
+}
+
+impl Watchdog {
+    /// A watchdog that flags lanes silent past `threshold`.
+    pub fn new(threshold: Duration) -> Watchdog {
+        Watchdog {
+            epoch: Instant::now(),
+            threshold,
+            lanes: Mutex::new(Vec::new()),
+            progress: Arc::new(AtomicU64::new(1)),
+            deadline_misses: AtomicU64::new(0),
+            trips: AtomicU64::new(0),
+            healthy: AtomicBool::new(true),
+        }
+    }
+
+    /// Register a lane (at server startup) and get its beat handle.
+    pub fn register_lane(&self, lane: usize) -> LaneBeat {
+        let state = Arc::new(LaneState {
+            lane,
+            busy_since: AtomicU64::new(0),
+            waves: AtomicU64::new(0),
+        });
+        self.lanes
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(Arc::clone(&state));
+        LaneBeat { state, progress: Arc::clone(&self.progress), epoch: self.epoch }
+    }
+
+    /// Count a request whose deadline expired before execution.
+    pub fn note_deadline_miss(&self) {
+        self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Healthy→unhealthy transitions so far.
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time health check; pure (no transition bookkeeping).
+    /// `backlog` is the server's current queue depth.
+    pub fn check(&self, backlog: i64) -> HealthReport {
+        let now = micros_since(self.epoch);
+        let threshold_us = self.threshold.as_micros().min(u64::MAX as u128) as u64;
+        let mut lanes_out = Vec::new();
+        let mut reasons = Vec::new();
+        {
+            let g = self.lanes.lock().unwrap_or_else(PoisonError::into_inner);
+            for lane in g.iter() {
+                let busy = lane.busy_since.load(Ordering::Relaxed);
+                let busy_for_us = if busy > 0 { now.saturating_sub(busy - 1) } else { 0 };
+                if busy > 0 && busy_for_us > threshold_us {
+                    reasons.push(format!(
+                        "lane {} wedged mid-wave for {}ms (threshold {}ms)",
+                        lane.lane,
+                        busy_for_us / 1000,
+                        threshold_us / 1000
+                    ));
+                }
+                lanes_out.push(LaneHealth {
+                    lane: lane.lane,
+                    busy: busy > 0,
+                    busy_for: Duration::from_micros(busy_for_us),
+                    waves: lane.waves.load(Ordering::Relaxed),
+                });
+            }
+        }
+        let prog = self.progress.load(Ordering::Relaxed);
+        let idle_for_us = now.saturating_sub(prog.saturating_sub(1));
+        if backlog > 0 && idle_for_us > threshold_us {
+            reasons.push(format!(
+                "queue stalled: backlog {} with no lane progress for {}ms",
+                backlog,
+                idle_for_us / 1000
+            ));
+        }
+        HealthReport {
+            healthy: reasons.is_empty(),
+            reasons,
+            lanes: lanes_out,
+            backlog,
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            trips: self.trips.load(Ordering::Relaxed),
+        }
+    }
+
+    /// [`Watchdog::check`] plus transition bookkeeping: on a
+    /// healthy→unhealthy edge, bump the trip counter and raise the
+    /// unhealthy gauge; on recovery, clear the gauge. Returns the
+    /// report and whether this call was the tripping edge (the flight
+    /// recorder's cue).
+    pub fn evaluate(&self, backlog: i64) -> (HealthReport, bool) {
+        let mut report = self.check(backlog);
+        let was = self.healthy.swap(report.healthy, Ordering::Relaxed);
+        let tripped = was && !report.healthy;
+        if tripped {
+            self.trips.fetch_add(1, Ordering::Relaxed);
+            crate::obs_counter!(names::HEALTH_WATCHDOG_TRIPS).inc();
+            crate::obs_gauge!(names::HEALTH_UNHEALTHY).set(1);
+        } else if !was && report.healthy {
+            crate::obs_gauge!(names::HEALTH_UNHEALTHY).set(0);
+        }
+        report.trips = self.trips.load(Ordering::Relaxed);
+        (report, tripped)
+    }
+}
+
+fn micros_since(epoch: Instant) -> u64 {
+    Instant::now().saturating_duration_since(epoch).as_micros().min(u64::MAX as u128) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_server_is_healthy() {
+        let dog = Watchdog::new(Duration::from_millis(10));
+        let _beat = dog.register_lane(0);
+        std::thread::sleep(Duration::from_millis(30));
+        let report = dog.check(0);
+        assert!(report.healthy, "{report:?}");
+        assert_eq!(report.lanes.len(), 1);
+        assert!(!report.lanes[0].busy);
+    }
+
+    #[test]
+    fn wedged_lane_flips_unhealthy_and_recovers() {
+        let dog = Watchdog::new(Duration::from_millis(10));
+        let beat = dog.register_lane(3);
+        beat.begin();
+        std::thread::sleep(Duration::from_millis(40));
+        let (report, tripped) = dog.evaluate(0);
+        assert!(!report.healthy, "{report:?}");
+        assert!(tripped);
+        assert!(report.reasons.iter().any(|r| r.contains("lane 3 wedged")), "{report:?}");
+        assert!(report.to_text().starts_with("unhealthy\n"));
+        // Same trip is not double-counted.
+        let (_, again) = dog.evaluate(0);
+        assert!(!again);
+        assert_eq!(dog.trips(), 1);
+        // Finishing the wave recovers.
+        beat.end();
+        let (report, _) = dog.evaluate(0);
+        assert!(report.healthy, "{report:?}");
+        assert_eq!(report.lanes[0].waves, 1);
+    }
+
+    #[test]
+    fn stalled_queue_needs_backlog() {
+        let dog = Watchdog::new(Duration::from_millis(10));
+        let beat = dog.register_lane(0);
+        beat.begin();
+        beat.end();
+        std::thread::sleep(Duration::from_millis(40));
+        // Progress is stale but there is no backlog: healthy.
+        assert!(dog.check(0).healthy);
+        // With a backlog, stale progress is a stall.
+        let report = dog.check(5);
+        assert!(!report.healthy, "{report:?}");
+        assert!(report.reasons.iter().any(|r| r.contains("queue stalled")), "{report:?}");
+    }
+
+    #[test]
+    fn deadline_misses_are_reported() {
+        let dog = Watchdog::new(Duration::from_secs(1));
+        dog.note_deadline_miss();
+        dog.note_deadline_miss();
+        assert_eq!(dog.check(0).deadline_misses, 2);
+    }
+}

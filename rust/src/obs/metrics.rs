@@ -555,6 +555,13 @@ pub struct MetricDef {
 
 /// Well-known metric names, so wiring sites cannot typo a string.
 pub mod names {
+    pub const ADMIN_REQUESTS: &str = "admin_requests_total";
+    pub const FLIGHT_DUMPS: &str = "flight_dumps_total";
+    pub const FLIGHT_RATE_LIMITED: &str = "flight_rate_limited_total";
+    pub const HEALTH_HEARTBEATS: &str = "health_heartbeats_total";
+    pub const HEALTH_UNHEALTHY: &str = "health_unhealthy";
+    pub const HEALTH_WATCHDOG_TRIPS: &str = "health_watchdog_trips_total";
+    pub const OBS_TRACE_DROPPED: &str = "obs_trace_dropped_total";
     pub const SAMPLER_RETRY_ATTEMPTS: &str = "sampler_retry_attempts_total";
     pub const SAMPLER_RETRY_EXHAUSTED: &str = "sampler_retry_exhausted_total";
     pub const SAMPLER_SHARD_FANOUT_SECONDS: &str = "sampler_shard_fanout_seconds";
@@ -563,10 +570,15 @@ pub mod names {
     pub const SERVE_CACHE_EVICTIONS: &str = "serve_cache_evictions_total";
     pub const SERVE_CACHE_HITS: &str = "serve_cache_hits_total";
     pub const SERVE_CACHE_MISSES: &str = "serve_cache_misses_total";
+    pub const SERVE_DEADLINE_EXPIRED: &str = "serve_deadline_expired_total";
     pub const SERVE_FAILED_BATCHES: &str = "serve_failed_batches_total";
     pub const SERVE_GENERATION: &str = "serve_generation";
     pub const SERVE_QUEUE_DEPTH: &str = "serve_queue_depth";
     pub const SERVE_REJECTED: &str = "serve_rejected_total";
+    pub const SERVE_REQUEST_DEADLINE_SECONDS: &str = "serve_request_deadline_seconds";
+    pub const SERVE_REQUEST_FAILED_SECONDS: &str = "serve_request_failed_seconds";
+    pub const SERVE_REQUEST_OK_SECONDS: &str = "serve_request_ok_seconds";
+    pub const SERVE_REQUEST_REJECTED_SECONDS: &str = "serve_request_rejected_seconds";
     pub const SERVE_REQUESTS: &str = "serve_requests_total";
     pub const SERVE_SWAPS: &str = "serve_swaps_total";
     pub const SERVE_WAVE_SECONDS: &str = "serve_wave_seconds";
@@ -584,6 +596,48 @@ pub mod names {
 /// Every well-known metric, sorted by name. `docs/metrics.md` is
 /// generated from this table; `tests/obs.rs` pins the two together.
 pub const METRICS: &[MetricDef] = &[
+    MetricDef {
+        name: names::ADMIN_REQUESTS,
+        kind: MetricKind::Counter,
+        stage: "admin",
+        help: "HTTP requests answered by the admin endpoint, across all paths.",
+    },
+    MetricDef {
+        name: names::FLIGHT_DUMPS,
+        kind: MetricKind::Counter,
+        stage: "flight",
+        help: "Incident snapshots written by the flight recorder.",
+    },
+    MetricDef {
+        name: names::FLIGHT_RATE_LIMITED,
+        kind: MetricKind::Counter,
+        stage: "flight",
+        help: "Flight-recorder triggers suppressed by the rate limiter.",
+    },
+    MetricDef {
+        name: names::HEALTH_HEARTBEATS,
+        kind: MetricKind::Counter,
+        stage: "health",
+        help: "Lane heartbeats recorded by watchdogs, one per wave begin.",
+    },
+    MetricDef {
+        name: names::HEALTH_UNHEALTHY,
+        kind: MetricKind::Gauge,
+        stage: "health",
+        help: "1 while a watchdog reports unhealthy, 0 otherwise.",
+    },
+    MetricDef {
+        name: names::HEALTH_WATCHDOG_TRIPS,
+        kind: MetricKind::Counter,
+        stage: "health",
+        help: "Healthy-to-unhealthy watchdog transitions (wedged lane or stalled queue).",
+    },
+    MetricDef {
+        name: names::OBS_TRACE_DROPPED,
+        kind: MetricKind::Counter,
+        stage: "obs",
+        help: "Trace-ring events overwritten before export; nonzero means the Chrome trace is incomplete.",
+    },
     MetricDef {
         name: names::SAMPLER_RETRY_ATTEMPTS,
         kind: MetricKind::Counter,
@@ -633,6 +687,12 @@ pub const METRICS: &[MetricDef] = &[
         help: "Subgraph cache misses.",
     },
     MetricDef {
+        name: names::SERVE_DEADLINE_EXPIRED,
+        kind: MetricKind::Counter,
+        stage: "serve",
+        help: "Requests answered DeadlineExceeded; they never reach a model forward pass.",
+    },
+    MetricDef {
         name: names::SERVE_FAILED_BATCHES,
         kind: MetricKind::Counter,
         stage: "serve",
@@ -655,6 +715,30 @@ pub const METRICS: &[MetricDef] = &[
         kind: MetricKind::Counter,
         stage: "serve",
         help: "Requests rejected by admission control with Overloaded.",
+    },
+    MetricDef {
+        name: names::SERVE_REQUEST_DEADLINE_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "serve",
+        help: "End-to-end latency of requests answered DeadlineExceeded.",
+    },
+    MetricDef {
+        name: names::SERVE_REQUEST_FAILED_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "serve",
+        help: "End-to-end latency of requests answered with an execution error.",
+    },
+    MetricDef {
+        name: names::SERVE_REQUEST_OK_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "serve",
+        help: "End-to-end latency of successfully answered requests.",
+    },
+    MetricDef {
+        name: names::SERVE_REQUEST_REJECTED_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "serve",
+        help: "End-to-end latency of requests rejected by admission control.",
     },
     MetricDef {
         name: names::SERVE_REQUESTS,

@@ -26,6 +26,19 @@
 //!   `tfgnn train/serve-bench/loadgen --metrics-out/--trace-out` and
 //!   the `tfgnn stats` renderer ([`report`]).
 //!
+//! PR 9 adds the *live* half — introspection of a running server
+//! rather than end-of-run file dumps:
+//!
+//! * **[`admin`]** — an opt-in, std-only TCP admin endpoint
+//!   (`--admin-addr`) serving `/metrics`, `/metrics.json`, `/healthz`,
+//!   `/tracez` and `/statusz` over hand-rolled HTTP/1.0.
+//! * **[`health`]** — watchdog with per-lane heartbeats, wedged-lane
+//!   and queue-stall detection, and deadline-miss tracking; it is what
+//!   flips `/healthz` to 503.
+//! * **[`flight`]** — an incident flight recorder that dumps a
+//!   rate-limited metrics + trace snapshot to `--incident-dir` on
+//!   watchdog trips, overload bursts and failed batches.
+//!
 //! ## Inertness contract
 //!
 //! Observability must never perturb the oracles the rest of the crate
@@ -49,6 +62,9 @@
 //! covers it): poisoned locks are taken via `PoisonError::into_inner`,
 //! and no lookup ever unwraps.
 
+pub mod admin;
+pub mod flight;
+pub mod health;
 pub mod metrics;
 pub mod report;
 pub mod trace;

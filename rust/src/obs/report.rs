@@ -130,6 +130,80 @@ pub fn render_stats(snap: &MetricsSnapshot) -> String {
     out
 }
 
+/// Render the change between two exported snapshots (the body of
+/// `tfgnn stats --diff OLD.json NEW.json`). Counters and histograms
+/// show the `new - old` movement (unchanged entries elided); gauges
+/// show `old -> new` where the value changed. Metrics present only in
+/// the old export are skipped — a run-over-run diff cares about what
+/// the new run did.
+pub fn render_diff(old: &MetricsSnapshot, new: &MetricsSnapshot) -> String {
+    let delta = new.delta_since(old);
+    let mut out = String::new();
+
+    let mut counter_lines = Vec::new();
+    for (name, d) in &delta.counters {
+        if *d == 0 {
+            continue;
+        }
+        let prev = old.counters.get(name).copied().unwrap_or(0);
+        counter_lines.push(format!("  {name:<34} {prev} -> {} (+{d})", prev + d));
+    }
+    if !counter_lines.is_empty() {
+        out.push_str("counters:\n");
+        for line in counter_lines {
+            out.push_str(&line);
+            out.push('\n');
+        }
+    }
+
+    let mut gauge_lines = Vec::new();
+    for (name, v) in &new.gauges {
+        let prev = old.gauges.get(name).copied();
+        if prev != Some(*v) {
+            let shown = prev.map(|p| p.to_string()).unwrap_or_else(|| "-".to_string());
+            gauge_lines.push(format!("  {name:<34} {shown} -> {v}"));
+        }
+    }
+    if !gauge_lines.is_empty() {
+        out.push_str("gauges:\n");
+        for line in gauge_lines {
+            out.push_str(&line);
+            out.push('\n');
+        }
+    }
+
+    let mut hist_lines = Vec::new();
+    for (name, h) in &delta.histograms {
+        if h.count == 0 && h.nan_rejected == 0 {
+            continue;
+        }
+        let mut line = format!(
+            "  {name:<34} count=+{} mean={} p50<={} p95<={} p99<={}",
+            h.count,
+            fmt_seconds(h.mean_seconds()),
+            fmt_seconds(approx_percentile(h, 0.50)),
+            fmt_seconds(approx_percentile(h, 0.95)),
+            fmt_seconds(approx_percentile(h, 0.99)),
+        );
+        if h.nan_rejected > 0 {
+            line.push_str(&format!(" nan_rejected=+{}", h.nan_rejected));
+        }
+        hist_lines.push(line);
+    }
+    if !hist_lines.is_empty() {
+        out.push_str("histograms (delta window):\n");
+        for line in hist_lines {
+            out.push_str(&line);
+            out.push('\n');
+        }
+    }
+
+    if out.is_empty() {
+        out.push_str("(no differences)\n");
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,6 +240,29 @@ mod tests {
         assert!(text.contains("trainer:\n"));
         assert!(text.contains("serve_requests_total"));
         assert!(!text.contains("zero_total"), "zero counters are elided");
+    }
+
+    #[test]
+    fn diff_shows_only_movement() {
+        let mut old = MetricsSnapshot::default();
+        old.counters.insert("serve_requests_total".to_string(), 10);
+        old.counters.insert("serve_rejected_total".to_string(), 4);
+        old.gauges.insert("serve_queue_depth".to_string(), 2);
+        let mut new = old.clone();
+        new.counters.insert("serve_requests_total".to_string(), 25);
+        new.gauges.insert("serve_queue_depth".to_string(), 0);
+        let h = metrics::Histogram::detached();
+        h.record(1e-3);
+        new.histograms.insert("serve_wave_seconds".to_string(), h.snapshot());
+        let text = render_diff(&old, &new);
+        assert!(text.contains("serve_requests_total"), "{text}");
+        assert!(text.contains("10 -> 25 (+15)"), "{text}");
+        assert!(!text.contains("serve_rejected_total"), "unchanged counters elided: {text}");
+        assert!(text.contains("2 -> 0"), "{text}");
+        assert!(text.contains("serve_wave_seconds"), "{text}");
+        assert!(text.contains("count=+1"), "{text}");
+        // Identical snapshots diff to nothing.
+        assert_eq!(render_diff(&new, &new), "(no differences)\n");
     }
 
     #[test]

@@ -82,6 +82,10 @@ impl Ring {
             self.slots.push(ev);
             self.head = self.slots.len() % RING_CAP;
         } else if let Some(slot) = self.slots.get_mut(self.head) {
+            // Overwriting the oldest event: surface the loss in the
+            // registry so `tfgnn stats` can warn that the Chrome
+            // export is incomplete.
+            crate::obs_counter!(super::metrics::names::OBS_TRACE_DROPPED).inc();
             *slot = ev;
             self.head = (self.head + 1) % RING_CAP;
         }
@@ -186,6 +190,30 @@ pub fn drain() -> (Vec<Event>, u64) {
     (events, dropped)
 }
 
+/// Non-destructively copy every thread's buffered events, sorted by
+/// `(ts, tid)`, keeping only the `limit` most recent. Unlike
+/// [`drain`] the rings keep their contents, so a live scraper (the
+/// admin `/tracez` endpoint, the incident flight recorder) never
+/// steals events from a later `--trace-out` export. The second value
+/// is the cumulative overwrite tally across rings.
+pub fn snapshot(limit: usize) -> (Vec<Event>, u64) {
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    if let Some(rings) = RINGS.get() {
+        let g = rings.lock().unwrap_or_else(PoisonError::into_inner);
+        for ring in g.iter() {
+            let r = ring.lock().unwrap_or_else(PoisonError::into_inner);
+            dropped += r.total.saturating_sub(r.slots.len() as u64);
+            events.extend(r.slots.iter().cloned());
+        }
+    }
+    events.sort_by_key(|e| (e.ts_micros, e.tid));
+    if events.len() > limit {
+        events.drain(..events.len() - limit);
+    }
+    (events, dropped)
+}
+
 /// Render events as a Chrome `trace_event` JSON object document.
 pub fn to_chrome_json(events: &[Event], dropped: u64) -> Json {
     let trace_events: Vec<Json> = events
@@ -279,6 +307,25 @@ mod tests {
         assert_eq!(dropped, 10);
         // The oldest 10 were overwritten.
         assert!(!events.iter().any(|e| e.ts_micros < 10));
+    }
+
+    #[test]
+    fn snapshot_is_non_destructive_and_bounded() {
+        set_enabled(true);
+        for _ in 0..3 {
+            let _s = span("trace_unit/snapshot");
+        }
+        set_enabled(false);
+        let (snap, _) = snapshot(usize::MAX);
+        let seen = snap.iter().filter(|e| e.name == "trace_unit/snapshot").count();
+        assert!(seen >= 3, "snapshot sees buffered events (saw {seen})");
+        // Bounded snapshots keep the most recent events.
+        let (bounded, _) = snapshot(1);
+        assert!(bounded.len() <= 1);
+        // The rings still hold everything for a later drain.
+        let (drained, _) = drain();
+        let still = drained.iter().filter(|e| e.name == "trace_unit/snapshot").count();
+        assert!(still >= 3, "snapshot must not consume ring contents (saw {still})");
     }
 
     #[test]

@@ -45,6 +45,9 @@ pub struct LoadGenLevel {
     pub ok: usize,
     /// Requests rejected by admission control ([`Error::Overloaded`]).
     pub rejected: usize,
+    /// Requests answered [`Error::DeadlineExceeded`] (they never
+    /// reached a model forward pass).
+    pub deadline: usize,
     /// Requests that failed for any other reason.
     pub failed: usize,
     /// Wall-clock time for the whole level.
@@ -87,52 +90,55 @@ pub fn run(
         let clients = clients.max(1);
         let _span = crate::span!("loadgen/level", clients = clients);
         let n = cfg.requests_per_client.max(1);
-        let mut results: Vec<(Vec<f64>, usize, usize)> = Vec::new();
+        let mut results: Vec<(Vec<f64>, usize, usize, usize)> = Vec::new();
         let t0 = Instant::now();
         std::thread::scope(|s| {
             let mut workers = Vec::new();
             for c in 0..clients {
                 workers.push(s.spawn(move || {
                     let mut lat = Vec::with_capacity(n);
-                    let (mut rejected, mut failed) = (0usize, 0usize);
+                    let (mut rejected, mut deadline, mut failed) = (0usize, 0usize, 0usize);
                     for i in 0..n {
                         let seeds = &seed_lists[(c * n + i) % seed_lists.len()];
                         match handle.predict(seeds) {
                             Ok(r) => lat.push(r.latency.as_secs_f64()),
                             Err(Error::Overloaded(_)) => rejected += 1,
+                            Err(Error::DeadlineExceeded(_)) => deadline += 1,
                             Err(_) => failed += 1,
                         }
                     }
-                    (lat, rejected, failed)
+                    (lat, rejected, deadline, failed)
                 }));
             }
             for w in workers {
                 match w.join() {
                     Ok(r) => results.push(r),
                     // A panicked client counts its whole quota failed.
-                    Err(_) => results.push((Vec::new(), 0, n)),
+                    Err(_) => results.push((Vec::new(), 0, 0, n)),
                 }
             }
         });
         let elapsed = t0.elapsed();
         let mut lat: Vec<f64> = Vec::new();
-        let (mut rejected, mut failed) = (0usize, 0usize);
-        for (l, r, f) in results {
+        let (mut rejected, mut deadline, mut failed) = (0usize, 0usize, 0usize);
+        for (l, r, d, f) in results {
             lat.extend(l);
             rejected += r;
+            deadline += d;
             failed += f;
         }
         let ok = lat.len();
         if ok == 0 {
             return Err(Error::Runtime(format!(
                 "loadgen: no successful responses at concurrency {clients} \
-                 ({rejected} rejected, {failed} failed)"
+                 ({rejected} rejected, {deadline} deadline-expired, {failed} failed)"
             )));
         }
         levels.push(LoadGenLevel {
             concurrency: clients,
             ok,
             rejected,
+            deadline,
             failed,
             elapsed,
             throughput: ok as f64 / elapsed.as_secs_f64().max(1e-9),
@@ -224,7 +230,11 @@ mod tests {
         let report = run(&handle, &lists, &cfg).unwrap();
         assert_eq!(report.levels.len(), 2);
         for level in &report.levels {
-            assert_eq!(level.ok + level.rejected + level.failed, level.concurrency * 4);
+            assert_eq!(
+                level.ok + level.rejected + level.deadline + level.failed,
+                level.concurrency * 4,
+                "every request has exactly one outcome"
+            );
             assert!(level.throughput > 0.0);
             assert!(level.latency.p50 > 0.0);
             assert!(level.latency.p99 >= level.latency.p50);

@@ -44,25 +44,48 @@
 //!   after shutdown returns a structured error instead of hanging;
 //! * determinism — each individual response is bit-identical at any
 //!   lane count, with caching on or off.
+//!
+//! ## Live introspection and deadlines
+//!
+//! Every server owns a [`crate::obs::health::Watchdog`]: lanes
+//! heartbeat per wave, and a wedged lane or a stalled non-empty queue
+//! flips the health verdict (served as 200/503 on `/healthz`). Three
+//! opt-in [`ServeConfig`] knobs complete the live story:
+//! `admin_addr` starts a [`crate::obs::admin::AdminServer`]
+//! (`/metrics`, `/metrics.json`, `/healthz`, `/tracez`, `/statusz`),
+//! `incident_dir` arms a [`crate::obs::flight::FlightRecorder`]
+//! (watchdog trips, overload bursts and failed batches dump
+//! rate-limited metrics + trace snapshots), and `default_deadline_ms`
+//! (or [`ServerHandle::submit_with_deadline`] per request) bounds how
+//! long a request may wait: an expired request is answered with a
+//! structured [`Error::DeadlineExceeded`] — counted in
+//! `serve_deadline_expired_total` — and never reaches a model forward
+//! pass. All of it obeys the observability inertness contract: admin
+//! off by default, and a concurrent scraper never changes served bits
+//! (pinned by `tests/admin_live.rs`).
 
 pub mod batcher;
 pub mod cache;
 pub mod loadgen;
 pub mod swap;
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::graph::pad::{fit_or_skip, PadSpec};
 use crate::graph::GraphTensor;
+use crate::obs::admin::{AdminServer, AdminState};
+use crate::obs::flight::FlightRecorder;
+use crate::obs::health::{HealthReport, Watchdog};
 use crate::runtime::batch::{build_batch, is_batch_slot, RootTask};
 use crate::runtime::manifest::ModelEntry;
 use crate::runtime::{host_to_literal, literal_to_host, HostTensor, Program, Runtime};
 use crate::sampler::inmem::InMemorySampler;
 use crate::sampler::SamplerConfig;
 use crate::train::native::NativeModel;
+use crate::util::json::{obj, Json};
 use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
 
@@ -88,6 +111,9 @@ pub struct Response {
 struct Request {
     seed: u32,
     submitted: Instant,
+    /// Absolute expiry; a lane answers `DeadlineExceeded` instead of
+    /// executing once this passes.
+    deadline: Option<Instant>,
     reply: Sender<Result<Response>>,
 }
 
@@ -117,6 +143,33 @@ pub struct ServeConfig {
     /// wave concurrently on a pool it owns (spawned once at startup).
     /// Results are bit-for-bit those of serial sampling.
     pub sampler: SamplerConfig,
+    /// Default request deadline in milliseconds (0 = no deadline). A
+    /// request whose deadline passes before a lane executes it is
+    /// answered [`Error::DeadlineExceeded`] — counted in
+    /// `serve_deadline_expired_total`, never run through the model.
+    /// `submit_with_deadline` overrides this per request.
+    pub default_deadline_ms: u64,
+    /// Opt-in live admin endpoint bind address (the `--admin-addr`
+    /// flag), e.g. `127.0.0.1:9100`; port 0 picks an ephemeral port
+    /// (read it back via `admin_addr()` on the handle). `None` — the
+    /// default — starts no listener at all.
+    pub admin_addr: Option<String>,
+    /// Incident flight-recorder directory (the `--incident-dir`
+    /// flag): watchdog trips, overload bursts and failed batches dump
+    /// rate-limited metrics + trace snapshots here. `None` disables.
+    pub incident_dir: Option<std::path::PathBuf>,
+    /// Watchdog threshold: a lane stuck mid-wave longer than this, or
+    /// a non-empty queue with no lane progress for this long, flips
+    /// `/healthz` to 503.
+    pub watchdog_threshold: Duration,
+    /// Human-readable configuration label surfaced in `/statusz`
+    /// (the CLI sets it to a summary of the invocation).
+    pub config_label: Option<String>,
+    /// TEST HOOK: the named lane sleeps this long at the start of
+    /// every wave it picks up, making wedged-lane detection and
+    /// in-queue deadline expiry deterministic in tests. Always `None`
+    /// in production configurations.
+    pub debug_stall: Option<(usize, Duration)>,
 }
 
 impl Default for ServeConfig {
@@ -129,6 +182,12 @@ impl Default for ServeConfig {
             cache_capacity: 0,
             wave_delay: Duration::ZERO,
             sampler: SamplerConfig::default(),
+            default_deadline_ms: 0,
+            admin_addr: None,
+            incident_dir: None,
+            watchdog_threshold: Duration::from_secs(1),
+            config_label: None,
+            debug_stall: None,
         }
     }
 }
@@ -152,6 +211,11 @@ pub struct ServeStats {
     cache_misses: AtomicU64,
     cache_evictions: AtomicU64,
     swaps: AtomicU64,
+    deadline_expired: AtomicU64,
+    /// Requests admitted but not yet replied to, on *this* server (the
+    /// process-global `serve_queue_depth` gauge aggregates across
+    /// servers, which the depth-regression test cannot key on).
+    depth: AtomicI64,
 }
 
 /// Plain-data view of [`ServeStats`] at one point in time.
@@ -176,6 +240,13 @@ pub struct ServeStatsSnapshot {
     pub cache_evictions: u64,
     /// Successful model hot-swaps.
     pub swaps: u64,
+    /// Requests answered [`Error::DeadlineExceeded`]; they never
+    /// reached a model forward pass.
+    pub deadline_expired: u64,
+    /// Requests admitted but not yet replied to on this server. Zero
+    /// at quiescence: every admitted request — served, failed or
+    /// expired — is replied exactly once.
+    pub queue_depth: i64,
 }
 
 impl ServeStatsSnapshot {
@@ -199,7 +270,30 @@ impl ServeStats {
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
             swaps: self.swaps.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            queue_depth: self.depth.load(Ordering::Relaxed),
         }
+    }
+
+    /// One request admitted into the queue: +1 on this server's depth
+    /// and the global gauge.
+    fn admitted(&self) {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        queue_depth().add(1);
+    }
+
+    /// `n` admitted requests replied (served, failed or expired): the
+    /// exact inverse of [`admitted`](Self::admitted).
+    fn replied(&self, n: usize) {
+        let n = n as i64;
+        self.depth.fetch_sub(n, Ordering::Relaxed);
+        queue_depth().sub(n);
+    }
+
+    /// One request expired before execution.
+    fn deadline_miss(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!(crate::obs::metrics::names::SERVE_DEADLINE_EXPIRED).inc();
     }
 
     fn wave_start(&self, size: u64) {
@@ -248,11 +342,305 @@ impl ServeStats {
     }
 }
 
-/// Queue-depth gauge: +1 per admitted request, -1 per reply. The lanes
-/// drain the queue on shutdown, so the gauge returns to zero for every
-/// request that was ever admitted.
+/// Process-global queue-depth gauge: +1 per admitted request, -1 per
+/// reply. The lanes drain the queue on shutdown, so the gauge returns
+/// to zero for every request that was ever admitted. Mirrored by the
+/// per-server `ServeStats::depth` (see [`ServeStatsSnapshot::queue_depth`]).
 fn queue_depth() -> &'static crate::obs::metrics::Gauge {
     crate::obs_gauge!(crate::obs::metrics::names::SERVE_QUEUE_DEPTH)
+}
+
+/// Request outcome classes for the end-to-end latency histograms.
+#[derive(Clone, Copy)]
+enum Outcome {
+    Ok,
+    Rejected,
+    Deadline,
+    Failed,
+}
+
+fn outcome_histogram(outcome: Outcome) -> &'static crate::obs::metrics::Histogram {
+    use crate::obs::metrics::names;
+    match outcome {
+        Outcome::Ok => crate::obs_histogram!(names::SERVE_REQUEST_OK_SECONDS),
+        Outcome::Rejected => crate::obs_histogram!(names::SERVE_REQUEST_REJECTED_SECONDS),
+        Outcome::Deadline => crate::obs_histogram!(names::SERVE_REQUEST_DEADLINE_SECONDS),
+        Outcome::Failed => crate::obs_histogram!(names::SERVE_REQUEST_FAILED_SECONDS),
+    }
+}
+
+/// Record a request's end-to-end latency keyed by outcome. Gated on
+/// `recording()` before the clock read (histograms are off-by-default
+/// per the inertness contract).
+fn record_outcome(outcome: Outcome, submitted: Instant) {
+    if crate::obs::recording() {
+        outcome_histogram(outcome).record(submitted.elapsed().as_secs_f64());
+    }
+}
+
+/// Like [`record_outcome`] but for paths that already computed the
+/// latency for the response itself.
+fn record_outcome_latency(outcome: Outcome, latency: Duration) {
+    if crate::obs::recording() {
+        outcome_histogram(outcome).record(latency.as_secs_f64());
+    }
+}
+
+/// Answer one deadline-expired request: bump the counters, the
+/// watchdog's miss tally and the deadline-outcome histogram, then
+/// reply a structured [`Error::DeadlineExceeded`]. Depth bookkeeping
+/// stays at the call site — submit-time expiries were never admitted.
+fn reply_deadline<T>(
+    reply: &Sender<Result<T>>,
+    submitted: Instant,
+    stats: &ServeStats,
+    watchdog: &Watchdog,
+    place: &str,
+) {
+    stats.deadline_miss();
+    watchdog.note_deadline_miss();
+    record_outcome(Outcome::Deadline, submitted);
+    let _ = reply.send(Err(Error::DeadlineExceeded(format!(
+        "deadline passed after {}ms {place}; the request was never executed",
+        submitted.elapsed().as_millis()
+    ))));
+}
+
+/// Partition a popped logits wave: every request whose deadline has
+/// already passed is answered `DeadlineExceeded` (counted, depth -1 —
+/// it never reaches the model); the still-live remainder is returned.
+/// A wave with no deadlines set costs one iterator scan and no clock
+/// read.
+fn expire_overdue_logits(
+    wave: Vec<Request>,
+    stats: &ServeStats,
+    watchdog: &Watchdog,
+) -> Vec<Request> {
+    if wave.iter().all(|r| r.deadline.is_none()) {
+        return wave;
+    }
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(wave.len());
+    for req in wave {
+        if req.deadline.is_some_and(|d| now >= d) {
+            stats.replied(1);
+            reply_deadline(&req.reply, req.submitted, stats, watchdog, "in queue");
+        } else {
+            live.push(req);
+        }
+    }
+    live
+}
+
+/// Task-server twin of [`expire_overdue_logits`].
+fn expire_overdue_task(
+    wave: Vec<TaskRequest>,
+    stats: &ServeStats,
+    watchdog: &Watchdog,
+) -> Vec<TaskRequest> {
+    if wave.iter().all(|r| r.deadline.is_none()) {
+        return wave;
+    }
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(wave.len());
+    for req in wave {
+        if req.deadline.is_some_and(|d| now >= d) {
+            stats.replied(1);
+            reply_deadline(&req.reply, req.submitted, stats, watchdog, "in queue");
+        } else {
+            live.push(req);
+        }
+    }
+    live
+}
+
+/// The live-introspection pieces one server owns: the watchdog is
+/// always there (lanes heartbeat through it); admin endpoint, flight
+/// recorder and the background checker thread are opt-in via
+/// [`ServeConfig`].
+struct Introspection {
+    watchdog: Arc<Watchdog>,
+    admin: Option<AdminServer>,
+    flight: Option<Arc<FlightRecorder>>,
+    checker: Option<Checker>,
+}
+
+/// Background watchdog-evaluation thread; owns the trip→flight and
+/// overload→flight hooks so incidents are captured even when nobody
+/// polls `/healthz`.
+struct Checker {
+    stop: Arc<AtomicBool>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Checker {
+    /// Stop and join; idempotent (`shutdown()` + `Drop` both call it).
+    fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let mut g = match self.thread.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if let Some(h) = g.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Watchdog evaluation cadence: a fraction of the threshold so trips
+/// are detected promptly, clamped so shutdown join latency and idle
+/// wakeups both stay bounded.
+fn checker_interval(threshold: Duration) -> Duration {
+    (threshold / 4).clamp(Duration::from_millis(10), Duration::from_millis(250))
+}
+
+fn spawn_checker(
+    watchdog: Arc<Watchdog>,
+    stats: Arc<ServeStats>,
+    flight: Option<Arc<FlightRecorder>>,
+    threshold: Duration,
+) -> Checker {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let interval = checker_interval(threshold);
+    let thread = std::thread::Builder::new()
+        .name("tfgnn-watchdog".to_string())
+        .spawn(move || {
+            let mut last_rejected = stats.snapshot().rejected;
+            while !stop2.load(Ordering::SeqCst) {
+                std::thread::sleep(interval);
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let snap = stats.snapshot();
+                let (report, tripped) = watchdog.evaluate(snap.queue_depth);
+                if let Some(f) = &flight {
+                    if tripped {
+                        f.record("watchdog-trip", &report.reasons.join("; "));
+                    }
+                    if snap.rejected > last_rejected {
+                        f.record(
+                            "overload",
+                            &format!(
+                                "{} requests rejected by admission control since \
+                                 the last watchdog tick",
+                                snap.rejected - last_rejected
+                            ),
+                        );
+                    }
+                }
+                last_rejected = snap.rejected;
+            }
+        });
+    match thread {
+        Ok(h) => Checker { stop, thread: Mutex::new(Some(h)) },
+        // Spawn failure (resource exhaustion): serve without the
+        // checker rather than failing the server.
+        Err(_) => Checker { stop, thread: Mutex::new(None) },
+    }
+}
+
+fn status_closure(
+    cfg: &ServeConfig,
+    lanes: usize,
+    stats: &Arc<ServeStats>,
+    watchdog: &Arc<Watchdog>,
+    generation: &Arc<dyn Fn() -> u64 + Send + Sync>,
+) -> Arc<dyn Fn() -> Json + Send + Sync> {
+    let start = Instant::now();
+    let stats = Arc::clone(stats);
+    let watchdog = Arc::clone(watchdog);
+    let generation = Arc::clone(generation);
+    let label = cfg.config_label.clone();
+    let queue_capacity = cfg.queue_capacity;
+    let deadline_ms = cfg.default_deadline_ms;
+    Arc::new(move || {
+        let snap = stats.snapshot();
+        let report = watchdog.check(snap.queue_depth);
+        let int = |v: u64| Json::Int(i64::try_from(v).unwrap_or(i64::MAX));
+        obj(vec![
+            ("schema", Json::Str("tfgnn_statusz_v1".to_string())),
+            ("uptime_secs", Json::Num(start.elapsed().as_secs_f64())),
+            ("config", label.clone().map(Json::Str).unwrap_or(Json::Null)),
+            ("generation", int(generation())),
+            ("lanes", int(lanes as u64)),
+            ("queue_capacity", int(queue_capacity as u64)),
+            ("queue_depth", Json::Int(snap.queue_depth)),
+            ("default_deadline_ms", int(deadline_ms)),
+            ("requests", int(snap.requests)),
+            ("batches", int(snap.batches)),
+            ("failed_batches", int(snap.failed_batches)),
+            ("rejected", int(snap.rejected)),
+            ("deadline_expired", int(snap.deadline_expired)),
+            ("cache_hits", int(snap.cache_hits)),
+            ("cache_misses", int(snap.cache_misses)),
+            ("swaps", int(snap.swaps)),
+            ("healthy", Json::Bool(report.healthy)),
+            ("watchdog_trips", int(report.trips)),
+            ("deadline_misses", int(report.deadline_misses)),
+        ])
+    })
+}
+
+/// Start the live-introspection pieces for one server: the watchdog
+/// (always), the admin endpoint (`cfg.admin_addr`), the flight
+/// recorder (`cfg.incident_dir`), and — whenever either of the latter
+/// is on — a checker thread that periodically evaluates the watchdog
+/// (so trips are counted even when nobody polls `/healthz`) and
+/// triggers flight dumps on trips and overload bursts.
+fn start_introspection(
+    cfg: &ServeConfig,
+    lanes: usize,
+    stats: &Arc<ServeStats>,
+    generation: Arc<dyn Fn() -> u64 + Send + Sync>,
+) -> Result<Introspection> {
+    let watchdog = Arc::new(Watchdog::new(cfg.watchdog_threshold));
+    crate::obs_gauge!(crate::obs::metrics::names::SERVE_GENERATION)
+        .set(i64::try_from(generation()).unwrap_or(i64::MAX));
+    let flight = match &cfg.incident_dir {
+        Some(dir) => Some(Arc::new(FlightRecorder::new(dir)?)),
+        None => None,
+    };
+    let admin = match &cfg.admin_addr {
+        Some(addr) => {
+            let healthz: Arc<dyn Fn() -> HealthReport + Send + Sync> = {
+                let watchdog = Arc::clone(&watchdog);
+                let stats = Arc::clone(stats);
+                Arc::new(move || watchdog.check(stats.snapshot().queue_depth))
+            };
+            let statusz = status_closure(cfg, lanes, stats, &watchdog, &generation);
+            Some(AdminServer::start(addr, AdminState { healthz, statusz })?)
+        }
+        None => None,
+    };
+    let checker = if admin.is_some() || flight.is_some() {
+        Some(spawn_checker(
+            Arc::clone(&watchdog),
+            Arc::clone(stats),
+            flight.clone(),
+            cfg.watchdog_threshold,
+        ))
+    } else {
+        None
+    };
+    Ok(Introspection { watchdog, admin, flight, checker })
+}
+
+/// Which lane (if any) should inject the configured test stall.
+fn stall_for_lane(cfg: &ServeConfig, lane: usize) -> Option<Duration> {
+    match cfg.debug_stall {
+        Some((l, d)) if l == lane => Some(d),
+        _ => None,
+    }
+}
+
+/// The configured default deadline as a `Duration` (0 ms = none).
+fn default_deadline(cfg: &ServeConfig) -> Option<Duration> {
+    if cfg.default_deadline_ms > 0 {
+        Some(Duration::from_millis(cfg.default_deadline_ms))
+    } else {
+        None
+    }
 }
 
 /// Client handle: submit requests, then [`shutdown`](Self::shutdown).
@@ -267,6 +655,12 @@ pub struct ServerHandle {
     /// The swappable model slot (`None` on the AOT backend, whose
     /// params are uploaded to the device once at startup).
     slot: Option<Arc<ModelSlot>>,
+    default_deadline: Option<Duration>,
+    watchdog: Arc<Watchdog>,
+    admin: Option<AdminServer>,
+    #[allow(dead_code)]
+    flight: Option<Arc<FlightRecorder>>,
+    checker: Option<Checker>,
 }
 
 impl ServerHandle {
@@ -276,12 +670,34 @@ impl ServerHandle {
     /// structured runtime error after shutdown — the caller's `recv`
     /// always gets an answer, it never hangs on a dead channel.
     pub fn submit(&self, seed: u32) -> Receiver<Result<Response>> {
+        self.submit_with_deadline(seed, None)
+    }
+
+    /// [`submit`](Self::submit) with a per-request deadline override
+    /// (`None` falls back to `ServeConfig::default_deadline_ms`). A
+    /// request whose budget runs out before a lane executes it is
+    /// answered [`Error::DeadlineExceeded`]; `Duration::ZERO` expires
+    /// deterministically at admission, without ever being queued.
+    pub fn submit_with_deadline(
+        &self,
+        seed: u32,
+        deadline: Option<Duration>,
+    ) -> Receiver<Result<Response>> {
+        let submitted = Instant::now();
+        let deadline = deadline.or(self.default_deadline).map(|d| submitted + d);
         let (reply_tx, reply_rx) = channel();
-        let req = Request { seed, submitted: Instant::now(), reply: reply_tx };
+        let req = Request { seed, submitted, deadline, reply: reply_tx };
+        if req.deadline.is_some_and(|d| Instant::now() >= d) {
+            // Dead on arrival: answered without ever being admitted,
+            // so no depth bookkeeping.
+            reply_deadline(&req.reply, req.submitted, &self.stats, &self.watchdog, "at admission");
+            return reply_rx;
+        }
         match self.queue.push(req) {
-            Ok(()) => queue_depth().add(1),
+            Ok(()) => self.stats.admitted(),
             Err(PushError::Full(req)) => {
                 self.stats.rejected();
+                record_outcome(Outcome::Rejected, req.submitted);
                 let _ = req.reply.send(Err(Error::Overloaded(format!(
                     "serving queue full ({} pending); retry with backoff",
                     self.queue.capacity()
@@ -309,6 +725,24 @@ impl ServerHandle {
     /// structured error.
     pub fn shutdown(&self) {
         close_and_join(&self.queue, &self.lanes);
+        if let Some(c) = &self.checker {
+            c.stop();
+        }
+        if let Some(a) = &self.admin {
+            a.stop();
+        }
+    }
+
+    /// The admin endpoint's actually-bound address, when one was
+    /// configured (`None` otherwise). Resolves port 0.
+    pub fn admin_addr(&self) -> Option<std::net::SocketAddr> {
+        self.admin.as_ref().map(|a| a.local_addr())
+    }
+
+    /// Point-in-time watchdog verdict — the same report `/healthz`
+    /// serves, available without an admin endpoint.
+    pub fn health(&self) -> HealthReport {
+        self.watchdog.check(self.stats.snapshot().queue_depth)
     }
 
     /// Hot-swap the served model (native backends only). In-flight
@@ -348,7 +782,7 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        close_and_join(&self.queue, &self.lanes);
+        self.shutdown();
     }
 }
 
@@ -370,25 +804,31 @@ fn close_and_join<T>(
 }
 
 /// Fan one executed logits wave back out to its requesters (or fan the
-/// wave's error to every request), updating failure counters.
+/// wave's error to every request), updating failure counters, outcome
+/// histograms and — when armed — the incident flight recorder.
 fn reply_logits_wave(
     wave: Vec<Request>,
     result: Result<(Vec<f32>, usize)>,
     generation: u64,
     stats: &ServeStats,
+    flight: Option<&Arc<FlightRecorder>>,
 ) {
     let batch_size = wave.len();
     match result {
         Ok((flat, classes)) => {
             let has_all_rows = flat.len() >= batch_size * classes && classes > 0;
             if !has_all_rows {
-                queue_depth().sub(batch_size as i64);
+                stats.replied(batch_size);
                 stats.wave_failed();
                 let msg = format!(
                     "executor returned {} logits for {batch_size} requests x {classes} classes",
                     flat.len()
                 );
+                if let Some(f) = flight {
+                    f.record("failed-batch", &msg);
+                }
                 for req in wave {
+                    record_outcome(Outcome::Failed, req.submitted);
                     let _ = req.reply.send(Err(Error::Runtime(msg.clone())));
                 }
                 return;
@@ -401,11 +841,13 @@ fn reply_logits_wave(
                     .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
                     .unwrap_or(0);
+                let latency = req.submitted.elapsed();
+                record_outcome_latency(Outcome::Ok, latency);
                 let resp = Response {
                     seed: req.seed,
                     predicted,
                     logits: row,
-                    latency: req.submitted.elapsed(),
+                    latency,
                     batch_size,
                     generation,
                 };
@@ -415,12 +857,16 @@ fn reply_logits_wave(
         Err(e) => {
             stats.wave_failed();
             let msg = e.to_string();
+            if let Some(f) = flight {
+                f.record("failed-batch", &msg);
+            }
             for req in wave {
+                record_outcome(Outcome::Failed, req.submitted);
                 let _ = req.reply.send(Err(Error::Runtime(msg.clone())));
             }
         }
     }
-    queue_depth().sub(batch_size as i64);
+    stats.replied(batch_size);
 }
 
 /// Build and start the AOT server.
@@ -444,6 +890,12 @@ pub fn serve(
     let dir = artifacts_dir.to_path_buf();
     let stats = Arc::new(ServeStats::default());
     let queue: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+    // AOT generation is pinned at 1 (no hot-swap slot).
+    let intro = start_introspection(&cfg, 1, &stats, Arc::new(|| 1))?;
+    let beat = intro.watchdog.register_lane(0);
+    let watchdog_w = Arc::clone(&intro.watchdog);
+    let flight_w = intro.flight.clone();
+    let stall = stall_for_lane(&cfg, 0);
     let (ready_tx, ready_rx) = channel::<Result<()>>();
     let stats_w = Arc::clone(&stats);
     let queue_w = Arc::clone(&queue);
@@ -491,26 +943,34 @@ pub fn serve(
                         None
                     };
                     lane_loop(&queue_w, max_batch, max_wait, |wave| {
-                        let _wave_span = crate::span!("serve/wave", size = wave.len());
-                        let _wave_timer = crate::obs::timed(crate::obs_histogram!(
-                            crate::obs::metrics::names::SERVE_WAVE_SECONDS
-                        ));
-                        stats_w.wave_start(wave.len() as u64);
-                        if !wave_delay.is_zero() {
-                            std::thread::sleep(wave_delay);
+                        beat.begin();
+                        if let Some(d) = stall {
+                            std::thread::sleep(d);
                         }
-                        let seeds: Vec<u32> = wave.iter().map(|r| r.seed).collect();
-                        let result = execute_wave(
-                            &rt,
-                            &forward,
-                            &param_bufs,
-                            &sampler,
-                            pool.as_ref(),
-                            &pad,
-                            &task,
-                            &seeds,
-                        );
-                        reply_logits_wave(wave, result, 1, &stats_w);
+                        let wave = expire_overdue_logits(wave, &stats_w, &watchdog_w);
+                        if !wave.is_empty() {
+                            let _wave_span = crate::span!("serve/wave", size = wave.len());
+                            let _wave_timer = crate::obs::timed(crate::obs_histogram!(
+                                crate::obs::metrics::names::SERVE_WAVE_SECONDS
+                            ));
+                            stats_w.wave_start(wave.len() as u64);
+                            if !wave_delay.is_zero() {
+                                std::thread::sleep(wave_delay);
+                            }
+                            let seeds: Vec<u32> = wave.iter().map(|r| r.seed).collect();
+                            let result = execute_wave(
+                                &rt,
+                                &forward,
+                                &param_bufs,
+                                &sampler,
+                                pool.as_ref(),
+                                &pad,
+                                &task,
+                                &seeds,
+                            );
+                            reply_logits_wave(wave, result, 1, &stats_w, flight_w.as_ref());
+                        }
+                        beat.end();
                     });
                 }
                 Err(e) => {
@@ -521,7 +981,17 @@ pub fn serve(
     ready_rx
         .recv()
         .map_err(|_| Error::Runtime("server thread died during startup".into()))??;
-    Ok(ServerHandle { queue, lanes: Mutex::new(vec![worker]), stats, slot: None })
+    Ok(ServerHandle {
+        queue,
+        lanes: Mutex::new(vec![worker]),
+        stats,
+        slot: None,
+        default_deadline: default_deadline(&cfg),
+        watchdog: intro.watchdog,
+        admin: intro.admin,
+        flight: intro.flight,
+        checker: intro.checker,
+    })
 }
 
 /// Start a server over the pure-Rust native model — no AOT artifacts,
@@ -545,6 +1015,11 @@ pub fn serve_native(
     let stats = Arc::new(ServeStats::default());
     let queue: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(cfg.queue_capacity));
     let slot = Arc::new(ModelSlot::new(model));
+    let generation: Arc<dyn Fn() -> u64 + Send + Sync> = {
+        let slot = Arc::clone(&slot);
+        Arc::new(move || slot.generation())
+    };
+    let intro = start_introspection(&cfg, cfg.lanes.max(1), &stats, generation)?;
     let mut lanes = Vec::new();
     for lane in 0..cfg.lanes.max(1) {
         let queue = Arc::clone(&queue);
@@ -554,6 +1029,10 @@ pub fn serve_native(
         let task = task.clone();
         let sampler_cfg = cfg.sampler.clone();
         let (max_batch, max_wait, wave_delay) = (cfg.max_batch, cfg.max_wait, cfg.wave_delay);
+        let beat = intro.watchdog.register_lane(lane);
+        let watchdog = Arc::clone(&intro.watchdog);
+        let flight = intro.flight.clone();
+        let stall = stall_for_lane(&cfg, lane);
         lanes.push(
             std::thread::Builder::new()
                 .name(format!("tfgnn-serve-native-{lane}"))
@@ -564,6 +1043,15 @@ pub fn serve_native(
                         None
                     };
                     lane_loop(&queue, max_batch, max_wait, |wave| {
+                        beat.begin();
+                        if let Some(d) = stall {
+                            std::thread::sleep(d);
+                        }
+                        let wave = expire_overdue_logits(wave, &stats, &watchdog);
+                        if wave.is_empty() {
+                            beat.end();
+                            return;
+                        }
                         let _wave_span = crate::span!("serve/wave", size = wave.len());
                         let _wave_timer = crate::obs::timed(crate::obs_histogram!(
                             crate::obs::metrics::names::SERVE_WAVE_SECONDS
@@ -592,12 +1080,23 @@ pub fn serve_native(
                             }
                             Ok((flat, num_classes))
                         })();
-                        reply_logits_wave(wave, result, vm.generation, &stats);
+                        reply_logits_wave(wave, result, vm.generation, &stats, flight.as_ref());
+                        beat.end();
                     });
                 })?,
         );
     }
-    Ok(ServerHandle { queue, lanes: Mutex::new(lanes), stats, slot: Some(slot) })
+    Ok(ServerHandle {
+        queue,
+        lanes: Mutex::new(lanes),
+        stats,
+        slot: Some(slot),
+        default_deadline: default_deadline(&cfg),
+        watchdog: intro.watchdog,
+        admin: intro.admin,
+        flight: intro.flight,
+        checker: intro.checker,
+    })
 }
 
 /// A completed task-shaped prediction (see [`serve_task`]).
@@ -619,17 +1118,26 @@ pub struct TaskResponse {
 struct TaskRequest {
     seeds: Vec<u32>,
     submitted: Instant,
+    /// Absolute expiry; a lane answers `DeadlineExceeded` instead of
+    /// executing once this passes.
+    deadline: Option<Instant>,
     reply: Sender<Result<TaskResponse>>,
 }
 
 /// Client handle for a task server: submit seed lists, then
-/// [`shutdown`](Self::shutdown). Same admission, draining and hot-swap
-/// contracts as [`ServerHandle`].
+/// [`shutdown`](Self::shutdown). Same admission, draining, deadline,
+/// introspection and hot-swap contracts as [`ServerHandle`].
 pub struct TaskServerHandle {
     queue: Arc<BoundedQueue<TaskRequest>>,
     lanes: Mutex<Vec<std::thread::JoinHandle<()>>>,
     pub stats: Arc<ServeStats>,
     slot: Arc<ModelSlot>,
+    default_deadline: Option<Duration>,
+    watchdog: Arc<Watchdog>,
+    admin: Option<AdminServer>,
+    #[allow(dead_code)]
+    flight: Option<Arc<FlightRecorder>>,
+    checker: Option<Checker>,
 }
 
 impl TaskServerHandle {
@@ -638,12 +1146,31 @@ impl TaskServerHandle {
     /// shut-down server replies a structured runtime error — `recv`
     /// never hangs on a dead channel.
     pub fn submit(&self, seeds: Vec<u32>) -> Receiver<Result<TaskResponse>> {
+        self.submit_with_deadline(seeds, None)
+    }
+
+    /// [`submit`](Self::submit) with a per-request deadline override;
+    /// see [`ServerHandle::submit_with_deadline`].
+    pub fn submit_with_deadline(
+        &self,
+        seeds: Vec<u32>,
+        deadline: Option<Duration>,
+    ) -> Receiver<Result<TaskResponse>> {
+        let submitted = Instant::now();
+        let deadline = deadline.or(self.default_deadline).map(|d| submitted + d);
         let (reply_tx, reply_rx) = channel();
-        let req = TaskRequest { seeds, submitted: Instant::now(), reply: reply_tx };
+        let req = TaskRequest { seeds, submitted, deadline, reply: reply_tx };
+        if req.deadline.is_some_and(|d| Instant::now() >= d) {
+            // Dead on arrival: answered without ever being admitted,
+            // so no depth bookkeeping.
+            reply_deadline(&req.reply, req.submitted, &self.stats, &self.watchdog, "at admission");
+            return reply_rx;
+        }
         match self.queue.push(req) {
-            Ok(()) => queue_depth().add(1),
+            Ok(()) => self.stats.admitted(),
             Err(PushError::Full(req)) => {
                 self.stats.rejected();
+                record_outcome(Outcome::Rejected, req.submitted);
                 let _ = req.reply.send(Err(Error::Overloaded(format!(
                     "serving queue full ({} pending); retry with backoff",
                     self.queue.capacity()
@@ -669,6 +1196,24 @@ impl TaskServerHandle {
     /// requests are still answered. Idempotent.
     pub fn shutdown(&self) {
         close_and_join(&self.queue, &self.lanes);
+        if let Some(c) = &self.checker {
+            c.stop();
+        }
+        if let Some(a) = &self.admin {
+            a.stop();
+        }
+    }
+
+    /// The admin endpoint's actually-bound address, when one was
+    /// configured (`None` otherwise). Resolves port 0.
+    pub fn admin_addr(&self) -> Option<std::net::SocketAddr> {
+        self.admin.as_ref().map(|a| a.local_addr())
+    }
+
+    /// Point-in-time watchdog verdict — the same report `/healthz`
+    /// serves, available without an admin endpoint.
+    pub fn health(&self) -> HealthReport {
+        self.watchdog.check(self.stats.snapshot().queue_depth)
     }
 
     /// Hot-swap the served model; see [`ServerHandle::swap_model`].
@@ -693,7 +1238,7 @@ impl TaskServerHandle {
 
 impl Drop for TaskServerHandle {
     fn drop(&mut self) {
-        close_and_join(&self.queue, &self.lanes);
+        self.shutdown();
     }
 }
 
@@ -718,6 +1263,11 @@ pub fn serve_task(
     let stats = Arc::new(ServeStats::default());
     let queue: Arc<BoundedQueue<TaskRequest>> = Arc::new(BoundedQueue::new(cfg.queue_capacity));
     let slot = Arc::new(ModelSlot::new(model));
+    let generation: Arc<dyn Fn() -> u64 + Send + Sync> = {
+        let slot = Arc::clone(&slot);
+        Arc::new(move || slot.generation())
+    };
+    let intro = start_introspection(&cfg, cfg.lanes.max(1), &stats, generation)?;
     // The subgraph cache is shared by all lanes (it is seed-keyed and
     // model-independent, so it survives hot-swaps too).
     let cache: Arc<LruCache<Vec<u32>, Arc<GraphTensor>>> =
@@ -732,6 +1282,10 @@ pub fn serve_task(
         let cache = Arc::clone(&cache);
         let sampler_cfg = cfg.sampler.clone();
         let (max_batch, max_wait, wave_delay) = (cfg.max_batch, cfg.max_wait, cfg.wave_delay);
+        let beat = intro.watchdog.register_lane(lane);
+        let watchdog = Arc::clone(&intro.watchdog);
+        let flight = intro.flight.clone();
+        let stall = stall_for_lane(&cfg, lane);
         lanes.push(
             std::thread::Builder::new()
                 .name(format!("tfgnn-serve-task-{lane}"))
@@ -742,21 +1296,40 @@ pub fn serve_task(
                         None
                     };
                     lane_loop(&queue, max_batch, max_wait, |wave| {
-                        run_task_wave(
-                            wave,
-                            &slot,
-                            &sampler,
-                            task.as_ref(),
-                            &cache,
-                            pool.as_ref(),
-                            wave_delay,
-                            &stats,
-                        );
+                        beat.begin();
+                        if let Some(d) = stall {
+                            std::thread::sleep(d);
+                        }
+                        let wave = expire_overdue_task(wave, &stats, &watchdog);
+                        if !wave.is_empty() {
+                            run_task_wave(
+                                wave,
+                                &slot,
+                                &sampler,
+                                task.as_ref(),
+                                &cache,
+                                pool.as_ref(),
+                                wave_delay,
+                                &stats,
+                                flight.as_ref(),
+                            );
+                        }
+                        beat.end();
                     });
                 })?,
         );
     }
-    Ok(TaskServerHandle { queue, lanes: Mutex::new(lanes), stats, slot })
+    Ok(TaskServerHandle {
+        queue,
+        lanes: Mutex::new(lanes),
+        stats,
+        slot,
+        default_deadline: default_deadline(&cfg),
+        watchdog: intro.watchdog,
+        admin: intro.admin,
+        flight: intro.flight,
+        checker: intro.checker,
+    })
 }
 
 /// Execute one task-server wave: cache-checked sampling, one model
@@ -771,6 +1344,7 @@ fn run_task_wave(
     pool: Option<&ThreadPool>,
     wave_delay: Duration,
     stats: &ServeStats,
+    flight: Option<&Arc<FlightRecorder>>,
 ) {
     let _wave_span = crate::span!("serve/wave", size = wave.len());
     let _wave_timer =
@@ -828,29 +1402,39 @@ fn run_task_wave(
         }
     }
 
-    // Readout + per-request replies.
-    let mut any_failed = false;
+    // Readout + per-request replies. The first failure's message is
+    // kept as the flight-recorder detail.
+    let mut first_failure: Option<String> = None;
     for (req, g) in wave.into_iter().zip(graphs) {
         let out = g.and_then(|g| task.infer(&vm.model, &g));
         match out {
             Ok(output) => {
+                let latency = req.submitted.elapsed();
+                record_outcome_latency(Outcome::Ok, latency);
                 let _ = req.reply.send(Ok(TaskResponse {
                     seeds: req.seeds,
                     output,
-                    latency: req.submitted.elapsed(),
+                    latency,
                     batch_size,
                     generation: vm.generation,
                 }));
             }
             Err(e) => {
-                any_failed = true;
-                let _ = req.reply.send(Err(Error::Runtime(e.to_string())));
+                let msg = e.to_string();
+                if first_failure.is_none() {
+                    first_failure = Some(msg.clone());
+                }
+                record_outcome(Outcome::Failed, req.submitted);
+                let _ = req.reply.send(Err(Error::Runtime(msg)));
             }
         }
     }
-    queue_depth().sub(batch_size as i64);
-    if any_failed {
+    stats.replied(batch_size);
+    if let Some(msg) = first_failure {
         stats.wave_failed();
+        if let Some(f) = flight {
+            f.record("failed-batch", &msg);
+        }
     }
 }
 

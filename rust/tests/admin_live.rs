@@ -1,0 +1,348 @@
+//! Live-introspection contracts: the admin endpoint, the health
+//! watchdog, request deadlines and the incident flight recorder.
+//!
+//! The load-bearing assertions:
+//! * **scrape inertness** — a scraper hammering every admin path while
+//!   a loadgen run is in flight never changes the served bits (two
+//!   identical servers, one scraped and one not, stay bit-identical);
+//! * **/healthz flips to 503** for a wedged lane (injected via the
+//!   `debug_stall` test hook) and recovers to 200 when the lane
+//!   finishes its wave;
+//! * **deadlines are deterministic** — an already-expired budget is
+//!   answered `DeadlineExceeded` at any lane count, counted in
+//!   `deadline_expired`, and never executed (`requests` stays 0); the
+//!   in-queue expiry path behaves the same behind a stalled lane;
+//! * **flight recorder** — a failed batch with `incident_dir` set
+//!   leaves a parseable `tfgnn_incident_v1` dump on disk;
+//! * **depth conservation** — after a loadgen run with rejections the
+//!   per-server queue depth returns to exactly zero.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tfgnn::ops::model_ref::ModelConfig;
+use tfgnn::sampler::inmem::InMemorySampler;
+use tfgnn::sampler::spec::mag_sampling_spec_scaled;
+use tfgnn::serve::loadgen::{self, outputs_bit_identical, LoadGenConfig};
+use tfgnn::serve::{serve_task, ServeConfig, TaskServerHandle};
+use tfgnn::synth::mag::{generate, MagConfig, Split};
+use tfgnn::train::native::NativeModel;
+use tfgnn::Error;
+
+struct Env {
+    sampler: Arc<InMemorySampler>,
+    cfg: ModelConfig,
+    seeds: Vec<u32>,
+}
+
+fn env() -> Env {
+    let mag = MagConfig::tiny();
+    let ds = generate(&mag);
+    let seeds = ds.papers_in_split(Split::Train);
+    let store = Arc::new(ds.store);
+    let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+    let sampler = Arc::new(InMemorySampler::new(store, spec, 3).unwrap());
+    let cfg = ModelConfig::for_mag(&mag, 8, 8, 1);
+    Env { sampler, cfg, seeds }
+}
+
+fn task_server(env: &Env, model_seed: u64, serve_cfg: ServeConfig) -> TaskServerHandle {
+    let task = tfgnn::tasks::build(&env.cfg).unwrap();
+    let model = Arc::new(NativeModel::init(env.cfg.clone(), model_seed).unwrap());
+    serve_task(model, Arc::clone(&env.sampler), task, serve_cfg).unwrap()
+}
+
+/// Minimal HTTP/1.0 GET; returns (status, body).
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.0\r\nHost: t\r\n\r\n").unwrap();
+    let mut text = String::new();
+    s.read_to_string(&mut text).unwrap();
+    let status = text.split_whitespace().nth(1).unwrap_or("0").parse().unwrap_or(0);
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+/// Poll `path` until `want(status)` holds or the timeout elapses;
+/// returns the final (status, body).
+fn poll_until(
+    addr: SocketAddr,
+    path: &str,
+    timeout: Duration,
+    want: impl Fn(u16) -> bool,
+) -> (u16, String) {
+    let t0 = Instant::now();
+    loop {
+        let (status, body) = http_get(addr, path);
+        if want(status) || t0.elapsed() > timeout {
+            return (status, body);
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tfgnn_admin_live_{tag}_{}", std::process::id()))
+}
+
+/// Inertness under scrape: two identical servers — one with the admin
+/// endpoint on and a scraper hammering every path mid-load, one with
+/// no admin at all — answer every probe bit-identically. Also checks
+/// that the scraped Prometheus body carries the serve counters.
+#[test]
+fn admin_scrape_under_load_never_changes_served_bits() {
+    let env = env();
+    let cfg = |admin: bool| ServeConfig {
+        lanes: 2,
+        admin_addr: admin.then(|| "127.0.0.1:0".to_string()),
+        ..ServeConfig::default()
+    };
+    let scraped = task_server(&env, 7, cfg(true));
+    let quiet = task_server(&env, 7, cfg(false));
+    let addr = scraped.admin_addr().expect("admin endpoint configured");
+    assert!(quiet.admin_addr().is_none(), "admin is off by default");
+
+    let lists: Vec<Vec<u32>> = env.seeds.iter().take(8).map(|&s| vec![s]).collect();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let poller = std::thread::spawn(move || {
+        let mut scrapes = 0usize;
+        while !stop2.load(Ordering::SeqCst) {
+            for path in ["/metrics", "/metrics.json", "/healthz", "/tracez", "/statusz", "/"] {
+                let (status, _) = http_get(addr, path);
+                assert!(status == 200 || status == 503, "{path}: status {status}");
+                scrapes += 1;
+            }
+        }
+        scrapes
+    });
+
+    let lg = LoadGenConfig { concurrency: vec![1, 4], requests_per_client: 6 };
+    loadgen::run(&scraped, &lists, &lg).unwrap();
+
+    stop.store(true, Ordering::SeqCst);
+    let scrapes = poller.join().unwrap();
+    assert!(scrapes > 0, "the poller must actually have scraped mid-load");
+
+    // Bit-parity: the scraped server answers exactly like the quiet one.
+    for seeds in &lists {
+        let got = scraped.predict(seeds).unwrap();
+        let want = quiet.predict(seeds).unwrap();
+        assert!(
+            outputs_bit_identical(&got.output, &want.output),
+            "scraping changed served bits for seeds {seeds:?}"
+        );
+    }
+
+    // The live exposition carries the serve metrics, including the
+    // always-registered deadline counter.
+    let (status, body) = http_get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert!(body.contains("serve_requests_total"), "{body}");
+    assert!(body.contains("serve_deadline_expired_total"), "{body}");
+
+    scraped.shutdown();
+    quiet.shutdown();
+    // The endpoint goes away with the server.
+    assert!(TcpStream::connect(addr).is_err() || http_get_closed(addr));
+}
+
+/// After shutdown the listener is gone; a connect may still succeed
+/// briefly on some stacks, but reads must fail. Helper keeps the
+/// assertion above readable.
+fn http_get_closed(addr: SocketAddr) -> bool {
+    let Ok(mut s) = TcpStream::connect(addr) else { return true };
+    let _ = write!(s, "GET / HTTP/1.0\r\n\r\n");
+    let mut text = String::new();
+    s.read_to_string(&mut text).map(|_| text.is_empty()).unwrap_or(true)
+}
+
+/// A wedged lane (injected stall far above the watchdog threshold)
+/// flips `/healthz` to 503 naming the lane, and the verdict recovers
+/// to 200 once the lane finishes its wave.
+#[test]
+fn healthz_reports_503_for_a_wedged_lane_and_recovers() {
+    let env = env();
+    let handle = task_server(
+        &env,
+        7,
+        ServeConfig {
+            lanes: 1,
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            admin_addr: Some("127.0.0.1:0".to_string()),
+            watchdog_threshold: Duration::from_millis(60),
+            // The single lane sleeps 700ms at the start of every wave:
+            // mid-wave it is wedged by any 60ms threshold.
+            debug_stall: Some((0, Duration::from_millis(700))),
+            ..ServeConfig::default()
+        },
+    );
+    let addr = handle.admin_addr().unwrap();
+    let (status, body) = http_get(addr, "/healthz");
+    assert_eq!(status, 200, "idle server is healthy: {body}");
+
+    let rx1 = handle.submit(vec![env.seeds[0]]);
+    let rx2 = handle.submit(vec![env.seeds[1]]);
+    let (status, body) = poll_until(addr, "/healthz", Duration::from_secs(5), |s| s == 503);
+    assert_eq!(status, 503, "wedged lane must flip healthz: {body}");
+    assert!(body.contains("unhealthy"), "{body}");
+    assert!(body.contains("lane 0 wedged"), "{body}");
+
+    // Both requests are still answered (the lane is slow, not dead)...
+    rx1.recv().unwrap().unwrap();
+    rx2.recv().unwrap().unwrap();
+    // ...and the verdict recovers once the lane is idle again.
+    let (status, body) = poll_until(addr, "/healthz", Duration::from_secs(5), |s| s == 200);
+    assert_eq!(status, 200, "idle lane must recover: {body}");
+    // The watchdog recorded the trip (checker thread runs because the
+    // admin endpoint is on).
+    assert!(handle.health().trips >= 1, "trip must be counted");
+    handle.shutdown();
+}
+
+/// An already-expired budget is answered `DeadlineExceeded` at any
+/// lane count — counted, depth-neutral, and never executed.
+#[test]
+fn deadline_expiry_is_deterministic_at_every_lane_count() {
+    let env = env();
+    for lanes in [1usize, 2, 8] {
+        let handle = task_server(&env, 7, ServeConfig { lanes, ..ServeConfig::default() });
+        let n = 6usize;
+        for i in 0..n {
+            let rx = handle
+                .submit_with_deadline(vec![env.seeds[i % env.seeds.len()]], Some(Duration::ZERO));
+            match rx.recv().unwrap() {
+                Err(Error::DeadlineExceeded(msg)) => {
+                    assert!(msg.contains("never"), "lanes={lanes}: {msg}")
+                }
+                other => panic!("lanes={lanes}: want DeadlineExceeded, got {other:?}"),
+            }
+        }
+        let snap = handle.stats.snapshot();
+        assert_eq!(snap.deadline_expired, n as u64, "lanes={lanes}");
+        assert_eq!(snap.requests, 0, "lanes={lanes}: expired requests never executed");
+        assert_eq!(snap.queue_depth, 0, "lanes={lanes}: depth stays balanced");
+        // A request with headroom still serves normally.
+        let resp = handle
+            .submit_with_deadline(vec![env.seeds[0]], Some(Duration::from_secs(30)))
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(resp.seeds, vec![env.seeds[0]]);
+        assert!(handle.stats.snapshot().requests >= 1, "lanes={lanes}");
+        handle.shutdown();
+    }
+}
+
+/// In-queue expiry: a request whose budget runs out while it waits
+/// behind a stalled lane is expired by the lane (not at admission) and
+/// still never reaches the model.
+#[test]
+fn deadline_expires_in_queue_behind_a_stalled_lane() {
+    let env = env();
+    let handle = task_server(
+        &env,
+        7,
+        ServeConfig {
+            lanes: 1,
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            // Every wave takes >= 400ms, so the second request's 50ms
+            // budget is long gone when the lane reaches it.
+            debug_stall: Some((0, Duration::from_millis(400))),
+            ..ServeConfig::default()
+        },
+    );
+    let rx_ok = handle.submit(vec![env.seeds[0]]);
+    let rx_late = handle.submit_with_deadline(vec![env.seeds[1]], Some(Duration::from_millis(50)));
+    rx_ok.recv().unwrap().unwrap();
+    match rx_late.recv().unwrap() {
+        Err(Error::DeadlineExceeded(msg)) => assert!(msg.contains("in queue"), "{msg}"),
+        other => panic!("want in-queue DeadlineExceeded, got {other:?}"),
+    }
+    let snap = handle.stats.snapshot();
+    assert_eq!(snap.requests, 1, "only the first request executed");
+    assert_eq!(snap.deadline_expired, 1);
+    assert_eq!(snap.queue_depth, 0, "expiry is depth-neutral");
+    handle.shutdown();
+}
+
+/// A failed batch on a server with `incident_dir` set leaves a
+/// parseable `tfgnn_incident_v1` dump behind.
+#[test]
+fn flight_recorder_dumps_on_a_failed_batch() {
+    let env = env();
+    let dir = temp_dir("flight");
+    let _ = std::fs::remove_dir_all(&dir);
+    let handle = task_server(
+        &env,
+        7,
+        ServeConfig { incident_dir: Some(dir.clone()), ..ServeConfig::default() },
+    );
+    // Out-of-range seed: the sampler fails the request, the wave is
+    // counted failed, and the lane triggers a flight dump.
+    let err = handle.predict(&[9_999_999]).unwrap_err();
+    assert!(!matches!(err, Error::Overloaded(_) | Error::DeadlineExceeded(_)), "{err}");
+    handle.shutdown();
+
+    let dumps: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    assert!(!dumps.is_empty(), "expected an incident dump in {}", dir.display());
+    let doc =
+        tfgnn::util::json::Json::parse(&std::fs::read_to_string(&dumps[0]).unwrap()).unwrap();
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "tfgnn_incident_v1");
+    assert_eq!(doc.get("trigger").unwrap().as_str().unwrap(), "failed-batch");
+    assert_eq!(
+        doc.get("metrics").unwrap().get("schema").unwrap().as_str().unwrap(),
+        "tfgnn_metrics_v1"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Queue-depth conservation around the Overloaded reject path: after a
+/// loadgen run that provokes rejections, the per-server depth is back
+/// to exactly zero and every request has exactly one outcome.
+#[test]
+fn queue_depth_returns_to_zero_after_rejections() {
+    let env = env();
+    let handle = task_server(
+        &env,
+        7,
+        ServeConfig {
+            lanes: 1,
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_capacity: 2,
+            wave_delay: Duration::from_millis(15),
+            ..ServeConfig::default()
+        },
+    );
+    let lists: Vec<Vec<u32>> = env.seeds.iter().take(6).map(|&s| vec![s]).collect();
+    let lg = LoadGenConfig { concurrency: vec![8], requests_per_client: 6 };
+    let report = loadgen::run(&handle, &lists, &lg).unwrap();
+    let level = &report.levels[0];
+    let total = 8 * 6;
+    assert_eq!(
+        level.ok + level.rejected + level.deadline + level.failed,
+        total,
+        "every request has exactly one outcome"
+    );
+    let snap = handle.stats.snapshot();
+    assert!(snap.rejected > 0, "the tiny queue must reject under an 8-client burst");
+    assert_eq!(
+        snap.queue_depth, 0,
+        "depth must return to zero: rejected requests are never admitted, \
+         admitted ones are replied exactly once"
+    );
+    handle.shutdown();
+    assert_eq!(handle.stats.snapshot().queue_depth, 0, "still zero after drain");
+}

@@ -22,12 +22,21 @@ under `rust/benches/baseline/`:
   snapshots and `TRACE_*.json` Chrome traces, written by the serving
   bench) are schema-checked when present; they need no baseline
   counterpart and their absence is not an error here (the CI `ls`
-  gate pins which ones must exist).
+  gate pins which ones must exist);
+* with `--scrape SCRAPE.json --export FINAL.json` (both
+  `tfgnn_metrics_v1` documents: a mid-run `/metrics.json` scrape from
+  the live admin endpoint and the same process's end-of-run
+  `--metrics-out` export), every metric key present in the scrape must
+  also be present in the export — the live and offline surfaces share
+  one registry, so a key seen live but missing from the export means
+  they drifted apart (ERROR).
 
 Stdlib only; no third-party imports.
 
 Usage:
     python3 tools/bench_compare.py --baseline rust/benches/baseline --current rust
+    python3 tools/bench_compare.py --baseline ... --current ... \
+        --scrape SCRAPE.json --export METRICS_loadgen.json
 """
 
 import argparse
@@ -127,21 +136,23 @@ def load_doc(path, report):
 
 
 def check_metrics_file(path, report):
-    """Schema-check one METRICS_*.json (tfgnn_metrics_v1)."""
+    """Schema-check one METRICS_*.json (tfgnn_metrics_v1); returns the
+    parsed document when structurally sound enough to compare, else
+    None."""
     try:
         doc = json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as e:
         report.error(f"{path}: unreadable or invalid JSON: {e}")
-        return
+        return None
     if not isinstance(doc, dict):
         report.error(f"{path}: top level must be an object")
-        return
+        return None
     if doc.get("schema") != "tfgnn_metrics_v1":
         report.error(f"{path}: 'schema' is not 'tfgnn_metrics_v1'")
     for section in ("counters", "gauges", "histograms"):
         if not isinstance(doc.get(section), dict):
             report.error(f"{path}: missing or non-object '{section}'")
-            return
+            return None
     for name, value in doc["counters"].items():
         if not isinstance(value, int) or isinstance(value, bool):
             report.error(f"{path}: counters[{name!r}] is not an integer")
@@ -166,6 +177,34 @@ def check_metrics_file(path, report):
                 f"{path}: histograms[{name!r}].bucket_counts is not an "
                 "integer array"
             )
+    return doc
+
+
+def check_scrape_subset(scrape_path, export_path, report):
+    """Every metric key in a live `/metrics.json` scrape must exist in
+    the same process's end-of-run export (scraped ⊆ exported): both
+    come from one registry, so a live-only key means the surfaces
+    drifted."""
+    scrape = check_metrics_file(scrape_path, report)
+    export = check_metrics_file(export_path, report)
+    if scrape is None or export is None:
+        return
+    checked = 0
+    for section in ("counters", "gauges", "histograms"):
+        want = set(scrape[section])
+        have = set(export[section])
+        checked += len(want)
+        for name in sorted(want - have):
+            report.error(
+                f"{scrape_path.name}: {section}[{name!r}] was served by the "
+                f"live admin endpoint but is missing from "
+                f"{export_path.name} — live scrape and offline export "
+                "drifted apart"
+            )
+    print(
+        f"bench-compare: live scrape {scrape_path.name} ⊆ export "
+        f"{export_path.name} checked ({checked} key(s))"
+    )
 
 
 def check_trace_file(path, report):
@@ -265,7 +304,15 @@ def main():
                     help="directory of checked-in BENCH_*.json snapshots")
     ap.add_argument("--current", required=True, type=Path,
                     help="directory of freshly produced BENCH_*.json files")
+    ap.add_argument("--scrape", type=Path,
+                    help="mid-run /metrics.json scrape from the live admin "
+                         "endpoint (requires --export)")
+    ap.add_argument("--export", type=Path,
+                    help="end-of-run --metrics-out export from the same "
+                         "process (requires --scrape)")
     args = ap.parse_args()
+    if (args.scrape is None) != (args.export is None):
+        ap.error("--scrape and --export must be given together")
 
     report = Report()
     baselines = sorted(args.baseline.glob("BENCH_*.json"))
@@ -292,6 +339,9 @@ def main():
         obs_checked += 1
     if obs_checked:
         print(f"bench-compare: schema-checked {obs_checked} observability export(s)")
+
+    if args.scrape is not None:
+        check_scrape_subset(args.scrape, args.export, report)
 
     print(
         f"bench-compare: {len(baselines)} file(s), "
