@@ -16,6 +16,7 @@
 use std::sync::Arc;
 
 use tfgnn::graph::pad::{fit_or_skip, Padded, PadSpec};
+use tfgnn::obs::events::{EventJournal, StepEvent, Telemetry};
 use tfgnn::ops::model_ref::ModelConfig;
 use tfgnn::runtime::batch::RootTask;
 use tfgnn::sampler::inmem::InMemorySampler;
@@ -145,6 +146,55 @@ fn main() {
         }
     }
     println!("BENCH train/native_step speedup 8t vs 1t: {:.2}x", rate_8t / serial_rate);
+
+    // ---- train-step throughput with full telemetry ---------------------
+    // Gradient probes + explosion sentinel + per-step journal append,
+    // exactly as the runner's epoch loop drives them. The delta vs the
+    // rows above is the whole observability overhead (f64 norm
+    // accumulation + one JSONL write per step); the trained bits are
+    // identical either way — pinned by tests/events.rs.
+    println!("\n# train step with gradient probes + event journal");
+    let journal_path = std::env::temp_dir()
+        .join(format!("tfgnn_bench_events_{}.jsonl", std::process::id()));
+    for threads in [1usize, 8] {
+        let journal = Arc::new(EventJournal::create(&journal_path).unwrap());
+        let mut tr = NativeTrainer::new(model0.clone(), adam, task.clone(), threads);
+        tr.set_telemetry(Telemetry {
+            grad_stats: true,
+            grad_norm_limit: Some(1e9),
+            flight: None,
+            journal: None,
+        });
+        let mut step = 0u64;
+        let s = bench.throughput(roots_per_pass, || {
+            for b in &batches {
+                let m = tr.train_batch(b).unwrap();
+                let g = tr.take_grad_stats();
+                let ev = StepEvent {
+                    step,
+                    epoch: 0,
+                    split: "train",
+                    loss: f64::from(m.loss),
+                    examples: f64::from(m.weight),
+                    task: &m.task,
+                    step_secs: 0.0,
+                    data_wait_secs: 0.0,
+                    grad: g.as_ref(),
+                }
+                .to_event();
+                journal.write(&ev).unwrap();
+                step += 1;
+            }
+        });
+        report.row(
+            "train/native_step_telemetry",
+            &format!("batch={batch} hidden={hidden} layers={layers}"),
+            threads,
+            &s,
+            "items/s",
+        );
+    }
+    let _ = std::fs::remove_file(&journal_path);
 
     // ---- eval (forward-only) throughput --------------------------------
     println!("\n# eval step (fused forward only)");

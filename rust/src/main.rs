@@ -18,7 +18,21 @@
 //! tfgnn stats    METRICS.json [--prometheus]   # pretty-print a
 //!                                              # metrics snapshot
 //! tfgnn stats    --diff OLD.json NEW.json      # run-over-run delta
+//! tfgnn runs     list EVENTS.jsonl...          # training-journal
+//! tfgnn runs     show EVENTS.jsonl [--loss-target X]  # summaries
+//! tfgnn runs     diff A.jsonl B.jsonl          # experiment compare
 //! ```
+//!
+//! `train` additionally accepts the training-telemetry flags (see
+//! `docs/observability.md`): `--events-out PATH` (append the
+//! `tfgnn_events_v1` step journal — per-step loss, task metric sums,
+//! gradient/parameter norms, update ratio, step + data-wait timing),
+//! `--grad-norm-limit X` (gradient-explosion sentinel: fail the run
+//! with a structured error instead of silently diverging; non-finite
+//! gradients always trip) and `--incident-dir DIR` (where a tripped
+//! sentinel writes its flight-recorder dump, with the recent journal
+//! tail embedded). `sweep --events-out PATH` writes one journal per
+//! trial (`PATH-trial000.jsonl`, ...).
 //!
 //! `train`, `serve-bench` and `loadgen` also accept
 //! `--metrics-out PATH` (write a `tfgnn_metrics_v1` JSON snapshot on
@@ -86,9 +100,11 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve-bench") => serve_bench(args),
         Some("loadgen") => loadgen(args),
         Some("stats") => stats(args),
+        Some("runs") => runs(args),
         _ => {
             eprintln!(
-                "usage: tfgnn <info|check|generate|sample|train|eval|sweep|serve-bench|loadgen|stats> [--help]"
+                "usage: tfgnn <info|check|generate|sample|train|eval|sweep|serve-bench|\
+                 loadgen|stats|runs> [--help]"
             );
             Ok(())
         }
@@ -330,6 +346,15 @@ fn train(args: &Args) -> Result<()> {
     if let Some(p) = args.get("ckpt") {
         cfg.checkpoint = Some(PathBuf::from(p));
     }
+    if let Some(p) = args.get("events-out") {
+        cfg.events_out = Some(PathBuf::from(p));
+    }
+    if args.get("grad-norm-limit").is_some() {
+        cfg.grad_norm_limit = Some(args.get_or("grad-norm-limit", 0.0f64)?);
+    }
+    if let Some(p) = args.get("incident-dir") {
+        cfg.incident_dir = Some(PathBuf::from(p));
+    }
     if args.get("lr").is_some() || args.get("dropout").is_some() || args.get("wd").is_some() {
         let m = match (&cfg.engine, &cfg.config_path) {
             (tfgnn::runner::EngineKind::Native, Some(p)) => {
@@ -349,7 +374,50 @@ fn train(args: &Args) -> Result<()> {
         "done: best val acc {:.4}, test {}, {:.1} steps/s",
         report.best_val_acc, report.test, report.train_steps_per_sec
     );
+    if let Some(p) = &cfg.events_out {
+        println!("event journal written to {}", p.display());
+    }
     obs_finish(args)
+}
+
+/// `tfgnn runs` — summarize and compare `tfgnn_events_v1` training
+/// journals written by `train --events-out`: `runs list FILE...` (one
+/// line per run), `runs show FILE [--loss-target X]` (full summary,
+/// optionally with a time-to-loss-target row) and `runs diff A B`
+/// (per-metric deltas between two runs).
+fn runs(args: &Args) -> Result<()> {
+    use tfgnn::obs::events::{render_diff, render_list, render_show, RunSummary};
+    let usage = "usage: tfgnn runs <list FILE...|show FILE [--loss-target X]|diff A B>";
+    let bad = || tfgnn::Error::Pipeline(usage.into());
+    let Some((verb, files)) = args.rest().split_first() else {
+        return Err(bad());
+    };
+    match (verb.as_str(), files) {
+        ("list", files) if !files.is_empty() => {
+            let mut summaries = Vec::new();
+            for f in files {
+                summaries.push(RunSummary::from_path(std::path::Path::new(f))?);
+            }
+            print!("{}", render_list(&summaries));
+            Ok(())
+        }
+        ("show", [file]) => {
+            let s = RunSummary::from_path(std::path::Path::new(file))?;
+            let target = match args.get("loss-target") {
+                Some(_) => Some(args.get_or("loss-target", 0.0f64)?),
+                None => None,
+            };
+            print!("{}", render_show(&s, target));
+            Ok(())
+        }
+        ("diff", [a, b]) => {
+            let sa = RunSummary::from_path(std::path::Path::new(a))?;
+            let sb = RunSummary::from_path(std::path::Path::new(b))?;
+            print!("{}", render_diff(&sa, &sb));
+            Ok(())
+        }
+        _ => Err(bad()),
+    }
 }
 
 fn eval(args: &Args) -> Result<()> {
@@ -385,6 +453,9 @@ fn run_sweep(args: &Args) -> Result<()> {
     base.max_steps_per_epoch = Some(args.get_or("max-steps", 40)?);
     base.max_eval_batches = Some(args.get_or("max-eval-batches", 10)?);
     base.verbose = args.flag("verbose");
+    if let Some(p) = args.get("events-out") {
+        base.events_out = Some(PathBuf::from(p));
+    }
     let cfg = SweepConfig::default_grid(base);
     println!("sweep: {} trials", cfg.num_trials());
     let trials = sweep(&cfg)?;

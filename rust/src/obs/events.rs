@@ -1,0 +1,788 @@
+//! Training-run event journal (`tfgnn_events_v1`) and the `tfgnn
+//! runs` experiment summaries built on top of it.
+//!
+//! PRs 8–9 gave the *serving* path deep observability; this module is
+//! the training analog. A run started with `--events-out FILE` appends
+//! one JSON object per line (JSONL — append-only, crash-tolerant:
+//! every complete line is a valid record no matter where the process
+//! died):
+//!
+//! * line 1 — a `run_start` header carrying `schema:
+//!   "tfgnn_events_v1"` plus the run's identity (arch, engine, task,
+//!   trainer threads, parameter count, hyper-parameters);
+//! * one `step` record per optimizer step — step/epoch/split, mean
+//!   loss, example weight, per-task metric sums, step wall-time, the
+//!   sampler wave (data wait) time, and — when gradient telemetry is
+//!   on — global and per-layer gradient/parameter L2 norms and the
+//!   update ratio `‖Δθ‖/‖θ‖`;
+//! * one `eval` record per validation/test pass with named per-task
+//!   summary metrics ([`crate::tasks::summary_metrics`]);
+//! * a final `run_end` record (total steps, wall-time, steps/s, best
+//!   validation accuracy).
+//!
+//! **Inertness contract.** Journal writes and gradient probes are
+//! read-only observers: norms are accumulated in f64 off to the side
+//! and never fed back into the update, and all file I/O happens in the
+//! runner's epoch loop outside the math. Training with events + probes
+//! on is bit-identical to training with them off at 1/2/8 threads —
+//! pinned by `tests/events.rs`.
+//!
+//! The journal also keeps a bounded in-memory tail
+//! ([`TAIL_CAP`] most recent records) so the gradient-health sentinel
+//! can embed the recent step history into a
+//! [`FlightRecorder`](super::flight::FlightRecorder) incident dump —
+//! the post-mortem shows the steps *leading into* the divergence, not
+//! just the final explosion.
+//!
+//! Reading side: [`RunSummary`] parses + validates a journal and
+//! powers `tfgnn runs list | show | diff` (rendering in the
+//! [`super::report`] style).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::File;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use super::flight::FlightRecorder;
+use super::metrics::names;
+use crate::train::metrics::TaskMetrics;
+use crate::util::json::{obj, Json};
+use crate::{Error, Result};
+
+/// Schema tag carried by the `run_start` header line.
+pub const SCHEMA: &str = "tfgnn_events_v1";
+
+/// Most recent records kept in memory for incident dumps.
+pub const TAIL_CAP: usize = 64;
+
+/// A finite JSON number (`null` for NaN/Inf — JSON has neither, and a
+/// torn record must never make the whole line unparseable).
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn int(v: u64) -> Json {
+    Json::Int(i64::try_from(v).unwrap_or(i64::MAX))
+}
+
+// ---- trainer-side telemetry types ---------------------------------------
+
+/// Per-layer L2 norms, grouped by parameter-name prefix (`l0.`, `l1.`,
+/// … for the trunk layers; everything else — encoders, embeddings, the
+/// readout head — under its first name segment).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerStats {
+    pub name: String,
+    pub grad_norm: f64,
+    pub param_norm: f64,
+}
+
+/// One step's gradient-health probe results (read-only over the
+/// reduced gradients and the parameters; never fed back).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GradStats {
+    /// The optimizer step these norms belong to (0-based).
+    pub step: u64,
+    /// Global gradient L2 norm over every parameter tensor.
+    pub grad_norm: f64,
+    /// Global parameter L2 norm (pre-update).
+    pub param_norm: f64,
+    /// L2 norm of the applied update `‖Δθ‖`.
+    pub update_norm: f64,
+    /// `‖Δθ‖ / ‖θ‖` — the classic learning-rate health signal.
+    pub update_ratio: f64,
+    /// Per-layer-group norms, in parameter creation order.
+    pub layers: Vec<LayerStats>,
+}
+
+impl GradStats {
+    /// The JSON fragment merged into a `step` record.
+    pub fn to_json(&self) -> Vec<(&'static str, Json)> {
+        let mut layers = BTreeMap::new();
+        for l in &self.layers {
+            layers.insert(
+                l.name.clone(),
+                obj(vec![("grad_norm", num(l.grad_norm)), ("param_norm", num(l.param_norm))]),
+            );
+        }
+        vec![
+            ("grad_norm", num(self.grad_norm)),
+            ("param_norm", num(self.param_norm)),
+            ("update_norm", num(self.update_norm)),
+            ("update_ratio", num(self.update_ratio)),
+            ("layers", Json::Obj(layers)),
+        ]
+    }
+}
+
+/// Trainer telemetry knobs — everything defaults to off, and the
+/// default-off configuration is the exact pre-telemetry trainer.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    /// Compute per-step gradient/parameter norms and the update ratio
+    /// (surfaced via `take_grad_stats` and the metrics registry).
+    pub grad_stats: bool,
+    /// Gradient-explosion sentinel: error out (instead of silently
+    /// diverging) when the global gradient norm exceeds this.
+    pub grad_norm_limit: Option<f64>,
+    /// Incident recorder fired when a sentinel trips.
+    pub flight: Option<Arc<FlightRecorder>>,
+    /// Journal whose recent tail is embedded into incident dumps.
+    pub journal: Option<Arc<EventJournal>>,
+}
+
+impl Telemetry {
+    /// Does any probe need the per-step norm computation?
+    pub fn probes_on(&self) -> bool {
+        self.grad_stats || self.grad_norm_limit.is_some()
+    }
+}
+
+// ---- journal writer ------------------------------------------------------
+
+struct Inner {
+    file: File,
+    tail: VecDeque<Json>,
+}
+
+/// Append-only JSONL writer with a bounded in-memory tail.
+pub struct EventJournal {
+    path: PathBuf,
+    inner: Mutex<Inner>,
+}
+
+impl EventJournal {
+    /// Create (truncate) the journal file; parent directories are
+    /// created as needed.
+    pub fn create(path: &Path) -> Result<EventJournal> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| {
+                    Error::Runtime(format!("events: cannot create {}: {e}", parent.display()))
+                })?;
+            }
+        }
+        let file = File::create(path).map_err(|e| {
+            Error::Runtime(format!("events: cannot create {}: {e}", path.display()))
+        })?;
+        Ok(EventJournal {
+            path: path.to_path_buf(),
+            inner: Mutex::new(Inner { file, tail: VecDeque::new() }),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record as a JSON line and remember it in the tail.
+    pub fn write(&self, event: &Json) -> Result<()> {
+        let mut line = event.to_string();
+        line.push('\n');
+        let mut g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        g.file.write_all(line.as_bytes()).map_err(|e| {
+            Error::Runtime(format!("events: cannot append to {}: {e}", self.path.display()))
+        })?;
+        if g.tail.len() == TAIL_CAP {
+            g.tail.pop_front();
+        }
+        g.tail.push_back(event.clone());
+        crate::obs_counter!(names::TRAINER_EVENTS).inc();
+        Ok(())
+    }
+
+    /// The most recent records (oldest first), for incident dumps.
+    pub fn tail(&self) -> Vec<Json> {
+        let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        g.tail.iter().cloned().collect()
+    }
+}
+
+// ---- event constructors --------------------------------------------------
+
+/// The `run_start` header (journal line 1).
+pub struct RunStart {
+    pub arch: String,
+    pub engine: String,
+    pub task: String,
+    pub trainer_threads: usize,
+    pub param_count: usize,
+    pub epochs: usize,
+    pub learning_rate: f64,
+    pub dropout: f64,
+    pub weight_decay: f64,
+    pub grad_norm_limit: Option<f64>,
+}
+
+impl RunStart {
+    pub fn to_event(&self) -> Json {
+        let unix_secs =
+            SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0);
+        obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("kind", Json::Str("run_start".to_string())),
+            ("unix_time_secs", int(unix_secs)),
+            ("arch", Json::Str(self.arch.clone())),
+            ("engine", Json::Str(self.engine.clone())),
+            ("task", Json::Str(self.task.clone())),
+            ("trainer_threads", int(self.trainer_threads as u64)),
+            ("param_count", int(self.param_count as u64)),
+            ("epochs", int(self.epochs as u64)),
+            ("learning_rate", num(self.learning_rate)),
+            ("dropout", num(self.dropout)),
+            ("weight_decay", num(self.weight_decay)),
+            ("grad_norm_limit", self.grad_norm_limit.map_or(Json::Null, num)),
+        ])
+    }
+}
+
+/// One optimizer step's record.
+pub struct StepEvent<'a> {
+    pub step: u64,
+    pub epoch: usize,
+    pub split: &'a str,
+    /// Mean loss over this step's real examples.
+    pub loss: f64,
+    /// Example weight (number of real, unmasked examples).
+    pub examples: f64,
+    pub task: &'a TaskMetrics,
+    pub step_secs: f64,
+    /// Time spent waiting on the sampler/pipeline for this wave.
+    pub data_wait_secs: f64,
+    pub grad: Option<&'a GradStats>,
+}
+
+impl StepEvent<'_> {
+    pub fn to_event(&self) -> Json {
+        let mut fields = vec![
+            ("kind", Json::Str("step".to_string())),
+            ("step", int(self.step)),
+            ("epoch", int(self.epoch as u64)),
+            ("split", Json::Str(self.split.to_string())),
+            ("loss", num(self.loss)),
+            ("examples", num(self.examples)),
+            ("metrics", task_metrics_json(self.task)),
+            ("step_secs", num(self.step_secs)),
+            ("data_wait_secs", num(self.data_wait_secs)),
+        ];
+        if let Some(g) = self.grad {
+            fields.extend(g.to_json());
+        }
+        obj(fields)
+    }
+}
+
+/// The raw per-task metric *sums* for one step (divide by `scored` for
+/// means; the eval records carry the derived means instead).
+pub fn task_metrics_json(t: &TaskMetrics) -> Json {
+    obj(vec![
+        ("correct", num(t.correct)),
+        ("rr_sum", num(t.rr_sum)),
+        ("hits_sum", num(t.hits_sum)),
+        ("se_sum", num(t.se_sum)),
+        ("ae_sum", num(t.ae_sum)),
+        ("scored", num(t.scored)),
+    ])
+}
+
+/// A validation/test pass record; `metrics` are the task's *named*
+/// summary means (see [`crate::tasks::summary_metrics`]).
+pub fn eval_event(
+    epoch: usize,
+    split: &str,
+    loss: f64,
+    examples: f64,
+    metrics: &[(&str, f64)],
+) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in metrics {
+        m.insert((*k).to_string(), num(*v));
+    }
+    obj(vec![
+        ("kind", Json::Str("eval".to_string())),
+        ("epoch", int(epoch as u64)),
+        ("split", Json::Str(split.to_string())),
+        ("loss", num(loss)),
+        ("examples", num(examples)),
+        ("metrics", Json::Obj(m)),
+    ])
+}
+
+/// The closing record.
+pub fn run_end_event(steps: u64, total_step_secs: f64, best_val_acc: f64) -> Json {
+    let sps = if total_step_secs > 0.0 { steps as f64 / total_step_secs } else { 0.0 };
+    obj(vec![
+        ("kind", Json::Str("run_end".to_string())),
+        ("steps", int(steps)),
+        ("total_step_secs", num(total_step_secs)),
+        ("train_steps_per_sec", num(sps)),
+        ("best_val_acc", num(best_val_acc)),
+    ])
+}
+
+// ---- reading side: run summaries and `tfgnn runs` ------------------------
+
+/// One parsed `eval` record.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub epoch: u64,
+    pub split: String,
+    pub loss: f64,
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// A parsed + validated journal, reduced to what `tfgnn runs` needs.
+pub struct RunSummary {
+    pub path: PathBuf,
+    pub header: Json,
+    pub steps: u64,
+    pub total_step_secs: f64,
+    /// `(step, train loss, cumulative step seconds)` per step record.
+    pub step_losses: Vec<(u64, f64, f64)>,
+    pub evals: Vec<EvalRecord>,
+    pub end: Option<Json>,
+}
+
+impl RunSummary {
+    /// Parse and validate one journal file. Every line must be a JSON
+    /// object; line 1 must be a `run_start` header with the
+    /// [`SCHEMA`] tag; later lines must be `step`/`eval`/`run_end`.
+    pub fn from_path(path: &Path) -> Result<RunSummary> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Runtime(format!("events: cannot read {}: {e}", path.display()))
+        })?;
+        let bad = |line: usize, why: String| {
+            Error::Runtime(format!("events: {}:{line}: {why}", path.display()))
+        };
+        let mut header = None;
+        let mut steps = 0u64;
+        let mut total_step_secs = 0.0f64;
+        let mut step_losses = Vec::new();
+        let mut evals = Vec::new();
+        let mut end = None;
+        for (i, line) in text.lines().enumerate() {
+            let lineno = i + 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let rec = Json::parse(line)
+                .map_err(|e| bad(lineno, format!("not a JSON record: {e}")))?;
+            let kind = rec
+                .get("kind")
+                .and_then(Json::as_str)
+                .map_err(|_| bad(lineno, "record has no \"kind\"".to_string()))?
+                .to_string();
+            if header.is_none() {
+                if kind != "run_start" {
+                    return Err(bad(lineno, format!("first record is {kind:?}, want run_start")));
+                }
+                let schema = rec
+                    .get("schema")
+                    .and_then(Json::as_str)
+                    .map_err(|_| bad(lineno, "run_start has no \"schema\"".to_string()))?;
+                if schema != SCHEMA {
+                    return Err(bad(lineno, format!("schema {schema:?}, want {SCHEMA:?}")));
+                }
+                header = Some(rec);
+                continue;
+            }
+            match kind.as_str() {
+                "step" => {
+                    let step = rec
+                        .get("step")
+                        .and_then(Json::as_i64)
+                        .map_err(|_| bad(lineno, "step record has no \"step\"".to_string()))?;
+                    let loss = rec
+                        .get("loss")
+                        .and_then(Json::as_f64)
+                        .map_err(|_| bad(lineno, "step record has no \"loss\"".to_string()))?;
+                    let secs = rec.get("step_secs").and_then(Json::as_f64).map_err(|_| {
+                        bad(lineno, "step record has no \"step_secs\"".to_string())
+                    })?;
+                    steps += 1;
+                    total_step_secs += secs;
+                    step_losses.push((step.max(0) as u64, loss, total_step_secs));
+                }
+                "eval" => {
+                    let epoch = rec
+                        .get("epoch")
+                        .and_then(Json::as_i64)
+                        .map_err(|_| bad(lineno, "eval record has no \"epoch\"".to_string()))?;
+                    let split = rec
+                        .get("split")
+                        .and_then(Json::as_str)
+                        .map_err(|_| bad(lineno, "eval record has no \"split\"".to_string()))?
+                        .to_string();
+                    let loss = rec
+                        .get("loss")
+                        .and_then(Json::as_f64)
+                        .map_err(|_| bad(lineno, "eval record has no \"loss\"".to_string()))?;
+                    let mut metrics = Vec::new();
+                    if let Some(m) = rec.opt("metrics") {
+                        let m = m
+                            .as_obj()
+                            .map_err(|_| bad(lineno, "eval metrics not an object".to_string()))?;
+                        for (k, v) in m {
+                            if let Ok(v) = v.as_f64() {
+                                metrics.push((k.clone(), v));
+                            }
+                        }
+                    }
+                    evals.push(EvalRecord { epoch: epoch.max(0) as u64, split, loss, metrics });
+                }
+                "run_end" => end = Some(rec),
+                other => return Err(bad(lineno, format!("unknown record kind {other:?}"))),
+            }
+        }
+        let header = header.ok_or_else(|| {
+            Error::Runtime(format!("events: {}: empty journal (no run_start)", path.display()))
+        })?;
+        Ok(RunSummary {
+            path: path.to_path_buf(),
+            header,
+            steps,
+            total_step_secs,
+            step_losses,
+            evals,
+            end,
+        })
+    }
+
+    fn header_str(&self, key: &str) -> String {
+        self.header.opt(key).and_then(|v| v.as_str().ok()).unwrap_or("?").to_string()
+    }
+
+    /// Steps per second — from `run_end` when present, else recomputed
+    /// from the step records (a journal cut off mid-run still reports).
+    pub fn steps_per_sec(&self) -> f64 {
+        if let Some(end) = &self.end {
+            if let Some(v) = end.opt("train_steps_per_sec").and_then(|v| v.as_f64().ok()) {
+                return v;
+            }
+        }
+        if self.total_step_secs > 0.0 {
+            self.steps as f64 / self.total_step_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// The last training-step loss, if any step was recorded.
+    pub fn final_train_loss(&self) -> Option<f64> {
+        self.step_losses.last().map(|&(_, loss, _)| loss)
+    }
+
+    /// Latest eval record for `split`.
+    pub fn final_eval(&self, split: &str) -> Option<&EvalRecord> {
+        self.evals.iter().rev().find(|e| e.split == split)
+    }
+
+    /// Best (maximum) value of a named eval metric over `split`.
+    pub fn best_eval(&self, split: &str, metric: &str) -> Option<f64> {
+        self.evals
+            .iter()
+            .filter(|e| e.split == split)
+            .flat_map(|e| e.metrics.iter())
+            .filter(|(k, _)| k == metric)
+            .map(|&(_, v)| v)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// Cumulative training seconds until the step loss first reaches
+    /// `target` (`None` if the run never got there).
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        self.step_losses.iter().find(|&&(_, loss, _)| loss <= target).map(|&(_, _, secs)| secs)
+    }
+
+    /// Ordered `(label, value)` summary rows — the diffable surface of
+    /// a run. Labels are stable strings so two runs line up.
+    pub fn summary_rows(&self) -> Vec<(String, f64)> {
+        let mut rows = vec![
+            ("train steps".to_string(), self.steps as f64),
+            ("train steps/s".to_string(), self.steps_per_sec()),
+            ("train wall secs".to_string(), self.total_step_secs),
+        ];
+        if let Some(loss) = self.final_train_loss() {
+            rows.push(("final train loss".to_string(), loss));
+        }
+        for split in ["val", "test"] {
+            if let Some(e) = self.final_eval(split) {
+                rows.push((format!("final {split} loss"), e.loss));
+                for (k, v) in &e.metrics {
+                    rows.push((format!("final {split} {k}"), *v));
+                }
+            }
+        }
+        // Best-over-run rows for every val metric seen.
+        let mut names: Vec<String> = Vec::new();
+        for e in self.evals.iter().filter(|e| e.split == "val") {
+            for (k, _) in &e.metrics {
+                if !names.contains(k) {
+                    names.push(k.clone());
+                }
+            }
+        }
+        for name in names {
+            if let Some(v) = self.best_eval("val", &name) {
+                rows.push((format!("best val {name}"), v));
+            }
+        }
+        rows
+    }
+
+    /// One-line identity used by `runs list`.
+    pub fn identity(&self) -> String {
+        format!(
+            "{} task={} engine={} threads={}",
+            self.header_str("arch"),
+            self.header_str("task"),
+            self.header_str("engine"),
+            self.header.opt("trainer_threads").and_then(|v| v.as_i64().ok()).unwrap_or(0),
+        )
+    }
+}
+
+fn fmt_val(v: f64) -> String {
+    if v == 0.0 || (v.abs() >= 1e-3 && v.abs() < 1e6) {
+        format!("{v:.4}")
+    } else {
+        format!("{v:.3e}")
+    }
+}
+
+/// `tfgnn runs list` — one line per journal.
+pub fn render_list(runs: &[RunSummary]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{} run(s)\n", runs.len()));
+    for r in runs {
+        let loss = r.final_train_loss().map_or("n/a".to_string(), fmt_val);
+        out.push_str(&format!(
+            "  {:<32} {:<44} steps={:<6} steps/s={:<8.1} loss={}\n",
+            r.path.file_name().map(|n| n.to_string_lossy().to_string()).unwrap_or_default(),
+            r.identity(),
+            r.steps,
+            r.steps_per_sec(),
+            loss,
+        ));
+    }
+    out
+}
+
+/// `tfgnn runs show` — full summary of one journal. `loss_target`
+/// adds a time-to-target row.
+pub fn render_show(r: &RunSummary, loss_target: Option<f64>) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("run {}\n", r.path.display()));
+    out.push_str(&format!("  {}\n", r.identity()));
+    out.push_str("summary:\n");
+    for (label, v) in r.summary_rows() {
+        out.push_str(&format!("  {label:<34} {}\n", fmt_val(v)));
+    }
+    if let Some(target) = loss_target {
+        let row = match r.time_to_loss(target) {
+            Some(secs) => format!("{secs:.3}s"),
+            None => "never reached".to_string(),
+        };
+        out.push_str(&format!("  {:<34} {row}\n", format!("time to loss <= {target}")));
+    }
+    out
+}
+
+/// `tfgnn runs diff A B` — per-row deltas between two journals, in the
+/// `report::render_diff` style (rows missing on one side show `n/a`).
+pub fn render_diff(a: &RunSummary, b: &RunSummary) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("runs diff\n  A: {}\n  B: {}\n", a.path.display(), b.path.display()));
+    let ia = a.identity();
+    let ib = b.identity();
+    if ia != ib {
+        out.push_str(&format!("  config differs:\n    A: {ia}\n    B: {ib}\n"));
+    } else {
+        out.push_str(&format!("  config: {ia}\n"));
+    }
+    let rows_a = a.summary_rows();
+    let rows_b = b.summary_rows();
+    let mut labels: Vec<&String> = rows_a.iter().map(|(l, _)| l).collect();
+    for (l, _) in &rows_b {
+        if !labels.contains(&l) {
+            labels.push(l);
+        }
+    }
+    let lookup = |rows: &[(String, f64)], label: &str| {
+        rows.iter().find(|(l, _)| l == label).map(|&(_, v)| v)
+    };
+    for label in labels {
+        let va = lookup(&rows_a, label);
+        let vb = lookup(&rows_b, label);
+        let line = match (va, vb) {
+            (Some(va), Some(vb)) => {
+                format!("{} -> {} ({:+.4})", fmt_val(va), fmt_val(vb), vb - va)
+            }
+            (Some(va), None) => format!("{} -> n/a", fmt_val(va)),
+            (None, Some(vb)) => format!("n/a -> {}", fmt_val(vb)),
+            (None, None) => continue,
+        };
+        out.push_str(&format!("  {label:<34} {line}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tfgnn_events_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    fn header() -> RunStart {
+        RunStart {
+            arch: "mpnn".to_string(),
+            engine: "native".to_string(),
+            task: "root_classification".to_string(),
+            trainer_threads: 2,
+            param_count: 123,
+            epochs: 1,
+            learning_rate: 1e-3,
+            dropout: 0.0,
+            weight_decay: 0.0,
+            grad_norm_limit: Some(100.0),
+        }
+    }
+
+    fn write_run(tag: &str, losses: &[f64], val_acc: f64) -> PathBuf {
+        let path = temp_path(tag);
+        let j = EventJournal::create(&path).unwrap();
+        j.write(&header().to_event()).unwrap();
+        let task = TaskMetrics { correct: 2.0, scored: 4.0, ..TaskMetrics::default() };
+        for (i, &loss) in losses.iter().enumerate() {
+            let g = GradStats {
+                step: i as u64,
+                grad_norm: 1.5,
+                param_norm: 10.0,
+                update_norm: 0.01,
+                update_ratio: 0.001,
+                layers: vec![LayerStats {
+                    name: "l0".to_string(),
+                    grad_norm: 1.0,
+                    param_norm: 5.0,
+                }],
+            };
+            let ev = StepEvent {
+                step: i as u64,
+                epoch: 0,
+                split: "train",
+                loss,
+                examples: 4.0,
+                task: &task,
+                step_secs: 0.5,
+                data_wait_secs: 0.1,
+                grad: Some(&g),
+            };
+            j.write(&ev.to_event()).unwrap();
+        }
+        j.write(&eval_event(0, "val", 1.0, 8.0, &[("accuracy", val_acc)])).unwrap();
+        j.write(&eval_event(0, "test", 1.1, 8.0, &[("accuracy", val_acc - 0.05)])).unwrap();
+        j.write(&run_end_event(losses.len() as u64, 0.5 * losses.len() as f64, val_acc))
+            .unwrap();
+        path
+    }
+
+    #[test]
+    fn journal_roundtrips_and_summarizes() {
+        let path = write_run("roundtrip", &[2.0, 1.5, 0.9], 0.5);
+        let s = RunSummary::from_path(&path).unwrap();
+        assert_eq!(s.steps, 3);
+        assert_eq!(s.final_train_loss(), Some(0.9));
+        assert!((s.total_step_secs - 1.5).abs() < 1e-9);
+        assert!((s.steps_per_sec() - 2.0).abs() < 1e-9);
+        let val = s.final_eval("val").unwrap();
+        assert_eq!(val.metrics, vec![("accuracy".to_string(), 0.5)]);
+        assert_eq!(s.best_eval("val", "accuracy"), Some(0.5));
+        // Time-to-target walks cumulative step seconds.
+        assert_eq!(s.time_to_loss(1.6), Some(1.0));
+        assert_eq!(s.time_to_loss(0.1), None);
+        let show = render_show(&s, Some(1.6));
+        assert!(show.contains("final train loss"), "{show}");
+        assert!(show.contains("time to loss <= 1.6"), "{show}");
+        let list = render_list(&[s]);
+        assert!(list.contains("task=root_classification"), "{list}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tail_is_bounded_and_recent() {
+        let path = temp_path("tail");
+        let j = EventJournal::create(&path).unwrap();
+        for i in 0..(TAIL_CAP + 10) {
+            j.write(&obj(vec![("kind", Json::Str("step".into())), ("step", int(i as u64))]))
+                .unwrap();
+        }
+        let tail = j.tail();
+        assert_eq!(tail.len(), TAIL_CAP);
+        let first = tail[0].get("step").unwrap().as_i64().unwrap();
+        assert_eq!(first as usize, 10, "oldest retained record is record 10");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn diff_reports_metric_deltas() {
+        let a = write_run("diff_a", &[2.0, 1.0], 0.4);
+        let b = write_run("diff_b", &[2.0, 0.5], 0.6);
+        let sa = RunSummary::from_path(&a).unwrap();
+        let sb = RunSummary::from_path(&b).unwrap();
+        let text = render_diff(&sa, &sb);
+        assert!(text.contains("final train loss"), "{text}");
+        assert!(text.contains("(-0.5000)"), "{text}");
+        assert!(text.contains("best val accuracy"), "{text}");
+        assert!(text.contains("(+0.2000)"), "{text}");
+        assert!(text.contains("config: mpnn"), "{text}");
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
+    }
+
+    #[test]
+    fn schema_violations_are_structured_errors() {
+        // Missing header.
+        let path = temp_path("bad_header");
+        std::fs::write(&path, "{\"kind\":\"step\",\"step\":0}\n").unwrap();
+        let err = RunSummary::from_path(&path).unwrap_err();
+        assert!(err.to_string().contains("run_start"), "{err}");
+        // Wrong schema tag.
+        std::fs::write(&path, "{\"kind\":\"run_start\",\"schema\":\"nope\"}\n").unwrap();
+        let err = RunSummary::from_path(&path).unwrap_err();
+        assert!(err.to_string().contains("tfgnn_events_v1"), "{err}");
+        // Torn line.
+        std::fs::write(&path, "{\"kind\":\"run_start\",\"schema\":\"tfgnn_events_v1\"}\n{oops")
+            .unwrap();
+        let err = RunSummary::from_path(&path).unwrap_err();
+        assert!(err.to_string().contains(":2:"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn non_finite_values_serialize_as_null() {
+        let task = TaskMetrics::default();
+        let ev = StepEvent {
+            step: 0,
+            epoch: 0,
+            split: "train",
+            loss: f64::NAN,
+            examples: 0.0,
+            task: &task,
+            step_secs: 0.0,
+            data_wait_secs: 0.0,
+            grad: None,
+        };
+        let line = ev.to_event().to_string();
+        assert!(!line.contains("NaN"), "{line}");
+        let rec = Json::parse(&line).unwrap();
+        assert!(matches!(rec.get("loss").unwrap(), Json::Null));
+    }
+}

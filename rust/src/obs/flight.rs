@@ -7,25 +7,33 @@
 //! hits a watchdog trip, an overload burst, or a failed batch, it
 //! writes a self-contained JSON snapshot (full metrics registry plus
 //! the most recent trace events) so the evidence survives without any
-//! export flags having been on.
+//! export flags having been on. The native trainer's gradient-health
+//! sentinel fires the same recorder, embedding the recent event-journal
+//! tail via [`FlightRecorder::record_with`].
 //!
 //! Dumps are **rate-limited** (one per [`DEFAULT_MIN_INTERVAL`] by
 //! default; suppressed triggers are tallied in
-//! `flight_rate_limited_total`) so a misbehaving server cannot flood
-//! the disk, and **atomic** (written to a dotted temp file, then
+//! `flight_rate_limited_total` and per recorder via
+//! [`FlightRecorder::suppressed`]) so a misbehaving server cannot
+//! flood the disk, and **atomic** (written to a dotted temp file, then
 //! renamed) so a crash mid-dump never leaves a torn JSON document.
 //! The trace snapshot uses the non-destructive
 //! [`super::trace::snapshot`], so recording an incident never steals
 //! events from a later `--trace-out` export.
 //!
-//! Dump layout (`incident-<seq>-<trigger>.json`, schema
+//! Dump layout (`incident-<start-epoch>-<seq>-<trigger>.json`, schema
 //! `tfgnn_incident_v1`): `trigger`, `detail`, `seq`,
 //! `unix_time_secs`, `metrics` (a `tfgnn_metrics_v1` document) and
-//! `trace` (a Chrome `trace_event` document).
+//! `trace` (a Chrome `trace_event` document), plus any extra fields
+//! the caller attached (e.g. `events` — the journal tail). The
+//! `<start-epoch>` salt is the process start time in unix seconds:
+//! a restarted process begins again at seq 0, and without the salt it
+//! would clobber the previous incarnation's dumps — exactly the
+//! incidents a post-mortem needs.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, PoisonError};
+use std::sync::{Mutex, OnceLock, PoisonError};
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use super::metrics::names;
@@ -38,12 +46,23 @@ pub const DEFAULT_MIN_INTERVAL: Duration = Duration::from_secs(5);
 /// Most recent trace events captured per dump.
 const TRACE_EVENT_CAP: usize = 2048;
 
+/// The process start epoch (unix seconds, read once): the filename
+/// salt that keeps dumps from different process incarnations distinct.
+pub fn process_start_epoch() -> u64 {
+    static EPOCH: OnceLock<u64> = OnceLock::new();
+    *EPOCH.get_or_init(|| {
+        SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+    })
+}
+
 /// Writes rate-limited incident snapshots into one directory.
 pub struct FlightRecorder {
     dir: PathBuf,
     min_interval: Duration,
     last_dump: Mutex<Option<Instant>>,
     seq: AtomicU64,
+    suppressed: AtomicU64,
+    salt: u64,
 }
 
 impl FlightRecorder {
@@ -55,6 +74,12 @@ impl FlightRecorder {
 
     /// A recorder with an explicit rate limit (tests use short ones).
     pub fn with_min_interval(dir: &Path, min_interval: Duration) -> Result<FlightRecorder> {
+        FlightRecorder::with_salt(dir, min_interval, process_start_epoch())
+    }
+
+    /// A recorder with an explicit filename salt — the restart-collision
+    /// regression test simulates two process incarnations with it.
+    pub fn with_salt(dir: &Path, min_interval: Duration, salt: u64) -> Result<FlightRecorder> {
         std::fs::create_dir_all(dir).map_err(|e| {
             Error::Runtime(format!("flight: cannot create {}: {e}", dir.display()))
         })?;
@@ -63,7 +88,15 @@ impl FlightRecorder {
             min_interval,
             last_dump: Mutex::new(None),
             seq: AtomicU64::new(0),
+            suppressed: AtomicU64::new(0),
+            salt,
         })
+    }
+
+    /// Triggers this recorder suppressed via its rate limiter
+    /// (surfaced on `/statusz` as `flight_suppressed`).
+    pub fn suppressed(&self) -> u64 {
+        self.suppressed.load(Ordering::Relaxed)
     }
 
     /// Record an incident: dump a metrics + trace snapshot unless the
@@ -71,11 +104,23 @@ impl FlightRecorder {
     /// `None` when rate-limited or when the write failed (recording an
     /// incident must never take the serving path down with it).
     pub fn record(&self, trigger: &str, detail: &str) -> Option<PathBuf> {
+        self.record_with(trigger, detail, Vec::new())
+    }
+
+    /// [`FlightRecorder::record`] with extra top-level fields appended
+    /// to the dump — the trainer attaches `("events", <journal tail>)`.
+    pub fn record_with(
+        &self,
+        trigger: &str,
+        detail: &str,
+        extra: Vec<(&str, Json)>,
+    ) -> Option<PathBuf> {
         {
             let mut g = self.last_dump.lock().unwrap_or_else(PoisonError::into_inner);
             if let Some(last) = *g {
                 if last.elapsed() < self.min_interval {
                     crate::obs_counter!(names::FLIGHT_RATE_LIMITED).inc();
+                    self.suppressed.fetch_add(1, Ordering::Relaxed);
                     return None;
                 }
             }
@@ -87,7 +132,7 @@ impl FlightRecorder {
             .map(|d| d.as_secs())
             .unwrap_or(0);
         let (events, dropped) = super::trace::snapshot(TRACE_EVENT_CAP);
-        let doc = obj(vec![
+        let mut fields = vec![
             ("schema", Json::Str("tfgnn_incident_v1".to_string())),
             ("seq", Json::Int(i64::try_from(seq).unwrap_or(i64::MAX))),
             ("trigger", Json::Str(trigger.to_string())),
@@ -95,8 +140,10 @@ impl FlightRecorder {
             ("unix_time_secs", Json::Int(i64::try_from(unix_secs).unwrap_or(i64::MAX))),
             ("metrics", super::metrics::global().snapshot().to_json()),
             ("trace", super::trace::to_chrome_json(&events, dropped)),
-        ]);
-        let name = format!("incident-{seq:04}-{}.json", sanitize(trigger));
+        ];
+        fields.extend(extra);
+        let doc = obj(fields);
+        let name = format!("incident-{}-{seq:04}-{}.json", self.salt, sanitize(trigger));
         let tmp = self.dir.join(format!(".{name}.tmp"));
         let dest = self.dir.join(&name);
         let mut body = doc.to_pretty();
@@ -141,9 +188,12 @@ mod tests {
             "tfgnn_metrics_v1"
         );
         assert!(doc.get("trace").unwrap().get("traceEvents").is_ok());
-        assert!(path.file_name().is_some_and(|n| n == "incident-0000-watchdog-trip.json"));
-        // Within the interval: suppressed.
+        let want = format!("incident-{}-0000-watchdog-trip.json", process_start_epoch());
+        assert!(path.file_name().is_some_and(|n| n == want.as_str()), "{path:?}");
+        // Within the interval: suppressed, and the recorder tallies it.
+        assert_eq!(rec.suppressed(), 0);
         assert!(rec.record("overload", "burst").is_none());
+        assert_eq!(rec.suppressed(), 1);
         // No temp droppings.
         let leftovers: Vec<_> = std::fs::read_dir(&dir)
             .unwrap()
@@ -162,6 +212,39 @@ mod tests {
         let a = rec.record("failed-batch", "a").expect("dump a");
         let b = rec.record("failed-batch", "b").expect("dump b");
         assert_ne!(a, b, "sequence number keeps dumps distinct");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Regression: a restarted process begins again at seq 0; without
+    /// the start-epoch salt its first dump would clobber the previous
+    /// incarnation's `incident-0000-*.json`.
+    #[test]
+    fn restart_does_not_clobber_prior_incidents() {
+        let dir = temp_dir("restart");
+        let _ = std::fs::remove_dir_all(&dir);
+        let first = FlightRecorder::with_salt(&dir, Duration::ZERO, 1_111).unwrap();
+        let a = first.record("watchdog-trip", "incarnation one").expect("dump a");
+        // "Restart": a fresh recorder, seq back at 0, different salt.
+        let second = FlightRecorder::with_salt(&dir, Duration::ZERO, 2_222).unwrap();
+        let b = second.record("watchdog-trip", "incarnation two").expect("dump b");
+        assert_ne!(a, b, "same seq + same trigger must not collide across restarts");
+        assert!(a.exists(), "first incarnation's dump survives");
+        let doc = Json::parse(&std::fs::read_to_string(&a).unwrap()).unwrap();
+        assert_eq!(doc.get("detail").unwrap().as_str().unwrap(), "incarnation one");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_with_appends_extra_fields() {
+        let dir = temp_dir("extra");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rec = FlightRecorder::with_min_interval(&dir, Duration::ZERO).unwrap();
+        let tail = Json::Arr(vec![obj(vec![("kind", Json::Str("step".into()))])]);
+        let path = rec.record_with("grad-nonfinite", "step 7", vec![("events", tail)]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let events = doc.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("kind").unwrap().as_str().unwrap(), "step");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

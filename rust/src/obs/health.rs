@@ -27,7 +27,7 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use super::metrics::names;
 
@@ -136,6 +136,9 @@ pub struct Watchdog {
     deadline_misses: AtomicU64,
     trips: AtomicU64,
     healthy: AtomicBool,
+    /// Unix seconds of the last [`Watchdog::evaluate`] call (0 =
+    /// never): `/statusz` proof that the checker thread is alive.
+    last_eval_unix: AtomicU64,
 }
 
 impl Watchdog {
@@ -149,6 +152,7 @@ impl Watchdog {
             deadline_misses: AtomicU64::new(0),
             trips: AtomicU64::new(0),
             healthy: AtomicBool::new(true),
+            last_eval_unix: AtomicU64::new(0),
         }
     }
 
@@ -174,6 +178,16 @@ impl Watchdog {
     /// Healthy→unhealthy transitions so far.
     pub fn trips(&self) -> u64 {
         self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Unix seconds of the most recent [`Watchdog::evaluate`] call,
+    /// `None` before the first one — a dead checker thread shows up as
+    /// a stale (or missing) timestamp on `/statusz`.
+    pub fn last_eval_unix_secs(&self) -> Option<u64> {
+        match self.last_eval_unix.load(Ordering::Relaxed) {
+            0 => None,
+            t => Some(t),
+        }
     }
 
     /// Point-in-time health check; pure (no transition bookkeeping).
@@ -229,6 +243,11 @@ impl Watchdog {
     /// report and whether this call was the tripping edge (the flight
     /// recorder's cue).
     pub fn evaluate(&self, backlog: i64) -> (HealthReport, bool) {
+        let unix_secs = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs().max(1))
+            .unwrap_or(1);
+        self.last_eval_unix.store(unix_secs, Ordering::Relaxed);
         let mut report = self.check(backlog);
         let was = self.healthy.swap(report.healthy, Ordering::Relaxed);
         let tripped = was && !report.healthy;
@@ -251,6 +270,14 @@ fn micros_since(epoch: Instant) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn evaluate_stamps_last_eval_time() {
+        let dog = Watchdog::new(Duration::from_millis(10));
+        assert_eq!(dog.last_eval_unix_secs(), None, "no evaluation yet");
+        let _ = dog.evaluate(0);
+        assert!(dog.last_eval_unix_secs().is_some());
+    }
 
     #[test]
     fn idle_server_is_healthy() {

@@ -588,9 +588,15 @@ pub mod names {
     pub const THREADPOOL_QUEUE_WAIT_SECONDS: &str = "threadpool_queue_wait_seconds";
     pub const TRAINER_ALLREDUCE_SECONDS: &str = "trainer_allreduce_seconds";
     pub const TRAINER_BACKWARD_SECONDS: &str = "trainer_backward_seconds";
+    pub const TRAINER_DATA_WAIT_SECONDS: &str = "trainer_data_wait_seconds";
+    pub const TRAINER_EVENTS: &str = "trainer_events_total";
     pub const TRAINER_FORWARD_SECONDS: &str = "trainer_forward_seconds";
+    pub const TRAINER_GRAD_EXPLOSIONS: &str = "trainer_grad_explosions_total";
+    pub const TRAINER_GRAD_NONFINITE: &str = "trainer_grad_nonfinite_total";
+    pub const TRAINER_GRAD_NORM: &str = "trainer_grad_norm";
     pub const TRAINER_OPTIMIZER_SECONDS: &str = "trainer_optimizer_seconds";
     pub const TRAINER_STEPS: &str = "trainer_steps_total";
+    pub const TRAINER_UPDATE_RATIO: &str = "trainer_update_ratio";
 }
 
 /// Every well-known metric, sorted by name. `docs/metrics.md` is
@@ -795,10 +801,40 @@ pub const METRICS: &[MetricDef] = &[
         help: "Backward (VJP) time per trunk backward call.",
     },
     MetricDef {
+        name: names::TRAINER_DATA_WAIT_SECONDS,
+        kind: MetricKind::Histogram,
+        stage: "trainer",
+        help: "Time the epoch loop waited on the sampler/pipeline for the next padded wave.",
+    },
+    MetricDef {
+        name: names::TRAINER_EVENTS,
+        kind: MetricKind::Counter,
+        stage: "trainer",
+        help: "Records appended to a training-run event journal (--events-out).",
+    },
+    MetricDef {
         name: names::TRAINER_FORWARD_SECONDS,
         kind: MetricKind::Histogram,
         stage: "trainer",
         help: "Forward (tape-recording) time per trunk forward call.",
+    },
+    MetricDef {
+        name: names::TRAINER_GRAD_EXPLOSIONS,
+        kind: MetricKind::Counter,
+        stage: "trainer",
+        help: "Gradient-health sentinel trips on a global norm above --grad-norm-limit.",
+    },
+    MetricDef {
+        name: names::TRAINER_GRAD_NONFINITE,
+        kind: MetricKind::Counter,
+        stage: "trainer",
+        help: "Gradient-health sentinel trips on a NaN/Inf gradient tensor.",
+    },
+    MetricDef {
+        name: names::TRAINER_GRAD_NORM,
+        kind: MetricKind::Histogram,
+        stage: "trainer",
+        help: "Global gradient L2 norm per step (unitless; recorded when probes are on).",
     },
     MetricDef {
         name: names::TRAINER_OPTIMIZER_SECONDS,
@@ -811,6 +847,12 @@ pub const METRICS: &[MetricDef] = &[
         kind: MetricKind::Counter,
         stage: "trainer",
         help: "Training steps completed by NativeTrainer::train_batch.",
+    },
+    MetricDef {
+        name: names::TRAINER_UPDATE_RATIO,
+        kind: MetricKind::Histogram,
+        stage: "trainer",
+        help: "Per-step update ratio (delta-param norm over param norm, unitless).",
     },
 ];
 
@@ -980,8 +1022,15 @@ mod tests {
                     assert!(m.name.ends_with("_total"), "{}", m.name);
                 }
                 MetricKind::Histogram => {
+                    // Histograms are seconds-valued except the listed
+                    // unitless distributions.
+                    let unitless = [
+                        names::SERVE_WAVE_SIZE,
+                        names::TRAINER_GRAD_NORM,
+                        names::TRAINER_UPDATE_RATIO,
+                    ];
                     assert!(
-                        m.name.ends_with("_seconds") || m.name == names::SERVE_WAVE_SIZE,
+                        m.name.ends_with("_seconds") || unitless.contains(&m.name),
                         "{}",
                         m.name
                     );

@@ -39,6 +39,14 @@
 //!   rate-limited metrics + trace snapshot to `--incident-dir` on
 //!   watchdog trips, overload bursts and failed batches.
 //!
+//! PR 10 adds the *training* half — run telemetry rather than serving
+//! introspection:
+//!
+//! * **[`events`]** — an append-only per-step event journal
+//!   (`tfgnn_events_v1` JSONL, `--events-out`), gradient-health probe
+//!   types ([`events::GradStats`], [`events::Telemetry`]) and the
+//!   `tfgnn runs list|show|diff` summaries built over journals.
+//!
 //! ## Inertness contract
 //!
 //! Observability must never perturb the oracles the rest of the crate
@@ -63,6 +71,7 @@
 //! and no lookup ever unwraps.
 
 pub mod admin;
+pub mod events;
 pub mod flight;
 pub mod health;
 pub mod metrics;

@@ -70,7 +70,11 @@ pub fn approx_percentile(h: &HistogramSnapshot, q: f64) -> f64 {
 }
 
 fn fmt_seconds(v: f64) -> String {
-    if v == f64::INFINITY {
+    if v.is_nan() {
+        // A statistic over zero observations has no value; never print
+        // a literal NaN.
+        "n/a".to_string()
+    } else if v == f64::INFINITY {
         "inf".to_string()
     } else if v >= 1.0 {
         format!("{v:.3}s")
@@ -78,6 +82,26 @@ fn fmt_seconds(v: f64) -> String {
         format!("{:.3}ms", v * 1e3)
     } else {
         format!("{:.3}us", v * 1e6)
+    }
+}
+
+/// Mean cell for a histogram line — `n/a` when there is nothing to
+/// average (a zero-count window still renders when NaNs were
+/// rejected, and `0.000us` would misread as "fast").
+fn fmt_mean(h: &HistogramSnapshot) -> String {
+    if h.count == 0 {
+        "n/a".to_string()
+    } else {
+        fmt_seconds(h.mean_seconds())
+    }
+}
+
+/// Percentile cell — `n/a` for an empty histogram window.
+fn fmt_pct(h: &HistogramSnapshot, q: f64) -> String {
+    if h.count == 0 {
+        "n/a".to_string()
+    } else {
+        fmt_seconds(approx_percentile(h, q))
     }
 }
 
@@ -105,11 +129,11 @@ pub fn render_stats(snap: &MetricsSnapshot) -> String {
         let mut line = format!(
             "  {name:<34} count={} mean={} p50<={} p95<={} p99<={} p99.9<={}",
             h.count,
-            fmt_seconds(h.mean_seconds()),
-            fmt_seconds(approx_percentile(h, 0.50)),
-            fmt_seconds(approx_percentile(h, 0.95)),
-            fmt_seconds(approx_percentile(h, 0.99)),
-            fmt_seconds(approx_percentile(h, 0.999)),
+            fmt_mean(h),
+            fmt_pct(h, 0.50),
+            fmt_pct(h, 0.95),
+            fmt_pct(h, 0.99),
+            fmt_pct(h, 0.999),
         );
         if h.nan_rejected > 0 {
             line.push_str(&format!(" nan_rejected={}", h.nan_rejected));
@@ -180,10 +204,10 @@ pub fn render_diff(old: &MetricsSnapshot, new: &MetricsSnapshot) -> String {
         let mut line = format!(
             "  {name:<34} count=+{} mean={} p50<={} p95<={} p99<={}",
             h.count,
-            fmt_seconds(h.mean_seconds()),
-            fmt_seconds(approx_percentile(h, 0.50)),
-            fmt_seconds(approx_percentile(h, 0.95)),
-            fmt_seconds(approx_percentile(h, 0.99)),
+            fmt_mean(h),
+            fmt_pct(h, 0.50),
+            fmt_pct(h, 0.95),
+            fmt_pct(h, 0.99),
         );
         if h.nan_rejected > 0 {
             line.push_str(&format!(" nan_rejected=+{}", h.nan_rejected));
@@ -263,6 +287,25 @@ mod tests {
         assert!(text.contains("count=+1"), "{text}");
         // Identical snapshots diff to nothing.
         assert_eq!(render_diff(&new, &new), "(no differences)\n");
+    }
+
+    /// Regression: a histogram window with zero observations (e.g. a
+    /// delta window where only NaNs were rejected) must render `n/a`
+    /// statistics, never `NaN` or a misleading `0.000us`.
+    #[test]
+    fn zero_count_histogram_renders_na() {
+        let old = MetricsSnapshot::default();
+        let mut new = MetricsSnapshot::default();
+        let h = metrics::Histogram::detached();
+        h.record(f64::NAN);
+        new.histograms.insert("serve_wave_seconds".to_string(), h.snapshot());
+        let text = render_diff(&old, &new);
+        assert!(text.contains("serve_wave_seconds"), "{text}");
+        assert!(text.contains("nan_rejected=+1"), "{text}");
+        assert!(text.contains("mean=n/a"), "{text}");
+        assert!(text.contains("p50<=n/a"), "{text}");
+        assert!(!text.contains("NaN"), "{text}");
+        assert!(!text.contains("0.000us"), "{text}");
     }
 
     #[test]

@@ -25,6 +25,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::graph::pad::{fit_or_skip, PadSpec, Padded};
+use crate::obs::events::{self, EventJournal, GradStats, RunStart, StepEvent, Telemetry};
+use crate::obs::flight::FlightRecorder;
+use crate::obs::metrics::names as metric_names;
 use crate::ops::model_ref::ModelConfig;
 use crate::pipeline::{epoch_stream, DatasetProvider, PipelineConfig, SamplingProvider};
 use crate::runtime::batch::RootTask;
@@ -69,6 +72,18 @@ pub trait TrainEngine {
     fn train_batch(&mut self, padded: &Padded) -> Result<StepMetrics>;
     fn eval_batch(&mut self, padded: &Padded) -> Result<StepMetrics>;
     fn write_checkpoint(&self, path: &Path) -> Result<()>;
+
+    /// Install trainer telemetry (gradient probes, sentinel limit,
+    /// incident recorder, journal handle for the incident tail).
+    /// Engines without gradient access ignore it — their journals
+    /// simply carry no grad fields.
+    fn set_telemetry(&mut self, _telemetry: Telemetry) {}
+
+    /// The most recent train step's gradient-health stats, if this
+    /// engine computed them (the native engine with probes on).
+    fn take_grad_stats(&mut self) -> Option<GradStats> {
+        None
+    }
 }
 
 impl TrainEngine for Trainer {
@@ -97,6 +112,14 @@ impl TrainEngine for NativeTrainer {
 
     fn write_checkpoint(&self, path: &Path) -> Result<()> {
         self.save(path)
+    }
+
+    fn set_telemetry(&mut self, telemetry: Telemetry) {
+        NativeTrainer::set_telemetry(self, telemetry)
+    }
+
+    fn take_grad_stats(&mut self) -> Option<GradStats> {
+        NativeTrainer::take_grad_stats(self)
     }
 }
 
@@ -127,6 +150,14 @@ pub struct RunConfig {
     pub config_path: Option<PathBuf>,
     /// Where to write the final checkpoint (None = skip).
     pub checkpoint: Option<PathBuf>,
+    /// Append the `tfgnn_events_v1` step journal here (None = off).
+    pub events_out: Option<PathBuf>,
+    /// Gradient-explosion sentinel threshold: error out with a
+    /// structured diagnostic when the global gradient L2 norm exceeds
+    /// this (None = sentinel off; non-finite gradients always trip).
+    pub grad_norm_limit: Option<f64>,
+    /// Directory for gradient-health incident dumps (None = off).
+    pub incident_dir: Option<PathBuf>,
     /// Print per-epoch progress lines.
     pub verbose: bool,
 }
@@ -147,6 +178,9 @@ impl RunConfig {
             trainer_threads: 0,
             config_path: None,
             checkpoint: None,
+            events_out: None,
+            grad_norm_limit: None,
+            incident_dir: None,
             verbose: false,
         }
     }
@@ -290,6 +324,33 @@ fn native_hyperparams(cfg: &RunConfig, manifest: &Manifest) -> Result<(AdamConfi
     Ok((adam, init_seed))
 }
 
+/// Resolved hyper-parameters for the journal's `run_start` header:
+/// the CLI override when given, else the manifest's train block
+/// (native configs without a `model.dropout` key fall back to the
+/// individual train keys, zero where absent — header metadata only,
+/// never fed into the update).
+fn header_hyperparams(cfg: &RunConfig, manifest: &Manifest) -> Hyperparams {
+    if let Some(hp) = cfg.hp {
+        return hp;
+    }
+    if let Ok(hp) = Hyperparams::from_manifest(manifest) {
+        return hp;
+    }
+    let get = |key: &str| {
+        manifest
+            .config
+            .opt("train")
+            .and_then(|t| t.opt(key))
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0) as f32
+    };
+    Hyperparams {
+        learning_rate: get("learning_rate"),
+        dropout: 0.0,
+        weight_decay: get("weight_decay"),
+    }
+}
+
 /// The native-engine run path: no AOT artifacts required. Reads the
 /// manifest from `artifacts_dir` when present, else the raw config at
 /// `config_path`. The config's `task` block selects the objective:
@@ -328,6 +389,7 @@ fn run_native_linkpred(
     model_cfg: ModelConfig,
 ) -> Result<RunReport> {
     let tcfg = model_cfg.task.clone();
+    let tcfg_kind = tcfg.kind.clone();
     let mag_cfg = manifest.mag_config()?;
     let dataset = generate(&mag_cfg);
     let holdout =
@@ -371,6 +433,8 @@ fn run_native_linkpred(
         batch_size,
         pad,
         split_sizes,
+        task_kind: tcfg_kind,
+        hp: header_hyperparams(cfg, &manifest),
         val: Box::new(move |limit| {
             Box::new(pair_eval_batches(
                 Arc::clone(&s_val),
@@ -424,6 +488,11 @@ pub struct RunData<'a> {
     pub pad: PadSpec,
     /// Examples per train/val/test split, for the verbose banner.
     pub split_sizes: [usize; 3],
+    /// Task kind (`root_classification` | `graph_regression` |
+    /// `link_prediction`) — names the journal's eval metrics.
+    pub task_kind: String,
+    /// Resolved hyper-parameters, for the journal header.
+    pub hp: Hyperparams,
     pub val: EvalBatches<'a>,
     pub test: EvalBatches<'a>,
 }
@@ -445,11 +514,21 @@ pub fn run_loop(
         shuffle_seed: cfg.shuffle_seed,
         sampling: SamplerConfig::with_threads(cfg.sampler_threads),
     });
+    let task_kind = env
+        .manifest
+        .config
+        .opt("task")
+        .and_then(|t| t.opt("type"))
+        .and_then(|v| v.as_str().ok())
+        .unwrap_or("root_classification")
+        .to_string();
     let data = RunData {
         provider,
         batch_size: env.batch_size,
         pad: env.pad.clone(),
         split_sizes: [train_seeds.len(), val_seeds.len(), test_seeds.len()],
+        task_kind,
+        hp: header_hyperparams(cfg, &env.manifest),
         val: Box::new(move |limit| Box::new(env.eval_batches(&val_seeds, limit))),
         test: Box::new(move |limit| Box::new(env.eval_batches(&test_seeds, limit))),
     };
@@ -482,6 +561,42 @@ pub fn run_data_loop(
     pipe_cfg.shuffle_seed = cfg.shuffle_seed;
     pipe_cfg.prep_threads = cfg.prep_threads;
 
+    // Telemetry: the journal is written here — one writer, outside the
+    // math — while the engine gets a handle only so a gradient-health
+    // sentinel can embed the recent tail into its incident dump.
+    let journal = match &cfg.events_out {
+        Some(path) => Some(Arc::new(EventJournal::create(path)?)),
+        None => None,
+    };
+    let flight = match &cfg.incident_dir {
+        Some(dir) => Some(Arc::new(FlightRecorder::new(dir)?)),
+        None => None,
+    };
+    let telemetry = Telemetry {
+        grad_stats: journal.is_some(),
+        grad_norm_limit: cfg.grad_norm_limit,
+        flight,
+        journal: journal.clone(),
+    };
+    if telemetry.probes_on() || telemetry.flight.is_some() {
+        engine.set_telemetry(telemetry);
+    }
+    if let Some(j) = &journal {
+        let header = RunStart {
+            arch: cfg.arch.clone(),
+            engine: format!("{:?}", cfg.engine).to_lowercase(),
+            task: data.task_kind.clone(),
+            trainer_threads: cfg.trainer_threads,
+            param_count,
+            epochs: cfg.epochs,
+            learning_rate: data.hp.learning_rate as f64,
+            dropout: data.hp.dropout as f64,
+            weight_decay: data.hp.weight_decay as f64,
+            grad_norm_limit: cfg.grad_norm_limit,
+        };
+        j.write(&header.to_event())?;
+    }
+
     let mut epochs = Vec::new();
     let mut best_val_acc = 0.0f64;
     let mut total_steps = 0u64;
@@ -491,11 +606,38 @@ pub fn run_data_loop(
         let t0 = Instant::now();
         let stream = epoch_stream(Arc::clone(&data.provider), pipe_cfg.clone(), epoch as u64)?;
         let mut train_metrics = EpochMetrics::default();
-        for padded in stream.iter() {
+        let mut batches = stream.iter();
+        loop {
+            // Time the wait on the sampler/pipeline separately from
+            // the step itself — the journal's `data_wait_secs`.
+            let tw = Instant::now();
+            let Some(padded) = batches.next() else { break };
+            let data_wait_secs = tw.elapsed().as_secs_f64();
+            if crate::obs::recording() {
+                crate::obs_histogram!(metric_names::TRAINER_DATA_WAIT_SECONDS)
+                    .record(data_wait_secs);
+            }
             let ts = Instant::now();
             let m = engine.train_batch(&padded)?;
-            total_step_secs += ts.elapsed().as_secs_f64();
+            let step_secs = ts.elapsed().as_secs_f64();
+            total_step_secs += step_secs;
+            let step = total_steps;
             total_steps += 1;
+            if let Some(j) = &journal {
+                let grad = engine.take_grad_stats();
+                let ev = StepEvent {
+                    step,
+                    epoch,
+                    split: "train",
+                    loss: m.loss as f64,
+                    examples: m.weight as f64,
+                    task: &m.task,
+                    step_secs,
+                    data_wait_secs,
+                    grad: grad.as_ref(),
+                };
+                j.write(&ev.to_event())?;
+            }
             train_metrics.add(m);
             if let Some(max) = cfg.max_steps_per_epoch {
                 if train_metrics.steps >= max {
@@ -503,6 +645,7 @@ pub fn run_data_loop(
                 }
             }
         }
+        drop(batches);
         let skipped =
             stream.stats.batches_skipped.load(std::sync::atomic::Ordering::Relaxed);
         drop(stream);
@@ -512,6 +655,11 @@ pub fn run_data_loop(
             if let Some(p) = padded? {
                 val_metrics.add(engine.eval_batch(&p)?);
             }
+        }
+        if let Some(j) = &journal {
+            let m = crate::tasks::summary_metrics(&data.task_kind, &val_metrics);
+            let examples = val_metrics.examples() as f64;
+            j.write(&events::eval_event(epoch, "val", val_metrics.loss(), examples, &m))?;
         }
         best_val_acc = best_val_acc.max(val_metrics.accuracy());
         let report = EpochReport {
@@ -538,6 +686,12 @@ pub fn run_data_loop(
     }
     if cfg.verbose {
         println!("test: {test}");
+    }
+    if let Some(j) = &journal {
+        let last_epoch = cfg.epochs.saturating_sub(1);
+        let m = crate::tasks::summary_metrics(&data.task_kind, &test);
+        j.write(&events::eval_event(last_epoch, "test", test.loss(), test.examples() as f64, &m))?;
+        j.write(&events::run_end_event(total_steps, total_step_secs, best_val_acc))?;
     }
 
     if let Some(path) = &cfg.checkpoint {
@@ -665,6 +819,40 @@ mod tests {
         let tensors = crate::train::checkpoint::load(&ckpt_path).unwrap();
         assert!(tensors.iter().any(|(n, _)| n == "step"));
         assert!(tensors.iter().any(|(n, _)| n.starts_with("adam_m.")));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// `--events-out` writes a parseable `tfgnn_events_v1` journal:
+    /// run_start header, one step record per optimizer step carrying
+    /// the gradient probe fields, eval records for val + test, and a
+    /// run_end trailer.
+    #[test]
+    fn native_run_writes_event_journal() {
+        let text = tiny_config_text("");
+        let dir = std::env::temp_dir().join(format!("tfgnn-run-ev-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg_path = dir.join("tiny.json");
+        std::fs::write(&cfg_path, text).unwrap();
+        let events_path = dir.join("events.jsonl");
+        let mut cfg = RunConfig::new(&dir, "mpnn");
+        cfg.engine = EngineKind::Native;
+        cfg.config_path = Some(cfg_path);
+        cfg.epochs = 1;
+        cfg.max_steps_per_epoch = Some(3);
+        cfg.max_eval_batches = Some(1);
+        cfg.trainer_threads = 2;
+        cfg.events_out = Some(events_path.clone());
+        let report = run(&cfg).unwrap();
+        let s = crate::obs::events::RunSummary::from_path(&events_path).unwrap();
+        assert_eq!(s.steps, report.epochs[0].train.steps as u64);
+        assert!(s.final_train_loss().is_some());
+        assert!(s.final_eval("val").is_some());
+        assert!(s.final_eval("test").is_some());
+        assert!(s.end.is_some());
+        let raw = std::fs::read_to_string(&events_path).unwrap();
+        assert!(raw.contains("\"grad_norm\""), "step records carry probe fields: {raw}");
+        assert!(raw.contains("\"update_ratio\""), "{raw}");
+        assert!(raw.contains("\"data_wait_secs\""), "{raw}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

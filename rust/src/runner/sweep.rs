@@ -10,6 +10,8 @@
 //! manifest, and reports the top trials by validation accuracy, like
 //! the study's "top-3 configs" summary.
 
+use std::path::{Path, PathBuf};
+
 use super::{run_in_env, MagEnv, RunConfig};
 use crate::runtime::batch::RootTask;
 use crate::runtime::Runtime;
@@ -49,6 +51,15 @@ impl SweepConfig {
     }
 }
 
+/// Per-trial journal path derived from the sweep's base `--events-out`
+/// (`sweep.jsonl` → `sweep-trial003.jsonl`): every trial gets its own
+/// `tfgnn_events_v1` file, ready for `tfgnn runs diff`.
+pub fn trial_events_path(base: &Path, trial: usize) -> PathBuf {
+    let stem = base.file_stem().and_then(|s| s.to_str()).unwrap_or("events");
+    let ext = base.extension().and_then(|s| s.to_str()).unwrap_or("jsonl");
+    base.with_file_name(format!("{stem}-trial{trial:03}.{ext}"))
+}
+
 /// Run the grid; returns trials sorted by validation accuracy
 /// (descending), like a Vizier study summary.
 ///
@@ -73,6 +84,9 @@ pub fn sweep(cfg: &SweepConfig) -> Result<Vec<Trial>> {
                 let mut rc = cfg.base.clone();
                 rc.hp = Some(hp);
                 rc.checkpoint = None;
+                if let Some(base) = &cfg.base.events_out {
+                    rc.events_out = Some(trial_events_path(base, trials.len()));
+                }
                 trainer.reset()?;
                 let report = run_in_env(&rc, &env, &mut trainer)?;
                 if cfg.base.verbose {
@@ -119,6 +133,15 @@ mod tests {
     fn grid_size() {
         let cfg = SweepConfig::default_grid(RunConfig::new("/tmp", "mpnn"));
         assert_eq!(cfg.num_trials(), 27);
+    }
+
+    #[test]
+    fn trial_events_paths_are_distinct_siblings() {
+        let base = Path::new("/tmp/out/sweep.jsonl");
+        assert_eq!(trial_events_path(base, 0), Path::new("/tmp/out/sweep-trial000.jsonl"));
+        assert_eq!(trial_events_path(base, 12), Path::new("/tmp/out/sweep-trial012.jsonl"));
+        let bare = Path::new("events");
+        assert_eq!(trial_events_path(bare, 3), Path::new("events-trial003.jsonl"));
     }
 
     #[test]

@@ -546,11 +546,13 @@ fn status_closure(
     stats: &Arc<ServeStats>,
     watchdog: &Arc<Watchdog>,
     generation: &Arc<dyn Fn() -> u64 + Send + Sync>,
+    flight: Option<&Arc<FlightRecorder>>,
 ) -> Arc<dyn Fn() -> Json + Send + Sync> {
     let start = Instant::now();
     let stats = Arc::clone(stats);
     let watchdog = Arc::clone(watchdog);
     let generation = Arc::clone(generation);
+    let flight = flight.map(Arc::clone);
     let label = cfg.config_label.clone();
     let queue_capacity = cfg.queue_capacity;
     let deadline_ms = cfg.default_deadline_ms;
@@ -578,6 +580,20 @@ fn status_closure(
             ("healthy", Json::Bool(report.healthy)),
             ("watchdog_trips", int(report.trips)),
             ("deadline_misses", int(report.deadline_misses)),
+            // When did the checker thread last *evaluate* the watchdog
+            // (vs this poll's `check`)? Null until the first tick — a
+            // stale stamp here means the checker itself wedged.
+            (
+                "watchdog_last_eval_unix_secs",
+                watchdog.last_eval_unix_secs().map_or(Json::Null, int),
+            ),
+            // Incident dumps the rate limiter swallowed (null = no
+            // flight recorder armed). A growing count with no new
+            // files on disk is the "storm behind one dump" signal.
+            (
+                "flight_suppressed",
+                flight.as_ref().map_or(Json::Null, |f| int(f.suppressed())),
+            ),
         ])
     })
 }
@@ -608,7 +624,8 @@ fn start_introspection(
                 let stats = Arc::clone(stats);
                 Arc::new(move || watchdog.check(stats.snapshot().queue_depth))
             };
-            let statusz = status_closure(cfg, lanes, stats, &watchdog, &generation);
+            let statusz =
+                status_closure(cfg, lanes, stats, &watchdog, &generation, flight.as_ref());
             Some(AdminServer::start(addr, AdminState { healthz, statusz })?)
         }
         None => None,

@@ -50,6 +50,8 @@ use std::sync::Arc;
 
 pub use crate::train::metrics::TaskMetrics;
 
+use crate::train::metrics::EpochMetrics;
+
 use crate::analysis::diag::{codes, Diagnostic};
 use crate::graph::GraphTensor;
 use crate::ops::model_ref::{Mat, ModelConfig};
@@ -176,6 +178,20 @@ pub fn head_params(cfg: &ModelConfig) -> Result<Vec<HeadParam>> {
             .into_error());
         }
     })
+}
+
+/// The *named* summary means a task reports for one split — what the
+/// event journal's `eval` records and `tfgnn runs` carry (the mirror
+/// of the [`EpochMetrics`] Display tails). Unknown kinds fall back to
+/// accuracy, the metric every task accumulates.
+pub fn summary_metrics(kind: &str, m: &EpochMetrics) -> Vec<(&'static str, f64)> {
+    match kind {
+        "link_prediction" => {
+            vec![("accuracy", m.accuracy()), ("mrr", m.mrr()), ("hits_at_k", m.hits_at_k())]
+        }
+        "graph_regression" => vec![("mse", m.mse()), ("mae", m.mae())],
+        _ => vec![("accuracy", m.accuracy())],
+    }
 }
 
 /// Build the executable task from a validated config.
@@ -318,6 +334,34 @@ mod tests {
         let t = TaskConfig { kind: "frobnicate".into(), ..TaskConfig::default() };
         assert!(build(&mag_cfg().with_task(t.clone())).is_err());
         assert!(head_params(&mag_cfg().with_task(t)).is_err());
+    }
+
+    #[test]
+    fn summary_metrics_are_named_per_task() {
+        use crate::train::StepMetrics;
+        let mut m = EpochMetrics::default();
+        m.add(StepMetrics {
+            loss: 1.0,
+            correct: 1.0,
+            weight: 2.0,
+            task: TaskMetrics {
+                correct: 1.0,
+                rr_sum: 1.0,
+                hits_sum: 2.0,
+                se_sum: 0.5,
+                ae_sum: 1.0,
+                scored: 2.0,
+            },
+        });
+        let names = |kind: &str| {
+            summary_metrics(kind, &m).iter().map(|&(k, _)| k).collect::<Vec<_>>()
+        };
+        assert_eq!(names("root_classification"), vec!["accuracy"]);
+        assert_eq!(names("link_prediction"), vec!["accuracy", "mrr", "hits_at_k"]);
+        assert_eq!(names("graph_regression"), vec!["mse", "mae"]);
+        assert_eq!(names("unknown"), vec!["accuracy"], "fallback");
+        let lp = summary_metrics("link_prediction", &m);
+        assert!((lp[1].1 - 0.5).abs() < 1e-9, "mrr is rr_sum/scored");
     }
 
     #[test]

@@ -37,6 +37,8 @@ use std::sync::Arc;
 
 use crate::graph::pad::Padded;
 use crate::graph::GraphTensor;
+use crate::obs::events::{GradStats, LayerStats, Telemetry};
+use crate::obs::metrics::names;
 use crate::ops::model_ref::Mat;
 use crate::runtime::batch::RootTask;
 use crate::tasks::{RootClassification, Task};
@@ -44,8 +46,9 @@ use crate::train::metrics::TaskMetrics;
 use crate::train::native::model::NativeModel;
 use crate::train::native::optim::{state_from_tensors, state_to_tensors, Adam, AdamConfig};
 use crate::train::StepMetrics;
+use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
-use crate::Result;
+use crate::{Error, Result};
 
 /// One replica's contribution: unnormalized gradient sums, per-example
 /// losses (in chunk order) and the chunk's metric sums.
@@ -165,6 +168,13 @@ pub struct NativeTrainer {
     threads: usize,
     pool: Option<ThreadPool>,
     pub steps_done: u64,
+    /// Gradient-health probes + event-journal/flight-recorder hooks
+    /// (all off by default — the default-off trainer is bit-for-bit
+    /// the pre-telemetry trainer).
+    telemetry: Telemetry,
+    /// The most recent step's probe results, handed to the runner's
+    /// epoch loop via [`NativeTrainer::take_grad_stats`].
+    last_grad_stats: Option<GradStats>,
 }
 
 impl NativeTrainer {
@@ -206,7 +216,23 @@ impl NativeTrainer {
             threads: threads.max(1),
             pool,
             steps_done: 0,
+            telemetry: Telemetry::default(),
+            last_grad_stats: None,
         }
+    }
+
+    /// Install telemetry hooks (gradient probes, sentinel limit,
+    /// flight recorder, event journal). Probes are read-only observers
+    /// of the reduced gradients: enabling them changes no trained bit
+    /// (pinned by `tests/events.rs`).
+    pub fn set_telemetry(&mut self, telemetry: Telemetry) {
+        self.telemetry = telemetry;
+    }
+
+    /// The probe results of the most recent [`Self::train_batch`], if
+    /// probes were on; taking them resets the slot.
+    pub fn take_grad_stats(&mut self) -> Option<GradStats> {
+        self.last_grad_stats.take()
     }
 
     pub fn model(&self) -> &NativeModel {
@@ -250,6 +276,20 @@ impl NativeTrainer {
             reduce_outs(outs, n)
         };
 
+        // Gradient-health probes: read-only f64 accumulation over the
+        // reduced gradients — never fed back into the update, so the
+        // trained bits are identical with probes on or off. A sentinel
+        // trip returns *before* the optimizer step: the parameters are
+        // left at their last healthy state instead of diverging.
+        let probe = if self.telemetry.probes_on() {
+            Some(self.probe_gradients(&grads)?)
+        } else {
+            None
+        };
+        // Update-ratio needs the pre-step parameters; the clone happens
+        // only in telemetry mode (and is never written to).
+        let prev_params = probe.as_ref().map(|_| self.model.params.clone());
+
         {
             let _t = crate::obs::timed(crate::obs_histogram!(
                 crate::obs::metrics::names::TRAINER_OPTIMIZER_SECONDS
@@ -260,7 +300,124 @@ impl NativeTrainer {
         }
         self.steps_done += 1;
         crate::obs_counter!(crate::obs::metrics::names::TRAINER_STEPS).inc();
+
+        if let (Some(mut stats), Some(prev)) = (probe, prev_params) {
+            let mut sumsq = 0.0f64;
+            for (now, before) in self.model.params.iter().zip(&prev) {
+                for (a, b) in now.data.iter().zip(&before.data) {
+                    let d = f64::from(*a) - f64::from(*b);
+                    sumsq += d * d;
+                }
+            }
+            stats.update_norm = sumsq.sqrt();
+            stats.update_ratio = if stats.param_norm > 0.0 {
+                stats.update_norm / stats.param_norm
+            } else {
+                0.0
+            };
+            if crate::obs::recording() {
+                crate::obs_histogram!(names::TRAINER_GRAD_NORM).record(stats.grad_norm);
+                crate::obs_histogram!(names::TRAINER_UPDATE_RATIO).record(stats.update_ratio);
+            }
+            self.last_grad_stats = Some(stats);
+        }
         Ok(step)
+    }
+
+    /// Compute global + per-layer-group gradient/parameter L2 norms
+    /// and run the NaN/Inf and explosion sentinels. Errors name the
+    /// step and the offending tensor, and fire the flight recorder
+    /// (with the recent event-journal tail) before returning.
+    fn probe_gradients(&self, grads: &[Mat]) -> Result<GradStats> {
+        let step = self.steps_done;
+        let mut layers: Vec<LayerStats> = Vec::new();
+        let mut grad_sumsq = 0.0f64;
+        let mut param_sumsq = 0.0f64;
+        let mut offender: Option<&str> = None;
+        let mut largest: (f64, &str) = (-1.0, "");
+        for ((name, g), p) in self.model.names.iter().zip(grads).zip(&self.model.params) {
+            let mut gs = 0.0f64;
+            for &v in &g.data {
+                let v = f64::from(v);
+                gs += v * v;
+            }
+            let mut ps = 0.0f64;
+            for &v in &p.data {
+                let v = f64::from(v);
+                ps += v * v;
+            }
+            if !gs.is_finite() && offender.is_none() {
+                offender = Some(name);
+            }
+            if gs > largest.0 {
+                largest = (gs, name);
+            }
+            grad_sumsq += gs;
+            param_sumsq += ps;
+            // Layer groups by name prefix ("l0.w" -> "l0"); parameter
+            // creation order keeps each group's tensors contiguous.
+            let group = name.split('.').next().unwrap_or(name);
+            match layers.last_mut() {
+                Some(l) if l.name == group => {
+                    l.grad_norm += gs;
+                    l.param_norm += ps;
+                }
+                _ => layers.push(LayerStats {
+                    name: group.to_string(),
+                    grad_norm: gs,
+                    param_norm: ps,
+                }),
+            }
+        }
+        if let Some(name) = offender {
+            crate::obs_counter!(names::TRAINER_GRAD_NONFINITE).inc();
+            let detail = format!("non-finite gradient in tensor {name:?} at step {step}");
+            self.fire_sentinel("grad-nonfinite", &detail);
+            return Err(Error::Runtime(format!(
+                "gradient health: non-finite gradient in tensor {name:?} at step {step} \
+                 (parameters left at their last healthy state)"
+            )));
+        }
+        let grad_norm = grad_sumsq.sqrt();
+        if let Some(limit) = self.telemetry.grad_norm_limit {
+            if grad_norm > limit {
+                crate::obs_counter!(names::TRAINER_GRAD_EXPLOSIONS).inc();
+                let worst = largest.1;
+                let detail = format!(
+                    "global gradient norm {grad_norm:.3e} exceeds limit {limit:.3e} at \
+                     step {step} (largest tensor {worst:?})"
+                );
+                self.fire_sentinel("grad-explosion", &detail);
+                return Err(Error::Runtime(format!(
+                    "gradient health: global gradient norm {grad_norm:.3e} exceeds limit \
+                     {limit:.3e} at step {step} (largest tensor {worst:?}; parameters left \
+                     at their last healthy state)"
+                )));
+            }
+        }
+        // Layer sums -> norms only on the healthy path (the sentinels
+        // above only need the global norm).
+        for l in &mut layers {
+            l.grad_norm = l.grad_norm.sqrt();
+            l.param_norm = l.param_norm.sqrt();
+        }
+        Ok(GradStats {
+            step,
+            grad_norm,
+            param_norm: param_sumsq.sqrt(),
+            update_norm: 0.0,
+            update_ratio: 0.0,
+            layers,
+        })
+    }
+
+    /// Fire the flight recorder (if configured) with the recent event
+    /// tail attached — the dump shows the steps leading into the trip.
+    fn fire_sentinel(&self, trigger: &str, detail: &str) {
+        if let Some(flight) = &self.telemetry.flight {
+            let tail = self.telemetry.journal.as_ref().map(|j| j.tail()).unwrap_or_default();
+            let _ = flight.record_with(trigger, detail, vec![("events", Json::Arr(tail))]);
+        }
     }
 
     /// Evaluate a padded batch (forward only, no state change),

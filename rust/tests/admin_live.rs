@@ -308,6 +308,60 @@ fn flight_recorder_dumps_on_a_failed_batch() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// `/statusz` surfaces the watchdog's last checker-evaluation
+/// timestamp (null until the first tick, then a real unix time) and
+/// the flight recorder's suppressed-dump tally (null when no recorder
+/// is armed, an integer when one is).
+#[test]
+fn statusz_reports_watchdog_eval_time_and_flight_suppression() {
+    let env = env();
+    let dir = temp_dir("statusz");
+    let _ = std::fs::remove_dir_all(&dir);
+    let handle = task_server(
+        &env,
+        7,
+        ServeConfig {
+            admin_addr: Some("127.0.0.1:0".to_string()),
+            incident_dir: Some(dir.clone()),
+            watchdog_threshold: Duration::from_millis(50),
+            ..ServeConfig::default()
+        },
+    );
+    let addr = handle.admin_addr().unwrap();
+    // The checker thread stamps its first evaluation within a few
+    // ticks; poll /statusz until the field turns non-null.
+    let t0 = Instant::now();
+    let doc = loop {
+        let (status, body) = http_get(addr, "/statusz");
+        assert_eq!(status, 200, "{body}");
+        let doc = tfgnn::util::json::Json::parse(&body).unwrap();
+        let stamped = doc.get("watchdog_last_eval_unix_secs").unwrap().as_i64().is_ok();
+        if stamped || t0.elapsed() > Duration::from_secs(5) {
+            break doc;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let stamp = doc.get("watchdog_last_eval_unix_secs").unwrap().as_i64().unwrap();
+    assert!(stamp > 0, "checker stamped a real unix time");
+    // Flight recorder armed, nothing suppressed yet: integer zero, not
+    // null.
+    assert_eq!(doc.get("flight_suppressed").unwrap().as_i64().unwrap(), 0);
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Without an incident dir the suppression tally reports null.
+    let quiet = task_server(
+        &env,
+        7,
+        ServeConfig { admin_addr: Some("127.0.0.1:0".to_string()), ..ServeConfig::default() },
+    );
+    let (status, body) = http_get(quiet.admin_addr().unwrap(), "/statusz");
+    assert_eq!(status, 200);
+    let doc = tfgnn::util::json::Json::parse(&body).unwrap();
+    assert!(matches!(doc.get("flight_suppressed").unwrap(), tfgnn::util::json::Json::Null));
+    quiet.shutdown();
+}
+
 /// Queue-depth conservation around the Overloaded reject path: after a
 /// loadgen run that provokes rejections, the per-server depth is back
 /// to exactly zero and every request has exactly one outcome.

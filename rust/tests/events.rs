@@ -1,0 +1,416 @@
+//! Training-telemetry contracts: the `tfgnn_events_v1` step journal,
+//! the gradient-health sentinels, and `tfgnn runs` summaries.
+//!
+//! The load-bearing assertions:
+//! * **inertness** — training with the journal + gradient probes on is
+//!   bit-identical (checkpoint bytes, per-epoch loss bits) to training
+//!   with them off, for all three tasks at 1/2/8 trainer threads;
+//! * **journal schema** — a runner-written journal is a valid
+//!   `tfgnn_events_v1` document: `run_start` header first, only
+//!   `step`/`eval`/`run_end` records after, step records carrying
+//!   timing and gradient-norm fields, `run_end` last;
+//! * **NaN sentinel** — an injected non-finite parameter makes the
+//!   next step fail with a structured error naming the step and the
+//!   offending tensor, leaves the optimizer state untouched, and
+//!   drops a `tfgnn_incident_v1` dump embedding the journal tail;
+//! * **explosion sentinel** — a tiny `grad_norm_limit` trips the same
+//!   machinery with a `grad-explosion` trigger;
+//! * **runs diff** — two journals diff to per-metric delta rows.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use tfgnn::graph::pad::{fit_or_skip, Padded, PadSpec};
+use tfgnn::obs::events::{render_diff, EventJournal, RunSummary, Telemetry};
+use tfgnn::obs::flight::FlightRecorder;
+use tfgnn::ops::model_ref::ModelConfig;
+use tfgnn::runner::{run, EngineKind, RunConfig, RunReport};
+use tfgnn::sampler::inmem::InMemorySampler;
+use tfgnn::sampler::spec::mag_sampling_spec_scaled;
+use tfgnn::synth::mag::{generate, MagConfig};
+use tfgnn::train::native::{AdamConfig, NativeModel, NativeTrainer};
+use tfgnn::train::Hyperparams;
+use tfgnn::util::json::Json;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tfgnn_events_it_{tag}_{}", std::process::id()))
+}
+
+/// The runner tests' tiny config, with an optional `task` block
+/// spliced in front of `train`.
+fn config_text(task_block: &str) -> String {
+    let base = r#"{
+      "batch_size": 4,
+      "dataset": {
+        "num_papers": 120, "num_authors": 150, "num_institutions": 10,
+        "num_fields": 12, "num_classes": 4, "num_communities": 4,
+        "feature_dim": 16, "mean_citations": 4.0,
+        "mean_authors_per_paper": 2.0, "mean_topics": 1.5,
+        "community_coherence": 0.85, "label_coherence": 0.75,
+        "feature_noise": 0.8, "year_min": 2010, "year_max": 2019,
+        "seed": 17
+      },
+      "schema": {
+        "node_sets": {
+          "paper": {"features": {"feat": 16}},
+          "author": {},
+          "institution": {"id_embedding": true, "cardinality": 10},
+          "field_of_study": {"id_embedding": true, "cardinality": 12}
+        },
+        "edge_sets": {
+          "cites": ["paper", "paper"],
+          "written": ["paper", "author"],
+          "writes": ["author", "paper"],
+          "affiliated_with": ["author", "institution"],
+          "has_topic": ["paper", "field_of_study"]
+        }
+      },
+      "sampling": {
+        "plan_seed": 42,
+        "sizes": {"cites": 3, "written": 2, "writes": 2,
+                  "affiliated_with": 2, "has_topic": 2}
+      },
+      "pad": {
+        "node_caps": {"paper": 128, "author": 80, "institution": 48,
+                      "field_of_study": 56},
+        "edge_caps": {"cites": 16, "written": 40, "writes": 80,
+                      "affiliated_with": 80, "has_topic": 192},
+        "component_cap": 5
+      },
+      "model": {
+        "hidden_dim": 8, "message_dim": 8, "num_layers": 1,
+        "updates": {"paper": ["cites", "written", "has_topic"],
+                    "author": ["writes", "affiliated_with"]}
+      },
+      "train": {
+        "num_classes": 4, "init_seed": 3, "learning_rate": 0.01,
+        "weight_decay": 0.0001, "adam_beta1": 0.9,
+        "adam_beta2": 0.999, "adam_eps": 1e-8
+      }
+    }"#;
+    base.replace("\"train\": {", &format!("{task_block} \"train\": {{"))
+}
+
+/// Pair subgraphs merge 1 + 1 + negatives rooted expansions, so the
+/// link-prediction variant scales the caps up and the batch down.
+fn linkpred_config_text() -> String {
+    config_text(
+        r#""task": {"type": "link_prediction", "edge_set": "cites",
+                    "readout": "hadamard", "mlp_dim": 8,
+                    "negatives": 2, "hits_k": 2,
+                    "holdout_fraction": 0.3, "split_seed": 9},"#,
+    )
+    .replace("\"batch_size\": 4,", "\"batch_size\": 2,")
+    .replace(
+        r#""node_caps": {"paper": 128, "author": 80, "institution": 48,"#,
+        r#""node_caps": {"paper": 256, "author": 160, "institution": 96,"#,
+    )
+    .replace(r#""field_of_study": 56},"#, r#""field_of_study": 112},"#)
+    .replace(
+        r#""edge_caps": {"cites": 16, "written": 40, "writes": 80,"#,
+        r#""edge_caps": {"cites": 48, "written": 96, "writes": 192,"#,
+    )
+    .replace(
+        r#""affiliated_with": 80, "has_topic": 192},"#,
+        r#""affiliated_with": 192, "has_topic": 448},"#,
+    )
+    .replace("\"component_cap\": 5", "\"component_cap\": 3")
+}
+
+fn regression_config_text() -> String {
+    config_text(
+        r#""task": {"type": "graph_regression", "target_feature": "year",
+                    "target_shift": 2010.0, "target_scale": 0.1},"#,
+    )
+}
+
+/// One short native run; `telemetry` turns on the journal, the
+/// gradient probes (via a generous sentinel limit) and an incident
+/// dir. Returns the report, the checkpoint bytes, and the journal path.
+fn run_once(
+    dir: &Path,
+    config: &str,
+    threads: usize,
+    telemetry: bool,
+    tag: &str,
+) -> (RunReport, Vec<u8>, Option<PathBuf>) {
+    let cfg_path = dir.join(format!("{tag}.json"));
+    std::fs::write(&cfg_path, config).unwrap();
+    let ckpt = dir.join(format!("{tag}.ckpt"));
+    let mut cfg = RunConfig::new(dir, "mpnn");
+    cfg.engine = EngineKind::Native;
+    cfg.config_path = Some(cfg_path);
+    cfg.epochs = 1;
+    cfg.max_steps_per_epoch = Some(3);
+    cfg.max_eval_batches = Some(1);
+    cfg.trainer_threads = threads;
+    cfg.checkpoint = Some(ckpt.clone());
+    let events = if telemetry {
+        let p = dir.join(format!("{tag}.jsonl"));
+        cfg.events_out = Some(p.clone());
+        cfg.grad_norm_limit = Some(1e9);
+        cfg.incident_dir = Some(dir.join(format!("{tag}-incidents")));
+        Some(p)
+    } else {
+        None
+    };
+    let report = run(&cfg).unwrap_or_else(|e| panic!("{tag}: {e}"));
+    let bytes = std::fs::read(&ckpt).unwrap();
+    (report, bytes, events)
+}
+
+/// The inertness contract: recording on vs off changes no trained bit.
+/// Checkpoint bytes cover params + Adam moments + step; loss bits
+/// cover the reported trajectory. All three tasks, 1/2/8 threads.
+#[test]
+fn events_and_probes_change_no_trained_bit_across_tasks_and_threads() {
+    let dir = temp_dir("parity");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let tasks: [(&str, String); 3] = [
+        ("root", config_text("")),
+        ("reg", regression_config_text()),
+        ("lp", linkpred_config_text()),
+    ];
+    for (task, config) in &tasks {
+        for threads in [1usize, 2, 8] {
+            let tag_off = format!("{task}-t{threads}-off");
+            let tag_on = format!("{task}-t{threads}-on");
+            let (rep_off, ckpt_off, _) = run_once(&dir, config, threads, false, &tag_off);
+            let (rep_on, ckpt_on, events) = run_once(&dir, config, threads, true, &tag_on);
+            assert_eq!(
+                ckpt_off, ckpt_on,
+                "{task} @ {threads} threads: telemetry changed checkpoint bytes"
+            );
+            for (a, b) in rep_off.epochs.iter().zip(&rep_on.epochs) {
+                assert_eq!(
+                    a.train.loss().to_bits(),
+                    b.train.loss().to_bits(),
+                    "{task} @ {threads} threads: telemetry changed the loss trajectory"
+                );
+            }
+            // The journal itself is well-formed and step-complete.
+            let s = RunSummary::from_path(&events.unwrap()).unwrap();
+            assert_eq!(s.steps as usize, rep_on.epochs[0].train.steps, "{task} @ {threads}");
+            assert!(s.end.is_some(), "{task} @ {threads}: missing run_end");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Journal schema, record by record: header first (with the schema tag
+/// and the task name), `run_end` last, and every step record carrying
+/// loss, timing and gradient-norm fields.
+#[test]
+fn journal_records_follow_the_events_v1_schema() {
+    let dir = temp_dir("schema");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let (_, _, events) = run_once(&dir, &config_text(""), 2, true, "schema");
+    let text = std::fs::read_to_string(events.unwrap()).unwrap();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(lines.len() >= 4, "header + steps + evals + run_end: {text}");
+    let first = Json::parse(lines[0]).unwrap();
+    assert_eq!(first.get("schema").unwrap().as_str().unwrap(), "tfgnn_events_v1");
+    assert_eq!(first.get("kind").unwrap().as_str().unwrap(), "run_start");
+    assert_eq!(first.get("task").unwrap().as_str().unwrap(), "root_classification");
+    assert!(first.get("param_count").unwrap().as_i64().unwrap() > 0);
+    assert!((first.get("learning_rate").unwrap().as_f64().unwrap() - 0.01).abs() < 1e-12);
+    let last = Json::parse(lines[lines.len() - 1]).unwrap();
+    assert_eq!(last.get("kind").unwrap().as_str().unwrap(), "run_end");
+    let mut steps = 0u64;
+    let mut evals = Vec::new();
+    for line in &lines[1..lines.len() - 1] {
+        let rec = Json::parse(line).unwrap();
+        match rec.get("kind").unwrap().as_str().unwrap() {
+            "step" => {
+                steps += 1;
+                assert!(rec.get("loss").unwrap().as_f64().unwrap().is_finite());
+                assert!(rec.get("step_secs").unwrap().as_f64().unwrap() >= 0.0);
+                assert!(rec.get("data_wait_secs").unwrap().as_f64().unwrap() >= 0.0);
+                assert!(rec.get("grad_norm").unwrap().as_f64().unwrap() > 0.0);
+                assert!(rec.get("update_ratio").unwrap().as_f64().unwrap() > 0.0);
+                assert!(!rec.get("layers").unwrap().as_obj().unwrap().is_empty());
+                assert!(rec.get("metrics").unwrap().get("scored").is_ok());
+            }
+            "eval" => evals.push(rec.get("split").unwrap().as_str().unwrap().to_string()),
+            other => panic!("unexpected record kind {other:?}"),
+        }
+    }
+    assert_eq!(steps, last.get("steps").unwrap().as_i64().unwrap() as u64);
+    assert!(evals.contains(&"val".to_string()), "{evals:?}");
+    assert!(evals.contains(&"test".to_string()), "{evals:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two real journals (same config, different learning rate) diff to
+/// per-metric delta rows.
+#[test]
+fn runs_diff_reports_metric_deltas_between_real_journals() {
+    let dir = temp_dir("diff");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let (_, _, a) = run_once(&dir, &config_text(""), 2, true, "base");
+    let cfg_path = dir.join("fast.json");
+    std::fs::write(&cfg_path, config_text("")).unwrap();
+    let b_path = dir.join("fast.jsonl");
+    let mut cfg = RunConfig::new(&dir, "mpnn");
+    cfg.engine = EngineKind::Native;
+    cfg.config_path = Some(cfg_path);
+    cfg.epochs = 1;
+    cfg.max_steps_per_epoch = Some(3);
+    cfg.max_eval_batches = Some(1);
+    cfg.trainer_threads = 2;
+    cfg.events_out = Some(b_path.clone());
+    cfg.hp = Some(Hyperparams { learning_rate: 0.05, dropout: 0.0, weight_decay: 1e-4 });
+    run(&cfg).unwrap();
+    let sa = RunSummary::from_path(&a.unwrap()).unwrap();
+    let sb = RunSummary::from_path(&b_path).unwrap();
+    let text = render_diff(&sa, &sb);
+    assert!(text.contains("final train loss"), "{text}");
+    assert!(text.contains(" -> "), "{text}");
+    assert!(text.contains("best val accuracy"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- sentinel tests (direct trainer, poisoned model) ---------------------
+
+const BATCH: usize = 4;
+
+/// Tiny-MAG padded batches, shaped exactly like the pipeline's output
+/// (the `tests/native_training.rs` helper).
+fn tiny_batches(count: usize) -> Vec<Padded> {
+    let ds = generate(&MagConfig::tiny());
+    let store = Arc::new(ds.store);
+    let spec = mag_sampling_spec_scaled(&store.schema, 0.2).unwrap();
+    let sampler = InMemorySampler::new(store, spec, 3).unwrap();
+    let probe: Vec<_> = (0..12u32).map(|s| sampler.sample(s).unwrap()).collect();
+    let pad = PadSpec::fit(&probe.iter().collect::<Vec<_>>(), BATCH, 2.5);
+    let mut out = Vec::new();
+    let mut seed = 0u32;
+    while out.len() < count {
+        let graphs: Vec<_> =
+            (0..BATCH).map(|i| sampler.sample(seed + i as u32).unwrap()).collect();
+        seed += BATCH as u32;
+        let merged = tfgnn::graph::batch::merge(&graphs).unwrap();
+        if let Some(p) = fit_or_skip(&merged, &pad) {
+            out.push(p);
+        }
+        assert!(seed < 120, "could not assemble {count} fitting batches");
+    }
+    out
+}
+
+fn poisoned_trainer(poison: bool, threads: usize) -> NativeTrainer {
+    let cfg = ModelConfig::for_mag(&MagConfig::tiny(), 8, 8, 1);
+    let mut model = NativeModel::init(cfg, 11).unwrap();
+    if poison {
+        // Poison the classification head — it participates in every
+        // example's loss, so the backward pass is guaranteed to carry
+        // the NaN into the gradients.
+        let head = model
+            .names
+            .iter()
+            .position(|n| n.contains("head"))
+            .expect("classification head parameter");
+        model.params[head].data[0] = f32::NAN;
+    }
+    let task = tfgnn::tasks::build(&model.cfg).unwrap();
+    NativeTrainer::with_task(model, AdamConfig::default(), task, threads)
+}
+
+/// An injected NaN parameter trips the non-finite sentinel: structured
+/// error naming step + tensor, optimizer untouched, and an incident
+/// dump embedding the recent journal tail.
+#[test]
+fn nan_gradient_yields_structured_error_and_incident_dump() {
+    let batches = tiny_batches(1);
+    let dir = temp_dir("nan");
+    let _ = std::fs::remove_dir_all(&dir);
+    let journal = Arc::new(EventJournal::create(&dir.join("run.jsonl")).unwrap());
+    // Seed the tail with a prior step record so the dump has history.
+    journal
+        .write(&tfgnn::util::json::obj(vec![
+            ("kind", Json::Str("step".to_string())),
+            ("step", Json::Int(41)),
+        ]))
+        .unwrap();
+    let rec = FlightRecorder::with_min_interval(&dir.join("incidents"), Duration::ZERO);
+    let flight = Arc::new(rec.unwrap());
+    let mut t = poisoned_trainer(true, 2);
+    t.set_telemetry(Telemetry {
+        grad_stats: true,
+        grad_norm_limit: None,
+        flight: Some(Arc::clone(&flight)),
+        journal: Some(Arc::clone(&journal)),
+    });
+    let err = t.train_batch(&batches[0]).expect_err("NaN gradient must fail the step");
+    let msg = err.to_string();
+    assert!(msg.contains("non-finite gradient"), "{msg}");
+    assert!(msg.contains("step 0"), "error names the step: {msg}");
+    assert!(msg.contains("tensor"), "error names the offending tensor: {msg}");
+    assert_eq!(t.steps_done, 0, "the optimizer never ran");
+    assert!(t.take_grad_stats().is_none(), "no stats published for a failed step");
+
+    let dumps: Vec<PathBuf> = std::fs::read_dir(dir.join("incidents"))
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    assert_eq!(dumps.len(), 1, "exactly one incident dump");
+    let doc = Json::parse(&std::fs::read_to_string(&dumps[0]).unwrap()).unwrap();
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "tfgnn_incident_v1");
+    assert_eq!(doc.get("trigger").unwrap().as_str().unwrap(), "grad-nonfinite");
+    let events = doc.get("events").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), 1, "the journal tail rode along");
+    assert_eq!(events[0].get("step").unwrap().as_i64().unwrap(), 41);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A tiny `grad_norm_limit` trips the explosion sentinel on a healthy
+/// batch; a generous limit lets the same batch train and publishes
+/// per-layer grad stats.
+#[test]
+fn explosion_sentinel_trips_on_tiny_limit_and_passes_on_generous_one() {
+    let batches = tiny_batches(1);
+    let dir = temp_dir("explode");
+    let _ = std::fs::remove_dir_all(&dir);
+    let rec = FlightRecorder::with_min_interval(&dir.join("incidents"), Duration::ZERO);
+    let flight = Arc::new(rec.unwrap());
+    let mut t = poisoned_trainer(false, 2);
+    t.set_telemetry(Telemetry {
+        grad_stats: false,
+        grad_norm_limit: Some(1e-12),
+        flight: Some(Arc::clone(&flight)),
+        journal: None,
+    });
+    let err = t.train_batch(&batches[0]).expect_err("tiny limit must trip");
+    let msg = err.to_string();
+    assert!(msg.contains("exceeds limit"), "{msg}");
+    assert!(msg.contains("step 0"), "{msg}");
+    assert_eq!(t.steps_done, 0);
+    let dump = std::fs::read_dir(dir.join("incidents"))
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "json"))
+        .expect("explosion dump");
+    let doc = Json::parse(&std::fs::read_to_string(&dump).unwrap()).unwrap();
+    assert_eq!(doc.get("trigger").unwrap().as_str().unwrap(), "grad-explosion");
+
+    let mut ok = poisoned_trainer(false, 2);
+    ok.set_telemetry(Telemetry {
+        grad_stats: true,
+        grad_norm_limit: Some(1e9),
+        flight: None,
+        journal: None,
+    });
+    ok.train_batch(&batches[0]).expect("generous limit passes");
+    let stats = ok.take_grad_stats().expect("probe results published");
+    assert!(stats.grad_norm > 0.0 && stats.grad_norm.is_finite());
+    assert!(stats.update_ratio > 0.0, "update ratio computed after the step");
+    assert!(!stats.layers.is_empty(), "per-layer norms grouped");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -29,7 +29,15 @@ under `rust/benches/baseline/`:
   `--metrics-out` export), every metric key present in the scrape must
   also be present in the export — the live and offline surfaces share
   one registry, so a key seen live but missing from the export means
-  they drifted apart (ERROR).
+  they drifted apart (ERROR);
+* with `--events JOURNAL.jsonl [...]`, each file is schema-checked as
+  a `tfgnn_events_v1` training journal (written by `tfgnn train
+  --events-out`): line 1 must be a `run_start` header with the schema
+  tag, later records must be `step`/`eval`/`run_end`, step records
+  must carry numeric step/epoch/loss/step_secs/data_wait_secs (loss
+  may be JSON null — the writer nulls non-finite values), and the
+  closing `run_end.steps` must match the number of step records. This
+  mode works standalone: `--baseline`/`--current` are not required.
 
 Stdlib only; no third-party imports.
 
@@ -37,6 +45,7 @@ Usage:
     python3 tools/bench_compare.py --baseline rust/benches/baseline --current rust
     python3 tools/bench_compare.py --baseline ... --current ... \
         --scrape SCRAPE.json --export METRICS_loadgen.json
+    python3 tools/bench_compare.py --events EVENTS_a.jsonl EVENTS_b.jsonl
 """
 
 import argparse
@@ -243,6 +252,100 @@ def check_trace_file(path, report):
             return
 
 
+EVENT_KINDS = {"step", "eval", "run_end"}
+
+
+def check_events_file(path, report):
+    """Schema-check one `tfgnn_events_v1` training journal (JSONL)."""
+    errors_before = len(report.errors)
+    try:
+        text = path.read_text()
+    except OSError as e:
+        report.error(f"{path}: unreadable: {e}")
+        return
+    records = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            report.error(f"{path}:{lineno}: invalid JSON record: {e}")
+            return
+        if not isinstance(rec, dict):
+            report.error(f"{path}:{lineno}: record is not an object")
+            return
+        records.append((lineno, rec))
+    if not records:
+        report.error(f"{path}: empty journal (no run_start header)")
+        return
+    lineno, header = records[0]
+    if header.get("kind") != "run_start":
+        report.error(
+            f"{path}:{lineno}: first record kind is "
+            f"{header.get('kind')!r}, want 'run_start'"
+        )
+        return
+    if header.get("schema") != "tfgnn_events_v1":
+        report.error(f"{path}:{lineno}: 'schema' is not 'tfgnn_events_v1'")
+    for field in ("arch", "engine", "task"):
+        if not isinstance(header.get(field), str):
+            report.error(
+                f"{path}:{lineno}: run_start.{field} missing or non-string"
+            )
+    steps = 0
+    saw_end = False
+    for lineno, rec in records[1:]:
+        kind = rec.get("kind")
+        if kind not in EVENT_KINDS:
+            report.error(f"{path}:{lineno}: unknown record kind {kind!r}")
+            return
+        if saw_end:
+            report.error(f"{path}:{lineno}: record after run_end")
+            return
+        if kind == "step":
+            steps += 1
+            for field in ("step", "epoch"):
+                v = rec.get(field)
+                if not isinstance(v, int) or isinstance(v, bool):
+                    report.error(
+                        f"{path}:{lineno}: step.{field} is not an integer"
+                    )
+            # The writer serializes non-finite values as JSON null, so
+            # null is schema-legal anywhere a number is.
+            for field in ("loss", "step_secs", "data_wait_secs"):
+                v = rec.get(field, _MISSING)
+                if v is _MISSING or (
+                    v is not None
+                    and (not isinstance(v, (int, float)) or isinstance(v, bool))
+                ):
+                    report.error(
+                        f"{path}:{lineno}: step.{field} missing or non-numeric"
+                    )
+        elif kind == "eval":
+            if rec.get("split") not in ("val", "test"):
+                report.error(
+                    f"{path}:{lineno}: eval.split is {rec.get('split')!r}, "
+                    "want 'val' or 'test'"
+                )
+            if not isinstance(rec.get("metrics"), dict):
+                report.error(f"{path}:{lineno}: eval.metrics is not an object")
+        else:
+            saw_end = True
+            v = rec.get("steps")
+            if not isinstance(v, int) or isinstance(v, bool):
+                report.error(f"{path}:{lineno}: run_end.steps is not an integer")
+            elif v != steps:
+                report.error(
+                    f"{path}:{lineno}: run_end.steps={v} but the journal "
+                    f"has {steps} step record(s)"
+                )
+    if not saw_end:
+        report.error(f"{path}: no run_end record (run died mid-flight?)")
+    if len(report.errors) == errors_before:
+        print(f"bench-compare: events journal {path.name} OK ({steps} step(s))")
+
+
 def row_key(row):
     return (row["name"], row["threads"])
 
@@ -300,9 +403,9 @@ def compare_file(base_path, cur_path, report):
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--baseline", required=True, type=Path,
+    ap.add_argument("--baseline", type=Path,
                     help="directory of checked-in BENCH_*.json snapshots")
-    ap.add_argument("--current", required=True, type=Path,
+    ap.add_argument("--current", type=Path,
                     help="directory of freshly produced BENCH_*.json files")
     ap.add_argument("--scrape", type=Path,
                     help="mid-run /metrics.json scrape from the live admin "
@@ -310,38 +413,53 @@ def main():
     ap.add_argument("--export", type=Path,
                     help="end-of-run --metrics-out export from the same "
                          "process (requires --scrape)")
+    ap.add_argument("--events", type=Path, nargs="+",
+                    help="tfgnn_events_v1 training journal(s) to schema-"
+                         "check; standalone mode — --baseline/--current "
+                         "are not required")
     args = ap.parse_args()
     if (args.scrape is None) != (args.export is None):
         ap.error("--scrape and --export must be given together")
+    if args.events is None and (args.baseline is None or args.current is None):
+        ap.error("--baseline and --current are required unless --events "
+                 "is given")
 
     report = Report()
-    baselines = sorted(args.baseline.glob("BENCH_*.json"))
-    if not baselines:
-        report.error(f"no BENCH_*.json baselines under {args.baseline}")
-    for base_path in baselines:
-        cur_path = args.current / base_path.name
-        if not cur_path.is_file():
-            report.error(
-                f"{base_path.name}: baseline exists but the current run "
-                f"produced no {cur_path} — did a bench target disappear?"
-            )
-            continue
-        compare_file(base_path, cur_path, report)
+    baselines = []
+    if args.baseline is not None and args.current is not None:
+        baselines = sorted(args.baseline.glob("BENCH_*.json"))
+        if not baselines:
+            report.error(f"no BENCH_*.json baselines under {args.baseline}")
+        for base_path in baselines:
+            cur_path = args.current / base_path.name
+            if not cur_path.is_file():
+                report.error(
+                    f"{base_path.name}: baseline exists but the current run "
+                    f"produced no {cur_path} — did a bench target disappear?"
+                )
+                continue
+            compare_file(base_path, cur_path, report)
 
-    # Observability exports: schema-checked when present, never
-    # required here (the CI artifact `ls` pins existence).
-    obs_checked = 0
-    for path in sorted(args.current.glob("METRICS_*.json")):
-        check_metrics_file(path, report)
-        obs_checked += 1
-    for path in sorted(args.current.glob("TRACE_*.json")):
-        check_trace_file(path, report)
-        obs_checked += 1
-    if obs_checked:
-        print(f"bench-compare: schema-checked {obs_checked} observability export(s)")
+        # Observability exports: schema-checked when present, never
+        # required here (the CI artifact `ls` pins existence).
+        obs_checked = 0
+        for path in sorted(args.current.glob("METRICS_*.json")):
+            check_metrics_file(path, report)
+            obs_checked += 1
+        for path in sorted(args.current.glob("TRACE_*.json")):
+            check_trace_file(path, report)
+            obs_checked += 1
+        if obs_checked:
+            print(
+                f"bench-compare: schema-checked {obs_checked} "
+                "observability export(s)"
+            )
 
     if args.scrape is not None:
         check_scrape_subset(args.scrape, args.export, report)
+
+    for path in args.events or []:
+        check_events_file(path, report)
 
     print(
         f"bench-compare: {len(baselines)} file(s), "
